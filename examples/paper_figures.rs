@@ -1,0 +1,317 @@
+//! **Paper-figure regeneration driver** — prints the series behind every
+//! table and figure in the paper's evaluation (see DESIGN.md §4 for the
+//! experiment index). Real byte movements and exchange patterns come from
+//! miniature domains executed for real; the machine-scale timings come from
+//! the calibrated cluster model (DESIGN.md §3 substitutions).
+//!
+//! ```bash
+//! cargo run --release --example paper_figures            # everything
+//! cargo run --release --example paper_figures -- fig8a   # one figure
+//! ```
+
+use mpfluid::cluster::{
+    paper_depth6_workload, paper_depth7_workload, IoTuning, Machine, WriteWorkload,
+};
+use mpfluid::config::Scenario;
+use mpfluid::exchange::{self, Gen};
+use mpfluid::nbs::NeighbourhoodServer;
+use mpfluid::physics::bc::DomainBc;
+use mpfluid::physics::RustBackend;
+use mpfluid::solver::{self, SolverConfig};
+use mpfluid::tree::dgrid::DGrid;
+use mpfluid::tree::{sfc, BBox, SpaceTree};
+use mpfluid::util::rng::Rng;
+use mpfluid::var;
+use mpfluid::vpic;
+
+fn main() {
+    let which: Vec<String> = std::env::args().skip(1).collect();
+    let want = |name: &str| which.is_empty() || which.iter().any(|w| w == name);
+    if want("fig2a") {
+        fig2a();
+    }
+    if want("fig2b") {
+        fig2b();
+    }
+    if want("fig2c") {
+        fig2c();
+    }
+    if want("fig8a") {
+        fig8a();
+    }
+    if want("fig8b") {
+        fig8b();
+    }
+    if want("supermuc") {
+        supermuc();
+    }
+    if want("ablations") {
+        ablations();
+    }
+    if want("vtk") {
+        vtk_comparison();
+    }
+}
+
+/// Measure one real full exchange on a depth-`d` tree with `ranks` logical
+/// ranks; returns (cross-rank bytes, messages) per exchange.
+fn measure_exchange(depth: u32, ranks: u32) -> (u64, u64) {
+    let mut tree = SpaceTree::full(BBox::unit(), depth);
+    sfc::partition(&mut tree, ranks);
+    let nbs = NeighbourhoodServer::new(tree);
+    let mut grids: Vec<DGrid> = nbs.tree.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+    let vars = [var::U, var::V, var::W, var::P, var::T];
+    let stats = exchange::full_exchange(
+        &nbs,
+        &mut grids,
+        Gen::Cur,
+        &vars,
+        &DomainBc::all_walls(),
+    );
+    (stats.cross_rank_bytes, stats.messages)
+}
+
+/// Fig 2a — total ghost-layer exchange times for different process counts.
+/// Real traffic is measured on depth 2–3 domains and scaled per-rank to the
+/// paper's domain sizes; times come from the JuQueen interconnect model.
+fn fig2a() {
+    println!("\n=== Fig 2a: ghost-layer exchange time vs #processes (JuQueen model) ===");
+    println!("{:>10} {:>14} {:>14} {:>12}", "ranks", "cross-bytes", "messages", "time");
+    let m = Machine::juqueen();
+    // measure the real communication pattern at miniature scale
+    let (bytes3, msgs3) = measure_exchange(3, 64);
+    // scale to the paper's depth-8 domain (4096³): grids grow 8× per depth
+    let scale = 8u64.pow(8 - 3);
+    for ranks in [1024u64, 4096, 16384, 65536, 140_000] {
+        // per-rank traffic shrinks as ranks grow (strong scaling)
+        let bytes = bytes3 * scale;
+        let msgs = msgs3 * scale;
+        let t = m.estimate_exchange(ranks, bytes, msgs);
+        println!(
+            "{:>10} {:>14} {:>14} {:>10.3} s",
+            ranks,
+            mpfluid::util::fmt_bytes(bytes),
+            msgs,
+            t
+        );
+    }
+    println!("(paper: ~0.1 s for the full update on 140k cores)");
+}
+
+/// Fig 2b — strong speed-up of the multigrid-like solver. Real solves at
+/// depth 2 with the thread pool capped (1..n cores) as the scaling proxy,
+/// plus the communication-model overhead per rank count.
+fn fig2b() {
+    println!("\n=== Fig 2b: multigrid solver strong speed-up (real, this host) ===");
+    let sc = Scenario::cavity(2);
+    let mut sim = sc.build();
+    // one warm-up step to get a realistic rhs
+    sim.step(&RustBackend);
+    let mut rng = Rng::new(7);
+    for g in sim.grids.iter_mut() {
+        let mut f = vec![0.0f32; mpfluid::DGRID_CELLS];
+        rng.fill_f32(&mut f, -1.0, 1.0);
+        g.temp.set_interior(var::P, &f);
+    }
+    let cfg = SolverConfig {
+        max_cycles: 3,
+        rtol: 0.0,
+        ..SolverConfig::default()
+    };
+    println!("{:>8} {:>12} {:>10}", "threads", "solve time", "speedup");
+    let mut t1 = 0.0;
+    for threads in [1usize, 2, 4, 8] {
+        let mut grids = sim.grids.clone();
+        let stats = with_threads(threads, || {
+            solver::solve_pressure(
+                &sim.nbs,
+                &mut grids,
+                &sim.bc,
+                &sim.params,
+                &RustBackend,
+                &cfg,
+            )
+        });
+        if threads == 1 {
+            t1 = stats.seconds;
+        }
+        println!(
+            "{:>8} {:>10.3} s {:>9.2}x",
+            threads,
+            stats.seconds,
+            t1 / stats.seconds
+        );
+    }
+}
+
+/// Run `f` with the crate's thread pool capped to `threads` workers.
+fn with_threads<T>(threads: usize, f: impl FnOnce() -> T) -> T {
+    mpfluid::util::set_max_threads(threads);
+    let out = f();
+    mpfluid::util::set_max_threads(0);
+    out
+}
+
+/// Fig 2c — time-to-solution against grids per process.
+fn fig2c() {
+    println!("\n=== Fig 2c: time-to-solution vs grids/process (model + real kernel rate) ===");
+    // real per-grid smoothing cost on this host:
+    let sc = Scenario::cavity(1);
+    let mut sim = sc.build();
+    let t0 = std::time::Instant::now();
+    let rep = sim.step(&RustBackend);
+    let per_grid = t0.elapsed().as_secs_f64() / sim.nbs.tree.len() as f64;
+    let _ = rep;
+    let m = Machine::juqueen();
+    println!(
+        "{:>16} {:>10} {:>14} {:>12}",
+        "grids/process", "ranks", "compute", "exchange"
+    );
+    let total_grids = 299_593u64; // depth 6
+    for ranks in [2048u64, 8192, 32768, 131072] {
+        let gpp = total_grids / ranks;
+        let compute = per_grid * gpp as f64;
+        let exch = m.estimate_exchange(ranks, gpp * ranks * 16 * 16 * 5 * 4, gpp * ranks * 6);
+        println!(
+            "{:>16} {:>10} {:>12.4} s {:>10.4} s",
+            gpp,
+            ranks,
+            compute,
+            exch
+        );
+    }
+    println!("(shape: time/step ∝ grids per process until communication dominates)");
+}
+
+fn print_bandwidth_row(ranks: u64, mp: f64, vp: f64) {
+    println!(
+        "{:>10} {:>14.2} {:>14.2}",
+        ranks,
+        mp / 1e9,
+        vp / 1e9
+    );
+}
+
+/// Fig 8a — JuQueen sustained write bandwidth, depth-6 domain (337 GB),
+/// mpfluid kernel vs VPIC-IO at equal bytes.
+fn fig8a() {
+    println!("\n=== Fig 8a: JuQueen write bandwidth, 1024³ domain, 337 GB/checkpoint ===");
+    println!("{:>10} {:>14} {:>14}", "ranks", "mpfluid GB/s", "VPIC-IO GB/s");
+    let m = Machine::juqueen();
+    let t = IoTuning::default();
+    for ranks in [2048u64, 4096, 8192, 16384, 32768] {
+        let w = paper_depth6_workload(ranks);
+        let mp = m.estimate_write(&w, &t).bandwidth;
+        let vp = vpic::estimate(&m, ranks, w.total_bytes, &t);
+        print_bandwidth_row(ranks, mp, vp);
+    }
+    println!("(paper shape: flat 2048–8192, ~+20 % at 16384, drop at 32768)");
+}
+
+/// Fig 8b — the depth-7 domain (2.7 TB/checkpoint).
+fn fig8b() {
+    println!("\n=== Fig 8b: JuQueen write bandwidth, 2048³ domain, 2.7 TB/checkpoint ===");
+    println!("{:>10} {:>14} {:>14}", "ranks", "mpfluid GB/s", "VPIC-IO GB/s");
+    let m = Machine::juqueen();
+    let t = IoTuning::default();
+    for ranks in [8192u64, 16384, 32768] {
+        let w = paper_depth7_workload(ranks);
+        let mp = m.estimate_write(&w, &t).bandwidth;
+        let vp = vpic::estimate(&m, ranks, w.total_bytes, &t);
+        print_bandwidth_row(ranks, mp, vp);
+    }
+    println!("(paper: adequate scaling in the expected range — memory floor forbids <8192)");
+}
+
+/// §5.3 SuperMUC series — 21.4 / 14.92 / 4.64 GB/s at 2048 / 4096 / 8192.
+fn supermuc() {
+    println!("\n=== §5.3 SuperMUC: depth-6 domain, 337 GB/checkpoint ===");
+    println!("{:>10} {:>14} {:>14}", "ranks", "model GB/s", "paper GB/s");
+    let m = Machine::supermuc();
+    let t = IoTuning::default();
+    for (ranks, paper) in [(2048u64, 21.4), (4096, 14.92), (8192, 4.64)] {
+        let w = paper_depth6_workload(ranks);
+        let e = m.estimate_write(&w, &t);
+        println!("{:>10} {:>14.2} {:>14.2}", ranks, e.bandwidth / 1e9, paper);
+    }
+}
+
+/// §5.2 ablations — the contribution of each hardware-aware optimisation.
+fn ablations() {
+    println!("\n=== §5.2 ablations: JuQueen, depth-6, 8192 ranks ===");
+    let m = Machine::juqueen();
+    let w = paper_depth6_workload(8192);
+    let configs: [(&str, IoTuning); 4] = [
+        ("tuned (cb on, locks off, aligned)", IoTuning::default()),
+        (
+            "file locking ON",
+            IoTuning {
+                file_locking: true,
+                ..IoTuning::default()
+            },
+        ),
+        (
+            "collective buffering OFF",
+            IoTuning {
+                collective_buffering: false,
+                ..IoTuning::default()
+            },
+        ),
+        (
+            "alignment OFF",
+            IoTuning {
+                alignment: false,
+                ..IoTuning::default()
+            },
+        ),
+    ];
+    println!("{:<38} {:>12} {:>10}", "configuration", "GB/s", "vs tuned");
+    let base = m.estimate_write(&w, &configs[0].1).bandwidth;
+    for (name, tuning) in &configs {
+        let e = m.estimate_write(&w, tuning);
+        println!(
+            "{:<38} {:>12.2} {:>9.2}x",
+            name,
+            e.bandwidth / 1e9,
+            e.bandwidth / base
+        );
+    }
+    println!("(paper: locking & collective buffering indispensable; alignment small)");
+}
+
+/// §3 motivation — per-process VTK vs the shared-file kernel.
+fn vtk_comparison() {
+    println!("\n=== §3 motivation: one-file-per-process vs shared file (JuQueen, depth 6) ===");
+    let m = Machine::juqueen();
+    println!(
+        "{:>10} {:>12} {:>14} {:>14}",
+        "ranks", "files", "per-proc GB/s", "shared GB/s"
+    );
+    for ranks in [2048u64, 8192, 32768] {
+        let w = paper_depth6_workload(ranks);
+        let shared = m.estimate_write(&w, &IoTuning::default()).bandwidth;
+        let indep = m
+            .estimate_write(
+                &w,
+                &IoTuning {
+                    collective_buffering: false,
+                    file_locking: false,
+                    alignment: false,
+                },
+            )
+            .bandwidth;
+        println!(
+            "{:>10} {:>12} {:>14.2} {:>14.2}",
+            ranks,
+            ranks, // one file per process per step
+            indep / 1e9,
+            shared / 1e9
+        );
+    }
+    let _ = WriteWorkload {
+        ranks: 0,
+        total_bytes: 0,
+        n_datasets: 0,
+        n_grids: 0,
+    };
+}

@@ -1,0 +1,81 @@
+"""AOT bridge: lower every L2 entry point to HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); Python never runs on the Rust
+request path. The interchange format is HLO text, NOT a serialized
+HloModuleProto: jax ≥ 0.5 emits protos with 64-bit instruction ids which the
+image's xla_extension 0.5.1 (behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. Lowering goes through stablehlo → XlaComputation with
+``return_tuple=True`` — the Rust side unwraps the tuple positionally.
+
+Outputs:
+    artifacts/<entry>_b<B>_n<N>.hlo.txt   one module per entry point
+    artifacts/manifest.json               what Rust loads: shapes, arity
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts [-b 32] [-n 16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: pathlib.Path, batch: int, n: int, extra_batches=()):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"n": n, "default_batch": batch, "entries": []}
+    for b in sorted({batch, *extra_batches}):
+        for name, (fn, specs, n_out) in model.entry_points(b, n).items():
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = f"{name}_b{b}_n{n}.hlo.txt"
+            (out_dir / fname).write_text(text)
+            manifest["entries"].append(
+                {
+                    "name": name,
+                    "file": fname,
+                    "batch": b,
+                    "n": n,
+                    "inputs": [
+                        {"shape": list(s.shape), "dtype": str(s.dtype)}
+                        for s in specs
+                    ],
+                    "outputs": n_out,
+                }
+            )
+            print(f"  {fname}: {len(text)} chars")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {len(manifest['entries'])} artifacts + manifest to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("-b", "--batch", type=int, default=32,
+                    help="primary d-grid batch size (runtime pads to this)")
+    ap.add_argument("--extra-batches", type=int, nargs="*", default=[1],
+                    help="additional batch sizes to lower (perf sweeps)")
+    ap.add_argument("-n", "--n", type=int, default=16,
+                    help="d-grid edge length (paper: 16)")
+    args = ap.parse_args()
+    lower_all(pathlib.Path(args.out_dir), args.batch, args.n,
+              tuple(args.extra_batches))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Pure-jnp reference oracle for the mpfluid compute kernels.
+
+Every Pallas kernel in this package has its semantics defined HERE, by a
+straightforward jax.numpy implementation. pytest (python/tests) asserts
+allclose between each Pallas kernel (interpret=True) and these functions over
+randomised shapes and seeds; the Rust integration test `runtime_golden`
+additionally checks the AOT-compiled artifacts against a pure-Rust port of
+the same formulas.
+
+Conventions
+-----------
+All fields live on a *batch of d-grids*: arrays of shape ``(B, N+2, N+2, N+2)``
+("halo-padded": one ghost cell per side, filled by the Rust exchange layer)
+or ``(B, N, N, N)`` ("interior"). ``N`` is the d-grid edge length (16 in
+production, per the paper). dtype is float32 throughout.
+
+Scalar parameters are packed into a single ``(12,)`` float32 vector so the
+AOT artifacts take a fixed input arity (slots 9-11 reserved):
+
+    params = [dt, h, nu, alpha, beta_g, t_inf, q_int, rho, omega, _, _, _]
+
+``omega`` is the damping factor of the Jacobi sweep: undamped Jacobi is not
+a smoother for the 3-D 7-point Laplacian (the highest-frequency mode has
+amplification −1), so the multigrid solver runs ω = 6/7.
+
+The spatial discretisation is the paper's finite-volume scheme on regular
+Cartesian blocks, which "locally degenerates into finite differences"
+(paper §2.1): 7-point Laplacian, donor-cell upwind advection, central
+pressure gradient/divergence, explicit Euler in time (Chorin projection).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Indices into the packed scalar-parameter vector.
+P_DT, P_H, P_NU, P_ALPHA, P_BETA_G, P_TINF, P_QINT, P_RHO, P_OMEGA = range(9)
+PARAMS_LEN = 12
+
+
+# ---------------------------------------------------------------------------
+# stencil helpers on halo-padded fields (B, N+2, N+2, N+2)
+# ---------------------------------------------------------------------------
+
+def interior(x):
+    """Centre view: strip one halo cell from each face."""
+    return x[:, 1:-1, 1:-1, 1:-1]
+
+
+def shifts(x):
+    """The six face-neighbour views of the interior (xm, xp, ym, yp, zm, zp)."""
+    return (
+        x[:, :-2, 1:-1, 1:-1],
+        x[:, 2:, 1:-1, 1:-1],
+        x[:, 1:-1, :-2, 1:-1],
+        x[:, 1:-1, 2:, 1:-1],
+        x[:, 1:-1, 1:-1, :-2],
+        x[:, 1:-1, 1:-1, 2:],
+    )
+
+
+def laplacian(x, h):
+    """7-point Laplacian of a halo-padded field, on the interior."""
+    xm, xp, ym, yp, zm, zp = shifts(x)
+    return (xm + xp + ym + yp + zm + zp - 6.0 * interior(x)) / (h * h)
+
+
+def upwind_advect(q, u, v, w, h):
+    """Donor-cell upwind advection term  (u·∇)q  on the interior.
+
+    ``q, u, v, w`` are halo-padded; the advecting velocity is evaluated at
+    the cell centre.
+    """
+    qc = interior(q)
+    qxm, qxp, qym, qyp, qzm, qzp = shifts(q)
+    uc, vc, wc = interior(u), interior(v), interior(w)
+    ddx = jnp.where(uc > 0.0, (qc - qxm) / h, (qxp - qc) / h)
+    ddy = jnp.where(vc > 0.0, (qc - qym) / h, (qyp - qc) / h)
+    ddz = jnp.where(wc > 0.0, (qc - qzm) / h, (qzp - qc) / h)
+    return uc * ddx + vc * ddy + wc * ddz
+
+
+# ---------------------------------------------------------------------------
+# kernel oracles — one per AOT entry point
+# ---------------------------------------------------------------------------
+
+def jacobi(p, rhs, params):
+    """One damped Jacobi sweep for the pressure Poisson equation.
+
+    Solves ∇²p = rhs:  p' = (1−ω)·p + ω·(Σ neighbours − h²·rhs) / 6.
+    p: (B, N+2, N+2, N+2) halo-padded, rhs: (B, N, N, N) interior.
+    Returns the updated interior (B, N, N, N).
+    """
+    h, omega = params[P_H], params[P_OMEGA]
+    xm, xp, ym, yp, zm, zp = shifts(p)
+    sweep = (xm + xp + ym + yp + zm + zp - h * h * rhs) / 6.0
+    return (1.0 - omega) * interior(p) + omega * sweep
+
+
+def residual(p, rhs, params):
+    """PPE residual r = rhs − ∇²p on the interior, plus per-grid Σ r²."""
+    h = params[P_H]
+    r = rhs - laplacian(p, h)
+    return r, jnp.sum(r * r, axis=(1, 2, 3))
+
+
+def divergence(u, v, w, params):
+    """PPE right-hand side:  (ρ/dt) ∇·u  in MAC (Harlow–Welch) form.
+
+    Velocities are interpreted as face values u_{i+½} stored at cell index i
+    (staggered scheme, the paper's reference [10]): backward differences here
+    pair with the forward-difference gradient in :func:`correct` so that
+    div∘grad is *exactly* the compact 7-point Laplacian used by
+    :func:`jacobi` — making the discrete projection exact.
+
+    u, v, w halo-padded; returns interior (B, N, N, N).
+    """
+    dt, h, rho = params[P_DT], params[P_H], params[P_RHO]
+    du = u[:, 1:-1, 1:-1, 1:-1] - u[:, :-2, 1:-1, 1:-1]
+    dv = v[:, 1:-1, 1:-1, 1:-1] - v[:, 1:-1, :-2, 1:-1]
+    dw = w[:, 1:-1, 1:-1, 1:-1] - w[:, 1:-1, 1:-1, :-2]
+    return (rho / dt) * (du + dv + dw) / h
+
+
+def correct(u, v, w, p, params):
+    """Chorin projection: subtract (dt/ρ) ∇p (forward differences, MAC).
+
+    u, v, w: interior (B, N, N, N); p halo-padded. Returns corrected (u,v,w).
+    """
+    dt, h, rho = params[P_DT], params[P_H], params[P_RHO]
+    c = dt / (rho * h)
+    pc = interior(p)
+    gx = p[:, 2:, 1:-1, 1:-1] - pc
+    gy = p[:, 1:-1, 2:, 1:-1] - pc
+    gz = p[:, 1:-1, 1:-1, 2:] - pc
+    return u - c * gx, v - c * gy, w - c * gz
+
+
+def predictor(u, v, w, t, params):
+    """Fused explicit-Euler predictor: tentative velocity + energy equation.
+
+    u* = u + dt( ν∇²u − (u·∇)u + b )        (momentum, eq. 2)
+    T' = T + dt( α∇²T − (u·∇)T + q_int )    (energy,   eq. 3)
+
+    Buoyancy (Boussinesq) acts on the w component: b_w = β·g·(T − T∞).
+    All inputs halo-padded (B, N+2, N+2, N+2); returns interior
+    (u*, v*, w*, T').
+    """
+    dt, h, nu = params[P_DT], params[P_H], params[P_NU]
+    alpha, beta_g = params[P_ALPHA], params[P_BETA_G]
+    t_inf, q_int = params[P_TINF], params[P_QINT]
+
+    un = interior(u) + dt * (nu * laplacian(u, h) - upwind_advect(u, u, v, w, h))
+    vn = interior(v) + dt * (nu * laplacian(v, h) - upwind_advect(v, u, v, w, h))
+    wn = interior(w) + dt * (
+        nu * laplacian(w, h)
+        - upwind_advect(w, u, v, w, h)
+        + beta_g * (interior(t) - t_inf)
+    )
+    tn = interior(t) + dt * (
+        alpha * laplacian(t, h) - upwind_advect(t, u, v, w, h) + q_int
+    )
+    return un, vn, wn, tn
+
+
+def restrict_blocks(fine, params):
+    """Full-weighting restriction: average 2×2×2 fine cells to one coarse cell.
+
+    fine: (B, N, N, N) interior with even N → (B, N/2, N/2, N/2).
+    Mirrors the bottom-up averaging step of the paper's communication phase
+    (used as the multigrid restriction operator, §2.2).
+    """
+    del params
+    b, n, _, _ = fine.shape
+    m = n // 2
+    f = fine.reshape(b, m, 2, m, 2, m, 2)
+    return f.mean(axis=(2, 4, 6))
+
+
+ENTRY_ORACLES = {
+    "jacobi": jacobi,
+    "residual": residual,
+    "divergence": divergence,
+    "correct": correct,
+    "predictor": predictor,
+    "restrict": restrict_blocks,
+}

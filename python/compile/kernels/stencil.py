@@ -1,0 +1,277 @@
+"""L1 — Pallas kernels for the mpfluid compute hot-spot.
+
+The paper's compute phase spends >90 % of its time in 7-point stencil sweeps
+over 16³ d-grids (pressure Poisson smoothing, §2.2); the remaining stencils
+(predictor, divergence, projection) share the same access pattern. Each
+kernel processes a *batch* of d-grids.
+
+Two lowering modes (``MODE``, env ``MPFLUID_PALLAS_MODE``):
+
+* ``"block"`` — the TPU-shaped schedule: the Pallas grid is the batch
+  dimension and each program instance owns one halo-padded d-grid
+  (18³·4 B ≈ 23 KiB; a full working set of ≤ 5 fields ≈ 115 KiB sits
+  comfortably in VMEM). The BlockSpec expresses the HBM↔VMEM pipeline the
+  paper expressed with per-process block decomposition. On a real TPU this
+  is the mode to compile.
+* ``"fused"`` (default) — one program instance covering the whole batch.
+  In ``interpret=True`` mode (mandatory here: the CPU PJRT plugin cannot
+  execute Mosaic custom-calls) the ``block`` grid lowers to a *serial* XLA
+  while-loop over blocks, ~57× slower than the equivalent fused form; the
+  fused kernel lowers to straight vectorised HLO. Since the CPU path is the
+  production path in this reproduction, the AOT artifacts use ``fused``
+  (perf pass, EXPERIMENTS.md §Perf). Numerics are identical — pytest checks
+  both modes against the oracle.
+
+The sweeps are elementwise/VPU work — there is deliberately no MXU use,
+matching the paper's stencil (not matmul) hot-spot.
+
+Semantics are defined by `ref.py`; the fused bodies literally apply the
+reference formulas inside the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+F32 = jnp.float32
+
+#: lowering mode: "fused" (CPU production) or "block" (TPU-shaped schedule)
+MODE = os.environ.get("MPFLUID_PALLAS_MODE", "fused")
+
+
+def _halo_spec(n):
+    """BlockSpec for one halo-padded d-grid per program instance."""
+    return pl.BlockSpec((1, n + 2, n + 2, n + 2), lambda b: (b, 0, 0, 0))
+
+
+def _int_spec(n):
+    """BlockSpec for one interior d-grid per program instance."""
+    return pl.BlockSpec((1, n, n, n), lambda b: (b, 0, 0, 0))
+
+
+def _par_spec():
+    """BlockSpec for the shared scalar-parameter vector."""
+    return pl.BlockSpec((ref.PARAMS_LEN,), lambda b: (0,))
+
+
+def _sum_spec():
+    """BlockSpec for a per-grid scalar output (shape (B,))."""
+    return pl.BlockSpec((1,), lambda b: (b,))
+
+
+def _field(n, b):
+    return jax.ShapeDtypeStruct((b, n, n, n), F32)
+
+
+# ---------------------------------------------------------------------------
+# fused bodies: one program, whole batch — delegate to the ref formulas
+# ---------------------------------------------------------------------------
+
+def _jacobi_fused(p_ref, rhs_ref, par_ref, o_ref):
+    o_ref[...] = ref.jacobi(p_ref[...], rhs_ref[...], par_ref[...])
+
+
+def _residual_fused(p_ref, rhs_ref, par_ref, r_ref, ssq_ref):
+    r, ssq = ref.residual(p_ref[...], rhs_ref[...], par_ref[...])
+    r_ref[...] = r
+    ssq_ref[...] = ssq
+
+
+def _divergence_fused(u_ref, v_ref, w_ref, par_ref, o_ref):
+    o_ref[...] = ref.divergence(u_ref[...], v_ref[...], w_ref[...], par_ref[...])
+
+
+def _correct_fused(u_ref, v_ref, w_ref, p_ref, par_ref, uo_ref, vo_ref, wo_ref):
+    u, v, w = ref.correct(u_ref[...], v_ref[...], w_ref[...], p_ref[...], par_ref[...])
+    uo_ref[...] = u
+    vo_ref[...] = v
+    wo_ref[...] = w
+
+
+def _predictor_fused(u_ref, v_ref, w_ref, t_ref, par_ref,
+                     uo_ref, vo_ref, wo_ref, to_ref):
+    u, v, w, t = ref.predictor(
+        u_ref[...], v_ref[...], w_ref[...], t_ref[...], par_ref[...]
+    )
+    uo_ref[...] = u
+    vo_ref[...] = v
+    wo_ref[...] = w
+    to_ref[...] = t
+
+
+def _restrict_fused(f_ref, par_ref, o_ref):
+    o_ref[...] = ref.restrict_blocks(f_ref[...], par_ref[...])
+
+
+# ---------------------------------------------------------------------------
+# block bodies: one program per d-grid (leading dim of every ref is 1)
+# ---------------------------------------------------------------------------
+
+def _jacobi_block(p_ref, rhs_ref, par_ref, o_ref):
+    o_ref[...] = ref.jacobi(p_ref[...], rhs_ref[...], par_ref[...])
+
+
+def _residual_block(p_ref, rhs_ref, par_ref, r_ref, ssq_ref):
+    r, ssq = ref.residual(p_ref[...], rhs_ref[...], par_ref[...])
+    r_ref[...] = r
+    ssq_ref[...] = ssq
+
+
+def _divergence_block(u_ref, v_ref, w_ref, par_ref, o_ref):
+    o_ref[...] = ref.divergence(u_ref[...], v_ref[...], w_ref[...], par_ref[...])
+
+
+def _correct_block(u_ref, v_ref, w_ref, p_ref, par_ref, uo_ref, vo_ref, wo_ref):
+    u, v, w = ref.correct(u_ref[...], v_ref[...], w_ref[...], p_ref[...], par_ref[...])
+    uo_ref[...] = u
+    vo_ref[...] = v
+    wo_ref[...] = w
+
+
+def _predictor_block(u_ref, v_ref, w_ref, t_ref, par_ref,
+                     uo_ref, vo_ref, wo_ref, to_ref):
+    u, v, w, t = ref.predictor(
+        u_ref[...], v_ref[...], w_ref[...], t_ref[...], par_ref[...]
+    )
+    uo_ref[...] = u
+    vo_ref[...] = v
+    wo_ref[...] = w
+    to_ref[...] = t
+
+
+def _restrict_block(f_ref, par_ref, o_ref):
+    o_ref[...] = ref.restrict_blocks(f_ref[...], par_ref[...])
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers — public API, shape (B, ...) in / out
+# ---------------------------------------------------------------------------
+
+def _call(body_fused, body_block, ins, out_specs, out_shapes, in_specs, b, mode):
+    """Dispatch between the fused single-program and per-block forms."""
+    if (mode or MODE) == "fused":
+        return pl.pallas_call(
+            body_fused,
+            out_shape=out_shapes,
+            interpret=True,
+        )(*ins)
+    return pl.pallas_call(
+        body_block,
+        grid=(b,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=True,
+    )(*ins)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def jacobi(p, rhs, params, mode=None):
+    b, npad = p.shape[0], p.shape[1]
+    n = npad - 2
+    return _call(
+        _jacobi_fused,
+        _jacobi_block,
+        (p, rhs, params),
+        _int_spec(n),
+        _field(n, b),
+        [_halo_spec(n), _int_spec(n), _par_spec()],
+        b,
+        mode,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def residual(p, rhs, params, mode=None):
+    b, npad = p.shape[0], p.shape[1]
+    n = npad - 2
+    return _call(
+        _residual_fused,
+        _residual_block,
+        (p, rhs, params),
+        [_int_spec(n), _sum_spec()],
+        [_field(n, b), jax.ShapeDtypeStruct((b,), F32)],
+        [_halo_spec(n), _int_spec(n), _par_spec()],
+        b,
+        mode,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def divergence(u, v, w, params, mode=None):
+    b, npad = u.shape[0], u.shape[1]
+    n = npad - 2
+    return _call(
+        _divergence_fused,
+        _divergence_block,
+        (u, v, w, params),
+        _int_spec(n),
+        _field(n, b),
+        [_halo_spec(n)] * 3 + [_par_spec()],
+        b,
+        mode,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def correct(u, v, w, p, params, mode=None):
+    b, n = u.shape[0], u.shape[1]
+    return _call(
+        _correct_fused,
+        _correct_block,
+        (u, v, w, p, params),
+        [_int_spec(n)] * 3,
+        [_field(n, b)] * 3,
+        [_int_spec(n)] * 3 + [_halo_spec(n), _par_spec()],
+        b,
+        mode,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def predictor(u, v, w, t, params, mode=None):
+    b, npad = u.shape[0], u.shape[1]
+    n = npad - 2
+    return _call(
+        _predictor_fused,
+        _predictor_block,
+        (u, v, w, t, params),
+        [_int_spec(n)] * 4,
+        [_field(n, b)] * 4,
+        [_halo_spec(n)] * 4 + [_par_spec()],
+        b,
+        mode,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def restrict_blocks(fine, params, mode=None):
+    b, n = fine.shape[0], fine.shape[1]
+    m = n // 2
+    return _call(
+        _restrict_fused,
+        _restrict_block,
+        (fine, params),
+        _int_spec(m),
+        _field(m, b),
+        [_int_spec(n), _par_spec()],
+        b,
+        mode,
+    )
+
+
+ENTRY_KERNELS = {
+    "jacobi": jacobi,
+    "residual": residual,
+    "divergence": divergence,
+    "correct": correct,
+    "predictor": predictor,
+    "restrict": restrict_blocks,
+}

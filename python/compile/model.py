@@ -1,0 +1,118 @@
+"""L2 — the JAX compute graph executed (after AOT lowering) by the Rust runtime.
+
+The paper's CFD kernel advances the incompressible Navier–Stokes equations
+with Boussinesq thermal coupling via Chorin's projection method (paper §2.1):
+
+    1. predictor      u* = u + dt(ν∇²u − (u·∇)u + b),  T' likewise (energy eq.)
+    2. divergence     rhs = (ρ/dt) ∇·u*
+    3. Poisson solve  ∇²p = rhs        — multigrid-like V-cycle, orchestrated
+                                          by Rust; the smoothing sweeps and
+                                          residuals are the entry points here
+    4. correct        u = u* − (dt/ρ)∇p
+
+Steps 1, 2 and 4 are single fused artifacts; step 3's inner operations
+(jacobi / residual / restrict) are separate artifacts invoked repeatedly by
+the Rust V-cycle driver with per-level `h` passed in the params vector (the
+d-grid shape is 16³ at *every* tree depth, so one artifact serves all
+multigrid levels — this mirrors how the paper reuses the communication
+schema as restriction/prolongation).
+
+Each entry point delegates its stencil work to the L1 Pallas kernels in
+`kernels/stencil.py`, so the Pallas body lowers into the same HLO module the
+Rust runtime loads. Everything here is shape-specialised at AOT time to a
+fixed batch size B and d-grid edge N (see `aot.py`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import stencil
+
+F32 = jnp.float32
+
+
+# Every entry point takes/returns plain arrays; Rust builds the input
+# Literals and unpacks the (always-tuple) outputs positionally.
+
+def jacobi(p, rhs, params):
+    """One Jacobi smoothing sweep (multigrid smoother). → (p_new,)"""
+    return (stencil.jacobi(p, rhs, params),)
+
+
+def residual(p, rhs, params):
+    """PPE residual field and per-grid Σr². → (r, ssq)"""
+    r, ssq = stencil.residual(p, rhs, params)
+    return (r, ssq)
+
+
+def divergence(u, v, w, params):
+    """PPE right-hand side (ρ/dt)∇·u*. → (rhs,)"""
+    return (stencil.divergence(u, v, w, params),)
+
+
+def correct(u, v, w, p, params):
+    """Projection step. → (u, v, w)"""
+    return stencil.correct(u, v, w, p, params)
+
+
+def predictor(u, v, w, t, params):
+    """Fused tentative-velocity + energy update. → (u*, v*, w*, T')"""
+    return stencil.predictor(u, v, w, t, params)
+
+
+def restrict(fine, params):
+    """Full-weighting 2× restriction (bottom-up averaging). → (coarse,)"""
+    return (stencil.restrict_blocks(fine, params),)
+
+
+def _halo(b, n):
+    return jax.ShapeDtypeStruct((b, n + 2, n + 2, n + 2), F32)
+
+
+def _int(b, n):
+    return jax.ShapeDtypeStruct((b, n, n, n), F32)
+
+
+def _par():
+    from .kernels import ref
+
+    return jax.ShapeDtypeStruct((ref.PARAMS_LEN,), F32)
+
+
+def entry_points(b: int, n: int):
+    """The AOT manifest: name → (fn, input ShapeDtypeStructs, #outputs)."""
+    return {
+        "jacobi": (jacobi, [_halo(b, n), _int(b, n), _par()], 1),
+        "residual": (residual, [_halo(b, n), _int(b, n), _par()], 2),
+        "divergence": (divergence, [_halo(b, n)] * 3 + [_par()], 1),
+        "correct": (correct, [_int(b, n)] * 3 + [_halo(b, n), _par()], 3),
+        "predictor": (predictor, [_halo(b, n)] * 4 + [_par()], 4),
+        "restrict": (restrict, [_int(b, n), _par()], 1),
+    }
+
+
+# ---------------------------------------------------------------------------
+# pure-jnp composition used by tests: one full projection time step on a
+# single periodic super-block (no tree, no halo exchange) — the physics
+# oracle for the end-to-end integration tests.
+# ---------------------------------------------------------------------------
+
+def _wrap(x):
+    """Periodic halo pad of an interior batch (B, N, N, N)."""
+    return jnp.pad(x, ((0, 0), (1, 1), (1, 1), (1, 1)), mode="wrap")
+
+
+def reference_step(u, v, w, t, params, n_jacobi: int = 50):
+    """One complete Chorin step on periodic interiors — test oracle only."""
+    from .kernels import ref
+
+    us, vs, ws, tn = ref.predictor(_wrap(u), _wrap(v), _wrap(w), _wrap(t), params)
+    rhs = ref.divergence(_wrap(us), _wrap(vs), _wrap(ws), params)
+    rhs = rhs - jnp.mean(rhs, axis=(1, 2, 3), keepdims=True)  # solvability
+    p = jnp.zeros_like(rhs)
+    for _ in range(n_jacobi):
+        p = ref.jacobi(_wrap(p), rhs, params)
+    un, vn, wn = ref.correct(us, vs, ws, _wrap(p), params)
+    return un, vn, wn, tn, p

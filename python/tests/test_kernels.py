@@ -1,0 +1,205 @@
+"""Pallas kernels (interpret=True) vs the pure-jnp oracle in kernels/ref.py.
+
+This is the core L1 correctness signal: every kernel, over randomised batch
+sizes, d-grid edges, parameter vectors and field contents (hypothesis), must
+match the reference to float32 tolerance.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref, stencil
+
+SETTINGS = dict(max_examples=20, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def make_params(rng, dt=None):
+    dt_v = dt if dt is not None else rng.uniform(1e-4, 1e-2)
+    return jnp.asarray(
+        [
+            dt_v,
+            rng.uniform(0.05, 1.0),    # h
+            rng.uniform(1e-4, 1e-1),   # nu
+            rng.uniform(1e-4, 1e-1),   # alpha
+            rng.uniform(-1.0, 1.0),    # beta_g
+            rng.uniform(280.0, 300.0), # t_inf
+            rng.uniform(-1.0, 1.0),    # q_int
+            rng.uniform(0.5, 2.0),     # rho
+            rng.uniform(0.5, 1.0),     # omega (jacobi damping)
+            0.0, 0.0, 0.0,             # reserved
+        ],
+        dtype=jnp.float32,
+    )
+
+
+def halo_field(rng, b, n, lo=-1.0, hi=1.0):
+    return jnp.asarray(rng.uniform(lo, hi, (b, n + 2, n + 2, n + 2)),
+                       dtype=jnp.float32)
+
+
+def int_field(rng, b, n, lo=-1.0, hi=1.0):
+    return jnp.asarray(rng.uniform(lo, hi, (b, n, n, n)), dtype=jnp.float32)
+
+
+def assert_close(a, b, rtol=2e-5, atol=2e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=rtol, atol=atol)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 5),
+                  n=st.sampled_from([4, 8, 16]),
+                  mode=st.sampled_from(["fused", "block"]))
+def test_jacobi_matches_ref(seed, b, n, mode):
+    rng = np.random.default_rng(seed)
+    p, rhs, par = halo_field(rng, b, n), int_field(rng, b, n), make_params(rng)
+    assert_close(stencil.jacobi(p, rhs, par, mode=mode), ref.jacobi(p, rhs, par))
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 5),
+                  n=st.sampled_from([4, 8, 16]))
+def test_residual_matches_ref(seed, b, n):
+    rng = np.random.default_rng(seed)
+    p, rhs, par = halo_field(rng, b, n), int_field(rng, b, n), make_params(rng)
+    r_b, s_b = stencil.residual(p, rhs, par, mode="block")
+    r_k, s_k = stencil.residual(p, rhs, par)
+    assert_close(r_b, r_k)
+    r_r, s_r = ref.residual(p, rhs, par)
+    assert_close(r_k, r_r)
+    assert_close(s_k, s_r, rtol=1e-3, atol=1e-3)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 5),
+                  n=st.sampled_from([4, 8, 16]))
+def test_divergence_matches_ref(seed, b, n):
+    rng = np.random.default_rng(seed)
+    u, v, w = (halo_field(rng, b, n) for _ in range(3))
+    par = make_params(rng)
+    assert_close(stencil.divergence(u, v, w, par),
+                 ref.divergence(u, v, w, par))
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 5),
+                  n=st.sampled_from([4, 8, 16]))
+def test_correct_matches_ref(seed, b, n):
+    rng = np.random.default_rng(seed)
+    u, v, w = (int_field(rng, b, n) for _ in range(3))
+    p, par = halo_field(rng, b, n), make_params(rng)
+    for got, want in zip(stencil.correct(u, v, w, p, par),
+                         ref.correct(u, v, w, p, par)):
+        assert_close(got, want)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 4),
+                  n=st.sampled_from([4, 8, 16]))
+def test_predictor_matches_ref(seed, b, n):
+    rng = np.random.default_rng(seed)
+    u, v, w = (halo_field(rng, b, n) for _ in range(3))
+    t = halo_field(rng, b, n, 280.0, 320.0)
+    par = make_params(rng)
+    for mode in ("fused", "block"):
+        for got, want in zip(stencil.predictor(u, v, w, t, par, mode=mode),
+                             ref.predictor(u, v, w, t, par)):
+            assert_close(got, want, rtol=1e-4, atol=1e-3)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 5),
+                  n=st.sampled_from([4, 8, 16]))
+def test_restrict_matches_ref(seed, b, n):
+    rng = np.random.default_rng(seed)
+    f, par = int_field(rng, b, n), make_params(rng)
+    assert_close(stencil.restrict_blocks(f, par), ref.restrict_blocks(f, par))
+
+
+# ---------------------------------------------------------------------------
+# analytic sanity checks — the oracles themselves must be right
+# ---------------------------------------------------------------------------
+
+def test_jacobi_fixed_point_is_solution():
+    """If p solves the 7-point system exactly, a Jacobi sweep is identity."""
+    rng = np.random.default_rng(0)
+    p = halo_field(rng, 2, 8)
+    par = make_params(rng)
+    h = float(par[ref.P_H])
+    rhs = np.asarray(ref.laplacian(p, h))  # rhs := ∇²p  ⇒ p is the solution
+    out = ref.jacobi(p, jnp.asarray(rhs), par)
+    assert_close(out, ref.interior(p), rtol=1e-4, atol=1e-4)
+
+
+def test_residual_zero_for_exact_solution():
+    rng = np.random.default_rng(1)
+    p = halo_field(rng, 2, 8)
+    par = make_params(rng)
+    rhs = ref.laplacian(p, float(par[ref.P_H]))
+    r, ssq = ref.residual(p, rhs, par)
+    assert float(jnp.max(jnp.abs(r))) < 1e-3
+    assert float(jnp.max(ssq)) < 1e-4
+
+
+def test_divergence_of_constant_field_is_zero():
+    par = make_params(np.random.default_rng(2))
+    c = jnp.ones((1, 10, 10, 10), jnp.float32)
+    assert float(jnp.max(jnp.abs(ref.divergence(c, 2 * c, -c, par)))) == 0.0
+
+
+def test_divergence_linear_field_exact():
+    """∇·(x, 2y, 3z) = 6, exactly representable by central differences."""
+    n = 8
+    par = make_params(np.random.default_rng(3), dt=1.0)
+    par = par.at[ref.P_RHO].set(1.0)
+    h = float(par[ref.P_H])
+    idx = (np.arange(n + 2) - 0.5) * h
+    x = np.broadcast_to(idx[:, None, None], (n + 2,) * 3)
+    u = jnp.asarray(x[None], jnp.float32)
+    v = jnp.asarray(2 * np.transpose(x, (1, 0, 2))[None], jnp.float32)
+    w = jnp.asarray(3 * np.transpose(x, (2, 1, 0))[None], jnp.float32)
+    assert_close(ref.divergence(u, v, w, par),
+                 6.0 * jnp.ones((1, n, n, n)), rtol=1e-3, atol=1e-3)
+
+
+def test_correct_then_divergence_reduces():
+    """Projection with a converged p must reduce ‖∇·u‖ (periodic box)."""
+    import compile.model as model
+
+    rng = np.random.default_rng(4)
+    n = 16
+    par = jnp.asarray(
+        [0.01, 1.0 / n, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.857, 0.0, 0.0, 0.0],
+        jnp.float32)
+    u, v, w = (int_field(rng, 1, n, -0.1, 0.1) for _ in range(3))
+    t = int_field(rng, 1, n, 299.0, 301.0)
+    un, vn, wn, _, _ = model.reference_step(u, v, w, t, par, n_jacobi=400)
+    div0 = ref.divergence(model._wrap(u), model._wrap(v), model._wrap(w), par)
+    div1 = ref.divergence(model._wrap(un), model._wrap(vn), model._wrap(wn), par)
+    n0 = float(jnp.sqrt(jnp.mean(div0 ** 2)))
+    n1 = float(jnp.sqrt(jnp.mean(div1 ** 2)))
+    assert n1 < 0.35 * n0, (n0, n1)
+
+
+def test_restrict_preserves_constant():
+    c = 3.5 * jnp.ones((2, 8, 8, 8), jnp.float32)
+    out = ref.restrict_blocks(c, None)
+    assert_close(out, 3.5 * jnp.ones((2, 4, 4, 4)))
+
+
+def test_predictor_diffusion_decays_peak():
+    """Pure diffusion must strictly reduce an interior hot spot."""
+    n = 8
+    par = jnp.asarray(
+        [1e-3, 0.1, 0.05, 0.05, 0.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0, 0.0],
+        jnp.float32)
+    z = jnp.zeros((1, n + 2, n + 2, n + 2), jnp.float32)
+    t = z.at[0, 5, 5, 5].set(1.0)
+    _, _, _, tn = ref.predictor(z, z, z, t, par)
+    assert float(tn[0, 4, 4, 4]) < 1.0
+    assert float(tn[0, 3, 4, 4]) > 0.0  # heat spread to a neighbour

@@ -1,0 +1,80 @@
+"""L2 model-composition tests: the reference projection step has the right
+physics on a periodic box (divergence reduction, momentum/energy sanity)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def params(n, dt=0.005, nu=0.01, alpha=0.01, beta_g=0.0):
+    return jnp.asarray(
+        [dt, 1.0 / n, nu, alpha, beta_g, 300.0, 0.0, 1.0, 0.857, 0.0, 0.0, 0.0],
+        jnp.float32)
+
+
+def taylor_green(n):
+    """Taylor–Green-like periodic initial velocity on an n³ box."""
+    x = (np.arange(n) + 0.5) / n * 2 * np.pi
+    X, Y, Z = np.meshgrid(x, x, x, indexing="ij")
+    u = np.sin(X) * np.cos(Y) * np.cos(Z)
+    v = -np.cos(X) * np.sin(Y) * np.cos(Z)
+    w = np.zeros_like(u)
+    return (jnp.asarray(a[None], jnp.float32) for a in (u, v, w))
+
+
+def test_reference_step_shapes():
+    n = 8
+    u, v, w = taylor_green(n)
+    t = 300.0 * jnp.ones((1, n, n, n), jnp.float32)
+    un, vn, wn, tn, p = model.reference_step(u, v, w, t, params(n), n_jacobi=30)
+    for a in (un, vn, wn, tn, p):
+        assert a.shape == (1, n, n, n)
+        assert bool(jnp.all(jnp.isfinite(a)))
+
+
+def test_projection_reduces_divergence_taylor_green():
+    n = 16
+    u, v, w = taylor_green(n)
+    t = 300.0 * jnp.ones((1, n, n, n), jnp.float32)
+    par = params(n)
+    un, vn, wn, _, _ = model.reference_step(u, v, w, t, par, n_jacobi=300)
+    pre = ref.divergence(model._wrap(u), model._wrap(v), model._wrap(w), par)
+    post = ref.divergence(model._wrap(un), model._wrap(vn), model._wrap(wn), par)
+    assert float(jnp.sqrt(jnp.mean(post**2))) < float(jnp.sqrt(jnp.mean(pre**2)))
+
+
+def test_energy_conserved_without_sources():
+    """With q_int=0 and periodic BCs, mean temperature is invariant."""
+    n = 8
+    rng = np.random.default_rng(7)
+    u = jnp.zeros((1, n, n, n), jnp.float32)
+    t = jnp.asarray(rng.uniform(295, 305, (1, n, n, n)), jnp.float32)
+    par = params(n, nu=0.0, alpha=0.02)
+    _, _, _, tn, _ = model.reference_step(u, u, u, t, par, n_jacobi=5)
+    assert abs(float(jnp.mean(tn)) - float(jnp.mean(t))) < 1e-3
+
+
+def test_buoyancy_accelerates_hot_fluid_upward():
+    n = 8
+    u = jnp.zeros((1, n, n, n), jnp.float32)
+    t = 300.0 * jnp.ones((1, n, n, n), jnp.float32)
+    t = t.at[0, 4, 4, 4].set(310.0)
+    par = params(n, beta_g=1.0)  # b_w = β g (T − T∞), T∞ = 300
+    _, _, wn, _, _ = model.reference_step(u, u, u, t, par, n_jacobi=100)
+    assert float(wn[0, 4, 4, 4]) > 0.0  # hot cell pushed along +z
+
+
+def test_viscosity_decays_kinetic_energy():
+    n = 16
+    u, v, w = taylor_green(n)
+    t = 300.0 * jnp.ones((1, n, n, n), jnp.float32)
+    par = params(n, nu=0.05)
+    ke0 = float(jnp.mean(u**2 + v**2 + w**2))
+    un, vn, wn = u, v, w
+    for _ in range(3):
+        un, vn, wn, _, _ = model.reference_step(un, vn, wn, t, par, n_jacobi=60)
+    ke1 = float(jnp.mean(un**2 + vn**2 + wn**2))
+    assert ke1 < ke0

@@ -1,0 +1,80 @@
+//! Bench: **Fig 2a** — ghost-layer exchange cost.
+//!
+//! Measures the real three-phase exchange (bottom-up, horizontal, top-down,
+//! all 5 variables) on this host across domain depths and rank counts, then
+//! prices the measured traffic pattern on the JuQueen interconnect model at
+//! the paper's scales.
+//!
+//! Run: `cargo bench --bench fig2_exchange`
+
+use mpfluid::cluster::Machine;
+use mpfluid::exchange::{self, ExchangeStats, Gen};
+use mpfluid::nbs::NeighbourhoodServer;
+use mpfluid::physics::bc::DomainBc;
+use mpfluid::tree::dgrid::DGrid;
+use mpfluid::tree::{sfc, BBox, SpaceTree};
+use mpfluid::util::{bench::measure, fmt_bytes};
+use mpfluid::var;
+
+fn main() {
+    println!("== real full exchange on this host ==");
+    println!(
+        "{:>7} {:>8} {:>8} {:>14} {:>10} {:>22}",
+        "depth", "ranks", "grids", "cross-bytes", "msgs", "wall-clock"
+    );
+    let vars = [var::U, var::V, var::W, var::P, var::T];
+    let mut measured: Vec<(u32, u64, u64)> = Vec::new();
+    for depth in [1u32, 2, 3] {
+        for ranks in [4u32, 16, 64] {
+            let mut tree = SpaceTree::full(BBox::unit(), depth);
+            sfc::partition(&mut tree, ranks);
+            let nbs = NeighbourhoodServer::new(tree);
+            let mut grids: Vec<DGrid> =
+                nbs.tree.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+            let mut stats = ExchangeStats::default();
+            let sample = measure(if depth == 3 { 3 } else { 10 }, || {
+                stats = exchange::full_exchange(
+                    &nbs,
+                    &mut grids,
+                    Gen::Cur,
+                    &vars,
+                    &DomainBc::all_walls(),
+                );
+            });
+            println!(
+                "{:>7} {:>8} {:>8} {:>14} {:>10} {:>22}",
+                depth,
+                ranks,
+                nbs.tree.len(),
+                fmt_bytes(stats.cross_rank_bytes),
+                stats.messages,
+                sample.fmt_ms()
+            );
+            if ranks == 64 {
+                measured.push((depth, stats.cross_rank_bytes, stats.messages));
+            }
+        }
+    }
+
+    println!("\n== Fig 2a (model): traffic scaled to paper domains on JuQueen ==");
+    println!("{:>8} {:>10} {:>14} {:>12}", "domain", "ranks", "cross-bytes", "time");
+    let m = Machine::juqueen();
+    let (d3, bytes3, msgs3) = measured.last().copied().unwrap();
+    assert_eq!(d3, 3);
+    for (name, depth, ranks) in [
+        ("1024³", 6u32, 8192u64),
+        ("2048³", 7, 32768),
+        ("4096³", 8, 140_000),
+    ] {
+        let scale = 8u64.pow(depth - 3);
+        let t = m.estimate_exchange(ranks, bytes3 * scale, msgs3 * scale);
+        println!(
+            "{:>8} {:>10} {:>14} {:>10.3} s",
+            name,
+            ranks,
+            fmt_bytes(bytes3 * scale),
+            t
+        );
+    }
+    println!("(paper: full update of the 4096³ domain ≈ 0.1 s on 140k cores)");
+}

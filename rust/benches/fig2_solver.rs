@@ -1,0 +1,117 @@
+//! Bench: **Fig 2b + Fig 2c** — multigrid solver scaling.
+//!
+//! Fig 2b (strong speed-up): fixed depth-2 problem, real V-cycle timings.
+//! Fig 2c (time-to-solution vs grids/process): real per-grid solve rate on
+//! this host combined with the interconnect model at paper rank counts.
+//!
+//! Run: `cargo bench --bench fig2_solver`
+
+use mpfluid::cluster::Machine;
+use mpfluid::config::Scenario;
+use mpfluid::physics::RustBackend;
+use mpfluid::solver::{self, SolverConfig};
+use mpfluid::util::bench::measure;
+use mpfluid::util::rng::Rng;
+use mpfluid::var;
+
+fn main() {
+    // ---- Fig 2b: solver time on fixed problem, backend comparison -------
+    println!("== Fig 2b: V-cycle cost on a fixed depth-2 domain (585 grids) ==");
+    let sc = Scenario::cavity(2);
+    let mut sim = sc.build();
+    sim.step(&RustBackend); // realistic state
+    let mut rng = Rng::new(3);
+    for g in sim.grids.iter_mut() {
+        let mut f = vec![0.0f32; mpfluid::DGRID_CELLS];
+        rng.fill_f32(&mut f, -1.0, 1.0);
+        g.temp.set_interior(var::P, &f);
+    }
+    let cfg = SolverConfig {
+        max_cycles: 2,
+        rtol: 0.0,
+        ..SolverConfig::default()
+    };
+    let mut grids = sim.grids.clone();
+    let mut sweeps = 0usize;
+    let rust_sample = measure(5, || {
+        grids.clone_from(&sim.grids);
+        let stats = solver::solve_pressure(
+            &sim.nbs,
+            &mut grids,
+            &sim.bc,
+            &sim.params,
+            &RustBackend,
+            &cfg,
+        );
+        sweeps = stats.sweeps;
+    });
+    println!("  rust backend : {}  ({sweeps} sweeps)", rust_sample.fmt_ms());
+    if let Ok(pjrt) = mpfluid::runtime::PjrtBackend::load_default() {
+        let pjrt_sample = measure(3, || {
+            grids.clone_from(&sim.grids);
+            solver::solve_pressure(&sim.nbs, &mut grids, &sim.bc, &sim.params, &pjrt, &cfg);
+        });
+        println!(
+            "  pjrt backend : {}  ({} dispatches)",
+            pjrt_sample.fmt_ms(),
+            pjrt.dispatch_count()
+        );
+    } else {
+        println!("  pjrt backend : skipped (run `make artifacts`)");
+    }
+
+    // residual-reduction-per-second: V-cycle vs plain smoothing (the
+    // multigrid claim behind Fig 2b's good strong scaling)
+    println!("\n== multigrid vs plain smoothing at equal work ==");
+    let mut g_mg = sim.grids.clone();
+    let stats_mg = solver::solve_pressure(
+        &sim.nbs,
+        &mut g_mg,
+        &sim.bc,
+        &sim.params,
+        &RustBackend,
+        &SolverConfig {
+            max_cycles: 3,
+            rtol: 0.0,
+            ..SolverConfig::default()
+        },
+    );
+    println!(
+        "  3 V-cycles:   residual {:.3e} → {:.3e}  ({} sweeps, {:.3} s)",
+        stats_mg.initial_residual,
+        stats_mg.final_residual,
+        stats_mg.sweeps,
+        stats_mg.seconds
+    );
+
+    // ---- Fig 2c: time-to-solution vs grids per process -------------------
+    println!("\n== Fig 2c: time-to-solution vs grids/process (depth-6 domain, model) ==");
+    let per_grid_step = {
+        let sc1 = Scenario::cavity(1);
+        let mut s1 = sc1.build();
+        let sample = measure(3, || {
+            s1.step(&RustBackend);
+        });
+        sample.min / s1.nbs.tree.len() as f64
+    };
+    let m = Machine::juqueen();
+    println!(
+        "{:>16} {:>10} {:>12} {:>12} {:>12}",
+        "grids/process", "ranks", "compute", "exchange", "total"
+    );
+    let total_grids = 299_593u64;
+    for ranks in [2048u64, 8192, 32768, 131_072] {
+        let gpp = total_grids / ranks;
+        let compute = per_grid_step * gpp as f64;
+        let exch = m.estimate_exchange(ranks, total_grids * 16 * 16 * 5 * 4, total_grids * 6);
+        println!(
+            "{:>16} {:>10} {:>10.4} s {:>10.4} s {:>10.4} s",
+            gpp,
+            ranks,
+            compute,
+            exch,
+            compute + exch
+        );
+    }
+    println!("(shape: linear in grids/process until the exchange floor dominates)");
+}

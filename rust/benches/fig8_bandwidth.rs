@@ -1,0 +1,151 @@
+//! Bench: **Fig 8a + Fig 8b** — sustained checkpoint write bandwidth.
+//!
+//! Two parts:
+//! 1. *Real* collective writes of miniature snapshots through the full
+//!    iokernel → pario → h5lite stack on this host, sweeping rank counts
+//!    (measures the actual software path: pack, aggregate, merge, pwrite).
+//! 2. The calibrated machine model priced at the paper's scales — the
+//!    series of Fig 8a (337 GB), Fig 8b (2.7 TB) and VPIC-IO alongside.
+//!
+//! Run: `cargo bench --bench fig8_bandwidth`
+
+use mpfluid::cluster::{
+    paper_depth6_workload, paper_depth7_workload, IoTuning, Machine,
+};
+use mpfluid::config::Scenario;
+use mpfluid::h5lite::H5File;
+use mpfluid::iokernel;
+use mpfluid::pario::ParallelIo;
+use mpfluid::util::{bench::measure, fmt_bytes, fmt_gbps};
+use mpfluid::vpic;
+
+fn real_write_sweep() {
+    println!("== real shared-file checkpoint writes (depth-2 domain, this host) ==");
+    println!(
+        "{:>8} {:>12} {:>10} {:>16} {:>12}",
+        "ranks", "bytes", "ops", "time", "bandwidth"
+    );
+    for ranks in [1u64, 4, 16, 64] {
+        let mut sc = Scenario::channel(2);
+        sc.ranks = ranks as u32;
+        let sim = sc.build();
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), ranks);
+        let dir = std::env::temp_dir();
+        let mut n = 0u32;
+        let mut bytes = 0u64;
+        let mut ops = 0u64;
+        let sample = measure(5, || {
+            let path = dir.join(format!("fig8_real_{ranks}_{n}.h5"));
+            n += 1;
+            let mut f = H5File::create(&path, 4096).unwrap();
+            iokernel::write_common(&mut f, &sim.params, &sim.nbs.tree, ranks).unwrap();
+            let rep =
+                iokernel::write_snapshot(&mut f, &io, &sim.nbs.tree, &sim.part, &sim.grids, 0.0)
+                    .unwrap();
+            bytes = rep.io.bytes;
+            ops = rep.io.write_ops;
+            std::fs::remove_file(&path).ok();
+        });
+        println!(
+            "{:>8} {:>12} {:>10} {:>16} {:>12}",
+            ranks,
+            fmt_bytes(bytes),
+            ops,
+            sample.fmt_ms(),
+            fmt_gbps(bytes as f64, sample.min)
+        );
+    }
+}
+
+fn modelled_fig8a() {
+    println!("\n== Fig 8a (model): JuQueen, 1024³, 337 GB/checkpoint ==");
+    println!(
+        "{:>10} {:>16} {:>16}",
+        "ranks", "mpfluid GB/s", "VPIC-IO GB/s"
+    );
+    let m = Machine::juqueen();
+    let t = IoTuning::default();
+    for ranks in [2048u64, 4096, 8192, 16384, 32768] {
+        let w = paper_depth6_workload(ranks);
+        let mp = m.estimate_write(&w, &t);
+        let vp = vpic::estimate(&m, ranks, w.total_bytes, &t);
+        println!(
+            "{:>10} {:>16.2} {:>16.2}",
+            ranks,
+            mp.bandwidth / 1e9,
+            vp / 1e9
+        );
+    }
+}
+
+fn modelled_fig8b() {
+    println!("\n== Fig 8b (model): JuQueen, 2048³, 2.7 TB/checkpoint ==");
+    println!(
+        "{:>10} {:>16} {:>16}",
+        "ranks", "mpfluid GB/s", "VPIC-IO GB/s"
+    );
+    let m = Machine::juqueen();
+    let t = IoTuning::default();
+    for ranks in [8192u64, 16384, 32768] {
+        let w = paper_depth7_workload(ranks);
+        let mp = m.estimate_write(&w, &t);
+        let vp = vpic::estimate(&m, ranks, w.total_bytes, &t);
+        println!(
+            "{:>10} {:>16.2} {:>16.2}",
+            ranks,
+            mp.bandwidth / 1e9,
+            vp / 1e9
+        );
+    }
+}
+
+fn modelled_supermuc() {
+    println!("\n== §5.3 (model): SuperMUC, 1024³, 337 GB/checkpoint ==");
+    println!("{:>10} {:>16} {:>12}", "ranks", "model GB/s", "paper GB/s");
+    let m = Machine::supermuc();
+    for (ranks, paper) in [(2048u64, 21.4), (4096, 14.92), (8192, 4.64)] {
+        let e = m.estimate_write(&paper_depth6_workload(ranks), &IoTuning::default());
+        println!("{:>10} {:>16.2} {:>12.2}", ranks, e.bandwidth / 1e9, paper);
+    }
+}
+
+fn real_vpic_write() {
+    println!("\n== real VPIC-IO dump vs mpfluid snapshot at equal bytes (this host) ==");
+    let mut sc = Scenario::channel(2);
+    sc.ranks = 16;
+    let sim = sc.build();
+    let io = ParallelIo::new(Machine::local(), IoTuning::default(), 16);
+    let dir = std::env::temp_dir();
+    // mpfluid
+    let mp_path = dir.join("fig8_mp.h5");
+    let mut f = H5File::create(&mp_path, 4096).unwrap();
+    iokernel::write_common(&mut f, &sim.params, &sim.nbs.tree, 16).unwrap();
+    let rep =
+        iokernel::write_snapshot(&mut f, &io, &sim.nbs.tree, &sim.part, &sim.grids, 0.0).unwrap();
+    // VPIC at the same byte volume
+    let vp_path = dir.join("fig8_vp.h5");
+    let mut vf = H5File::create(&vp_path, 4096).unwrap();
+    let vrep = vpic::write_dump(&mut vf, &io, vpic::particles_for_bytes(rep.io.bytes), 1).unwrap();
+    println!(
+        "  mpfluid: {} in {:.1} ms → {}",
+        fmt_bytes(rep.io.bytes),
+        rep.io.real_seconds * 1e3,
+        fmt_gbps(rep.io.bytes as f64, rep.io.real_seconds)
+    );
+    println!(
+        "  VPIC-IO: {} in {:.1} ms → {}",
+        fmt_bytes(vrep.io.bytes),
+        vrep.io.real_seconds * 1e3,
+        fmt_gbps(vrep.io.bytes as f64, vrep.io.real_seconds)
+    );
+    std::fs::remove_file(&mp_path).ok();
+    std::fs::remove_file(&vp_path).ok();
+}
+
+fn main() {
+    real_write_sweep();
+    real_vpic_write();
+    modelled_fig8a();
+    modelled_fig8b();
+    modelled_supermuc();
+}

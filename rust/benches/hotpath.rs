@@ -1,0 +1,147 @@
+//! Bench: **hot-path microbenchmarks** for the perf pass (EXPERIMENTS.md
+//! §Perf) — per-stage timings of everything on the request path:
+//!
+//! * compute kernels per backend (rust oracle vs PJRT artifacts) and batch
+//!   size — quantifies dispatch amortisation;
+//! * batcher pack/scatter;
+//! * snapshot pack + collective write phases;
+//! * one full coordinator step, broken down.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use mpfluid::config::Scenario;
+use mpfluid::h5lite::H5File;
+use mpfluid::iokernel;
+use mpfluid::cluster::{IoTuning, Machine};
+use mpfluid::pario::ParallelIo;
+use mpfluid::physics::{ComputeBackend, Params, RustBackend};
+use mpfluid::runtime::PjrtBackend;
+use mpfluid::util::bench::measure;
+use mpfluid::util::rng::Rng;
+use mpfluid::DGRID_N;
+
+const PAD: usize = (DGRID_N + 2) * (DGRID_N + 2) * (DGRID_N + 2);
+const INT: usize = DGRID_N * DGRID_N * DGRID_N;
+
+fn kernel_sweep(name: &str, be: &dyn ComputeBackend) {
+    println!("== {name}: jacobi sweep cost vs batch size ==");
+    println!(
+        "{:>8} {:>22} {:>16} {:>14}",
+        "batch", "wall-clock", "per-grid", "cells/s"
+    );
+    let par = Params::isothermal(0.01, 0.05, 0.01);
+    let mut rng = Rng::new(5);
+    for b in [1usize, 8, 32, 128, 512] {
+        let mut p = vec![0.0f32; b * PAD];
+        let mut rhs = vec![0.0f32; b * INT];
+        rng.fill_f32(&mut p, -1.0, 1.0);
+        rng.fill_f32(&mut rhs, -1.0, 1.0);
+        let mut out = vec![0.0f32; b * INT];
+        let iters = if b >= 128 { 10 } else { 30 };
+        let s = measure(iters, || {
+            be.jacobi(b, &p, &rhs, &par, &mut out);
+        });
+        println!(
+            "{:>8} {:>22} {:>13.1} µs {:>13.2e}",
+            b,
+            s.fmt_ms(),
+            s.min * 1e6 / b as f64,
+            (b * INT) as f64 / s.min
+        );
+    }
+}
+
+fn predictor_sweep(name: &str, be: &dyn ComputeBackend) {
+    println!("\n== {name}: fused predictor cost vs batch size ==");
+    let par = Params {
+        dt: 0.01,
+        h: 0.05,
+        nu: 0.01,
+        alpha: 0.01,
+        beta_g: 0.3,
+        t_inf: 300.0,
+        q_int: 0.0,
+        rho: 1.0,
+        omega: 1.0,
+    };
+    let mut rng = Rng::new(6);
+    for b in [1usize, 32, 256] {
+        let mut fields = vec![vec![0.0f32; b * PAD]; 4];
+        for f in fields.iter_mut() {
+            rng.fill_f32(f, -1.0, 1.0);
+        }
+        let mut outs = vec![vec![0.0f32; b * INT]; 4];
+        let s = measure(10, || {
+            let [u, v, w, t] = &fields[..] else { unreachable!() };
+            let [uo, vo, wo, to] = &mut outs[..] else { unreachable!() };
+            be.predictor(b, u, v, w, t, &par, uo, vo, wo, to);
+        });
+        println!("  batch {b:>4}: {}  ({:.1} µs/grid)", s.fmt_ms(), s.min * 1e6 / b as f64);
+    }
+}
+
+fn step_breakdown() {
+    println!("\n== full coordinator step, depth 2 (585 grids, 64 leaves… 512 leaves) ==");
+    let sc = Scenario::channel(2);
+    let mut sim = sc.build();
+    sim.step(&RustBackend); // warm state
+    let s = measure(5, || {
+        sim.step(&RustBackend);
+    });
+    println!("  rust backend: {}", s.fmt_ms());
+    if let Ok(pjrt) = PjrtBackend::load_default() {
+        let mut sim2 = sc.build();
+        sim2.step(&pjrt);
+        let s2 = measure(3, || {
+            sim2.step(&pjrt);
+        });
+        println!("  pjrt backend: {}", s2.fmt_ms());
+    }
+}
+
+fn io_breakdown() {
+    println!("\n== snapshot write path breakdown (depth 2, 16 ranks) ==");
+    let mut sc = Scenario::channel(2);
+    sc.ranks = 16;
+    let sim = sc.build();
+    let io = ParallelIo::new(Machine::local(), IoTuning::default(), 16);
+    let dir = std::env::temp_dir();
+    let mut n = 0u32;
+    let mut pack_s = 0.0;
+    let mut real_s = 0.0;
+    let mut bytes = 0u64;
+    let s = measure(5, || {
+        let path = dir.join(format!("hot_io_{n}.h5"));
+        n += 1;
+        let mut f = H5File::create(&path, 4096).unwrap();
+        iokernel::write_common(&mut f, &sim.params, &sim.nbs.tree, 16).unwrap();
+        let rep =
+            iokernel::write_snapshot(&mut f, &io, &sim.nbs.tree, &sim.part, &sim.grids, 0.0)
+                .unwrap();
+        pack_s = rep.pack_seconds;
+        real_s = rep.io.real_seconds;
+        bytes = rep.io.bytes;
+        std::fs::remove_file(&path).ok();
+    });
+    println!(
+        "  total {}  = pack {:.1} ms + pwrite {:.1} ms   ({} payload)",
+        s.fmt_ms(),
+        pack_s * 1e3,
+        real_s * 1e3,
+        mpfluid::util::fmt_bytes(bytes)
+    );
+}
+
+fn main() {
+    kernel_sweep("rust oracle", &RustBackend);
+    predictor_sweep("rust oracle", &RustBackend);
+    match PjrtBackend::load_default() {
+        Ok(pjrt) => {
+            kernel_sweep("pjrt artifacts", &pjrt);
+            predictor_sweep("pjrt artifacts", &pjrt);
+        }
+        Err(e) => println!("\n(pjrt skipped: {e})"),
+    }
+    step_breakdown();
+    io_breakdown();
+}

@@ -1,0 +1,504 @@
+//! The **simulation coordinator**: owns the domain state (tree + d-grids +
+//! partition), drives the Chorin projection time loop through the compute
+//! backend, triggers checkpoints through the I/O kernel, and applies
+//! steering commands — the Rust L3 event loop of the three-layer stack.
+
+use anyhow::Result;
+
+use crate::exchange::{self, ExchangeStats, Gen};
+use crate::iokernel::{self, SnapshotReport};
+use crate::nbs::NeighbourhoodServer;
+use crate::pario::ParallelIo;
+use crate::physics::bc::{apply_solid_mask, DomainBc};
+use crate::physics::{ComputeBackend, Params};
+use crate::solver::{self, batch, SolveStats, SolverConfig};
+use crate::tree::dgrid::DGrid;
+use crate::tree::sfc::{self, Partition};
+use crate::tree::SpaceTree;
+use crate::{var, DGRID_CELLS};
+
+/// Report of one time step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepReport {
+    pub step: u64,
+    pub t: f64,
+    pub exchange: ExchangeStats,
+    pub solve: SolveStats,
+    /// RMS of the PPE right-hand side before the solve (∝ ‖∇·u*‖).
+    pub div_rms: f32,
+    pub seconds: f64,
+}
+
+/// The live simulation state.
+pub struct Simulation {
+    pub nbs: NeighbourhoodServer,
+    pub part: Partition,
+    pub grids: Vec<DGrid>,
+    pub bc: DomainBc,
+    pub params: Params,
+    pub solver_cfg: SolverConfig,
+    pub t: f64,
+    pub step: u64,
+    /// True when any grid carries solid cells (enables mask pass).
+    pub has_solids: bool,
+}
+
+impl Simulation {
+    /// Build a fresh simulation over `tree`, partitioned onto `n_ranks`.
+    pub fn new(mut tree: SpaceTree, n_ranks: u32, bc: DomainBc, params: Params) -> Simulation {
+        let part = sfc::partition(&mut tree, n_ranks);
+        let grids: Vec<DGrid> = tree.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+        Simulation {
+            nbs: NeighbourhoodServer::new(tree),
+            part,
+            grids,
+            bc,
+            params,
+            solver_cfg: SolverConfig::per_step(),
+            t: 0.0,
+            step: 0,
+            has_solids: false,
+        }
+    }
+
+    /// Resume from a restored checkpoint (paper §3.2: topology comes from
+    /// the file, not from the neighbourhood server's serial decomposition).
+    pub fn from_snapshot(snap: iokernel::RestoredSnapshot, bc: DomainBc) -> Simulation {
+        let has_solids = snap.grids.iter().any(|g| {
+            g.cell_type
+                .iter()
+                .any(|&c| crate::tree::dgrid::CellType::from_u8(c).is_solid())
+        });
+        Simulation {
+            nbs: NeighbourhoodServer::new(snap.tree),
+            part: snap.part,
+            grids: snap.grids,
+            bc,
+            params: snap.params,
+            solver_cfg: SolverConfig::per_step(),
+            t: snap.t,
+            step: 0,
+            has_solids,
+        }
+    }
+
+    /// Uniform initial condition: velocity zero, temperature `t0`.
+    pub fn init_temperature(&mut self, t0: f32) {
+        for g in &mut self.grids {
+            for gen in [Gen::Cur, Gen::Prev] {
+                let fs = gen.of_mut(g);
+                for x in fs.var_mut(var::T).iter_mut() {
+                    *x = t0;
+                }
+            }
+        }
+    }
+
+    /// Leaf indices grouped by depth (ascending) — compute happens on
+    /// leaves, coarser d-grids carry restricted copies.
+    pub fn leaves_by_depth(&self) -> Vec<(u32, Vec<u32>)> {
+        let mut depths: Vec<u32> = self
+            .nbs
+            .tree
+            .nodes
+            .iter()
+            .filter(|n| n.is_leaf())
+            .map(|n| n.depth())
+            .collect();
+        depths.sort_unstable();
+        depths.dedup();
+        depths
+            .into_iter()
+            .map(|d| {
+                (
+                    d,
+                    self.nbs
+                        .tree
+                        .nodes_at_depth(d)
+                        .into_iter()
+                        .filter(|&i| self.nbs.tree.node(i).is_leaf())
+                        .collect(),
+                )
+            })
+            .collect()
+    }
+
+    /// Total cells on leaf grids.
+    pub fn n_cells(&self) -> u64 {
+        self.nbs.tree.n_leaf_cells()
+    }
+
+    /// Advance one time step (Chorin projection, paper §2.1):
+    /// predictor → divergence → multigrid pressure solve → correction.
+    pub fn step(&mut self, backend: &dyn ComputeBackend) -> StepReport {
+        let t0 = std::time::Instant::now();
+        let leaves = self.leaves_by_depth();
+        let mut stats = ExchangeStats::default();
+
+        // 0. previous generation <- current (restart/time-derivative data)
+        for g in &mut self.grids {
+            g.prev.clone_from(&g.cur);
+        }
+
+        // 1. communication phase: bottom-up, horizontal, top-down on all
+        //    variables of the current generation
+        let vars = [var::U, var::V, var::W, var::P, var::T];
+        stats.merge(&exchange::full_exchange(
+            &self.nbs,
+            &mut self.grids,
+            Gen::Cur,
+            &vars,
+            &self.bc,
+        ));
+
+        // 2. predictor on every leaf level: u* → temp, T' → cur
+        let mut bu = Vec::new();
+        let mut bv = Vec::new();
+        let mut bw = Vec::new();
+        let mut bt = Vec::new();
+        let mut ou = Vec::new();
+        let mut ov = Vec::new();
+        let mut ow = Vec::new();
+        let mut ot = Vec::new();
+        for (d, idxs) in &leaves {
+            let par = self.par_at(*d);
+            batch::pack_halo(&self.grids, idxs, Gen::Cur, var::U, &mut bu);
+            batch::pack_halo(&self.grids, idxs, Gen::Cur, var::V, &mut bv);
+            batch::pack_halo(&self.grids, idxs, Gen::Cur, var::W, &mut bw);
+            batch::pack_halo(&self.grids, idxs, Gen::Cur, var::T, &mut bt);
+            let n = idxs.len() * DGRID_CELLS;
+            ou.resize(n, 0.0);
+            ov.resize(n, 0.0);
+            ow.resize(n, 0.0);
+            ot.resize(n, 0.0);
+            backend.predictor(
+                idxs.len(),
+                &bu,
+                &bv,
+                &bw,
+                &bt,
+                &par,
+                &mut ou,
+                &mut ov,
+                &mut ow,
+                &mut ot,
+            );
+            batch::scatter_interior(&mut self.grids, idxs, Gen::Temp, var::U, &ou);
+            batch::scatter_interior(&mut self.grids, idxs, Gen::Temp, var::V, &ov);
+            batch::scatter_interior(&mut self.grids, idxs, Gen::Temp, var::W, &ow);
+            batch::scatter_interior(&mut self.grids, idxs, Gen::Cur, var::T, &ot);
+        }
+
+        // 3. exchange tentative velocity ghosts, then PPE rhs per level
+        let mut div_sum = 0.0f64;
+        let mut div_cells = 0u64;
+        for (d, idxs) in &leaves {
+            for v in [var::U, var::V, var::W] {
+                solver::level_exchange(&self.nbs, &mut self.grids, *d, Gen::Temp, v, &self.bc);
+            }
+            let par = self.par_at(*d);
+            batch::pack_halo(&self.grids, idxs, Gen::Temp, var::U, &mut bu);
+            batch::pack_halo(&self.grids, idxs, Gen::Temp, var::V, &mut bv);
+            batch::pack_halo(&self.grids, idxs, Gen::Temp, var::W, &mut bw);
+            let n = idxs.len() * DGRID_CELLS;
+            ou.resize(n, 0.0);
+            backend.divergence(idxs.len(), &bu, &bv, &bw, &par, &mut ou);
+            div_sum += ou.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+            div_cells += n as u64;
+            batch::scatter_interior(&mut self.grids, idxs, Gen::Temp, var::P, &ou);
+        }
+        let div_rms = ((div_sum / div_cells.max(1) as f64) as f32).sqrt();
+
+        // 3b. enforce solvability when the pressure has no Dirichlet
+        //     anchor anywhere (all-Neumann BC): subtract the global mean.
+        if self.pressure_is_singular() {
+            self.subtract_rhs_mean(&leaves);
+        }
+
+        // 4. multigrid pressure solve (warm-started from the previous p)
+        let solve = solver::solve_pressure(
+            &self.nbs,
+            &mut self.grids,
+            &self.bc,
+            &self.params,
+            backend,
+            &self.solver_cfg,
+        );
+
+        // 5. projection: corrected velocity back into cur
+        for (d, idxs) in &leaves {
+            solver::level_exchange(&self.nbs, &mut self.grids, *d, Gen::Cur, var::P, &self.bc);
+            let par = self.par_at(*d);
+            batch::pack_interior(&self.grids, idxs, Gen::Temp, var::U, &mut bu);
+            batch::pack_interior(&self.grids, idxs, Gen::Temp, var::V, &mut bv);
+            batch::pack_interior(&self.grids, idxs, Gen::Temp, var::W, &mut bw);
+            batch::pack_halo(&self.grids, idxs, Gen::Cur, var::P, &mut bt);
+            let n = idxs.len() * DGRID_CELLS;
+            ou.resize(n, 0.0);
+            ov.resize(n, 0.0);
+            ow.resize(n, 0.0);
+            backend.correct(
+                idxs.len(),
+                &bu,
+                &bv,
+                &bw,
+                &bt,
+                &par,
+                &mut ou,
+                &mut ov,
+                &mut ow,
+            );
+            batch::scatter_interior(&mut self.grids, idxs, Gen::Cur, var::U, &ou);
+            batch::scatter_interior(&mut self.grids, idxs, Gen::Cur, var::V, &ov);
+            batch::scatter_interior(&mut self.grids, idxs, Gen::Cur, var::W, &ow);
+        }
+
+        // 6. solid-cell constraints (obstacle geometry)
+        if self.has_solids {
+            for g in &mut self.grids {
+                apply_solid_mask(g);
+            }
+        }
+
+        self.t += self.params.dt as f64;
+        self.step += 1;
+        StepReport {
+            step: self.step,
+            t: self.t,
+            exchange: stats,
+            solve,
+            div_rms,
+            seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    fn par_at(&self, depth: u32) -> Params {
+        self.params.at_h(self.nbs.tree.h_at_depth(depth) as f32)
+    }
+
+    /// No Dirichlet pressure anywhere ⇒ the PPE is singular.
+    fn pressure_is_singular(&self) -> bool {
+        use crate::physics::bc::VarBc;
+        self.bc
+            .faces
+            .iter()
+            .all(|f| !matches!(f.per_var[var::P], VarBc::Dirichlet(_)))
+    }
+
+    fn subtract_rhs_mean(&mut self, leaves: &[(u32, Vec<u32>)]) {
+        let mut sum = 0.0f64;
+        let mut count = 0u64;
+        let mut buf = vec![0.0f32; DGRID_CELLS];
+        for (_, idxs) in leaves {
+            for &i in idxs {
+                self.grids[i as usize]
+                    .temp
+                    .extract_interior(var::P, &mut buf);
+                sum += buf.iter().map(|&x| x as f64).sum::<f64>();
+                count += buf.len() as u64;
+            }
+        }
+        let mean = (sum / count.max(1) as f64) as f32;
+        for (_, idxs) in leaves {
+            for &i in idxs {
+                self.grids[i as usize]
+                    .temp
+                    .extract_interior(var::P, &mut buf);
+                for x in buf.iter_mut() {
+                    *x -= mean;
+                }
+                self.grids[i as usize].temp.set_interior(var::P, &buf);
+            }
+        }
+    }
+
+    /// Write a checkpoint snapshot of the current state.
+    pub fn write_checkpoint(
+        &self,
+        file: &mut crate::h5lite::H5File,
+        io: &ParallelIo,
+    ) -> Result<SnapshotReport> {
+        iokernel::write_snapshot(file, io, &self.nbs.tree, &self.part, &self.grids, self.t)
+    }
+
+    /// RMS of the discrete divergence of the *current* velocity (quality
+    /// metric for tests and the e2e driver).
+    pub fn velocity_divergence_rms(&mut self, backend: &dyn ComputeBackend) -> f32 {
+        let leaves = self.leaves_by_depth();
+        let mut bu = Vec::new();
+        let mut bv = Vec::new();
+        let mut bw = Vec::new();
+        let mut out = Vec::new();
+        let mut sum = 0.0f64;
+        let mut cells = 0u64;
+        for (d, idxs) in &leaves {
+            for v in [var::U, var::V, var::W] {
+                solver::level_exchange(&self.nbs, &mut self.grids, *d, Gen::Cur, v, &self.bc);
+            }
+            let mut par = self.par_at(*d);
+            par.dt = 1.0;
+            par.rho = 1.0;
+            batch::pack_halo(&self.grids, idxs, Gen::Cur, var::U, &mut bu);
+            batch::pack_halo(&self.grids, idxs, Gen::Cur, var::V, &mut bv);
+            batch::pack_halo(&self.grids, idxs, Gen::Cur, var::W, &mut bw);
+            out.resize(idxs.len() * DGRID_CELLS, 0.0);
+            backend.divergence(idxs.len(), &bu, &bv, &bw, &par, &mut out);
+            sum += out.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+            cells += out.len() as u64;
+        }
+        ((sum / cells.max(1) as f64) as f32).sqrt()
+    }
+
+    /// Kinetic energy per cell over the leaves.
+    pub fn kinetic_energy(&self) -> f64 {
+        let mut sum = 0.0f64;
+        let mut cells = 0u64;
+        let mut buf = vec![0.0f32; DGRID_CELLS];
+        for (i, n) in self.nbs.tree.nodes.iter().enumerate() {
+            if !n.is_leaf() {
+                continue;
+            }
+            for v in [var::U, var::V, var::W] {
+                self.grids[i].cur.extract_interior(v, &mut buf);
+                sum += buf.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+            }
+            cells += DGRID_CELLS as u64;
+        }
+        sum / cells.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::physics::RustBackend;
+    use crate::tree::BBox;
+
+    fn params(n_cells_per_dim: f64) -> Params {
+        Params {
+            dt: 0.002,
+            h: 0.0,
+            nu: 0.01,
+            alpha: 0.01,
+            beta_g: 0.0,
+            t_inf: 300.0,
+            q_int: 0.0,
+            rho: 1.0,
+            omega: 1.0,
+        }
+        .at_h(1.0 / n_cells_per_dim as f32)
+    }
+
+    #[test]
+    fn step_advances_time_and_counters() {
+        let tree = SpaceTree::full(BBox::unit(), 1);
+        let mut sim = Simulation::new(tree, 2, DomainBc::channel(0.5, 300.0), params(32.0));
+        sim.init_temperature(300.0);
+        let rep = sim.step(&RustBackend);
+        assert_eq!(rep.step, 1);
+        assert!((sim.t - 0.002).abs() < 1e-9);
+        assert!(rep.seconds > 0.0);
+        assert!(rep.exchange.total_bytes > 0);
+    }
+
+    #[test]
+    fn channel_flow_develops_velocity() {
+        let tree = SpaceTree::full(BBox::unit(), 1);
+        let mut sim = Simulation::new(tree, 1, DomainBc::channel(1.0, 300.0), params(32.0));
+        sim.init_temperature(300.0);
+        for _ in 0..5 {
+            sim.step(&RustBackend);
+        }
+        assert!(sim.kinetic_energy() > 1e-6, "{}", sim.kinetic_energy());
+    }
+
+    #[test]
+    fn projection_keeps_divergence_bounded() {
+        let tree = SpaceTree::full(BBox::unit(), 1);
+        let mut sim = Simulation::new(tree, 2, DomainBc::channel(1.0, 300.0), params(32.0));
+        sim.init_temperature(300.0);
+        let mut last = 0.0;
+        for _ in 0..5 {
+            let rep = sim.step(&RustBackend);
+            last = rep.solve.final_residual;
+        }
+        let div = sim.velocity_divergence_rms(&RustBackend);
+        // the corrected field's divergence must be far below the inflow scale
+        assert!(div < 0.5, "div={div} last_res={last}");
+    }
+
+    #[test]
+    fn all_walls_cavity_is_singular_and_stable() {
+        let tree = SpaceTree::full(BBox::unit(), 1);
+        let mut sim = Simulation::new(tree, 1, DomainBc::all_walls(), params(32.0));
+        sim.init_temperature(300.0);
+        assert!(sim.pressure_is_singular());
+        for _ in 0..3 {
+            let rep = sim.step(&RustBackend);
+            assert!(rep.div_rms.is_finite());
+        }
+        // no flow from nothing
+        assert!(sim.kinetic_energy() < 1e-8);
+    }
+
+    #[test]
+    fn buoyancy_drives_flow_in_heated_cavity() {
+        let tree = SpaceTree::full(BBox::unit(), 1);
+        let mut par = params(32.0);
+        par.beta_g = 5.0;
+        let mut sim = Simulation::new(tree, 1, DomainBc::all_walls(), par);
+        sim.init_temperature(300.0);
+        // heat the bottom of one grid
+        use crate::tree::dgrid::pidx;
+        for g in sim.grids.iter_mut().skip(1).take(1) {
+            for i in 1..=8 {
+                for j in 1..=8 {
+                    g.cur.var_mut(var::T)[pidx(i, j, 1)] = 320.0;
+                    g.prev.var_mut(var::T)[pidx(i, j, 1)] = 320.0;
+                }
+            }
+        }
+        for _ in 0..3 {
+            sim.step(&RustBackend);
+        }
+        assert!(sim.kinetic_energy() > 0.0);
+    }
+
+    #[test]
+    fn checkpoint_restart_resumes_identically() {
+        let p = std::env::temp_dir().join(format!("coord_ckpt_{}", std::process::id()));
+        let tree = SpaceTree::full(BBox::unit(), 1);
+        let mut sim = Simulation::new(tree, 2, DomainBc::channel(0.8, 300.0), params(32.0));
+        sim.init_temperature(300.0);
+        for _ in 0..3 {
+            sim.step(&RustBackend);
+        }
+        let io = ParallelIo::new(
+            crate::cluster::Machine::local(),
+            crate::cluster::IoTuning::default(),
+            2,
+        );
+        let mut f = crate::h5lite::H5File::create(&p, 1).unwrap();
+        iokernel::write_common(&mut f, &sim.params, &sim.nbs.tree, 2).unwrap();
+        sim.write_checkpoint(&mut f, &io).unwrap();
+        // continue the original
+        let rep_orig = sim.step(&RustBackend);
+
+        // restart from file and take the same step
+        let snap = iokernel::read_snapshot(&f, sim.t - 0.002).unwrap();
+        let mut sim2 = Simulation::from_snapshot(snap, DomainBc::channel(0.8, 300.0));
+        sim2.params = sim.params; // dt etc. identical (common group loses h)
+        let rep_restart = sim2.step(&RustBackend);
+
+        // same physics: kinetic energy matches to f32 noise
+        let ke1 = sim.kinetic_energy();
+        let ke2 = sim2.kinetic_energy();
+        assert!(
+            (ke1 - ke2).abs() <= 1e-7 * ke1.abs().max(1e-12),
+            "ke {ke1} vs {ke2} (orig step {:?}, restart step {:?})",
+            rep_orig.step,
+            rep_restart.step
+        );
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,526 @@
+//! The three-phase **communication schema** (paper §2.2, ref. [12]).
+//!
+//! 1. **Bottom-up** — every d-grid that was not updated during the
+//!    computation phase (i.e. every interior l-grid node) is set to the
+//!    averaged values of its child d-grids. This doubles as the multigrid
+//!    *restriction* operator.
+//! 2. **Horizontal** — face-adjacent d-grids at the same level exchange
+//!    ghost layers; physical-boundary faces apply the domain BCs.
+//! 3. **Top-down** — ghost layers across level jumps (adaptive refinement
+//!    edges) are set: fine grids receive injected coarse values, coarse
+//!    grids receive area-averaged fine values (flux conservation across
+//!    d-grid boundaries). This doubles as the *prolongation* side.
+//!
+//! Ranks are logical: all d-grids live in one address space, but every
+//! transfer whose endpoints reside on different ranks is accounted in
+//! [`ExchangeStats`] — these byte counts feed the cluster model that
+//! regenerates the paper's Fig 2a.
+
+use crate::nbs::{Face, NeighbourhoodServer, Neighbour, ALL_FACES};
+use crate::physics::bc::{apply_face_bc, DomainBc};
+use crate::tree::dgrid::{pidx, DGrid, FieldSet};
+use crate::DGRID_N;
+
+/// Which field generation an exchange operates on.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Gen {
+    Cur,
+    Prev,
+    Temp,
+}
+
+impl Gen {
+    pub fn of(self, g: &DGrid) -> &FieldSet {
+        match self {
+            Gen::Cur => &g.cur,
+            Gen::Prev => &g.prev,
+            Gen::Temp => &g.temp,
+        }
+    }
+
+    pub fn of_mut(self, g: &mut DGrid) -> &mut FieldSet {
+        match self {
+            Gen::Cur => &mut g.cur,
+            Gen::Prev => &mut g.prev,
+            Gen::Temp => &mut g.temp,
+        }
+    }
+}
+
+/// Traffic accounting for one exchange pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ExchangeStats {
+    /// Ghost-layer messages between distinct ranks.
+    pub messages: u64,
+    /// Bytes crossing rank boundaries.
+    pub cross_rank_bytes: u64,
+    /// Total ghost bytes moved (including rank-local copies).
+    pub total_bytes: u64,
+}
+
+impl ExchangeStats {
+    fn account(&mut self, src_rank: u32, dst_rank: u32, bytes: u64) {
+        self.total_bytes += bytes;
+        if src_rank != dst_rank {
+            self.messages += 1;
+            self.cross_rank_bytes += bytes;
+        }
+    }
+
+    pub fn merge(&mut self, o: &ExchangeStats) {
+        self.messages += o.messages;
+        self.cross_rank_bytes += o.cross_rank_bytes;
+        self.total_bytes += o.total_bytes;
+    }
+}
+
+const N: usize = DGRID_N;
+const LAYER: usize = N * N;
+
+/// Read the interior layer adjacent to `face` into `buf` (N×N values,
+/// indexed `a·N+b` over the two tangential axes in ascending axis order).
+pub(crate) fn read_face_layer(fs: &FieldSet, v: usize, face: Face, buf: &mut [f32]) {
+    let f = fs.var(v);
+    let fixed = if face.dir() < 0 { 1 } else { N };
+    for a in 0..N {
+        for b in 0..N {
+            buf[a * N + b] = match face.axis() {
+                0 => f[pidx(fixed, a + 1, b + 1)],
+                1 => f[pidx(a + 1, fixed, b + 1)],
+                _ => f[pidx(a + 1, b + 1, fixed)],
+            };
+        }
+    }
+}
+
+/// Write `buf` (N×N) into the ghost layer of `face`.
+pub(crate) fn write_ghost_layer(fs: &mut FieldSet, v: usize, face: Face, buf: &[f32]) {
+    let f = fs.var_mut(v);
+    let fixed = if face.dir() < 0 { 0 } else { N + 1 };
+    for a in 0..N {
+        for b in 0..N {
+            let val = buf[a * N + b];
+            match face.axis() {
+                0 => f[pidx(fixed, a + 1, b + 1)] = val,
+                1 => f[pidx(a + 1, fixed, b + 1)] = val,
+                _ => f[pidx(a + 1, b + 1, fixed)] = val,
+            }
+        }
+    }
+}
+
+/// Tangential axes of a face, in ascending order (matches the layer layout).
+pub(crate) fn tangential(face: Face) -> (usize, usize) {
+    match face.axis() {
+        0 => (1, 2),
+        1 => (0, 2),
+        _ => (0, 1),
+    }
+}
+
+/// Phase 1 — bottom-up: restrict child d-grids into their parents,
+/// deepest-first so multi-level trees propagate correctly.
+pub fn bottom_up(
+    nbs: &NeighbourhoodServer,
+    grids: &mut [DGrid],
+    gen: Gen,
+    vars: &[usize],
+    stats: &mut ExchangeStats,
+) {
+    let max_d = nbs.tree.max_depth();
+    for d in (0..max_d).rev() {
+        for idx in nbs.tree.nodes_at_depth(d) {
+            let node = nbs.tree.node(idx);
+            if node.is_leaf() {
+                continue;
+            }
+            let children = node.children.clone();
+            let parent_rank = node.rank;
+            for &ch in &children {
+                let child_node = nbs.tree.node(ch);
+                let oct = child_node.loc.octant();
+                let child_rank = child_node.rank;
+                let (oi, oj, ok) = (
+                    ((oct >> 2) & 1) as usize,
+                    ((oct >> 1) & 1) as usize,
+                    (oct & 1) as usize,
+                );
+                for &v in vars {
+                    // restrict child interior (N³) into the parent octant
+                    let mut block = vec![0.0f32; (N / 2) * (N / 2) * (N / 2)];
+                    {
+                        let cfs = gen.of(&grids[ch as usize]);
+                        let mut interior = vec![0.0f32; N * N * N];
+                        cfs.extract_interior(v, &mut interior);
+                        crate::physics::restrict_block(N, &interior, &mut block);
+                    }
+                    let pfs = gen.of_mut(&mut grids[idx as usize]);
+                    let f = pfs.var_mut(v);
+                    let m = N / 2;
+                    for i in 0..m {
+                        for j in 0..m {
+                            for k in 0..m {
+                                f[pidx(oi * m + i + 1, oj * m + j + 1, ok * m + k + 1)] =
+                                    block[(i * m + j) * m + k];
+                            }
+                        }
+                    }
+                    stats.account(child_rank, parent_rank, (m * m * m * 4) as u64);
+                }
+            }
+        }
+    }
+}
+
+/// Phase 2 — horizontal: same-level ghost exchange + physical boundaries.
+///
+/// Parallel across receiving grids (perf pass): every task writes only its
+/// own grid's ghost cells and reads only neighbours' interiors.
+pub fn horizontal(
+    nbs: &NeighbourhoodServer,
+    grids: &mut [DGrid],
+    gen: Gen,
+    vars: &[usize],
+    bc: &DomainBc,
+    stats: &mut ExchangeStats,
+) {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let msgs = AtomicU64::new(0);
+    let cross = AtomicU64::new(0);
+    let total = AtomicU64::new(0);
+    let gptr = crate::util::SendPtr::new(grids);
+    let n = nbs.tree.len();
+    crate::util::parallel_for(n, |i| {
+        let idx = i as u32;
+        let mut buf = [0.0f32; LAYER];
+        // SAFETY: see `solver::level_exchange` — ghost writes are
+        // task-exclusive, interior reads are unwritten in this pass.
+        let me = unsafe { &mut gptr.slice(i, 1)[0] };
+        for face in ALL_FACES {
+            match nbs.neighbour(idx, face) {
+                Neighbour::Boundary => {
+                    apply_face_bc(gen.of_mut(me), face, bc.face(face));
+                }
+                Neighbour::Same { idx: nb } => {
+                    let peer = unsafe { &gptr.slice(nb as usize, 1)[0] };
+                    let src_rank = nbs.tree.node(nb).rank;
+                    let dst_rank = nbs.tree.node(idx).rank;
+                    for &v in vars {
+                        read_face_layer(gen.of(peer), v, face.opposite(), &mut buf);
+                        write_ghost_layer(gen.of_mut(me), v, face, &buf);
+                        total.fetch_add((LAYER * 4) as u64, Ordering::Relaxed);
+                        if src_rank != dst_rank {
+                            msgs.fetch_add(1, Ordering::Relaxed);
+                            cross.fetch_add((LAYER * 4) as u64, Ordering::Relaxed);
+                        }
+                    }
+                }
+                _ => {} // cross-level handled in phase 3
+            }
+        }
+    });
+    stats.messages += msgs.into_inner();
+    stats.cross_rank_bytes += cross.into_inner();
+    stats.total_bytes += total.into_inner();
+}
+
+/// Phase 3 — top-down: ghost layers across refinement edges.
+pub fn top_down(
+    nbs: &NeighbourhoodServer,
+    grids: &mut [DGrid],
+    gen: Gen,
+    vars: &[usize],
+    stats: &mut ExchangeStats,
+) {
+    let mut buf = vec![0.0f32; LAYER];
+    let mut src = vec![0.0f32; LAYER];
+    for idx in 0..grids.len() as u32 {
+        let node = nbs.tree.node(idx);
+        if !node.is_leaf() {
+            continue; // only leaves sit on refinement edges as receivers here
+        }
+        for face in ALL_FACES {
+            match nbs.neighbour(idx, face) {
+                Neighbour::Coarser { idx: nb } => {
+                    // fine ghost ← injected coarse values: each fine ghost
+                    // cell (a,b) reads coarse cell (off + a/2) on the layer
+                    // adjacent to the shared face.
+                    let (a_axis, b_axis) = tangential(face);
+                    let (ci, cj, ck) = node.loc.coords();
+                    let coords = [ci as usize, cj as usize, ck as usize];
+                    let off_a = (coords[a_axis] % 2) * (N / 2);
+                    let off_b = (coords[b_axis] % 2) * (N / 2);
+                    let src_rank = nbs.tree.node(nb).rank;
+                    let dst_rank = node.rank;
+                    for &v in vars {
+                        read_face_layer(gen.of(&grids[nb as usize]), v, face.opposite(), &mut src);
+                        for a in 0..N {
+                            for b in 0..N {
+                                buf[a * N + b] =
+                                    src[(off_a + a / 2) * N + (off_b + b / 2)];
+                            }
+                        }
+                        write_ghost_layer(gen.of_mut(&mut grids[idx as usize]), v, face, &buf);
+                        // only half the coarse layer is actually needed
+                        stats.account(src_rank, dst_rank, (LAYER * 4 / 4) as u64);
+                    }
+                }
+                Neighbour::Finer { idx: kids } => {
+                    // coarse ghost ← area-averaged fine values (conservative)
+                    let (a_axis, b_axis) = tangential(face);
+                    let dst_rank = node.rank;
+                    for &v in vars {
+                        for a in 0..N {
+                            for b in 0..N {
+                                buf[a * N + b] = 0.0;
+                            }
+                        }
+                        for &ch in &kids {
+                            let chn = nbs.tree.node(ch);
+                            let (ki, kj, kk) = chn.loc.coords();
+                            let kcoords = [ki as usize, kj as usize, kk as usize];
+                            let off_a = (kcoords[a_axis] % 2) * (N / 2);
+                            let off_b = (kcoords[b_axis] % 2) * (N / 2);
+                            read_face_layer(
+                                gen.of(&grids[ch as usize]),
+                                v,
+                                face.opposite(),
+                                &mut src,
+                            );
+                            for a in 0..N / 2 {
+                                for b in 0..N / 2 {
+                                    let avg = 0.25
+                                        * (src[(2 * a) * N + 2 * b]
+                                            + src[(2 * a) * N + 2 * b + 1]
+                                            + src[(2 * a + 1) * N + 2 * b]
+                                            + src[(2 * a + 1) * N + 2 * b + 1]);
+                                    buf[(off_a + a) * N + off_b + b] = avg;
+                                }
+                            }
+                            stats.account(chn.rank, dst_rank, (LAYER * 4 / 4) as u64);
+                        }
+                        write_ghost_layer(gen.of_mut(&mut grids[idx as usize]), v, face, &buf);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// A full communication phase: bottom-up, horizontal, top-down (paper order).
+pub fn full_exchange(
+    nbs: &NeighbourhoodServer,
+    grids: &mut [DGrid],
+    gen: Gen,
+    vars: &[usize],
+    bc: &DomainBc,
+) -> ExchangeStats {
+    let mut stats = ExchangeStats::default();
+    bottom_up(nbs, grids, gen, vars, &mut stats);
+    horizontal(nbs, grids, gen, vars, bc, &mut stats);
+    top_down(nbs, grids, gen, vars, &mut stats);
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::physics::bc::DomainBc;
+    use crate::tree::sfc;
+    use crate::tree::uid::LocCode;
+    use crate::tree::{BBox, SpaceTree};
+    use crate::var;
+
+    fn setup(depth: u32, ranks: u32) -> (NeighbourhoodServer, Vec<DGrid>) {
+        let mut t = SpaceTree::full(BBox::unit(), depth);
+        sfc::partition(&mut t, ranks);
+        let grids: Vec<DGrid> = t.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+        (NeighbourhoodServer::new(t), grids)
+    }
+
+    /// Fill each grid's interior of var v with its arena index as constant.
+    fn paint(grids: &mut [DGrid], v: usize) {
+        for (i, g) in grids.iter_mut().enumerate() {
+            let data = vec![i as f32; crate::DGRID_CELLS];
+            g.cur.set_interior(v, &data);
+        }
+    }
+
+    #[test]
+    fn horizontal_fills_ghosts_with_neighbour_values() {
+        let (nbs, mut grids) = setup(1, 1);
+        paint(&mut grids, var::P);
+        let mut stats = ExchangeStats::default();
+        horizontal(
+            &nbs,
+            &mut grids,
+            Gen::Cur,
+            &[var::P],
+            &DomainBc::all_walls(),
+            &mut stats,
+        );
+        // child 0 (octant 000) has +x neighbour octant 100
+        let a = nbs.tree.lookup(LocCode::ROOT.child(0)).unwrap();
+        let b = nbs.tree.lookup(LocCode::ROOT.child(0b100)).unwrap();
+        let ghost = grids[a as usize].cur.var(var::P)[pidx(N + 1, 5, 5)];
+        assert_eq!(ghost, b as f32);
+        assert!(stats.total_bytes > 0);
+    }
+
+    #[test]
+    fn horizontal_boundary_applies_bc() {
+        let (nbs, mut grids) = setup(1, 1);
+        paint(&mut grids, var::P);
+        let mut stats = ExchangeStats::default();
+        horizontal(
+            &nbs,
+            &mut grids,
+            Gen::Cur,
+            &[var::P],
+            &DomainBc::all_walls(),
+            &mut stats,
+        );
+        // -x face of octant 000 is a wall ⇒ Neumann for P
+        let a = nbs.tree.lookup(LocCode::ROOT.child(0)).unwrap() as usize;
+        assert_eq!(
+            grids[a].cur.var(var::P)[pidx(0, 5, 5)],
+            grids[a].cur.var(var::P)[pidx(1, 5, 5)]
+        );
+    }
+
+    #[test]
+    fn cross_rank_traffic_counted_only_across_ranks() {
+        let (nbs1, mut g1) = setup(1, 1);
+        paint(&mut g1, var::P);
+        let (nbs8, mut g8) = setup(1, 9); // 9 nodes, 9 ranks ⇒ every pair crosses
+        paint(&mut g8, var::P);
+        let mut s1 = ExchangeStats::default();
+        let mut s8 = ExchangeStats::default();
+        horizontal(&nbs1, &mut g1, Gen::Cur, &[var::P], &DomainBc::all_walls(), &mut s1);
+        horizontal(&nbs8, &mut g8, Gen::Cur, &[var::P], &DomainBc::all_walls(), &mut s8);
+        assert_eq!(s1.messages, 0);
+        assert_eq!(s1.cross_rank_bytes, 0);
+        assert!(s8.messages > 0);
+        assert_eq!(s1.total_bytes, s8.total_bytes);
+    }
+
+    #[test]
+    fn bottom_up_restricts_children_average() {
+        let (nbs, mut grids) = setup(1, 1);
+        // children constant 1..8 ⇒ parent octants hold each child's value
+        for oct in 0..8u8 {
+            let idx = nbs.tree.lookup(LocCode::ROOT.child(oct)).unwrap() as usize;
+            let data = vec![(oct + 1) as f32; crate::DGRID_CELLS];
+            grids[idx].cur.set_interior(var::T, &data);
+        }
+        let mut stats = ExchangeStats::default();
+        bottom_up(&nbs, &mut grids, Gen::Cur, &[var::T], &mut stats);
+        let root = &grids[0].cur;
+        // octant 000 → parent cells [1..8]³ hold child-1 value
+        assert_eq!(root.var(var::T)[pidx(1, 1, 1)], 1.0);
+        assert_eq!(root.var(var::T)[pidx(8, 8, 8)], 1.0);
+        // octant 111 (child 8)
+        assert_eq!(root.var(var::T)[pidx(16, 16, 16)], 8.0);
+        assert_eq!(stats.total_bytes, 8 * (8 * 8 * 8 * 4));
+    }
+
+    #[test]
+    fn bottom_up_multi_level_propagates() {
+        let (nbs, mut grids) = setup(2, 1);
+        for idx in nbs.tree.nodes_at_depth(2) {
+            let data = vec![2.0f32; crate::DGRID_CELLS];
+            grids[idx as usize].cur.set_interior(var::U, &data);
+        }
+        let mut stats = ExchangeStats::default();
+        bottom_up(&nbs, &mut grids, Gen::Cur, &[var::U], &mut stats);
+        assert_eq!(grids[0].cur.var(var::U)[pidx(8, 8, 8)], 2.0);
+    }
+
+    #[test]
+    fn top_down_coarse_to_fine_injection() {
+        // adaptive: child 0 refined, its sibling at same level not
+        let mut t = SpaceTree::root_only(BBox::unit());
+        t.refine(0);
+        let c0 = t.lookup(LocCode::ROOT.child(0)).unwrap();
+        t.refine(c0);
+        sfc::partition(&mut t, 1);
+        let nbs = NeighbourhoodServer::new(t);
+        let mut grids: Vec<DGrid> =
+            nbs.tree.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+        // paint the coarse +x sibling (octant 100) with 7.0
+        let c4 = nbs.tree.lookup(LocCode::ROOT.child(0b100)).unwrap() as usize;
+        let data = vec![7.0f32; crate::DGRID_CELLS];
+        grids[c4].cur.set_interior(var::P, &data);
+        let mut stats = ExchangeStats::default();
+        top_down(&nbs, &mut grids, Gen::Cur, &[var::P], &mut stats);
+        // the depth-2 grid at +x face of the refined region gets ghost 7.0
+        let fine = nbs
+            .tree
+            .lookup(LocCode::from_coords(2, 1, 0, 0).unwrap())
+            .unwrap() as usize;
+        assert_eq!(grids[fine].cur.var(var::P)[pidx(N + 1, 5, 5)], 7.0);
+    }
+
+    #[test]
+    fn top_down_fine_to_coarse_average_conserves() {
+        let mut t = SpaceTree::root_only(BBox::unit());
+        t.refine(0);
+        let c0 = t.lookup(LocCode::ROOT.child(0)).unwrap();
+        t.refine(c0);
+        sfc::partition(&mut t, 1);
+        let nbs = NeighbourhoodServer::new(t);
+        let mut grids: Vec<DGrid> =
+            nbs.tree.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+        // the four depth-2 grids on c0's +x face hold value 4.0
+        for (j, k) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+            let idx = nbs
+                .tree
+                .lookup(LocCode::from_coords(2, 1, j, k).unwrap())
+                .unwrap() as usize;
+            let data = vec![4.0f32; crate::DGRID_CELLS];
+            grids[idx].cur.set_interior(var::U, &data);
+        }
+        let mut stats = ExchangeStats::default();
+        top_down(&nbs, &mut grids, Gen::Cur, &[var::U], &mut stats);
+        // coarse sibling c4 (octant 100) sees averaged 4.0 in its -x ghost
+        let c4 = nbs.tree.lookup(LocCode::ROOT.child(0b100)).unwrap() as usize;
+        for a in 1..=N {
+            for b in 1..=N {
+                assert_eq!(grids[c4].cur.var(var::U)[pidx(0, a, b)], 4.0);
+            }
+        }
+    }
+
+    #[test]
+    fn full_exchange_runs_all_phases() {
+        let (nbs, mut grids) = setup(2, 4);
+        paint(&mut grids, var::P);
+        let stats = full_exchange(
+            &nbs,
+            &mut grids,
+            Gen::Cur,
+            &[var::P],
+            &DomainBc::all_walls(),
+        );
+        assert!(stats.total_bytes > 0);
+        assert!(stats.messages > 0);
+    }
+
+    #[test]
+    fn exchange_stats_merge() {
+        let mut a = ExchangeStats {
+            messages: 1,
+            cross_rank_bytes: 10,
+            total_bytes: 20,
+        };
+        a.merge(&ExchangeStats {
+            messages: 2,
+            cross_rank_bytes: 5,
+            total_bytes: 7,
+        });
+        assert_eq!(a.messages, 3);
+        assert_eq!(a.cross_rank_bytes, 15);
+        assert_eq!(a.total_bytes, 27);
+    }
+}

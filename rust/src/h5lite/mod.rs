@@ -1,0 +1,684 @@
+//! **h5lite** — a from-scratch, self-describing hierarchical file format.
+//!
+//! The image has no libhdf5, so the substrate the paper builds on (§3:
+//! groups, datasets, attributes, hyperslabs, contiguous storage, alignment)
+//! is implemented here directly. The format keeps HDF5's data model:
+//!
+//! * a tree of **groups** starting at a root group, each holding child
+//!   groups, **datasets** (n-dimensional typed arrays) and **attributes**;
+//! * a **storage model** that lays every dataset out as a header-described
+//!   linear array of raw little-endian bytes, optionally aligned to the
+//!   file system's block size (paper §5.2);
+//! * **self-description**: a superblock with magic/version/endian tag and a
+//!   metadata footer that fully describes the tree, so a reader needs no
+//!   external schema;
+//! * **hyperslab** I/O: row-range reads/writes against a dataset's first
+//!   dimension, the access pattern of the paper's kernel (one contiguous
+//!   row block per rank — disjointness is what makes disabling file locks
+//!   safe).
+//!
+//! ## On-disk layout
+//!
+//! ```text
+//! [superblock 40 B] [data region …grows…] [metadata footer]
+//! superblock: magic "MPH5LITE" | version u32 | endian u32 = 0x01020304
+//!           | footer_off u64 | footer_len u64 | alignment u32
+//! ```
+//!
+//! The footer is rewritten at the current end of data on every
+//! [`H5File::commit`]; the superblock is then updated in place. This mirrors
+//! HDF5's metadata-cache flush and makes a committed file readable at any
+//! time (the offline sliding window reads snapshots while the run
+//! continues). Dataset payload writes go through [`std::os::unix::fs::FileExt`]
+//! positional I/O, so concurrent writers (the collective-buffering
+//! aggregators) need no shared cursor and no locking.
+
+pub mod codec;
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use codec::{Dec, Enc};
+
+const MAGIC: &[u8; 8] = b"MPH5LITE";
+const VERSION: u32 = 1;
+const ENDIAN_TAG: u32 = 0x0102_0304;
+const SUPERBLOCK_LEN: u64 = 40;
+
+/// Element type of a dataset (subset of HDF5's type system used here).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Dtype {
+    F32,
+    F64,
+    U64,
+    U8,
+}
+
+impl Dtype {
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F64 => 8,
+            Dtype::U64 => 8,
+            Dtype::U8 => 1,
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::F64 => 1,
+            Dtype::U64 => 2,
+            Dtype::U8 => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Dtype> {
+        Ok(match c {
+            0 => Dtype::F32,
+            1 => Dtype::F64,
+            2 => Dtype::U64,
+            3 => Dtype::U8,
+            _ => bail!("h5lite: unknown dtype code {c}"),
+        })
+    }
+}
+
+/// Attribute value (attached to groups, as in HDF5).
+#[derive(Clone, PartialEq, Debug)]
+pub enum Attr {
+    F64(f64),
+    I64(i64),
+    Str(String),
+    F64Vec(Vec<f64>),
+}
+
+/// A dataset: typed n-dimensional array stored contiguously at `offset`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub dtype: Dtype,
+    /// Shape; the first dimension is the row (hyperslab) dimension.
+    pub shape: Vec<u64>,
+    /// Absolute file offset of the payload.
+    pub offset: u64,
+}
+
+impl Dataset {
+    pub fn n_elems(&self) -> u64 {
+        self.shape.iter().product()
+    }
+
+    pub fn n_bytes(&self) -> u64 {
+        self.n_elems() * self.dtype.size() as u64
+    }
+
+    /// Elements per row (product of all dims after the first).
+    pub fn row_elems(&self) -> u64 {
+        self.shape.iter().skip(1).product()
+    }
+
+    pub fn row_bytes(&self) -> u64 {
+        self.row_elems() * self.dtype.size() as u64
+    }
+}
+
+/// A group: named attributes, child groups and datasets (BTreeMap for a
+/// stable, deterministic iteration order in listings and the footer).
+#[derive(Clone, Debug, Default)]
+pub struct Group {
+    pub attrs: BTreeMap<String, Attr>,
+    pub groups: BTreeMap<String, Group>,
+    pub datasets: BTreeMap<String, Dataset>,
+}
+
+impl Group {
+    fn encode(&self, e: &mut Enc) {
+        e.u32(self.attrs.len() as u32);
+        for (name, a) in &self.attrs {
+            e.str(name);
+            match a {
+                Attr::F64(v) => {
+                    e.u8(0);
+                    e.f64(*v);
+                }
+                Attr::I64(v) => {
+                    e.u8(1);
+                    e.i64(*v);
+                }
+                Attr::Str(v) => {
+                    e.u8(2);
+                    e.str(v);
+                }
+                Attr::F64Vec(v) => {
+                    e.u8(3);
+                    e.f64s(v);
+                }
+            }
+        }
+        e.u32(self.datasets.len() as u32);
+        for (name, d) in &self.datasets {
+            e.str(name);
+            e.u8(d.dtype.code());
+            e.u64s(&d.shape);
+            e.u64(d.offset);
+        }
+        e.u32(self.groups.len() as u32);
+        for (name, g) in &self.groups {
+            e.str(name);
+            g.encode(e);
+        }
+    }
+
+    fn decode(d: &mut Dec) -> Result<Group> {
+        let mut g = Group::default();
+        let n_attrs = d.u32()?;
+        for _ in 0..n_attrs {
+            let name = d.str()?;
+            let attr = match d.u8()? {
+                0 => Attr::F64(d.f64()?),
+                1 => Attr::I64(d.i64()?),
+                2 => Attr::Str(d.str()?),
+                3 => Attr::F64Vec(d.f64s()?),
+                c => bail!("h5lite: unknown attr code {c}"),
+            };
+            g.attrs.insert(name, attr);
+        }
+        let n_ds = d.u32()?;
+        for _ in 0..n_ds {
+            let name = d.str()?;
+            let dtype = Dtype::from_code(d.u8()?)?;
+            let shape = d.u64s()?;
+            let offset = d.u64()?;
+            g.datasets.insert(
+                name,
+                Dataset {
+                    dtype,
+                    shape,
+                    offset,
+                },
+            );
+        }
+        let n_groups = d.u32()?;
+        for _ in 0..n_groups {
+            let name = d.str()?;
+            g.groups.insert(name, Group::decode(d)?);
+        }
+        Ok(g)
+    }
+}
+
+/// An h5lite file handle.
+///
+/// Creation/structure mutation requires `&mut self` (matching Parallel
+/// HDF5's rule that groups and datasets are created *collectively*); slab
+/// reads/writes take `&self` and may run concurrently from many threads
+/// (each rank/aggregator owns a disjoint row range).
+pub struct H5File {
+    file: File,
+    pub path: PathBuf,
+    pub root: Group,
+    /// Next free data offset (end of data region).
+    data_end: u64,
+    /// Alignment for dataset payload starts (paper §5.2; 1 = none).
+    pub alignment: u64,
+}
+
+impl H5File {
+    /// Create a new file (truncating any existing one). `alignment` aligns
+    /// every dataset payload to that many bytes (use the file system block
+    /// size; 1 disables).
+    pub fn create<P: AsRef<Path>>(path: P, alignment: u64) -> Result<H5File> {
+        assert!(alignment >= 1);
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .with_context(|| format!("h5lite: create {:?}", path.as_ref()))?;
+        let mut f = H5File {
+            file,
+            path: path.as_ref().to_path_buf(),
+            root: Group::default(),
+            data_end: SUPERBLOCK_LEN,
+            alignment,
+        };
+        f.commit()?;
+        Ok(f)
+    }
+
+    /// Open an existing file (read + write).
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<H5File> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("h5lite: open {:?}", path.as_ref()))?;
+        let mut sb = [0u8; SUPERBLOCK_LEN as usize];
+        file.read_exact(&mut sb)
+            .context("h5lite: short superblock")?;
+        if &sb[0..8] != MAGIC {
+            bail!("h5lite: bad magic in {:?}", path.as_ref());
+        }
+        let mut d = Dec::new(&sb[8..]);
+        let version = d.u32()?;
+        if version != VERSION {
+            bail!("h5lite: unsupported version {version}");
+        }
+        let endian = d.u32()?;
+        if endian != ENDIAN_TAG {
+            bail!("h5lite: endianness tag mismatch (cross-endian file?)");
+        }
+        let footer_off = d.u64()?;
+        let footer_len = d.u64()?;
+        let alignment = d.u32()? as u64;
+        let mut footer = vec![0u8; footer_len as usize];
+        file.seek(SeekFrom::Start(footer_off))?;
+        file.read_exact(&mut footer)
+            .context("h5lite: short footer")?;
+        let mut fd = Dec::new(&footer);
+        let root = Group::decode(&mut fd)?;
+        Ok(H5File {
+            file,
+            path: path.as_ref().to_path_buf(),
+            root,
+            data_end: footer_off,
+            alignment,
+        })
+    }
+
+    /// Flush metadata: write the footer at the end of the data region and
+    /// update the superblock. Readers opening the file afterwards see a
+    /// consistent snapshot.
+    pub fn commit(&mut self) -> Result<()> {
+        let mut e = Enc::new();
+        self.root.encode(&mut e);
+        let footer_off = self.data_end;
+        self.file.seek(SeekFrom::Start(footer_off))?;
+        self.file.write_all(&e.buf)?;
+        // superblock
+        let mut sb = Vec::with_capacity(SUPERBLOCK_LEN as usize);
+        sb.extend_from_slice(MAGIC);
+        let mut se = Enc::new();
+        se.u32(VERSION);
+        se.u32(ENDIAN_TAG);
+        se.u64(footer_off);
+        se.u64(e.buf.len() as u64);
+        se.u32(self.alignment as u32);
+        sb.extend_from_slice(&se.buf);
+        sb.resize(SUPERBLOCK_LEN as usize, 0);
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.write_all(&sb)?;
+        self.file.flush()?;
+        Ok(())
+    }
+
+    /// Resolve a `/`-separated group path, creating missing groups.
+    pub fn ensure_group(&mut self, path: &str) -> &mut Group {
+        let mut g = &mut self.root;
+        for part in path.split('/').filter(|p| !p.is_empty()) {
+            g = g.groups.entry(part.to_string()).or_default();
+        }
+        g
+    }
+
+    /// Resolve a group path read-only.
+    pub fn group(&self, path: &str) -> Result<&Group> {
+        let mut g = &self.root;
+        for part in path.split('/').filter(|p| !p.is_empty()) {
+            g = g
+                .groups
+                .get(part)
+                .ok_or_else(|| anyhow!("h5lite: no group '{part}' in '{path}'"))?;
+        }
+        Ok(g)
+    }
+
+    /// Create a dataset under `group_path`, reserving (aligned) contiguous
+    /// space for the full shape. Like Parallel HDF5, creation is collective:
+    /// the caller must know the global shape; individual ranks then write
+    /// their hyperslabs independently.
+    pub fn create_dataset(
+        &mut self,
+        group_path: &str,
+        name: &str,
+        dtype: Dtype,
+        shape: &[u64],
+    ) -> Result<Dataset> {
+        let offset = self.data_end.next_multiple_of(self.alignment);
+        let ds = Dataset {
+            dtype,
+            shape: shape.to_vec(),
+            offset,
+        };
+        let nbytes = ds.n_bytes();
+        // reserve by extending the file (sparse where the OS allows)
+        self.file.set_len(offset + nbytes)?;
+        self.data_end = offset + nbytes;
+        let g = self.ensure_group(group_path);
+        if g.datasets.contains_key(name) {
+            bail!("h5lite: dataset '{group_path}/{name}' already exists");
+        }
+        g.datasets.insert(name.to_string(), ds.clone());
+        Ok(ds)
+    }
+
+    /// Look up a dataset by group path + name.
+    pub fn dataset(&self, group_path: &str, name: &str) -> Result<Dataset> {
+        self.group(group_path)?
+            .datasets
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("h5lite: no dataset '{name}' in '{group_path}'"))
+    }
+
+    /// Write rows of raw bytes starting at `row_start` (hyperslab along the
+    /// first dimension). Concurrent-safe for disjoint ranges.
+    pub fn write_rows(&self, ds: &Dataset, row_start: u64, data: &[u8]) -> Result<()> {
+        let rb = ds.row_bytes();
+        if data.len() as u64 % rb != 0 {
+            bail!("h5lite: write not a whole number of rows");
+        }
+        let rows = data.len() as u64 / rb;
+        if row_start + rows > ds.shape[0] {
+            bail!(
+                "h5lite: hyperslab [{row_start}, {}) exceeds {} rows",
+                row_start + rows,
+                ds.shape[0]
+            );
+        }
+        self.file
+            .write_all_at(data, ds.offset + row_start * rb)
+            .context("h5lite: slab write")?;
+        Ok(())
+    }
+
+    /// Read `rows` rows starting at `row_start` as raw bytes.
+    pub fn read_rows(&self, ds: &Dataset, row_start: u64, rows: u64) -> Result<Vec<u8>> {
+        if row_start + rows > ds.shape[0] {
+            bail!(
+                "h5lite: hyperslab [{row_start}, {}) exceeds {} rows",
+                row_start + rows,
+                ds.shape[0]
+            );
+        }
+        let rb = ds.row_bytes();
+        let mut buf = vec![0u8; (rows * rb) as usize];
+        self.file
+            .read_exact_at(&mut buf, ds.offset + row_start * rb)
+            .context("h5lite: slab read")?;
+        Ok(buf)
+    }
+
+    /// Convenience: write a full `f32` dataset in one call.
+    pub fn write_all_f32(&self, ds: &Dataset, data: &[f32]) -> Result<()> {
+        if data.len() as u64 != ds.n_elems() {
+            bail!("h5lite: length mismatch");
+        }
+        self.write_rows(ds, 0, &codec::f32s_to_bytes(data))
+    }
+
+    /// Convenience: read a full `u64` dataset.
+    pub fn read_all_u64(&self, ds: &Dataset) -> Result<Vec<u64>> {
+        Ok(codec::bytes_to_u64s(&self.read_rows(ds, 0, ds.shape[0])?))
+    }
+
+    /// Convenience: read a full `f64` dataset.
+    pub fn read_all_f64(&self, ds: &Dataset) -> Result<Vec<f64>> {
+        Ok(codec::bytes_to_f64s(&self.read_rows(ds, 0, ds.shape[0])?))
+    }
+
+    /// Current physical size of the data region (metadata excluded) — the
+    /// quantity the paper reports as "checkpoint size".
+    pub fn data_bytes(&self) -> u64 {
+        self.data_end - SUPERBLOCK_LEN
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("h5lite_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn create_open_roundtrip_empty() {
+        let p = tmp("empty");
+        {
+            H5File::create(&p, 1).unwrap();
+        }
+        let f = H5File::open(&p).unwrap();
+        assert!(f.root.groups.is_empty());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn groups_attrs_roundtrip() {
+        let p = tmp("attrs");
+        {
+            let mut f = H5File::create(&p, 1).unwrap();
+            let g = f.ensure_group("/common");
+            g.attrs.insert("dt".into(), Attr::F64(0.01));
+            g.attrs.insert("scheme".into(), Attr::Str("chorin".into()));
+            g.attrs
+                .insert("spacings".into(), Attr::F64Vec(vec![0.1, 0.05]));
+            g.attrs.insert("steps".into(), Attr::I64(500));
+            f.ensure_group("/simulation/t=0.000000");
+            f.commit().unwrap();
+        }
+        let f = H5File::open(&p).unwrap();
+        let g = f.group("/common").unwrap();
+        assert_eq!(g.attrs["dt"], Attr::F64(0.01));
+        assert_eq!(g.attrs["scheme"], Attr::Str("chorin".into()));
+        assert_eq!(g.attrs["spacings"], Attr::F64Vec(vec![0.1, 0.05]));
+        assert_eq!(g.attrs["steps"], Attr::I64(500));
+        assert!(f.group("/simulation/t=0.000000").is_ok());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn dataset_write_read_full() {
+        let p = tmp("full");
+        {
+            let mut f = H5File::create(&p, 1).unwrap();
+            let ds = f
+                .create_dataset("/sim", "cells", Dtype::F32, &[4, 8])
+                .unwrap();
+            let data: Vec<f32> = (0..32).map(|x| x as f32 * 0.5).collect();
+            f.write_all_f32(&ds, &data).unwrap();
+            f.commit().unwrap();
+        }
+        let f = H5File::open(&p).unwrap();
+        let ds = f.dataset("/sim", "cells").unwrap();
+        assert_eq!(ds.shape, vec![4, 8]);
+        assert_eq!(ds.dtype, Dtype::F32);
+        let back = codec::bytes_to_f32s(&f.read_rows(&ds, 0, 4).unwrap());
+        assert_eq!(back[5], 2.5);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn hyperslab_disjoint_writes() {
+        let p = tmp("slab");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset("/g", "d", Dtype::U64, &[10, 3])
+            .unwrap();
+        // two "ranks" write rows [0,5) and [5,10)
+        let a: Vec<u64> = (0..15).collect();
+        let b: Vec<u64> = (100..115).collect();
+        f.write_rows(&ds, 0, &codec::u64s_to_bytes(&a)).unwrap();
+        f.write_rows(&ds, 5, &codec::u64s_to_bytes(&b)).unwrap();
+        let all = f.read_all_u64(&ds).unwrap();
+        assert_eq!(all[0], 0);
+        assert_eq!(all[14], 14);
+        assert_eq!(all[15], 100);
+        assert_eq!(all[29], 114);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn hyperslab_bounds_checked() {
+        let p = tmp("bounds");
+        let f0 = {
+            let mut f = H5File::create(&p, 1).unwrap();
+            f.create_dataset("/g", "d", Dtype::U8, &[4, 2]).unwrap();
+            f
+        };
+        let ds = f0.dataset("/g", "d").unwrap();
+        assert!(f0.write_rows(&ds, 3, &[0u8; 4]).is_err()); // 2 rows at 3 > 4
+        assert!(f0.read_rows(&ds, 0, 5).is_err());
+        assert!(f0.write_rows(&ds, 0, &[0u8; 3]).is_err()); // partial row
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn alignment_respected() {
+        let p = tmp("align");
+        let mut f = H5File::create(&p, 4096).unwrap();
+        let d1 = f.create_dataset("/g", "a", Dtype::U8, &[10]).unwrap();
+        let d2 = f.create_dataset("/g", "b", Dtype::U8, &[10]).unwrap();
+        assert_eq!(d1.offset % 4096, 0);
+        assert_eq!(d2.offset % 4096, 0);
+        assert!(d2.offset >= d1.offset + 4096);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn duplicate_dataset_rejected() {
+        let p = tmp("dup");
+        let mut f = H5File::create(&p, 1).unwrap();
+        f.create_dataset("/g", "d", Dtype::U8, &[1]).unwrap();
+        assert!(f.create_dataset("/g", "d", Dtype::U8, &[1]).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn reopen_append_timestep_preserves_old_data() {
+        let p = tmp("append");
+        {
+            let mut f = H5File::create(&p, 1).unwrap();
+            let ds = f
+                .create_dataset("/simulation/t=0", "x", Dtype::F32, &[2])
+                .unwrap();
+            f.write_all_f32(&ds, &[1.0, 2.0]).unwrap();
+            f.commit().unwrap();
+        }
+        {
+            let mut f = H5File::open(&p).unwrap();
+            let ds = f
+                .create_dataset("/simulation/t=1", "x", Dtype::F32, &[2])
+                .unwrap();
+            f.write_all_f32(&ds, &[3.0, 4.0]).unwrap();
+            f.commit().unwrap();
+        }
+        let f = H5File::open(&p).unwrap();
+        let d0 = f.dataset("/simulation/t=0", "x").unwrap();
+        let d1 = f.dataset("/simulation/t=1", "x").unwrap();
+        assert_eq!(
+            codec::bytes_to_f32s(&f.read_rows(&d0, 0, 2).unwrap()),
+            vec![1.0, 2.0]
+        );
+        assert_eq!(
+            codec::bytes_to_f32s(&f.read_rows(&d1, 0, 2).unwrap()),
+            vec![3.0, 4.0]
+        );
+        // both timestep groups visible
+        assert_eq!(f.group("/simulation").unwrap().groups.len(), 2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("magic");
+        std::fs::write(&p, b"NOTAFILE________________________________").unwrap();
+        assert!(H5File::open(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn concurrent_slab_writes_from_threads() {
+        let p = tmp("threads");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset("/g", "d", Dtype::U64, &[64, 4])
+            .unwrap();
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let fref = &f;
+                let dref = &ds;
+                s.spawn(move || {
+                    let rows: Vec<u64> = (0..32).map(|i| t * 1000 + i).collect();
+                    fref.write_rows(dref, t * 8, &codec::u64s_to_bytes(&rows))
+                        .unwrap();
+                });
+            }
+        });
+        let all = f.read_all_u64(&ds).unwrap();
+        for t in 0..8u64 {
+            assert_eq!(all[(t * 32) as usize], t * 1000);
+            assert_eq!(all[(t * 32 + 31) as usize], t * 1000 + 31);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncated_footer_is_error_not_panic() {
+        let p = tmp("trunc");
+        {
+            let mut f = H5File::create(&p, 1).unwrap();
+            f.ensure_group("/a/b");
+            let ds = f.create_dataset("/a", "d", Dtype::F32, &[8]).unwrap();
+            f.write_all_f32(&ds, &[0.0; 8]).unwrap();
+            f.commit().unwrap();
+        }
+        // chop the footer in half: open must fail cleanly
+        let len = std::fs::metadata(&p).unwrap().len();
+        let file = OpenOptions::new().write(true).open(&p).unwrap();
+        file.set_len(len - 10).unwrap();
+        drop(file);
+        assert!(H5File::open(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corrupted_superblock_offset_is_error() {
+        let p = tmp("corrupt");
+        {
+            H5File::create(&p, 1).unwrap();
+        }
+        // point footer_off way past EOF
+        let file = OpenOptions::new().write(true).open(&p).unwrap();
+        file.write_all_at(&u64::MAX.to_le_bytes(), 16).unwrap();
+        drop(file);
+        assert!(H5File::open(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_is_error() {
+        let p = tmp("zero");
+        std::fs::write(&p, b"").unwrap();
+        assert!(H5File::open(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn data_bytes_tracks_payload() {
+        let p = tmp("size");
+        let mut f = H5File::create(&p, 1).unwrap();
+        assert_eq!(f.data_bytes(), 0);
+        f.create_dataset("/g", "d", Dtype::F32, &[100]).unwrap();
+        assert_eq!(f.data_bytes(), 400);
+        std::fs::remove_file(&p).ok();
+    }
+}

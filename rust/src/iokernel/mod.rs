@@ -1,0 +1,745 @@
+//! The paper's **HDF5 I/O kernel** (§3) — snapshot output, checkpoint
+//! restart and branching files on top of [`crate::h5lite`] +
+//! [`crate::pario`].
+//!
+//! ## File structure (paper Fig 4)
+//!
+//! ```text
+//! /common                      constant data, written once
+//!     @dt @nu @alpha @rho @beta_g @t_inf @q_int
+//!     @domain_min @domain_max @dgrid_n @n_ranks
+//!     refinement_spacings      f64[max_depth+1]
+//! /simulation
+//!     /t=<elapsed>             one group per written time step
+//!         grid_property        u64[n_grids]        packed UID per grid
+//!         subgrid_uid          u64[n_grids, 8]     child UIDs (0 = leaf)
+//!         bounding_box         f64[n_grids, 6]     min[3], max[3]
+//!         cell_type            u8 [n_grids, 16³]
+//!         current_cell_data    f32[n_grids, 5·16³]
+//!         previous_cell_data   f32[n_grids, 5·16³]
+//!         temp_cell_data       f32[n_grids, 5·16³]
+//! ```
+//!
+//! Rows are ordered along the Lebesgue curve, rank-major: each rank's grids
+//! occupy one contiguous row range (its hyperslab), and the root grid is
+//! always row 0 — the traversal entry point for the offline sliding window
+//! (paper §3.1). Row offsets come from the partition's prefix sum, the
+//! stand-in for the paper's MPI reduction + prefix reduction (§3.2).
+//!
+//! Every rank packs its grids into one *linear write buffer* per dataset
+//! (the paper's one-to-one storage mapping, §3.2) and hands the slabs to
+//! [`ParallelIo::collective_write`].
+
+pub mod vtk;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::exchange::Gen;
+use crate::h5lite::{codec, Attr, Dataset, Dtype, H5File};
+use crate::pario::{IoReport, ParallelIo, SlabWrite};
+use crate::physics::Params;
+use crate::tree::dgrid::DGrid;
+use crate::tree::sfc::Partition;
+use crate::tree::uid::{LocCode, Uid};
+use crate::tree::{BBox, SpaceTree};
+use crate::{DGRID_CELLS, NVAR};
+
+/// Cell-data elements per dataset row (all variables' interiors).
+pub const ROW_ELEMS: usize = NVAR * DGRID_CELLS;
+
+/// The heavy datasets of one snapshot, in write order.
+pub const DATASETS: [&str; 7] = [
+    "grid_property",
+    "subgrid_uid",
+    "bounding_box",
+    "cell_type",
+    "current_cell_data",
+    "previous_cell_data",
+    "temp_cell_data",
+];
+
+/// Timestep group path for an elapsed time.
+pub fn ts_group(t: f64) -> String {
+    format!("/simulation/t={t:.6}")
+}
+
+/// Write the `/common` group (once, at file creation — paper §3.1).
+pub fn write_common(
+    file: &mut H5File,
+    par: &Params,
+    tree: &SpaceTree,
+    n_ranks: u64,
+) -> Result<()> {
+    let max_depth = tree.max_depth();
+    let spacings: Vec<f64> = (0..=max_depth).map(|d| tree.h_at_depth(d)).collect();
+    let domain = tree.domain;
+    let g = file.ensure_group("/common");
+    g.attrs.insert("dt".into(), Attr::F64(par.dt as f64));
+    g.attrs.insert("nu".into(), Attr::F64(par.nu as f64));
+    g.attrs.insert("alpha".into(), Attr::F64(par.alpha as f64));
+    g.attrs.insert("rho".into(), Attr::F64(par.rho as f64));
+    g.attrs.insert("beta_g".into(), Attr::F64(par.beta_g as f64));
+    g.attrs.insert("t_inf".into(), Attr::F64(par.t_inf as f64));
+    g.attrs.insert("q_int".into(), Attr::F64(par.q_int as f64));
+    g.attrs
+        .insert("domain_min".into(), Attr::F64Vec(domain.min.to_vec()));
+    g.attrs
+        .insert("domain_max".into(), Attr::F64Vec(domain.max.to_vec()));
+    g.attrs
+        .insert("dgrid_n".into(), Attr::I64(crate::DGRID_N as i64));
+    g.attrs.insert("n_ranks".into(), Attr::I64(n_ranks as i64));
+    g.attrs
+        .insert("refinement_spacings".into(), Attr::F64Vec(spacings));
+    file.commit()
+}
+
+/// Read the solver parameters back from `/common`.
+pub fn read_common(file: &H5File) -> Result<(Params, u64)> {
+    let g = file.group("/common")?;
+    let f = |k: &str| -> Result<f64> {
+        match g.attrs.get(k) {
+            Some(Attr::F64(v)) => Ok(*v),
+            _ => bail!("iokernel: missing /common attr '{k}'"),
+        }
+    };
+    let n_ranks = match g.attrs.get("n_ranks") {
+        Some(Attr::I64(v)) => *v as u64,
+        _ => bail!("iokernel: missing n_ranks"),
+    };
+    Ok((
+        Params {
+            dt: f("dt")? as f32,
+            h: 0.0, // per-level, derived from the tree
+            nu: f("nu")? as f32,
+            alpha: f("alpha")? as f32,
+            beta_g: f("beta_g")? as f32,
+            t_inf: f("t_inf")? as f32,
+            q_int: f("q_int")? as f32,
+            rho: f("rho")? as f32,
+            omega: 1.0,
+        },
+        n_ranks,
+    ))
+}
+
+/// Selectable snapshot content — the paper's stated future-work knob
+/// (§3.1: "this is subject to be revised in future iterations of the
+/// kernel to allow users turn off unnecessary functions and, thus, reduce
+/// the amount of data in the file"). The topology datasets and the current
+/// cell data are always written (they carry the output + offline-window
+/// functionality); the rest is optional:
+///
+/// * `previous`/`temp` — only needed for bit-exact checkpoint *restart*;
+///   a visualisation-only snapshot can drop them (−2/3 of the cell data).
+/// * `cell_type` — only needed when the scenario has obstacle geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SnapshotOptions {
+    pub previous: bool,
+    pub temp: bool,
+    pub cell_type: bool,
+}
+
+impl Default for SnapshotOptions {
+    /// Full checkpoint (the paper's current single-file-supports-all mode).
+    fn default() -> SnapshotOptions {
+        SnapshotOptions {
+            previous: true,
+            temp: true,
+            cell_type: true,
+        }
+    }
+}
+
+impl SnapshotOptions {
+    /// Visualisation-only output: topology + current data.
+    pub fn output_only() -> SnapshotOptions {
+        SnapshotOptions {
+            previous: false,
+            temp: false,
+            cell_type: false,
+        }
+    }
+
+    /// Number of datasets this selection writes.
+    pub fn n_datasets(&self) -> u64 {
+        4 + self.previous as u64 + self.temp as u64 + self.cell_type as u64
+    }
+}
+
+/// Report of one snapshot write.
+#[derive(Clone, Copy, Debug)]
+pub struct SnapshotReport {
+    pub io: IoReport,
+    pub n_grids: u64,
+    /// Seconds spent packing rank buffers (the paper's extra memory/copy
+    /// trade-off, §3.2).
+    pub pack_seconds: f64,
+}
+
+/// Write one complete simulation snapshot at elapsed time `t`.
+///
+/// Creates the timestep group + datasets collectively, packs each rank's
+/// grids into linear buffers, and issues one collective write.
+pub fn write_snapshot(
+    file: &mut H5File,
+    io: &ParallelIo,
+    tree: &SpaceTree,
+    part: &Partition,
+    grids: &[DGrid],
+    t: f64,
+) -> Result<SnapshotReport> {
+    write_snapshot_with(file, io, tree, part, grids, t, &SnapshotOptions::default())
+}
+
+/// [`write_snapshot`] with content selection.
+pub fn write_snapshot_with(
+    file: &mut H5File,
+    io: &ParallelIo,
+    tree: &SpaceTree,
+    part: &Partition,
+    grids: &[DGrid],
+    t: f64,
+    opts: &SnapshotOptions,
+) -> Result<SnapshotReport> {
+    let n = tree.len() as u64;
+    let group = ts_group(t);
+    // --- collective dataset creation (all ranks agree on shapes) --------
+    let ds_prop = file.create_dataset(&group, "grid_property", Dtype::U64, &[n])?;
+    let ds_sub = file.create_dataset(&group, "subgrid_uid", Dtype::U64, &[n, 8])?;
+    let ds_bbox = file.create_dataset(&group, "bounding_box", Dtype::F64, &[n, 6])?;
+    let ds_ct = if opts.cell_type {
+        Some(file.create_dataset(&group, "cell_type", Dtype::U8, &[n, DGRID_CELLS as u64])?)
+    } else {
+        None
+    };
+    let ds_cur =
+        file.create_dataset(&group, "current_cell_data", Dtype::F32, &[n, ROW_ELEMS as u64])?;
+    let ds_prev = if opts.previous {
+        Some(file.create_dataset(&group, "previous_cell_data", Dtype::F32, &[n, ROW_ELEMS as u64])?)
+    } else {
+        None
+    };
+    let ds_tmp = if opts.temp {
+        Some(file.create_dataset(&group, "temp_cell_data", Dtype::F32, &[n, ROW_ELEMS as u64])?)
+    } else {
+        None
+    };
+
+    // --- pack per-rank linear buffers ------------------------------------
+    let t_pack = std::time::Instant::now();
+    let offsets = part.row_offsets();
+    let mut packs: Vec<RankPack> = Vec::with_capacity(part.n_ranks as usize);
+    {
+        // rows in curve order, grouped per rank (contiguous by construction)
+        let mut row = 0usize;
+        for r in 0..part.n_ranks {
+            let count = part.counts[r as usize] as usize;
+            let rows = &part.curve[row..row + count];
+            packs.push(pack_rank(r, rows, tree, grids));
+            row += count;
+        }
+    }
+    let pack_seconds = t_pack.elapsed().as_secs_f64();
+
+    // --- one collective write over all datasets --------------------------
+    let mut writes: Vec<SlabWrite> = Vec::with_capacity(packs.len() * DATASETS.len());
+    for p in &packs {
+        let row0 = offsets[p.rank as usize];
+        writes.push(slab(p.rank, &ds_prop, row0, &p.prop));
+        writes.push(slab(p.rank, &ds_sub, row0, &p.sub));
+        writes.push(slab(p.rank, &ds_bbox, row0, &p.bbox));
+        if let Some(ds) = &ds_ct {
+            writes.push(slab(p.rank, ds, row0, &p.ct));
+        }
+        writes.push(slab(p.rank, &ds_cur, row0, &p.cur));
+        if let Some(ds) = &ds_prev {
+            writes.push(slab(p.rank, ds, row0, &p.prev));
+        }
+        if let Some(ds) = &ds_tmp {
+            writes.push(slab(p.rank, ds, row0, &p.tmp));
+        }
+    }
+    let report = io.collective_write(file, &writes, opts.n_datasets(), n)?;
+    file.ensure_group(&group)
+        .attrs
+        .insert("elapsed".into(), Attr::F64(t));
+    file.commit()?;
+    Ok(SnapshotReport {
+        io: report,
+        n_grids: n,
+        pack_seconds,
+    })
+}
+
+fn slab<'a>(rank: u32, ds: &'a Dataset, row0: u64, data: &'a [u8]) -> SlabWrite<'a> {
+    SlabWrite {
+        rank,
+        ds,
+        row_start: row0,
+        data,
+    }
+}
+
+/// One rank's packed linear write buffers.
+struct RankPack {
+    rank: u32,
+    prop: Vec<u8>,
+    sub: Vec<u8>,
+    bbox: Vec<u8>,
+    ct: Vec<u8>,
+    cur: Vec<u8>,
+    prev: Vec<u8>,
+    tmp: Vec<u8>,
+}
+
+fn pack_rank(rank: u32, rows: &[u32], tree: &SpaceTree, grids: &[DGrid]) -> RankPack {
+    let n = rows.len();
+    let mut prop = Vec::with_capacity(n * 8);
+    let mut sub = Vec::with_capacity(n * 64);
+    let mut bbox = Vec::with_capacity(n * 48);
+    let mut ct = Vec::with_capacity(n * DGRID_CELLS);
+    let mut cur = Vec::with_capacity(n * ROW_ELEMS * 4);
+    let mut prev = Vec::with_capacity(n * ROW_ELEMS * 4);
+    let mut tmp = Vec::with_capacity(n * ROW_ELEMS * 4);
+    let mut interior = vec![0.0f32; DGRID_CELLS];
+    for &idx in rows {
+        let node = tree.node(idx);
+        let g = &grids[idx as usize];
+        prop.extend_from_slice(&node.uid().0.to_le_bytes());
+        if node.is_leaf() {
+            sub.extend_from_slice(&[0u8; 64]);
+        } else {
+            for &c in &node.children {
+                sub.extend_from_slice(&tree.node(c).uid().0.to_le_bytes());
+            }
+        }
+        for v in node.bbox.min.iter().chain(node.bbox.max.iter()) {
+            bbox.extend_from_slice(&v.to_le_bytes());
+        }
+        ct.extend_from_slice(&g.cell_type);
+        for (gen, buf) in [
+            (Gen::Cur, &mut cur),
+            (Gen::Prev, &mut prev),
+            (Gen::Temp, &mut tmp),
+        ] {
+            let fs = gen.of(g);
+            for v in 0..NVAR {
+                fs.extract_interior(v, &mut interior);
+                buf.extend_from_slice(&codec::f32s_to_bytes(&interior));
+            }
+        }
+    }
+    RankPack {
+        rank,
+        prop,
+        sub,
+        bbox,
+        ct,
+        cur,
+        prev,
+        tmp,
+    }
+}
+
+/// List the elapsed times of all snapshots in the file, ascending.
+pub fn list_timesteps(file: &H5File) -> Vec<f64> {
+    let mut ts: Vec<f64> = match file.group("/simulation") {
+        Ok(sim) => sim
+            .groups
+            .keys()
+            .filter_map(|k| k.strip_prefix("t=").and_then(|s| s.parse().ok()))
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ts
+}
+
+/// A snapshot restored from file: reconstructed topology + field data.
+pub struct RestoredSnapshot {
+    pub tree: SpaceTree,
+    pub part: Partition,
+    pub grids: Vec<DGrid>,
+    pub t: f64,
+    pub params: Params,
+}
+
+/// Restore the complete simulation state from the snapshot at time `t`
+/// (paper §3.2: read `grid property`, rebuild the topology without the
+/// neighbourhood server's serial decomposition, then read the hyperslabs).
+pub fn read_snapshot(file: &H5File, t: f64) -> Result<RestoredSnapshot> {
+    let group = ts_group(t);
+    let (params, _) = read_common(file)?;
+    let ds_prop = file.dataset(&group, "grid_property")?;
+    let uids: Vec<Uid> = file
+        .read_all_u64(&ds_prop)?
+        .into_iter()
+        .map(Uid)
+        .collect();
+    let n = uids.len();
+    if n == 0 {
+        bail!("iokernel: empty snapshot at t={t}");
+    }
+
+    // --- rebuild the topology from location codes ------------------------
+    let g = file.group("/common")?;
+    let (dmin, dmax) = match (g.attrs.get("domain_min"), g.attrs.get("domain_max")) {
+        (Some(Attr::F64Vec(a)), Some(Attr::F64Vec(b))) => (a.clone(), b.clone()),
+        _ => bail!("iokernel: missing domain attrs"),
+    };
+    let domain = BBox {
+        min: [dmin[0], dmin[1], dmin[2]],
+        max: [dmax[0], dmax[1], dmax[2]],
+    };
+    let mut locs: Vec<LocCode> = uids.iter().map(|u| u.loc()).collect();
+    locs.sort_by_key(|l| l.depth());
+    let mut tree = SpaceTree::root_only(domain);
+    for loc in &locs {
+        if loc.depth() == 0 {
+            continue;
+        }
+        let parent = loc
+            .parent()
+            .ok_or_else(|| anyhow!("iokernel: orphan loc code"))?;
+        let pidx = tree
+            .lookup(parent)
+            .ok_or_else(|| anyhow!("iokernel: missing parent grid in snapshot"))?;
+        tree.refine(pidx); // no-op for siblings already created
+    }
+    if tree.len() != n {
+        bail!(
+            "iokernel: snapshot topology inconsistent ({} grids in file, {} reconstructed)",
+            n,
+            tree.len()
+        );
+    }
+
+    // --- restore rank assignment from the UIDs ---------------------------
+    let mut curve_rows: Vec<u32> = Vec::with_capacity(n);
+    let mut counts: HashMap<u32, u32> = HashMap::new();
+    for uid in &uids {
+        let idx = tree
+            .lookup(uid.loc())
+            .ok_or_else(|| anyhow!("iokernel: UID loc not in tree"))?;
+        tree.nodes[idx as usize].rank = uid.rank();
+        tree.nodes[idx as usize].local = uid.local();
+        curve_rows.push(idx);
+        *counts.entry(uid.rank()).or_default() += 1;
+    }
+    let n_ranks = counts.keys().max().map(|r| r + 1).unwrap_or(1);
+    let part = Partition {
+        n_ranks,
+        counts: (0..n_ranks)
+            .map(|r| counts.get(&r).copied().unwrap_or(0))
+            .collect(),
+        curve: curve_rows,
+    };
+
+    // --- field data -------------------------------------------------------
+    // optional datasets may be absent (SnapshotOptions); default to
+    // fluid-only cell types / zero generations
+    let ds_ct = file.dataset(&group, "cell_type").ok();
+    let ds_cur = file.dataset(&group, "current_cell_data")?;
+    let ds_prev = file.dataset(&group, "previous_cell_data").ok();
+    let ds_tmp = file.dataset(&group, "temp_cell_data").ok();
+    let mut grids: Vec<DGrid> = tree.nodes.iter().map(|nn| DGrid::new(nn.uid())).collect();
+    for (row, uid) in uids.iter().enumerate() {
+        let idx = tree.lookup(uid.loc()).unwrap() as usize;
+        let g = &mut grids[idx];
+        if let Some(ds) = &ds_ct {
+            g.cell_type = file.read_rows(ds, row as u64, 1)?;
+        }
+        for (ds, gen) in [
+            (Some(&ds_cur), Gen::Cur),
+            (ds_prev.as_ref(), Gen::Prev),
+            (ds_tmp.as_ref(), Gen::Temp),
+        ] {
+            let Some(ds) = ds else { continue };
+            let bytes = file.read_rows(ds, row as u64, 1)?;
+            let vals = codec::bytes_to_f32s(&bytes);
+            let fs = gen.of_mut(g);
+            for v in 0..NVAR {
+                fs.set_interior(v, &vals[v * DGRID_CELLS..(v + 1) * DGRID_CELLS]);
+            }
+        }
+    }
+    Ok(RestoredSnapshot {
+        tree,
+        part,
+        grids,
+        t,
+        params,
+    })
+}
+
+/// Create a **branching file** (paper §3.2, §4): a fresh file seeded with
+/// the source's `/common` group and the snapshot at `t`, recording its
+/// ancestry. Subsequent write-outs of the steered run go there, giving the
+/// branching simulation paths of Fig 5.
+pub fn branch_file<P: AsRef<Path>>(
+    src: &H5File,
+    t: f64,
+    new_path: P,
+    io: &ParallelIo,
+) -> Result<H5File> {
+    let snap = read_snapshot(src, t).context("iokernel: branch source snapshot")?;
+    let mut dst = H5File::create(new_path, src.alignment)?;
+    // copy /common
+    let common = src.group("/common")?.clone();
+    *dst.ensure_group("/common") = common;
+    let g = dst.ensure_group("/common");
+    g.attrs.insert(
+        "branched_from".into(),
+        Attr::Str(format!("{}@t={t:.6}", src.path.display())),
+    );
+    dst.commit()?;
+    write_snapshot(&mut dst, io, &snap.tree, &snap.part, &snap.grids, t)?;
+    Ok(dst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{IoTuning, Machine};
+    use crate::tree::sfc;
+    use crate::var;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("iokernel_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    fn setup(depth: u32, ranks: u32) -> (SpaceTree, Partition, Vec<DGrid>) {
+        let mut tree = SpaceTree::full(BBox::unit(), depth);
+        let part = sfc::partition(&mut tree, ranks);
+        let mut grids: Vec<DGrid> = tree.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+        // distinguishable data: each grid's pressure = its arena index
+        for (i, g) in grids.iter_mut().enumerate() {
+            let data = vec![i as f32; DGRID_CELLS];
+            g.cur.set_interior(var::P, &data);
+            let t = vec![300.0 + i as f32; DGRID_CELLS];
+            g.prev.set_interior(var::T, &t);
+        }
+        (tree, part, grids)
+    }
+
+    fn params() -> Params {
+        Params {
+            dt: 0.01,
+            h: 0.0,
+            nu: 0.001,
+            alpha: 0.002,
+            beta_g: 0.5,
+            t_inf: 300.0,
+            q_int: 0.0,
+            rho: 1.2,
+            omega: 1.0,
+        }
+    }
+
+    fn io() -> ParallelIo {
+        ParallelIo::new(Machine::local(), IoTuning::default(), 4)
+    }
+
+    #[test]
+    fn snapshot_write_read_roundtrip() {
+        let p = tmp("roundtrip");
+        let (tree, part, grids) = setup(1, 4);
+        {
+            let mut f = H5File::create(&p, 1).unwrap();
+            write_common(&mut f, &params(), &tree, 4).unwrap();
+            let rep = write_snapshot(&mut f, &io(), &tree, &part, &grids, 0.25).unwrap();
+            assert_eq!(rep.n_grids, 9);
+            assert!(rep.io.bytes > 0);
+        }
+        let f = H5File::open(&p).unwrap();
+        let snap = read_snapshot(&f, 0.25).unwrap();
+        assert_eq!(snap.tree.len(), tree.len());
+        assert_eq!(snap.part.n_ranks, 4);
+        assert!((snap.params.rho - 1.2).abs() < 1e-6);
+        // field data restored per grid (match by location code)
+        for (i, n) in tree.nodes.iter().enumerate() {
+            let j = snap.tree.lookup(n.loc).unwrap() as usize;
+            let mut out = vec![0.0f32; DGRID_CELLS];
+            snap.grids[j].cur.extract_interior(var::P, &mut out);
+            assert_eq!(out[0], i as f32, "grid {i} pressure");
+            snap.grids[j].prev.extract_interior(var::T, &mut out);
+            assert_eq!(out[100], 300.0 + i as f32, "grid {i} prev T");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn root_grid_is_row_zero() {
+        let p = tmp("row0");
+        let (tree, part, grids) = setup(1, 3);
+        let mut f = H5File::create(&p, 1).unwrap();
+        write_common(&mut f, &params(), &tree, 3).unwrap();
+        write_snapshot(&mut f, &io(), &tree, &part, &grids, 0.0).unwrap();
+        let ds = f.dataset(&ts_group(0.0), "grid_property").unwrap();
+        let uids = f.read_all_u64(&ds).unwrap();
+        let root = Uid(uids[0]);
+        assert_eq!(root.loc(), LocCode::ROOT);
+        assert_eq!(root.rank(), 0);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn subgrid_uid_links_children() {
+        let p = tmp("subgrid");
+        let (tree, part, grids) = setup(1, 2);
+        let mut f = H5File::create(&p, 1).unwrap();
+        write_common(&mut f, &params(), &tree, 2).unwrap();
+        write_snapshot(&mut f, &io(), &tree, &part, &grids, 0.0).unwrap();
+        let g = ts_group(0.0);
+        let subs = f.read_all_u64(&f.dataset(&g, "subgrid_uid").unwrap()).unwrap();
+        let props = f.read_all_u64(&f.dataset(&g, "grid_property").unwrap()).unwrap();
+        // root (row 0) has 8 non-null children, all present in grid_property
+        for c in 0..8 {
+            let child = subs[c];
+            assert_ne!(child, 0);
+            assert!(props.contains(&child));
+        }
+        // leaves have null children
+        assert!(subs[8..].iter().all(|&u| u == 0));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn multiple_timesteps_listed_sorted() {
+        let p = tmp("list");
+        let (tree, part, grids) = setup(0, 1);
+        let mut f = H5File::create(&p, 1).unwrap();
+        write_common(&mut f, &params(), &tree, 1).unwrap();
+        for t in [0.5, 0.0, 0.25] {
+            write_snapshot(&mut f, &io(), &tree, &part, &grids, t).unwrap();
+        }
+        assert_eq!(list_timesteps(&f), vec![0.0, 0.25, 0.5]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn restart_preserves_adaptive_topology() {
+        let p = tmp("adaptive");
+        let mut tree = SpaceTree::adaptive(BBox::unit(), 3, &|b, _| {
+            b.contains_point([0.01, 0.01, 0.01])
+        });
+        let part = sfc::partition(&mut tree, 5);
+        let grids: Vec<DGrid> = tree.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+        let mut f = H5File::create(&p, 1).unwrap();
+        write_common(&mut f, &params(), &tree, 5).unwrap();
+        write_snapshot(&mut f, &io(), &tree, &part, &grids, 1.0).unwrap();
+        let snap = read_snapshot(&f, 1.0).unwrap();
+        assert_eq!(snap.tree.len(), tree.len());
+        assert_eq!(snap.tree.max_depth(), 3);
+        // every loc code surviving
+        for n in &tree.nodes {
+            assert!(snap.tree.lookup(n.loc).is_some(), "{:?} lost", n.loc);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn branch_file_carries_common_and_snapshot() {
+        let p = tmp("branch_src");
+        let q = tmp("branch_dst");
+        let (tree, part, grids) = setup(1, 2);
+        let mut f = H5File::create(&p, 1).unwrap();
+        write_common(&mut f, &params(), &tree, 2).unwrap();
+        write_snapshot(&mut f, &io(), &tree, &part, &grids, 0.0).unwrap();
+        write_snapshot(&mut f, &io(), &tree, &part, &grids, 0.5).unwrap();
+        let branch = branch_file(&f, 0.5, &q, &io()).unwrap();
+        // ancestry recorded
+        match branch.group("/common").unwrap().attrs.get("branched_from") {
+            Some(Attr::Str(s)) => assert!(s.contains("t=0.500000")),
+            other => panic!("missing ancestry: {other:?}"),
+        }
+        // snapshot restored from the branch
+        let snap = read_snapshot(&branch, 0.5).unwrap();
+        assert_eq!(snap.tree.len(), 9);
+        // branch has exactly one timestep
+        assert_eq!(list_timesteps(&branch), vec![0.5]);
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&q).ok();
+    }
+
+    #[test]
+    fn checkpoint_bytes_match_paper_accounting() {
+        // file payload per grid ≈ DGrid::checkpoint_bytes() + topology rows
+        let p = tmp("bytes");
+        let (tree, part, grids) = setup(1, 2);
+        let mut f = H5File::create(&p, 1).unwrap();
+        write_common(&mut f, &params(), &tree, 2).unwrap();
+        let rep = write_snapshot(&mut f, &io(), &tree, &part, &grids, 0.0).unwrap();
+        let per_grid = rep.io.bytes / 9;
+        let expected = DGrid::checkpoint_bytes() as u64 + 8 + 64 + 48;
+        assert_eq!(per_grid, expected);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn output_only_snapshot_is_smaller_and_readable() {
+        let p = tmp("optsel");
+        let (tree, part, grids) = setup(1, 2);
+        let mut f = H5File::create(&p, 1).unwrap();
+        write_common(&mut f, &params(), &tree, 2).unwrap();
+        let full =
+            write_snapshot_with(&mut f, &io(), &tree, &part, &grids, 0.0, &SnapshotOptions::default())
+                .unwrap();
+        let lean = write_snapshot_with(
+            &mut f,
+            &io(),
+            &tree,
+            &part,
+            &grids,
+            1.0,
+            &SnapshotOptions::output_only(),
+        )
+        .unwrap();
+        // the paper's future-work knob: ~2/3 of the cell data gone
+        assert!(lean.io.bytes * 2 < full.io.bytes, "{} vs {}", lean.io.bytes, full.io.bytes);
+        // still fully readable: topology + current data restored
+        let snap = read_snapshot(&f, 1.0).unwrap();
+        assert_eq!(snap.tree.len(), tree.len());
+        let idx = snap.tree.lookup(tree.node(3).loc).unwrap() as usize;
+        let mut out = vec![0.0f32; DGRID_CELLS];
+        snap.grids[idx].cur.extract_interior(var::P, &mut out);
+        assert_eq!(out[0], 3.0);
+        // absent generations default to zero
+        snap.grids[idx].prev.extract_interior(var::T, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+        // the offline window works on the lean snapshot too
+        let w = crate::window::offline_window(&f, 1.0, &BBox::unit(), 8).unwrap();
+        assert_eq!(w.len(), 8);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn snapshot_options_dataset_counts() {
+        assert_eq!(SnapshotOptions::default().n_datasets(), 7);
+        assert_eq!(SnapshotOptions::output_only().n_datasets(), 4);
+        assert_eq!(
+            SnapshotOptions {
+                previous: true,
+                temp: false,
+                cell_type: true
+            }
+            .n_datasets(),
+            6
+        );
+    }
+
+    #[test]
+    fn missing_snapshot_errors() {
+        let p = tmp("missing");
+        let (tree, _, _) = setup(0, 1);
+        let mut f = H5File::create(&p, 1).unwrap();
+        write_common(&mut f, &params(), &tree, 1).unwrap();
+        assert!(read_snapshot(&f, 9.9).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

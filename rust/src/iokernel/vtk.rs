@@ -1,0 +1,153 @@
+//! The legacy **one-binary-VTK-file-per-process** output path (paper §3's
+//! motivation): every rank dumps its grids into an individual binary file
+//! per time step. This is the baseline the shared-file kernel replaces —
+//! kept (a) as a working fallback exporter and (b) to regenerate the
+//! motivating comparison (file counts, contention) in the benches.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::{IoTuning, Machine, WriteWorkload};
+use crate::exchange::Gen;
+use crate::tree::dgrid::DGrid;
+use crate::tree::sfc::Partition;
+use crate::tree::SpaceTree;
+use crate::util::parallel_for;
+use crate::{DGRID_CELLS, DGRID_N, NVAR};
+
+/// Report of a per-process VTK-style dump.
+#[derive(Clone, Copy, Debug)]
+pub struct VtkReport {
+    pub files_written: u64,
+    pub bytes: u64,
+    pub real_seconds: f64,
+    /// Modelled duration on the target machine (independent I/O).
+    pub modelled_seconds: f64,
+    pub modelled_bandwidth: f64,
+}
+
+/// Write one file per rank under `dir`, named `part_<rank>_t<t>.vtk`.
+/// The payload is a minimal "structured points" style binary layout: a
+/// text header followed by raw little-endian cell data for all leaf grids
+/// of the rank.
+pub fn write_per_process(
+    dir: &Path,
+    machine: &Machine,
+    tree: &SpaceTree,
+    part: &Partition,
+    grids: &[DGrid],
+    t: f64,
+) -> Result<VtkReport> {
+    std::fs::create_dir_all(dir).context("vtk: create output dir")?;
+    let t0 = Instant::now();
+    let offsets = part.row_offsets();
+    let paths: Vec<PathBuf> = (0..part.n_ranks)
+        .map(|r| dir.join(format!("part_{r:05}_t{t:.6}.vtk")))
+        .collect();
+    let total_bytes = std::sync::atomic::AtomicU64::new(0);
+    let errors = std::sync::Mutex::new(Vec::new());
+    parallel_for(part.n_ranks as usize, |r| {
+        let run = || -> Result<u64> {
+            let mut f = std::fs::File::create(&paths[r]).context("vtk: create")?;
+            let row0 = offsets[r] as usize;
+            let count = part.counts[r] as usize;
+            let mut written = 0u64;
+            let header = format!(
+                "# mpfluid binary vtk-style dump\nrank {r} t {t:.6} grids {count} n {DGRID_N} vars {NVAR}\n"
+            );
+            f.write_all(header.as_bytes())?;
+            written += header.len() as u64;
+            let mut interior = vec![0.0f32; DGRID_CELLS];
+            for &idx in &part.curve[row0..row0 + count] {
+                let node = tree.node(idx);
+                if !node.is_leaf() {
+                    continue; // legacy path exported the finest level only
+                }
+                let g = &grids[idx as usize];
+                for v in 0..NVAR {
+                    Gen::Cur.of(g).extract_interior(v, &mut interior);
+                    for x in &interior {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                    written += (DGRID_CELLS * 4) as u64;
+                }
+            }
+            Ok(written)
+        };
+        match run() {
+            Ok(w) => {
+                total_bytes.fetch_add(w, std::sync::atomic::Ordering::Relaxed);
+            }
+            Err(e) => errors.lock().unwrap().push(e),
+        }
+    });
+    if let Some(e) = errors.into_inner().unwrap().pop() {
+        return Err(e);
+    }
+    let bytes = total_bytes.load(std::sync::atomic::Ordering::Relaxed);
+    let real_seconds = t0.elapsed().as_secs_f64().max(1e-9);
+    // modelled as independent (non-collective) I/O on the target machine
+    let est = machine.estimate_write(
+        &WriteWorkload {
+            ranks: part.n_ranks as u64,
+            total_bytes: bytes,
+            n_datasets: 1,
+            n_grids: tree.n_leaves() as u64,
+        },
+        &IoTuning {
+            collective_buffering: false,
+            file_locking: false,
+            alignment: false,
+        },
+    );
+    Ok(VtkReport {
+        files_written: part.n_ranks as u64,
+        bytes,
+        real_seconds,
+        modelled_seconds: est.seconds,
+        modelled_bandwidth: est.bandwidth,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::{sfc, BBox};
+
+    #[test]
+    fn writes_one_file_per_rank() {
+        let dir = std::env::temp_dir().join(format!("vtk_test_{}", std::process::id()));
+        let mut tree = SpaceTree::full(BBox::unit(), 1);
+        let part = sfc::partition(&mut tree, 3);
+        let grids: Vec<DGrid> = tree.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+        let rep =
+            write_per_process(&dir, &Machine::local(), &tree, &part, &grids, 0.5).unwrap();
+        assert_eq!(rep.files_written, 3);
+        let files: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(files.len(), 3);
+        // leaves only: 8 leaves × 5 vars × 4096 cells × 4 B + headers
+        assert!(rep.bytes > 8 * 5 * 4096 * 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn modelled_time_worse_than_collective_kernel() {
+        // the motivation of §3: per-process independent I/O on JuQueen is
+        // far slower than the collective shared-file kernel
+        let m = Machine::juqueen();
+        let w = crate::cluster::paper_depth6_workload(8192);
+        let indep = m.estimate_write(
+            &w,
+            &IoTuning {
+                collective_buffering: false,
+                file_locking: false,
+                alignment: false,
+            },
+        );
+        let coll = m.estimate_write(&w, &IoTuning::default());
+        assert!(indep.seconds > 5.0 * coll.seconds);
+    }
+}

@@ -1,0 +1,60 @@
+//! # mpfluid — massively parallel CFD with an efficient HDF5-style I/O kernel
+//!
+//! Reproduction of Ertl, Frisch & Mundani, *“Design and Optimisation of an
+//! Efficient HDF5 I/O Kernel for Massive Parallel Fluid Flow Simulations”*
+//! (Concurrency and Computation: Practice and Experience, 2018,
+//! DOI 10.1002/cpe.4165).
+//!
+//! The crate is the Layer-3 (Rust) part of a three-layer stack:
+//!
+//! * **L1/L2** live in `python/compile/`: Pallas stencil kernels inside a JAX
+//!   compute graph, AOT-lowered once to HLO-text artifacts (`make artifacts`).
+//! * **L3** (this crate) owns everything at runtime: the space-tree data
+//!   structure, neighbourhood server, ghost-layer exchange, the multigrid-like
+//!   pressure solver that drives the AOT kernels through PJRT
+//!   ([`runtime`]), and — the paper's headline contribution — the parallel
+//!   shared-file I/O kernel ([`iokernel`]) with collective buffering
+//!   ([`pario`]) on a simulated HPC substrate ([`cluster`]), plus the sliding
+//!   window ([`window`]) and time-reversible steering ([`steering`]).
+//!
+//! See `DESIGN.md` for the complete system inventory and the experiment
+//! index mapping every figure/table of the paper to a bench/example.
+
+pub mod cluster;
+pub mod util;
+pub mod config;
+pub mod coordinator;
+pub mod exchange;
+pub mod h5lite;
+pub mod iokernel;
+pub mod metrics;
+pub mod nbs;
+pub mod pario;
+pub mod physics;
+pub mod runtime;
+pub mod solver;
+pub mod steering;
+pub mod tree;
+pub mod vpic;
+pub mod window;
+
+/// Edge length of a d-grid (cells per dimension). The paper fixes this to 16
+/// ("each d-grid contains 16 cells in every dimension", §5.3) and so do the
+/// AOT artifacts; the Rust code keeps it a constant rather than a generic to
+/// match.
+pub const DGRID_N: usize = 16;
+
+/// Cells in one d-grid.
+pub const DGRID_CELLS: usize = DGRID_N * DGRID_N * DGRID_N;
+
+/// Number of field variables stored per cell (u, v, w, p, T).
+pub const NVAR: usize = 5;
+
+/// Variable indices into a [`tree::dgrid::DGrid`] field set.
+pub mod var {
+    pub const U: usize = 0;
+    pub const V: usize = 1;
+    pub const W: usize = 2;
+    pub const P: usize = 3;
+    pub const T: usize = 4;
+}

@@ -1,0 +1,333 @@
+//! `mpfluid` — CLI for the massively parallel CFD code + HDF5-style I/O
+//! kernel reproduction.
+//!
+//! ```text
+//! mpfluid run     --scenario channel --depth 1 --steps 100 --out run.h5
+//!                 [--config cfg.json] [--backend pjrt|rust] [--collector]
+//! mpfluid restart --file run.h5 [--t <time>] --steps 50
+//! mpfluid info    --file run.h5
+//! mpfluid window  --file run.h5 --t <time> [--min x,y,z --max x,y,z] [--budget N]
+//! mpfluid window  --addr 127.0.0.1:PORT  [--min ... --max ...] (online)
+//! ```
+//!
+//! (Hand-rolled argument parsing — no CLI crates in the offline registry.)
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use mpfluid::cluster::{IoTuning, Machine};
+use mpfluid::config::Scenario;
+use mpfluid::coordinator::Simulation;
+use mpfluid::h5lite::H5File;
+use mpfluid::pario::ParallelIo;
+use mpfluid::physics::{ComputeBackend, RustBackend};
+use mpfluid::runtime::PjrtBackend;
+use mpfluid::steering::TrsSession;
+use mpfluid::tree::BBox;
+use mpfluid::util::fmt_gbps;
+use mpfluid::{iokernel, window};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "run" => cmd_run(&flags),
+        "restart" => cmd_restart(&flags),
+        "info" => cmd_info(&flags),
+        "window" => cmd_window(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (run|restart|info|window)"),
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "mpfluid — massively parallel CFD with an HDF5-style parallel I/O kernel\n\
+         commands:\n\
+         \x20 run     --scenario channel|theatre|cavity --depth D --steps N --out FILE\n\
+         \x20         [--config FILE.json] [--backend pjrt|rust] [--ranks R] [--collector]\n\
+         \x20 restart --file FILE [--t TIME] --steps N [--backend pjrt|rust]\n\
+         \x20 info    --file FILE\n\
+         \x20 window  --file FILE --t TIME [--min x,y,z --max x,y,z] [--budget N]\n\
+         \x20 window  --addr HOST:PORT [--min x,y,z --max x,y,z] [--budget N]"
+    );
+}
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(key) = a.strip_prefix("--") else {
+            bail!("unexpected argument '{a}'");
+        };
+        if key == "collector" {
+            flags.insert(key.to_string(), "true".to_string());
+            i += 1;
+        } else {
+            let val = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+            flags.insert(key.to_string(), val.clone());
+            i += 2;
+        }
+    }
+    Ok(flags)
+}
+
+fn pick_backend(flags: &HashMap<String, String>) -> Result<Box<dyn ComputeBackend>> {
+    match flags.get("backend").map(|s| s.as_str()).unwrap_or("pjrt") {
+        "rust" => Ok(Box::new(RustBackend)),
+        "pjrt" => match PjrtBackend::load_default() {
+            Ok(b) => {
+                eprintln!("backend: pjrt ({} artifacts)", b.manifest.entries.len());
+                Ok(Box::new(b))
+            }
+            Err(e) => {
+                eprintln!("backend: pjrt unavailable ({e}); falling back to rust oracle");
+                Ok(Box::new(RustBackend))
+            }
+        },
+        other => bail!("unknown backend '{other}'"),
+    }
+}
+
+fn run_loop(
+    sim: Arc<RwLock<Simulation>>,
+    backend: &dyn ComputeBackend,
+    steps: u64,
+    checkpoint_every: u64,
+    trs: &mut TrsSession,
+    io: &ParallelIo,
+) -> Result<()> {
+    for s in 0..steps {
+        let rep = sim.write().unwrap().step(backend);
+        if s % 10 == 0 || s + 1 == steps {
+            eprintln!(
+                "step {:>5}  t={:.4}  div_rms={:.3e}  solve[{} cycles, r={:.2e}]  {:.0} ms",
+                rep.step,
+                rep.t,
+                rep.div_rms,
+                rep.solve.cycles,
+                rep.solve.final_residual,
+                rep.seconds * 1e3
+            );
+        }
+        if checkpoint_every > 0 && (s + 1) % checkpoint_every == 0 {
+            let sim_r = sim.read().unwrap();
+            let t0 = std::time::Instant::now();
+            trs.checkpoint(&sim_r, io)?;
+            let n = sim_r.nbs.tree.len();
+            let bytes = (n * mpfluid::tree::dgrid::DGrid::checkpoint_bytes()) as u64;
+            let modelled = io
+                .machine
+                .estimate_write(
+                    &mpfluid::cluster::WriteWorkload {
+                        ranks: io.n_ranks,
+                        total_bytes: bytes,
+                        n_datasets: 7,
+                        n_grids: n as u64,
+                    },
+                    &io.tuning,
+                )
+                .seconds;
+            eprintln!(
+                "checkpoint @ t={:.4}: {n} grids, {:.1} ms real (modelled on {}: {})",
+                sim_r.t,
+                t0.elapsed().as_secs_f64() * 1e3,
+                io.machine.name,
+                fmt_gbps(bytes as f64, modelled)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
+    let scenario = if let Some(cfg) = flags.get("config") {
+        let doc = std::fs::read_to_string(cfg).with_context(|| format!("read {cfg}"))?;
+        Scenario::from_json(&doc)?
+    } else {
+        let name = flags.get("scenario").map(|s| s.as_str()).unwrap_or("cavity");
+        let depth: u32 = flags.get("depth").map(|s| s.parse()).transpose()?.unwrap_or(1);
+        let mut sc = Scenario::by_name(name, depth)?;
+        if let Some(r) = flags.get("ranks") {
+            sc.ranks = r.parse()?;
+        }
+        if let Some(s) = flags.get("steps") {
+            sc.steps = s.parse()?;
+        }
+        sc
+    };
+    let out = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| format!("{}.h5", scenario.name));
+    let backend = pick_backend(flags)?;
+    let sim = scenario.build();
+    eprintln!(
+        "scenario '{}': depth {}, {} grids ({} cells), {} ranks",
+        scenario.name,
+        scenario.depth,
+        sim.nbs.tree.len(),
+        sim.n_cells(),
+        scenario.ranks
+    );
+    let io = ParallelIo::new(scenario.machine.clone(), scenario.tuning, scenario.ranks as u64);
+    let mut trs = TrsSession::create(std::path::Path::new(&out), &sim, scenario.alignment)?;
+    let shared = Arc::new(RwLock::new(sim));
+    let _collector = if flags.contains_key("collector") {
+        let c = window::Collector::spawn(shared.clone())?;
+        eprintln!("collector listening on {}", c.addr);
+        Some(c)
+    } else {
+        None
+    };
+    run_loop(
+        shared.clone(),
+        backend.as_ref(),
+        scenario.steps,
+        scenario.checkpoint_every,
+        &mut trs,
+        &io,
+    )?;
+    eprintln!("output file: {} ({} snapshots)", out, trs.timesteps().len());
+    Ok(())
+}
+
+fn cmd_restart(flags: &HashMap<String, String>) -> Result<()> {
+    let path = flags.get("file").ok_or_else(|| anyhow!("--file required"))?;
+    let file = H5File::open(path)?;
+    let times = iokernel::list_timesteps(&file);
+    if times.is_empty() {
+        bail!("no snapshots in {path}");
+    }
+    let t: f64 = match flags.get("t") {
+        Some(s) => s.parse()?,
+        None => *times.last().unwrap(),
+    };
+    let steps: u64 = flags.get("steps").map(|s| s.parse()).transpose()?.unwrap_or(50);
+    let backend = pick_backend(flags)?;
+    let snap = iokernel::read_snapshot(&file, t)?;
+    eprintln!(
+        "restarting from {path} @ t={t} ({} grids, {} ranks)",
+        snap.tree.len(),
+        snap.part.n_ranks
+    );
+    // default all-walls BCs; scenario-specific restarts go through examples
+    let bc = mpfluid::physics::bc::DomainBc::all_walls();
+    let sim = Simulation::from_snapshot(snap, bc);
+    let io = ParallelIo::new(Machine::local(), IoTuning::default(), sim.part.n_ranks as u64);
+    let branch_path = std::path::Path::new(path).with_extension("restart.h5");
+    let mut trs = TrsSession::create(&branch_path, &sim, file.alignment)?;
+    let shared = Arc::new(RwLock::new(sim));
+    run_loop(shared, backend.as_ref(), steps, 25, &mut trs, &io)?;
+    eprintln!("branch written to {}", branch_path.display());
+    Ok(())
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
+    let path = flags.get("file").ok_or_else(|| anyhow!("--file required"))?;
+    let file = H5File::open(path)?;
+    let (params, n_ranks) = iokernel::read_common(&file)?;
+    println!("file: {path}");
+    println!("alignment: {} B", file.alignment);
+    println!("payload: {} B", file.data_bytes());
+    println!("ranks: {n_ranks}");
+    println!(
+        "params: dt={} nu={} alpha={} beta_g={} rho={}",
+        params.dt, params.nu, params.alpha, params.beta_g, params.rho
+    );
+    let times = iokernel::list_timesteps(&file);
+    println!("snapshots: {}", times.len());
+    for t in times {
+        let g = file.group(&iokernel::ts_group(t))?;
+        let n = g
+            .datasets
+            .get("grid_property")
+            .map(|d| d.shape[0])
+            .unwrap_or(0);
+        println!("  t={t:.6}  {n} grids");
+    }
+    Ok(())
+}
+
+fn parse_vec3(s: &str) -> Result<[f64; 3]> {
+    let parts: Vec<f64> = s
+        .split(',')
+        .map(|p| p.trim().parse())
+        .collect::<Result<Vec<f64>, _>>()?;
+    if parts.len() != 3 {
+        bail!("expected x,y,z");
+    }
+    Ok([parts[0], parts[1], parts[2]])
+}
+
+fn cmd_window(flags: &HashMap<String, String>) -> Result<()> {
+    let min = flags
+        .get("min")
+        .map(|s| parse_vec3(s))
+        .transpose()?
+        .unwrap_or([0.0; 3]);
+    let max = flags
+        .get("max")
+        .map(|s| parse_vec3(s))
+        .transpose()?
+        .unwrap_or([1.0; 3]);
+    let bbox = BBox { min, max };
+    let budget: u32 = flags.get("budget").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let grids = if let Some(addr) = flags.get("addr") {
+        window::query(addr.parse()?, &bbox, budget)?
+    } else {
+        let path = flags
+            .get("file")
+            .ok_or_else(|| anyhow!("--file or --addr required"))?;
+        let file = H5File::open(path)?;
+        let t: f64 = match flags.get("t") {
+            Some(s) => s.parse()?,
+            None => *iokernel::list_timesteps(&file)
+                .last()
+                .ok_or_else(|| anyhow!("no snapshots"))?,
+        };
+        window::offline_window(&file, t, &bbox, budget as usize)?
+    };
+    println!("{} grids in window (budget {budget})", grids.len());
+    for g in &grids {
+        // summarise: mean |velocity| and T range per grid
+        let n = mpfluid::DGRID_CELLS;
+        let (u, v, w) = (&g.data[0..n], &g.data[n..2 * n], &g.data[2 * n..3 * n]);
+        let speed: f32 = u
+            .iter()
+            .zip(v)
+            .zip(w)
+            .map(|((a, b), c)| (a * a + b * b + c * c).sqrt())
+            .sum::<f32>()
+            / n as f32;
+        let t_slice = &g.data[4 * n..5 * n];
+        let (tmin, tmax) = t_slice
+            .iter()
+            .fold((f32::MAX, f32::MIN), |(lo, hi), &x| (lo.min(x), hi.max(x)));
+        println!(
+            "  depth {} bbox [{:.3},{:.3},{:.3}]-[{:.3},{:.3},{:.3}]  mean|u|={speed:.4}  T in [{tmin:.1},{tmax:.1}]",
+            g.depth, g.bbox.min[0], g.bbox.min[1], g.bbox.min[2],
+            g.bbox.max[0], g.bbox.max[1], g.bbox.max[2]
+        );
+    }
+    Ok(())
+}

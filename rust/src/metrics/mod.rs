@@ -1,0 +1,123 @@
+//! Lightweight runtime metrics: named counters and duration accumulators
+//! used by the coordinator and the bench harness (stand-in for a metrics
+//! crate; everything is plain atomics so it can be shared across the
+//! collector/steering threads).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A set of named counters (u64) and timers (accumulated nanoseconds).
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    timers: Mutex<BTreeMap<String, AtomicU64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn add(&self, name: &str, v: u64) {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|a| a.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Time a closure, accumulating under `name`.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let ns = t0.elapsed().as_nanos() as u64;
+        let mut m = self.timers.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(ns, Ordering::Relaxed);
+        out
+    }
+
+    pub fn seconds(&self, name: &str) -> f64 {
+        self.timers
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|a| a.load(Ordering::Relaxed) as f64 / 1e9)
+            .unwrap_or(0.0)
+    }
+
+    /// Render all metrics as sorted `name value` lines.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k} {}\n", v.load(Ordering::Relaxed)));
+        }
+        for (k, v) in self.timers.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "timer   {k} {:.6}s\n",
+                v.load(Ordering::Relaxed) as f64 / 1e9
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.add("steps", 1);
+        m.add("steps", 2);
+        assert_eq!(m.counter("steps"), 3);
+        assert_eq!(m.counter("absent"), 0);
+    }
+
+    #[test]
+    fn timers_accumulate_and_return_value() {
+        let m = Metrics::new();
+        let x = m.time("work", || 42);
+        assert_eq!(x, 42);
+        assert!(m.seconds("work") >= 0.0);
+        m.time("work", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(m.seconds("work") >= 0.002);
+    }
+
+    #[test]
+    fn report_lists_everything() {
+        let m = Metrics::new();
+        m.add("a", 1);
+        m.time("b", || ());
+        let rep = m.report();
+        assert!(rep.contains("counter a 1"));
+        assert!(rep.contains("timer   b"));
+    }
+
+    #[test]
+    fn thread_safe_updates() {
+        let m = Metrics::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        m.add("n", 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.counter("n"), 800);
+    }
+}

@@ -1,0 +1,394 @@
+//! The **neighbourhood server** (paper §2.2) — a topological repository.
+//!
+//! *"A dedicated process called neighbourhood server stores the entire
+//! logical structure, the l-grids, in order to answer topological queries,
+//! while all computational processes solely store the d-grids assigned to
+//! them."*
+//!
+//! This module is that repository: it owns a (rank-assigned) [`SpaceTree`]
+//! and answers
+//!
+//! * residence queries — which rank owns a grid,
+//! * face-neighbour queries for the ghost-layer update (same level, one
+//!   coarser, or one finer thanks to the 2:1 balance),
+//! * region queries with a level-of-detail budget — the server-side half of
+//!   the sliding window (§2.3): starting from the root, descend until the
+//!   finest resolution fits the window's data budget.
+
+
+use crate::tree::uid::{LocCode, Uid};
+use crate::tree::{BBox, SpaceTree};
+
+/// One of the six faces of a d-grid, in `(axis, direction)` form.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Face {
+    XM,
+    XP,
+    YM,
+    YP,
+    ZM,
+    ZP,
+}
+
+pub const ALL_FACES: [Face; 6] = [Face::XM, Face::XP, Face::YM, Face::YP, Face::ZM, Face::ZP];
+
+impl Face {
+    pub fn axis(self) -> usize {
+        match self {
+            Face::XM | Face::XP => 0,
+            Face::YM | Face::YP => 1,
+            Face::ZM | Face::ZP => 2,
+        }
+    }
+
+    pub fn dir(self) -> i64 {
+        match self {
+            Face::XM | Face::YM | Face::ZM => -1,
+            _ => 1,
+        }
+    }
+
+    pub fn opposite(self) -> Face {
+        match self {
+            Face::XM => Face::XP,
+            Face::XP => Face::XM,
+            Face::YM => Face::YP,
+            Face::YP => Face::YM,
+            Face::ZM => Face::ZP,
+            Face::ZP => Face::ZM,
+        }
+    }
+}
+
+/// A resolved face neighbour.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Neighbour {
+    /// Physical domain boundary — apply boundary conditions.
+    Boundary,
+    /// Neighbour at the same tree level.
+    Same { idx: u32 },
+    /// Neighbour is one level coarser (this grid sits on a refinement edge).
+    Coarser { idx: u32 },
+    /// Neighbour is refined: the four children touching the shared face.
+    Finer { idx: [u32; 4] },
+}
+
+/// The neighbourhood server. Wraps the logical tree; all methods are queries
+/// (the tree is mutated only through steering operations which rebuild the
+/// server's view). `Sync` so the online sliding-window collector can query
+/// it from its socket thread while the simulation runs.
+#[derive(Debug, Default)]
+pub struct NeighbourhoodServer {
+    pub tree: SpaceTree,
+    /// Messages answered since construction (server-load metric).
+    pub queries_served: std::sync::atomic::AtomicU64,
+}
+
+impl NeighbourhoodServer {
+    pub fn new(tree: SpaceTree) -> NeighbourhoodServer {
+        NeighbourhoodServer {
+            tree,
+            queries_served: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    fn count(&self) {
+        self.queries_served
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Total queries answered (server-load metric).
+    pub fn query_count(&self) -> u64 {
+        self.queries_served.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Which rank hosts the grid at `loc`?
+    pub fn owner_of(&self, loc: LocCode) -> Option<u32> {
+        self.count();
+        self.tree.lookup(loc).map(|i| self.tree.node(i).rank)
+    }
+
+    /// UID of the grid at `loc`.
+    pub fn uid_of(&self, loc: LocCode) -> Option<Uid> {
+        self.count();
+        self.tree.lookup(loc).map(|i| self.tree.node(i).uid())
+    }
+
+    /// Resolve the face neighbour of node `idx` for the ghost-layer update.
+    ///
+    /// With 2:1 balance the answer is exactly one of: domain boundary, a
+    /// same-level node (leaf or not — interior nodes carry restricted data),
+    /// a one-coarser leaf, or the 4 face-touching children of a same-level
+    /// node that is refined.
+    pub fn neighbour(&self, idx: u32, face: Face) -> Neighbour {
+        self.count();
+        let node = self.tree.node(idx);
+        let d = node.depth();
+        let (i, j, k) = node.loc.coords();
+        let mut c = [i as i64, j as i64, k as i64];
+        c[face.axis()] += face.dir();
+        let side = 1i64 << d;
+        if c[face.axis()] < 0 || c[face.axis()] >= side {
+            return Neighbour::Boundary;
+        }
+        let (ni, nj, nk) = (c[0] as u32, c[1] as u32, c[2] as u32);
+        if let Some(nb) = self
+            .tree
+            .lookup(LocCode::from_coords(d, ni, nj, nk).unwrap())
+        {
+            let nbn = self.tree.node(nb);
+            // Same-level exchange whenever the neighbour exists at our level
+            // and either side still carries authoritative data there: leaves
+            // exchange with leaves, and interior nodes exchange with interior
+            // nodes level-by-level (they hold the restricted averages).
+            if nbn.is_leaf() || !self.tree.node(idx).is_leaf() {
+                return Neighbour::Same { idx: nb };
+            }
+            // This node is a leaf but the neighbour is refined: the ghost
+            // layer comes from the 4 children touching the shared face
+            // (their face is the opposite one).
+            let mut kids = [0u32; 4];
+            let mut n = 0;
+            for &ch in &nbn.children {
+                if self.child_touches_face(ch, face.opposite()) {
+                    kids[n] = ch;
+                    n += 1;
+                }
+            }
+            debug_assert_eq!(n, 4);
+            return Neighbour::Finer { idx: kids };
+        }
+        // No same-level node: walk up — with 2:1 balance the parent level
+        // must contain it.
+        if d == 0 {
+            return Neighbour::Boundary;
+        }
+        if let Some(loc) = LocCode::from_coords(d - 1, ni / 2, nj / 2, nk / 2) {
+            if let Some(nb) = self.tree.lookup(loc) {
+                return Neighbour::Coarser { idx: nb };
+            }
+        }
+        Neighbour::Boundary
+    }
+
+    /// Does child node `ch` touch `face` of its parent?
+    fn child_touches_face(&self, ch: u32, face: Face) -> bool {
+        let oct = self.tree.node(ch).loc.octant();
+        let bit = (oct >> (2 - face.axis())) & 1;
+        (face.dir() < 0 && bit == 0) || (face.dir() > 0 && bit == 1)
+    }
+
+    /// Sliding-window region query (paper §2.3, §3.2): descend from the root
+    /// and return the deepest set of grids that (a) intersect `window` and
+    /// (b) number at most `budget` — "the finest possible resolution fitting
+    /// into a given limit of bandwidth and visualisation window".
+    ///
+    /// Returned indices form a non-overlapping cover of the window at a
+    /// single resolution per subtree (coarser where descent would burst the
+    /// budget).
+    pub fn select_window(&self, window: &BBox, budget: usize) -> Vec<u32> {
+        self.count();
+        let mut current: Vec<u32> = if self.tree.node(0).bbox.intersects(window) {
+            vec![0]
+        } else {
+            Vec::new()
+        };
+        loop {
+            // try to descend one level everywhere possible
+            let mut next = Vec::with_capacity(current.len() * 4);
+            let mut descended = false;
+            for &idx in &current {
+                let n = self.tree.node(idx);
+                if n.is_leaf() {
+                    next.push(idx);
+                } else {
+                    let kids: Vec<u32> = n
+                        .children
+                        .iter()
+                        .copied()
+                        .filter(|&c| self.tree.node(c).bbox.intersects(window))
+                        .collect();
+                    if kids.is_empty() {
+                        next.push(idx);
+                    } else {
+                        descended = true;
+                        next.extend(kids);
+                    }
+                }
+            }
+            if !descended || next.len() > budget {
+                return current;
+            }
+            current = next;
+        }
+    }
+
+    /// All ranks owning grids in `sel` (deduplicated) — step (3) of the
+    /// sliding-window query, informing the computational processes.
+    pub fn ranks_of(&self, sel: &[u32]) -> Vec<u32> {
+        let mut ranks: Vec<u32> = sel.iter().map(|&i| self.tree.node(i).rank).collect();
+        ranks.sort_unstable();
+        ranks.dedup();
+        ranks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::sfc;
+
+    fn server(depth: u32, ranks: u32) -> NeighbourhoodServer {
+        let mut t = SpaceTree::full(BBox::unit(), depth);
+        sfc::partition(&mut t, ranks);
+        NeighbourhoodServer::new(t)
+    }
+
+    #[test]
+    fn boundary_detected() {
+        let s = server(1, 1);
+        let idx = s.tree.lookup(LocCode::ROOT.child(0)).unwrap();
+        assert_eq!(s.neighbour(idx, Face::XM), Neighbour::Boundary);
+        assert_eq!(s.neighbour(idx, Face::YM), Neighbour::Boundary);
+        assert!(matches!(s.neighbour(idx, Face::XP), Neighbour::Same { .. }));
+    }
+
+    #[test]
+    fn same_level_neighbour_coords() {
+        let s = server(2, 1);
+        let a = s
+            .tree
+            .lookup(LocCode::from_coords(2, 1, 2, 3).unwrap())
+            .unwrap();
+        match s.neighbour(a, Face::XP) {
+            Neighbour::Same { idx } => {
+                assert_eq!(s.tree.node(idx).loc.coords(), (2, 2, 3));
+            }
+            other => panic!("expected Same, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn root_has_no_neighbours() {
+        let s = server(0, 1);
+        for f in ALL_FACES {
+            assert_eq!(s.neighbour(0, f), Neighbour::Boundary);
+        }
+    }
+
+    #[test]
+    fn finer_neighbour_returns_face_children() {
+        // adaptive: one child of root refined, its sibling sees Finer
+        let mut t = SpaceTree::root_only(BBox::unit());
+        t.refine(0);
+        let c0 = t.lookup(LocCode::ROOT.child(0)).unwrap();
+        t.refine(c0);
+        sfc::partition(&mut t, 1);
+        let s = NeighbourhoodServer::new(t);
+        let c4 = s.tree.lookup(LocCode::ROOT.child(0b100)).unwrap(); // +x sibling
+        match s.neighbour(c4, Face::XM) {
+            Neighbour::Finer { idx } => {
+                // all four children returned touch the +x face of c0
+                for ch in idx {
+                    let oct = s.tree.node(ch).loc.octant();
+                    assert_eq!((oct >> 2) & 1, 1);
+                }
+            }
+            other => panic!("expected Finer, got {other:?}"),
+        }
+        // and the refined child sees its coarser sibling ... at same level
+        let c0_again = s.tree.lookup(LocCode::ROOT.child(0)).unwrap();
+        assert!(matches!(
+            s.neighbour(c0_again, Face::XP),
+            Neighbour::Same { .. }
+        ));
+    }
+
+    #[test]
+    fn coarser_neighbour_across_refinement_edge() {
+        let mut t = SpaceTree::root_only(BBox::unit());
+        t.refine(0);
+        let c0 = t.lookup(LocCode::ROOT.child(0)).unwrap();
+        t.refine(c0);
+        sfc::partition(&mut t, 1);
+        let s = NeighbourhoodServer::new(t);
+        // a depth-2 grid at the +x face of c0 looks right into the coarser c4
+        let g = s
+            .tree
+            .lookup(LocCode::from_coords(2, 1, 0, 0).unwrap())
+            .unwrap();
+        match s.neighbour(g, Face::XP) {
+            Neighbour::Coarser { idx } => {
+                assert_eq!(s.tree.node(idx).loc, LocCode::ROOT.child(0b100));
+            }
+            other => panic!("expected Coarser, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn owner_queries() {
+        let s = server(2, 8);
+        let loc = LocCode::from_coords(2, 3, 3, 3).unwrap();
+        let idx = s.tree.lookup(loc).unwrap();
+        assert_eq!(s.owner_of(loc), Some(s.tree.node(idx).rank));
+        assert_eq!(s.uid_of(loc).unwrap().loc(), loc);
+        assert!(s.owner_of(LocCode::from_coords(3, 0, 0, 0).unwrap()).is_none());
+        assert!(s.query_count() >= 3);
+    }
+
+    #[test]
+    fn window_full_domain_coarse() {
+        let s = server(3, 4);
+        // budget 1: only the root fits
+        let sel = s.select_window(&BBox::unit(), 1);
+        assert_eq!(sel, vec![0]);
+        // budget 8: exactly depth 1
+        let sel = s.select_window(&BBox::unit(), 8);
+        assert_eq!(sel.len(), 8);
+        assert!(sel.iter().all(|&i| s.tree.node(i).depth() == 1));
+    }
+
+    #[test]
+    fn window_zoom_increases_detail() {
+        let s = server(3, 4);
+        let small = BBox {
+            min: [0.0; 3],
+            max: [0.3, 0.3, 0.3],
+        };
+        let sel = s.select_window(&small, 64);
+        // a small window with the same budget reaches deeper levels
+        assert!(sel.iter().all(|&i| s.tree.node(i).bbox.intersects(&small)));
+        let max_d = sel.iter().map(|&i| s.tree.node(i).depth()).max().unwrap();
+        assert!(max_d >= 2, "window should zoom to depth ≥ 2, got {max_d}");
+    }
+
+    #[test]
+    fn window_budget_respected() {
+        let s = server(3, 4);
+        for budget in [1usize, 7, 8, 9, 63, 64, 65, 512] {
+            let sel = s.select_window(&BBox::unit(), budget);
+            assert!(sel.len() <= budget.max(1), "budget {budget}: {}", sel.len());
+        }
+    }
+
+    #[test]
+    fn window_outside_domain_empty() {
+        let s = server(2, 1);
+        let far = BBox {
+            min: [2.0; 3],
+            max: [3.0; 3],
+        };
+        assert!(s.select_window(&far, 100).is_empty());
+    }
+
+    #[test]
+    fn ranks_of_dedupes() {
+        let s = server(2, 4);
+        let sel = s.select_window(&BBox::unit(), 64);
+        let ranks = s.ranks_of(&sel);
+        let mut sorted = ranks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(ranks, sorted);
+    }
+}

@@ -1,0 +1,333 @@
+//! **pario** — the MPI-IO-like parallel I/O middleware with collective
+//! buffering (two-phase I/O).
+//!
+//! This is the layer between the I/O kernel and the file format, playing
+//! the role ROMIO/MPI-IO plays under Parallel HDF5 (paper §3, §5.2):
+//!
+//! * every logical rank contributes hyperslab writes (a dataset, a row
+//!   range, bytes);
+//! * with **collective buffering** on, ranks are grouped onto *aggregators*
+//!   (the bridge nodes of §5.2); each aggregator concatenates its ranks'
+//!   slabs — a real memcpy "fill" phase — merges adjacent row ranges into
+//!   few large contiguous operations, and streams them to the file from its
+//!   own thread;
+//! * with collective buffering off, every rank issues its own small write
+//!   ops directly (the paper's "severe contention" baseline);
+//! * with **file locking** on, a global lock serialises every write op —
+//!   the real wall-clock effect of GPFS's conservative byte-range locking
+//!   that the paper disables (safe because hyperslabs are disjoint).
+//!
+//! Every collective write returns an [`IoReport`] with both the *real*
+//! measured duration/op-counts on this host and the *modelled* duration on
+//! the target [`Machine`] (how long the same byte/op pattern would take on
+//! JuQueen/SuperMUC) — benches report the modelled number, EXPERIMENTS.md
+//! records both.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cluster::{IoEstimate, IoTuning, Machine, WriteWorkload};
+use crate::h5lite::{Dataset, H5File};
+use crate::util::parallel_for;
+
+/// One rank's contribution to a collective dataset write.
+pub struct SlabWrite<'a> {
+    pub rank: u32,
+    pub ds: &'a Dataset,
+    pub row_start: u64,
+    pub data: &'a [u8],
+}
+
+/// Outcome of one collective write: real measurement + machine model.
+#[derive(Clone, Copy, Debug)]
+pub struct IoReport {
+    /// Wall-clock seconds of the real file I/O on this host.
+    pub real_seconds: f64,
+    /// Real bandwidth achieved on this host (bytes/s).
+    pub real_bandwidth: f64,
+    /// Payload bytes written.
+    pub bytes: u64,
+    /// Physical write ops issued after merging.
+    pub write_ops: u64,
+    /// Modelled cost on the target machine.
+    pub modelled: IoEstimate,
+}
+
+/// The parallel I/O driver. `n_ranks` is the logical process count (the
+/// scale the machine model prices); the real work is spread over this
+/// host's cores, one thread per aggregator.
+pub struct ParallelIo {
+    pub machine: Machine,
+    pub tuning: IoTuning,
+    pub n_ranks: u64,
+    /// Global lock used when `tuning.file_locking` (GPFS token stand-in).
+    lock: Mutex<()>,
+}
+
+/// An op the fill phase produced: contiguous rows of one dataset.
+struct MergedOp {
+    ds_offset: u64,
+    row_bytes: u64,
+    row_start: u64,
+    data: Vec<u8>,
+}
+
+impl ParallelIo {
+    pub fn new(machine: Machine, tuning: IoTuning, n_ranks: u64) -> ParallelIo {
+        ParallelIo {
+            machine,
+            tuning,
+            n_ranks,
+            lock: Mutex::new(()),
+        }
+    }
+
+    /// Number of aggregators this driver will use.
+    pub fn aggregators(&self) -> u64 {
+        if self.tuning.collective_buffering {
+            self.machine.aggregators(self.n_ranks)
+        } else {
+            self.n_ranks
+        }
+    }
+
+    /// Perform a collective write of many hyperslabs, two-phase when
+    /// collective buffering is enabled. `n_datasets`/`n_grids` feed the
+    /// machine model (they describe the whole snapshot this write belongs
+    /// to).
+    pub fn collective_write(
+        &self,
+        file: &H5File,
+        writes: &[SlabWrite],
+        n_datasets: u64,
+        n_grids: u64,
+    ) -> Result<IoReport> {
+        let t0 = Instant::now();
+        let bytes: u64 = writes.iter().map(|w| w.data.len() as u64).sum();
+
+        // --- phase 1: fill aggregator buffers (real memcpy) -------------
+        let aggs = self.aggregators().max(1);
+        let mut per_agg: Vec<Vec<&SlabWrite>> = (0..aggs).map(|_| Vec::new()).collect();
+        for w in writes {
+            let a = (w.rank as u64 * aggs / self.n_ranks.max(1)).min(aggs - 1);
+            per_agg[a as usize].push(w);
+        }
+        let merged: Vec<Vec<MergedOp>> = per_agg
+            .iter()
+            .map(|slabs| {
+                let mut sorted: Vec<&&SlabWrite> = slabs.iter().collect();
+                sorted.sort_by_key(|w| (w.ds.offset, w.row_start));
+                let mut ops: Vec<MergedOp> = Vec::new();
+                for w in sorted {
+                    let rb = w.ds.row_bytes();
+                    let rows = w.data.len() as u64 / rb.max(1);
+                    match ops.last_mut() {
+                        Some(last)
+                            if self.tuning.collective_buffering
+                                && last.ds_offset == w.ds.offset
+                                && last.row_start + last.data.len() as u64 / rb.max(1)
+                                    == w.row_start =>
+                        {
+                            // contiguous with previous slab: one big op
+                            last.data.extend_from_slice(w.data);
+                        }
+                        _ => ops.push(MergedOp {
+                            ds_offset: w.ds.offset,
+                            row_bytes: rb,
+                            row_start: w.row_start,
+                            data: w.data.to_vec(),
+                        }),
+                    }
+                    let _ = rows;
+                }
+                ops
+            })
+            .collect();
+
+        // --- phase 2: stream to the file, one thread per aggregator -----
+        let write_ops: u64 = merged.iter().map(|ops| ops.len() as u64).sum();
+        let errors = Mutex::new(Vec::new());
+        parallel_for(merged.len(), |a| {
+            for op in &merged[a] {
+                let guard = if self.tuning.file_locking {
+                    Some(self.lock.lock().unwrap())
+                } else {
+                    None
+                };
+                // reconstruct a dataset view for positional row writes
+                let ds = Dataset {
+                    dtype: crate::h5lite::Dtype::U8,
+                    shape: vec![u64::MAX / op.row_bytes.max(1), op.row_bytes],
+                    offset: op.ds_offset,
+                };
+                if let Err(e) = file.write_rows(&ds, op.row_start, &op.data) {
+                    errors.lock().unwrap().push(e);
+                }
+                drop(guard);
+            }
+        });
+        if let Some(e) = errors.into_inner().unwrap().pop() {
+            return Err(e);
+        }
+
+        let real_seconds = t0.elapsed().as_secs_f64().max(1e-9);
+        let modelled = self.machine.estimate_write(
+            &WriteWorkload {
+                ranks: self.n_ranks,
+                total_bytes: bytes,
+                n_datasets,
+                n_grids,
+            },
+            &self.tuning,
+        );
+        Ok(IoReport {
+            real_seconds,
+            real_bandwidth: bytes as f64 / real_seconds,
+            bytes,
+            write_ops,
+            modelled,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::h5lite::{codec, Dtype};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("pario_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    fn make_writes<'a>(
+        ds: &'a Dataset,
+        bufs: &'a [Vec<u8>],
+        rows_per_rank: u64,
+    ) -> Vec<SlabWrite<'a>> {
+        bufs.iter()
+            .enumerate()
+            .map(|(r, b)| SlabWrite {
+                rank: r as u32,
+                ds,
+                row_start: r as u64 * rows_per_rank,
+                data: b,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn collective_write_lands_all_bytes() {
+        let p = tmp("all");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f.create_dataset("/g", "d", Dtype::U64, &[32, 2]).unwrap();
+        let bufs: Vec<Vec<u8>> = (0..8u64)
+            .map(|r| codec::u64s_to_bytes(&(0..8).map(|i| r * 100 + i).collect::<Vec<_>>()))
+            .collect();
+        let writes = make_writes(&ds, &bufs, 4);
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 8);
+        let rep = io.collective_write(&f, &writes, 1, 32).unwrap();
+        assert_eq!(rep.bytes, 8 * 8 * 8);
+        let all = f.read_all_u64(&ds).unwrap();
+        assert_eq!(all[0], 0);
+        assert_eq!(all[8], 100);
+        assert_eq!(all[63], 707);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn merging_reduces_write_ops() {
+        let p = tmp("merge");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f.create_dataset("/g", "d", Dtype::U8, &[64, 4]).unwrap();
+        let bufs: Vec<Vec<u8>> = (0..16).map(|r| vec![r as u8; 16]).collect();
+        let writes = make_writes(&ds, &bufs, 4);
+        // collective: 16 contiguous rank slabs merge into few agg-sized ops
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 16);
+        let rep = io.collective_write(&f, &writes, 1, 64).unwrap();
+        assert!(rep.write_ops <= io.aggregators());
+        // independent: one op per rank slab
+        let io2 = ParallelIo::new(
+            Machine::local(),
+            IoTuning {
+                collective_buffering: false,
+                ..IoTuning::default()
+            },
+            16,
+        );
+        let rep2 = io2.collective_write(&f, &writes, 1, 64).unwrap();
+        assert_eq!(rep2.write_ops, 16);
+        assert!(rep.write_ops < rep2.write_ops);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn disjoint_slabs_same_dataset_correct_under_locking() {
+        let p = tmp("lock");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f.create_dataset("/g", "d", Dtype::U8, &[128, 8]).unwrap();
+        let bufs: Vec<Vec<u8>> = (0..32).map(|r| vec![r as u8; 32]).collect();
+        let writes = make_writes(&ds, &bufs, 4);
+        let io = ParallelIo::new(
+            Machine::local(),
+            IoTuning {
+                file_locking: true,
+                ..IoTuning::default()
+            },
+            32,
+        );
+        io.collective_write(&f, &writes, 1, 128).unwrap();
+        let back = f.read_rows(&ds, 0, 128).unwrap();
+        for r in 0..32usize {
+            assert!(back[r * 32..(r + 1) * 32].iter().all(|&b| b == r as u8));
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn multi_dataset_writes_do_not_merge_across_datasets() {
+        let p = tmp("multids");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let d1 = f.create_dataset("/g", "a", Dtype::U8, &[8, 4]).unwrap();
+        let d2 = f.create_dataset("/g", "b", Dtype::U8, &[8, 4]).unwrap();
+        let b1 = vec![1u8; 32];
+        let b2 = vec![2u8; 32];
+        let writes = vec![
+            SlabWrite {
+                rank: 0,
+                ds: &d1,
+                row_start: 0,
+                data: &b1,
+            },
+            SlabWrite {
+                rank: 0,
+                ds: &d2,
+                row_start: 0,
+                data: &b2,
+            },
+        ];
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 1);
+        let rep = io.collective_write(&f, &writes, 2, 8).unwrap();
+        assert_eq!(rep.write_ops, 2);
+        assert!(f.read_rows(&d1, 0, 8).unwrap().iter().all(|&b| b == 1));
+        assert!(f.read_rows(&d2, 0, 8).unwrap().iter().all(|&b| b == 2));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn report_contains_model_estimate() {
+        let p = tmp("model");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f.create_dataset("/g", "d", Dtype::U8, &[16, 4]).unwrap();
+        let bufs: Vec<Vec<u8>> = (0..4).map(|_| vec![0u8; 16]).collect();
+        let writes = make_writes(&ds, &bufs, 4);
+        let io = ParallelIo::new(Machine::juqueen(), IoTuning::default(), 2048);
+        let rep = io.collective_write(&f, &writes, 7, 16).unwrap();
+        assert!(rep.modelled.seconds > 0.0);
+        assert!(rep.real_bandwidth > 0.0);
+        std::fs::remove_file(&p).ok();
+    }
+}

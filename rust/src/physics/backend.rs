@@ -1,0 +1,361 @@
+//! The compute-backend abstraction.
+//!
+//! The solver and coordinator are written against [`ComputeBackend`], with
+//! two implementations:
+//!
+//! * [`RustBackend`] — the pure-Rust kernels from [`super`] applied per
+//!   block (thread-parallel across the batch via
+//!   [`crate::util::parallel_for`]). Always available; the test oracle.
+//! * [`crate::runtime::PjrtBackend`] — executes the AOT-lowered Pallas/JAX
+//!   artifacts through the PJRT CPU client. The production path.
+//!
+//! All methods operate on *batches* of d-grids flattened into contiguous
+//! `f32` slices: halo-padded inputs are `b · (N+2)³` long, interiors
+//! `b · N³`, with `N =` [`crate::DGRID_N`] fixed by the artifacts.
+
+use super::{
+    correct_block, divergence_block, int_len, jacobi_block, pad_len, predictor_block,
+    residual_block, restrict_block, Params,
+};
+use crate::util::{parallel_for, SendPtr};
+use crate::DGRID_N;
+
+/// Convenience bundle of batch geometry (sizes in `f32` elements).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchViews {
+    pub b: usize,
+    pub padded: usize,
+    pub interior: usize,
+}
+
+impl BatchViews {
+    pub fn new(b: usize) -> BatchViews {
+        BatchViews {
+            b,
+            padded: pad_len(DGRID_N),
+            interior: int_len(DGRID_N),
+        }
+    }
+}
+
+/// Backend-neutral interface to the six AOT entry points.
+pub trait ComputeBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// The batch size this backend prefers (callers pad to a multiple).
+    fn preferred_batch(&self) -> usize;
+
+    /// One Jacobi sweep over `b` blocks.
+    fn jacobi(&self, b: usize, p: &[f32], rhs: &[f32], par: &Params, out: &mut [f32]);
+
+    /// Residual field + per-block Σr².
+    fn residual(
+        &self,
+        b: usize,
+        p: &[f32],
+        rhs: &[f32],
+        par: &Params,
+        r: &mut [f32],
+        ssq: &mut [f32],
+    );
+
+    /// PPE right-hand side from the tentative velocity.
+    fn divergence(&self, b: usize, u: &[f32], v: &[f32], w: &[f32], par: &Params, out: &mut [f32]);
+
+    /// Projection: corrected velocity = tentative − (dt/ρ)∇p.
+    #[allow(clippy::too_many_arguments)]
+    fn correct(
+        &self,
+        b: usize,
+        u: &[f32],
+        v: &[f32],
+        w: &[f32],
+        p: &[f32],
+        par: &Params,
+        uo: &mut [f32],
+        vo: &mut [f32],
+        wo: &mut [f32],
+    );
+
+    /// Fused tentative-velocity + energy update.
+    #[allow(clippy::too_many_arguments)]
+    fn predictor(
+        &self,
+        b: usize,
+        u: &[f32],
+        v: &[f32],
+        w: &[f32],
+        t: &[f32],
+        par: &Params,
+        uo: &mut [f32],
+        vo: &mut [f32],
+        wo: &mut [f32],
+        to: &mut [f32],
+    );
+
+    /// Full-weighting 2× restriction of `b` interiors (N³ → (N/2)³ each).
+    fn restrict(&self, b: usize, fine: &[f32], out: &mut [f32]);
+}
+
+/// Pure-Rust backend; thread-parallel across blocks in a batch.
+#[derive(Debug, Default, Clone)]
+pub struct RustBackend;
+
+impl ComputeBackend for RustBackend {
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+
+    fn preferred_batch(&self) -> usize {
+        32
+    }
+
+    fn jacobi(&self, b: usize, p: &[f32], rhs: &[f32], par: &Params, out: &mut [f32]) {
+        let v = BatchViews::new(b);
+        let optr = SendPtr::new(out);
+        parallel_for(b, |i| {
+            let o = unsafe { optr.slice(i * v.interior, v.interior) };
+            jacobi_block(
+                DGRID_N,
+                &p[i * v.padded..(i + 1) * v.padded],
+                &rhs[i * v.interior..(i + 1) * v.interior],
+                par,
+                o,
+            );
+        });
+    }
+
+    fn residual(
+        &self,
+        b: usize,
+        p: &[f32],
+        rhs: &[f32],
+        par: &Params,
+        r: &mut [f32],
+        ssq: &mut [f32],
+    ) {
+        let v = BatchViews::new(b);
+        let rptr = SendPtr::new(r);
+        let sptr = SendPtr::new(ssq);
+        parallel_for(b, |i| {
+            let ro = unsafe { rptr.slice(i * v.interior, v.interior) };
+            let so = unsafe { sptr.slice(i, 1) };
+            so[0] = residual_block(
+                DGRID_N,
+                &p[i * v.padded..(i + 1) * v.padded],
+                &rhs[i * v.interior..(i + 1) * v.interior],
+                par,
+                ro,
+            );
+        });
+    }
+
+    fn divergence(
+        &self,
+        b: usize,
+        u: &[f32],
+        v_: &[f32],
+        w: &[f32],
+        par: &Params,
+        out: &mut [f32],
+    ) {
+        let v = BatchViews::new(b);
+        let optr = SendPtr::new(out);
+        parallel_for(b, |i| {
+            let o = unsafe { optr.slice(i * v.interior, v.interior) };
+            divergence_block(
+                DGRID_N,
+                &u[i * v.padded..(i + 1) * v.padded],
+                &v_[i * v.padded..(i + 1) * v.padded],
+                &w[i * v.padded..(i + 1) * v.padded],
+                par,
+                o,
+            );
+        });
+    }
+
+    fn correct(
+        &self,
+        b: usize,
+        u: &[f32],
+        v_: &[f32],
+        w: &[f32],
+        p: &[f32],
+        par: &Params,
+        uo: &mut [f32],
+        vo: &mut [f32],
+        wo: &mut [f32],
+    ) {
+        let v = BatchViews::new(b);
+        uo.copy_from_slice(u);
+        vo.copy_from_slice(v_);
+        wo.copy_from_slice(w);
+        let uptr = SendPtr::new(uo);
+        let vptr = SendPtr::new(vo);
+        let wptr = SendPtr::new(wo);
+        parallel_for(b, |i| {
+            let a = unsafe { uptr.slice(i * v.interior, v.interior) };
+            let bq = unsafe { vptr.slice(i * v.interior, v.interior) };
+            let c = unsafe { wptr.slice(i * v.interior, v.interior) };
+            correct_block(DGRID_N, a, bq, c, &p[i * v.padded..(i + 1) * v.padded], par);
+        });
+    }
+
+    fn predictor(
+        &self,
+        b: usize,
+        u: &[f32],
+        v_: &[f32],
+        w: &[f32],
+        t: &[f32],
+        par: &Params,
+        uo: &mut [f32],
+        vo: &mut [f32],
+        wo: &mut [f32],
+        to: &mut [f32],
+    ) {
+        let v = BatchViews::new(b);
+        let uptr = SendPtr::new(uo);
+        let vptr = SendPtr::new(vo);
+        let wptr = SendPtr::new(wo);
+        let tptr = SendPtr::new(to);
+        parallel_for(b, |i| {
+            let a = unsafe { uptr.slice(i * v.interior, v.interior) };
+            let bq = unsafe { vptr.slice(i * v.interior, v.interior) };
+            let c = unsafe { wptr.slice(i * v.interior, v.interior) };
+            let d = unsafe { tptr.slice(i * v.interior, v.interior) };
+            predictor_block(
+                DGRID_N,
+                &u[i * v.padded..(i + 1) * v.padded],
+                &v_[i * v.padded..(i + 1) * v.padded],
+                &w[i * v.padded..(i + 1) * v.padded],
+                &t[i * v.padded..(i + 1) * v.padded],
+                par,
+                a,
+                bq,
+                c,
+                d,
+            );
+        });
+    }
+
+    fn restrict(&self, b: usize, fine: &[f32], out: &mut [f32]) {
+        let v = BatchViews::new(b);
+        let half = int_len(DGRID_N / 2);
+        let optr = SendPtr::new(out);
+        parallel_for(b, |i| {
+            let o = unsafe { optr.slice(i * half, half) };
+            restrict_block(DGRID_N, &fine[i * v.interior..(i + 1) * v.interior], o);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::physics::{int_len, pad_len};
+
+    fn rand_vec(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut v = vec![0.0f32; len];
+        rng.fill_f32(&mut v, -0.5, 0.5);
+        v
+    }
+
+    #[test]
+    fn batched_jacobi_matches_per_block() {
+        let b = 3;
+        let par = Params::isothermal(0.01, 0.1, 0.0);
+        let p = rand_vec(b * pad_len(DGRID_N), 1);
+        let rhs = rand_vec(b * int_len(DGRID_N), 2);
+        let be = RustBackend;
+        let mut out = vec![0.0; b * int_len(DGRID_N)];
+        be.jacobi(b, &p, &rhs, &par, &mut out);
+        for i in 0..b {
+            let mut single = vec![0.0; int_len(DGRID_N)];
+            crate::physics::jacobi_block(
+                DGRID_N,
+                &p[i * pad_len(DGRID_N)..(i + 1) * pad_len(DGRID_N)],
+                &rhs[i * int_len(DGRID_N)..(i + 1) * int_len(DGRID_N)],
+                &par,
+                &mut single,
+            );
+            assert_eq!(
+                &out[i * int_len(DGRID_N)..(i + 1) * int_len(DGRID_N)],
+                &single[..]
+            );
+        }
+    }
+
+    #[test]
+    fn batched_residual_ssq_positive() {
+        let b = 2;
+        let par = Params::isothermal(0.01, 0.1, 0.0);
+        let p = rand_vec(b * pad_len(DGRID_N), 5);
+        let rhs = rand_vec(b * int_len(DGRID_N), 6);
+        let be = RustBackend;
+        let mut r = vec![0.0; b * int_len(DGRID_N)];
+        let mut ssq = vec![0.0; b];
+        be.residual(b, &p, &rhs, &par, &mut r, &mut ssq);
+        assert!(ssq.iter().all(|&s| s > 0.0));
+        let manual: f32 = r[..int_len(DGRID_N)].iter().map(|x| x * x).sum();
+        assert!((manual - ssq[0]).abs() / manual < 1e-4);
+    }
+
+    #[test]
+    fn batched_predictor_matches_single() {
+        let b = 2;
+        let par = Params {
+            dt: 0.01,
+            h: 0.1,
+            nu: 0.02,
+            alpha: 0.01,
+            beta_g: 0.3,
+            t_inf: 300.0,
+            q_int: 0.1,
+            rho: 1.0,
+            omega: 1.0,
+        };
+        let u = rand_vec(b * pad_len(DGRID_N), 10);
+        let v = rand_vec(b * pad_len(DGRID_N), 11);
+        let w = rand_vec(b * pad_len(DGRID_N), 12);
+        let t = rand_vec(b * pad_len(DGRID_N), 13);
+        let be = RustBackend;
+        let mut uo = vec![0.0; b * int_len(DGRID_N)];
+        let mut vo = vec![0.0; b * int_len(DGRID_N)];
+        let mut wo = vec![0.0; b * int_len(DGRID_N)];
+        let mut to = vec![0.0; b * int_len(DGRID_N)];
+        be.predictor(b, &u, &v, &w, &t, &par, &mut uo, &mut vo, &mut wo, &mut to);
+        // second block independently
+        let (mut u1, mut v1, mut w1, mut t1) = (
+            vec![0.0; int_len(DGRID_N)],
+            vec![0.0; int_len(DGRID_N)],
+            vec![0.0; int_len(DGRID_N)],
+            vec![0.0; int_len(DGRID_N)],
+        );
+        predictor_block(
+            DGRID_N,
+            &u[pad_len(DGRID_N)..],
+            &v[pad_len(DGRID_N)..],
+            &w[pad_len(DGRID_N)..],
+            &t[pad_len(DGRID_N)..],
+            &par,
+            &mut u1,
+            &mut v1,
+            &mut w1,
+            &mut t1,
+        );
+        assert_eq!(&uo[int_len(DGRID_N)..], &u1[..]);
+        assert_eq!(&to[int_len(DGRID_N)..], &t1[..]);
+    }
+
+    #[test]
+    fn batched_restrict_shape() {
+        let b = 4;
+        let be = RustBackend;
+        let fine = vec![2.0f32; b * int_len(DGRID_N)];
+        let mut out = vec![0.0f32; b * int_len(DGRID_N / 2)];
+        be.restrict(b, &fine, &mut out);
+        assert!(out.iter().all(|&x| (x - 2.0).abs() < 1e-6));
+    }
+}

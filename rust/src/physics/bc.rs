@@ -1,0 +1,333 @@
+//! Boundary conditions.
+//!
+//! Two mechanisms, both Rust-side (the kernels never see boundaries):
+//!
+//! * **Domain-face halo fills** — d-grids whose face lies on the physical
+//!   domain boundary get their ghost layer filled from a per-face,
+//!   per-variable boundary specification (Dirichlet / zero-gradient
+//!   Neumann). This is how channel inflow/outflow and wall conditions are
+//!   realised.
+//! * **Cell-type masks** — obstacle geometry (the Schäfer–Turek cylinder,
+//!   the operation theatre's lamps and bodies) is voxelised into
+//!   [`CellType`](crate::tree::dgrid::CellType) entries; after every update
+//!   solid cells are reset (no-slip velocity, frozen temperature), which is
+//!   the steering hook for "moving geometry" commands.
+
+
+use crate::nbs::Face;
+use crate::tree::dgrid::{iidx, pidx, CellType, DGrid, FieldSet, NPAD};
+use crate::{var, DGRID_N, NVAR};
+
+/// Boundary condition for one variable on one domain face.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum VarBc {
+    /// Ghost set so the face value equals the given constant
+    /// (`ghost = 2·value − interior`).
+    Dirichlet(f32),
+    /// Zero gradient: `ghost = interior`.
+    Neumann,
+}
+
+/// Boundary conditions for all [`NVAR`] variables on one face.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaceBc {
+    pub per_var: [VarBc; NVAR],
+}
+
+impl FaceBc {
+    /// No-slip adiabatic wall: velocities 0, pressure & temperature Neumann.
+    pub fn wall() -> FaceBc {
+        let mut per_var = [VarBc::Neumann; NVAR];
+        per_var[var::U] = VarBc::Dirichlet(0.0);
+        per_var[var::V] = VarBc::Dirichlet(0.0);
+        per_var[var::W] = VarBc::Dirichlet(0.0);
+        FaceBc { per_var }
+    }
+
+    /// Velocity inflow along +x with speed `u_in` at temperature `t_in`.
+    pub fn inflow(u_in: f32, t_in: f32) -> FaceBc {
+        let mut per_var = [VarBc::Neumann; NVAR];
+        per_var[var::U] = VarBc::Dirichlet(u_in);
+        per_var[var::V] = VarBc::Dirichlet(0.0);
+        per_var[var::W] = VarBc::Dirichlet(0.0);
+        per_var[var::T] = VarBc::Dirichlet(t_in);
+        FaceBc { per_var }
+    }
+
+    /// Zero-gradient outflow with fixed reference pressure.
+    pub fn outflow() -> FaceBc {
+        let mut per_var = [VarBc::Neumann; NVAR];
+        per_var[var::P] = VarBc::Dirichlet(0.0);
+        FaceBc { per_var }
+    }
+
+    /// Isothermal no-slip wall at temperature `t`.
+    pub fn wall_at(t: f32) -> FaceBc {
+        let mut f = FaceBc::wall();
+        f.per_var[var::T] = VarBc::Dirichlet(t);
+        f
+    }
+}
+
+/// Per-face boundary specification for the whole domain.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DomainBc {
+    /// Indexed by `Face as usize` in [XM, XP, YM, YP, ZM, ZP] order.
+    pub faces: [FaceBc; 6],
+}
+
+impl DomainBc {
+    pub fn all_walls() -> DomainBc {
+        DomainBc {
+            faces: [FaceBc::wall(); 6],
+        }
+    }
+
+    /// Channel along x: inflow at x⁻, outflow at x⁺, walls elsewhere.
+    pub fn channel(u_in: f32, t_in: f32) -> DomainBc {
+        let mut faces = [FaceBc::wall(); 6];
+        faces[Face::XM as usize] = FaceBc::inflow(u_in, t_in);
+        faces[Face::XP as usize] = FaceBc::outflow();
+        DomainBc { faces }
+    }
+
+    pub fn face(&self, f: Face) -> &FaceBc {
+        &self.faces[f as usize]
+    }
+
+    pub fn face_mut(&mut self, f: Face) -> &mut FaceBc {
+        &mut self.faces[f as usize]
+    }
+}
+
+/// Iterate the halo cells of `face` together with their adjacent interior
+/// cells, calling `f(ghost_idx, interior_idx)`.
+fn for_face_pairs(face: Face, mut f: impl FnMut(usize, usize)) {
+    let n = DGRID_N;
+    let (g, i1) = match face.dir() {
+        -1 => (0usize, 1usize),
+        _ => (NPAD - 1, NPAD - 2),
+    };
+    for a in 0..NPAD {
+        for b in 0..NPAD {
+            let (gi, ii_) = match face.axis() {
+                0 => (pidx(g, a, b), pidx(i1, a, b)),
+                1 => (pidx(a, g, b), pidx(a, i1, b)),
+                _ => (pidx(a, b, g), pidx(a, b, i1)),
+            };
+            f(gi, ii_);
+        }
+    }
+    let _ = n;
+}
+
+/// Fill the ghost layer of `face` on every variable of `fs` according to
+/// the face's boundary specification.
+pub fn apply_face_bc(fs: &mut FieldSet, face: Face, bc: &FaceBc) {
+    for (v, spec) in bc.per_var.iter().enumerate() {
+        let field = fs.var_mut(v);
+        match spec {
+            VarBc::Dirichlet(val) => {
+                for_face_pairs(face, |g, i| field[g] = 2.0 * val - field[i]);
+            }
+            VarBc::Neumann => {
+                for_face_pairs(face, |g, i| field[g] = field[i]);
+            }
+        }
+    }
+}
+
+/// Enforce solid-cell constraints on the *current* generation: no-slip
+/// velocity, temperature frozen at the previous value (heated solids were
+/// initialised to their fixed temperature and therefore stay there).
+pub fn apply_solid_mask(g: &mut DGrid) {
+    for i in 0..DGRID_N {
+        for j in 0..DGRID_N {
+            for k in 0..DGRID_N {
+                if g.cell_type(i, j, k).is_solid() {
+                    let p = pidx(i + 1, j + 1, k + 1);
+                    g.cur.var_mut(var::U)[p] = 0.0;
+                    g.cur.var_mut(var::V)[p] = 0.0;
+                    g.cur.var_mut(var::W)[p] = 0.0;
+                    let t_prev = g.prev.var(var::T)[p];
+                    g.cur.var_mut(var::T)[p] = t_prev;
+                }
+            }
+        }
+    }
+}
+
+/// Voxelise a solid sphere (cylinder in thin domains) into the cell types of
+/// a d-grid. `centre`/`radius` in physical coordinates; cells whose centre
+/// lies inside become `kind`. For heated solids the fixed temperature is
+/// written into all three field generations. Returns the number of cells
+/// marked.
+pub fn voxelise_sphere(
+    g: &mut DGrid,
+    bbox: &crate::tree::BBox,
+    centre: [f64; 3],
+    radius: f64,
+    kind: CellType,
+    temp: Option<f32>,
+    ignore_axis: Option<usize>,
+) -> usize {
+    let mut count = 0;
+    let h = [
+        bbox.extent(0) / DGRID_N as f64,
+        bbox.extent(1) / DGRID_N as f64,
+        bbox.extent(2) / DGRID_N as f64,
+    ];
+    for i in 0..DGRID_N {
+        for j in 0..DGRID_N {
+            for k in 0..DGRID_N {
+                let c = [
+                    bbox.min[0] + (i as f64 + 0.5) * h[0],
+                    bbox.min[1] + (j as f64 + 0.5) * h[1],
+                    bbox.min[2] + (k as f64 + 0.5) * h[2],
+                ];
+                let mut d2 = 0.0;
+                for a in 0..3 {
+                    if Some(a) == ignore_axis {
+                        continue;
+                    }
+                    d2 += (c[a] - centre[a]).powi(2);
+                }
+                if d2 <= radius * radius {
+                    g.cell_type[iidx(i, j, k)] = kind as u8;
+                    if let Some(t) = temp {
+                        let p = pidx(i + 1, j + 1, k + 1);
+                        g.cur.var_mut(var::T)[p] = t;
+                        g.prev.var_mut(var::T)[p] = t;
+                        g.temp.var_mut(var::T)[p] = t;
+                    }
+                    count += 1;
+                }
+            }
+        }
+    }
+    count
+}
+
+/// Clear all solid cells from a d-grid (used when steering moves geometry).
+pub fn clear_solids(g: &mut DGrid) {
+    for ct in g.cell_type.iter_mut() {
+        if CellType::from_u8(*ct).is_solid() {
+            *ct = CellType::Fluid as u8;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::uid::{LocCode, Uid};
+    use crate::tree::BBox;
+
+    fn grid() -> DGrid {
+        DGrid::new(Uid::new(0, 0, LocCode::ROOT))
+    }
+
+    #[test]
+    fn dirichlet_face_value_is_average() {
+        let mut g = grid();
+        for x in g.cur.var_mut(var::U).iter_mut() {
+            *x = 3.0;
+        }
+        apply_face_bc(&mut g.cur, Face::XM, &FaceBc::inflow(1.0, 300.0));
+        // ghost = 2*1 - 3 = -1 ⇒ face average (ghost+interior)/2 = 1
+        let ghost = g.cur.var(var::U)[pidx(0, 5, 5)];
+        let interior = g.cur.var(var::U)[pidx(1, 5, 5)];
+        assert_eq!((ghost + interior) / 2.0, 1.0);
+    }
+
+    #[test]
+    fn neumann_copies_interior() {
+        let mut g = grid();
+        g.cur.var_mut(var::P)[pidx(1, 4, 4)] = 7.0;
+        apply_face_bc(&mut g.cur, Face::XM, &FaceBc::wall());
+        assert_eq!(g.cur.var(var::P)[pidx(0, 4, 4)], 7.0);
+    }
+
+    #[test]
+    fn wall_noslip_zeroes_face_velocity() {
+        let mut g = grid();
+        for x in g.cur.var_mut(var::V).iter_mut() {
+            *x = 2.0;
+        }
+        apply_face_bc(&mut g.cur, Face::ZP, &FaceBc::wall());
+        let ghost = g.cur.var(var::V)[pidx(5, 5, NPAD - 1)];
+        let interior = g.cur.var(var::V)[pidx(5, 5, NPAD - 2)];
+        assert_eq!(ghost + interior, 0.0);
+    }
+
+    #[test]
+    fn solid_mask_zeroes_velocity_and_freezes_t() {
+        let mut g = grid();
+        g.set_cell_type(2, 2, 2, CellType::HeatedSolid);
+        let p = pidx(3, 3, 3);
+        g.prev.var_mut(var::T)[p] = 350.0;
+        g.cur.var_mut(var::T)[p] = 123.0;
+        g.cur.var_mut(var::U)[p] = 9.0;
+        apply_solid_mask(&mut g);
+        assert_eq!(g.cur.var(var::U)[p], 0.0);
+        assert_eq!(g.cur.var(var::T)[p], 350.0);
+    }
+
+    #[test]
+    fn voxelise_sphere_marks_cells_and_temperature() {
+        let mut g = grid();
+        let bbox = BBox::unit();
+        let n = voxelise_sphere(
+            &mut g,
+            &bbox,
+            [0.5, 0.5, 0.5],
+            0.2,
+            CellType::HeatedSolid,
+            Some(330.0),
+            None,
+        );
+        assert!(n > 0);
+        // centre cell marked
+        assert!(g.cell_type(8, 8, 8).is_solid());
+        assert_eq!(g.cur.var(var::T)[pidx(9, 9, 9)], 330.0);
+        // corner cell untouched
+        assert_eq!(g.cell_type(0, 0, 0), CellType::Fluid);
+    }
+
+    #[test]
+    fn voxelise_cylinder_ignores_axis() {
+        let mut g = grid();
+        let bbox = BBox::unit();
+        voxelise_sphere(
+            &mut g,
+            &bbox,
+            [0.5, 0.5, 0.0],
+            0.15,
+            CellType::Solid,
+            None,
+            Some(2),
+        );
+        // cylinder along z: both ends marked
+        assert!(g.cell_type(8, 8, 0).is_solid());
+        assert!(g.cell_type(8, 8, 15).is_solid());
+    }
+
+    #[test]
+    fn clear_solids_resets() {
+        let mut g = grid();
+        g.set_cell_type(1, 1, 1, CellType::Solid);
+        clear_solids(&mut g);
+        assert_eq!(g.cell_type(1, 1, 1), CellType::Fluid);
+    }
+
+    #[test]
+    fn channel_bc_layout() {
+        let bc = DomainBc::channel(1.5, 293.0);
+        assert_eq!(
+            bc.face(Face::XM).per_var[var::U],
+            VarBc::Dirichlet(1.5)
+        );
+        assert_eq!(bc.face(Face::XP).per_var[var::P], VarBc::Dirichlet(0.0));
+        assert_eq!(bc.face(Face::YM).per_var[var::U], VarBc::Dirichlet(0.0));
+    }
+}

@@ -1,0 +1,564 @@
+//! Pure-Rust reference implementation of the compute kernels.
+//!
+//! This is the Rust-side twin of `python/compile/kernels/ref.py` — the same
+//! discretisation (7-point Laplacian, donor-cell upwind advection, MAC
+//! divergence/gradient pair, explicit Euler) written as straightforward
+//! loops. It serves three purposes:
+//!
+//! 1. **Golden oracle**: the integration test `runtime_golden` checks the
+//!    AOT-compiled Pallas artifacts against these functions on identical
+//!    inputs — closing the L1↔L3 loop.
+//! 2. **Fallback backend**: every part of the system (solver, examples,
+//!    benches) runs without artifacts present, via
+//!    [`RustBackend`]; the PJRT backend in [`crate::runtime`] is selected
+//!    when artifacts are available.
+//! 3. **Boundary conditions**: cell-type masking and physical-boundary halo
+//!    fills live here (they are Rust-side concerns in the three-layer
+//!    split; the kernels only see fluid cells).
+
+pub mod backend;
+pub mod bc;
+
+
+pub use backend::{BatchViews, ComputeBackend, RustBackend};
+
+/// Scalar parameters shared by all kernels; the order of
+/// [`Params::to_vec`] matches `ref.py`'s packed vector.
+#[derive(Clone, Copy, Debug)]
+pub struct Params {
+    /// Time-step length.
+    pub dt: f32,
+    /// Grid spacing at the level being operated on.
+    pub h: f32,
+    /// Kinematic viscosity ν.
+    pub nu: f32,
+    /// Heat diffusion coefficient α = k/(ρ c_p).
+    pub alpha: f32,
+    /// Buoyancy factor β·g (Boussinesq, applied to w).
+    pub beta_g: f32,
+    /// Reference temperature T∞ of the undisturbed fluid.
+    pub t_inf: f32,
+    /// Internal heat generation q_int/(ρ c_p).
+    pub q_int: f32,
+    /// Fluid density ρ∞.
+    pub rho: f32,
+    /// Jacobi damping factor ω (1 = undamped; the multigrid smoother uses
+    /// 6/7 — undamped Jacobi does not smooth the 3-D 7-point Laplacian).
+    pub omega: f32,
+}
+
+impl Params {
+    /// Packed parameter vector in the layout `kernels/ref.py` fixes
+    /// (12 slots, the last three reserved).
+    pub fn to_vec(&self) -> [f32; 12] {
+        [
+            self.dt,
+            self.h,
+            self.nu,
+            self.alpha,
+            self.beta_g,
+            self.t_inf,
+            self.q_int,
+            self.rho,
+            self.omega,
+            0.0,
+            0.0,
+            0.0,
+        ]
+    }
+
+    /// Copy with a different grid spacing (multigrid level change).
+    pub fn at_h(&self, h: f32) -> Params {
+        Params { h, ..*self }
+    }
+
+    /// Neutral parameters for isothermal flow tests.
+    pub fn isothermal(dt: f32, h: f32, nu: f32) -> Params {
+        Params {
+            dt,
+            h,
+            nu,
+            alpha: 0.0,
+            beta_g: 0.0,
+            t_inf: 0.0,
+            q_int: 0.0,
+            rho: 1.0,
+            omega: 1.0,
+        }
+    }
+}
+
+/// Edge length helpers for a halo-padded block of interior size `n`.
+#[inline(always)]
+pub fn pad_len(n: usize) -> usize {
+    (n + 2) * (n + 2) * (n + 2)
+}
+
+#[inline(always)]
+pub fn int_len(n: usize) -> usize {
+    n * n * n
+}
+
+#[inline(always)]
+fn pi(n: usize, i: usize, j: usize, k: usize) -> usize {
+    (i * (n + 2) + j) * (n + 2) + k
+}
+
+#[inline(always)]
+fn ii(n: usize, i: usize, j: usize, k: usize) -> usize {
+    (i * n + j) * n + k
+}
+
+// ---------------------------------------------------------------------------
+// single-block kernels (shape (n+2)³ halo-padded in, n³ interior out)
+// ---------------------------------------------------------------------------
+
+/// One damped Jacobi sweep:
+/// `out = (1−ω)·p + ω·(Σ neighbours − h²·rhs)/6` (interior).
+pub fn jacobi_block(n: usize, p: &[f32], rhs: &[f32], par: &Params, out: &mut [f32]) {
+    let h2 = par.h * par.h;
+    let om = par.omega;
+    for i in 1..=n {
+        for j in 1..=n {
+            for k in 1..=n {
+                let nb = p[pi(n, i - 1, j, k)]
+                    + p[pi(n, i + 1, j, k)]
+                    + p[pi(n, i, j - 1, k)]
+                    + p[pi(n, i, j + 1, k)]
+                    + p[pi(n, i, j, k - 1)]
+                    + p[pi(n, i, j, k + 1)];
+                let sweep = (nb - h2 * rhs[ii(n, i - 1, j - 1, k - 1)]) / 6.0;
+                out[ii(n, i - 1, j - 1, k - 1)] =
+                    (1.0 - om) * p[pi(n, i, j, k)] + om * sweep;
+            }
+        }
+    }
+}
+
+/// PPE residual `r = rhs − ∇²p`; returns Σ r² over the block.
+pub fn residual_block(n: usize, p: &[f32], rhs: &[f32], par: &Params, r: &mut [f32]) -> f32 {
+    let h2 = par.h * par.h;
+    let mut ssq = 0.0f32;
+    for i in 1..=n {
+        for j in 1..=n {
+            for k in 1..=n {
+                let nb = p[pi(n, i - 1, j, k)]
+                    + p[pi(n, i + 1, j, k)]
+                    + p[pi(n, i, j - 1, k)]
+                    + p[pi(n, i, j + 1, k)]
+                    + p[pi(n, i, j, k - 1)]
+                    + p[pi(n, i, j, k + 1)];
+                let lap = (nb - 6.0 * p[pi(n, i, j, k)]) / h2;
+                let idx = ii(n, i - 1, j - 1, k - 1);
+                let rv = rhs[idx] - lap;
+                r[idx] = rv;
+                ssq += rv * rv;
+            }
+        }
+    }
+    ssq
+}
+
+/// MAC divergence rhs: `(ρ/dt)·(backward differences of u,v,w)/h`.
+pub fn divergence_block(
+    n: usize,
+    u: &[f32],
+    v: &[f32],
+    w: &[f32],
+    par: &Params,
+    out: &mut [f32],
+) {
+    let c = par.rho / (par.dt * par.h);
+    for i in 1..=n {
+        for j in 1..=n {
+            for k in 1..=n {
+                let du = u[pi(n, i, j, k)] - u[pi(n, i - 1, j, k)];
+                let dv = v[pi(n, i, j, k)] - v[pi(n, i, j - 1, k)];
+                let dw = w[pi(n, i, j, k)] - w[pi(n, i, j, k - 1)];
+                out[ii(n, i - 1, j - 1, k - 1)] = c * (du + dv + dw);
+            }
+        }
+    }
+}
+
+/// MAC projection: `q -= (dt/ρ)·(forward pressure difference)/h`.
+/// `u, v, w` are interiors; `p` is halo-padded.
+pub fn correct_block(
+    n: usize,
+    u: &mut [f32],
+    v: &mut [f32],
+    w: &mut [f32],
+    p: &[f32],
+    par: &Params,
+) {
+    let c = par.dt / (par.rho * par.h);
+    for i in 1..=n {
+        for j in 1..=n {
+            for k in 1..=n {
+                let pc = p[pi(n, i, j, k)];
+                let idx = ii(n, i - 1, j - 1, k - 1);
+                u[idx] -= c * (p[pi(n, i + 1, j, k)] - pc);
+                v[idx] -= c * (p[pi(n, i, j + 1, k)] - pc);
+                w[idx] -= c * (p[pi(n, i, j, k + 1)] - pc);
+            }
+        }
+    }
+}
+
+#[inline(always)]
+fn upwind(n: usize, q: &[f32], vel: f32, h: f32, a: usize, b: usize, c: usize, axis: usize) -> f32 {
+    let (m, p) = match axis {
+        0 => (pi(n, a - 1, b, c), pi(n, a + 1, b, c)),
+        1 => (pi(n, a, b - 1, c), pi(n, a, b + 1, c)),
+        _ => (pi(n, a, b, c - 1), pi(n, a, b, c + 1)),
+    };
+    let qc = q[pi(n, a, b, c)];
+    if vel > 0.0 {
+        (qc - q[m]) / h
+    } else {
+        (q[p] - qc) / h
+    }
+}
+
+/// Fused predictor: tentative velocity (momentum eq.) + energy equation.
+#[allow(clippy::too_many_arguments)]
+pub fn predictor_block(
+    n: usize,
+    u: &[f32],
+    v: &[f32],
+    w: &[f32],
+    t: &[f32],
+    par: &Params,
+    uo: &mut [f32],
+    vo: &mut [f32],
+    wo: &mut [f32],
+    to: &mut [f32],
+) {
+    let h2 = par.h * par.h;
+    let lap = |q: &[f32], i: usize, j: usize, k: usize| {
+        (q[pi(n, i - 1, j, k)]
+            + q[pi(n, i + 1, j, k)]
+            + q[pi(n, i, j - 1, k)]
+            + q[pi(n, i, j + 1, k)]
+            + q[pi(n, i, j, k - 1)]
+            + q[pi(n, i, j, k + 1)]
+            - 6.0 * q[pi(n, i, j, k)])
+            / h2
+    };
+    for i in 1..=n {
+        for j in 1..=n {
+            for k in 1..=n {
+                let (uc, vc, wc, tc) = (
+                    u[pi(n, i, j, k)],
+                    v[pi(n, i, j, k)],
+                    w[pi(n, i, j, k)],
+                    t[pi(n, i, j, k)],
+                );
+                let adv = |q: &[f32]| {
+                    uc * upwind(n, q, uc, par.h, i, j, k, 0)
+                        + vc * upwind(n, q, vc, par.h, i, j, k, 1)
+                        + wc * upwind(n, q, wc, par.h, i, j, k, 2)
+                };
+                let idx = ii(n, i - 1, j - 1, k - 1);
+                uo[idx] = uc + par.dt * (par.nu * lap(u, i, j, k) - adv(u));
+                vo[idx] = vc + par.dt * (par.nu * lap(v, i, j, k) - adv(v));
+                wo[idx] = wc
+                    + par.dt
+                        * (par.nu * lap(w, i, j, k) - adv(w)
+                            + par.beta_g * (tc - par.t_inf));
+                to[idx] =
+                    tc + par.dt * (par.alpha * lap(t, i, j, k) - adv(t) + par.q_int);
+            }
+        }
+    }
+}
+
+/// Full-weighting restriction: average 2×2×2 fine cells. `fine` is an `n³`
+/// interior, `out` is `(n/2)³`.
+pub fn restrict_block(n: usize, fine: &[f32], out: &mut [f32]) {
+    let m = n / 2;
+    for i in 0..m {
+        for j in 0..m {
+            for k in 0..m {
+                let mut s = 0.0f32;
+                for (di, dj, dk) in itertools_cube() {
+                    s += fine[ii(n, 2 * i + di, 2 * j + dj, 2 * k + dk)];
+                }
+                out[(i * m + j) * m + k] = s / 8.0;
+            }
+        }
+    }
+}
+
+#[inline(always)]
+fn itertools_cube() -> [(usize, usize, usize); 8] {
+    [
+        (0, 0, 0),
+        (0, 0, 1),
+        (0, 1, 0),
+        (0, 1, 1),
+        (1, 0, 0),
+        (1, 0, 1),
+        (1, 1, 0),
+        (1, 1, 1),
+    ]
+}
+
+/// Piecewise-constant prolongation: inject each coarse cell of the `m³`
+/// octant `src` into 2×2×2 fine cells of the `n³` output (`n = 2m`),
+/// *adding* (multigrid coarse-level correction).
+pub fn prolong_add_block(m: usize, src: &[f32], out: &mut [f32]) {
+    let n = 2 * m;
+    for i in 0..m {
+        for j in 0..m {
+            for k in 0..m {
+                let c = src[(i * m + j) * m + k];
+                for (di, dj, dk) in itertools_cube() {
+                    out[ii(n, 2 * i + di, 2 * j + dj, 2 * k + dk)] += c;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(h: f32) -> Params {
+        Params {
+            dt: 0.01,
+            h,
+            nu: 0.02,
+            alpha: 0.01,
+            beta_g: 0.5,
+            t_inf: 300.0,
+            q_int: 0.0,
+            rho: 1.0,
+            omega: 1.0,
+        }
+    }
+
+    fn rand_field(len: usize, seed: u64) -> Vec<f32> {
+        // small deterministic LCG; no rand dependency needed here
+        let mut s = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        (0..len)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+            })
+            .collect()
+    }
+
+    #[test]
+    fn jacobi_constant_field_fixed_point() {
+        let n = 6;
+        let p = vec![2.5f32; pad_len(n)];
+        let rhs = vec![0.0f32; int_len(n)];
+        let mut out = vec![0.0f32; int_len(n)];
+        jacobi_block(n, &p, &rhs, &params(0.1), &mut out);
+        assert!(out.iter().all(|&x| (x - 2.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn residual_zero_when_laplacian_matches() {
+        // p linear in x ⇒ ∇²p = 0 ⇒ residual = rhs
+        let n = 6;
+        let par = params(0.25);
+        let mut p = vec![0.0f32; pad_len(n)];
+        for i in 0..n + 2 {
+            for j in 0..n + 2 {
+                for k in 0..n + 2 {
+                    p[pi(n, i, j, k)] = 3.0 * i as f32;
+                }
+            }
+        }
+        let rhs = vec![0.0f32; int_len(n)];
+        let mut r = vec![0.0f32; int_len(n)];
+        let ssq = residual_block(n, &p, &rhs, &par, &mut r);
+        assert!(ssq < 1e-6, "ssq={ssq}");
+    }
+
+    #[test]
+    fn mac_divergence_of_gradient_is_compact_laplacian() {
+        // the property that makes the projection exact: apply correct() to a
+        // zero velocity with pressure p, then divergence() must equal
+        // -(ρ/dt)·(dt/ρ)·∇²p = -∇²p (scaled)
+        let n = 6;
+        let par = Params::isothermal(0.05, 0.2, 0.0);
+        let p = rand_field(pad_len(n), 7);
+        let mut u = vec![0.0f32; int_len(n)];
+        let mut v = vec![0.0f32; int_len(n)];
+        let mut w = vec![0.0f32; int_len(n)];
+        correct_block(n, &mut u, &mut v, &mut w, &p, &par);
+        // re-pad the corrected interiors with the *consistent* neighbour
+        // values: u halo must hold the corrected face velocities of
+        // neighbouring cells. For this single-block check use the interior
+        // only (shrink by one): compare at cells 2..n-1 where all needed
+        // values are interior.
+        let mut up = vec![0.0f32; pad_len(n)];
+        let mut vp = vec![0.0f32; pad_len(n)];
+        let mut wp = vec![0.0f32; pad_len(n)];
+        for i in 1..=n {
+            for j in 1..=n {
+                for k in 1..=n {
+                    up[pi(n, i, j, k)] = u[ii(n, i - 1, j - 1, k - 1)];
+                    vp[pi(n, i, j, k)] = v[ii(n, i - 1, j - 1, k - 1)];
+                    wp[pi(n, i, j, k)] = w[ii(n, i - 1, j - 1, k - 1)];
+                }
+            }
+        }
+        let mut div = vec![0.0f32; int_len(n)];
+        divergence_block(n, &up, &vp, &wp, &par, &mut div);
+        // interior-of-interior check against -∇²p/h² scaling:
+        let h2 = par.h * par.h;
+        for i in 2..n {
+            for j in 2..n {
+                for k in 2..n {
+                    let nb = p[pi(n, i - 1, j, k)]
+                        + p[pi(n, i + 1, j, k)]
+                        + p[pi(n, i, j - 1, k)]
+                        + p[pi(n, i, j + 1, k)]
+                        + p[pi(n, i, j, k - 1)]
+                        + p[pi(n, i, j, k + 1)];
+                    let lap = (nb - 6.0 * p[pi(n, i, j, k)]) / h2;
+                    let got = div[ii(n, i - 1, j - 1, k - 1)];
+                    assert!(
+                        (got + lap).abs() < 1e-3,
+                        "({i},{j},{k}): {got} vs {}",
+                        -lap
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn predictor_pure_diffusion_decays_peak() {
+        let n = 6;
+        let mut par = params(0.1);
+        par.beta_g = 0.0;
+        let z = vec![0.0f32; pad_len(n)];
+        let mut t = vec![300.0f32; pad_len(n)];
+        t[pi(n, 3, 3, 3)] = 310.0;
+        let (mut uo, mut vo, mut wo, mut to) = (
+            vec![0.0; int_len(n)],
+            vec![0.0; int_len(n)],
+            vec![0.0; int_len(n)],
+            vec![0.0; int_len(n)],
+        );
+        predictor_block(n, &z, &z, &z, &t, &par, &mut uo, &mut vo, &mut wo, &mut to);
+        assert!(to[ii(n, 2, 2, 2)] < 310.0);
+        assert!(to[ii(n, 1, 2, 2)] > 300.0);
+        assert!(uo.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn buoyancy_pushes_hot_cell_up() {
+        let n = 4;
+        let par = params(0.1);
+        let z = vec![0.0f32; pad_len(n)];
+        let mut t = vec![300.0f32; pad_len(n)];
+        t[pi(n, 2, 2, 2)] = 350.0;
+        let (mut uo, mut vo, mut wo, mut to) = (
+            vec![0.0; int_len(n)],
+            vec![0.0; int_len(n)],
+            vec![0.0; int_len(n)],
+            vec![0.0; int_len(n)],
+        );
+        predictor_block(n, &z, &z, &z, &t, &par, &mut uo, &mut vo, &mut wo, &mut to);
+        assert!(wo[ii(n, 1, 1, 1)] > 0.0);
+    }
+
+    #[test]
+    fn restrict_preserves_constant_and_mean() {
+        let n = 8;
+        let fine = rand_field(int_len(n), 3);
+        let mut coarse = vec![0.0f32; int_len(n / 2)];
+        restrict_block(n, &fine, &mut coarse);
+        let mean_f: f32 = fine.iter().sum::<f32>() / fine.len() as f32;
+        let mean_c: f32 = coarse.iter().sum::<f32>() / coarse.len() as f32;
+        assert!((mean_f - mean_c).abs() < 1e-5);
+        let cst = vec![4.0f32; int_len(n)];
+        restrict_block(n, &cst, &mut coarse);
+        assert!(coarse.iter().all(|&x| (x - 4.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn prolong_is_right_inverse_of_restrict() {
+        // restrict(prolong(c)) == c for piecewise-constant prolongation
+        let m = 4;
+        let coarse = rand_field(int_len(m), 11);
+        let mut fine = vec![0.0f32; int_len(2 * m)];
+        prolong_add_block(m, &coarse, &mut fine);
+        let mut back = vec![0.0f32; int_len(m)];
+        restrict_block(2 * m, &fine, &mut back);
+        for (a, b) in coarse.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn jacobi_converges_on_manufactured_solution() {
+        // solve ∇²p = rhs with p=0 Dirichlet halo; manufactured rhs from a
+        // known p*, iterate: error must shrink monotonically
+        let n = 8;
+        let par = params(1.0 / n as f32);
+        // p* = product of parabolas vanishing at the boundary
+        let mut pstar = vec![0.0f32; pad_len(n)];
+        for i in 0..n + 2 {
+            for j in 0..n + 2 {
+                for k in 0..n + 2 {
+                    let f = |x: usize| {
+                        let t = x as f32 / (n + 1) as f32;
+                        t * (1.0 - t)
+                    };
+                    pstar[pi(n, i, j, k)] = f(i) * f(j) * f(k);
+                }
+            }
+        }
+        let mut rhs = vec![0.0f32; int_len(n)];
+        // rhs := ∇²p*
+        let h2 = par.h * par.h;
+        for i in 1..=n {
+            for j in 1..=n {
+                for k in 1..=n {
+                    let nb = pstar[pi(n, i - 1, j, k)]
+                        + pstar[pi(n, i + 1, j, k)]
+                        + pstar[pi(n, i, j - 1, k)]
+                        + pstar[pi(n, i, j + 1, k)]
+                        + pstar[pi(n, i, j, k - 1)]
+                        + pstar[pi(n, i, j, k + 1)];
+                    rhs[ii(n, i - 1, j - 1, k - 1)] =
+                        (nb - 6.0 * pstar[pi(n, i, j, k)]) / h2;
+                }
+            }
+        }
+        let mut p = vec![0.0f32; pad_len(n)];
+        let mut out = vec![0.0f32; int_len(n)];
+        let err = |p: &[f32]| -> f32 {
+            let mut e = 0.0f32;
+            for i in 1..=n {
+                for j in 1..=n {
+                    for k in 1..=n {
+                        e += (p[pi(n, i, j, k)] - pstar[pi(n, i, j, k)]).powi(2);
+                    }
+                }
+            }
+            e.sqrt()
+        };
+        let e0 = err(&p);
+        for _ in 0..200 {
+            jacobi_block(n, &p, &rhs, &par, &mut out);
+            for i in 1..=n {
+                for j in 1..=n {
+                    for k in 1..=n {
+                        p[pi(n, i, j, k)] = out[ii(n, i - 1, j - 1, k - 1)];
+                    }
+                }
+            }
+        }
+        let e1 = err(&p);
+        assert!(e1 < 0.05 * e0, "e0={e0} e1={e1}");
+    }
+}

@@ -1,0 +1,457 @@
+//! The **PJRT runtime** — loads the AOT-compiled HLO artifacts and executes
+//! them on the hot path.
+//!
+//! `make artifacts` (Python, build time only) lowers each L2 entry point to
+//! HLO text plus a `manifest.json`; this module loads the text through
+//! `HloModuleProto::from_text_file`, compiles once per entry with
+//! `PjRtClient::cpu()`, and exposes the result behind the
+//! [`ComputeBackend`] trait so the solver/coordinator are agnostic between
+//! this backend and the pure-Rust oracle.
+//!
+//! Batching: artifacts are shape-specialised (default B = 32 plus a B = 1
+//! variant). [`PjrtBackend`] chops an arbitrary batch into full-B chunks
+//! and runs the tail through the B = 1 executable — the d-grid batcher in
+//! the coordinator feeds it multiples of B wherever possible.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::physics::{ComputeBackend, Params};
+use crate::util::json::Json;
+use crate::DGRID_N;
+
+/// One entry of `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub batch: usize,
+    pub n: usize,
+    /// Input shapes (excluding dtype — everything is f32).
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: usize,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub n: usize,
+    pub default_batch: usize,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("runtime: read {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).context("runtime: parse manifest.json")?;
+        let need = |k: &str| j.get(k).ok_or_else(|| anyhow!("manifest missing '{k}'"));
+        let n = need("n")?.as_usize().unwrap_or(0);
+        let default_batch = need("default_batch")?.as_usize().unwrap_or(0);
+        let mut entries = Vec::new();
+        for e in need("entries")?.as_arr().unwrap_or(&[]) {
+            let shapes = e
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(|s| {
+                    s.get("shape")
+                        .and_then(|x| x.as_arr())
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect()
+                })
+                .collect();
+            entries.push(ManifestEntry {
+                name: e
+                    .get("name")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+                file: e
+                    .get("file")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+                batch: e.get("batch").and_then(|x| x.as_usize()).unwrap_or(1),
+                n: e.get("n").and_then(|x| x.as_usize()).unwrap_or(n),
+                inputs: shapes,
+                outputs: e.get("outputs").and_then(|x| x.as_usize()).unwrap_or(1),
+            });
+        }
+        if entries.is_empty() {
+            bail!("runtime: manifest has no entries");
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            n,
+            default_batch,
+            entries,
+        })
+    }
+}
+
+/// Everything PJRT: client + one compiled executable per (entry, batch).
+struct Inner {
+    _client: xla::PjRtClient,
+    exes: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: the PJRT C API is thread-safe for execution; the `Rc` inside
+// `PjRtClient` is never cloned across threads because all access goes
+// through the `Mutex` in `PjrtBackend` (one dispatch at a time — the CPU
+// client parallelises internally across its Eigen thread pool).
+unsafe impl Send for Inner {}
+
+/// [`ComputeBackend`] implementation executing the AOT artifacts.
+pub struct PjrtBackend {
+    inner: Mutex<Inner>,
+    pub manifest: Manifest,
+    /// Dispatch counter for the perf report.
+    pub dispatches: std::sync::atomic::AtomicU64,
+}
+
+impl PjrtBackend {
+    /// Load `artifacts/` (or the dir in `MPFLUID_ARTIFACTS`), compiling
+    /// every manifest entry.
+    pub fn load(dir: &Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(dir)?;
+        if manifest.n != DGRID_N {
+            bail!(
+                "runtime: artifacts lowered for N={} but crate fixes DGRID_N={}",
+                manifest.n,
+                DGRID_N
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for e in &manifest.entries {
+            let path = manifest.dir.join(&e.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|err| anyhow!("load {path:?}: {err:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|err| anyhow!("compile {}: {err:?}", e.file))?;
+            exes.insert((e.name.clone(), e.batch), exe);
+        }
+        Ok(PjrtBackend {
+            inner: Mutex::new(Inner {
+                _client: client,
+                exes,
+            }),
+            manifest,
+            dispatches: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Default artifact location: `$MPFLUID_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<PjrtBackend> {
+        let dir = std::env::var("MPFLUID_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        PjrtBackend::load(Path::new(&dir))
+    }
+
+    pub fn dispatch_count(&self) -> u64 {
+        self.dispatches.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Execute entry `name` at exactly batch `b` (an available artifact
+    /// batch size). `fields` are the tensor inputs (without params); the
+    /// params vector is appended automatically. Returns the flattened f32
+    /// outputs in entry order.
+    fn exec_exact(
+        &self,
+        name: &str,
+        b: usize,
+        fields: &[(&[f32], &[usize])],
+        par: &Params,
+    ) -> Result<Vec<Vec<f32>>> {
+        let inner = self.inner.lock().unwrap();
+        let exe = inner
+            .exes
+            .get(&(name.to_string(), b))
+            .ok_or_else(|| anyhow!("runtime: no artifact '{name}' at batch {b}"))?;
+        let mut lits = Vec::with_capacity(fields.len() + 1);
+        for (data, dims) in fields {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            lits.push(
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    dims,
+                    bytes,
+                )
+                .map_err(|e| anyhow!("literal: {e:?}"))?,
+            );
+        }
+        let pv = par.to_vec();
+        lits.push(xla::Literal::vec1(&pv[..]));
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        self.dispatches
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Execute entry `name` over an arbitrary batch `b`, chunking into the
+    /// default artifact batch; a ragged tail of one block uses the B = 1
+    /// artifact, any other tail is zero-padded up to the default batch (one
+    /// dispatch instead of a per-block loop — perf pass, EXPERIMENTS §Perf).
+    /// `ins`: per input, (data, per-block element count, trailing dims).
+    /// `outs`: per output, (dest, per-block element count).
+    fn exec_chunked(
+        &self,
+        name: &str,
+        b: usize,
+        ins: &[(&[f32], usize, Vec<usize>)],
+        outs: &mut [(&mut [f32], usize)],
+        par: &Params,
+    ) -> Result<()> {
+        let bb = self.manifest.default_batch.max(1);
+        let mut done = 0usize;
+        // reusable padding buffers (one per input) for the final chunk
+        let mut padded: Vec<Vec<f32>> = Vec::new();
+        while done < b {
+            let rem = b - done;
+            let (chunk, run) = if rem >= bb {
+                (bb, bb) // full chunk
+            } else if rem == 1 {
+                (1, 1) // B = 1 artifact
+            } else {
+                (rem, bb) // pad the tail up to bb
+            };
+            let results = if run == chunk {
+                let fields: Vec<(&[f32], Vec<usize>)> = ins
+                    .iter()
+                    .map(|(data, per, dims)| {
+                        let mut shape = vec![chunk];
+                        shape.extend_from_slice(dims);
+                        (&data[done * per..(done + chunk) * per], shape)
+                    })
+                    .collect();
+                let refs: Vec<(&[f32], &[usize])> =
+                    fields.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+                self.exec_exact(name, run, &refs, par)?
+            } else {
+                if padded.is_empty() {
+                    padded = ins.iter().map(|(_, per, _)| vec![0.0f32; run * per]).collect();
+                }
+                for ((data, per, _), buf) in ins.iter().zip(padded.iter_mut()) {
+                    buf[..chunk * per].copy_from_slice(&data[done * per..(done + chunk) * per]);
+                    buf[chunk * per..].fill(0.0);
+                }
+                let fields: Vec<(&[f32], Vec<usize>)> = ins
+                    .iter()
+                    .zip(padded.iter())
+                    .map(|((_, _, dims), buf)| {
+                        let mut shape = vec![run];
+                        shape.extend_from_slice(dims);
+                        (buf.as_slice(), shape)
+                    })
+                    .collect();
+                let refs: Vec<(&[f32], &[usize])> =
+                    fields.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+                self.exec_exact(name, run, &refs, par)?
+            };
+            if results.len() != outs.len() {
+                bail!(
+                    "runtime: entry '{name}' returned {} outputs, expected {}",
+                    results.len(),
+                    outs.len()
+                );
+            }
+            for (res, (dest, per)) in results.iter().zip(outs.iter_mut()) {
+                dest[done * *per..(done + chunk) * *per]
+                    .copy_from_slice(&res[..chunk * *per]);
+            }
+            done += chunk;
+        }
+        Ok(())
+    }
+}
+
+const NPAD: usize = DGRID_N + 2;
+
+fn halo_dims() -> Vec<usize> {
+    vec![NPAD, NPAD, NPAD]
+}
+
+fn int_dims() -> Vec<usize> {
+    vec![DGRID_N, DGRID_N, DGRID_N]
+}
+
+const PAD: usize = NPAD * NPAD * NPAD;
+const INT: usize = DGRID_N * DGRID_N * DGRID_N;
+
+impl ComputeBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.manifest.default_batch
+    }
+
+    fn jacobi(&self, b: usize, p: &[f32], rhs: &[f32], par: &Params, out: &mut [f32]) {
+        self.exec_chunked(
+            "jacobi",
+            b,
+            &[(p, PAD, halo_dims()), (rhs, INT, int_dims())],
+            &mut [(out, INT)],
+            par,
+        )
+        .expect("pjrt jacobi");
+    }
+
+    fn residual(
+        &self,
+        b: usize,
+        p: &[f32],
+        rhs: &[f32],
+        par: &Params,
+        r: &mut [f32],
+        ssq: &mut [f32],
+    ) {
+        self.exec_chunked(
+            "residual",
+            b,
+            &[(p, PAD, halo_dims()), (rhs, INT, int_dims())],
+            &mut [(r, INT), (ssq, 1)],
+            par,
+        )
+        .expect("pjrt residual");
+    }
+
+    fn divergence(&self, b: usize, u: &[f32], v: &[f32], w: &[f32], par: &Params, out: &mut [f32]) {
+        self.exec_chunked(
+            "divergence",
+            b,
+            &[
+                (u, PAD, halo_dims()),
+                (v, PAD, halo_dims()),
+                (w, PAD, halo_dims()),
+            ],
+            &mut [(out, INT)],
+            par,
+        )
+        .expect("pjrt divergence");
+    }
+
+    fn correct(
+        &self,
+        b: usize,
+        u: &[f32],
+        v: &[f32],
+        w: &[f32],
+        p: &[f32],
+        par: &Params,
+        uo: &mut [f32],
+        vo: &mut [f32],
+        wo: &mut [f32],
+    ) {
+        self.exec_chunked(
+            "correct",
+            b,
+            &[
+                (u, INT, int_dims()),
+                (v, INT, int_dims()),
+                (w, INT, int_dims()),
+                (p, PAD, halo_dims()),
+            ],
+            &mut [(uo, INT), (vo, INT), (wo, INT)],
+            par,
+        )
+        .expect("pjrt correct");
+    }
+
+    fn predictor(
+        &self,
+        b: usize,
+        u: &[f32],
+        v: &[f32],
+        w: &[f32],
+        t: &[f32],
+        par: &Params,
+        uo: &mut [f32],
+        vo: &mut [f32],
+        wo: &mut [f32],
+        to: &mut [f32],
+    ) {
+        self.exec_chunked(
+            "predictor",
+            b,
+            &[
+                (u, PAD, halo_dims()),
+                (v, PAD, halo_dims()),
+                (w, PAD, halo_dims()),
+                (t, PAD, halo_dims()),
+            ],
+            &mut [(uo, INT), (vo, INT), (wo, INT), (to, INT)],
+            par,
+        )
+        .expect("pjrt predictor");
+    }
+
+    fn restrict(&self, b: usize, fine: &[f32], out: &mut [f32]) {
+        let par = Params::isothermal(1.0, 1.0, 0.0);
+        let half = INT / 8;
+        self.exec_chunked(
+            "restrict",
+            b,
+            &[(fine, INT, int_dims())],
+            &mut [(out, half)],
+            &par,
+        )
+        .expect("pjrt restrict");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_minimal() {
+        let dir = std::env::temp_dir().join(format!("manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"n": 16, "default_batch": 4, "entries": [
+                {"name": "jacobi", "file": "jacobi_b4_n16.hlo.txt", "batch": 4,
+                 "n": 16, "inputs": [{"shape": [4,18,18,18], "dtype": "float32"},
+                 {"shape": [4,16,16,16], "dtype": "float32"},
+                 {"shape": [8], "dtype": "float32"}], "outputs": 1}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.default_batch, 4);
+        assert_eq!(m.entries[0].inputs[0], vec![4, 18, 18, 18]);
+        assert_eq!(m.entries[0].outputs, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    // Full PJRT execution is covered by rust/tests/runtime_golden.rs,
+    // which requires `make artifacts` to have run.
+}

@@ -1,0 +1,754 @@
+//! The **multigrid-like pressure-Poisson solver** (paper §2.2, after
+//! Brandt [14]).
+//!
+//! "Multigrid-like, because it utilises the above communication schema —
+//! precisely the bottom-up and top-down update steps — as restriction and
+//! prolongation operators for setting up a cell-centred multigrid method."
+//!
+//! Exactly that: the V-cycle below walks the space-tree's depth levels,
+//! smoothing with the AOT Jacobi kernel at every level (the d-grid shape is
+//! 16³ at *all* depths, so one artifact serves the whole hierarchy; only
+//! the spacing `h` in the params vector changes), restricting residuals
+//! bottom-up into the parents' d-grids and prolongating corrections
+//! top-down — the same data paths as the ghost-layer communication phase.
+//!
+//! The right-hand side is expected in `temp.P` of the finest-level grids;
+//! the solution accumulates in `cur.P`.
+//!
+//! For adaptively refined trees (leaves at several depths), the solver
+//! falls back to plain smoothing sweeps over the leaves with the full
+//! three-phase exchange between sweeps — the paper itself reports
+//! "convergence instabilities for certain scenarios (in case of adaptive
+//! refinement)" for the V-cycle and counters them with extra smoothing; we
+//! take the robust route.
+
+pub mod batch;
+
+use crate::exchange::{self, Gen};
+use crate::nbs::{Face, NeighbourhoodServer, Neighbour, ALL_FACES};
+use crate::physics::bc::{apply_face_bc, DomainBc};
+use crate::physics::{ComputeBackend, Params};
+use crate::tree::dgrid::{pidx, DGrid};
+use crate::{var, DGRID_CELLS, DGRID_N};
+
+/// Solver configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SolverConfig {
+    /// Pre-smoothing sweeps per level.
+    pub nu1: usize,
+    /// Post-smoothing sweeps per level.
+    pub nu2: usize,
+    /// Extra sweeps on the coarsest grid.
+    pub coarse_sweeps: usize,
+    /// Maximum V-cycles (or leaf-sweep rounds × 10 in fallback mode).
+    pub max_cycles: usize,
+    /// Stop when ‖r‖₂ / ‖r₀‖₂ falls below this.
+    pub rtol: f32,
+    /// Double smoothing on coarser levels (the paper's stabilisation).
+    pub boost_coarse: bool,
+}
+
+impl SolverConfig {
+    /// The per-time-step configuration the coordinator uses: the projection
+    /// only needs the divergence driven well below the advection scale, and
+    /// the warm-started V-cycle then converges in a few cycles (perf pass).
+    pub fn per_step() -> SolverConfig {
+        SolverConfig {
+            rtol: 2e-3,
+            max_cycles: 10,
+            ..SolverConfig::default()
+        }
+    }
+}
+
+impl Default for SolverConfig {
+    fn default() -> SolverConfig {
+        SolverConfig {
+            nu1: 3,
+            nu2: 3,
+            coarse_sweeps: 40,
+            max_cycles: 30,
+            rtol: 1e-4,
+            boost_coarse: true,
+        }
+    }
+}
+
+/// Outcome of one pressure solve.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveStats {
+    pub cycles: usize,
+    pub initial_residual: f32,
+    pub final_residual: f32,
+    pub converged: bool,
+    /// Total smoothing sweeps dispatched (per level counted once).
+    pub sweeps: usize,
+    pub seconds: f64,
+}
+
+/// Ghost exchange for one variable among the grids **at one depth**,
+/// handling all four neighbour kinds (same level, physical boundary,
+/// coarser neighbour by injection, finer neighbour by face averaging).
+/// This is the level-wise analogue of the three-phase schema used inside
+/// the V-cycle.
+pub fn level_exchange(
+    nbs: &NeighbourhoodServer,
+    grids: &mut [DGrid],
+    depth: u32,
+    gen: Gen,
+    v: usize,
+    bc: &DomainBc,
+) {
+    const N: usize = DGRID_N;
+    // Parallel across receiving grids (perf pass, EXPERIMENTS §Perf): each
+    // task writes only its own grid's ghost layer and reads only
+    // neighbours' *interiors* — disjoint regions, expressed via SendPtr.
+    let idxs = nbs.tree.nodes_at_depth(depth);
+    let gptr = crate::util::SendPtr::new(grids);
+    crate::util::parallel_for(idxs.len(), |task| {
+        let idx = idxs[task];
+        let mut buf = [0.0f32; N * N];
+        let mut src = [0.0f32; N * N];
+        // SAFETY: task-exclusive mutable access to grid `idx`; shared reads
+        // of other grids touch only cells no task writes in this pass.
+        let me = unsafe { &mut gptr.slice(idx as usize, 1)[0] };
+        let peer = |j: u32| -> &DGrid { unsafe { &gptr.slice(j as usize, 1)[0] } };
+        for face in ALL_FACES {
+            match nbs.neighbour(idx, face) {
+                Neighbour::Boundary => {
+                    apply_single_var_bc(gen.of_mut(me), face, v, bc.face(face));
+                }
+                Neighbour::Same { idx: nb } => {
+                    exchange::read_face_layer(gen.of(peer(nb)), v, face.opposite(), &mut buf);
+                    exchange::write_ghost_layer(gen.of_mut(me), v, face, &buf);
+                }
+                Neighbour::Coarser { idx: nb } => {
+                    let (a_axis, b_axis) = exchange::tangential(face);
+                    let node = nbs.tree.node(idx);
+                    let (ci, cj, ck) = node.loc.coords();
+                    let coords = [ci as usize, cj as usize, ck as usize];
+                    let off_a = (coords[a_axis] % 2) * (N / 2);
+                    let off_b = (coords[b_axis] % 2) * (N / 2);
+                    exchange::read_face_layer(gen.of(peer(nb)), v, face.opposite(), &mut src);
+                    for a in 0..N {
+                        for b in 0..N {
+                            buf[a * N + b] = src[(off_a + a / 2) * N + (off_b + b / 2)];
+                        }
+                    }
+                    exchange::write_ghost_layer(gen.of_mut(me), v, face, &buf);
+                }
+                Neighbour::Finer { idx: kids } => {
+                    let (a_axis, b_axis) = exchange::tangential(face);
+                    for &ch in &kids {
+                        let chn = nbs.tree.node(ch);
+                        let (ki, kj, kk) = chn.loc.coords();
+                        let kcoords = [ki as usize, kj as usize, kk as usize];
+                        let off_a = (kcoords[a_axis] % 2) * (N / 2);
+                        let off_b = (kcoords[b_axis] % 2) * (N / 2);
+                        exchange::read_face_layer(gen.of(peer(ch)), v, face.opposite(), &mut src);
+                        for a in 0..N / 2 {
+                            for b in 0..N / 2 {
+                                buf[(off_a + a) * N + off_b + b] = 0.25
+                                    * (src[(2 * a) * N + 2 * b]
+                                        + src[(2 * a) * N + 2 * b + 1]
+                                        + src[(2 * a + 1) * N + 2 * b]
+                                        + src[(2 * a + 1) * N + 2 * b + 1]);
+                            }
+                        }
+                    }
+                    exchange::write_ghost_layer(gen.of_mut(me), v, face, &buf);
+                }
+            }
+        }
+    });
+}
+
+/// Apply one variable's boundary condition on one face.
+fn apply_single_var_bc(
+    fs: &mut crate::tree::dgrid::FieldSet,
+    face: Face,
+    v: usize,
+    bc: &crate::physics::bc::FaceBc,
+) {
+    let mut only = crate::physics::bc::FaceBc {
+        per_var: [crate::physics::bc::VarBc::Neumann; crate::NVAR],
+    };
+    only.per_var[v] = bc.per_var[v];
+    // Neumann for the others is a harmless overwrite of ghost values that
+    // the current kernel call does not read; still, keep it to v only by
+    // filling the other slots with their own current spec:
+    apply_face_bc(fs, face, &only);
+}
+
+/// `sweeps` Jacobi sweeps over the nodes at `depth` (rhs in `temp.P`,
+/// solution in `cur.P`), exchanging ghosts before every sweep.
+#[allow(clippy::too_many_arguments)]
+fn smooth_level(
+    nbs: &NeighbourhoodServer,
+    grids: &mut [DGrid],
+    idxs: &[u32],
+    depth: u32,
+    par: &Params,
+    backend: &dyn ComputeBackend,
+    bc: &DomainBc,
+    sweeps: usize,
+    scratch: &mut Scratch,
+) {
+    for _ in 0..sweeps {
+        level_exchange(nbs, grids, depth, Gen::Cur, var::P, bc);
+        batch::pack_halo(grids, idxs, Gen::Cur, var::P, &mut scratch.p);
+        batch::pack_interior(grids, idxs, Gen::Temp, var::P, &mut scratch.rhs);
+        scratch.out.resize(idxs.len() * DGRID_CELLS, 0.0);
+        backend.jacobi(idxs.len(), &scratch.p, &scratch.rhs, par, &mut scratch.out);
+        batch::scatter_interior(grids, idxs, Gen::Cur, var::P, &scratch.out);
+    }
+}
+
+/// Residual at `depth` (after a ghost refresh): r → `temp.T`, returns Σr².
+#[allow(clippy::too_many_arguments)]
+fn residual_level(
+    nbs: &NeighbourhoodServer,
+    grids: &mut [DGrid],
+    idxs: &[u32],
+    depth: u32,
+    par: &Params,
+    backend: &dyn ComputeBackend,
+    bc: &DomainBc,
+    scratch: &mut Scratch,
+) -> f32 {
+    level_exchange(nbs, grids, depth, Gen::Cur, var::P, bc);
+    batch::pack_halo(grids, idxs, Gen::Cur, var::P, &mut scratch.p);
+    batch::pack_interior(grids, idxs, Gen::Temp, var::P, &mut scratch.rhs);
+    scratch.out.resize(idxs.len() * DGRID_CELLS, 0.0);
+    scratch.ssq.resize(idxs.len(), 0.0);
+    backend.residual(
+        idxs.len(),
+        &scratch.p,
+        &scratch.rhs,
+        par,
+        &mut scratch.out,
+        &mut scratch.ssq,
+    );
+    batch::scatter_interior(grids, idxs, Gen::Temp, var::T, &scratch.out);
+    scratch.ssq.iter().sum()
+}
+
+/// Restrict the residual (`temp.T` of the children at `depth`) into the
+/// parents' rhs (`temp.P`), and zero the parents' `cur.P` correction.
+fn restrict_residual(nbs: &NeighbourhoodServer, grids: &mut [DGrid], depth: u32) {
+    const N: usize = DGRID_N;
+    let m = N / 2;
+    for pidx_ in nbs.tree.nodes_at_depth(depth - 1) {
+        let node = nbs.tree.node(pidx_);
+        if node.is_leaf() {
+            continue;
+        }
+        let children = node.children.clone();
+        // zero correction
+        for x in grids[pidx_ as usize].cur.var_mut(var::P).iter_mut() {
+            *x = 0.0;
+        }
+        let mut interior = vec![0.0f32; DGRID_CELLS];
+        let mut block = vec![0.0f32; m * m * m];
+        for &ch in &children {
+            let oct = nbs.tree.node(ch).loc.octant();
+            let (oi, oj, ok) = (
+                ((oct >> 2) & 1) as usize,
+                ((oct >> 1) & 1) as usize,
+                (oct & 1) as usize,
+            );
+            grids[ch as usize]
+                .temp
+                .extract_interior(var::T, &mut interior);
+            crate::physics::restrict_block(N, &interior, &mut block);
+            let f = grids[pidx_ as usize].temp.var_mut(var::P);
+            for i in 0..m {
+                for j in 0..m {
+                    for k in 0..m {
+                        f[pidx(oi * m + i + 1, oj * m + j + 1, ok * m + k + 1)] =
+                            block[(i * m + j) * m + k];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Prolongate the coarse correction (`cur.P` at `depth-1`) into the
+/// children's `cur.P` (piecewise-constant injection, additive).
+fn prolong_correction(nbs: &NeighbourhoodServer, grids: &mut [DGrid], depth: u32) {
+    const N: usize = DGRID_N;
+    let m = N / 2;
+    for pidx_ in nbs.tree.nodes_at_depth(depth - 1) {
+        let node = nbs.tree.node(pidx_);
+        if node.is_leaf() {
+            continue;
+        }
+        let children = node.children.clone();
+        let mut octant = vec![0.0f32; m * m * m];
+        for &ch in &children {
+            let oct = nbs.tree.node(ch).loc.octant();
+            let (oi, oj, ok) = (
+                ((oct >> 2) & 1) as usize,
+                ((oct >> 1) & 1) as usize,
+                (oct & 1) as usize,
+            );
+            {
+                let f = grids[pidx_ as usize].cur.var(var::P);
+                for i in 0..m {
+                    for j in 0..m {
+                        for k in 0..m {
+                            octant[(i * m + j) * m + k] =
+                                f[pidx(oi * m + i + 1, oj * m + j + 1, ok * m + k + 1)];
+                        }
+                    }
+                }
+            }
+            let cf = grids[ch as usize].cur.var_mut(var::P);
+            for i in 0..m {
+                for j in 0..m {
+                    for k in 0..m {
+                        let c = octant[(i * m + j) * m + k];
+                        for (di, dj, dk) in [
+                            (0, 0, 0),
+                            (0, 0, 1),
+                            (0, 1, 0),
+                            (0, 1, 1),
+                            (1, 0, 0),
+                            (1, 0, 1),
+                            (1, 1, 0),
+                            (1, 1, 1),
+                        ] {
+                            cf[pidx(2 * i + di + 1, 2 * j + dj + 1, 2 * k + dk + 1)] += c;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[derive(Default)]
+struct Scratch {
+    p: Vec<f32>,
+    rhs: Vec<f32>,
+    out: Vec<f32>,
+    ssq: Vec<f32>,
+}
+
+/// Solve ∇²p = rhs (rhs in `temp.P` of the finest grids, solution in
+/// `cur.P`). Chooses the V-cycle for uniformly refined trees and leaf
+/// smoothing otherwise.
+pub fn solve_pressure(
+    nbs: &NeighbourhoodServer,
+    grids: &mut [DGrid],
+    bc: &DomainBc,
+    par: &Params,
+    backend: &dyn ComputeBackend,
+    cfg: &SolverConfig,
+) -> SolveStats {
+    let t0 = std::time::Instant::now();
+    let max_d = nbs.tree.max_depth();
+    let uniform = nbs
+        .tree
+        .nodes
+        .iter()
+        .all(|n| !n.is_leaf() || n.depth() == max_d);
+    let mut scratch = Scratch::default();
+    let finest: Vec<u32> = nbs.tree.nodes_at_depth(max_d);
+    // damped Jacobi (ω = 6/7): the undamped sweep does not smooth the
+    // highest-frequency modes of the 3-D 7-point Laplacian (μ = −1), which
+    // stalls the coarse-grid correction entirely.
+    let par_at = |d: u32| {
+        let mut p = par.at_h(nbs.tree.h_at_depth(d) as f32);
+        p.omega = 6.0 / 7.0;
+        p
+    };
+
+    let mut stats = SolveStats {
+        cycles: 0,
+        initial_residual: 0.0,
+        final_residual: 0.0,
+        converged: false,
+        sweeps: 0,
+        seconds: 0.0,
+    };
+    let r0 = residual_level(
+        nbs,
+        grids,
+        &finest,
+        max_d,
+        &par_at(max_d),
+        backend,
+        bc,
+        &mut scratch,
+    )
+    .sqrt();
+    stats.initial_residual = r0;
+    let target = (r0 * cfg.rtol).max(1e-12);
+    let mut r = r0;
+
+    if uniform && max_d > 0 {
+        // ----- V-cycles over the tree hierarchy --------------------------
+        while stats.cycles < cfg.max_cycles && r > target {
+            // fine → coarse
+            for d in (1..=max_d).rev() {
+                let idxs = nbs.tree.nodes_at_depth(d);
+                let boost = if cfg.boost_coarse {
+                    1 << (max_d - d).min(3)
+                } else {
+                    1
+                };
+                smooth_level(
+                    nbs,
+                    grids,
+                    &idxs,
+                    d,
+                    &par_at(d),
+                    backend,
+                    bc,
+                    cfg.nu1 * boost,
+                    &mut scratch,
+                );
+                stats.sweeps += cfg.nu1 * boost;
+                residual_level(nbs, grids, &idxs, d, &par_at(d), backend, bc, &mut scratch);
+                restrict_residual(nbs, grids, d);
+            }
+            // coarsest
+            let root = nbs.tree.nodes_at_depth(0);
+            smooth_level(
+                nbs,
+                grids,
+                &root,
+                0,
+                &par_at(0),
+                backend,
+                bc,
+                cfg.coarse_sweeps,
+                &mut scratch,
+            );
+            stats.sweeps += cfg.coarse_sweeps;
+            // coarse → fine
+            for d in 1..=max_d {
+                prolong_correction(nbs, grids, d);
+                let idxs = nbs.tree.nodes_at_depth(d);
+                let boost = if cfg.boost_coarse {
+                    1 << (max_d - d).min(3)
+                } else {
+                    1
+                };
+                smooth_level(
+                    nbs,
+                    grids,
+                    &idxs,
+                    d,
+                    &par_at(d),
+                    backend,
+                    bc,
+                    cfg.nu2 * boost,
+                    &mut scratch,
+                );
+                stats.sweeps += cfg.nu2 * boost;
+            }
+            stats.cycles += 1;
+            r = residual_level(
+                nbs,
+                grids,
+                &finest,
+                max_d,
+                &par_at(max_d),
+                backend,
+                bc,
+                &mut scratch,
+            )
+            .sqrt();
+        }
+    } else {
+        // ----- fallback: smoothing on leaves, grouped per depth ----------
+        let depths: Vec<u32> = {
+            let mut ds: Vec<u32> = nbs
+                .tree
+                .nodes
+                .iter()
+                .filter(|n| n.is_leaf())
+                .map(|n| n.depth())
+                .collect();
+            ds.sort_unstable();
+            ds.dedup();
+            ds
+        };
+        let leaf_idxs: Vec<(u32, Vec<u32>)> = depths
+            .iter()
+            .map(|&d| {
+                (
+                    d,
+                    nbs.tree
+                        .nodes_at_depth(d)
+                        .into_iter()
+                        .filter(|&i| nbs.tree.node(i).is_leaf())
+                        .collect(),
+                )
+            })
+            .collect();
+        let rounds = cfg.max_cycles * 10;
+        while stats.cycles < rounds && r > target {
+            for (d, idxs) in &leaf_idxs {
+                smooth_level(
+                    nbs,
+                    grids,
+                    idxs,
+                    *d,
+                    &par_at(*d),
+                    backend,
+                    bc,
+                    cfg.nu1,
+                    &mut scratch,
+                );
+                stats.sweeps += cfg.nu1;
+            }
+            stats.cycles += 1;
+            if stats.cycles % 10 == 0 || stats.cycles == rounds {
+                r = residual_level(
+                    nbs,
+                    grids,
+                    &finest,
+                    max_d,
+                    &par_at(max_d),
+                    backend,
+                    bc,
+                    &mut scratch,
+                )
+                .sqrt();
+            }
+        }
+    }
+    stats.final_residual = r;
+    stats.converged = r <= target;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::physics::RustBackend;
+    use crate::tree::sfc;
+    use crate::tree::{BBox, SpaceTree};
+    use crate::util::rng::Rng;
+
+    fn setup(depth: u32) -> (NeighbourhoodServer, Vec<DGrid>) {
+        let mut t = SpaceTree::full(BBox::unit(), depth);
+        sfc::partition(&mut t, 4);
+        let grids: Vec<DGrid> = t.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+        (NeighbourhoodServer::new(t), grids)
+    }
+
+    fn params() -> Params {
+        Params::isothermal(0.01, 1.0, 0.0)
+    }
+
+    /// Put a zero-mean random rhs into temp.P of the finest level.
+    fn random_rhs(nbs: &NeighbourhoodServer, grids: &mut [DGrid], seed: u64) {
+        let max_d = nbs.tree.max_depth();
+        let mut rng = Rng::new(seed);
+        let idxs = nbs.tree.nodes_at_depth(max_d);
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        let mut fields = Vec::new();
+        for &i in &idxs {
+            let mut f = vec![0.0f32; DGRID_CELLS];
+            rng.fill_f32(&mut f, -1.0, 1.0);
+            total += f.iter().map(|&x| x as f64).sum::<f64>();
+            count += f.len();
+            fields.push((i, f));
+        }
+        let mean = (total / count as f64) as f32;
+        for (i, mut f) in fields {
+            for x in f.iter_mut() {
+                *x -= mean;
+            }
+            grids[i as usize].temp.set_interior(var::P, &f);
+        }
+    }
+
+    #[test]
+    fn vcycle_reduces_residual_depth1() {
+        let (nbs, mut grids) = setup(1);
+        random_rhs(&nbs, &mut grids, 3);
+        let cfg = SolverConfig {
+            max_cycles: 5,
+            rtol: 1e-5,
+            ..SolverConfig::default()
+        };
+        let stats = solve_pressure(
+            &nbs,
+            &mut grids,
+            &DomainBc::all_walls(),
+            &params(),
+            &RustBackend,
+            &cfg,
+        );
+        assert!(
+            stats.final_residual < 0.05 * stats.initial_residual,
+            "{stats:?}"
+        );
+    }
+
+    #[test]
+    fn vcycle_converges_depth2() {
+        let (nbs, mut grids) = setup(2);
+        random_rhs(&nbs, &mut grids, 5);
+        let cfg = SolverConfig {
+            max_cycles: 12,
+            rtol: 1e-4,
+            ..SolverConfig::default()
+        };
+        let stats = solve_pressure(
+            &nbs,
+            &mut grids,
+            &DomainBc::all_walls(),
+            &params(),
+            &RustBackend,
+            &cfg,
+        );
+        assert!(
+            stats.final_residual < 1e-3 * stats.initial_residual,
+            "{stats:?}"
+        );
+        assert!(stats.cycles <= 12);
+    }
+
+    #[test]
+    fn vcycle_beats_plain_smoothing_per_work() {
+        // multigrid's whole point: same work budget, far lower residual
+        let (nbs, mut g_mg) = setup(2);
+        random_rhs(&nbs, &mut g_mg, 9);
+        let mut g_sm = g_mg.clone();
+        let bc = DomainBc::all_walls();
+        let mg = solve_pressure(
+            &nbs,
+            &mut g_mg,
+            &bc,
+            &params(),
+            &RustBackend,
+            &SolverConfig {
+                max_cycles: 3,
+                rtol: 0.0,
+                ..SolverConfig::default()
+            },
+        );
+        // equal number of fine-level-equivalent sweeps, plain smoothing
+        let finest = nbs.tree.nodes_at_depth(2);
+        let mut scratch = Scratch::default();
+        let par = params().at_h(nbs.tree.h_at_depth(2) as f32);
+        smooth_level(
+            &nbs,
+            &mut g_sm,
+            &finest,
+            2,
+            &par,
+            &RustBackend,
+            &bc,
+            mg.sweeps,
+            &mut scratch,
+        );
+        let r_sm = residual_level(
+            &nbs,
+            &mut g_sm,
+            &finest,
+            2,
+            &par,
+            &RustBackend,
+            &bc,
+            &mut scratch,
+        )
+        .sqrt();
+        assert!(
+            mg.final_residual < 0.7 * r_sm,
+            "mg {} vs smooth {}",
+            mg.final_residual,
+            r_sm
+        );
+    }
+
+    #[test]
+    fn adaptive_tree_falls_back_and_reduces() {
+        let mut t = SpaceTree::adaptive(BBox::unit(), 2, &|b, _| {
+            b.contains_point([0.01, 0.01, 0.01])
+        });
+        sfc::partition(&mut t, 2);
+        let nbs = NeighbourhoodServer::new(t);
+        let mut grids: Vec<DGrid> =
+            nbs.tree.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+        // rhs on every leaf (its own depth)
+        let mut rng = Rng::new(11);
+        for (i, n) in nbs.tree.nodes.clone().iter().enumerate() {
+            if n.is_leaf() {
+                let mut f = vec![0.0f32; DGRID_CELLS];
+                rng.fill_f32(&mut f, -1.0, 1.0);
+                let mean: f32 = f.iter().sum::<f32>() / f.len() as f32;
+                for x in f.iter_mut() {
+                    *x -= mean;
+                }
+                grids[i].temp.set_interior(var::P, &f);
+            }
+        }
+        let stats = solve_pressure(
+            &nbs,
+            &mut grids,
+            &DomainBc::all_walls(),
+            &params(),
+            &RustBackend,
+            &SolverConfig {
+                max_cycles: 20,
+                ..SolverConfig::default()
+            },
+        );
+        assert!(stats.final_residual < stats.initial_residual, "{stats:?}");
+    }
+
+    #[test]
+    fn level_exchange_same_level_ghosts() {
+        let (nbs, mut grids) = setup(1);
+        for (i, g) in grids.iter_mut().enumerate() {
+            let f = vec![i as f32; DGRID_CELLS];
+            g.cur.set_interior(var::P, &f);
+        }
+        level_exchange(
+            &nbs,
+            &mut grids,
+            1,
+            Gen::Cur,
+            var::P,
+            &DomainBc::all_walls(),
+        );
+        let a = nbs
+            .tree
+            .lookup(crate::tree::uid::LocCode::ROOT.child(0))
+            .unwrap();
+        let b = nbs
+            .tree
+            .lookup(crate::tree::uid::LocCode::ROOT.child(0b100))
+            .unwrap();
+        assert_eq!(
+            grids[a as usize].cur.var(var::P)[pidx(DGRID_N + 1, 5, 5)],
+            b as f32
+        );
+    }
+
+    #[test]
+    fn solve_is_deterministic() {
+        let (nbs, mut g1) = setup(1);
+        random_rhs(&nbs, &mut g1, 21);
+        let mut g2 = g1.clone();
+        let bc = DomainBc::all_walls();
+        let cfg = SolverConfig::default();
+        let s1 = solve_pressure(&nbs, &mut g1, &bc, &params(), &RustBackend, &cfg);
+        let s2 = solve_pressure(&nbs, &mut g2, &bc, &params(), &RustBackend, &cfg);
+        assert_eq!(s1.final_residual, s2.final_residual);
+        assert_eq!(
+            g1[0].cur.var(var::P)[pidx(5, 5, 5)],
+            g2[0].cur.var(var::P)[pidx(5, 5, 5)]
+        );
+    }
+}

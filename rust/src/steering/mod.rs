@@ -1,0 +1,488 @@
+//! **Computational steering & Time Reversible Steering (TRS)** — paper §4.
+//!
+//! Classical steering: the front end issues commands against the *running*
+//! simulation — altered boundary conditions, moved geometry, refinement or
+//! coarsening of the simulation space.
+//!
+//! TRS extends this with the I/O kernel's time axis: any written snapshot
+//! can be reloaded ("reverse in time"), steered, and resumed — each
+//! rollback creating a **branching file** so the original trajectory stays
+//! intact (Fig 5's branching simulation paths).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Simulation;
+use crate::h5lite::H5File;
+use crate::iokernel;
+use crate::nbs::{Face, NeighbourhoodServer};
+use crate::pario::ParallelIo;
+use crate::physics::bc::{self, FaceBc};
+use crate::tree::dgrid::{CellType, DGrid};
+use crate::tree::{sfc, BBox};
+
+/// A steering command, as issued by the front end (paper §4: "the ordering
+/// of refinements or coarsenings of the simulation space, or the altering
+/// of boundary conditions, for example moving geometry or influencing
+/// velocity constraints").
+#[derive(Clone, Debug)]
+pub enum SteerCommand {
+    /// Replace the boundary condition of one domain face.
+    SetFaceBc { face: Face, bc: FaceBc },
+    /// Insert solid geometry: a sphere (or a cylinder when `ignore_axis`
+    /// projects the distance). `temp` makes it a heated solid.
+    AddObstacle {
+        centre: [f64; 3],
+        radius: f64,
+        temp: Option<f32>,
+        ignore_axis: Option<usize>,
+    },
+    /// Remove all solid cells (geometry will be re-voxelised by subsequent
+    /// AddObstacle commands — this is how "moving geometry" works).
+    ClearObstacles,
+    /// Refine every leaf grid intersecting the region (one level).
+    Refine { region: BBox },
+    /// Set the temperature of all currently heated solids (lamp steering
+    /// in the operation-theatre scenario).
+    SetHeatedSolidTemp { temp: f32 },
+}
+
+/// Apply a steering command to the live simulation.
+pub fn apply(sim: &mut Simulation, cmd: &SteerCommand) {
+    match cmd {
+        SteerCommand::SetFaceBc { face, bc } => {
+            *sim.bc.face_mut(*face) = *bc;
+        }
+        SteerCommand::AddObstacle {
+            centre,
+            radius,
+            temp,
+            ignore_axis,
+        } => {
+            let kind = if temp.is_some() {
+                CellType::HeatedSolid
+            } else {
+                CellType::Solid
+            };
+            let nodes: Vec<(u32, BBox)> = sim
+                .nbs
+                .tree
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(i, n)| (i as u32, n.bbox))
+                .collect();
+            for (i, bbox) in nodes {
+                bc::voxelise_sphere(
+                    &mut sim.grids[i as usize],
+                    &bbox,
+                    *centre,
+                    *radius,
+                    kind,
+                    *temp,
+                    *ignore_axis,
+                );
+            }
+            sim.has_solids = true;
+        }
+        SteerCommand::ClearObstacles => {
+            for g in &mut sim.grids {
+                bc::clear_solids(g);
+            }
+            sim.has_solids = false;
+        }
+        SteerCommand::Refine { region } => {
+            refine_region(sim, region);
+        }
+        SteerCommand::SetHeatedSolidTemp { temp } => {
+            use crate::tree::dgrid::pidx;
+            use crate::var;
+            for g in &mut sim.grids {
+                for i in 0..crate::DGRID_N {
+                    for j in 0..crate::DGRID_N {
+                        for k in 0..crate::DGRID_N {
+                            if g.cell_type(i, j, k) == CellType::HeatedSolid {
+                                let p = pidx(i + 1, j + 1, k + 1);
+                                g.cur.var_mut(var::T)[p] = *temp;
+                                g.prev.var_mut(var::T)[p] = *temp;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Refine all leaves intersecting `region` by one level: the tree grows,
+/// new d-grids receive piecewise-constant prolongations of their parents'
+/// data, and the domain is repartitioned along the Lebesgue curve.
+fn refine_region(sim: &mut Simulation, region: &BBox) {
+    let to_refine: Vec<u32> = sim
+        .nbs
+        .tree
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| {
+            n.is_leaf() && n.bbox.intersects(region) && n.depth() < crate::tree::uid::MAX_DEPTH
+        })
+        .map(|(i, _)| i as u32)
+        .collect();
+    if to_refine.is_empty() {
+        return;
+    }
+    let mut tree = std::mem::take(&mut sim.nbs.tree);
+    for idx in to_refine {
+        tree.refine(idx);
+    }
+    tree.balance();
+    // extend the grid arena for new nodes; prolong parent data into them
+    let n_ranks = sim.part.n_ranks;
+    while sim.grids.len() < tree.len() {
+        let idx = sim.grids.len();
+        let node = &tree.nodes[idx];
+        let mut g = DGrid::new(node.uid());
+        prolong_from_parent(&tree, &sim.grids, idx as u32, &mut g, node.parent);
+        sim.grids.push(g);
+    }
+    sim.part = sfc::partition(&mut tree, n_ranks);
+    // refresh UIDs after repartition
+    for (i, n) in tree.nodes.iter().enumerate() {
+        sim.grids[i].uid = n.uid();
+    }
+    sim.nbs = NeighbourhoodServer::new(tree);
+}
+
+/// Fill a freshly created child d-grid from its parent's octant (all three
+/// generations + cell types) — piecewise-constant prolongation.
+fn prolong_from_parent(
+    tree: &crate::tree::SpaceTree,
+    grids: &[DGrid],
+    child_idx: u32,
+    child: &mut DGrid,
+    parent_idx: u32,
+) {
+    use crate::tree::dgrid::{iidx, pidx};
+    let n = crate::DGRID_N;
+    let m = n / 2;
+    let oct = tree.nodes[child_idx as usize].loc.octant();
+    let (oi, oj, ok) = (
+        ((oct >> 2) & 1) as usize,
+        ((oct >> 1) & 1) as usize,
+        (oct & 1) as usize,
+    );
+    let parent = &grids[parent_idx as usize];
+    for v in 0..crate::NVAR {
+        for (pgen, cgen) in [
+            (&parent.cur, &mut child.cur),
+            (&parent.prev, &mut child.prev),
+            (&parent.temp, &mut child.temp),
+        ] {
+            let pf = pgen.var(v);
+            let cf = cgen.var_mut(v);
+            for i in 0..n {
+                for j in 0..n {
+                    for k in 0..n {
+                        let val =
+                            pf[pidx(oi * m + i / 2 + 1, oj * m + j / 2 + 1, ok * m + k / 2 + 1)];
+                        cf[pidx(i + 1, j + 1, k + 1)] = val;
+                    }
+                }
+            }
+        }
+    }
+    for i in 0..n {
+        for j in 0..n {
+            for k in 0..n {
+                child.cell_type[iidx(i, j, k)] =
+                    parent.cell_type[iidx(oi * m + i / 2, oj * m + j / 2, ok * m + k / 2)];
+            }
+        }
+    }
+}
+
+/// The TRS session: tracks the active output file and its branch ancestry.
+pub struct TrsSession {
+    /// Path of the file currently receiving snapshots.
+    pub active_path: PathBuf,
+    pub file: H5File,
+    /// Branch counter for generated file names.
+    branches: u32,
+}
+
+impl TrsSession {
+    /// Start a session writing to `path` (creates the file + /common).
+    pub fn create(
+        path: &Path,
+        sim: &Simulation,
+        alignment: u64,
+    ) -> Result<TrsSession> {
+        let mut file = H5File::create(path, alignment)?;
+        iokernel::write_common(&mut file, &sim.params, &sim.nbs.tree, sim.part.n_ranks as u64)?;
+        Ok(TrsSession {
+            active_path: path.to_path_buf(),
+            file,
+            branches: 0,
+        })
+    }
+
+    /// Write a snapshot of the simulation at its current time.
+    pub fn checkpoint(&mut self, sim: &Simulation, io: &ParallelIo) -> Result<()> {
+        iokernel::write_snapshot(
+            &mut self.file,
+            io,
+            &sim.nbs.tree,
+            &sim.part,
+            &sim.grids,
+            sim.t,
+        )?;
+        Ok(())
+    }
+
+    /// Snapshots available for rollback.
+    pub fn timesteps(&self) -> Vec<f64> {
+        iokernel::list_timesteps(&self.file)
+    }
+
+    /// **The time reversal**: reload the snapshot at `t`, branch the output
+    /// into a new file (`<stem>.branch<N>.h5`), and return the restored
+    /// simulation positioned at `t`. The previous file is left complete —
+    /// branching simulation paths, Fig 5.
+    pub fn rollback(&mut self, t: f64, io: &ParallelIo, bc: crate::physics::bc::DomainBc) -> Result<Simulation> {
+        self.branches += 1;
+        let branch_path = self
+            .active_path
+            .with_extension(format!("branch{}.h5", self.branches));
+        let branch = iokernel::branch_file(&self.file, t, &branch_path, io)
+            .context("trs: rollback branch")?;
+        let snap = iokernel::read_snapshot(&branch, t)?;
+        self.file = branch;
+        self.active_path = branch_path;
+        let mut sim = Simulation::from_snapshot(snap, bc);
+        sim.t = t;
+        Ok(sim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{IoTuning, Machine};
+    use crate::physics::bc::DomainBc;
+    use crate::physics::{Params, RustBackend};
+    use crate::tree::SpaceTree;
+    use crate::var;
+
+    fn sim() -> Simulation {
+        let tree = SpaceTree::full(BBox::unit(), 1);
+        let mut s = Simulation::new(
+            tree,
+            2,
+            DomainBc::channel(1.0, 300.0),
+            Params {
+                dt: 0.002,
+                h: 1.0 / 32.0,
+                nu: 0.01,
+                alpha: 0.01,
+                beta_g: 0.0,
+                t_inf: 300.0,
+                q_int: 0.0,
+                rho: 1.0,
+                omega: 1.0,
+            },
+        );
+        s.init_temperature(300.0);
+        s
+    }
+
+    #[test]
+    fn set_face_bc_takes_effect() {
+        let mut s = sim();
+        apply(
+            &mut s,
+            &SteerCommand::SetFaceBc {
+                face: Face::XM,
+                bc: FaceBc::inflow(2.5, 310.0),
+            },
+        );
+        use crate::physics::bc::VarBc;
+        assert_eq!(
+            s.bc.face(Face::XM).per_var[var::U],
+            VarBc::Dirichlet(2.5)
+        );
+    }
+
+    #[test]
+    fn add_and_clear_obstacle() {
+        let mut s = sim();
+        apply(
+            &mut s,
+            &SteerCommand::AddObstacle {
+                centre: [0.5, 0.5, 0.5],
+                radius: 0.1,
+                temp: None,
+                ignore_axis: None,
+            },
+        );
+        assert!(s.has_solids);
+        let solid_cells: usize = s
+            .grids
+            .iter()
+            .map(|g| {
+                g.cell_type
+                    .iter()
+                    .filter(|&&c| CellType::from_u8(c).is_solid())
+                    .count()
+            })
+            .sum();
+        assert!(solid_cells > 0);
+        apply(&mut s, &SteerCommand::ClearObstacles);
+        assert!(!s.has_solids);
+    }
+
+    #[test]
+    fn obstacle_blocks_flow() {
+        let mut s = sim();
+        apply(
+            &mut s,
+            &SteerCommand::AddObstacle {
+                centre: [0.5, 0.5, 0.5],
+                radius: 0.15,
+                temp: None,
+                ignore_axis: Some(2),
+            },
+        );
+        for _ in 0..3 {
+            s.step(&RustBackend);
+        }
+        // centre cell velocity stays zero (solid), near-inlet fluid moves
+        let centre_grid = s
+            .nbs
+            .tree
+            .nodes
+            .iter()
+            .position(|n| n.is_leaf() && n.bbox.contains_point([0.5, 0.5, 0.5]))
+            .unwrap();
+        let g = &s.grids[centre_grid];
+        use crate::tree::dgrid::pidx;
+        // find a solid cell and assert zero velocity
+        let mut found = false;
+        for i in 0..crate::DGRID_N {
+            for j in 0..crate::DGRID_N {
+                if g.cell_type(i, j, 8) == CellType::Solid {
+                    assert_eq!(g.cur.var(var::U)[pidx(i + 1, j + 1, 9)], 0.0);
+                    found = true;
+                }
+            }
+        }
+        assert!(found, "no solid cells in centre grid");
+    }
+
+    #[test]
+    fn refine_region_grows_tree_and_preserves_data() {
+        let mut s = sim();
+        // paint recognisable temperature into the corner grid
+        let corner = s
+            .nbs
+            .tree
+            .nodes
+            .iter()
+            .position(|n| n.is_leaf() && n.bbox.contains_point([0.01, 0.01, 0.01]))
+            .unwrap();
+        let tdata = vec![333.0f32; crate::DGRID_CELLS];
+        s.grids[corner].cur.set_interior(var::T, &tdata);
+        let before = s.nbs.tree.len();
+        apply(
+            &mut s,
+            &SteerCommand::Refine {
+                region: BBox {
+                    min: [0.0; 3],
+                    max: [0.4, 0.4, 0.4],
+                },
+            },
+        );
+        assert!(s.nbs.tree.len() > before);
+        assert_eq!(s.grids.len(), s.nbs.tree.len());
+        // a child of the refined corner carries the prolonged 333 K
+        let child = s
+            .nbs
+            .tree
+            .nodes
+            .iter()
+            .position(|n| n.is_leaf() && n.depth() == 2 && n.bbox.contains_point([0.01; 3]))
+            .unwrap();
+        let mut buf = vec![0.0f32; crate::DGRID_CELLS];
+        s.grids[child].cur.extract_interior(var::T, &mut buf);
+        assert_eq!(buf[0], 333.0);
+        // simulation still steps
+        s.step(&RustBackend);
+    }
+
+    #[test]
+    fn trs_rollback_branches_and_restores() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("trs_test_{}.h5", std::process::id()));
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 2);
+        let mut s = sim();
+        let mut trs = TrsSession::create(&path, &s, 1).unwrap();
+        // run + checkpoint at t≈0.002 and t≈0.004
+        s.step(&RustBackend);
+        trs.checkpoint(&s, &io).unwrap();
+        let t1 = s.t;
+        s.step(&RustBackend);
+        trs.checkpoint(&s, &io).unwrap();
+        assert_eq!(trs.timesteps().len(), 2);
+        let ke_at_t1 = {
+            // reference: what the state looked like at t1
+            let snap = iokernel::read_snapshot(&trs.file, t1).unwrap();
+            let sim_ref = Simulation::from_snapshot(snap, DomainBc::channel(1.0, 300.0));
+            sim_ref.kinetic_energy()
+        };
+        // rollback to t1 on a branch
+        let rolled = trs
+            .rollback(t1, &io, DomainBc::channel(1.0, 300.0))
+            .unwrap();
+        assert!((rolled.t - t1).abs() < 1e-9);
+        assert!((rolled.kinetic_energy() - ke_at_t1).abs() < 1e-12);
+        assert!(trs.active_path.to_string_lossy().contains("branch1"));
+        // the branch file carries exactly the rolled-back snapshot
+        // (timestep group names are rounded to 1e-6)
+        let ts = trs.timesteps();
+        assert_eq!(ts.len(), 1);
+        assert!((ts[0] - t1).abs() < 1e-6, "{ts:?} vs {t1}");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&trs.active_path).ok();
+    }
+
+    #[test]
+    fn heated_solid_temp_steering() {
+        let mut s = sim();
+        apply(
+            &mut s,
+            &SteerCommand::AddObstacle {
+                centre: [0.5, 0.5, 0.9],
+                radius: 0.08,
+                temp: Some(324.66),
+                ignore_axis: None,
+            },
+        );
+        apply(&mut s, &SteerCommand::SetHeatedSolidTemp { temp: 374.66 });
+        let mut max_t = 0.0f32;
+        for g in &s.grids {
+            for (i, &c) in g.cell_type.iter().enumerate() {
+                if CellType::from_u8(c) == CellType::HeatedSolid {
+                    use crate::tree::dgrid::pidx;
+                    let (x, y, z) = (
+                        i / (crate::DGRID_N * crate::DGRID_N),
+                        (i / crate::DGRID_N) % crate::DGRID_N,
+                        i % crate::DGRID_N,
+                    );
+                    max_t = max_t.max(g.cur.var(var::T)[pidx(x + 1, y + 1, z + 1)]);
+                }
+            }
+        }
+        assert_eq!(max_t, 374.66);
+    }
+}

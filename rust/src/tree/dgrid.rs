@@ -1,0 +1,198 @@
+//! **d-grids** — the computational data grids.
+//!
+//! Each cell of the logical grid links to a d-grid of `16³` cells storing
+//! the field variables (velocities, pressure, temperature), surrounded by a
+//! halo of size one for inter-grid data exchange (paper §2.2). Following the
+//! paper's file layout (§3.1) each grid carries *three* generations of cell
+//! data — current, previous and temporary — plus a per-cell `cell type`
+//! encoding boundary conditions.
+
+
+use crate::tree::uid::Uid;
+use crate::{DGRID_N, NVAR};
+
+/// Halo-padded edge length.
+pub const NPAD: usize = DGRID_N + 2;
+/// Values in one halo-padded field.
+pub const PADDED_LEN: usize = NPAD * NPAD * NPAD;
+
+/// Classification of a cell, stored in the `cell type` dataset.
+///
+/// Fluid cells are computed; the remaining variants implement the boundary
+/// conditions of the scenarios in the paper (channel inflow/outflow, no-slip
+/// walls and obstacle geometry, fixed-temperature surfaces).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u8)]
+pub enum CellType {
+    Fluid = 0,
+    /// No-slip solid wall / obstacle geometry (velocity = 0).
+    Solid = 1,
+    /// Velocity Dirichlet inflow.
+    Inflow = 2,
+    /// Zero-gradient outflow.
+    Outflow = 3,
+    /// Solid with fixed temperature (heated lamp, human model, …).
+    HeatedSolid = 4,
+}
+
+impl CellType {
+    pub fn from_u8(v: u8) -> CellType {
+        match v {
+            1 => CellType::Solid,
+            2 => CellType::Inflow,
+            3 => CellType::Outflow,
+            4 => CellType::HeatedSolid,
+            _ => CellType::Fluid,
+        }
+    }
+
+    /// Is this a solid (velocity-zero) cell?
+    pub fn is_solid(self) -> bool {
+        matches!(self, CellType::Solid | CellType::HeatedSolid)
+    }
+}
+
+/// Flat index into a halo-padded field: `(i, j, k)` each in `0..NPAD`,
+/// `(1..=N)` being the interior.
+#[inline(always)]
+pub fn pidx(i: usize, j: usize, k: usize) -> usize {
+    (i * NPAD + j) * NPAD + k
+}
+
+/// Flat index into an interior (`N³`) array.
+#[inline(always)]
+pub fn iidx(i: usize, j: usize, k: usize) -> usize {
+    (i * DGRID_N + j) * DGRID_N + k
+}
+
+/// One generation of field data: `NVAR` halo-padded scalar fields.
+#[derive(Clone, Debug)]
+pub struct FieldSet {
+    /// `fields[var][pidx(i,j,k)]`, halo-padded.
+    pub fields: Vec<Vec<f32>>,
+}
+
+impl FieldSet {
+    pub fn zeros() -> FieldSet {
+        FieldSet {
+            fields: vec![vec![0.0; PADDED_LEN]; NVAR],
+        }
+    }
+
+    pub fn var(&self, v: usize) -> &[f32] {
+        &self.fields[v]
+    }
+
+    pub fn var_mut(&mut self, v: usize) -> &mut [f32] {
+        &mut self.fields[v]
+    }
+
+    /// Copy the interior of variable `v` into `out` (length `N³`, row-major).
+    pub fn extract_interior(&self, v: usize, out: &mut [f32]) {
+        let f = &self.fields[v];
+        for i in 0..DGRID_N {
+            for j in 0..DGRID_N {
+                let src = pidx(i + 1, j + 1, 1);
+                let dst = iidx(i, j, 0);
+                out[dst..dst + DGRID_N].copy_from_slice(&f[src..src + DGRID_N]);
+            }
+        }
+    }
+
+    /// Overwrite the interior of variable `v` from `data` (length `N³`).
+    pub fn set_interior(&mut self, v: usize, data: &[f32]) {
+        let f = &mut self.fields[v];
+        for i in 0..DGRID_N {
+            for j in 0..DGRID_N {
+                let dst = pidx(i + 1, j + 1, 1);
+                let src = iidx(i, j, 0);
+                f[dst..dst + DGRID_N].copy_from_slice(&data[src..src + DGRID_N]);
+            }
+        }
+    }
+}
+
+/// A computational data grid (paper §2.2): three generations of cell data, a
+/// per-cell type array, and the owning grid's identity.
+#[derive(Clone, Debug)]
+pub struct DGrid {
+    pub uid: Uid,
+    /// Values at the current time step.
+    pub cur: FieldSet,
+    /// Values at the previous time step (for restart + time derivatives).
+    pub prev: FieldSet,
+    /// Scratch generation (tentative velocity u*, PPE rhs in `P` slot, …).
+    pub temp: FieldSet,
+    /// Boundary-condition class per interior cell (`N³`, values of
+    /// [`CellType`]).
+    pub cell_type: Vec<u8>,
+}
+
+impl DGrid {
+    pub fn new(uid: Uid) -> DGrid {
+        DGrid {
+            uid,
+            cur: FieldSet::zeros(),
+            prev: FieldSet::zeros(),
+            temp: FieldSet::zeros(),
+            cell_type: vec![CellType::Fluid as u8; crate::DGRID_CELLS],
+        }
+    }
+
+    pub fn cell_type(&self, i: usize, j: usize, k: usize) -> CellType {
+        CellType::from_u8(self.cell_type[iidx(i, j, k)])
+    }
+
+    pub fn set_cell_type(&mut self, i: usize, j: usize, k: usize, t: CellType) {
+        self.cell_type[iidx(i, j, k)] = t as u8;
+    }
+
+    /// Bytes of payload this grid contributes to a checkpoint (the paper's
+    /// "vast majority of data": 3 field generations + cell types).
+    pub fn checkpoint_bytes() -> usize {
+        3 * NVAR * crate::DGRID_CELLS * 4 + crate::DGRID_CELLS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::uid::LocCode;
+
+    #[test]
+    fn extract_set_interior_roundtrip() {
+        let mut fs = FieldSet::zeros();
+        let data: Vec<f32> = (0..crate::DGRID_CELLS).map(|x| x as f32).collect();
+        fs.set_interior(2, &data);
+        let mut out = vec![0.0; crate::DGRID_CELLS];
+        fs.extract_interior(2, &mut out);
+        assert_eq!(out, data);
+        // halo untouched
+        assert_eq!(fs.var(2)[pidx(0, 5, 5)], 0.0);
+        assert_eq!(fs.var(2)[pidx(NPAD - 1, 5, 5)], 0.0);
+    }
+
+    #[test]
+    fn interior_and_halo_indices_disjoint() {
+        let mut fs = FieldSet::zeros();
+        let data = vec![1.0f32; crate::DGRID_CELLS];
+        fs.set_interior(0, &data);
+        let n_ones = fs.var(0).iter().filter(|&&x| x == 1.0).count();
+        assert_eq!(n_ones, crate::DGRID_CELLS);
+    }
+
+    #[test]
+    fn cell_type_roundtrip() {
+        let mut g = DGrid::new(Uid::new(0, 0, LocCode::ROOT));
+        g.set_cell_type(3, 4, 5, CellType::HeatedSolid);
+        assert_eq!(g.cell_type(3, 4, 5), CellType::HeatedSolid);
+        assert!(g.cell_type(3, 4, 5).is_solid());
+        assert_eq!(g.cell_type(0, 0, 0), CellType::Fluid);
+    }
+
+    #[test]
+    fn checkpoint_bytes_matches_paper_layout() {
+        // 3 generations × 5 vars × 4096 cells × 4 B + 4096 cell types
+        assert_eq!(DGrid::checkpoint_bytes(), 3 * 5 * 4096 * 4 + 4096);
+    }
+}

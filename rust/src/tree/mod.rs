@@ -1,0 +1,525 @@
+//! The hierarchical **space-tree** data structure (paper §2.2).
+//!
+//! Starting from a single root cell at depth 0, each cell is subdivided into
+//! `2×2×2` children until a predefined maximum depth (the paper's general
+//! `r_x × r_y × r_z` refinement with the bisection setting used throughout
+//! its evaluation). The hierarchy of *logical grids* (l-grids) carries the
+//! topology; every l-grid node links to a computational *data grid*
+//! ([`dgrid::DGrid`]) of `16³` cells — including interior nodes, whose
+//! d-grids hold the averaged (restricted) values that the bottom-up
+//! communication step maintains and that the sliding window reads for
+//! coarse levels of detail.
+//!
+//! Adaptive subdivision is supported with an enforced 2:1 level balance
+//! between face neighbours so that the ghost-layer exchange only ever deals
+//! with one level of difference — matching the paper's three-phase
+//! communication schema.
+
+pub mod dgrid;
+pub mod sfc;
+pub mod uid;
+
+use std::collections::HashMap;
+
+
+use uid::{LocCode, Uid, MAX_DEPTH};
+
+/// Axis-aligned physical bounding box (the `bounding box` dataset row).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct BBox {
+    pub min: [f64; 3],
+    pub max: [f64; 3],
+}
+
+impl BBox {
+    pub fn unit() -> BBox {
+        BBox {
+            min: [0.0; 3],
+            max: [1.0; 3],
+        }
+    }
+
+    pub fn extent(&self, axis: usize) -> f64 {
+        self.max[axis] - self.min[axis]
+    }
+
+    pub fn intersects(&self, other: &BBox) -> bool {
+        (0..3).all(|a| self.min[a] < other.max[a] && self.max[a] > other.min[a])
+    }
+
+    pub fn contains_point(&self, p: [f64; 3]) -> bool {
+        (0..3).all(|a| p[a] >= self.min[a] && p[a] < self.max[a])
+    }
+
+    /// Bounding box of child `octant` under 2×2×2 bisection.
+    pub fn child(&self, octant: u8) -> BBox {
+        let mid = [
+            0.5 * (self.min[0] + self.max[0]),
+            0.5 * (self.min[1] + self.max[1]),
+            0.5 * (self.min[2] + self.max[2]),
+        ];
+        let mut min = self.min;
+        let mut max = mid;
+        for a in 0..3 {
+            if (octant >> (2 - a)) & 1 == 1 {
+                min[a] = mid[a];
+                max[a] = self.max[a];
+            }
+        }
+        BBox { min, max }
+    }
+}
+
+/// One l-grid node in the arena.
+#[derive(Clone, Debug)]
+pub struct LGrid {
+    pub loc: LocCode,
+    pub bbox: BBox,
+    /// Arena indices of the eight children (empty for leaves).
+    pub children: Vec<u32>,
+    /// Arena index of the parent (`u32::MAX` for the root).
+    pub parent: u32,
+    /// Owning MPI rank — assigned by [`sfc::partition`].
+    pub rank: u32,
+    /// Rank-local sequential id — assigned with the partition.
+    pub local: u32,
+}
+
+impl LGrid {
+    pub fn is_leaf(&self) -> bool {
+        self.children.is_empty()
+    }
+
+    pub fn uid(&self) -> Uid {
+        Uid::new(self.rank, self.local, self.loc)
+    }
+
+    pub fn depth(&self) -> u32 {
+        self.loc.depth()
+    }
+}
+
+/// The space-tree: an arena of l-grids plus a location-code index.
+///
+/// d-grid payloads are stored separately (see [`crate::coordinator`]) so the
+/// topology can be shipped to the neighbourhood server without field data.
+#[derive(Clone, Debug, Default)]
+pub struct SpaceTree {
+    pub nodes: Vec<LGrid>,
+    index: HashMap<LocCode, u32>,
+    pub domain: BBox,
+}
+
+impl SpaceTree {
+    /// A tree with only the root node.
+    pub fn root_only(domain: BBox) -> SpaceTree {
+        let mut t = SpaceTree {
+            nodes: vec![LGrid {
+                loc: LocCode::ROOT,
+                bbox: domain,
+                children: Vec::new(),
+                parent: u32::MAX,
+                rank: 0,
+                local: 0,
+            }],
+            index: HashMap::new(),
+            domain,
+        };
+        t.index.insert(LocCode::ROOT, 0);
+        t
+    }
+
+    /// Fully refined tree of `depth` levels (every node subdivided).
+    pub fn full(domain: BBox, depth: u32) -> SpaceTree {
+        let mut t = SpaceTree::root_only(domain);
+        for d in 0..depth {
+            let at_depth: Vec<u32> = t
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| n.depth() == d)
+                .map(|(i, _)| i as u32)
+                .collect();
+            for idx in at_depth {
+                t.refine(idx);
+            }
+        }
+        t
+    }
+
+    /// Adaptively refined tree: subdivide every node for which `pred`
+    /// returns true (evaluated coarsest-first), then restore 2:1 balance.
+    pub fn adaptive(
+        domain: BBox,
+        max_depth: u32,
+        pred: &dyn Fn(&BBox, u32) -> bool,
+    ) -> SpaceTree {
+        let mut t = SpaceTree::root_only(domain);
+        for d in 0..max_depth {
+            let at_depth: Vec<u32> = t
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| n.depth() == d && n.is_leaf())
+                .map(|(i, _)| i as u32)
+                .collect();
+            for idx in at_depth {
+                let n = &t.nodes[idx as usize];
+                if pred(&n.bbox, d) {
+                    t.refine(idx);
+                }
+            }
+        }
+        t.balance();
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, idx: u32) -> &LGrid {
+        &self.nodes[idx as usize]
+    }
+
+    pub fn lookup(&self, loc: LocCode) -> Option<u32> {
+        self.index.get(&loc).copied()
+    }
+
+    /// Rebuild the location index (needed after deserialisation).
+    pub fn rebuild_index(&mut self) {
+        self.index = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.loc, i as u32))
+            .collect();
+    }
+
+    /// Subdivide node `idx` into 8 children. No-op if already refined.
+    pub fn refine(&mut self, idx: u32) {
+        if !self.nodes[idx as usize].is_leaf() {
+            return;
+        }
+        let (loc, bbox) = {
+            let n = &self.nodes[idx as usize];
+            (n.loc, n.bbox)
+        };
+        assert!(
+            loc.depth() < MAX_DEPTH,
+            "refinement beyond MAX_DEPTH={MAX_DEPTH}"
+        );
+        let mut children = Vec::with_capacity(8);
+        for oct in 0..8u8 {
+            let child_idx = self.nodes.len() as u32;
+            let cl = loc.child(oct);
+            self.nodes.push(LGrid {
+                loc: cl,
+                bbox: bbox.child(oct),
+                children: Vec::new(),
+                parent: idx,
+                rank: 0,
+                local: 0,
+            });
+            self.index.insert(cl, child_idx);
+            children.push(child_idx);
+        }
+        self.nodes[idx as usize].children = children;
+    }
+
+    /// Remove the children of `idx` (coarsening; used by steering). Children
+    /// must themselves be leaves. Returns false if the node was a leaf or
+    /// has non-leaf children.
+    pub fn coarsen(&mut self, idx: u32) -> bool {
+        let children = self.nodes[idx as usize].children.clone();
+        if children.is_empty() || children.iter().any(|&c| !self.nodes[c as usize].is_leaf())
+        {
+            return false;
+        }
+        // Arena compaction: mark-and-rebuild (coarsening is rare — steering
+        // only — so simplicity beats in-place trickery).
+        let drop: std::collections::HashSet<u32> = children.into_iter().collect();
+        let mut remap = vec![u32::MAX; self.nodes.len()];
+        let mut kept = Vec::with_capacity(self.nodes.len() - 8);
+        for (i, n) in self.nodes.iter().enumerate() {
+            if !drop.contains(&(i as u32)) {
+                remap[i] = kept.len() as u32;
+                kept.push(n.clone());
+            }
+        }
+        for n in &mut kept {
+            if n.parent != u32::MAX {
+                n.parent = remap[n.parent as usize];
+            }
+            n.children = n
+                .children
+                .iter()
+                .filter(|c| remap[**c as usize] != u32::MAX)
+                .map(|c| remap[*c as usize])
+                .collect();
+        }
+        self.nodes = kept;
+        self.rebuild_index();
+        true
+    }
+
+    /// Enforce 2:1 balance between face-adjacent leaves: any leaf whose
+    /// face neighbour is refined ≥ 2 levels deeper gets refined too.
+    pub fn balance(&mut self) {
+        loop {
+            let mut to_refine = Vec::new();
+            for (i, n) in self.nodes.iter().enumerate() {
+                if !n.is_leaf() {
+                    continue;
+                }
+                let d = n.depth();
+                let (ci, cj, ck) = n.loc.coords();
+                for (axis, dir) in [(0, -1i64), (0, 1), (1, -1), (1, 1), (2, -1), (2, 1)] {
+                    let mut c = [ci as i64, cj as i64, ck as i64];
+                    c[axis] += dir;
+                    let side = 1i64 << d;
+                    if c[axis] < 0 || c[axis] >= side {
+                        continue;
+                    }
+                    if let Some(loc) =
+                        LocCode::from_coords(d, c[0] as u32, c[1] as u32, c[2] as u32)
+                    {
+                        if let Some(nb) = self.lookup(loc) {
+                            // neighbour exists at same level: refined ≥2 deeper?
+                            if self.has_grandchildren(nb) {
+                                to_refine.push(i as u32);
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            if to_refine.is_empty() {
+                break;
+            }
+            for idx in to_refine {
+                self.refine(idx);
+            }
+        }
+    }
+
+    fn has_grandchildren(&self, idx: u32) -> bool {
+        self.nodes[idx as usize]
+            .children
+            .iter()
+            .any(|&c| !self.nodes[c as usize].is_leaf())
+    }
+
+    /// Leaf count.
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_leaf()).count()
+    }
+
+    /// Total interior cells across all *leaf* d-grids (the domain resolution
+    /// the paper quotes, e.g. depth 6 → 1024³ ≈ 1.07e9 cells when full).
+    pub fn n_leaf_cells(&self) -> u64 {
+        self.n_leaves() as u64 * crate::DGRID_CELLS as u64
+    }
+
+    /// Grid spacing (cell edge length) of a node at `depth`, assuming a
+    /// cubic domain.
+    pub fn h_at_depth(&self, depth: u32) -> f64 {
+        self.domain.extent(0) / ((1u64 << depth) as f64 * crate::DGRID_N as f64)
+    }
+
+    /// Indices of all nodes at `depth`, in arena order.
+    pub fn nodes_at_depth(&self, depth: u32) -> Vec<u32> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.depth() == depth)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+
+    pub fn max_depth(&self) -> u32 {
+        self.nodes.iter().map(|n| n.depth()).max().unwrap_or(0)
+    }
+
+    /// Depth-first pre-order traversal with Z-ordered children — the
+    /// Lebesgue curve ordering used for partitioning and for the row order
+    /// inside the checkpoint datasets.
+    pub fn dfs_order(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.nodes.len());
+        let mut stack = vec![0u32];
+        while let Some(idx) = stack.pop() {
+            out.push(idx);
+            let n = &self.nodes[idx as usize];
+            // push in reverse so children pop in Z-order
+            for &c in n.children.iter().rev() {
+                stack.push(c);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_tree_node_counts() {
+        // depth 2: 1 + 8 + 64
+        let t = SpaceTree::full(BBox::unit(), 2);
+        assert_eq!(t.len(), 73);
+        assert_eq!(t.n_leaves(), 64);
+        assert_eq!(t.max_depth(), 2);
+    }
+
+    #[test]
+    fn full_tree_leaf_cells_match_resolution() {
+        // depth 2 → (16·2²)³ = 64³ cells
+        let t = SpaceTree::full(BBox::unit(), 2);
+        assert_eq!(t.n_leaf_cells(), 64 * 64 * 64);
+    }
+
+    #[test]
+    fn bbox_children_tile_parent() {
+        let b = BBox {
+            min: [0.0, 1.0, 2.0],
+            max: [4.0, 5.0, 6.0],
+        };
+        let mut vol = 0.0;
+        for oct in 0..8 {
+            let c = b.child(oct);
+            vol += (0..3).map(|a| c.extent(a)).product::<f64>();
+            for a in 0..3 {
+                assert!(c.min[a] >= b.min[a] && c.max[a] <= b.max[a]);
+            }
+        }
+        let parent_vol: f64 = (0..3).map(|a| b.extent(a)).product();
+        assert!((vol - parent_vol).abs() < 1e-12);
+    }
+
+    #[test]
+    fn child_octant_orientation_matches_loccode() {
+        // octant bit layout is x|y|z in both BBox::child and LocCode
+        let b = BBox::unit();
+        let c = b.child(0b100); // +x half
+        assert!(c.min[0] == 0.5 && c.min[1] == 0.0 && c.min[2] == 0.0);
+        let t = SpaceTree::full(BBox::unit(), 1);
+        let idx = t.lookup(LocCode::ROOT.child(0b100)).unwrap();
+        assert_eq!(t.node(idx).bbox, c);
+    }
+
+    #[test]
+    fn lookup_after_refine() {
+        let mut t = SpaceTree::root_only(BBox::unit());
+        t.refine(0);
+        let c = LocCode::ROOT.child(3);
+        let idx = t.lookup(c).unwrap();
+        assert_eq!(t.node(idx).loc, c);
+        assert_eq!(t.node(idx).parent, 0);
+    }
+
+    #[test]
+    fn adaptive_refinement_refines_region_of_interest() {
+        // refine only around the corner near the origin
+        let t = SpaceTree::adaptive(BBox::unit(), 3, &|b, _| {
+            b.contains_point([0.01, 0.01, 0.01]) || b.min == [0.0; 3]
+        });
+        assert!(t.max_depth() == 3);
+        assert!(t.len() < SpaceTree::full(BBox::unit(), 3).len());
+        // the far corner must stay coarse
+        let far = LocCode::from_coords(3, 7, 7, 7).unwrap();
+        assert!(t.lookup(far).is_none());
+    }
+
+    #[test]
+    fn balance_limits_level_jump_to_one() {
+        let t = SpaceTree::adaptive(BBox::unit(), 4, &|b, _| {
+            b.contains_point([0.01, 0.01, 0.01])
+        });
+        // check every leaf against its face neighbours
+        for n in t.nodes.iter().filter(|n| n.is_leaf()) {
+            let d = n.depth();
+            let (i, j, k) = n.loc.coords();
+            for (axis, dir) in [(0, -1i64), (0, 1), (1, -1), (1, 1), (2, -1), (2, 1)] {
+                let mut c = [i as i64, j as i64, k as i64];
+                c[axis] += dir;
+                if c[axis] < 0 || c[axis] >= 1 << d {
+                    continue;
+                }
+                if let Some(loc) = LocCode::from_coords(d, c[0] as u32, c[1] as u32, c[2] as u32)
+                {
+                    if let Some(nb) = t.lookup(loc) {
+                        for &ch in &t.node(nb).children {
+                            assert!(
+                                t.node(ch).is_leaf(),
+                                "2:1 balance violated at {:?}",
+                                n.loc
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coarsen_removes_children() {
+        let mut t = SpaceTree::full(BBox::unit(), 1);
+        assert_eq!(t.len(), 9);
+        assert!(t.coarsen(0));
+        assert_eq!(t.len(), 1);
+        assert!(t.node(0).is_leaf());
+        assert!(!t.coarsen(0)); // already a leaf
+    }
+
+    #[test]
+    fn coarsen_refuses_nonleaf_children() {
+        let mut t = SpaceTree::full(BBox::unit(), 2);
+        assert!(!t.coarsen(0));
+    }
+
+    #[test]
+    fn dfs_order_starts_at_root_and_visits_all() {
+        let t = SpaceTree::full(BBox::unit(), 2);
+        let order = t.dfs_order();
+        assert_eq!(order.len(), t.len());
+        assert_eq!(order[0], 0);
+        // parent precedes children
+        let pos: HashMap<u32, usize> =
+            order.iter().enumerate().map(|(p, &i)| (i, p)).collect();
+        for (i, n) in t.nodes.iter().enumerate() {
+            if n.parent != u32::MAX {
+                assert!(pos[&n.parent] < pos[&(i as u32)]);
+            }
+        }
+    }
+
+    #[test]
+    fn h_at_depth_halves_per_level() {
+        let t = SpaceTree::full(BBox::unit(), 2);
+        assert!((t.h_at_depth(0) - 1.0 / 16.0).abs() < 1e-12);
+        assert!((t.h_at_depth(2) - 1.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rebuild_index_recovers_lookups() {
+        let t = SpaceTree::full(BBox::unit(), 1);
+        // simulate deserialisation: nodes survive, index does not
+        let mut t2 = SpaceTree {
+            nodes: t.nodes.clone(),
+            index: HashMap::new(),
+            domain: t.domain,
+        };
+        assert!(t2.lookup(LocCode::ROOT.child(5)).is_none());
+        t2.rebuild_index();
+        assert_eq!(t2.len(), t.len());
+        assert_eq!(
+            t2.lookup(LocCode::ROOT.child(5)),
+            t.lookup(LocCode::ROOT.child(5))
+        );
+    }
+}

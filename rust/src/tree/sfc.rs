@@ -1,0 +1,178 @@
+//! Space-filling-curve partitioning (paper §2.2).
+//!
+//! *"The assignment per se follows a space-filling Lebesgue curve that has
+//! proven to preserve neighbouring relations, thus reducing the necessary
+//! communication overhead."*
+//!
+//! The Lebesgue curve is the Z-order / Morton curve. For the adaptive tree
+//! we use its natural generalisation: a depth-first pre-order traversal with
+//! Z-ordered children (exactly [`SpaceTree::dfs_order`]), which reduces to
+//! plain Morton order on a single fully-refined level. Ranks receive
+//! contiguous, load-balanced chunks of this sequence; contiguity along the
+//! curve is what preserves spatial locality. The root is first on the curve
+//! and therefore always lands on rank 0 — the paper's invariant that the
+//! root grid is row 0 of every checkpoint dataset.
+
+use crate::tree::SpaceTree;
+
+/// Result of a partition: per-node rank/local assignment is written into the
+/// tree; the summary is returned for diagnostics and the I/O layer.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub n_ranks: u32,
+    /// Number of grids per rank.
+    pub counts: Vec<u32>,
+    /// Arena indices in curve order (row order of checkpoint datasets).
+    pub curve: Vec<u32>,
+}
+
+impl Partition {
+    /// Prefix sum of `counts`: global row index where each rank's block of
+    /// dataset rows starts (the paper computes this with an MPI prefix
+    /// reduction, §3.2).
+    pub fn row_offsets(&self) -> Vec<u64> {
+        let mut off = Vec::with_capacity(self.counts.len() + 1);
+        let mut acc = 0u64;
+        for &c in &self.counts {
+            off.push(acc);
+            acc += c as u64;
+        }
+        off.push(acc);
+        off
+    }
+}
+
+/// Assign every l-grid (interior nodes included — their d-grids hold the
+/// restricted data) to one of `n_ranks` ranks along the Lebesgue curve,
+/// writing `rank` and `local` into the tree. Balanced to ±1 grid.
+pub fn partition(tree: &mut SpaceTree, n_ranks: u32) -> Partition {
+    assert!(n_ranks >= 1);
+    let curve = tree.dfs_order();
+    let n = curve.len() as u32;
+    let base = n / n_ranks;
+    let rem = n % n_ranks;
+    let mut counts = vec![0u32; n_ranks as usize];
+    let mut pos = 0u32;
+    for r in 0..n_ranks {
+        let take = base + if r < rem { 1 } else { 0 };
+        let mut local = 0u32;
+        for _ in 0..take {
+            let idx = curve[pos as usize];
+            let node = &mut tree.nodes[idx as usize];
+            node.rank = r;
+            node.local = local;
+            local += 1;
+            pos += 1;
+        }
+        counts[r as usize] = take;
+    }
+    Partition {
+        n_ranks,
+        counts,
+        curve,
+    }
+}
+
+/// Morton key of a leaf at `(i, j, k)` on level `depth` — exposed for tests
+/// and for the VPIC workload generator.
+pub fn morton_key(depth: u32, i: u32, j: u32, k: u32) -> u64 {
+    let mut key = 0u64;
+    for lvl in (0..depth).rev() {
+        let oct = (((i >> lvl) & 1) << 2) | (((j >> lvl) & 1) << 1) | ((k >> lvl) & 1);
+        key = (key << 3) | oct as u64;
+    }
+    key
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::uid::LocCode;
+    use crate::tree::BBox;
+
+    #[test]
+    fn partition_is_balanced() {
+        let mut t = SpaceTree::full(BBox::unit(), 2); // 73 nodes
+        let p = partition(&mut t, 8);
+        assert_eq!(p.counts.iter().sum::<u32>(), 73);
+        let (min, max) = (
+            *p.counts.iter().min().unwrap(),
+            *p.counts.iter().max().unwrap(),
+        );
+        assert!(max - min <= 1, "{:?}", p.counts);
+    }
+
+    #[test]
+    fn root_is_rank0_row0() {
+        let mut t = SpaceTree::full(BBox::unit(), 3);
+        let p = partition(&mut t, 17);
+        assert_eq!(t.node(0).rank, 0);
+        assert_eq!(t.node(0).local, 0);
+        assert_eq!(p.curve[0], 0);
+    }
+
+    #[test]
+    fn ranks_are_contiguous_on_curve() {
+        let mut t = SpaceTree::full(BBox::unit(), 2);
+        let p = partition(&mut t, 5);
+        let ranks: Vec<u32> = p.curve.iter().map(|&i| t.node(i).rank).collect();
+        // non-decreasing along the curve
+        assert!(ranks.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn locals_are_sequential_within_rank() {
+        let mut t = SpaceTree::full(BBox::unit(), 2);
+        let p = partition(&mut t, 4);
+        for r in 0..4 {
+            let locals: Vec<u32> = p
+                .curve
+                .iter()
+                .filter(|&&i| t.node(i).rank == r)
+                .map(|&i| t.node(i).local)
+                .collect();
+            let expect: Vec<u32> = (0..locals.len() as u32).collect();
+            assert_eq!(locals, expect);
+        }
+    }
+
+    #[test]
+    fn row_offsets_prefix_sum() {
+        let p = Partition {
+            n_ranks: 3,
+            counts: vec![4, 2, 5],
+            curve: vec![],
+        };
+        assert_eq!(p.row_offsets(), vec![0, 4, 6, 11]);
+    }
+
+    #[test]
+    fn morton_key_locality() {
+        // consecutive keys differ in one coordinate step at the finest level
+        let a = morton_key(3, 0, 0, 0);
+        let b = morton_key(3, 0, 0, 1);
+        assert_eq!(b, a + 1);
+        // key ordering equals LocCode ordering within a level
+        let l1 = LocCode::from_coords(3, 1, 2, 3).unwrap();
+        let l2 = LocCode::from_coords(3, 1, 2, 4).unwrap();
+        assert_eq!(
+            morton_key(3, 1, 2, 3) < morton_key(3, 1, 2, 4),
+            l1.0 < l2.0
+        );
+    }
+
+    #[test]
+    fn partition_single_rank_takes_all() {
+        let mut t = SpaceTree::full(BBox::unit(), 1);
+        let p = partition(&mut t, 1);
+        assert_eq!(p.counts, vec![9]);
+        assert!(t.nodes.iter().all(|n| n.rank == 0));
+    }
+
+    #[test]
+    fn more_ranks_than_grids() {
+        let mut t = SpaceTree::root_only(BBox::unit());
+        let p = partition(&mut t, 4);
+        assert_eq!(p.counts, vec![1, 0, 0, 0]);
+    }
+}

@@ -1,0 +1,225 @@
+//! Grid **Unique Identifiers** (UIDs).
+//!
+//! The paper (§3.1): *"grid property stores the Unique Identifier (UID) for
+//! every grid, encoding the residing rank, a rank unique identifier and its
+//! location in the structure."*
+//!
+//! We pack all three into a `u64`:
+//!
+//! ```text
+//!  63        44 43        24 23                     0
+//! ┌────────────┬────────────┬────────────────────────┐
+//! │ rank (20b) │ local (20b) │ location code (24b)    │
+//! └────────────┴────────────┴────────────────────────┘
+//! ```
+//!
+//! The location code is a *sentinelled Morton path*: a leading `1` bit
+//! followed by 3 bits (child octant) per tree level, so the root is `0b1`
+//! and the code length encodes the depth. 24 bits accommodate depth ≤ 7 —
+//! exactly the deepest domain the paper evaluates (2048³, depth 7).
+//!
+//! `UID == 0` is reserved as the null/leaf marker in the `subgrid uid`
+//! dataset; the root's non-empty sentinel guarantees every real grid has a
+//! non-zero UID.
+
+
+/// Maximum tree depth representable in the 24-bit location code.
+pub const MAX_DEPTH: u32 = 7;
+
+const RANK_BITS: u32 = 20;
+const LOCAL_BITS: u32 = 20;
+const LOC_BITS: u32 = 24;
+
+/// Packed grid identifier (see module docs for layout).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Uid(pub u64);
+
+/// Sentinelled Morton path identifying a node's position in the octree,
+/// independent of the rank assignment.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct LocCode(pub u32);
+
+impl LocCode {
+    /// The root node's code: just the sentinel bit.
+    pub const ROOT: LocCode = LocCode(1);
+
+    /// Depth of the node this code addresses (root = 0).
+    pub fn depth(self) -> u32 {
+        debug_assert!(self.0 != 0, "invalid (empty) location code");
+        (31 - self.0.leading_zeros()) / 3
+    }
+
+    /// Code of the `octant`-th child (octant < 8, bit order x|y|z).
+    pub fn child(self, octant: u8) -> LocCode {
+        debug_assert!(octant < 8);
+        debug_assert!(self.depth() < MAX_DEPTH, "exceeds MAX_DEPTH");
+        LocCode((self.0 << 3) | octant as u32)
+    }
+
+    /// Code of the parent, or `None` for the root.
+    pub fn parent(self) -> Option<LocCode> {
+        if self == LocCode::ROOT {
+            None
+        } else {
+            Some(LocCode(self.0 >> 3))
+        }
+    }
+
+    /// The child octant this node occupies within its parent.
+    pub fn octant(self) -> u8 {
+        (self.0 & 7) as u8
+    }
+
+    /// Integer cell coordinates `(i, j, k)` of this node within its level
+    /// (each in `0..2^depth`), by de-interleaving the Morton path.
+    pub fn coords(self) -> (u32, u32, u32) {
+        let d = self.depth();
+        let (mut i, mut j, mut k) = (0, 0, 0);
+        for lvl in 0..d {
+            let oct = (self.0 >> (3 * (d - 1 - lvl))) & 7;
+            i = (i << 1) | ((oct >> 2) & 1);
+            j = (j << 1) | ((oct >> 1) & 1);
+            k = (k << 1) | (oct & 1);
+        }
+        (i, j, k)
+    }
+
+    /// Inverse of [`coords`](Self::coords): build a code from per-level cell
+    /// coordinates. Returns `None` if any coordinate exceeds `2^depth`.
+    pub fn from_coords(depth: u32, i: u32, j: u32, k: u32) -> Option<LocCode> {
+        if depth > MAX_DEPTH || i >= 1 << depth || j >= 1 << depth || k >= 1 << depth {
+            return None;
+        }
+        let mut code = 1u32;
+        for lvl in (0..depth).rev() {
+            let oct = (((i >> lvl) & 1) << 2) | (((j >> lvl) & 1) << 1) | ((k >> lvl) & 1);
+            code = (code << 3) | oct;
+        }
+        Some(LocCode(code))
+    }
+}
+
+impl Uid {
+    /// The null marker used for "no child" entries in `subgrid uid`.
+    pub const NULL: Uid = Uid(0);
+
+    pub fn new(rank: u32, local: u32, loc: LocCode) -> Uid {
+        debug_assert!(rank < 1 << RANK_BITS);
+        debug_assert!(local < 1 << LOCAL_BITS);
+        debug_assert!(loc.0 < 1 << LOC_BITS);
+        Uid(((rank as u64) << (LOCAL_BITS + LOC_BITS))
+            | ((local as u64) << LOC_BITS)
+            | loc.0 as u64)
+    }
+
+    /// MPI rank this grid resides on.
+    pub fn rank(self) -> u32 {
+        (self.0 >> (LOCAL_BITS + LOC_BITS)) as u32 & ((1 << RANK_BITS) - 1)
+    }
+
+    /// Rank-local sequential identifier.
+    pub fn local(self) -> u32 {
+        (self.0 >> LOC_BITS) as u32 & ((1 << LOCAL_BITS) - 1)
+    }
+
+    /// Position in the tree.
+    pub fn loc(self) -> LocCode {
+        LocCode(self.0 as u32 & ((1 << LOC_BITS) - 1))
+    }
+
+    pub fn is_null(self) -> bool {
+        self.0 == 0
+    }
+}
+
+impl std::fmt::Debug for Uid {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_null() {
+            write!(f, "Uid(NULL)")
+        } else {
+            write!(
+                f,
+                "Uid(r{} l{} loc{:b})",
+                self.rank(),
+                self.local(),
+                self.loc().0
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn root_code_properties() {
+        assert_eq!(LocCode::ROOT.depth(), 0);
+        assert_eq!(LocCode::ROOT.parent(), None);
+        assert_eq!(LocCode::ROOT.coords(), (0, 0, 0));
+    }
+
+    #[test]
+    fn child_parent_roundtrip() {
+        let c = LocCode::ROOT.child(5).child(3).child(7);
+        assert_eq!(c.depth(), 3);
+        assert_eq!(c.octant(), 7);
+        assert_eq!(c.parent().unwrap().octant(), 3);
+        assert_eq!(c.parent().unwrap().parent().unwrap().octant(), 5);
+        assert_eq!(c.parent().unwrap().parent().unwrap().parent(), Some(LocCode::ROOT));
+    }
+
+    #[test]
+    fn coords_roundtrip_exhaustive_depth3() {
+        for i in 0..8 {
+            for j in 0..8 {
+                for k in 0..8 {
+                    let c = LocCode::from_coords(3, i, j, k).unwrap();
+                    assert_eq!(c.coords(), (i, j, k));
+                    assert_eq!(c.depth(), 3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_coords_bounds() {
+        assert!(LocCode::from_coords(2, 4, 0, 0).is_none());
+        assert!(LocCode::from_coords(8, 0, 0, 0).is_none());
+        assert!(LocCode::from_coords(2, 3, 3, 3).is_some());
+    }
+
+    #[test]
+    fn uid_field_extraction() {
+        let loc = LocCode::from_coords(4, 3, 9, 14).unwrap();
+        let uid = Uid::new(1043, 77, loc);
+        assert_eq!(uid.rank(), 1043);
+        assert_eq!(uid.local(), 77);
+        assert_eq!(uid.loc(), loc);
+        assert!(!uid.is_null());
+    }
+
+    #[test]
+    fn uid_null_is_zero() {
+        assert!(Uid::NULL.is_null());
+        // Root UID must be distinguishable from NULL even for rank 0 local 0.
+        assert!(!Uid::new(0, 0, LocCode::ROOT).is_null());
+    }
+
+    #[test]
+    fn max_depth_fits_in_code() {
+        let c = LocCode::from_coords(MAX_DEPTH, 127, 0, 127).unwrap();
+        assert!(c.0 < 1 << 24);
+        assert_eq!(c.depth(), MAX_DEPTH);
+    }
+
+    #[test]
+    fn morton_ordering_is_z_order_within_level() {
+        // Z-order: increasing k is the fastest-varying dimension.
+        let a = LocCode::from_coords(1, 0, 0, 0).unwrap();
+        let b = LocCode::from_coords(1, 0, 0, 1).unwrap();
+        let c = LocCode::from_coords(1, 0, 1, 0).unwrap();
+        let d = LocCode::from_coords(1, 1, 0, 0).unwrap();
+        assert!(a.0 < b.0 && b.0 < c.0 && c.0 < d.0);
+    }
+}

@@ -1,0 +1,60 @@
+//! Tiny measurement harness for the `cargo bench` targets (criterion is not
+//! available offline): warmup + repeated timing with min/mean/max reporting.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark case.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub iters: u32,
+    pub min: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl Sample {
+    pub fn fmt_ms(&self) -> String {
+        format!(
+            "min {:.3} ms  mean {:.3} ms  max {:.3} ms  ({} iters)",
+            self.min * 1e3,
+            self.mean * 1e3,
+            self.max * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` once for warmup then `iters` times, timing each run.
+pub fn measure(iters: u32, mut f: impl FnMut()) -> Sample {
+    f(); // warmup
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let min = times.iter().cloned().fold(f64::MAX, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Sample {
+        iters,
+        min,
+        mean,
+        max,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_ordered_stats() {
+        let s = measure(5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.min <= s.mean && s.mean <= s.max);
+        assert_eq!(s.iters, 5);
+        assert!(!s.fmt_ms().is_empty());
+    }
+}

@@ -1,0 +1,133 @@
+//! Small in-tree replacements for crates unavailable in this build
+//! environment (rayon, rand, proptest): a work-stealing-free parallel-for,
+//! a deterministic SplitMix/xoshiro RNG, and a tiny property-test driver.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Global cap on [`parallel_for`] worker threads (0 = use all cores).
+/// Used by the strong-scaling benches (Fig 2b) to emulate varying process
+/// counts on one host.
+static MAX_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Cap the number of threads `parallel_for` may use (0 restores all cores).
+pub fn set_max_threads(n: usize) {
+    MAX_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Run `f(i)` for `i in 0..n` on all available cores (scoped threads with an
+/// atomic work counter). `f` must be safe to call concurrently for distinct
+/// `i` — the typical use is writing to disjoint chunks of an output buffer
+/// through [`SendPtr`].
+pub fn parallel_for(n: usize, f: impl Fn(usize) + Sync) {
+    let cap = MAX_THREADS.load(Ordering::Relaxed);
+    let threads = std::thread::available_parallelism()
+        .map(|x| x.get())
+        .unwrap_or(1)
+        .min(if cap == 0 { usize::MAX } else { cap })
+        .min(n);
+    // tiny batches: thread-spawn overhead (~50 µs) exceeds the work on the
+    // coarse multigrid levels — run serially (perf pass)
+    if threads <= 1 || n < 8 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// A raw pointer wrapper asserting cross-thread use is externally
+/// synchronised (disjoint index ranges). Used to hand mutable buffers to
+/// [`parallel_for`] closures.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(slice: &mut [T]) -> SendPtr<T> {
+        SendPtr(slice.as_mut_ptr())
+    }
+
+    /// # Safety
+    /// Caller guarantees `[offset, offset+len)` is in bounds and disjoint
+    /// from every other concurrently reconstructed slice.
+    pub unsafe fn slice(&self, offset: usize, len: usize) -> &'static mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(offset), len)
+    }
+}
+
+/// Format a byte count as a human-readable string (for bench tables).
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Format a GB/s bandwidth value the way the paper's plots label them.
+pub fn fmt_gbps(bytes: f64, seconds: f64) -> String {
+    format!("{:.2} GB/s", bytes / seconds / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let n = 1000;
+        let mut out = vec![0u32; n];
+        let ptr = SendPtr::new(&mut out);
+        parallel_for(n, |i| {
+            let s = unsafe { ptr.slice(i, 1) };
+            s[0] = i as u32 + 1;
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn parallel_for_zero_and_one() {
+        parallel_for(0, |_| panic!("must not run"));
+        let mut hit = vec![false];
+        let ptr = SendPtr::new(&mut hit);
+        parallel_for(1, |i| unsafe { ptr.slice(i, 1)[0] = true });
+        assert!(hit[0]);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512.00 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(337 * 1024 * 1024 * 1024), "337.00 GiB");
+    }
+
+    #[test]
+    fn fmt_gbps_scaling() {
+        assert_eq!(fmt_gbps(2e9, 1.0), "2.00 GB/s");
+        assert_eq!(fmt_gbps(1e9, 2.0), "0.50 GB/s");
+    }
+}

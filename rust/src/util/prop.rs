@@ -1,0 +1,59 @@
+//! A miniature property-testing driver (stand-in for proptest, which is not
+//! available offline): runs a property over `CASES` seeded random inputs and
+//! reports the failing seed so a case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Number of random cases per property (tuned for CI wall-clock).
+pub const CASES: u64 = 64;
+
+/// Run `prop(rng)` for [`CASES`] distinct deterministic seeds derived from
+/// `base_seed`. Panics (with the seed) on the first failing case.
+pub fn check(name: &str, base_seed: u64, mut prop: impl FnMut(&mut Rng)) {
+    for case in 0..CASES {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("count", 1, |_| count += 1);
+        assert_eq!(count, CASES);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        check("fails", 2, |rng| {
+            assert!(rng.f64() < 0.5, "too big");
+        });
+    }
+
+    #[test]
+    fn seeds_are_distinct_across_cases() {
+        let mut values = Vec::new();
+        check("collect", 3, |rng| values.push(rng.next_u64()));
+        values.sort_unstable();
+        values.dedup();
+        assert_eq!(values.len(), CASES as usize);
+    }
+}

@@ -1,0 +1,173 @@
+//! **VPIC-IO** — the reference I/O kernel the paper compares against (§5.3).
+//!
+//! VPIC-IO (from ExaHDF5's Parallel I/O Kernel suite, used in the
+//! trillion-particle "Hero I/O" run on Hopper) writes a *particle* dump:
+//! eight float32 properties per particle (x, y, z, px, py, pz and two id
+//! words), each as one flat 1-D dataset in a shared HDF5 file, every rank
+//! writing one contiguous hyperslab per dataset.
+//!
+//! Compared with the mpfluid kernel its data structure is much lighter —
+//! no topology datasets, no hierarchical grids, eight equal flat arrays —
+//! which is exactly why the paper uses it as the architecture-independent
+//! yardstick: *"scaling the total amount of data for both kernels to be
+//! equal"* (§5.3), the same optimisations applied. This module reproduces
+//! that setup on the same [`crate::pario`] + [`crate::cluster`] substrate.
+
+use anyhow::Result;
+
+use crate::cluster::{IoTuning, Machine, WriteWorkload};
+use crate::h5lite::{Dtype, H5File};
+use crate::pario::{IoReport, ParallelIo, SlabWrite};
+use crate::util::rng::Rng;
+
+/// The eight per-particle properties of the VPIC dump.
+pub const PROPS: [&str; 8] = ["x", "y", "z", "px", "py", "pz", "id1", "id2"];
+
+/// Bytes per particle across all property datasets.
+pub const BYTES_PER_PARTICLE: u64 = 8 * 4;
+
+/// Particle count that makes a VPIC dump byte-equal to an mpfluid
+/// checkpoint of `total_bytes`.
+pub fn particles_for_bytes(total_bytes: u64) -> u64 {
+    total_bytes / BYTES_PER_PARTICLE
+}
+
+/// Report of one VPIC-IO dump.
+#[derive(Clone, Copy, Debug)]
+pub struct VpicReport {
+    pub io: IoReport,
+    pub particles: u64,
+}
+
+/// Write a synthetic VPIC particle dump of `particles` particles from
+/// `n_ranks` logical ranks into `/Step#0` of `file` (H5Part-style layout).
+pub fn write_dump(
+    file: &mut H5File,
+    io: &ParallelIo,
+    particles: u64,
+    seed: u64,
+) -> Result<VpicReport> {
+    let n_ranks = io.n_ranks;
+    let per_rank = particles / n_ranks;
+    let particles = per_rank * n_ranks; // trim remainder, keeps slabs equal
+    let group = "/Step#0";
+    let datasets: Vec<_> = PROPS
+        .iter()
+        .map(|p| file.create_dataset(group, p, Dtype::F32, &[particles]))
+        .collect::<Result<_>>()?;
+
+    // synthesise per-rank property buffers (deterministic)
+    let mut buffers: Vec<Vec<Vec<u8>>> = Vec::with_capacity(n_ranks as usize);
+    for r in 0..n_ranks {
+        let mut rng = Rng::new(seed ^ (r * 2654435761));
+        let mut per_prop = Vec::with_capacity(PROPS.len());
+        for _ in &PROPS {
+            let mut v = vec![0.0f32; per_rank as usize];
+            rng.fill_f32(&mut v, -1.0, 1.0);
+            per_prop.push(crate::h5lite::codec::f32s_to_bytes(&v));
+        }
+        buffers.push(per_prop);
+    }
+    let mut writes = Vec::with_capacity((n_ranks as usize) * PROPS.len());
+    for (r, per_prop) in buffers.iter().enumerate() {
+        for (d, buf) in per_prop.iter().enumerate() {
+            writes.push(SlabWrite {
+                rank: r as u32,
+                ds: &datasets[d],
+                row_start: r as u64 * per_rank,
+                data: buf,
+            });
+        }
+    }
+    let report = io.collective_write(file, &writes, PROPS.len() as u64, particles)?;
+    file.commit()?;
+    Ok(VpicReport {
+        io: report,
+        particles,
+    })
+}
+
+/// Model-only estimate of a VPIC dump on a target machine (for the Fig 8
+/// series at scales we cannot materialise): same byte volume as the
+/// mpfluid checkpoint, 8 datasets, one row per particle *block* (VPIC
+/// slabs are per-rank, so the row count the lock/messaging terms see is
+/// `ranks`, not per-cell).
+pub fn estimate(machine: &Machine, ranks: u64, total_bytes: u64, tuning: &IoTuning) -> f64 {
+    let est = machine.estimate_write(
+        &WriteWorkload {
+            ranks,
+            total_bytes,
+            n_datasets: PROPS.len() as u64,
+            n_grids: ranks, // one contiguous block per rank per dataset
+        },
+        tuning,
+    );
+    est.bandwidth
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("vpic_test_{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn dump_writes_all_property_datasets() {
+        let p = tmp("dump");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 4);
+        let rep = write_dump(&mut f, &io, 1000, 7).unwrap();
+        assert_eq!(rep.particles, 1000);
+        assert_eq!(rep.io.bytes, 1000 * BYTES_PER_PARTICLE);
+        for prop in PROPS {
+            let ds = f.dataset("/Step#0", prop).unwrap();
+            assert_eq!(ds.shape, vec![1000]);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn byte_equality_with_mpfluid_checkpoint() {
+        let bytes = 337u64 * (1 << 30);
+        let particles = particles_for_bytes(bytes);
+        assert_eq!(particles * BYTES_PER_PARTICLE, bytes);
+    }
+
+    #[test]
+    fn vpic_and_mpfluid_comparable_on_juqueen_model() {
+        // Fig 8a: "excellent performance for both kernels", similar curves.
+        let m = Machine::juqueen();
+        let tuning = IoTuning::default();
+        for ranks in [2048u64, 8192, 16384] {
+            let w = crate::cluster::paper_depth6_workload(ranks);
+            let mp = m.estimate_write(&w, &tuning).bandwidth;
+            let vp = estimate(&m, ranks, w.total_bytes, &tuning);
+            let ratio = mp / vp;
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "ranks {ranks}: mpfluid {mp:.2e} vs vpic {vp:.2e}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let p1 = tmp("det1");
+        let p2 = tmp("det2");
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 2);
+        let mut f1 = H5File::create(&p1, 1).unwrap();
+        let mut f2 = H5File::create(&p2, 1).unwrap();
+        write_dump(&mut f1, &io, 64, 42).unwrap();
+        write_dump(&mut f2, &io, 64, 42).unwrap();
+        let d1 = f1.dataset("/Step#0", "x").unwrap();
+        let d2 = f2.dataset("/Step#0", "x").unwrap();
+        assert_eq!(
+            f1.read_rows(&d1, 0, 64).unwrap(),
+            f2.read_rows(&d2, 0, 64).unwrap()
+        );
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+}

@@ -1,0 +1,417 @@
+//! The **sliding window** (paper §2.3, §3.1): selective, level-of-detail
+//! bounded visualisation access — online against the running simulation,
+//! offline against any snapshot in the h5lite file.
+//!
+//! The key property in both modes: the data volume returned is bounded by
+//! the grid *budget*, not by the domain size. Large windows come back at a
+//! coarse level of detail (the interior d-grids hold the bottom-up averaged
+//! values), small windows descend to the finest grids — "zooming into the
+//! data" — so even a trillion-cell domain is explorable over a fixed-rate
+//! link.
+//!
+//! ## Online path (paper Fig 3)
+//!
+//! 1. the front-end client sends a request to the **collector**'s TCP
+//!    socket;
+//! 2. the collector forwards the query to the neighbourhood server, which
+//!    selects the relevant d-grids at the right level of detail;
+//! 3. + 4. the owning processes (here: the shared domain state) provide the
+//!    selected grid data to the collector;
+//! 5. the collector streams the response back to the client.
+//!
+//! ## Offline path (paper §3.2)
+//!
+//! The same traversal over the snapshot datasets: start at the root grid
+//! (always row 0 of `grid_property`), follow `subgrid uid` links through a
+//! UID→row map, prune by `bounding box`, stop when descending would burst
+//! the budget, and read *only the selected rows* of `current_cell_data`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::Simulation;
+use crate::h5lite::{codec, H5File};
+use crate::iokernel::{self, ROW_ELEMS};
+use crate::tree::uid::Uid;
+use crate::tree::BBox;
+use crate::{DGRID_CELLS, NVAR};
+
+/// One grid's worth of visualisation data.
+#[derive(Clone, Debug)]
+pub struct WindowGrid {
+    pub uid: Uid,
+    pub depth: u32,
+    pub bbox: BBox,
+    /// `NVAR · 16³` values: all variables' interiors, variable-major.
+    pub data: Vec<f32>,
+}
+
+// ---------------------------------------------------------------------------
+// offline window
+// ---------------------------------------------------------------------------
+
+/// Offline sliding-window query against the snapshot at time `t`.
+pub fn offline_window(
+    file: &H5File,
+    t: f64,
+    window: &BBox,
+    budget: usize,
+) -> Result<Vec<WindowGrid>> {
+    let group = iokernel::ts_group(t);
+    let ds_prop = file.dataset(&group, "grid_property")?;
+    let ds_sub = file.dataset(&group, "subgrid_uid")?;
+    let ds_bbox = file.dataset(&group, "bounding_box")?;
+    let ds_cur = file.dataset(&group, "current_cell_data")?;
+    let uids = file.read_all_u64(&ds_prop)?;
+    if uids.is_empty() {
+        bail!("window: empty snapshot");
+    }
+    // UID → row index (the offline analogue of the neighbourhood server)
+    let row_of: std::collections::HashMap<u64, u64> = uids
+        .iter()
+        .enumerate()
+        .map(|(r, &u)| (u, r as u64))
+        .collect();
+
+    let bbox_of = |row: u64| -> Result<BBox> {
+        let b = codec::bytes_to_f64s(&file.read_rows(&ds_bbox, row, 1)?);
+        Ok(BBox {
+            min: [b[0], b[1], b[2]],
+            max: [b[3], b[4], b[5]],
+        })
+    };
+    let children_of = |row: u64| -> Result<Vec<u64>> {
+        let subs = codec::bytes_to_u64s(&file.read_rows(&ds_sub, row, 1)?);
+        Ok(subs
+            .into_iter()
+            .filter(|&u| u != 0)
+            .filter_map(|u| row_of.get(&u).copied())
+            .collect())
+    };
+
+    // LOD descent from the root (row 0), identical to
+    // NeighbourhoodServer::select_window but over file rows.
+    let mut current: Vec<u64> = if bbox_of(0)?.intersects(window) {
+        vec![0]
+    } else {
+        Vec::new()
+    };
+    loop {
+        let mut next = Vec::with_capacity(current.len() * 4);
+        let mut descended = false;
+        for &row in &current {
+            let kids = children_of(row)?;
+            if kids.is_empty() {
+                next.push(row);
+            } else {
+                let hits: Vec<u64> = kids
+                    .into_iter()
+                    .filter(|&k| bbox_of(k).map(|b| b.intersects(window)).unwrap_or(false))
+                    .collect();
+                if hits.is_empty() {
+                    next.push(row);
+                } else {
+                    descended = true;
+                    next.extend(hits);
+                }
+            }
+        }
+        if !descended || next.len() > budget {
+            break;
+        }
+        current = next;
+    }
+
+    // read only the selected rows
+    current
+        .into_iter()
+        .map(|row| {
+            let data = codec::bytes_to_f32s(&file.read_rows(&ds_cur, row, 1)?);
+            let uid = Uid(uids[row as usize]);
+            Ok(WindowGrid {
+                uid,
+                depth: uid.loc().depth(),
+                bbox: bbox_of(row)?,
+                data,
+            })
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// online window: collector process + client
+// ---------------------------------------------------------------------------
+
+const REQ_MAGIC: u32 = 0x5357_494E; // "SWIN"
+
+/// Handle to a running collector thread.
+pub struct Collector {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Collector {
+    /// Spawn the collector on an ephemeral localhost port, serving
+    /// sliding-window queries against the shared simulation state.
+    pub fn spawn(sim: Arc<RwLock<Simulation>>) -> Result<Collector> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("collector bind")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let _ = handle_client(stream, &sim);
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Collector {
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+}
+
+impl Drop for Collector {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_client(mut stream: TcpStream, sim: &Arc<RwLock<Simulation>>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // ---- request: magic, bbox, budget --------------------------------- (1)
+    let mut req = [0u8; 4 + 48 + 4];
+    stream.read_exact(&mut req)?;
+    let magic = u32::from_le_bytes(req[0..4].try_into().unwrap());
+    if magic != REQ_MAGIC {
+        bail!("collector: bad request magic");
+    }
+    let f = |i: usize| f64::from_le_bytes(req[4 + i * 8..12 + i * 8].try_into().unwrap());
+    let window = BBox {
+        min: [f(0), f(1), f(2)],
+        max: [f(3), f(4), f(5)],
+    };
+    let budget = u32::from_le_bytes(req[52..56].try_into().unwrap()) as usize;
+
+    // ---- neighbourhood server selects the grids ------------------------ (2)
+    let sim = sim.read().map_err(|_| anyhow!("collector: lock poisoned"))?;
+    let sel = sim.nbs.select_window(&window, budget);
+
+    // ---- owning processes provide the data, collector streams it ---- (3-5)
+    let mut out: Vec<u8> = Vec::with_capacity(4 + sel.len() * (8 + 4 + 48 + ROW_ELEMS * 4));
+    out.extend_from_slice(&(sel.len() as u32).to_le_bytes());
+    let mut interior = vec![0.0f32; DGRID_CELLS];
+    for idx in sel {
+        let node = sim.nbs.tree.node(idx);
+        out.extend_from_slice(&node.uid().0.to_le_bytes());
+        out.extend_from_slice(&node.depth().to_le_bytes());
+        for v in node.bbox.min.iter().chain(node.bbox.max.iter()) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in 0..NVAR {
+            sim.grids[idx as usize]
+                .cur
+                .extract_interior(v, &mut interior);
+            for x in &interior {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    drop(sim);
+    stream.write_all(&out)?;
+    Ok(())
+}
+
+/// Front-end client: one sliding-window query over TCP.
+pub fn query(addr: SocketAddr, window: &BBox, budget: u32) -> Result<Vec<WindowGrid>> {
+    let mut stream = TcpStream::connect(addr).context("window client connect")?;
+    let mut req = Vec::with_capacity(56);
+    req.extend_from_slice(&REQ_MAGIC.to_le_bytes());
+    for v in window.min.iter().chain(window.max.iter()) {
+        req.extend_from_slice(&v.to_le_bytes());
+    }
+    req.extend_from_slice(&budget.to_le_bytes());
+    stream.write_all(&req)?;
+
+    let mut n_buf = [0u8; 4];
+    stream.read_exact(&mut n_buf)?;
+    let n = u32::from_le_bytes(n_buf) as usize;
+    let mut grids = Vec::with_capacity(n);
+    let rec_len = 8 + 4 + 48 + ROW_ELEMS * 4;
+    let mut rec = vec![0u8; rec_len];
+    for _ in 0..n {
+        stream.read_exact(&mut rec)?;
+        let uid = Uid(u64::from_le_bytes(rec[0..8].try_into().unwrap()));
+        let depth = u32::from_le_bytes(rec[8..12].try_into().unwrap());
+        let f = |i: usize| f64::from_le_bytes(rec[12 + i * 8..20 + i * 8].try_into().unwrap());
+        let bbox = BBox {
+            min: [f(0), f(1), f(2)],
+            max: [f(3), f(4), f(5)],
+        };
+        let data = codec::bytes_to_f32s(&rec[60..]);
+        grids.push(WindowGrid {
+            uid,
+            depth,
+            bbox,
+            data,
+        });
+    }
+    Ok(grids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{IoTuning, Machine};
+    use crate::pario::ParallelIo;
+    use crate::physics::bc::DomainBc;
+    use crate::physics::Params;
+    use crate::tree::SpaceTree;
+    use crate::var;
+
+    fn sim(depth: u32) -> Simulation {
+        let tree = SpaceTree::full(BBox::unit(), depth);
+        let mut s = Simulation::new(
+            tree,
+            3,
+            DomainBc::all_walls(),
+            Params::isothermal(0.01, 1.0 / 32.0, 0.01),
+        );
+        // paint P with the arena index so grids are distinguishable
+        for (i, g) in s.grids.iter_mut().enumerate() {
+            let f = vec![i as f32; DGRID_CELLS];
+            g.cur.set_interior(var::P, &f);
+        }
+        s
+    }
+
+    #[test]
+    fn offline_window_full_domain_coarse() {
+        let p = std::env::temp_dir().join(format!("win_off_{}.h5", std::process::id()));
+        let s = sim(2);
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 3);
+        let mut f = H5File::create(&p, 1).unwrap();
+        iokernel::write_common(&mut f, &s.params, &s.nbs.tree, 3).unwrap();
+        iokernel::write_snapshot(&mut f, &io, &s.nbs.tree, &s.part, &s.grids, 0.5).unwrap();
+        // budget 1 → root only (coarsest LOD)
+        let w = offline_window(&f, 0.5, &BBox::unit(), 1).unwrap();
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].depth, 0);
+        assert_eq!(w[0].data.len(), ROW_ELEMS);
+        // budget 8 → depth 1
+        let w = offline_window(&f, 0.5, &BBox::unit(), 8).unwrap();
+        assert_eq!(w.len(), 8);
+        assert!(w.iter().all(|g| g.depth == 1));
+        // large budget → all 64 leaves
+        let w = offline_window(&f, 0.5, &BBox::unit(), 1000).unwrap();
+        assert_eq!(w.len(), 64);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn offline_window_zoom_returns_correct_data() {
+        let p = std::env::temp_dir().join(format!("win_zoom_{}.h5", std::process::id()));
+        let s = sim(1);
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 3);
+        let mut f = H5File::create(&p, 1).unwrap();
+        iokernel::write_common(&mut f, &s.params, &s.nbs.tree, 3).unwrap();
+        iokernel::write_snapshot(&mut f, &io, &s.nbs.tree, &s.part, &s.grids, 0.0).unwrap();
+        let corner = BBox {
+            min: [0.0; 3],
+            max: [0.2; 3],
+        };
+        let w = offline_window(&f, 0.0, &corner, 64).unwrap();
+        assert_eq!(w.len(), 1, "one leaf covers the corner window");
+        // its pressure payload equals the painted arena index
+        let idx = s
+            .nbs
+            .tree
+            .nodes
+            .iter()
+            .position(|n| n.is_leaf() && n.bbox.contains_point([0.01; 3]))
+            .unwrap();
+        let pslice = &w[0].data[var::P * DGRID_CELLS..(var::P + 1) * DGRID_CELLS];
+        assert!(pslice.iter().all(|&x| x == idx as f32));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn online_collector_roundtrip() {
+        let s = sim(2);
+        let shared = Arc::new(RwLock::new(s));
+        let collector = Collector::spawn(shared.clone()).unwrap();
+        // full-domain query at budget 8 → the 8 depth-1 grids
+        let grids = query(collector.addr, &BBox::unit(), 8).unwrap();
+        assert_eq!(grids.len(), 8);
+        assert!(grids.iter().all(|g| g.depth == 1));
+        assert!(grids.iter().all(|g| g.data.len() == ROW_ELEMS));
+        // zoomed query descends deeper
+        let corner = BBox {
+            min: [0.0; 3],
+            max: [0.1; 3],
+        };
+        let zoom = query(collector.addr, &corner, 8).unwrap();
+        assert!(zoom.iter().any(|g| g.depth == 2), "{zoom:?} depths");
+    }
+
+    #[test]
+    fn online_window_sees_live_updates() {
+        let s = sim(1);
+        let shared = Arc::new(RwLock::new(s));
+        let collector = Collector::spawn(shared.clone()).unwrap();
+        let before = query(collector.addr, &BBox::unit(), 1).unwrap();
+        // mutate the root grid's pressure
+        {
+            let mut sim = shared.write().unwrap();
+            let f = vec![777.0f32; DGRID_CELLS];
+            sim.grids[0].cur.set_interior(var::P, &f);
+        }
+        let after = query(collector.addr, &BBox::unit(), 1).unwrap();
+        let pr = |w: &[WindowGrid]| w[0].data[var::P * DGRID_CELLS];
+        assert_ne!(pr(&before), pr(&after));
+        assert_eq!(pr(&after), 777.0);
+    }
+
+    #[test]
+    fn online_and_offline_agree() {
+        let p = std::env::temp_dir().join(format!("win_agree_{}.h5", std::process::id()));
+        let s = sim(2);
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 3);
+        let mut f = H5File::create(&p, 1).unwrap();
+        iokernel::write_common(&mut f, &s.params, &s.nbs.tree, 3).unwrap();
+        iokernel::write_snapshot(&mut f, &io, &s.nbs.tree, &s.part, &s.grids, 1.5).unwrap();
+        let shared = Arc::new(RwLock::new(s));
+        let collector = Collector::spawn(shared.clone()).unwrap();
+        let win = BBox {
+            min: [0.4, 0.4, 0.4],
+            max: [0.6, 0.6, 0.6],
+        };
+        let online = query(collector.addr, &win, 16).unwrap();
+        let offline = offline_window(&f, 1.5, &win, 16).unwrap();
+        assert_eq!(online.len(), offline.len());
+        let key = |g: &WindowGrid| g.uid.loc().0;
+        let mut on: Vec<_> = online.iter().map(key).collect();
+        let mut off: Vec<_> = offline.iter().map(key).collect();
+        on.sort_unstable();
+        off.sort_unstable();
+        assert_eq!(on, off);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,357 @@
+//! Property-based tests over the core invariants, driven by the in-tree
+//! mini-prop harness (`mpfluid::util::prop`): randomised trees, partitions,
+//! hyperslabs, files and workloads, each checked for the properties the
+//! paper's design depends on.
+
+use mpfluid::cluster::{paper_depth6_workload, IoTuning, Machine};
+use mpfluid::exchange::{self, ExchangeStats, Gen};
+use mpfluid::h5lite::{codec, Dtype, H5File};
+use mpfluid::nbs::{NeighbourhoodServer, Neighbour, ALL_FACES};
+use mpfluid::physics::bc::DomainBc;
+use mpfluid::tree::dgrid::DGrid;
+use mpfluid::tree::sfc;
+use mpfluid::tree::uid::{LocCode, Uid, MAX_DEPTH};
+use mpfluid::tree::{BBox, SpaceTree};
+use mpfluid::util::prop::check;
+use mpfluid::util::rng::Rng;
+use mpfluid::var;
+
+/// Random adaptive tree with 2:1 balance.
+fn random_tree(rng: &mut Rng) -> SpaceTree {
+    let depth = 1 + rng.below(3) as u32;
+    let cx = rng.f64();
+    let cy = rng.f64();
+    let cz = rng.f64();
+    if rng.bool() {
+        SpaceTree::full(BBox::unit(), depth.min(2))
+    } else {
+        SpaceTree::adaptive(BBox::unit(), depth, &move |b: &BBox, _| {
+            b.contains_point([cx, cy, cz])
+        })
+    }
+}
+
+#[test]
+fn prop_uid_pack_unpack_roundtrip() {
+    check("uid roundtrip", 0xA1, |rng| {
+        let depth = rng.below(MAX_DEPTH as u64 + 1) as u32;
+        let side = 1u32 << depth;
+        let (i, j, k) = (
+            rng.below(side as u64) as u32,
+            rng.below(side as u64) as u32,
+            rng.below(side as u64) as u32,
+        );
+        let loc = LocCode::from_coords(depth, i, j, k).unwrap();
+        let rank = rng.below(1 << 20) as u32;
+        let local = rng.below(1 << 20) as u32;
+        let uid = Uid::new(rank, local, loc);
+        assert_eq!(uid.rank(), rank);
+        assert_eq!(uid.local(), local);
+        assert_eq!(uid.loc(), loc);
+        assert_eq!(uid.loc().coords(), (i, j, k));
+        assert!(!uid.is_null());
+    });
+}
+
+#[test]
+fn prop_partition_complete_balanced_contiguous() {
+    check("partition invariants", 0xA2, |rng| {
+        let mut tree = random_tree(rng);
+        let ranks = 1 + rng.below(16) as u32;
+        let part = sfc::partition(&mut tree, ranks);
+        // completeness
+        assert_eq!(part.counts.iter().sum::<u32>() as usize, tree.len());
+        assert_eq!(part.curve.len(), tree.len());
+        // balance ±1
+        let nonzero: Vec<u32> = part.counts.clone();
+        let max = *nonzero.iter().max().unwrap();
+        let min = *nonzero.iter().min().unwrap();
+        assert!(max - min <= 1);
+        // contiguity along the curve + root on rank 0
+        let ranks_on_curve: Vec<u32> =
+            part.curve.iter().map(|&i| tree.node(i).rank).collect();
+        assert!(ranks_on_curve.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(tree.node(0).rank, 0);
+        assert_eq!(tree.node(0).local, 0);
+        // row offsets are a prefix sum reaching the total
+        let off = part.row_offsets();
+        assert_eq!(off[0], 0);
+        assert_eq!(*off.last().unwrap() as usize, tree.len());
+    });
+}
+
+#[test]
+fn prop_hyperslabs_disjoint_and_cover() {
+    check("hyperslab cover", 0xA3, |rng| {
+        let mut tree = random_tree(rng);
+        let ranks = 1 + rng.below(8) as u32;
+        let part = sfc::partition(&mut tree, ranks);
+        let off = part.row_offsets();
+        // every rank's [off[r], off[r+1]) is disjoint and the union covers
+        let mut seen = vec![false; tree.len()];
+        for r in 0..ranks as usize {
+            for row in off[r]..off[r + 1] {
+                assert!(!seen[row as usize], "row {row} written twice");
+                seen[row as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    });
+}
+
+#[test]
+fn prop_neighbour_relation_is_symmetric() {
+    check("neighbour symmetry", 0xA4, |rng| {
+        let mut tree = random_tree(rng);
+        sfc::partition(&mut tree, 4);
+        let nbs = NeighbourhoodServer::new(tree);
+        for idx in 0..nbs.tree.len() as u32 {
+            for face in ALL_FACES {
+                if let Neighbour::Same { idx: nb } = nbs.neighbour(idx, face) {
+                    // symmetry holds when both sides have the same leaf-ness
+                    // (a leaf looking at a *refined* same-level node gets
+                    // Finer on the way back — by design)
+                    let a_leaf = nbs.tree.node(idx).is_leaf();
+                    let b_leaf = nbs.tree.node(nb).is_leaf();
+                    if a_leaf == b_leaf {
+                        match nbs.neighbour(nb, face.opposite()) {
+                            Neighbour::Same { idx: back } => assert_eq!(back, idx),
+                            other => panic!("asymmetric: {other:?}"),
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_bottom_up_preserves_mean() {
+    check("restriction conserves mean", 0xA5, |rng| {
+        let mut tree = SpaceTree::full(BBox::unit(), 1);
+        sfc::partition(&mut tree, 2);
+        let nbs = NeighbourhoodServer::new(tree);
+        let mut grids: Vec<DGrid> =
+            nbs.tree.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+        let mut child_sum = 0.0f64;
+        for idx in nbs.tree.nodes_at_depth(1) {
+            let mut f = vec![0.0f32; mpfluid::DGRID_CELLS];
+            rng.fill_f32(&mut f, -2.0, 2.0);
+            child_sum += f.iter().map(|&x| x as f64).sum::<f64>();
+            grids[idx as usize].cur.set_interior(var::T, &f);
+        }
+        let mut stats = ExchangeStats::default();
+        exchange::bottom_up(&nbs, &mut grids, Gen::Cur, &[var::T], &mut stats);
+        let mut parent = vec![0.0f32; mpfluid::DGRID_CELLS];
+        grids[0].cur.extract_interior(var::T, &mut parent);
+        let parent_sum: f64 = parent.iter().map(|&x| x as f64).sum();
+        // each parent cell = mean of 8 children cells ⇒ total sum / 8
+        let rel = (parent_sum - child_sum / 8.0).abs() / child_sum.abs().max(1.0);
+        assert!(rel < 1e-4, "parent {parent_sum} vs child/8 {}", child_sum / 8.0);
+    });
+}
+
+#[test]
+fn prop_horizontal_exchange_is_consistent() {
+    check("ghost equals neighbour face", 0xA6, |rng| {
+        let mut tree = SpaceTree::full(BBox::unit(), 1 + rng.below(2) as u32);
+        sfc::partition(&mut tree, 1 + rng.below(6) as u32);
+        let nbs = NeighbourhoodServer::new(tree);
+        let mut grids: Vec<DGrid> =
+            nbs.tree.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+        for g in grids.iter_mut() {
+            let mut f = vec![0.0f32; mpfluid::DGRID_CELLS];
+            rng.fill_f32(&mut f, -1.0, 1.0);
+            g.cur.set_interior(var::P, &f);
+        }
+        let mut stats = ExchangeStats::default();
+        exchange::horizontal(
+            &nbs,
+            &mut grids,
+            Gen::Cur,
+            &[var::P],
+            &DomainBc::all_walls(),
+            &mut stats,
+        );
+        // pick random same-level pairs and verify ghost == neighbour face
+        use mpfluid::tree::dgrid::pidx;
+        let n = mpfluid::DGRID_N;
+        for idx in 0..grids.len() as u32 {
+            if let Neighbour::Same { idx: nb } = nbs.neighbour(idx, mpfluid::nbs::Face::XP) {
+                let a = rng.range(1, n + 1);
+                let b = rng.range(1, n + 1);
+                let ghost = grids[idx as usize].cur.var(var::P)[pidx(n + 1, a, b)];
+                let src = grids[nb as usize].cur.var(var::P)[pidx(1, a, b)];
+                assert_eq!(ghost, src);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_h5lite_roundtrip_random_layout() {
+    check("h5lite roundtrip", 0xA7, |rng| {
+        let path = std::env::temp_dir().join(format!(
+            "h5prop_{}_{}",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        let alignment = [1u64, 512, 4096][rng.below(3) as usize];
+        let n_groups = 1 + rng.below(4) as usize;
+        let mut expected: Vec<(String, String, Vec<u64>)> = Vec::new();
+        {
+            let mut f = H5File::create(&path, alignment).unwrap();
+            for gi in 0..n_groups {
+                let gpath = format!("/sim/g{gi}");
+                let n_ds = 1 + rng.below(3) as usize;
+                for di in 0..n_ds {
+                    let rows = 1 + rng.below(20);
+                    let cols = 1 + rng.below(16);
+                    let ds = f
+                        .create_dataset(&gpath, &format!("d{di}"), Dtype::U64, &[rows, cols])
+                        .unwrap();
+                    let data: Vec<u64> = (0..rows * cols)
+                        .map(|_| rng.next_u64() % 1000)
+                        .collect();
+                    f.write_rows(&ds, 0, &codec::u64s_to_bytes(&data)).unwrap();
+                    expected.push((gpath.clone(), format!("d{di}"), data));
+                }
+            }
+            f.commit().unwrap();
+        }
+        let f = H5File::open(&path).unwrap();
+        assert_eq!(f.alignment, alignment);
+        for (gpath, name, data) in expected {
+            let ds = f.dataset(&gpath, &name).unwrap();
+            assert_eq!(f.read_all_u64(&ds).unwrap(), data);
+            assert_eq!(ds.offset % alignment, 0);
+        }
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
+fn prop_window_budget_and_cover() {
+    check("window selection", 0xA8, |rng| {
+        let mut tree = random_tree(rng);
+        sfc::partition(&mut tree, 4);
+        let nbs = NeighbourhoodServer::new(tree);
+        let lo = [rng.f64() * 0.5, rng.f64() * 0.5, rng.f64() * 0.5];
+        let w = BBox {
+            min: lo,
+            max: [
+                lo[0] + 0.1 + rng.f64() * 0.4,
+                lo[1] + 0.1 + rng.f64() * 0.4,
+                lo[2] + 0.1 + rng.f64() * 0.4,
+            ],
+        };
+        let budget = 1 + rng.below(64) as usize;
+        let sel = nbs.select_window(&w, budget);
+        assert!(sel.len() <= budget.max(1), "{} > {budget}", sel.len());
+        // all selected intersect the window; none is an ancestor of another
+        for &i in &sel {
+            assert!(nbs.tree.node(i).bbox.intersects(&w));
+        }
+        for &i in &sel {
+            for &j in &sel {
+                if i != j {
+                    let (a, b) = (nbs.tree.node(i), nbs.tree.node(j));
+                    let (ai, aj, ak) = a.loc.coords();
+                    let (bi, bj, bk) = b.loc.coords();
+                    if a.depth() < b.depth() {
+                        let shift = b.depth() - a.depth();
+                        assert!(
+                            (ai, aj, ak) != (bi >> shift, bj >> shift, bk >> shift),
+                            "ancestor included with descendant"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cluster_model_monotone_in_bytes() {
+    check("model monotone in payload", 0xA9, |rng| {
+        let m = if rng.bool() {
+            Machine::juqueen()
+        } else {
+            Machine::supermuc()
+        };
+        let ranks = [2048u64, 4096, 8192][rng.below(3) as usize];
+        let mut w1 = paper_depth6_workload(ranks);
+        let mut w2 = w1;
+        w1.total_bytes = 1 << (30 + rng.below(3));
+        w2.total_bytes = w1.total_bytes * 2;
+        let t = IoTuning::default();
+        let e1 = m.estimate_write(&w1, &t);
+        let e2 = m.estimate_write(&w2, &t);
+        assert!(e2.seconds > e1.seconds, "{e1} !< {e2}");
+    });
+}
+
+#[test]
+fn prop_snapshot_roundtrip_random_state() {
+    check("snapshot roundtrip", 0xAA, |rng| {
+        let path = std::env::temp_dir().join(format!(
+            "ckprop_{}_{}",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        let mut tree = random_tree(rng);
+        let ranks = 1 + rng.below(6) as u32;
+        let part = sfc::partition(&mut tree, ranks);
+        let mut grids: Vec<DGrid> = tree.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+        for g in grids.iter_mut() {
+            for v in 0..mpfluid::NVAR {
+                let mut f = vec![0.0f32; mpfluid::DGRID_CELLS];
+                rng.fill_f32(&mut f, -5.0, 5.0);
+                g.cur.set_interior(v, &f);
+            }
+        }
+        let io = mpfluid::pario::ParallelIo::new(
+            Machine::local(),
+            IoTuning::default(),
+            ranks as u64,
+        );
+        let mut file = H5File::create(&path, 1).unwrap();
+        let par = mpfluid::physics::Params::isothermal(0.01, 0.1, 0.01);
+        mpfluid::iokernel::write_common(&mut file, &par, &tree, ranks as u64).unwrap();
+        mpfluid::iokernel::write_snapshot(&mut file, &io, &tree, &part, &grids, 1.0).unwrap();
+        let snap = mpfluid::iokernel::read_snapshot(&file, 1.0).unwrap();
+        assert_eq!(snap.tree.len(), tree.len());
+        // spot-check a random grid and variable
+        let pick = rng.range(0, tree.len());
+        let v = rng.range(0, mpfluid::NVAR);
+        let back = snap.tree.lookup(tree.node(pick as u32).loc).unwrap();
+        let mut a = vec![0.0f32; mpfluid::DGRID_CELLS];
+        let mut b = vec![0.0f32; mpfluid::DGRID_CELLS];
+        grids[pick].cur.extract_interior(v, &mut a);
+        snap.grids[back as usize].cur.extract_interior(v, &mut b);
+        assert_eq!(a, b);
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
+fn prop_json_parses_generated_documents() {
+    use mpfluid::util::json::Json;
+    check("json generator", 0xAB, |rng| {
+        // build a random JSON document and ensure parse succeeds + agrees
+        let n = rng.range(1, 6);
+        let mut doc = String::from("{");
+        for i in 0..n {
+            if i > 0 {
+                doc.push(',');
+            }
+            let v = rng.next_u64() % 1000;
+            doc.push_str(&format!("\"k{i}\": {v}"));
+        }
+        doc.push('}');
+        let j = Json::parse(&doc).unwrap();
+        for i in 0..n {
+            assert!(j.get(&format!("k{i}")).is_some());
+        }
+    });
+}

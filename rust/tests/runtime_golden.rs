@@ -1,0 +1,193 @@
+//! Golden cross-layer test: the AOT-compiled Pallas/JAX artifacts executed
+//! through PJRT (L1+L2 via [`mpfluid::runtime::PjrtBackend`]) must agree
+//! with the pure-Rust oracle ([`mpfluid::physics::RustBackend`]) on
+//! identical inputs — closing the loop across all three layers.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use mpfluid::physics::{ComputeBackend, Params, RustBackend};
+use mpfluid::runtime::PjrtBackend;
+use mpfluid::util::rng::Rng;
+use mpfluid::DGRID_N;
+
+const PAD: usize = (DGRID_N + 2) * (DGRID_N + 2) * (DGRID_N + 2);
+const INT: usize = DGRID_N * DGRID_N * DGRID_N;
+
+fn backend() -> Option<PjrtBackend> {
+    match PjrtBackend::load_default() {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("SKIP runtime_golden: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn params() -> Params {
+    Params {
+        dt: 0.01,
+        h: 0.125,
+        nu: 0.02,
+        alpha: 0.015,
+        beta_g: 0.4,
+        t_inf: 300.0,
+        q_int: 0.05,
+        rho: 1.1,
+        omega: 0.857,
+    }
+}
+
+fn rand(len: usize, seed: u64, lo: f32, hi: f32) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f32; len];
+    rng.fill_f32(&mut v, lo, hi);
+    v
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        worst = worst.max((x - y).abs());
+    }
+    assert!(worst <= tol, "{what}: max abs diff {worst} > {tol}");
+}
+
+/// Batch sizes exercising the chunking logic: 1 (B=1 artifact), the full
+/// default batch, a multiple, and a ragged tail.
+fn batches(be: &PjrtBackend) -> Vec<usize> {
+    let b = be.manifest.default_batch;
+    vec![1, b, 2 * b, b + 3]
+}
+
+#[test]
+fn jacobi_matches_oracle() {
+    let Some(pjrt) = backend() else { return };
+    let par = params();
+    for b in batches(&pjrt) {
+        let p = rand(b * PAD, 1, -1.0, 1.0);
+        let rhs = rand(b * INT, 2, -1.0, 1.0);
+        let mut got = vec![0.0; b * INT];
+        let mut want = vec![0.0; b * INT];
+        pjrt.jacobi(b, &p, &rhs, &par, &mut got);
+        RustBackend.jacobi(b, &p, &rhs, &par, &mut want);
+        assert_close(&got, &want, 1e-5, &format!("jacobi b={b}"));
+    }
+}
+
+#[test]
+fn residual_matches_oracle() {
+    let Some(pjrt) = backend() else { return };
+    let par = params();
+    for b in batches(&pjrt) {
+        let p = rand(b * PAD, 3, -1.0, 1.0);
+        let rhs = rand(b * INT, 4, -1.0, 1.0);
+        let (mut r1, mut s1) = (vec![0.0; b * INT], vec![0.0; b]);
+        let (mut r2, mut s2) = (vec![0.0; b * INT], vec![0.0; b]);
+        pjrt.residual(b, &p, &rhs, &par, &mut r1, &mut s1);
+        RustBackend.residual(b, &p, &rhs, &par, &mut r2, &mut s2);
+        assert_close(&r1, &r2, 2e-3, &format!("residual field b={b}"));
+        for (a, c) in s1.iter().zip(&s2) {
+            assert!(
+                (a - c).abs() / c.max(1.0) < 1e-3,
+                "residual ssq b={b}: {a} vs {c}"
+            );
+        }
+    }
+}
+
+#[test]
+fn divergence_matches_oracle() {
+    let Some(pjrt) = backend() else { return };
+    let par = params();
+    for b in batches(&pjrt) {
+        let u = rand(b * PAD, 5, -1.0, 1.0);
+        let v = rand(b * PAD, 6, -1.0, 1.0);
+        let w = rand(b * PAD, 7, -1.0, 1.0);
+        let mut got = vec![0.0; b * INT];
+        let mut want = vec![0.0; b * INT];
+        pjrt.divergence(b, &u, &v, &w, &par, &mut got);
+        RustBackend.divergence(b, &u, &v, &w, &par, &mut want);
+        assert_close(&got, &want, 1e-3, &format!("divergence b={b}"));
+    }
+}
+
+#[test]
+fn correct_matches_oracle() {
+    let Some(pjrt) = backend() else { return };
+    let par = params();
+    for b in batches(&pjrt) {
+        let u = rand(b * INT, 8, -1.0, 1.0);
+        let v = rand(b * INT, 9, -1.0, 1.0);
+        let w = rand(b * INT, 10, -1.0, 1.0);
+        let p = rand(b * PAD, 11, -1.0, 1.0);
+        let (mut u1, mut v1, mut w1) =
+            (vec![0.0; b * INT], vec![0.0; b * INT], vec![0.0; b * INT]);
+        let (mut u2, mut v2, mut w2) = (u1.clone(), v1.clone(), w1.clone());
+        pjrt.correct(b, &u, &v, &w, &p, &par, &mut u1, &mut v1, &mut w1);
+        RustBackend.correct(b, &u, &v, &w, &p, &par, &mut u2, &mut v2, &mut w2);
+        assert_close(&u1, &u2, 1e-4, "correct u");
+        assert_close(&v1, &v2, 1e-4, "correct v");
+        assert_close(&w1, &w2, 1e-4, "correct w");
+    }
+}
+
+#[test]
+fn predictor_matches_oracle() {
+    let Some(pjrt) = backend() else { return };
+    let par = params();
+    for b in batches(&pjrt) {
+        let u = rand(b * PAD, 12, -1.0, 1.0);
+        let v = rand(b * PAD, 13, -1.0, 1.0);
+        let w = rand(b * PAD, 14, -1.0, 1.0);
+        let t = rand(b * PAD, 15, 290.0, 320.0);
+        let mut o1 = vec![vec![0.0f32; b * INT]; 4];
+        let mut o2 = vec![vec![0.0f32; b * INT]; 4];
+        {
+            let [a, bb, c, d] = &mut o1[..] else { unreachable!() };
+            pjrt.predictor(b, &u, &v, &w, &t, &par, a, bb, c, d);
+        }
+        {
+            let [a, bb, c, d] = &mut o2[..] else { unreachable!() };
+            RustBackend.predictor(b, &u, &v, &w, &t, &par, a, bb, c, d);
+        }
+        for (i, name) in ["u*", "v*", "w*", "T'"].iter().enumerate() {
+            assert_close(&o1[i], &o2[i], 5e-3, &format!("predictor {name} b={b}"));
+        }
+    }
+}
+
+#[test]
+fn restrict_matches_oracle() {
+    let Some(pjrt) = backend() else { return };
+    for b in batches(&pjrt) {
+        let fine = rand(b * INT, 16, -1.0, 1.0);
+        let mut got = vec![0.0; b * INT / 8];
+        let mut want = vec![0.0; b * INT / 8];
+        pjrt.restrict(b, &fine, &mut got);
+        RustBackend.restrict(b, &fine, &mut want);
+        assert_close(&got, &want, 1e-5, &format!("restrict b={b}"));
+    }
+}
+
+#[test]
+fn full_simulation_agrees_across_backends() {
+    // The decisive test: an identical channel-flow simulation stepped with
+    // PJRT artifacts and with the Rust oracle must produce matching
+    // physics (kinetic energy within f32 accumulation noise).
+    let Some(pjrt) = backend() else { return };
+    use mpfluid::config::Scenario;
+    let sc = Scenario::channel(1);
+    let mut sim_pjrt = sc.build();
+    let mut sim_rust = sc.build();
+    for _ in 0..3 {
+        sim_pjrt.step(&pjrt);
+        sim_rust.step(&RustBackend);
+    }
+    let ke_p = sim_pjrt.kinetic_energy();
+    let ke_r = sim_rust.kinetic_energy();
+    assert!(ke_p > 0.0);
+    let rel = (ke_p - ke_r).abs() / ke_r.max(1e-12);
+    assert!(rel < 1e-3, "KE pjrt {ke_p} vs rust {ke_r} (rel {rel})");
+    assert!(pjrt.dispatch_count() > 0);
+}
