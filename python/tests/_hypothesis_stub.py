@@ -1,0 +1,90 @@
+"""Offline fallback for the `hypothesis` API subset used by test_kernels.py.
+
+The CI image installs real hypothesis; the hermetic build image has no
+registry access, so `test_kernels.py` falls back to this deterministic
+mini-driver: `@given(...)` draws `max_examples` cases from strategies with
+a per-test seeded RNG (reproducible across runs) and reports the failing
+case's drawn arguments.
+"""
+
+import functools
+import random
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def _booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+class _Strategies:
+    integers = staticmethod(_integers)
+    sampled_from = staticmethod(_sampled_from)
+    booleans = staticmethod(_booleans)
+    floats = staticmethod(_floats)
+
+
+strategies = _Strategies()
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(**kwargs):
+    """Decorator: attach run settings (only max_examples is honoured)."""
+
+    def deco(fn):
+        fn._hyp_settings = dict(kwargs)
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Decorator: run the test once per drawn example."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_hyp_settings", {})
+            n = conf.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for case in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (case {case}): {drawn!r}"
+                    ) from e
+
+        # pytest must not mistake the strategy parameters for fixtures: hide
+        # the wrapped function's signature
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

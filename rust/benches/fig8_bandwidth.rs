@@ -1,11 +1,15 @@
 //! Bench: **Fig 8a + Fig 8b** — sustained checkpoint write bandwidth.
 //!
-//! Two parts:
+//! Three parts:
 //! 1. *Real* collective writes of miniature snapshots through the full
 //!    iokernel → pario → h5lite stack on this host, sweeping rank counts
 //!    (measures the actual software path: pack, aggregate, merge, pwrite).
-//! 2. The calibrated machine model priced at the paper's scales — the
-//!    series of Fig 8a (337 GB), Fig 8b (2.7 TB) and VPIC-IO alongside.
+//! 2. Raw vs chunk-compressed storage at equal logical bytes: effective
+//!    bandwidth (raw bytes / wall-clock) and the stored-byte ratio of the
+//!    v2 shuffle/delta/LZ cell-data path.
+//! 3. The calibrated machine model priced at the paper's scales — the
+//!    series of Fig 8a (337 GB), Fig 8b (2.7 TB) and VPIC-IO alongside,
+//!    with the compressed-write multiplier.
 //!
 //! Run: `cargo bench --bench fig8_bandwidth`
 
@@ -14,7 +18,7 @@ use mpfluid::cluster::{
 };
 use mpfluid::config::Scenario;
 use mpfluid::h5lite::H5File;
-use mpfluid::iokernel;
+use mpfluid::iokernel::{self, SnapshotOptions};
 use mpfluid::pario::ParallelIo;
 use mpfluid::util::{bench::measure, fmt_bytes, fmt_gbps};
 use mpfluid::vpic;
@@ -57,11 +61,82 @@ fn real_write_sweep() {
     }
 }
 
-fn modelled_fig8a() {
+/// Raw vs chunk-compressed snapshots at equal logical bytes (this host):
+/// the acceptance signal is *effective* bandwidth — raw payload bytes over
+/// wall-clock — where the compressed path wins as soon as the codec
+/// outruns the storage device on compressible cell data. The real writes
+/// use matching rank counts (a mismatched `n_ranks` would skew the
+/// rank→aggregator mapping and measure threading, not the codec); the
+/// measured stored/raw ratio is then priced at JuQueen scale and returned
+/// so the Fig 8a table uses the measurement, not a frozen constant.
+fn real_compression_comparison() -> f64 {
+    println!("\n== raw vs chunked+compressed snapshot (depth-2 domain, this host) ==");
+    println!(
+        "{:>12} {:>12} {:>12} {:>8} {:>14}",
+        "layout", "raw bytes", "stored", "ratio", "eff real"
+    );
+    let mut sc = Scenario::channel(2);
+    sc.ranks = 16;
+    let sim = sc.build();
+    let io = ParallelIo::new(Machine::local(), IoTuning::default(), 16);
+    let dir = std::env::temp_dir();
+    let mut measured_ratio = 1.0f64;
+    for (label, opts) in [
+        ("contiguous", SnapshotOptions::uncompressed()),
+        ("chunked+lz", SnapshotOptions::default()),
+    ] {
+        let path = dir.join(format!("fig8_cmp_{}_{label}.h5", std::process::id()));
+        let mut f = H5File::create(&path, 4096).unwrap();
+        iokernel::write_common(&mut f, &sim.params, &sim.nbs.tree, 16).unwrap();
+        let rep = iokernel::write_snapshot_with(
+            &mut f,
+            &io,
+            &sim.nbs.tree,
+            &sim.part,
+            &sim.grids,
+            0.0,
+            &opts,
+        )
+        .unwrap();
+        if rep.io.stored_bytes < rep.io.bytes {
+            measured_ratio = rep.io.stored_bytes as f64 / rep.io.bytes as f64;
+        }
+        println!(
+            "{:>12} {:>12} {:>12} {:>7.2}x {:>14}",
+            label,
+            fmt_bytes(rep.io.bytes),
+            fmt_bytes(rep.io.stored_bytes),
+            rep.io.bytes as f64 / rep.io.stored_bytes.max(1) as f64,
+            fmt_gbps(rep.io.bytes as f64, rep.io.real_seconds),
+        );
+        std::fs::remove_file(&path).ok();
+    }
+    // the measured ratio, priced at the paper's scale
+    let m = Machine::juqueen();
+    let w = paper_depth6_workload(8192);
+    let raw = m.estimate_write(&w, &IoTuning::default());
+    let comp = m.estimate_write_compressed(
+        &w,
+        &IoTuning::default(),
+        (w.total_bytes as f64 * measured_ratio) as u64,
+    );
+    println!(
+        "  JuQueen model @8192 ranks, measured ratio {:.2}x: raw {:.2} GB/s → compressed {:.2} GB/s",
+        1.0 / measured_ratio,
+        raw.bandwidth / 1e9,
+        comp.bandwidth / 1e9
+    );
+    measured_ratio
+}
+
+/// `lz_ratio` is the stored/raw ratio of the shuffle/delta/LZ cell-data
+/// path, measured on real channel-flow snapshots by
+/// [`real_compression_comparison`].
+fn modelled_fig8a(lz_ratio: f64) {
     println!("\n== Fig 8a (model): JuQueen, 1024³, 337 GB/checkpoint ==");
     println!(
-        "{:>10} {:>16} {:>16}",
-        "ranks", "mpfluid GB/s", "VPIC-IO GB/s"
+        "{:>10} {:>16} {:>16} {:>18}",
+        "ranks", "mpfluid GB/s", "VPIC-IO GB/s", "mpfluid+lz GB/s"
     );
     let m = Machine::juqueen();
     let t = IoTuning::default();
@@ -69,11 +144,17 @@ fn modelled_fig8a() {
         let w = paper_depth6_workload(ranks);
         let mp = m.estimate_write(&w, &t);
         let vp = vpic::estimate(&m, ranks, w.total_bytes, &t);
+        let lz = m.estimate_write_compressed(
+            &w,
+            &t,
+            (w.total_bytes as f64 * lz_ratio) as u64,
+        );
         println!(
-            "{:>10} {:>16.2} {:>16.2}",
+            "{:>10} {:>16.2} {:>16.2} {:>18.2}",
             ranks,
             mp.bandwidth / 1e9,
-            vp / 1e9
+            vp / 1e9,
+            lz.bandwidth / 1e9
         );
     }
 }
@@ -144,8 +225,9 @@ fn real_vpic_write() {
 
 fn main() {
     real_write_sweep();
+    let lz_ratio = real_compression_comparison();
     real_vpic_write();
-    modelled_fig8a();
+    modelled_fig8a(lz_ratio);
     modelled_fig8b();
     modelled_supermuc();
 }

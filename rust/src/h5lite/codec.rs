@@ -165,6 +165,291 @@ pub fn bytes_to_f64s(b: &[u8]) -> Vec<f64> {
         .collect()
 }
 
+// ---------------------------------------------------------------------------
+// chunk compression (format v2)
+// ---------------------------------------------------------------------------
+//
+// The per-chunk filter pipeline of the v2 chunked layout, mirroring HDF5's
+// filter stack (shuffle → deflate). Three building blocks:
+//
+// * **LZ** — a byte-oriented LZ77 with a 64 KiB window. Token stream:
+//   a control byte `c < 0x80` introduces a literal run of `c + 1` bytes;
+//   `c >= 0x80` is a match of length `(c & 0x7f) + 4` (4..=131) followed by a
+//   little-endian u16 distance (1..=65535). Overlapping copies are legal
+//   (RLE through distance < length).
+// * **shuffle** — HDF5's byte shuffle: transpose an array of n-byte elements
+//   into n byte planes, so the slowly-varying high bytes of f32/f64/u64
+//   values become long near-constant runs.
+// * **delta** — byte-wise wrapping first difference applied after the
+//   shuffle; near-constant planes become runs of zeros, which LZ collapses.
+
+/// Per-chunk codec of a v2 chunked dataset (stored in the metadata footer).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Codec {
+    /// No transformation: chunk extents hold raw little-endian bytes.
+    Raw,
+    /// LZ byte compression only.
+    Lz,
+    /// Byte shuffle (by element size), then LZ.
+    ShuffleLz,
+    /// Byte shuffle, byte-wise delta, then LZ — the default for the heavy
+    /// f32 cell-data datasets.
+    ShuffleDeltaLz,
+}
+
+impl Codec {
+    pub fn code(self) -> u8 {
+        match self {
+            Codec::Raw => 0,
+            Codec::Lz => 1,
+            Codec::ShuffleLz => 2,
+            Codec::ShuffleDeltaLz => 3,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Codec> {
+        Ok(match c {
+            0 => Codec::Raw,
+            1 => Codec::Lz,
+            2 => Codec::ShuffleLz,
+            3 => Codec::ShuffleDeltaLz,
+            _ => bail!("h5lite: unknown codec code {c}"),
+        })
+    }
+
+    /// Apply the filter pipeline to one raw chunk. `elem_size` is the
+    /// dataset's element width (the shuffle stride).
+    pub fn encode(self, raw: &[u8], elem_size: usize) -> Vec<u8> {
+        match self {
+            Codec::Raw => raw.to_vec(),
+            Codec::Lz => lz_compress(raw),
+            Codec::ShuffleLz => lz_compress(&shuffle(raw, elem_size)),
+            Codec::ShuffleDeltaLz => {
+                let mut s = shuffle(raw, elem_size);
+                delta_encode(&mut s);
+                lz_compress(&s)
+            }
+        }
+    }
+
+    /// Invert [`Codec::encode`]. `raw_len` is the expected decoded length
+    /// (known from the chunk index); a mismatch is a hard error.
+    pub fn decode(self, stored: &[u8], elem_size: usize, raw_len: usize) -> Result<Vec<u8>> {
+        let out = match self {
+            Codec::Raw => stored.to_vec(),
+            Codec::Lz => lz_decompress(stored, raw_len)?,
+            Codec::ShuffleLz => unshuffle(&lz_decompress(stored, raw_len)?, elem_size),
+            Codec::ShuffleDeltaLz => {
+                let mut s = lz_decompress(stored, raw_len)?;
+                delta_decode(&mut s);
+                unshuffle(&s, elem_size)
+            }
+        };
+        if out.len() != raw_len {
+            bail!(
+                "h5lite: chunk decoded to {} bytes, expected {raw_len}",
+                out.len()
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// Run the codec over one raw chunk and decide what to store: `Some(enc)`
+/// when the codec actually shrinks it, `None` when the raw bytes go to
+/// disk unfiltered (HDF5's per-chunk filter mask), plus the checksum of
+/// the raw bytes. Both chunk writers — [`crate::h5lite::H5File`]'s
+/// read-modify-write path and the pario aggregators — must share this so
+/// the store-smaller-of / checksum-over-raw format invariants cannot
+/// drift apart.
+pub fn encode_chunk(codec: Codec, raw: &[u8], elem_size: usize) -> (Option<Vec<u8>>, u32) {
+    let enc = codec.encode(raw, elem_size);
+    let checksum = checksum32(raw);
+    if enc.len() < raw.len() {
+        (Some(enc), checksum)
+    } else {
+        (None, checksum)
+    }
+}
+
+/// FNV-1a 32-bit checksum over a raw chunk (stored in the chunk index;
+/// verified on every chunk read).
+pub fn checksum32(data: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in data {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// HDF5-style byte shuffle: `[e0b0 e0b1 .. | e1b0 e1b1 ..]` becomes
+/// `[e0b0 e1b0 .. | e0b1 e1b1 ..]`. A trailing partial element (never
+/// produced by whole-row chunks) is appended unshuffled.
+pub fn shuffle(data: &[u8], elem_size: usize) -> Vec<u8> {
+    if elem_size <= 1 || data.len() < elem_size {
+        return data.to_vec();
+    }
+    let n = data.len() / elem_size;
+    let body = n * elem_size;
+    let mut out = Vec::with_capacity(data.len());
+    for plane in 0..elem_size {
+        for e in 0..n {
+            out.push(data[e * elem_size + plane]);
+        }
+    }
+    out.extend_from_slice(&data[body..]);
+    out
+}
+
+/// Inverse of [`shuffle`].
+pub fn unshuffle(data: &[u8], elem_size: usize) -> Vec<u8> {
+    if elem_size <= 1 || data.len() < elem_size {
+        return data.to_vec();
+    }
+    let n = data.len() / elem_size;
+    let body = n * elem_size;
+    let mut out = vec![0u8; data.len()];
+    for plane in 0..elem_size {
+        for e in 0..n {
+            out[e * elem_size + plane] = data[plane * n + e];
+        }
+    }
+    out[body..].copy_from_slice(&data[body..]);
+    out
+}
+
+/// In-place byte-wise wrapping first difference.
+pub fn delta_encode(data: &mut [u8]) {
+    let mut prev = 0u8;
+    for b in data.iter_mut() {
+        let cur = *b;
+        *b = cur.wrapping_sub(prev);
+        prev = cur;
+    }
+}
+
+/// Inverse of [`delta_encode`].
+pub fn delta_decode(data: &mut [u8]) {
+    let mut prev = 0u8;
+    for b in data.iter_mut() {
+        prev = prev.wrapping_add(*b);
+        *b = prev;
+    }
+}
+
+const LZ_MIN_MATCH: usize = 4;
+const LZ_MAX_MATCH: usize = 0x7f + LZ_MIN_MATCH;
+const LZ_MAX_DIST: usize = 0xffff;
+const LZ_HASH_BITS: u32 = 15;
+
+#[inline]
+fn lz_hash(data: &[u8], pos: usize) -> usize {
+    let v = u32::from_le_bytes([data[pos], data[pos + 1], data[pos + 2], data[pos + 3]]);
+    (v.wrapping_mul(2654435761) >> (32 - LZ_HASH_BITS)) as usize
+}
+
+/// Compress `data` with the LZ token stream described in the module docs.
+/// Worst case (incompressible input) expands by `len / 128 + 1` control
+/// bytes — the chunk writer stores whichever of raw/compressed is smaller.
+pub fn lz_compress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    let mut table = vec![0u32; 1 << LZ_HASH_BITS]; // position + 1; 0 = empty
+    let mut lit_start = 0usize;
+    let mut pos = 0usize;
+
+    let flush_literals = |out: &mut Vec<u8>, from: usize, to: usize| {
+        let mut s = from;
+        while s < to {
+            let run = (to - s).min(128);
+            out.push((run - 1) as u8);
+            out.extend_from_slice(&data[s..s + run]);
+            s += run;
+        }
+    };
+
+    while pos + LZ_MIN_MATCH <= data.len() {
+        let h = lz_hash(data, pos);
+        let cand = table[h] as usize;
+        table[h] = (pos + 1) as u32;
+        let mut match_len = 0usize;
+        if cand > 0 {
+            let cpos = cand - 1;
+            let dist = pos - cpos;
+            if dist >= 1 && dist <= LZ_MAX_DIST {
+                let max = (data.len() - pos).min(LZ_MAX_MATCH);
+                let mut l = 0usize;
+                while l < max && data[cpos + l] == data[pos + l] {
+                    l += 1;
+                }
+                if l >= LZ_MIN_MATCH {
+                    match_len = l;
+                }
+            }
+        }
+        if match_len > 0 {
+            flush_literals(&mut out, lit_start, pos);
+            let dist = pos - (cand - 1);
+            out.push(0x80 | (match_len - LZ_MIN_MATCH) as u8);
+            out.extend_from_slice(&(dist as u16).to_le_bytes());
+            // seed the table through the matched region (sparse: every
+            // other position keeps the encoder O(n) on repetitive input)
+            let end = pos + match_len;
+            let mut p = pos + 1;
+            while p + LZ_MIN_MATCH <= data.len() && p < end {
+                table[lz_hash(data, p)] = (p + 1) as u32;
+                p += 2;
+            }
+            pos = end;
+            lit_start = pos;
+        } else {
+            pos += 1;
+        }
+    }
+    flush_literals(&mut out, lit_start, data.len());
+    out
+}
+
+/// Decompress an LZ token stream into exactly `raw_len` bytes.
+pub fn lz_decompress(comp: &[u8], raw_len: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(raw_len);
+    let mut pos = 0usize;
+    while pos < comp.len() {
+        let ctrl = comp[pos];
+        pos += 1;
+        if ctrl < 0x80 {
+            let run = ctrl as usize + 1;
+            if pos + run > comp.len() {
+                bail!("h5lite: truncated LZ literal run");
+            }
+            out.extend_from_slice(&comp[pos..pos + run]);
+            pos += run;
+        } else {
+            let len = (ctrl & 0x7f) as usize + LZ_MIN_MATCH;
+            if pos + 2 > comp.len() {
+                bail!("h5lite: truncated LZ match token");
+            }
+            let dist = u16::from_le_bytes([comp[pos], comp[pos + 1]]) as usize;
+            pos += 2;
+            if dist == 0 || dist > out.len() {
+                bail!("h5lite: LZ match distance {dist} out of range");
+            }
+            let start = out.len() - dist;
+            for i in 0..len {
+                let b = out[start + i];
+                out.push(b); // overlapping copies are byte-by-byte
+            }
+        }
+        if out.len() > raw_len {
+            bail!("h5lite: LZ stream overruns chunk ({} > {raw_len})", out.len());
+        }
+    }
+    if out.len() != raw_len {
+        bail!("h5lite: LZ stream yielded {} of {raw_len} bytes", out.len());
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,5 +501,146 @@ mod tests {
     fn f64_bytes_roundtrip() {
         let v = vec![0.25f64, -1e300];
         assert_eq!(bytes_to_f64s(&f64s_to_bytes(&v)), v);
+    }
+
+    fn xorshift_bytes(seed: u64, n: usize) -> Vec<u8> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s >> 24) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lz_roundtrip_random_and_empty() {
+        for n in [0usize, 1, 3, 4, 5, 127, 128, 129, 4096] {
+            let data = xorshift_bytes(n as u64 + 7, n);
+            let comp = lz_compress(&data);
+            assert_eq!(lz_decompress(&comp, n).unwrap(), data, "n={n}");
+        }
+    }
+
+    #[test]
+    fn lz_crushes_repetitive_input() {
+        // matches cap at 131 bytes / 3-byte token → ~43:1 on constant input
+        let data = vec![42u8; 100_000];
+        let comp = lz_compress(&data);
+        assert!(comp.len() < data.len() / 40, "{} bytes", comp.len());
+        assert_eq!(lz_decompress(&comp, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn lz_overlapping_match_is_rle() {
+        // "abcabcabc..." compresses via distance-3 overlapping matches
+        let data: Vec<u8> = (0..3000).map(|i| b"abc"[i % 3]).collect();
+        let comp = lz_compress(&data);
+        assert!(comp.len() < 200, "{} bytes", comp.len());
+        assert_eq!(lz_decompress(&comp, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn lz_rejects_corrupt_streams() {
+        let data = xorshift_bytes(9, 256);
+        let comp = lz_compress(&data);
+        assert!(lz_decompress(&comp, 255).is_err()); // wrong raw_len
+        assert!(lz_decompress(&comp[..comp.len() - 1], 256).is_err()); // truncated
+        assert!(lz_decompress(&[0x85, 0xff, 0xff], 100).is_err()); // bad distance
+    }
+
+    #[test]
+    fn shuffle_roundtrip_all_elem_sizes() {
+        for es in [1usize, 2, 4, 8] {
+            let data = xorshift_bytes(es as u64, 64 * es);
+            assert_eq!(unshuffle(&shuffle(&data, es), es), data, "es={es}");
+        }
+    }
+
+    #[test]
+    fn shuffle_groups_byte_planes() {
+        // elements 0x0100, 0x0200: low bytes first plane, high bytes second
+        let data = [0x00, 0x01, 0x00, 0x02];
+        assert_eq!(shuffle(&data, 2), vec![0x00, 0x00, 0x01, 0x02]);
+    }
+
+    #[test]
+    fn delta_roundtrip() {
+        let mut data = xorshift_bytes(3, 513);
+        let orig = data.clone();
+        delta_encode(&mut data);
+        assert_ne!(data, orig);
+        delta_decode(&mut data);
+        assert_eq!(data, orig);
+    }
+
+    #[test]
+    fn codec_roundtrip_every_variant() {
+        let floats: Vec<f32> = (0..2048).map(|i| (i as f32 * 0.001).sin()).collect();
+        let raw = f32s_to_bytes(&floats);
+        for codec in [
+            Codec::Raw,
+            Codec::Lz,
+            Codec::ShuffleLz,
+            Codec::ShuffleDeltaLz,
+        ] {
+            let enc = codec.encode(&raw, 4);
+            let dec = codec.decode(&enc, 4, raw.len()).unwrap();
+            assert_eq!(dec, raw, "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_delta_lz_beats_plain_lz_on_smooth_f32() {
+        // smooth field data: exponent bytes nearly constant → shuffle+delta
+        // exposes runs plain byte-LZ cannot see
+        let floats: Vec<f32> = (0..8192).map(|i| 1.0 + (i as f32 * 1e-4)).collect();
+        let raw = f32s_to_bytes(&floats);
+        let plain = Codec::Lz.encode(&raw, 4);
+        let sdl = Codec::ShuffleDeltaLz.encode(&raw, 4);
+        assert!(
+            sdl.len() < plain.len() && sdl.len() * 2 < raw.len(),
+            "sdl {} plain {} raw {}",
+            sdl.len(),
+            plain.len(),
+            raw.len()
+        );
+    }
+
+    #[test]
+    fn encode_chunk_filter_mask_semantics() {
+        // compressible → Some(smaller); incompressible → None; checksum is
+        // always over the raw bytes
+        let smooth = f32s_to_bytes(&(0..1024).map(|i| 1.0 + i as f32 * 1e-4).collect::<Vec<_>>());
+        let (enc, ck) = encode_chunk(Codec::ShuffleDeltaLz, &smooth, 4);
+        assert!(enc.as_ref().unwrap().len() < smooth.len());
+        assert_eq!(ck, checksum32(&smooth));
+        let noise = xorshift_bytes(5, 1024);
+        let (enc, ck) = encode_chunk(Codec::Lz, &noise, 1);
+        assert!(enc.is_none());
+        assert_eq!(ck, checksum32(&noise));
+    }
+
+    #[test]
+    fn checksum_distinguishes_buffers() {
+        let a = checksum32(b"hello");
+        let b = checksum32(b"hellp");
+        assert_ne!(a, b);
+        assert_eq!(checksum32(b""), 0x811c_9dc5);
+    }
+
+    #[test]
+    fn codec_codes_roundtrip() {
+        for codec in [
+            Codec::Raw,
+            Codec::Lz,
+            Codec::ShuffleLz,
+            Codec::ShuffleDeltaLz,
+        ] {
+            assert_eq!(Codec::from_code(codec.code()).unwrap(), codec);
+        }
+        assert!(Codec::from_code(99).is_err());
     }
 }

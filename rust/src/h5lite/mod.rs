@@ -6,24 +6,49 @@
 //!
 //! * a tree of **groups** starting at a root group, each holding child
 //!   groups, **datasets** (n-dimensional typed arrays) and **attributes**;
-//! * a **storage model** that lays every dataset out as a header-described
-//!   linear array of raw little-endian bytes, optionally aligned to the
-//!   file system's block size (paper §5.2);
+//! * a **storage model** with two dataset layouts: *contiguous* (one
+//!   header-described linear array of raw little-endian bytes, optionally
+//!   aligned to the file system's block size, paper §5.2) and — since
+//!   format v2 — *chunked* (fixed row-count chunks, each stored as an
+//!   independently compressed extent, mirroring HDF5's chunked storage +
+//!   filter pipeline);
 //! * **self-description**: a superblock with magic/version/endian tag and a
 //!   metadata footer that fully describes the tree, so a reader needs no
 //!   external schema;
 //! * **hyperslab** I/O: row-range reads/writes against a dataset's first
 //!   dimension, the access pattern of the paper's kernel (one contiguous
 //!   row block per rank — disjointness is what makes disabling file locks
-//!   safe).
+//!   safe). Chunked datasets decompress transparently on [`H5File::read_rows`].
 //!
-//! ## On-disk layout
+//! ## On-disk layout (format v2)
 //!
 //! ```text
 //! [superblock 40 B] [data region …grows…] [metadata footer]
-//! superblock: magic "MPH5LITE" | version u32 | endian u32 = 0x01020304
+//! superblock: magic "MPH5LITE" | version u32 (1|2) | endian u32 = 0x01020304
 //!           | footer_off u64 | footer_len u64 | alignment u32
+//!
+//! data region:   contiguous payloads (aligned) and compressed chunk
+//!                extents (packed back to back), in allocation order
+//!
+//! footer (per group, recursive):
+//!   attrs:    n, then (name, tag u8, value)*
+//!   datasets: n, then (name, dtype u8, shape u64s, layout)*
+//!     layout v1:          offset u64                      (contiguous only)
+//!     layout v2 tag 0:    offset u64                      (contiguous)
+//!     layout v2 tag 1:    chunk_rows u64 | codec u8 | n_chunks u64
+//!                         | n_present u32
+//!                         | (chunk_no u64, offset u64, stored u64,
+//!                            raw u64, checksum u32, codec_applied u8)*
+//!   groups:   n, then (name, group)*                      (recursive)
 //! ```
+//!
+//! A v2 reader opens v1 files (every dataset decodes as contiguous); a v1
+//! file refuses chunked dataset creation. Chunk extents record whether the
+//! codec was actually applied (HDF5's per-chunk filter mask): incompressible
+//! chunks are stored raw rather than expanded. Rewriting a chunk allocates
+//! a fresh extent and abandons the old one — the same garbage HDF5 accrues
+//! until `h5repack`; checkpoint streams are append-only so this never
+//! triggers on the hot path.
 //!
 //! The footer is rewritten at the current end of data on every
 //! [`H5File::commit`]; the superblock is then updated in place. This mirrors
@@ -35,18 +60,25 @@
 
 pub mod codec;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use codec::{Dec, Enc};
+use codec::{Codec, Dec, Enc};
 
 const MAGIC: &[u8; 8] = b"MPH5LITE";
-const VERSION: u32 = 1;
+/// Original contiguous-only format.
+pub const FORMAT_V1: u32 = 1;
+/// Chunked + compressed dataset storage.
+pub const FORMAT_V2: u32 = 2;
+/// Default format for newly created files.
+pub const VERSION: u32 = FORMAT_V2;
 const ENDIAN_TAG: u32 = 0x0102_0304;
 const SUPERBLOCK_LEN: u64 = 40;
 
@@ -98,14 +130,51 @@ pub enum Attr {
     F64Vec(Vec<f64>),
 }
 
-/// A dataset: typed n-dimensional array stored contiguously at `offset`.
+/// Physical storage layout of a dataset.
+#[derive(Clone, PartialEq, Debug)]
+pub enum Layout {
+    /// One linear reservation at `offset` (format v1's only layout).
+    Contiguous { offset: u64 },
+    /// Fixed `chunk_rows`-row chunks, each an independently compressed
+    /// extent located through the file's chunk registry (key `id`).
+    Chunked {
+        chunk_rows: u64,
+        codec: Codec,
+        id: u64,
+    },
+}
+
+/// Location of one written chunk in the data region.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkLoc {
+    /// Absolute file offset of the stored extent.
+    pub offset: u64,
+    /// Stored (possibly compressed) byte count.
+    pub stored: u64,
+    /// Raw (decoded) byte count.
+    pub raw: u64,
+    /// FNV-1a checksum of the raw bytes, verified on read.
+    pub checksum: u32,
+    /// Whether the dataset codec was applied (false = stored raw because
+    /// the chunk was incompressible — HDF5's per-chunk filter mask).
+    pub codec_applied: bool,
+}
+
+/// Per-dataset chunk index: entry `i` locates chunk `i`, `None` = never
+/// written (reads return zeros, matching HDF5 fill-value semantics).
+struct ChunkTable {
+    entries: Vec<Option<ChunkLoc>>,
+}
+
+type ChunkRegistry = HashMap<u64, ChunkTable>;
+
+/// A dataset: typed n-dimensional array with a contiguous or chunked layout.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub dtype: Dtype,
     /// Shape; the first dimension is the row (hyperslab) dimension.
     pub shape: Vec<u64>,
-    /// Absolute file offset of the payload.
-    pub offset: u64,
+    pub layout: Layout,
 }
 
 impl Dataset {
@@ -125,6 +194,80 @@ impl Dataset {
     pub fn row_bytes(&self) -> u64 {
         self.row_elems() * self.dtype.size() as u64
     }
+
+    pub fn is_chunked(&self) -> bool {
+        matches!(self.layout, Layout::Chunked { .. })
+    }
+
+    /// `(chunk_rows, codec, registry id)` for chunked datasets.
+    pub fn chunk_meta(&self) -> Option<(u64, Codec, u64)> {
+        match self.layout {
+            Layout::Chunked {
+                chunk_rows,
+                codec,
+                id,
+            } => Some((chunk_rows, codec, id)),
+            Layout::Contiguous { .. } => None,
+        }
+    }
+
+    /// Payload offset of a contiguous dataset.
+    pub fn contiguous_offset(&self) -> Option<u64> {
+        match self.layout {
+            Layout::Contiguous { offset } => Some(offset),
+            Layout::Chunked { .. } => None,
+        }
+    }
+
+    /// Number of chunks (0 for contiguous datasets).
+    pub fn n_chunks(&self) -> u64 {
+        match self.layout {
+            Layout::Chunked { chunk_rows, .. } => self.shape[0].div_ceil(chunk_rows),
+            Layout::Contiguous { .. } => 0,
+        }
+    }
+
+    /// Rows in chunk `chunk_no` (the last chunk may be short).
+    pub fn chunk_rows_at(&self, chunk_no: u64) -> u64 {
+        match self.layout {
+            Layout::Chunked { chunk_rows, .. } => {
+                chunk_rows.min(self.shape[0].saturating_sub(chunk_no * chunk_rows))
+            }
+            Layout::Contiguous { .. } => 0,
+        }
+    }
+
+    /// Walk the row range `[row_start, row_start + rows)` chunk by chunk,
+    /// yielding `(chunk_no, row offset within the chunk, rows taken)` —
+    /// the one place the chunk-boundary arithmetic lives, shared by the
+    /// writer, the reader and the pario chunk bucketing. Empty for
+    /// contiguous datasets and for ranges beyond the dataset extent
+    /// (callers bounds-check first; this just refuses to spin).
+    pub fn chunk_spans(&self, row_start: u64, rows: u64) -> impl Iterator<Item = (u64, u64, u64)> {
+        let chunk_rows = match self.layout {
+            Layout::Chunked { chunk_rows, .. } => chunk_rows,
+            Layout::Contiguous { .. } => 0,
+        };
+        let shape0 = self.shape.first().copied().unwrap_or(0);
+        let end = row_start + rows;
+        let mut row = row_start;
+        std::iter::from_fn(move || {
+            if chunk_rows == 0 || row >= end {
+                return None;
+            }
+            let chunk_no = row / chunk_rows;
+            let chunk_first = chunk_no * chunk_rows;
+            let rows_here = chunk_rows.min(shape0.saturating_sub(chunk_first));
+            let chunk_end = chunk_first + rows_here;
+            if chunk_end <= row {
+                return None; // out of range: refuse to loop forever
+            }
+            let take = chunk_end.min(end) - row;
+            let item = (chunk_no, row - chunk_first, take);
+            row += take;
+            Some(item)
+        })
+    }
 }
 
 /// A group: named attributes, child groups and datasets (BTreeMap for a
@@ -137,7 +280,7 @@ pub struct Group {
 }
 
 impl Group {
-    fn encode(&self, e: &mut Enc) {
+    fn encode(&self, e: &mut Enc, version: u32, reg: &ChunkRegistry) -> Result<()> {
         e.u32(self.attrs.len() as u32);
         for (name, a) in &self.attrs {
             e.str(name);
@@ -165,16 +308,62 @@ impl Group {
             e.str(name);
             e.u8(d.dtype.code());
             e.u64s(&d.shape);
-            e.u64(d.offset);
+            match (&d.layout, version) {
+                (Layout::Contiguous { offset }, FORMAT_V1) => e.u64(*offset),
+                (Layout::Chunked { .. }, FORMAT_V1) => {
+                    bail!("h5lite: dataset '{name}' is chunked; format v1 cannot store it")
+                }
+                (Layout::Contiguous { offset }, _) => {
+                    e.u8(0);
+                    e.u64(*offset);
+                }
+                (
+                    Layout::Chunked {
+                        chunk_rows,
+                        codec,
+                        id,
+                    },
+                    _,
+                ) => {
+                    e.u8(1);
+                    e.u64(*chunk_rows);
+                    e.u8(codec.code());
+                    let table = reg
+                        .get(id)
+                        .ok_or_else(|| anyhow!("h5lite: chunk table missing for '{name}'"))?;
+                    e.u64(table.entries.len() as u64);
+                    let present: Vec<(u64, ChunkLoc)> = table
+                        .entries
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(i, l)| l.map(|loc| (i as u64, loc)))
+                        .collect();
+                    e.u32(present.len() as u32);
+                    for (i, loc) in present {
+                        e.u64(i);
+                        e.u64(loc.offset);
+                        e.u64(loc.stored);
+                        e.u64(loc.raw);
+                        e.u32(loc.checksum);
+                        e.u8(loc.codec_applied as u8);
+                    }
+                }
+            }
         }
         e.u32(self.groups.len() as u32);
         for (name, g) in &self.groups {
             e.str(name);
-            g.encode(e);
+            g.encode(e, version, reg)?;
         }
+        Ok(())
     }
 
-    fn decode(d: &mut Dec) -> Result<Group> {
+    fn decode(
+        d: &mut Dec,
+        version: u32,
+        reg: &mut ChunkRegistry,
+        next_id: &mut u64,
+    ) -> Result<Group> {
         let mut g = Group::default();
         let n_attrs = d.u32()?;
         for _ in 0..n_attrs {
@@ -193,47 +382,137 @@ impl Group {
             let name = d.str()?;
             let dtype = Dtype::from_code(d.u8()?)?;
             let shape = d.u64s()?;
-            let offset = d.u64()?;
+            let layout = if version == FORMAT_V1 {
+                Layout::Contiguous { offset: d.u64()? }
+            } else {
+                match d.u8()? {
+                    0 => Layout::Contiguous { offset: d.u64()? },
+                    1 => {
+                        let chunk_rows = d.u64()?;
+                        let codec = Codec::from_code(d.u8()?)?;
+                        let n_chunks = d.u64()?;
+                        if chunk_rows == 0 {
+                            bail!("h5lite: dataset '{name}' has zero chunk_rows");
+                        }
+                        let rows = shape.first().copied().unwrap_or(0);
+                        if n_chunks != rows.div_ceil(chunk_rows) {
+                            bail!(
+                                "h5lite: dataset '{name}' chunk count {n_chunks} \
+                                 inconsistent with {rows} rows / {chunk_rows}"
+                            );
+                        }
+                        let mut entries: Vec<Option<ChunkLoc>> = vec![None; n_chunks as usize];
+                        let n_present = d.u32()?;
+                        for _ in 0..n_present {
+                            let i = d.u64()? as usize;
+                            if i >= entries.len() {
+                                bail!("h5lite: chunk index {i} out of range in '{name}'");
+                            }
+                            entries[i] = Some(ChunkLoc {
+                                offset: d.u64()?,
+                                stored: d.u64()?,
+                                raw: d.u64()?,
+                                checksum: d.u32()?,
+                                codec_applied: d.u8()? != 0,
+                            });
+                        }
+                        let id = *next_id;
+                        *next_id += 1;
+                        reg.insert(id, ChunkTable { entries });
+                        Layout::Chunked {
+                            chunk_rows,
+                            codec,
+                            id,
+                        }
+                    }
+                    t => bail!("h5lite: unknown layout tag {t}"),
+                }
+            };
             g.datasets.insert(
                 name,
                 Dataset {
                     dtype,
                     shape,
-                    offset,
+                    layout,
                 },
             );
         }
         let n_groups = d.u32()?;
         for _ in 0..n_groups {
             let name = d.str()?;
-            g.groups.insert(name, Group::decode(d)?);
+            g.groups.insert(name, Group::decode(d, version, reg, next_id)?);
         }
         Ok(g)
     }
 }
+
+/// One-deep-per-dataset decoded-chunk cache, keyed by dataset id: the
+/// offline sliding window and the snapshot restore read rows one at a
+/// time, interleaving the three cell-data datasets — a single shared slot
+/// would thrash on the interleave and decompress every chunk once per row
+/// instead of once. Capped at [`CHUNK_CACHE_DATASETS`] entries (epoch
+/// clear on overflow) so a long-lived reader walking many timesteps
+/// doesn't retain one decoded chunk per dataset forever.
+type ChunkCache = HashMap<u64, (u64, Arc<Vec<u8>>)>;
+
+/// Max datasets with a live cached chunk before the cache is cleared.
+const CHUNK_CACHE_DATASETS: usize = 8;
 
 /// An h5lite file handle.
 ///
 /// Creation/structure mutation requires `&mut self` (matching Parallel
 /// HDF5's rule that groups and datasets are created *collectively*); slab
 /// reads/writes take `&self` and may run concurrently from many threads
-/// (each rank/aggregator owns a disjoint row range).
+/// (each rank/aggregator owns a disjoint row range, and the chunk
+/// allocator/index are internally locked).
 pub struct H5File {
     file: File,
     pub path: PathBuf,
     pub root: Group,
     /// Next free data offset (end of data region).
-    data_end: u64,
-    /// Alignment for dataset payload starts (paper §5.2; 1 = none).
+    data_end: Mutex<u64>,
+    /// Alignment for contiguous dataset payload starts (paper §5.2;
+    /// 1 = none). Compressed chunk extents are packed unaligned.
     pub alignment: u64,
+    version: u32,
+    chunks: Mutex<ChunkRegistry>,
+    next_ds_id: AtomicU64,
+    cache: Mutex<ChunkCache>,
+    /// Bumped on every chunk-extent write; readers snapshot it before
+    /// loading an extent and only populate the cache if it is unchanged
+    /// after decoding, so a write racing a reader of the same chunk can
+    /// never leave pre-write bytes cached (the returned slice itself is
+    /// safe — disjoint-range readers only consume rows the writer did not
+    /// touch).
+    cache_gen: AtomicU64,
+    /// Serialises read-modify-write row writes on chunked datasets: two
+    /// disjoint row ranges can share a chunk, and the RMW (read, patch,
+    /// re-encode, swap extent) is not atomic per chunk. Chunk-granular
+    /// writers ([`H5File::write_chunk_encoded`], used by the aggregators)
+    /// bypass this and stay fully parallel.
+    rmw: Mutex<()>,
 }
 
 impl H5File {
-    /// Create a new file (truncating any existing one). `alignment` aligns
-    /// every dataset payload to that many bytes (use the file system block
-    /// size; 1 disables).
+    /// Create a new file (truncating any existing one) in the default
+    /// format. `alignment` aligns every contiguous dataset payload to that
+    /// many bytes (use the file system block size; 1 disables).
     pub fn create<P: AsRef<Path>>(path: P, alignment: u64) -> Result<H5File> {
+        H5File::create_versioned(path, alignment, VERSION)
+    }
+
+    /// Create a new file in an explicit format version (v1 = contiguous
+    /// only, for compatibility tests and old readers; v2 = chunked +
+    /// compressed storage available).
+    pub fn create_versioned<P: AsRef<Path>>(
+        path: P,
+        alignment: u64,
+        version: u32,
+    ) -> Result<H5File> {
         assert!(alignment >= 1);
+        if !(FORMAT_V1..=FORMAT_V2).contains(&version) {
+            bail!("h5lite: cannot create format v{version}");
+        }
         let file = OpenOptions::new()
             .read(true)
             .write(true)
@@ -245,14 +524,20 @@ impl H5File {
             file,
             path: path.as_ref().to_path_buf(),
             root: Group::default(),
-            data_end: SUPERBLOCK_LEN,
+            data_end: Mutex::new(SUPERBLOCK_LEN),
             alignment,
+            version,
+            chunks: Mutex::new(HashMap::new()),
+            next_ds_id: AtomicU64::new(1),
+            cache: Mutex::new(HashMap::new()),
+            cache_gen: AtomicU64::new(0),
+            rmw: Mutex::new(()),
         };
         f.commit()?;
         Ok(f)
     }
 
-    /// Open an existing file (read + write).
+    /// Open an existing file (read + write). Accepts format v1 and v2.
     pub fn open<P: AsRef<Path>>(path: P) -> Result<H5File> {
         let mut file = OpenOptions::new()
             .read(true)
@@ -267,7 +552,7 @@ impl H5File {
         }
         let mut d = Dec::new(&sb[8..]);
         let version = d.u32()?;
-        if version != VERSION {
+        if !(FORMAT_V1..=FORMAT_V2).contains(&version) {
             bail!("h5lite: unsupported version {version}");
         }
         let endian = d.u32()?;
@@ -282,14 +567,27 @@ impl H5File {
         file.read_exact(&mut footer)
             .context("h5lite: short footer")?;
         let mut fd = Dec::new(&footer);
-        let root = Group::decode(&mut fd)?;
+        let mut reg = HashMap::new();
+        let mut next_id = 1u64;
+        let root = Group::decode(&mut fd, version, &mut reg, &mut next_id)?;
         Ok(H5File {
             file,
             path: path.as_ref().to_path_buf(),
             root,
-            data_end: footer_off,
+            data_end: Mutex::new(footer_off),
             alignment,
+            version,
+            chunks: Mutex::new(reg),
+            next_ds_id: AtomicU64::new(next_id),
+            cache: Mutex::new(HashMap::new()),
+            cache_gen: AtomicU64::new(0),
+            rmw: Mutex::new(()),
         })
+    }
+
+    /// On-disk format version of this file.
+    pub fn version(&self) -> u32 {
+        self.version
     }
 
     /// Flush metadata: write the footer at the end of the data region and
@@ -297,15 +595,18 @@ impl H5File {
     /// consistent snapshot.
     pub fn commit(&mut self) -> Result<()> {
         let mut e = Enc::new();
-        self.root.encode(&mut e);
-        let footer_off = self.data_end;
+        {
+            let reg = self.chunks.lock().unwrap();
+            self.root.encode(&mut e, self.version, &reg)?;
+        }
+        let footer_off = *self.data_end.lock().unwrap();
         self.file.seek(SeekFrom::Start(footer_off))?;
         self.file.write_all(&e.buf)?;
         // superblock
         let mut sb = Vec::with_capacity(SUPERBLOCK_LEN as usize);
         sb.extend_from_slice(MAGIC);
         let mut se = Enc::new();
-        se.u32(VERSION);
+        se.u32(self.version);
         se.u32(ENDIAN_TAG);
         se.u64(footer_off);
         se.u64(e.buf.len() as u64);
@@ -339,7 +640,17 @@ impl H5File {
         Ok(g)
     }
 
-    /// Create a dataset under `group_path`, reserving (aligned) contiguous
+    /// Reserve `nbytes` of data-region space aligned to `align`, extending
+    /// the file. Thread-safe (the chunk writers allocate concurrently).
+    fn alloc(&self, nbytes: u64, align: u64) -> Result<u64> {
+        let mut end = self.data_end.lock().unwrap();
+        let offset = end.next_multiple_of(align.max(1));
+        self.file.set_len(offset + nbytes)?;
+        *end = offset + nbytes;
+        Ok(offset)
+    }
+
+    /// Create a contiguous dataset under `group_path`, reserving (aligned)
     /// space for the full shape. Like Parallel HDF5, creation is collective:
     /// the caller must know the global shape; individual ranks then write
     /// their hyperslabs independently.
@@ -350,21 +661,70 @@ impl H5File {
         dtype: Dtype,
         shape: &[u64],
     ) -> Result<Dataset> {
-        let offset = self.data_end.next_multiple_of(self.alignment);
+        if self.group(group_path).map_or(false, |g| g.datasets.contains_key(name)) {
+            bail!("h5lite: dataset '{group_path}/{name}' already exists");
+        }
         let ds = Dataset {
             dtype,
             shape: shape.to_vec(),
-            offset,
+            layout: Layout::Contiguous { offset: 0 },
         };
-        let nbytes = ds.n_bytes();
-        // reserve by extending the file (sparse where the OS allows)
-        self.file.set_len(offset + nbytes)?;
-        self.data_end = offset + nbytes;
-        let g = self.ensure_group(group_path);
-        if g.datasets.contains_key(name) {
+        let offset = self.alloc(ds.n_bytes(), self.alignment)?;
+        let ds = Dataset {
+            layout: Layout::Contiguous { offset },
+            ..ds
+        };
+        self.ensure_group(group_path)
+            .datasets
+            .insert(name.to_string(), ds.clone());
+        Ok(ds)
+    }
+
+    /// Create a chunked dataset (format v2): rows are grouped into
+    /// `chunk_rows`-row chunks, each stored as an independent extent
+    /// encoded with `codec`. No space is reserved up front — extents are
+    /// allocated as chunks are written.
+    pub fn create_dataset_chunked(
+        &mut self,
+        group_path: &str,
+        name: &str,
+        dtype: Dtype,
+        shape: &[u64],
+        chunk_rows: u64,
+        codec: Codec,
+    ) -> Result<Dataset> {
+        if self.version < FORMAT_V2 {
+            bail!("h5lite: chunked datasets need format v2 (file is v{})", self.version);
+        }
+        if chunk_rows == 0 {
+            bail!("h5lite: chunk_rows must be >= 1");
+        }
+        if shape.is_empty() {
+            bail!("h5lite: chunked dataset needs at least one dimension");
+        }
+        if self.group(group_path).map_or(false, |g| g.datasets.contains_key(name)) {
             bail!("h5lite: dataset '{group_path}/{name}' already exists");
         }
-        g.datasets.insert(name.to_string(), ds.clone());
+        let id = self.next_ds_id.fetch_add(1, Ordering::Relaxed);
+        let n_chunks = shape[0].div_ceil(chunk_rows);
+        self.chunks.lock().unwrap().insert(
+            id,
+            ChunkTable {
+                entries: vec![None; n_chunks as usize],
+            },
+        );
+        let ds = Dataset {
+            dtype,
+            shape: shape.to_vec(),
+            layout: Layout::Chunked {
+                chunk_rows,
+                codec,
+                id,
+            },
+        };
+        self.ensure_group(group_path)
+            .datasets
+            .insert(name.to_string(), ds.clone());
         Ok(ds)
     }
 
@@ -378,7 +738,12 @@ impl H5File {
     }
 
     /// Write rows of raw bytes starting at `row_start` (hyperslab along the
-    /// first dimension). Concurrent-safe for disjoint ranges.
+    /// first dimension). Concurrent-safe for disjoint ranges: contiguous
+    /// writes are positional pwrites; chunked writes read-modify-write the
+    /// touched chunks under an internal per-file lock (disjoint row ranges
+    /// may share a chunk, so the RMW must serialise — the collective path
+    /// stays parallel by writing whole chunks via
+    /// [`H5File::write_chunk_encoded`] instead).
     pub fn write_rows(&self, ds: &Dataset, row_start: u64, data: &[u8]) -> Result<()> {
         let rb = ds.row_bytes();
         if data.len() as u64 % rb != 0 {
@@ -392,13 +757,193 @@ impl H5File {
                 ds.shape[0]
             );
         }
-        self.file
-            .write_all_at(data, ds.offset + row_start * rb)
-            .context("h5lite: slab write")?;
+        match ds.layout {
+            Layout::Contiguous { offset } => self
+                .file
+                .write_all_at(data, offset + row_start * rb)
+                .context("h5lite: slab write"),
+            Layout::Chunked { .. } => self.write_rows_chunked(ds, row_start, data),
+        }
+    }
+
+    fn write_rows_chunked(&self, ds: &Dataset, row_start: u64, data: &[u8]) -> Result<()> {
+        let rb = ds.row_bytes();
+        let (_, codec, _) = ds.chunk_meta().unwrap();
+        let rows = data.len() as u64 / rb;
+        let mut done = 0u64;
+        for (chunk_no, row_in_chunk, take) in ds.chunk_spans(row_start, rows) {
+            let src = &data[(done * rb) as usize..((done + take) * rb) as usize];
+            if row_in_chunk == 0 && take == ds.chunk_rows_at(chunk_no) {
+                // whole chunk replaced: encode straight from the caller's
+                // buffer, no lock — disjoint-range writers can never pair a
+                // whole-chunk write with another write of the same chunk,
+                // so threaded whole-chunk callers compress in parallel
+                self.encode_and_write_chunk(ds, chunk_no, src, codec)?;
+            } else {
+                // partial: read-modify-write against existing content;
+                // serialised because two disjoint row ranges can share this
+                // chunk and the read→patch→re-encode→swap is not atomic
+                let _rmw = self.rmw.lock().unwrap();
+                let mut raw = self.read_chunk_raw(ds, chunk_no)?.as_ref().clone();
+                let off = (row_in_chunk * rb) as usize;
+                raw[off..off + src.len()].copy_from_slice(src);
+                self.encode_and_write_chunk(ds, chunk_no, &raw, codec)?;
+            }
+            done += take;
+        }
         Ok(())
     }
 
-    /// Read `rows` rows starting at `row_start` as raw bytes.
+    fn encode_and_write_chunk(
+        &self,
+        ds: &Dataset,
+        chunk_no: u64,
+        raw: &[u8],
+        codec: Codec,
+    ) -> Result<()> {
+        let (enc, checksum) = codec::encode_chunk(codec, raw, ds.dtype.size());
+        let (stored, applied): (&[u8], bool) = match &enc {
+            Some(e) => (e, true),
+            None => (raw, false),
+        };
+        self.write_chunk_encoded(ds, chunk_no, stored, raw.len() as u64, checksum, applied)
+    }
+
+    /// Store one already-encoded chunk extent and record it in the chunk
+    /// index. Used by the collective-buffering aggregators, which run the
+    /// codec on their own threads during the fill phase; `codec_applied =
+    /// false` stores the raw bytes (incompressible chunk).
+    pub fn write_chunk_encoded(
+        &self,
+        ds: &Dataset,
+        chunk_no: u64,
+        stored: &[u8],
+        raw_len: u64,
+        checksum: u32,
+        codec_applied: bool,
+    ) -> Result<()> {
+        let (_, _, id) = ds
+            .chunk_meta()
+            .ok_or_else(|| anyhow!("h5lite: write_chunk_encoded on contiguous dataset"))?;
+        if chunk_no >= ds.n_chunks() {
+            bail!("h5lite: chunk {chunk_no} out of range ({})", ds.n_chunks());
+        }
+        let expect_raw = ds.chunk_rows_at(chunk_no) * ds.row_bytes();
+        if raw_len != expect_raw {
+            bail!("h5lite: chunk {chunk_no} raw length {raw_len}, expected {expect_raw}");
+        }
+        let offset = self.alloc(stored.len() as u64, 1)?;
+        self.file
+            .write_all_at(stored, offset)
+            .context("h5lite: chunk extent write")?;
+        {
+            let mut reg = self.chunks.lock().unwrap();
+            let table = reg
+                .get_mut(&id)
+                .ok_or_else(|| anyhow!("h5lite: chunk table missing (id {id})"))?;
+            table.entries[chunk_no as usize] = Some(ChunkLoc {
+                offset,
+                stored: stored.len() as u64,
+                raw: raw_len,
+                checksum,
+                codec_applied,
+            });
+        }
+        // bump BEFORE invalidating: a reader that passes its generation
+        // check inserted before this point, so the removal below cleans it
+        // up; a reader checking after this point skips its insert. The
+        // reverse order would leave a window (after removal, before bump)
+        // where a stale insert survives.
+        self.cache_gen.fetch_add(1, Ordering::Release);
+        {
+            let mut cache = self.cache.lock().unwrap();
+            if cache.get(&id).map_or(false, |&(no, _)| no == chunk_no) {
+                cache.remove(&id);
+            }
+        }
+        Ok(())
+    }
+
+    /// Chunk index entry for `chunk_no` (`None` = not yet written).
+    pub fn chunk_loc(&self, ds: &Dataset, chunk_no: u64) -> Result<Option<ChunkLoc>> {
+        let (_, _, id) = ds
+            .chunk_meta()
+            .ok_or_else(|| anyhow!("h5lite: chunk_loc on contiguous dataset"))?;
+        let reg = self.chunks.lock().unwrap();
+        let table = reg
+            .get(&id)
+            .ok_or_else(|| anyhow!("h5lite: chunk table missing (id {id})"))?;
+        table
+            .entries
+            .get(chunk_no as usize)
+            .copied()
+            .ok_or_else(|| anyhow!("h5lite: chunk {chunk_no} out of range"))
+    }
+
+    /// Read and decode one whole chunk (zeros if never written). Cached
+    /// one-deep per file for row-at-a-time readers.
+    pub fn read_chunk_raw(&self, ds: &Dataset, chunk_no: u64) -> Result<Arc<Vec<u8>>> {
+        let (_, codec, id) = ds
+            .chunk_meta()
+            .ok_or_else(|| anyhow!("h5lite: read_chunk_raw on contiguous dataset"))?;
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some((no, data)) = cache.get(&id) {
+                if *no == chunk_no {
+                    return Ok(Arc::clone(data));
+                }
+            }
+        }
+        let gen0 = self.cache_gen.load(Ordering::Acquire);
+        let loc = self.chunk_loc(ds, chunk_no)?;
+        let expect_raw = (ds.chunk_rows_at(chunk_no) * ds.row_bytes()) as usize;
+        let raw = match loc {
+            None => Arc::new(vec![0u8; expect_raw]),
+            Some(loc) => {
+                let mut stored = vec![0u8; loc.stored as usize];
+                self.file
+                    .read_exact_at(&mut stored, loc.offset)
+                    .context("h5lite: chunk extent read")?;
+                let raw = if loc.codec_applied {
+                    codec.decode(&stored, ds.dtype.size(), loc.raw as usize)?
+                } else {
+                    if stored.len() as u64 != loc.raw {
+                        bail!("h5lite: raw-stored chunk length mismatch");
+                    }
+                    stored
+                };
+                if raw.len() != expect_raw {
+                    bail!(
+                        "h5lite: chunk {chunk_no} decoded to {} bytes, expected {expect_raw}",
+                        raw.len()
+                    );
+                }
+                if codec::checksum32(&raw) != loc.checksum {
+                    bail!("h5lite: chunk {chunk_no} checksum mismatch (corrupt extent?)");
+                }
+                Arc::new(raw)
+            }
+        };
+        // Only cache if no write landed while we were decoding — a racing
+        // write of this chunk would otherwise leave pre-write bytes cached.
+        // The generation check runs under the cache lock: the writer bumps
+        // the generation *before* taking this lock to invalidate, so either
+        // we insert first and its removal cleans us up, or we see the bump
+        // and skip.
+        {
+            let mut cache = self.cache.lock().unwrap();
+            if self.cache_gen.load(Ordering::Acquire) == gen0 {
+                if !cache.contains_key(&id) && cache.len() >= CHUNK_CACHE_DATASETS {
+                    cache.clear(); // epoch eviction: bound long-lived readers
+                }
+                cache.insert(id, (chunk_no, Arc::clone(&raw)));
+            }
+        }
+        Ok(raw)
+    }
+
+    /// Read `rows` rows starting at `row_start` as raw bytes; chunked
+    /// datasets decompress transparently.
     pub fn read_rows(&self, ds: &Dataset, row_start: u64, rows: u64) -> Result<Vec<u8>> {
         if row_start + rows > ds.shape[0] {
             bail!(
@@ -408,11 +953,45 @@ impl H5File {
             );
         }
         let rb = ds.row_bytes();
-        let mut buf = vec![0u8; (rows * rb) as usize];
-        self.file
-            .read_exact_at(&mut buf, ds.offset + row_start * rb)
-            .context("h5lite: slab read")?;
-        Ok(buf)
+        match ds.layout {
+            Layout::Contiguous { offset } => {
+                let mut buf = vec![0u8; (rows * rb) as usize];
+                self.file
+                    .read_exact_at(&mut buf, offset + row_start * rb)
+                    .context("h5lite: slab read")?;
+                Ok(buf)
+            }
+            Layout::Chunked { .. } => {
+                let mut out = Vec::with_capacity((rows * rb) as usize);
+                for (chunk_no, row_in_chunk, take) in ds.chunk_spans(row_start, rows) {
+                    let raw = self.read_chunk_raw(ds, chunk_no)?;
+                    let off = (row_in_chunk * rb) as usize;
+                    out.extend_from_slice(&raw[off..off + (take * rb) as usize]);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Physical payload bytes a dataset occupies on disk: the reservation
+    /// for contiguous layouts, the sum of stored extents for chunked ones
+    /// (the compression win the fig8 bench reports).
+    pub fn dataset_stored_bytes(&self, ds: &Dataset) -> Result<u64> {
+        match ds.layout {
+            Layout::Contiguous { .. } => Ok(ds.n_bytes()),
+            Layout::Chunked { id, .. } => {
+                let reg = self.chunks.lock().unwrap();
+                let table = reg
+                    .get(&id)
+                    .ok_or_else(|| anyhow!("h5lite: chunk table missing (id {id})"))?;
+                Ok(table
+                    .entries
+                    .iter()
+                    .flatten()
+                    .map(|l| l.stored)
+                    .sum())
+            }
+        }
     }
 
     /// Convenience: write a full `f32` dataset in one call.
@@ -436,7 +1015,7 @@ impl H5File {
     /// Current physical size of the data region (metadata excluded) — the
     /// quantity the paper reports as "checkpoint size".
     pub fn data_bytes(&self) -> u64 {
-        self.data_end - SUPERBLOCK_LEN
+        *self.data_end.lock().unwrap() - SUPERBLOCK_LEN
     }
 }
 
@@ -458,6 +1037,7 @@ mod tests {
         }
         let f = H5File::open(&p).unwrap();
         assert!(f.root.groups.is_empty());
+        assert_eq!(f.version(), FORMAT_V2);
         std::fs::remove_file(&p).ok();
     }
 
@@ -547,9 +1127,9 @@ mod tests {
         let mut f = H5File::create(&p, 4096).unwrap();
         let d1 = f.create_dataset("/g", "a", Dtype::U8, &[10]).unwrap();
         let d2 = f.create_dataset("/g", "b", Dtype::U8, &[10]).unwrap();
-        assert_eq!(d1.offset % 4096, 0);
-        assert_eq!(d2.offset % 4096, 0);
-        assert!(d2.offset >= d1.offset + 4096);
+        assert_eq!(d1.contiguous_offset().unwrap() % 4096, 0);
+        assert_eq!(d2.contiguous_offset().unwrap() % 4096, 0);
+        assert!(d2.contiguous_offset().unwrap() >= d1.contiguous_offset().unwrap() + 4096);
         std::fs::remove_file(&p).ok();
     }
 
@@ -679,6 +1259,281 @@ mod tests {
         assert_eq!(f.data_bytes(), 0);
         f.create_dataset("/g", "d", Dtype::F32, &[100]).unwrap();
         assert_eq!(f.data_bytes(), 400);
+        std::fs::remove_file(&p).ok();
+    }
+
+    // ---------------------------------------------------------------------
+    // format v2: chunked + compressed storage
+    // ---------------------------------------------------------------------
+
+    /// Smooth f32 rows (compressible, like real cell data).
+    fn smooth_rows(rows: usize, row_elems: usize) -> Vec<f32> {
+        (0..rows * row_elems)
+            .map(|i| 1.0 + (i as f32 * 1e-3).sin() * 0.25)
+            .collect()
+    }
+
+    #[test]
+    fn chunked_roundtrip_matches_contiguous() {
+        let p = tmp("chunk_rt");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let data = smooth_rows(37, 16); // 37 rows: 4 full chunks + short tail
+        let raw = codec::f32s_to_bytes(&data);
+        let dc = f
+            .create_dataset("/g", "plain", Dtype::F32, &[37, 16])
+            .unwrap();
+        let dk = f
+            .create_dataset_chunked("/g", "packed", Dtype::F32, &[37, 16], 8, Codec::ShuffleDeltaLz)
+            .unwrap();
+        f.write_rows(&dc, 0, &raw).unwrap();
+        f.write_rows(&dk, 0, &raw).unwrap();
+        f.commit().unwrap();
+        // byte-compare every row range against the uncompressed layout
+        for (start, rows) in [(0u64, 37u64), (0, 1), (7, 2), (8, 8), (30, 7), (36, 1)] {
+            assert_eq!(
+                f.read_rows(&dk, start, rows).unwrap(),
+                f.read_rows(&dc, start, rows).unwrap(),
+                "rows [{start}, {})",
+                start + rows
+            );
+        }
+        // and the chunked copy actually stores fewer payload bytes
+        let stored = f.dataset_stored_bytes(&dk).unwrap();
+        assert!(stored < dk.n_bytes(), "{stored} vs {}", dk.n_bytes());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn chunked_survives_reopen() {
+        let p = tmp("chunk_reopen");
+        let data = smooth_rows(20, 8);
+        {
+            let mut f = H5File::create(&p, 1).unwrap();
+            let ds = f
+                .create_dataset_chunked("/g", "d", Dtype::F32, &[20, 8], 6, Codec::ShuffleLz)
+                .unwrap();
+            f.write_all_f32(&ds, &data).unwrap();
+            f.commit().unwrap();
+        }
+        let f = H5File::open(&p).unwrap();
+        let ds = f.dataset("/g", "d").unwrap();
+        assert!(ds.is_chunked());
+        assert_eq!(ds.n_chunks(), 4); // 6+6+6+2
+        assert_eq!(ds.chunk_rows_at(3), 2);
+        let back = codec::bytes_to_f32s(&f.read_rows(&ds, 0, 20).unwrap());
+        assert_eq!(back, data);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn chunked_partial_write_is_read_modify_write() {
+        let p = tmp("chunk_rmw");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::U64, &[10, 2], 4, Codec::Lz)
+            .unwrap();
+        let base: Vec<u64> = (0..20).collect();
+        f.write_rows(&ds, 0, &codec::u64s_to_bytes(&base)).unwrap();
+        // overwrite rows 3..5 (staddles the chunk 0 / chunk 1 boundary)
+        let patch: Vec<u64> = vec![900, 901, 902, 903];
+        f.write_rows(&ds, 3, &codec::u64s_to_bytes(&patch)).unwrap();
+        let all = f.read_all_u64(&ds).unwrap();
+        assert_eq!(all[..6], [0, 1, 2, 3, 4, 5]);
+        assert_eq!(all[6..10], [900, 901, 902, 903]);
+        assert_eq!(all[10..], (10u64..20).collect::<Vec<_>>()[..]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn chunked_unwritten_chunks_read_as_zeros() {
+        let p = tmp("chunk_zeros");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[12, 4], 4, Codec::ShuffleLz)
+            .unwrap();
+        // only the middle chunk written
+        f.write_rows(&ds, 4, &codec::f32s_to_bytes(&[7.0; 16])).unwrap();
+        let back = codec::bytes_to_f32s(&f.read_rows(&ds, 0, 12).unwrap());
+        assert!(back[..16].iter().all(|&x| x == 0.0));
+        assert!(back[16..32].iter().all(|&x| x == 7.0));
+        assert!(back[32..].iter().all(|&x| x == 0.0));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn chunk_checksum_detects_corruption() {
+        let p = tmp("chunk_crc");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 8], 8, Codec::ShuffleDeltaLz)
+            .unwrap();
+        f.write_all_f32(&ds, &smooth_rows(8, 8)).unwrap();
+        f.commit().unwrap();
+        let loc = f.chunk_loc(&ds, 0).unwrap().unwrap();
+        assert!(loc.stored < loc.raw);
+        // flip one byte in the middle of the stored extent
+        let file = OpenOptions::new().write(true).read(true).open(&p).unwrap();
+        let mut b = [0u8; 1];
+        file.read_exact_at(&mut b, loc.offset + loc.stored / 2).unwrap();
+        file.write_all_at(&[b[0] ^ 0xff], loc.offset + loc.stored / 2)
+            .unwrap();
+        drop(file);
+        let f2 = H5File::open(&p).unwrap();
+        let ds2 = f2.dataset("/g", "d").unwrap();
+        assert!(f2.read_rows(&ds2, 0, 8).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn incompressible_chunks_stored_raw() {
+        let p = tmp("chunk_incomp");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::U8, &[1024], 1024, Codec::Lz)
+            .unwrap();
+        // xorshift noise: LZ finds nothing, extent must fall back to raw
+        let mut s = 0x9E37_79B9u64;
+        let noise: Vec<u8> = (0..1024)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s >> 24) as u8
+            })
+            .collect();
+        f.write_rows(&ds, 0, &noise).unwrap();
+        let loc = f.chunk_loc(&ds, 0).unwrap().unwrap();
+        assert!(!loc.codec_applied);
+        assert_eq!(loc.stored, loc.raw);
+        assert_eq!(f.read_rows(&ds, 0, 1024).unwrap(), noise);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn concurrent_chunk_writes_from_threads() {
+        let p = tmp("chunk_threads");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::U64, &[64, 4], 8, Codec::ShuffleLz)
+            .unwrap();
+        // 8 threads, each owning one whole chunk (8 rows)
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let fref = &f;
+                let dref = &ds;
+                s.spawn(move || {
+                    let rows: Vec<u64> = (0..32).map(|i| t * 1000 + i).collect();
+                    fref.write_rows(dref, t * 8, &codec::u64s_to_bytes(&rows))
+                        .unwrap();
+                });
+            }
+        });
+        let all = f.read_all_u64(&ds).unwrap();
+        for t in 0..8u64 {
+            assert_eq!(all[(t * 32) as usize], t * 1000);
+            assert_eq!(all[(t * 32 + 31) as usize], t * 1000 + 31);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn concurrent_disjoint_ranges_sharing_a_chunk() {
+        // two writers own disjoint row ranges that land in the SAME chunk:
+        // the internal RMW lock must keep both writes
+        let p = tmp("chunk_shared");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::U64, &[8, 4], 8, Codec::Lz)
+            .unwrap();
+        std::thread::scope(|s| {
+            for t in 0..2u64 {
+                let fref = &f;
+                let dref = &ds;
+                s.spawn(move || {
+                    let rows: Vec<u64> = (0..16).map(|i| t * 100 + i).collect();
+                    fref.write_rows(dref, t * 4, &codec::u64s_to_bytes(&rows))
+                        .unwrap();
+                });
+            }
+        });
+        let all = f.read_all_u64(&ds).unwrap();
+        assert_eq!(all[0], 0);
+        assert_eq!(all[15], 15);
+        assert_eq!(all[16], 100);
+        assert_eq!(all[31], 115);
+        std::fs::remove_file(&p).ok();
+    }
+
+    // ---------------------------------------------------------------------
+    // format v1 backward compatibility
+    // ---------------------------------------------------------------------
+
+    #[test]
+    fn v2_reader_opens_v1_file() {
+        let p = tmp("v1_compat");
+        {
+            let mut f = H5File::create_versioned(&p, 1, FORMAT_V1).unwrap();
+            let g = f.ensure_group("/common");
+            g.attrs.insert("dt".into(), Attr::F64(0.5));
+            let ds = f.create_dataset("/sim", "x", Dtype::F32, &[3]).unwrap();
+            f.write_all_f32(&ds, &[1.0, 2.0, 3.0]).unwrap();
+            f.commit().unwrap();
+        }
+        let f = H5File::open(&p).unwrap();
+        assert_eq!(f.version(), FORMAT_V1);
+        assert_eq!(f.group("/common").unwrap().attrs["dt"], Attr::F64(0.5));
+        let ds = f.dataset("/sim", "x").unwrap();
+        assert!(!ds.is_chunked());
+        assert_eq!(
+            codec::bytes_to_f32s(&f.read_rows(&ds, 0, 3).unwrap()),
+            vec![1.0, 2.0, 3.0]
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v1_file_refuses_chunked_datasets() {
+        let p = tmp("v1_nochunk");
+        let mut f = H5File::create_versioned(&p, 1, FORMAT_V1).unwrap();
+        assert!(f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[8], 4, Codec::Lz)
+            .is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v1_appends_keep_v1_format() {
+        let p = tmp("v1_append");
+        {
+            let mut f = H5File::create_versioned(&p, 1, FORMAT_V1).unwrap();
+            let ds = f.create_dataset("/a", "x", Dtype::U8, &[2]).unwrap();
+            f.write_rows(&ds, 0, &[1, 2]).unwrap();
+            f.commit().unwrap();
+        }
+        {
+            let mut f = H5File::open(&p).unwrap();
+            assert_eq!(f.version(), FORMAT_V1);
+            let ds = f.create_dataset("/b", "y", Dtype::U8, &[2]).unwrap();
+            f.write_rows(&ds, 0, &[3, 4]).unwrap();
+            f.commit().unwrap();
+        }
+        let f = H5File::open(&p).unwrap();
+        assert_eq!(f.version(), FORMAT_V1);
+        assert_eq!(
+            f.read_rows(&f.dataset("/a", "x").unwrap(), 0, 2).unwrap(),
+            vec![1, 2]
+        );
+        assert_eq!(
+            f.read_rows(&f.dataset("/b", "y").unwrap(), 0, 2).unwrap(),
+            vec![3, 4]
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let p = tmp("v9");
+        assert!(H5File::create_versioned(&p, 1, 9).is_err());
         std::fs::remove_file(&p).ok();
     }
 }

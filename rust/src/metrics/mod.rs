@@ -41,11 +41,18 @@ impl Metrics {
         let t0 = Instant::now();
         let out = f();
         let ns = t0.elapsed().as_nanos() as u64;
+        self.add_ns(name, ns);
+        out
+    }
+
+    /// Accumulate an externally measured duration (nanoseconds) under
+    /// `name` — used where the timed region spans threads (e.g. the
+    /// aggregators' chunk-codec time in [`crate::pario`]).
+    pub fn add_ns(&self, name: &str, ns: u64) {
         let mut m = self.timers.lock().unwrap();
         m.entry(name.to_string())
             .or_insert_with(|| AtomicU64::new(0))
             .fetch_add(ns, Ordering::Relaxed);
-        out
     }
 
     pub fn seconds(&self, name: &str) -> f64 {
@@ -104,6 +111,14 @@ mod tests {
         let rep = m.report();
         assert!(rep.contains("counter a 1"));
         assert!(rep.contains("timer   b"));
+    }
+
+    #[test]
+    fn add_ns_accumulates_into_timers() {
+        let m = Metrics::new();
+        m.add_ns("io", 500_000_000);
+        m.add_ns("io", 250_000_000);
+        assert!((m.seconds("io") - 0.75).abs() < 1e-9);
     }
 
     #[test]

@@ -25,6 +25,9 @@
 //! (always row 0 of `grid_property`), follow `subgrid uid` links through a
 //! UID→row map, prune by `bounding box`, stop when descending would burst
 //! the budget, and read *only the selected rows* of `current_cell_data`.
+//! Chunk-compressed snapshots (h5lite format v2) decompress transparently
+//! inside [`H5File::read_rows`]; the file's per-dataset chunk cache keeps
+//! the row-at-a-time traversal from re-inflating the same chunk per row.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -349,6 +352,47 @@ mod tests {
             .unwrap();
         let pslice = &w[0].data[var::P * DGRID_CELLS..(var::P + 1) * DGRID_CELLS];
         assert!(pslice.iter().all(|&x| x == idx as f32));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn offline_window_identical_on_compressed_and_raw_snapshots() {
+        let p = std::env::temp_dir().join(format!("win_comp_{}.h5", std::process::id()));
+        let s = sim(2);
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 3);
+        let mut f = H5File::create(&p, 1).unwrap();
+        iokernel::write_common(&mut f, &s.params, &s.nbs.tree, 3).unwrap();
+        let comp = iokernel::write_snapshot_with(
+            &mut f,
+            &io,
+            &s.nbs.tree,
+            &s.part,
+            &s.grids,
+            0.0,
+            &iokernel::SnapshotOptions::default(),
+        )
+        .unwrap();
+        iokernel::write_snapshot_with(
+            &mut f,
+            &io,
+            &s.nbs.tree,
+            &s.part,
+            &s.grids,
+            1.0,
+            &iokernel::SnapshotOptions::uncompressed(),
+        )
+        .unwrap();
+        assert!(comp.io.stored_bytes < comp.io.bytes);
+        // every zoom level returns identical grids + payloads on both
+        for budget in [1usize, 8, 1000] {
+            let a = offline_window(&f, 0.0, &BBox::unit(), budget).unwrap();
+            let b = offline_window(&f, 1.0, &BBox::unit(), budget).unwrap();
+            assert_eq!(a.len(), b.len(), "budget {budget}");
+            for (ga, gb) in a.iter().zip(&b) {
+                assert_eq!(ga.uid.0, gb.uid.0);
+                assert_eq!(ga.data, gb.data);
+            }
+        }
         std::fs::remove_file(&p).ok();
     }
 

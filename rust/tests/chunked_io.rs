@@ -1,0 +1,153 @@
+//! Integration tests for the chunked + compressed storage path (h5lite
+//! format v2): full-stack snapshot round-trips through `iokernel` →
+//! `pario` → `h5lite`, read back through `window` and `read_snapshot`,
+//! compressed and uncompressed snapshots byte-compared, plus v1-format
+//! backward compatibility across reopen.
+
+use std::path::PathBuf;
+
+use mpfluid::cluster::{IoTuning, Machine};
+use mpfluid::config::Scenario;
+use mpfluid::h5lite::{FORMAT_V1, FORMAT_V2, H5File};
+use mpfluid::iokernel::{self, SnapshotOptions};
+use mpfluid::pario::ParallelIo;
+use mpfluid::tree::BBox;
+use mpfluid::window;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("chunked_io_{}_{}", std::process::id(), name))
+}
+
+#[test]
+fn compressed_and_raw_snapshots_agree_across_reopen() {
+    let path = tmp("agree.h5");
+    let sc = Scenario::channel(1);
+    let sim = sc.build();
+    let io = ParallelIo::new(Machine::local(), IoTuning::default(), sc.ranks as u64);
+    {
+        let mut f = H5File::create(&path, sc.alignment).unwrap();
+        iokernel::write_common(&mut f, &sim.params, &sim.nbs.tree, sc.ranks as u64).unwrap();
+        let comp = iokernel::write_snapshot_with(
+            &mut f,
+            &io,
+            &sim.nbs.tree,
+            &sim.part,
+            &sim.grids,
+            0.0,
+            &SnapshotOptions::default(),
+        )
+        .unwrap();
+        let raw = iokernel::write_snapshot_with(
+            &mut f,
+            &io,
+            &sim.nbs.tree,
+            &sim.part,
+            &sim.grids,
+            1.0,
+            &SnapshotOptions::uncompressed(),
+        )
+        .unwrap();
+        assert_eq!(comp.io.bytes, raw.io.bytes);
+        assert!(
+            comp.io.stored_bytes < raw.io.stored_bytes,
+            "cell data must compress: {} vs {}",
+            comp.io.stored_bytes,
+            raw.io.stored_bytes
+        );
+    }
+
+    // fresh handle: everything below goes through the decoded footer
+    let f = H5File::open(&path).unwrap();
+    assert_eq!(f.version(), FORMAT_V2);
+
+    // byte-compare every dataset of the two snapshots
+    for name in iokernel::DATASETS {
+        let a = f.dataset(&iokernel::ts_group(0.0), name).unwrap();
+        let b = f.dataset(&iokernel::ts_group(1.0), name).unwrap();
+        assert_eq!(a.shape, b.shape, "{name}");
+        assert_eq!(
+            f.read_rows(&a, 0, a.shape[0]).unwrap(),
+            f.read_rows(&b, 0, b.shape[0]).unwrap(),
+            "dataset {name} differs between compressed and raw"
+        );
+    }
+
+    // restart path: both snapshots restore identical states
+    let s0 = iokernel::read_snapshot(&f, 0.0).unwrap();
+    let s1 = iokernel::read_snapshot(&f, 1.0).unwrap();
+    assert_eq!(s0.tree.len(), s1.tree.len());
+    for (g0, g1) in s0.grids.iter().zip(&s1.grids) {
+        assert_eq!(g0.cur.fields, g1.cur.fields);
+        assert_eq!(g0.prev.fields, g1.prev.fields);
+        assert_eq!(g0.temp.fields, g1.temp.fields);
+    }
+
+    // window path: zoomed reads agree grid-for-grid
+    let win = BBox {
+        min: [0.1, 0.2, 0.2],
+        max: [0.5, 0.8, 0.8],
+    };
+    let w0 = window::offline_window(&f, 0.0, &win, 32).unwrap();
+    let w1 = window::offline_window(&f, 1.0, &win, 32).unwrap();
+    assert!(!w0.is_empty());
+    assert_eq!(w0.len(), w1.len());
+    for (a, b) in w0.iter().zip(&w1) {
+        assert_eq!(a.uid.0, b.uid.0);
+        assert_eq!(a.data, b.data);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn v1_file_full_cycle_still_works() {
+    // a v2 build must keep producing and consuming v1 files end to end
+    let path = tmp("v1.h5");
+    let sc = Scenario::channel(1);
+    let sim = sc.build();
+    let io = ParallelIo::new(Machine::local(), IoTuning::default(), sc.ranks as u64);
+    {
+        let mut f = H5File::create_versioned(&path, sc.alignment, FORMAT_V1).unwrap();
+        iokernel::write_common(&mut f, &sim.params, &sim.nbs.tree, sc.ranks as u64).unwrap();
+        iokernel::write_snapshot(&mut f, &io, &sim.nbs.tree, &sim.part, &sim.grids, 0.5)
+            .unwrap();
+    }
+    let f = H5File::open(&path).unwrap();
+    assert_eq!(f.version(), FORMAT_V1);
+    assert_eq!(iokernel::list_timesteps(&f), vec![0.5]);
+    let snap = iokernel::read_snapshot(&f, 0.5).unwrap();
+    assert_eq!(snap.tree.len(), sim.nbs.tree.len());
+    let w = window::offline_window(&f, 0.5, &BBox::unit(), 8).unwrap();
+    assert!(!w.is_empty());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn compressed_snapshot_shrinks_the_file() {
+    // same state written twice into two files; the chunk-compressed one
+    // must occupy fewer data-region bytes (real cell data compresses)
+    let pa = tmp("sz_comp.h5");
+    let pb = tmp("sz_raw.h5");
+    let sc = Scenario::channel(1);
+    let sim = sc.build();
+    let io = ParallelIo::new(Machine::local(), IoTuning::default(), sc.ranks as u64);
+    let write = |path: &PathBuf, opts: &SnapshotOptions| -> u64 {
+        let mut f = H5File::create(path, 1).unwrap();
+        iokernel::write_common(&mut f, &sim.params, &sim.nbs.tree, sc.ranks as u64).unwrap();
+        iokernel::write_snapshot_with(
+            &mut f,
+            &io,
+            &sim.nbs.tree,
+            &sim.part,
+            &sim.grids,
+            0.0,
+            opts,
+        )
+        .unwrap();
+        f.data_bytes()
+    };
+    let comp = write(&pa, &SnapshotOptions::default());
+    let raw = write(&pb, &SnapshotOptions::uncompressed());
+    assert!(comp < raw, "compressed file {comp} B !< raw file {raw} B");
+    std::fs::remove_file(&pa).ok();
+    std::fs::remove_file(&pb).ok();
+}

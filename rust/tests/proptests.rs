@@ -224,8 +224,98 @@ fn prop_h5lite_roundtrip_random_layout() {
         for (gpath, name, data) in expected {
             let ds = f.dataset(&gpath, &name).unwrap();
             assert_eq!(f.read_all_u64(&ds).unwrap(), data);
-            assert_eq!(ds.offset % alignment, 0);
+            assert_eq!(ds.contiguous_offset().unwrap() % alignment, 0);
         }
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+/// Codec invariant (format v2): encode→decode is the identity for every
+/// codec, element width and buffer size — exercised exactly at the chunk
+/// boundaries (0, 1, chunk−1, chunk, chunk+1 rows' worth of bytes).
+#[test]
+fn prop_codec_identity_across_chunk_boundaries() {
+    use mpfluid::h5lite::codec::Codec;
+    const CHUNK_ROWS: u64 = 8;
+    check("codec identity", 0xB1, |rng| {
+        let codec = [
+            Codec::Raw,
+            Codec::Lz,
+            Codec::ShuffleLz,
+            Codec::ShuffleDeltaLz,
+        ][rng.below(4) as usize];
+        let row_elems = 1 + rng.below(24) as usize;
+        let rows = [0, 1, CHUNK_ROWS - 1, CHUNK_ROWS, CHUNK_ROWS + 1][rng.below(5) as usize];
+        let n = rows as usize * row_elems;
+        let (raw, elem_size): (Vec<u8>, usize) = if rng.bool() {
+            // random f32 rows
+            let mut v = vec![0.0f32; n];
+            rng.fill_f32(&mut v, -1e3, 1e3);
+            (codec::f32s_to_bytes(&v), 4)
+        } else {
+            // random u64 rows
+            let v: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            (codec::u64s_to_bytes(&v), 8)
+        };
+        let enc = codec.encode(&raw, elem_size);
+        let dec = codec.decode(&enc, elem_size, raw.len()).unwrap();
+        assert_eq!(dec, raw, "{codec:?} rows={rows} elems={row_elems}");
+        assert_eq!(
+            codec::checksum32(&dec),
+            codec::checksum32(&raw),
+            "checksum stability"
+        );
+    });
+}
+
+/// Chunked storage invariant: whatever rows land through write_rows, in
+/// whatever order and chunk alignment, read_rows returns them bit-exact —
+/// and matches a plain contiguous dataset fed the same writes.
+#[test]
+fn prop_chunked_dataset_matches_contiguous() {
+    use mpfluid::h5lite::codec::Codec;
+    check("chunked == contiguous", 0xB2, |rng| {
+        let path = std::env::temp_dir().join(format!(
+            "chunkprop_{}_{}",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        let rows = 1 + rng.below(40);
+        let cols = 1 + rng.below(8);
+        let chunk_rows = 1 + rng.below(12);
+        let codec_pick =
+            [Codec::Lz, Codec::ShuffleLz, Codec::ShuffleDeltaLz][rng.below(3) as usize];
+        let mut f = H5File::create(&path, 1).unwrap();
+        let dc = f
+            .create_dataset("/g", "plain", Dtype::U64, &[rows, cols])
+            .unwrap();
+        let dk = f
+            .create_dataset_chunked("/g", "packed", Dtype::U64, &[rows, cols], chunk_rows, codec_pick)
+            .unwrap();
+        // a handful of random (possibly overlapping) row-range writes
+        for _ in 0..1 + rng.below(5) {
+            let start = rng.below(rows);
+            let span = 1 + rng.below(rows - start);
+            let data: Vec<u64> = (0..span * cols).map(|_| rng.next_u64() % 512).collect();
+            let bytes = codec::u64s_to_bytes(&data);
+            f.write_rows(&dc, start, &bytes).unwrap();
+            f.write_rows(&dk, start, &bytes).unwrap();
+        }
+        f.commit().unwrap();
+        let f = H5File::open(&path).unwrap();
+        let dc = f.dataset("/g", "plain").unwrap();
+        let dk = f.dataset("/g", "packed").unwrap();
+        assert_eq!(
+            f.read_rows(&dk, 0, rows).unwrap(),
+            f.read_rows(&dc, 0, rows).unwrap()
+        );
+        // random sub-range too
+        let start = rng.below(rows);
+        let span = 1 + rng.below(rows - start);
+        assert_eq!(
+            f.read_rows(&dk, start, span).unwrap(),
+            f.read_rows(&dc, start, span).unwrap()
+        );
         std::fs::remove_file(&path).ok();
     });
 }
