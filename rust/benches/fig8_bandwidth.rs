@@ -1,13 +1,15 @@
 //! Bench: **Fig 8a + Fig 8b** — sustained checkpoint write bandwidth.
 //!
-//! Three parts:
+//! Four parts:
 //! 1. *Real* collective writes of miniature snapshots through the full
 //!    iokernel → pario → h5lite stack on this host, sweeping rank counts
 //!    (measures the actual software path: pack, aggregate, merge, pwrite).
 //! 2. Raw vs chunk-compressed storage at equal logical bytes: effective
 //!    bandwidth (raw bytes / wall-clock) and the stored-byte ratio of the
 //!    v2 shuffle/delta/LZ cell-data path.
-//! 3. The calibrated machine model priced at the paper's scales — the
+//! 3. Steering rewrites: file-size amplification of N full cell-data
+//!    rewrites — the v2 leak vs the v2.1 free-space manager vs `repack()`.
+//! 4. The calibrated machine model priced at the paper's scales — the
 //!    series of Fig 8a (337 GB), Fig 8b (2.7 TB) and VPIC-IO alongside,
 //!    with the compressed-write multiplier.
 //!
@@ -129,6 +131,67 @@ fn real_compression_comparison() -> f64 {
     measured_ratio
 }
 
+/// Steering rewrites: write one snapshot, then rewrite all of its cell
+/// data N times (the long-running interactive scenario). A v2 file leaks
+/// every abandoned extent and grows ~N×; a v2.1 file recycles them through
+/// the free-space manager and stays near the single-write size; `repack()`
+/// then compacts either to the fragmentation-free minimum.
+fn rewrite_amplification() {
+    use mpfluid::h5lite::{ReusePolicy, FORMAT_V2, FORMAT_V21};
+    use mpfluid::iokernel::rewrite_snapshot_cells;
+    use mpfluid::{var, DGRID_CELLS};
+    const N: u32 = 6;
+    println!("\n== steering rewrites ×{N}: file-size amplification (this host) ==");
+    println!(
+        "{:>14} {:>12} {:>12} {:>8} {:>12}",
+        "format", "single", "rewritten", "amplif", "repacked"
+    );
+    for (label, version) in [("v2 (leak)", FORMAT_V2), ("v2.1 (reuse)", FORMAT_V21)] {
+        let mut sc = Scenario::channel(2);
+        sc.ranks = 8;
+        let mut sim = sc.build();
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 8);
+        let path = std::env::temp_dir().join(format!(
+            "fig8_amp_{}_{version}.h5",
+            std::process::id()
+        ));
+        let mut f = H5File::create_versioned(&path, 4096, version).unwrap();
+        f.set_reuse_policy(ReusePolicy::Immediate);
+        iokernel::write_common(&mut f, &sim.params, &sim.nbs.tree, 8).unwrap();
+        iokernel::write_snapshot(&mut f, &io, &sim.nbs.tree, &sim.part, &sim.grids, 0.0)
+            .unwrap();
+        let single = std::fs::metadata(&path).unwrap().len();
+        for step in 0..N {
+            for g in sim.grids.iter_mut() {
+                let data = vec![step as f32; DGRID_CELLS];
+                g.cur.set_interior(var::P, &data);
+            }
+            rewrite_snapshot_cells(
+                &mut f,
+                &io,
+                &sim.nbs.tree,
+                &sim.part,
+                &sim.grids,
+                0.0,
+                &SnapshotOptions::default(),
+            )
+            .unwrap();
+        }
+        let grown = std::fs::metadata(&path).unwrap().len();
+        f.repack().unwrap();
+        let repacked = std::fs::metadata(&path).unwrap().len();
+        println!(
+            "{:>14} {:>12} {:>12} {:>7.2}x {:>12}",
+            label,
+            fmt_bytes(single),
+            fmt_bytes(grown),
+            grown as f64 / single as f64,
+            fmt_bytes(repacked),
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}
+
 /// `lz_ratio` is the stored/raw ratio of the shuffle/delta/LZ cell-data
 /// path, measured on real channel-flow snapshots by
 /// [`real_compression_comparison`].
@@ -226,6 +289,7 @@ fn real_vpic_write() {
 fn main() {
     real_write_sweep();
     let lz_ratio = real_compression_comparison();
+    rewrite_amplification();
     real_vpic_write();
     modelled_fig8a(lz_ratio);
     modelled_fig8b();

@@ -90,6 +90,12 @@ pub struct IoEstimate {
     /// Bytes that physically hit the file system (== raw bytes unless the
     /// write was compressed).
     pub stored_bytes: u64,
+    /// Bytes handed back to the file's free-space manager by chunk
+    /// rewrites during this write (h5lite v2.1). Zero for a modelled-only
+    /// estimate; filled in from the real measurement by
+    /// [`crate::pario::ParallelIo::collective_write`] so steady-state file
+    /// size is derivable: growth per write ≈ stored − reclaimed.
+    pub reclaimed_bytes: u64,
 }
 
 impl fmt::Display for IoEstimate {

@@ -20,15 +20,18 @@
 //!   row block per rank — disjointness is what makes disabling file locks
 //!   safe). Chunked datasets decompress transparently on [`H5File::read_rows`].
 //!
-//! ## On-disk layout (format v2)
+//! ## On-disk layout (format v2.1)
 //!
 //! ```text
 //! [superblock 40 B] [data region …grows…] [metadata footer]
-//! superblock: magic "MPH5LITE" | version u32 (1|2) | endian u32 = 0x01020304
+//! superblock: magic "MPH5LITE" | version u32 (1|2|3) | endian u32 = 0x01020304
 //!           | footer_off u64 | footer_len u64 | alignment u32
+//!           (version 3 on disk is spoken of as "format v2.1": v2 plus the
+//!            free-list footer record below)
 //!
-//! data region:   contiguous payloads (aligned) and compressed chunk
-//!                extents (packed back to back), in allocation order
+//! data region:   contiguous payloads (aligned), compressed chunk extents
+//!                (packed), retired footers and free holes, in allocation
+//!                order — the free-space manager recycles the holes
 //!
 //! footer (per group, recursive):
 //!   attrs:    n, then (name, tag u8, value)*
@@ -40,29 +43,71 @@
 //!                         | (chunk_no u64, offset u64, stored u64,
 //!                            raw u64, checksum u32, codec_applied u8)*
 //!   groups:   n, then (name, group)*                      (recursive)
+//!   free list (v2.1 only, after the root group):
+//!             n u32, then (offset u64, len u64)*          offset-sorted,
+//!                                                         coalesced
 //! ```
 //!
-//! A v2 reader opens v1 files (every dataset decodes as contiguous); a v1
-//! file refuses chunked dataset creation. Chunk extents record whether the
-//! codec was actually applied (HDF5's per-chunk filter mask): incompressible
-//! chunks are stored raw rather than expanded. Rewriting a chunk allocates
-//! a fresh extent and abandons the old one — the same garbage HDF5 accrues
-//! until `h5repack`; checkpoint streams are append-only so this never
-//! triggers on the hot path.
+//! A v2.1 reader opens v1 and v2 files (v1 datasets decode as contiguous;
+//! v2 files simply carry no free-list record); a v1 file refuses chunked
+//! dataset creation. Chunk extents record whether the codec was actually
+//! applied (HDF5's per-chunk filter mask): incompressible chunks are stored
+//! raw rather than expanded.
 //!
-//! The footer is rewritten at the current end of data on every
-//! [`H5File::commit`]; the superblock is then updated in place. This mirrors
-//! HDF5's metadata-cache flush and makes a committed file readable at any
-//! time (the offline sliding window reads snapshots while the run
-//! continues). Dataset payload writes go through [`std::os::unix::fs::FileExt`]
-//! positional I/O, so concurrent writers (the collective-buffering
-//! aggregators) need no shared cursor and no locking.
+//! ## Free-space management (format v2.1)
+//!
+//! Rewriting a chunk retires its old extent to the **free-space manager**
+//! instead of leaking it (the garbage HDF5 accrues until `h5repack`).
+//! [`H5File::alloc`] serves new extents best-fit from the free list before
+//! growing the file, so steering workloads that rewrite cell data repeatedly
+//! keep the file near its single-write size. Two reuse policies
+//! ([`ReusePolicy`]):
+//!
+//! * [`ReusePolicy::AfterCommit`] (default) — extents freed in the current
+//!   commit epoch stay *pending* until the next [`H5File::commit`] durably
+//!   supersedes the footer that references them; only then do they become
+//!   allocatable. A crash at any point leaves the last committed
+//!   superblock → footer → extent chain fully intact.
+//! * [`ReusePolicy::Immediate`] — freed extents are allocatable at once
+//!   (HDF5-like, minimal file growth): a rewrite that fits recycles its own
+//!   slot in place, and fresh extents carry ~6 % adjacent slack so
+//!   slightly-larger rewrites grow in place too. The price: a crash
+//!   mid-epoch — or a reader that opened the file before the rewrite —
+//!   finds the committed snapshot's rewritten chunks overwritten, failing
+//!   their checksums (detected, never silent). Writer-exclusive sessions
+//!   only; concurrent-reader workloads stay on `AfterCommit`.
+//!
+//! [`H5File::repack`] is the `h5repack` analogue: it rewrites the file into
+//! a fresh one with zero fragmentation (chunk extents copied verbatim, no
+//! re-encode) and atomically renames it over the original.
+//! [`H5File::verify`] is the `fsck` analogue: it walks superblock → footer →
+//! chunk registry → extents → free list and reports overlaps, leaks and
+//! checksum mismatches in a [`VerifyReport`].
+//!
+//! ## Commit protocol (crash consistency)
+//!
+//! [`H5File::commit`] *appends* the footer past the end of the data region —
+//! never over the live one — then `sync_data`s, updates the superblock in
+//! place, and `sync_data`s again. The two barriers order footer-before-
+//! superblock, so a torn commit leaves the previous superblock pointing at
+//! the previous, untouched footer. The superseded footer's extent is retired
+//! to the free-space manager (v2.1) once the new one is live; chunk-extent
+//! allocations recycle those holes. (Residual: a file with *only*
+//! contiguous datasets has no free-list consumer, so heavy commit churn
+//! still grows it by one footer per commit until [`H5File::repack`] —
+//! contiguous reservations are deliberately append-only for their
+//! zero-fill semantics.) Files are only
+//! ever grown, never truncated: a concurrent reader (the offline sliding
+//! window reading snapshots while the run continues) can never see the file
+//! shrink below a committed footer. Dataset payload writes go through
+//! [`std::os::unix::fs::FileExt`] positional I/O, so concurrent writers (the
+//! collective-buffering aggregators) need no shared cursor and no locking.
 
 pub mod codec;
 
 use std::collections::{BTreeMap, HashMap};
 use std::fs::{File, OpenOptions};
-use std::io::{Read, Seek, SeekFrom, Write};
+use std::io::{Read, Seek, SeekFrom};
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -77,8 +122,12 @@ const MAGIC: &[u8; 8] = b"MPH5LITE";
 pub const FORMAT_V1: u32 = 1;
 /// Chunked + compressed dataset storage.
 pub const FORMAT_V2: u32 = 2;
+/// Format v2.1 (on-disk version tag 3): v2 plus the persistent free-list
+/// record — abandoned chunk extents and superseded footers are recycled by
+/// the free-space manager instead of leaked.
+pub const FORMAT_V21: u32 = 3;
 /// Default format for newly created files.
-pub const VERSION: u32 = FORMAT_V2;
+pub const VERSION: u32 = FORMAT_V21;
 const ENDIAN_TAG: u32 = 0x0102_0304;
 const SUPERBLOCK_LEN: u64 = 40;
 
@@ -167,6 +216,173 @@ struct ChunkTable {
 }
 
 type ChunkRegistry = HashMap<u64, ChunkTable>;
+
+/// When a freed extent becomes allocatable again (format v2.1).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ReusePolicy {
+    /// Freed extents stay pending until the next [`H5File::commit`]: the
+    /// footer that referenced them must be durably superseded before their
+    /// bytes may be overwritten, so a crash at any point leaves the last
+    /// committed superblock → footer → extent chain intact. The price is
+    /// one commit epoch of lag before space comes back.
+    AfterCommit,
+    /// Freed extents are allocatable immediately (HDF5-like): a chunk
+    /// rewrite that fits recycles its own slot in place, fresh extents
+    /// carry ~1/16 adjacent slack so slightly-larger rewrites grow in
+    /// place too, and the file barely grows. The trade-off is that bytes
+    /// the *committed* footer references get overwritten mid-epoch: a
+    /// crash — or a concurrent reader that opened the file before the
+    /// rewrite — sees checksum-mismatch errors on the rewritten chunks
+    /// (detected, never silent). Pick [`ReusePolicy::AfterCommit`] when
+    /// readers work the file while the run keeps writing; pick this for
+    /// writer-exclusive steering sessions where file growth matters most.
+    Immediate,
+}
+
+/// The free-space manager's extent set: offset → length, non-overlapping,
+/// coalesced (no two entries touch). Persisted in the v2.1 footer.
+#[derive(Clone, Debug, Default)]
+struct FreeList {
+    extents: BTreeMap<u64, u64>,
+    /// Cached sum of all extent lengths.
+    total: u64,
+}
+
+impl FreeList {
+    /// Add `[offset, offset + len)`, coalescing with touching neighbours.
+    fn insert(&mut self, offset: u64, len: u64) {
+        if len == 0 {
+            return;
+        }
+        self.total += len;
+        let mut off = offset;
+        let mut len = len;
+        let prev = self
+            .extents
+            .range(..off)
+            .next_back()
+            .map(|(&po, &pl)| (po, pl));
+        if let Some((po, pl)) = prev {
+            if po + pl == off {
+                self.extents.remove(&po);
+                off = po;
+                len += pl;
+            }
+        }
+        let next = self
+            .extents
+            .range(off + len..)
+            .next()
+            .map(|(&no, &nl)| (no, nl));
+        if let Some((no, nl)) = next {
+            if off + len == no {
+                self.extents.remove(&no);
+                len += nl;
+            }
+        }
+        self.extents.insert(off, len);
+    }
+
+    /// Best-fit allocation honouring `align`: carve `nbytes` out of the
+    /// smallest extent that can hold them at an aligned start. Head and
+    /// tail fragments go back on the list.
+    fn alloc(&mut self, nbytes: u64, align: u64) -> Option<u64> {
+        if nbytes == 0 {
+            return None;
+        }
+        let align = align.max(1);
+        let mut best: Option<(u64, u64)> = None; // (len, off)
+        for (&off, &len) in &self.extents {
+            let aligned = off.next_multiple_of(align);
+            if aligned - off + nbytes <= len && best.map_or(true, |(bl, _)| len < bl) {
+                best = Some((len, off));
+            }
+        }
+        let (len, off) = best?;
+        self.extents.remove(&off);
+        self.total -= len;
+        let aligned = off.next_multiple_of(align);
+        self.insert(off, aligned - off);
+        self.insert(aligned + nbytes, off + len - (aligned + nbytes));
+        Some(aligned)
+    }
+
+    /// Carve exactly `[offset, offset + len)` out of the free set if that
+    /// whole range is currently free — used to grow a chunk in place into
+    /// the slack left after it.
+    fn take_range(&mut self, offset: u64, len: u64) -> bool {
+        if len == 0 {
+            return true;
+        }
+        let covering = self
+            .extents
+            .range(..=offset)
+            .next_back()
+            .map(|(&eo, &el)| (eo, el));
+        let Some((eo, el)) = covering else {
+            return false;
+        };
+        if eo + el < offset + len {
+            return false;
+        }
+        self.extents.remove(&eo);
+        self.total -= el;
+        self.insert(eo, offset - eo);
+        self.insert(offset + len, eo + el - (offset + len));
+        true
+    }
+
+    /// Move every extent of `other` into `self`.
+    fn absorb(&mut self, other: FreeList) {
+        for (off, len) in other.extents {
+            self.insert(off, len);
+        }
+    }
+}
+
+/// Space accounting of one file's data region (see [`H5File::space_stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpaceStats {
+    /// Physical bytes past the superblock (file length − 40).
+    pub file_bytes: u64,
+    /// Allocatable free bytes (the free list).
+    pub free_bytes: u64,
+    /// Bytes retired since the last commit, allocatable after it.
+    pub pending_bytes: u64,
+    /// Cumulative bytes ever retired to the free-space manager.
+    pub reclaimed_bytes: u64,
+    /// Cumulative bytes served from the free list instead of appended.
+    pub reused_bytes: u64,
+}
+
+/// Outcome of an fsck-style [`H5File::verify`] walk.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    /// End of the data region (physical file length).
+    pub data_end: u64,
+    /// Dataset payload bytes: contiguous reservations + stored chunk
+    /// extents.
+    pub live_bytes: u64,
+    /// Metadata bytes: superblock + the committed footer.
+    pub meta_bytes: u64,
+    /// Free bytes known to the free-space manager (free + pending).
+    pub free_bytes: u64,
+    /// Bytes accounted to nothing: alignment padding, superseded footers
+    /// and extents leaked before the free-space manager existed (v1/v2).
+    pub leaked_bytes: u64,
+    pub n_datasets: u64,
+    pub n_chunks: u64,
+    /// Human-readable findings: overlaps, out-of-bounds extents, checksum
+    /// mismatches. Empty ⇔ the file is consistent.
+    pub errors: Vec<String>,
+}
+
+impl VerifyReport {
+    /// True when the walk found no structural damage.
+    pub fn ok(&self) -> bool {
+        self.errors.is_empty()
+    }
+}
 
 /// A dataset: typed n-dimensional array with a contiguous or chunked layout.
 #[derive(Clone, Debug)]
@@ -446,17 +662,61 @@ impl Group {
     }
 }
 
-/// One-deep-per-dataset decoded-chunk cache, keyed by dataset id: the
-/// offline sliding window and the snapshot restore read rows one at a
-/// time, interleaving the three cell-data datasets — a single shared slot
-/// would thrash on the interleave and decompress every chunk once per row
-/// instead of once. Capped at [`CHUNK_CACHE_DATASETS`] entries (epoch
-/// clear on overflow) so a long-lived reader walking many timesteps
-/// doesn't retain one decoded chunk per dataset forever.
-type ChunkCache = HashMap<u64, (u64, Arc<Vec<u8>>)>;
+/// Decoded-chunk LRU cache keyed by `(dataset id, chunk no)`: the offline
+/// sliding window and the snapshot restore read rows one at a time,
+/// interleaving the three cell-data datasets, and multi-grid window
+/// queries straddle chunk boundaries — the old one-slot-per-dataset cache
+/// thrashed on the straddle and re-inflated the same chunks per query.
+/// Capacity [`CHUNK_CACHE_SLOTS`] decoded chunks, least-recently-used
+/// eviction, so a long-lived reader walking many timesteps stays bounded.
+#[derive(Default)]
+struct ChunkCache {
+    map: HashMap<(u64, u64), (u64, Arc<Vec<u8>>)>,
+    /// Monotonic access counter driving the LRU order.
+    tick: u64,
+}
 
-/// Max datasets with a live cached chunk before the cache is cleared.
-const CHUNK_CACHE_DATASETS: usize = 8;
+/// Max decoded chunks held by a file's chunk cache.
+const CHUNK_CACHE_SLOTS: usize = 16;
+
+/// Under [`ReusePolicy::Immediate`], fresh chunk extents are allocated
+/// with `len / CHUNK_SLACK_DIV` bytes of adjacent slack (left on the free
+/// list right after the extent), so a rewrite that compresses a few
+/// percent *larger* still grows in place instead of abandoning its slot —
+/// without it, steady-state file size under realistically varying chunk
+/// sizes creeps toward ~1.5× (measured in simulation; with 1/16 slack it
+/// stays ≤ ~1.06× through ±3 % size variance).
+const CHUNK_SLACK_DIV: u64 = 16;
+
+impl ChunkCache {
+    fn get(&mut self, id: u64, chunk_no: u64) -> Option<Arc<Vec<u8>>> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(&(id, chunk_no)).map(|e| {
+            e.0 = tick;
+            Arc::clone(&e.1)
+        })
+    }
+
+    fn insert(&mut self, id: u64, chunk_no: u64, data: Arc<Vec<u8>>) {
+        if self.map.len() >= CHUNK_CACHE_SLOTS && !self.map.contains_key(&(id, chunk_no)) {
+            let evict = self
+                .map
+                .iter()
+                .min_by_key(|(_, (tick, _))| *tick)
+                .map(|(&k, _)| k);
+            if let Some(k) = evict {
+                self.map.remove(&k);
+            }
+        }
+        self.tick += 1;
+        self.map.insert((id, chunk_no), (self.tick, data));
+    }
+
+    fn invalidate(&mut self, id: u64, chunk_no: u64) {
+        self.map.remove(&(id, chunk_no));
+    }
+}
 
 /// An h5lite file handle.
 ///
@@ -477,6 +737,21 @@ pub struct H5File {
     version: u32,
     chunks: Mutex<ChunkRegistry>,
     next_ds_id: AtomicU64,
+    /// Allocatable free extents (format v2.1; always empty on v1/v2).
+    free: Mutex<FreeList>,
+    /// Extents retired since the last commit under
+    /// [`ReusePolicy::AfterCommit`]; merged into `free` once the commit
+    /// that no longer references them is durable.
+    pending_free: Mutex<FreeList>,
+    /// Extent of the footer the on-disk superblock points at, `(off, len)`
+    /// (`(0, 0)` before the first commit). Never overwritten in place;
+    /// retired to the free-space manager when superseded.
+    committed_footer: Mutex<(u64, u64)>,
+    reuse_policy: ReusePolicy,
+    /// Cumulative bytes retired to the free-space manager.
+    reclaimed: AtomicU64,
+    /// Cumulative bytes served from the free list instead of appended.
+    reused: AtomicU64,
     cache: Mutex<ChunkCache>,
     /// Bumped on every chunk-extent write; readers snapshot it before
     /// loading an extent and only populate the cache if it is unchanged
@@ -503,14 +778,14 @@ impl H5File {
 
     /// Create a new file in an explicit format version (v1 = contiguous
     /// only, for compatibility tests and old readers; v2 = chunked +
-    /// compressed storage available).
+    /// compressed storage; v2.1 = v2 + the persistent free-space manager).
     pub fn create_versioned<P: AsRef<Path>>(
         path: P,
         alignment: u64,
         version: u32,
     ) -> Result<H5File> {
         assert!(alignment >= 1);
-        if !(FORMAT_V1..=FORMAT_V2).contains(&version) {
+        if !(FORMAT_V1..=FORMAT_V21).contains(&version) {
             bail!("h5lite: cannot create format v{version}");
         }
         let file = OpenOptions::new()
@@ -529,7 +804,13 @@ impl H5File {
             version,
             chunks: Mutex::new(HashMap::new()),
             next_ds_id: AtomicU64::new(1),
-            cache: Mutex::new(HashMap::new()),
+            free: Mutex::new(FreeList::default()),
+            pending_free: Mutex::new(FreeList::default()),
+            committed_footer: Mutex::new((0, 0)),
+            reuse_policy: ReusePolicy::AfterCommit,
+            reclaimed: AtomicU64::new(0),
+            reused: AtomicU64::new(0),
+            cache: Mutex::new(ChunkCache::default()),
             cache_gen: AtomicU64::new(0),
             rmw: Mutex::new(()),
         };
@@ -537,7 +818,8 @@ impl H5File {
         Ok(f)
     }
 
-    /// Open an existing file (read + write). Accepts format v1 and v2.
+    /// Open an existing file (read + write). Accepts formats v1, v2 and
+    /// v2.1.
     pub fn open<P: AsRef<Path>>(path: P) -> Result<H5File> {
         let mut file = OpenOptions::new()
             .read(true)
@@ -552,7 +834,7 @@ impl H5File {
         }
         let mut d = Dec::new(&sb[8..]);
         let version = d.u32()?;
-        if !(FORMAT_V1..=FORMAT_V2).contains(&version) {
+        if !(FORMAT_V1..=FORMAT_V21).contains(&version) {
             bail!("h5lite: unsupported version {version}");
         }
         let endian = d.u32()?;
@@ -570,16 +852,40 @@ impl H5File {
         let mut reg = HashMap::new();
         let mut next_id = 1u64;
         let root = Group::decode(&mut fd, version, &mut reg, &mut next_id)?;
+        let mut free = FreeList::default();
+        if version >= FORMAT_V21 {
+            let n = fd.u32()?;
+            for _ in 0..n {
+                let off = fd.u64()?;
+                let len = fd.u64()?;
+                free.insert(off, len);
+            }
+        }
+        // The data region spans the whole file: the committed footer is an
+        // allocation like any other (appended by commit, never overwritten
+        // in place). Trailing bytes past the footer — writes after the last
+        // commit of a crashed run — are treated as leaked, never reused.
+        let file_len = file
+            .metadata()
+            .context("h5lite: stat")?
+            .len()
+            .max(footer_off.saturating_add(footer_len));
         Ok(H5File {
             file,
             path: path.as_ref().to_path_buf(),
             root,
-            data_end: Mutex::new(footer_off),
+            data_end: Mutex::new(file_len),
             alignment,
             version,
             chunks: Mutex::new(reg),
             next_ds_id: AtomicU64::new(next_id),
-            cache: Mutex::new(HashMap::new()),
+            free: Mutex::new(free),
+            pending_free: Mutex::new(FreeList::default()),
+            committed_footer: Mutex::new((footer_off, footer_len)),
+            reuse_policy: ReusePolicy::AfterCommit,
+            reclaimed: AtomicU64::new(0),
+            reused: AtomicU64::new(0),
+            cache: Mutex::new(ChunkCache::default()),
             cache_gen: AtomicU64::new(0),
             rmw: Mutex::new(()),
         })
@@ -590,32 +896,89 @@ impl H5File {
         self.version
     }
 
-    /// Flush metadata: write the footer at the end of the data region and
-    /// update the superblock. Readers opening the file afterwards see a
-    /// consistent snapshot.
+    /// Flush metadata: append the footer past the end of the data region,
+    /// make it durable, then flip the superblock to it. Readers opening the
+    /// file at any point — including after a crash anywhere inside this
+    /// sequence — see a consistent superblock → footer chain: the footer is
+    /// never written over the live one, and a `sync_data` barrier orders it
+    /// before the superblock update (plus one after, so the flip itself is
+    /// durable when `commit` returns).
     pub fn commit(&mut self) -> Result<()> {
         let mut e = Enc::new();
         {
             let reg = self.chunks.lock().unwrap();
             self.root.encode(&mut e, self.version, &reg)?;
         }
-        let footer_off = *self.data_end.lock().unwrap();
-        self.file.seek(SeekFrom::Start(footer_off))?;
-        self.file.write_all(&e.buf)?;
-        // superblock
+        if self.version >= FORMAT_V21 {
+            // Free-list record: everything allocatable from this footer's
+            // point of view — the free list, the extents retired this epoch
+            // (pending) and the footer being superseded. None of them is
+            // referenced by the footer we are writing, but none may be
+            // overwritten until it is durably live, so the in-memory lists
+            // are only merged after the superblock flip below.
+            let mut record = self.free.lock().unwrap().clone();
+            for (&off, &len) in &self.pending_free.lock().unwrap().extents {
+                record.insert(off, len);
+            }
+            let (fo, fl) = *self.committed_footer.lock().unwrap();
+            if fl > 0 {
+                record.insert(fo, fl);
+            }
+            e.u32(record.extents.len() as u32);
+            for (&off, &len) in &record.extents {
+                e.u64(off);
+                e.u64(len);
+            }
+        }
+        let footer_len = e.buf.len() as u64;
+        // Append-only: the new footer goes past everything, never over the
+        // live footer (a torn write must leave the previous chain intact)
+        // and never into free space (the record above would list its own
+        // extent as free). The superseded footer's hole is recycled below.
+        let footer_off = {
+            let mut end = self.data_end.lock().unwrap();
+            let offset = *end;
+            let cur = self.file.metadata().context("h5lite: stat")?.len();
+            self.file.set_len(cur.max(offset + footer_len))?;
+            *end = offset + footer_len;
+            offset
+        };
+        self.file
+            .write_all_at(&e.buf, footer_off)
+            .context("h5lite: footer write")?;
+        // barrier: the footer must be on disk before the superblock points
+        // at it — without this, a crash can leave a valid superblock
+        // referencing a footer that never hit the platter
+        self.file.sync_data().context("h5lite: footer sync")?;
         let mut sb = Vec::with_capacity(SUPERBLOCK_LEN as usize);
         sb.extend_from_slice(MAGIC);
         let mut se = Enc::new();
         se.u32(self.version);
         se.u32(ENDIAN_TAG);
         se.u64(footer_off);
-        se.u64(e.buf.len() as u64);
+        se.u64(footer_len);
         se.u32(self.alignment as u32);
         sb.extend_from_slice(&se.buf);
         sb.resize(SUPERBLOCK_LEN as usize, 0);
-        self.file.seek(SeekFrom::Start(0))?;
-        self.file.write_all(&sb)?;
-        self.file.flush()?;
+        self.file
+            .write_all_at(&sb, 0)
+            .context("h5lite: superblock write")?;
+        self.file.sync_data().context("h5lite: superblock sync")?;
+        // The new footer is live: the superseded one and every extent
+        // retired this epoch are no longer referenced by anything on disk.
+        let prev = std::mem::replace(
+            &mut *self.committed_footer.lock().unwrap(),
+            (footer_off, footer_len),
+        );
+        if self.version >= FORMAT_V21 {
+            let pending = std::mem::take(&mut *self.pending_free.lock().unwrap());
+            let mut free = self.free.lock().unwrap();
+            free.absorb(pending);
+            if prev.1 > 0 {
+                self.reclaimed.fetch_add(prev.1, Ordering::Relaxed);
+                free.insert(prev.0, prev.1);
+            }
+        }
         Ok(())
     }
 
@@ -640,14 +1003,54 @@ impl H5File {
         Ok(g)
     }
 
-    /// Reserve `nbytes` of data-region space aligned to `align`, extending
-    /// the file. Thread-safe (the chunk writers allocate concurrently).
+    /// Reserve `nbytes` of data-region space aligned to `align`: best-fit
+    /// from the free list when the format persists one (v2.1), else by
+    /// extending the file. Thread-safe (the chunk writers allocate
+    /// concurrently). The file is only ever *grown* — shrinking below a
+    /// committed footer would truncate it behind a concurrent reader's
+    /// already-validated superblock.
     fn alloc(&self, nbytes: u64, align: u64) -> Result<u64> {
+        if self.version >= FORMAT_V21 {
+            if let Some(offset) = self.free.lock().unwrap().alloc(nbytes, align) {
+                self.reused.fetch_add(nbytes, Ordering::Relaxed);
+                return Ok(offset);
+            }
+        }
+        self.alloc_append(nbytes, align)
+    }
+
+    /// Append-only allocation: used for contiguous reservations, which
+    /// rely on `set_len` zero-fill for their unwritten rows (HDF5
+    /// fill-value semantics — a recycled extent would leak stale bytes
+    /// into those reads). Chunk extents are always written whole
+    /// immediately, so only they go through the free list.
+    fn alloc_append(&self, nbytes: u64, align: u64) -> Result<u64> {
         let mut end = self.data_end.lock().unwrap();
         let offset = end.next_multiple_of(align.max(1));
-        self.file.set_len(offset + nbytes)?;
+        let cur = self.file.metadata().context("h5lite: stat")?.len();
+        self.file.set_len(cur.max(offset + nbytes))?;
         *end = offset + nbytes;
         Ok(offset)
+    }
+
+    /// Hand `[offset, offset + len)` back to the free-space manager
+    /// (no-op on v1/v2 files, which leak abandoned extents by design).
+    fn retire_extent(&self, offset: u64, len: u64) {
+        if self.version < FORMAT_V21 || len == 0 {
+            return;
+        }
+        self.reclaimed.fetch_add(len, Ordering::Relaxed);
+        match self.reuse_policy {
+            ReusePolicy::Immediate => self.free.lock().unwrap().insert(offset, len),
+            ReusePolicy::AfterCommit => {
+                self.pending_free.lock().unwrap().insert(offset, len)
+            }
+        }
+    }
+
+    /// Choose when freed extents become allocatable (see [`ReusePolicy`]).
+    pub fn set_reuse_policy(&mut self, policy: ReusePolicy) {
+        self.reuse_policy = policy;
     }
 
     /// Create a contiguous dataset under `group_path`, reserving (aligned)
@@ -669,7 +1072,7 @@ impl H5File {
             shape: shape.to_vec(),
             layout: Layout::Contiguous { offset: 0 },
         };
-        let offset = self.alloc(ds.n_bytes(), self.alignment)?;
+        let offset = self.alloc_append(ds.n_bytes(), self.alignment)?;
         let ds = Dataset {
             layout: Layout::Contiguous { offset },
             ..ds
@@ -832,7 +1235,47 @@ impl H5File {
         if raw_len != expect_raw {
             bail!("h5lite: chunk {chunk_no} raw length {raw_len}, expected {expect_raw}");
         }
-        let offset = self.alloc(stored.len() as u64, 1)?;
+        let prev = {
+            let reg = self.chunks.lock().unwrap();
+            let table = reg
+                .get(&id)
+                .ok_or_else(|| anyhow!("h5lite: chunk table missing (id {id})"))?;
+            table.entries[chunk_no as usize]
+        };
+        // Slot choice. Under Immediate reuse a rewrite stays in place when
+        // the new extent fits the old slot (shrink surplus back to the
+        // allocator) or can grow into the free slack right after it; a
+        // fresh slot is allocated with ~6 % adjacent slack so future small
+        // grows stay in place too (see CHUNK_SLACK_DIV). A torn in-place
+        // write is caught by the chunk checksum — the crash-safety
+        // trade-off the policy documents — and the free list never holds
+        // bytes the chunk index still references, so a failed write below
+        // cannot hand a live extent to another writer. AfterCommit always
+        // allocates fresh (packed) and parks the old extent on the pending
+        // list after the index swap.
+        let new_len = stored.len() as u64;
+        let immediate =
+            self.reuse_policy == ReusePolicy::Immediate && self.version >= FORMAT_V21;
+        let in_place = immediate
+            && match prev {
+                Some(old) if new_len <= old.stored => true,
+                Some(old) => self
+                    .free
+                    .lock()
+                    .unwrap()
+                    .take_range(old.offset + old.stored, new_len - old.stored),
+                None => false,
+            };
+        let offset = if in_place {
+            prev.unwrap().offset
+        } else if immediate {
+            let cap = new_len + new_len / CHUNK_SLACK_DIV;
+            let off = self.alloc(cap, 1)?;
+            self.free.lock().unwrap().insert(off + new_len, cap - new_len);
+            off
+        } else {
+            self.alloc(new_len, 1)?
+        };
         self.file
             .write_all_at(stored, offset)
             .context("h5lite: chunk extent write")?;
@@ -843,11 +1286,28 @@ impl H5File {
                 .ok_or_else(|| anyhow!("h5lite: chunk table missing (id {id})"))?;
             table.entries[chunk_no as usize] = Some(ChunkLoc {
                 offset,
-                stored: stored.len() as u64,
+                stored: new_len,
                 raw: raw_len,
                 checksum,
                 codec_applied,
             });
+        }
+        if let Some(old) = prev {
+            if in_place {
+                // the old slot was recycled in place; a shrink's surplus
+                // goes back to the allocator (a grow already carved its
+                // extra bytes out of the free list above)
+                self.reused.fetch_add(new_len, Ordering::Relaxed);
+                self.reclaimed.fetch_add(old.stored, Ordering::Relaxed);
+                if new_len < old.stored {
+                    self.free
+                        .lock()
+                        .unwrap()
+                        .insert(old.offset + new_len, old.stored - new_len);
+                }
+            } else {
+                self.retire_extent(old.offset, old.stored);
+            }
         }
         // bump BEFORE invalidating: a reader that passes its generation
         // check inserted before this point, so the removal below cleans it
@@ -855,13 +1315,25 @@ impl H5File {
         // reverse order would leave a window (after removal, before bump)
         // where a stale insert survives.
         self.cache_gen.fetch_add(1, Ordering::Release);
-        {
-            let mut cache = self.cache.lock().unwrap();
-            if cache.get(&id).map_or(false, |&(no, _)| no == chunk_no) {
-                cache.remove(&id);
-            }
-        }
+        self.cache.lock().unwrap().invalidate(id, chunk_no);
         Ok(())
+    }
+
+    /// Test-only: corrupt a chunk's recorded extent offset, to exercise
+    /// [`H5File::verify`]'s overlap detection.
+    #[cfg(test)]
+    fn poke_chunk_offset(&self, ds: &Dataset, chunk_no: u64, offset: u64) {
+        let (_, _, id) = ds.chunk_meta().unwrap();
+        let mut reg = self.chunks.lock().unwrap();
+        if let Some(loc) = reg.get_mut(&id).unwrap().entries[chunk_no as usize].as_mut() {
+            loc.offset = offset;
+        }
+    }
+
+    /// Test-only: decoded chunks currently held by the LRU cache.
+    #[cfg(test)]
+    fn cached_chunks(&self) -> usize {
+        self.cache.lock().unwrap().map.len()
     }
 
     /// Chunk index entry for `chunk_no` (`None` = not yet written).
@@ -880,19 +1352,14 @@ impl H5File {
             .ok_or_else(|| anyhow!("h5lite: chunk {chunk_no} out of range"))
     }
 
-    /// Read and decode one whole chunk (zeros if never written). Cached
-    /// one-deep per file for row-at-a-time readers.
+    /// Read and decode one whole chunk (zeros if never written). Decoded
+    /// chunks are held in the file's LRU cache for row-at-a-time readers.
     pub fn read_chunk_raw(&self, ds: &Dataset, chunk_no: u64) -> Result<Arc<Vec<u8>>> {
         let (_, codec, id) = ds
             .chunk_meta()
             .ok_or_else(|| anyhow!("h5lite: read_chunk_raw on contiguous dataset"))?;
-        {
-            let cache = self.cache.lock().unwrap();
-            if let Some((no, data)) = cache.get(&id) {
-                if *no == chunk_no {
-                    return Ok(Arc::clone(data));
-                }
-            }
+        if let Some(data) = self.cache.lock().unwrap().get(id, chunk_no) {
+            return Ok(data);
         }
         let gen0 = self.cache_gen.load(Ordering::Acquire);
         let loc = self.chunk_loc(ds, chunk_no)?;
@@ -933,10 +1400,7 @@ impl H5File {
         {
             let mut cache = self.cache.lock().unwrap();
             if self.cache_gen.load(Ordering::Acquire) == gen0 {
-                if !cache.contains_key(&id) && cache.len() >= CHUNK_CACHE_DATASETS {
-                    cache.clear(); // epoch eviction: bound long-lived readers
-                }
-                cache.insert(id, (chunk_no, Arc::clone(&raw)));
+                cache.insert(id, chunk_no, Arc::clone(&raw));
             }
         }
         Ok(raw)
@@ -1012,11 +1476,259 @@ impl H5File {
         Ok(codec::bytes_to_f64s(&self.read_rows(ds, 0, ds.shape[0])?))
     }
 
-    /// Current physical size of the data region (metadata excluded) — the
-    /// quantity the paper reports as "checkpoint size".
+    /// Payload size of the data region — physical bytes minus the committed
+    /// footer and the free-space manager's holes; the quantity the paper
+    /// reports as "checkpoint size".
     pub fn data_bytes(&self) -> u64 {
-        *self.data_end.lock().unwrap() - SUPERBLOCK_LEN
+        let end = *self.data_end.lock().unwrap();
+        let (_, footer_len) = *self.committed_footer.lock().unwrap();
+        let free = self.free.lock().unwrap().total;
+        let pending = self.pending_free.lock().unwrap().total;
+        end.saturating_sub(SUPERBLOCK_LEN)
+            .saturating_sub(footer_len)
+            .saturating_sub(free)
+            .saturating_sub(pending)
     }
+
+    /// Total bytes the free-space manager holds (allocatable + pending).
+    pub fn free_bytes(&self) -> u64 {
+        self.free.lock().unwrap().total + self.pending_free.lock().unwrap().total
+    }
+
+    /// Space-accounting snapshot of the data region.
+    pub fn space_stats(&self) -> SpaceStats {
+        SpaceStats {
+            file_bytes: self.data_end.lock().unwrap().saturating_sub(SUPERBLOCK_LEN),
+            free_bytes: self.free.lock().unwrap().total,
+            pending_bytes: self.pending_free.lock().unwrap().total,
+            reclaimed_bytes: self.reclaimed.load(Ordering::Relaxed),
+            reused_bytes: self.reused.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Read, decode and checksum one chunk extent directly from disk,
+    /// bypassing the decoded-chunk cache — [`H5File::verify`]'s integrity
+    /// probe (a cached copy would mask on-disk corruption that happened
+    /// after the chunk was last read).
+    fn check_chunk_on_disk(&self, ds: &Dataset, chunk_no: u64, loc: ChunkLoc) -> Result<()> {
+        let (_, codec, _) = ds
+            .chunk_meta()
+            .ok_or_else(|| anyhow!("h5lite: chunk check on contiguous dataset"))?;
+        let mut stored = vec![0u8; loc.stored as usize];
+        self.file
+            .read_exact_at(&mut stored, loc.offset)
+            .context("h5lite: chunk extent read")?;
+        let raw = if loc.codec_applied {
+            codec.decode(&stored, ds.dtype.size(), loc.raw as usize)?
+        } else {
+            if stored.len() as u64 != loc.raw {
+                bail!("h5lite: raw-stored chunk length mismatch");
+            }
+            stored
+        };
+        let expect_raw = (ds.chunk_rows_at(chunk_no) * ds.row_bytes()) as usize;
+        if raw.len() != expect_raw {
+            bail!(
+                "h5lite: chunk {chunk_no} decoded to {} bytes, expected {expect_raw}",
+                raw.len()
+            );
+        }
+        if codec::checksum32(&raw) != loc.checksum {
+            bail!("h5lite: chunk {chunk_no} checksum mismatch (corrupt extent?)");
+        }
+        Ok(())
+    }
+
+    /// fsck-style consistency walk: superblock → footer → chunk registry →
+    /// extents → free list. Reports extent overlaps, out-of-bounds extents,
+    /// chunk checksum mismatches, and accounts every byte of the data
+    /// region as live, metadata, free or leaked. Chunk payloads are read
+    /// straight from disk (the decoded-chunk cache is bypassed). Never
+    /// panics on damage — findings land in [`VerifyReport::errors`].
+    pub fn verify(&self) -> Result<VerifyReport> {
+        let data_end = *self.data_end.lock().unwrap();
+        let (footer_off, footer_len) = *self.committed_footer.lock().unwrap();
+        let mut report = VerifyReport {
+            data_end,
+            meta_bytes: SUPERBLOCK_LEN + footer_len,
+            ..VerifyReport::default()
+        };
+        // every claimed extent: (offset, len, label)
+        let mut extents: Vec<(u64, u64, String)> = Vec::new();
+        extents.push((0, SUPERBLOCK_LEN, "superblock".into()));
+        if footer_len > 0 {
+            extents.push((footer_off, footer_len, "footer".into()));
+        }
+        let mut stack: Vec<(String, &Group)> = vec![(String::new(), &self.root)];
+        while let Some((path, g)) = stack.pop() {
+            for (name, ds) in &g.datasets {
+                report.n_datasets += 1;
+                match ds.layout {
+                    Layout::Contiguous { offset } => {
+                        report.live_bytes += ds.n_bytes();
+                        extents.push((offset, ds.n_bytes(), format!("{path}/{name}")));
+                    }
+                    Layout::Chunked { .. } => {
+                        for chunk_no in 0..ds.n_chunks() {
+                            let Some(loc) = self.chunk_loc(ds, chunk_no)? else {
+                                continue;
+                            };
+                            report.n_chunks += 1;
+                            report.live_bytes += loc.stored;
+                            extents.push((
+                                loc.offset,
+                                loc.stored,
+                                format!("{path}/{name}[{chunk_no}]"),
+                            ));
+                            // straight from disk, never the decoded-chunk
+                            // cache: fsck must see the bytes as they are,
+                            // not as they were when last read
+                            if let Err(e) = self.check_chunk_on_disk(ds, chunk_no, loc) {
+                                report
+                                    .errors
+                                    .push(format!("{path}/{name} chunk {chunk_no}: {e}"));
+                            }
+                        }
+                    }
+                }
+            }
+            for (name, sub) in &g.groups {
+                stack.push((format!("{path}/{name}"), sub));
+            }
+        }
+        {
+            let free = self.free.lock().unwrap();
+            let pending = self.pending_free.lock().unwrap();
+            report.free_bytes = free.total + pending.total;
+            for (&off, &len) in free.extents.iter().chain(pending.extents.iter()) {
+                extents.push((off, len, "free".into()));
+            }
+        }
+        for (off, len, label) in &extents {
+            let end = off.saturating_add(*len);
+            if end > data_end {
+                report.errors.push(format!(
+                    "extent '{label}' [{off}, {end}) exceeds data end {data_end}"
+                ));
+            }
+        }
+        extents.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        for w in extents.windows(2) {
+            let (ao, al, an) = (w[0].0, w[0].1, &w[0].2);
+            let (bo, bn) = (w[1].0, &w[1].2);
+            let aend = ao.saturating_add(al);
+            if aend > bo && al > 0 {
+                report.errors.push(format!(
+                    "extents overlap: '{an}' [{ao}, {aend}) and '{bn}' at {bo}"
+                ));
+            }
+        }
+        report.leaked_bytes = data_end
+            .saturating_sub(report.live_bytes)
+            .saturating_sub(report.meta_bytes)
+            .saturating_sub(report.free_bytes);
+        Ok(report)
+    }
+
+    /// Offline compaction (the `h5repack` analogue): rewrite this file into
+    /// a fresh one with zero fragmentation — groups, attributes and
+    /// datasets copied in deterministic order, chunk extents copied
+    /// *verbatim* (stored bytes, checksum and filter mask preserved, no
+    /// re-encode) — then atomically rename it over the original and reopen.
+    /// Returns the number of physical bytes reclaimed.
+    pub fn repack(&mut self) -> Result<u64> {
+        let before = *self.data_end.lock().unwrap();
+        let tmp = self.path.with_file_name(format!(
+            "{}.repack",
+            self.path
+                .file_name()
+                .and_then(|s| s.to_str())
+                .unwrap_or("h5lite")
+        ));
+        let mut dst = H5File::create_versioned(&tmp, self.alignment, self.version)?;
+        let root = self.root.clone();
+        let copy_result = copy_group_into(self, &root, &mut dst, "");
+        let committed = copy_result.and_then(|_| dst.commit());
+        let after = *dst.data_end.lock().unwrap();
+        drop(dst);
+        if let Err(e) = committed {
+            std::fs::remove_file(&tmp).ok();
+            return Err(e);
+        }
+        // Open the compacted file *before* the rename: the descriptor
+        // follows the inode through it, so there is no window where a
+        // failure could leave this handle pointing at an unlinked file
+        // (writes silently lost). Any error up to the rename leaves the
+        // original file and handle untouched.
+        let mut reopened = match H5File::open(&tmp) {
+            Ok(f) => f,
+            Err(e) => {
+                std::fs::remove_file(&tmp).ok();
+                return Err(e);
+            }
+        };
+        if let Err(e) = std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("h5lite: repack rename over {:?}", self.path))
+        {
+            std::fs::remove_file(&tmp).ok();
+            return Err(e);
+        }
+        // the handle swap must not reset caller-visible state: keep the
+        // path, the configured reuse policy and the cumulative counters
+        reopened.path = self.path.clone();
+        reopened.reuse_policy = self.reuse_policy;
+        reopened.reclaimed = AtomicU64::new(self.reclaimed.load(Ordering::Relaxed));
+        reopened.reused = AtomicU64::new(self.reused.load(Ordering::Relaxed));
+        *self = reopened;
+        Ok(before.saturating_sub(after))
+    }
+}
+
+/// Recursively copy `g` (a group of `src`) into `dst` under `path` —
+/// the repack work loop.
+fn copy_group_into(src: &H5File, g: &Group, dst: &mut H5File, path: &str) -> Result<()> {
+    dst.ensure_group(path).attrs = g.attrs.clone();
+    for (name, ds) in &g.datasets {
+        match ds.layout {
+            Layout::Contiguous { .. } => {
+                let nds = dst.create_dataset(path, name, ds.dtype, &ds.shape)?;
+                let rows = ds.shape.first().copied().unwrap_or(0);
+                if rows > 0 {
+                    let data = src.read_rows(ds, 0, rows)?;
+                    dst.write_rows(&nds, 0, &data)?;
+                }
+            }
+            Layout::Chunked {
+                chunk_rows, codec, ..
+            } => {
+                let nds = dst.create_dataset_chunked(
+                    path, name, ds.dtype, &ds.shape, chunk_rows, codec,
+                )?;
+                for chunk_no in 0..ds.n_chunks() {
+                    let Some(loc) = src.chunk_loc(ds, chunk_no)? else {
+                        continue;
+                    };
+                    let mut stored = vec![0u8; loc.stored as usize];
+                    src.file
+                        .read_exact_at(&mut stored, loc.offset)
+                        .context("h5lite: repack chunk read")?;
+                    dst.write_chunk_encoded(
+                        &nds,
+                        chunk_no,
+                        &stored,
+                        loc.raw,
+                        loc.checksum,
+                        loc.codec_applied,
+                    )?;
+                }
+            }
+        }
+    }
+    for (name, sub) in &g.groups {
+        let sub_path = format!("{path}/{name}");
+        copy_group_into(src, sub, dst, &sub_path)?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -1037,7 +1749,7 @@ mod tests {
         }
         let f = H5File::open(&p).unwrap();
         assert!(f.root.groups.is_empty());
-        assert_eq!(f.version(), FORMAT_V2);
+        assert_eq!(f.version(), FORMAT_V21);
         std::fs::remove_file(&p).ok();
     }
 
@@ -1534,6 +2246,402 @@ mod tests {
     fn bad_version_rejected() {
         let p = tmp("v9");
         assert!(H5File::create_versioned(&p, 1, 9).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    // ---------------------------------------------------------------------
+    // format v2.1: free-space manager, compaction, verification
+    // ---------------------------------------------------------------------
+
+    #[test]
+    fn free_list_coalesces_and_best_fits() {
+        let mut fl = FreeList::default();
+        fl.insert(100, 50);
+        fl.insert(150, 50); // touches the previous extent: one [100, 200)
+        assert_eq!(fl.extents.len(), 1);
+        assert_eq!(fl.total, 100);
+        fl.insert(300, 20);
+        // best fit: a 20-byte request is served from the 20-byte extent,
+        // not carved out of the 100-byte one
+        assert_eq!(fl.alloc(20, 1), Some(300));
+        assert_eq!(fl.total, 100);
+        // aligned fit inside the big extent, fragments preserved
+        let off = fl.alloc(10, 64).unwrap();
+        assert_eq!(off % 64, 0);
+        assert!(off >= 100 && off + 10 <= 200);
+        assert_eq!(fl.total, 90);
+        // nothing big enough: grow instead
+        assert_eq!(fl.alloc(1000, 1), None);
+        // zero-length requests never match
+        assert_eq!(fl.alloc(0, 1), None);
+
+        // take_range: carve an exact sub-range (in-place chunk growth)
+        let mut fl = FreeList::default();
+        fl.insert(1000, 100);
+        assert!(!fl.take_range(990, 20), "head outside the extent");
+        assert!(fl.take_range(1040, 30), "middle carve");
+        assert_eq!(fl.total, 70);
+        assert!(!fl.take_range(1040, 10), "already taken");
+        assert!(fl.take_range(1000, 40), "head carve");
+        assert!(fl.take_range(1070, 30), "tail carve");
+        assert_eq!(fl.total, 0);
+    }
+
+    #[test]
+    fn chunk_rewrite_recycles_freed_extents_immediately() {
+        // Immediate policy: rewriting every chunk with same-size content
+        // recycles the freed slots, so the file does not grow at all
+        let p = tmp("reuse_now");
+        let mut f = H5File::create(&p, 1).unwrap();
+        f.set_reuse_policy(ReusePolicy::Immediate);
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[32, 16], 8, Codec::ShuffleDeltaLz)
+            .unwrap();
+        let data = smooth_rows(32, 16);
+        f.write_all_f32(&ds, &data).unwrap();
+        let single = std::fs::metadata(&p).unwrap().len();
+        for _ in 0..8 {
+            f.write_all_f32(&ds, &data).unwrap();
+        }
+        let after = std::fs::metadata(&p).unwrap().len();
+        assert_eq!(after, single, "equal-size rewrites must recycle in place");
+        let stats = f.space_stats();
+        assert!(stats.reclaimed_bytes > 0);
+        assert!(stats.reused_bytes > 0);
+        // contents intact after all the recycling
+        assert_eq!(
+            codec::bytes_to_f32s(&f.read_rows(&ds, 0, 32).unwrap()),
+            data
+        );
+        f.commit().unwrap();
+        let rep = f.verify().unwrap();
+        assert!(rep.ok(), "{:?}", rep.errors);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn after_commit_policy_delays_reuse_by_one_epoch() {
+        let p = tmp("reuse_epoch");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::ShuffleDeltaLz)
+            .unwrap();
+        let data = smooth_rows(16, 16);
+        f.write_all_f32(&ds, &data).unwrap();
+        f.commit().unwrap();
+        // epoch 1: rewrite retires the old extents, but they stay pending —
+        // the committed footer still references them
+        f.write_all_f32(&ds, &data).unwrap();
+        let s = f.space_stats();
+        assert!(s.pending_bytes > 0, "{s:?}");
+        assert_eq!(s.reused_bytes, 0, "no reuse before the commit: {s:?}");
+        f.commit().unwrap();
+        assert!(f.space_stats().pending_bytes == 0);
+        assert!(f.space_stats().free_bytes > 0);
+        // epoch 2: the same rewrite now recycles epoch-1 space
+        f.write_all_f32(&ds, &data).unwrap();
+        assert!(f.space_stats().reused_bytes > 0);
+        assert_eq!(
+            codec::bytes_to_f32s(&f.read_rows(&ds, 0, 16).unwrap()),
+            data
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn free_list_survives_reopen() {
+        let p = tmp("freelist_rt");
+        let data = smooth_rows(32, 16);
+        let free_committed;
+        {
+            let mut f = H5File::create(&p, 1).unwrap();
+            let ds = f
+                .create_dataset_chunked(
+                    "/g",
+                    "d",
+                    Dtype::F32,
+                    &[32, 16],
+                    8,
+                    Codec::ShuffleDeltaLz,
+                )
+                .unwrap();
+            f.write_all_f32(&ds, &data).unwrap();
+            f.commit().unwrap();
+            f.write_all_f32(&ds, &data).unwrap(); // abandon every extent
+            f.commit().unwrap(); // pending → free, recorded in the footer
+            free_committed = f.space_stats().free_bytes;
+            assert!(free_committed > 0);
+        }
+        let mut f = H5File::open(&p).unwrap();
+        assert_eq!(f.version(), FORMAT_V21);
+        assert_eq!(
+            f.free_bytes(),
+            free_committed,
+            "free list lost or changed across reopen"
+        );
+        let ds = f.dataset("/g", "d").unwrap();
+        assert_eq!(
+            codec::bytes_to_f32s(&f.read_rows(&ds, 0, 32).unwrap()),
+            data
+        );
+        // a fresh writer allocates out of the persisted free space
+        f.write_all_f32(&ds, &data).unwrap();
+        assert!(f.space_stats().reused_bytes > 0);
+        f.commit().unwrap();
+        let rep = f.verify().unwrap();
+        assert!(rep.ok(), "{:?}", rep.errors);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v2_files_leak_on_rewrite_but_stay_compatible() {
+        // v2 carries no free-list record: rewrites append (the pre-v2.1
+        // behaviour) and a v2.1 build keeps reading and writing the file
+        let p = tmp("v2_compat");
+        let data = smooth_rows(8, 8);
+        {
+            let mut f = H5File::create_versioned(&p, 1, FORMAT_V2).unwrap();
+            let ds = f
+                .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 8], 8, Codec::ShuffleLz)
+                .unwrap();
+            f.write_all_f32(&ds, &data).unwrap();
+            f.commit().unwrap();
+            let before = std::fs::metadata(&p).unwrap().len();
+            f.write_all_f32(&ds, &data).unwrap();
+            assert_eq!(f.space_stats().reclaimed_bytes, 0, "v2 must not reclaim");
+            assert_eq!(f.free_bytes(), 0);
+            assert!(
+                std::fs::metadata(&p).unwrap().len() > before,
+                "v2 rewrite must append"
+            );
+            f.commit().unwrap();
+        }
+        let f = H5File::open(&p).unwrap();
+        assert_eq!(f.version(), FORMAT_V2);
+        let ds = f.dataset("/g", "d").unwrap();
+        assert_eq!(codec::bytes_to_f32s(&f.read_rows(&ds, 0, 8).unwrap()), data);
+        assert!(f.verify().unwrap().ok());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn post_reopen_alloc_never_truncates_the_footer() {
+        // regression: alloc used set_len(offset + nbytes), which shrank the
+        // file below the committed footer when the first post-reopen
+        // allocation was smaller than the footer — a concurrent reader then
+        // saw a truncated footer behind a valid superblock
+        let p = tmp("noshrink");
+        {
+            // v2: the free list is empty, so the tiny allocation below must
+            // take the append path (the one that used to truncate)
+            let mut f = H5File::create_versioned(&p, 1, FORMAT_V2).unwrap();
+            for i in 0..64 {
+                f.ensure_group(&format!("/g{i}"));
+            }
+            let ds = f.create_dataset("/g0", "d", Dtype::U8, &[8]).unwrap();
+            f.write_rows(&ds, 0, &[7u8; 8]).unwrap();
+            f.commit().unwrap();
+        }
+        let len_committed = std::fs::metadata(&p).unwrap().len();
+        let writer = {
+            let mut f = H5File::open(&p).unwrap();
+            f.create_dataset("/g1", "tiny", Dtype::U8, &[1]).unwrap();
+            f
+        };
+        assert!(
+            std::fs::metadata(&p).unwrap().len() >= len_committed,
+            "the file shrank below the committed footer"
+        );
+        // no commit happened: a concurrent reader must still parse cleanly
+        let reader = H5File::open(&p).unwrap();
+        assert_eq!(
+            reader
+                .read_rows(&reader.dataset("/g0", "d").unwrap(), 0, 8)
+                .unwrap(),
+            vec![7u8; 8]
+        );
+        drop(writer);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn torn_superblock_update_falls_back_to_previous_commit() {
+        // simulate a crash where epoch 2's footer hit disk but the
+        // superblock flip did not: restore epoch 1's superblock and reopen —
+        // commit appends footers (never overwrites the live one), so the
+        // epoch-1 chain must read back cleanly
+        let p = tmp("torn");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f.create_dataset("/g", "d", Dtype::U64, &[4]).unwrap();
+        f.write_rows(&ds, 0, &codec::u64s_to_bytes(&[1, 2, 3, 4]))
+            .unwrap();
+        f.commit().unwrap();
+        let mut sb = [0u8; SUPERBLOCK_LEN as usize];
+        {
+            let file = OpenOptions::new().read(true).open(&p).unwrap();
+            file.read_exact_at(&mut sb, 0).unwrap();
+        }
+        let ds2 = f.create_dataset("/g", "e", Dtype::U64, &[2]).unwrap();
+        f.write_rows(&ds2, 0, &codec::u64s_to_bytes(&[9, 9])).unwrap();
+        f.commit().unwrap();
+        drop(f);
+        // "crash": the epoch-2 superblock update is lost
+        {
+            let file = OpenOptions::new().write(true).open(&p).unwrap();
+            file.write_all_at(&sb, 0).unwrap();
+        }
+        let f = H5File::open(&p).unwrap();
+        let ds = f.dataset("/g", "d").unwrap();
+        assert_eq!(f.read_all_u64(&ds).unwrap(), vec![1, 2, 3, 4]);
+        assert!(
+            f.dataset("/g", "e").is_err(),
+            "the torn epoch must be invisible"
+        );
+        let rep = f.verify().unwrap();
+        assert!(rep.ok(), "{:?}", rep.errors);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn repack_compacts_and_preserves_contents() {
+        let p = tmp("repack");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let data = smooth_rows(37, 16);
+        let raw = codec::f32s_to_bytes(&data);
+        let dc = f
+            .create_dataset("/g", "plain", Dtype::F32, &[37, 16])
+            .unwrap();
+        let dk = f
+            .create_dataset_chunked("/g", "packed", Dtype::F32, &[37, 16], 8, Codec::ShuffleDeltaLz)
+            .unwrap();
+        f.ensure_group("/g")
+            .attrs
+            .insert("note".into(), Attr::Str("keep me".into()));
+        f.write_rows(&dc, 0, &raw).unwrap();
+        f.write_rows(&dk, 0, &raw).unwrap();
+        f.commit().unwrap();
+        // fragment: abandon every chunk extent a few times
+        for _ in 0..4 {
+            f.write_rows(&dk, 0, &raw).unwrap();
+            f.commit().unwrap();
+        }
+        let before = std::fs::metadata(&p).unwrap().len();
+        let reclaimed = f.repack().unwrap();
+        let after = std::fs::metadata(&p).unwrap().len();
+        assert!(reclaimed > 0);
+        assert!(after < before, "{after} !< {before}");
+        assert_eq!(before - after, reclaimed);
+        // contents and attributes preserved through the in-place swap
+        let dk = f.dataset("/g", "packed").unwrap();
+        let dc = f.dataset("/g", "plain").unwrap();
+        assert!(dk.is_chunked());
+        assert_eq!(f.read_rows(&dk, 0, 37).unwrap(), raw);
+        assert_eq!(f.read_rows(&dc, 0, 37).unwrap(), raw);
+        assert_eq!(
+            f.group("/g").unwrap().attrs["note"],
+            Attr::Str("keep me".into())
+        );
+        let rep = f.verify().unwrap();
+        assert!(rep.ok(), "{:?}", rep.errors);
+        assert_eq!(rep.leaked_bytes, 0, "{rep:?}");
+        // and the repacked file reopens clean
+        drop(f);
+        let f = H5File::open(&p).unwrap();
+        let dk = f.dataset("/g", "packed").unwrap();
+        assert_eq!(f.read_rows(&dk, 0, 37).unwrap(), raw);
+        assert!(f.verify().unwrap().ok());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn verify_reports_corrupt_chunk_and_overlap() {
+        let p = tmp("fsck");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 8], 8, Codec::ShuffleDeltaLz)
+            .unwrap();
+        f.write_all_f32(&ds, &smooth_rows(16, 8)).unwrap();
+        f.commit().unwrap();
+        assert!(f.verify().unwrap().ok());
+        let loc = f.chunk_loc(&ds, 0).unwrap().unwrap();
+        drop(f);
+        // flip one byte in the middle of chunk 0's stored extent
+        {
+            let file = OpenOptions::new().read(true).write(true).open(&p).unwrap();
+            let mut b = [0u8; 1];
+            file.read_exact_at(&mut b, loc.offset + loc.stored / 2).unwrap();
+            file.write_all_at(&[b[0] ^ 0xff], loc.offset + loc.stored / 2)
+                .unwrap();
+        }
+        let f = H5File::open(&p).unwrap();
+        let ds = f.dataset("/g", "d").unwrap();
+        let rep = f.verify().unwrap();
+        assert!(!rep.ok());
+        assert!(
+            rep.errors.iter().any(|e| e.contains("chunk 0")),
+            "{:?}",
+            rep.errors
+        );
+        // structural damage: point chunk 1 into chunk 0's extent
+        f.poke_chunk_offset(&ds, 1, loc.offset);
+        let rep = f.verify().unwrap();
+        assert!(
+            rep.errors.iter().any(|e| e.contains("overlap")),
+            "{:?}",
+            rep.errors
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn verify_accounts_every_byte() {
+        let p = tmp("fsck_bytes");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::ShuffleDeltaLz)
+            .unwrap();
+        let data = smooth_rows(16, 16);
+        f.write_all_f32(&ds, &data).unwrap();
+        f.commit().unwrap();
+        f.write_all_f32(&ds, &data).unwrap(); // retire the first extents
+        f.commit().unwrap();
+        let rep = f.verify().unwrap();
+        assert!(rep.ok(), "{:?}", rep.errors);
+        assert_eq!(rep.n_datasets, 1);
+        assert_eq!(rep.n_chunks, 2);
+        assert!(rep.free_bytes > 0);
+        // live + meta + free + leaked is exactly the file
+        assert_eq!(
+            rep.live_bytes + rep.meta_bytes + rep.free_bytes + rep.leaked_bytes,
+            rep.data_end
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn chunk_cache_lru_holds_chunks_from_one_dataset() {
+        // multi-chunk interleaved reads of one dataset must not thrash: the
+        // old cache held a single chunk per dataset, so alternating between
+        // two chunks re-inflated both on every access
+        let p = tmp("lru");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[32, 8], 8, Codec::ShuffleLz)
+            .unwrap();
+        f.write_all_f32(&ds, &smooth_rows(32, 8)).unwrap();
+        // touch chunks 0 and 1 alternately (a window query straddling a
+        // chunk boundary): both stay resident
+        for _ in 0..4 {
+            f.read_rows(&ds, 7, 2).unwrap(); // rows 7..9 → chunks 0 and 1
+        }
+        assert!(f.cached_chunks() >= 2, "straddle thrashes the cache");
+        // and the cache stays bounded when walking many chunks
+        let big = f
+            .create_dataset_chunked("/g", "big", Dtype::F32, &[256, 8], 4, Codec::Lz)
+            .unwrap();
+        f.write_all_f32(&big, &smooth_rows(256, 8)).unwrap();
+        f.read_rows(&big, 0, 256).unwrap(); // 64 chunks
+        assert!(f.cached_chunks() <= CHUNK_CACHE_SLOTS);
         std::fs::remove_file(&p).ok();
     }
 }

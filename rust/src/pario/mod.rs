@@ -66,6 +66,10 @@ pub struct IoReport {
     /// Physical write ops issued after merging (one per merged contiguous
     /// run, one per chunk extent).
     pub write_ops: u64,
+    /// Bytes of abandoned chunk extents this write retired to the file's
+    /// free-space manager (format v2.1): rewritten chunks hand their old
+    /// extents back for reuse instead of leaking them.
+    pub reclaimed_bytes: u64,
     /// CPU seconds the aggregators spent in the chunk codec (summed across
     /// threads; overlapped with streaming in the real run).
     pub compress_seconds: f64,
@@ -139,6 +143,7 @@ impl ParallelIo {
     ) -> Result<IoReport> {
         let t0 = Instant::now();
         let bytes: u64 = writes.iter().map(|w| w.data.len() as u64).sum();
+        let reclaimed0 = file.space_stats().reclaimed_bytes;
         let aggs = self.aggregators().max(1);
 
         let (contig, chunked): (Vec<&SlabWrite>, Vec<&SlabWrite>) =
@@ -247,14 +252,23 @@ impl ParallelIo {
         // price the compressed path only when compression actually shrank
         // the volume; RMW amplification (stored > raw on partial-chunk
         // writes) is not a compression win and the model has no term for it
-        let modelled = if stored_bytes < bytes {
+        let mut modelled = if stored_bytes < bytes {
             self.machine
                 .estimate_write_compressed(&workload, &self.tuning, stored_bytes)
         } else {
             self.machine.estimate_write(&workload, &self.tuning)
         };
+        // space the free-space manager got back from rewritten chunks: the
+        // estimate carries it so steady-state file size can be derived from
+        // the model (stored bytes in, reclaimed bytes back out)
+        let reclaimed_bytes = file
+            .space_stats()
+            .reclaimed_bytes
+            .saturating_sub(reclaimed0);
+        modelled.reclaimed_bytes = reclaimed_bytes;
         self.metrics.add("pario.bytes_raw", bytes);
         self.metrics.add("pario.bytes_stored", stored_bytes);
+        self.metrics.add("pario.bytes_reclaimed", reclaimed_bytes);
         self.metrics.add("pario.write_ops", write_ops);
         self.metrics.add("pario.chunks", jobs.len() as u64);
         self.metrics
@@ -265,6 +279,7 @@ impl ParallelIo {
             bytes,
             stored_bytes,
             write_ops,
+            reclaimed_bytes,
             compress_seconds,
             modelled,
         })
@@ -772,6 +787,37 @@ mod tests {
         assert_eq!(io.metrics.counter("pario.bytes_stored"), rep.stored_bytes);
         assert_eq!(io.metrics.counter("pario.chunks"), 2);
         assert!(io.metrics.seconds("pario.compress") > 0.0);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn chunk_rewrites_reclaim_space_through_the_free_list() {
+        // a second collective write over the same chunked rows retires the
+        // first write's extents into the free-space manager, and the report,
+        // the metrics and the model estimate all account the bytes
+        let p = tmp("reclaim");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::ShuffleDeltaLz)
+            .unwrap();
+        let bufs = smooth_bufs(4, 4, 16);
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 4);
+        let first = io
+            .collective_write(&f, &make_writes(&ds, &bufs, 4), 1, 16)
+            .unwrap();
+        assert_eq!(first.reclaimed_bytes, 0, "first write abandons nothing");
+        let second = io
+            .collective_write(&f, &make_writes(&ds, &bufs, 4), 1, 16)
+            .unwrap();
+        assert_eq!(
+            second.reclaimed_bytes, first.stored_bytes,
+            "every extent of the first write must be retired"
+        );
+        assert_eq!(second.modelled.reclaimed_bytes, second.reclaimed_bytes);
+        assert_eq!(
+            io.metrics.counter("pario.bytes_reclaimed"),
+            second.reclaimed_bytes
+        );
         std::fs::remove_file(&p).ok();
     }
 }

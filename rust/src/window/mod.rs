@@ -26,8 +26,9 @@
 //! UID→row map, prune by `bounding box`, stop when descending would burst
 //! the budget, and read *only the selected rows* of `current_cell_data`.
 //! Chunk-compressed snapshots (h5lite format v2) decompress transparently
-//! inside [`H5File::read_rows`]; the file's per-dataset chunk cache keeps
-//! the row-at-a-time traversal from re-inflating the same chunk per row.
+//! inside [`H5File::read_rows`]; the file's LRU chunk cache keeps the
+//! row-at-a-time traversal from re-inflating the same chunk per row, even
+//! when a multi-grid query straddles chunk boundaries.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
