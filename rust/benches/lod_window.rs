@@ -1,0 +1,113 @@
+//! Bench: **byte-budgeted window queries over the LOD pyramid** — bytes
+//! read and latency per (ROI size × budget), against the full-resolution
+//! baseline the pre-pyramid reader was stuck with.
+//!
+//! The paper's second headline claim is that the output file's structure
+//! supports "very fast interactive visualisation"; the pyramid is what
+//! makes that hold under a *byte* budget: a whole-domain overview reads
+//! one grid row instead of every leaf, and the level selection trades
+//! resolution for bytes automatically as the ROI shrinks.
+//!
+//! Run: `cargo bench --bench lod_window`
+
+use mpfluid::cluster::{IoTuning, Machine};
+use mpfluid::h5lite::H5File;
+use mpfluid::iokernel::{self, ROW_BYTES};
+use mpfluid::pario::ParallelIo;
+use mpfluid::tree::BBox;
+use mpfluid::util::{bench::measure, fmt_bytes};
+use mpfluid::window;
+use mpfluid::config::Scenario;
+
+/// Cell-data bytes of one grid row.
+const RB: u64 = ROW_BYTES;
+
+fn main() {
+    // depth-3 cavity: 585 grids, 512 leaves — 40 MiB of current-generation
+    // cell data, enough for the budget trade-off to show
+    let mut sc = Scenario::cavity(3);
+    sc.ranks = 8;
+    let sim = sc.build();
+    let io = ParallelIo::new(Machine::local(), IoTuning::default(), 8);
+    let path = std::env::temp_dir().join(format!("lod_bench_{}.h5", std::process::id()));
+    let mut f = H5File::create(&path, 4096).unwrap();
+    iokernel::write_common(&mut f, &sim.params, &sim.nbs.tree, 8).unwrap();
+    let rep = iokernel::write_snapshot(&mut f, &io, &sim.nbs.tree, &sim.part, &sim.grids, 0.0)
+        .unwrap();
+    let lod = rep.lod.expect("pyramid missing");
+    println!(
+        "snapshot: {} raw cell data, pyramid {} levels, {} stored \
+         ({:.1} % of file), fold {:.1} ms on the aggregator threads",
+        fmt_bytes(rep.io.bytes),
+        lod.levels,
+        fmt_bytes(lod.stored_bytes),
+        lod.stored_bytes as f64 * 100.0 / std::fs::metadata(&path).unwrap().len() as f64,
+        rep.io.lod_seconds * 1e3,
+    );
+
+    let rois = [
+        ("full domain", BBox::unit()),
+        (
+            "octant",
+            BBox {
+                min: [0.0; 3],
+                max: [0.5; 3],
+            },
+        ),
+        (
+            "1/64 corner",
+            BBox {
+                min: [0.0; 3],
+                max: [0.25; 3],
+            },
+        ),
+    ];
+    let budgets = [
+        ("unlimited", u64::MAX),
+        ("64 grids", 64 * RB),
+        ("8 grids", 8 * RB),
+        ("1 grid", RB),
+    ];
+    println!(
+        "\n{:>12} {:>10} {:>6} {:>6} {:>12} {:>9} {:>10}",
+        "ROI", "budget", "level", "grids", "bytes read", "vs full", "latency"
+    );
+    for (roi_label, roi) in &rois {
+        // the pre-pyramid baseline: every intersecting leaf
+        let full = window::offline_window_budgeted(&f, 0.0, roi, u64::MAX).unwrap();
+        let full_bytes = full.bytes_read.max(1);
+        for (b_label, budget) in &budgets {
+            let mut last = None;
+            let sample = measure(5, || {
+                last = Some(window::offline_window_budgeted(&f, 0.0, roi, *budget).unwrap());
+            });
+            let w = last.unwrap();
+            println!(
+                "{:>12} {:>10} {:>6} {:>6} {:>12} {:>8.1}% {:>10}",
+                roi_label,
+                b_label,
+                w.level,
+                w.grids.len(),
+                fmt_bytes(w.bytes_read),
+                w.bytes_read as f64 * 100.0 / full_bytes as f64,
+                sample.fmt_ms(),
+            );
+        }
+    }
+
+    // progressive refinement: coarse-to-fine streaming of the full domain
+    println!("\n== progressive refinement, full domain, 128-grid total budget ==");
+    let steps = window::offline_window_progressive(&f, 0.0, &BBox::unit(), 128 * RB).unwrap();
+    let mut cum = 0u64;
+    for s in &steps {
+        cum += s.bytes_read;
+        println!(
+            "  level {:>2}: {:>4} grids, {:>10} read ({} cumulative)",
+            s.level,
+            s.grids.len(),
+            fmt_bytes(s.bytes_read),
+            fmt_bytes(cum),
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}

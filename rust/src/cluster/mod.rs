@@ -79,6 +79,11 @@ pub struct IoEstimate {
     /// Per-chunk codec time on the aggregator cores (overlapped with the
     /// fill and the stream; 0 when compression is off).
     pub t_compress: f64,
+    /// LOD-pyramid fold time on the aggregator cores (overlapped like the
+    /// codec; 0 when the write carries no fold sink). Filled in by
+    /// [`crate::pario::ParallelIo::collective_write_lod`] from
+    /// [`Machine::estimate_fold`], never by the base estimators.
+    pub t_fold: f64,
     /// Per-rank messaging overhead (grows with rank count).
     pub t_messages: f64,
     /// Dataset wind-up/wind-down.
@@ -102,12 +107,13 @@ impl fmt::Display for IoEstimate {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "{:.2} GB/s ({:.1}s: stream {:.1} agg {:.1} comp {:.1} msg {:.1} wind {:.1} lock {:.1} align {:.1})",
+            "{:.2} GB/s ({:.1}s: stream {:.1} agg {:.1} comp {:.1} fold {:.1} msg {:.1} wind {:.1} lock {:.1} align {:.1})",
             self.bandwidth / 1e9,
             self.seconds,
             self.t_stream,
             self.t_aggregate,
             self.t_compress,
+            self.t_fold,
             self.t_messages,
             self.t_wind,
             self.t_lock,
@@ -150,6 +156,10 @@ pub struct Machine {
     /// per-chunk compression is enabled. `f64::INFINITY` = not modelled
     /// (the local machine measures the real codec instead).
     pub compress_bw: f64,
+    /// Per-aggregator LOD-pyramid fold throughput (bytes/s of source cell
+    /// data): a memory-bound 8:1 averaging pass. `f64::INFINITY` = not
+    /// modelled (the local machine measures the real fold instead).
+    pub fold_bw: f64,
 }
 
 impl Machine {
@@ -171,6 +181,7 @@ impl Machine {
             misalign_penalty: 0.07,
             indep_contention: 0.012,
             compress_bw: 0.9e9, // one A2 core running the byte-LZ pipeline
+            fold_bw: 2.0e9,     // memory-bound 8:1 averaging on an A2 core
         }
     }
 
@@ -192,6 +203,7 @@ impl Machine {
             misalign_penalty: 0.05,
             indep_contention: 0.004,
             compress_bw: 2.5e9, // Sandy Bridge core
+            fold_bw: 6.0e9,     // Sandy Bridge core, streaming averages
         }
     }
 
@@ -214,6 +226,7 @@ impl Machine {
             misalign_penalty: 0.0,
             indep_contention: 0.0,
             compress_bw: f64::INFINITY, // real codec timings, not modelled
+            fold_bw: f64::INFINITY,     // real fold timings, not modelled
         }
     }
 
@@ -294,6 +307,15 @@ impl Machine {
         stored_bytes: u64,
     ) -> IoEstimate {
         self.price_write(w, tuning, Some(stored_bytes))
+    }
+
+    /// Price the LOD-pyramid fold of `raw_bytes` of source cell data,
+    /// spread over the collective write's aggregator threads. The fold
+    /// pipelines behind the fill/codec/stream stages, so callers charge
+    /// only its excess over the slowest stage (see
+    /// [`crate::pario::ParallelIo::collective_write_lod`]).
+    pub fn estimate_fold(&self, raw_bytes: u64, ranks: u64) -> f64 {
+        raw_bytes as f64 / (self.aggregators(ranks) as f64 * self.fold_bw)
     }
 
     fn price_write(
@@ -570,6 +592,18 @@ mod tests {
         assert!((comp.seconds - expect).abs() < 1e-9, "{comp}");
         // and compression still wins overall here (stream dominates)
         assert!(comp.seconds < raw.seconds, "{comp} vs {raw}");
+    }
+
+    #[test]
+    fn fold_estimate_scales_with_the_aggregator_pool() {
+        let m = Machine::juqueen();
+        let bytes = 337u64 * (1 << 30);
+        let half_rack = m.estimate_fold(bytes, 8192);
+        let full_rack = m.estimate_fold(bytes, 16384);
+        assert!(full_rack < half_rack, "{full_rack} !< {half_rack}");
+        assert!(full_rack > 0.0);
+        // the local machine measures the real fold instead of modelling it
+        assert_eq!(Machine::local().estimate_fold(1 << 30, 8), 0.0);
     }
 
     #[test]

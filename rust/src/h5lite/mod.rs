@@ -105,7 +105,7 @@
 
 pub mod codec;
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom};
 use std::os::unix::fs::FileExt;
@@ -241,14 +241,36 @@ pub enum ReusePolicy {
 
 /// The free-space manager's extent set: offset → length, non-overlapping,
 /// coalesced (no two entries touch). Persisted in the v2.1 footer.
+///
+/// Two views of the same extents are kept in lockstep: the offset-ordered
+/// map (coalescing, persistence, range carving) and a size-ordered index
+/// making [`FreeList::alloc`]'s best-fit O(log n) — steering runs with
+/// thousands of chunks under [`ReusePolicy::Immediate`] fragment heavily,
+/// and the old linear scan ran under the free mutex on every chunk write.
 #[derive(Clone, Debug, Default)]
 struct FreeList {
     extents: BTreeMap<u64, u64>,
+    /// `(len, off)` per extent — iteration order *is* best-fit order
+    /// (smallest fitting length, lowest offset among ties), matching the
+    /// linear scan this index replaced (property-tested below).
+    by_size: BTreeSet<(u64, u64)>,
     /// Cached sum of all extent lengths.
     total: u64,
 }
 
 impl FreeList {
+    /// Add one extent to both views (no coalescing, no `total` update).
+    fn attach(&mut self, off: u64, len: u64) {
+        self.extents.insert(off, len);
+        self.by_size.insert((len, off));
+    }
+
+    /// Remove one extent from both views (no `total` update).
+    fn detach(&mut self, off: u64, len: u64) {
+        self.extents.remove(&off);
+        self.by_size.remove(&(len, off));
+    }
+
     /// Add `[offset, offset + len)`, coalescing with touching neighbours.
     fn insert(&mut self, offset: u64, len: u64) {
         if len == 0 {
@@ -264,7 +286,7 @@ impl FreeList {
             .map(|(&po, &pl)| (po, pl));
         if let Some((po, pl)) = prev {
             if po + pl == off {
-                self.extents.remove(&po);
+                self.detach(po, pl);
                 off = po;
                 len += pl;
             }
@@ -276,30 +298,34 @@ impl FreeList {
             .map(|(&no, &nl)| (no, nl));
         if let Some((no, nl)) = next {
             if off + len == no {
-                self.extents.remove(&no);
+                self.detach(no, nl);
                 len += nl;
             }
         }
-        self.extents.insert(off, len);
+        self.attach(off, len);
     }
 
     /// Best-fit allocation honouring `align`: carve `nbytes` out of the
     /// smallest extent that can hold them at an aligned start. Head and
-    /// tail fragments go back on the list.
+    /// tail fragments go back on the list. O(log n) through the size
+    /// index; the walk past the lower bound only visits extents big enough
+    /// to fit, and almost always takes the first (alignment can skip a
+    /// few).
     fn alloc(&mut self, nbytes: u64, align: u64) -> Option<u64> {
         if nbytes == 0 {
             return None;
         }
         let align = align.max(1);
-        let mut best: Option<(u64, u64)> = None; // (len, off)
-        for (&off, &len) in &self.extents {
+        let mut found: Option<(u64, u64)> = None; // (len, off)
+        for &(len, off) in self.by_size.range((nbytes, 0)..) {
             let aligned = off.next_multiple_of(align);
-            if aligned - off + nbytes <= len && best.map_or(true, |(bl, _)| len < bl) {
-                best = Some((len, off));
+            if aligned - off + nbytes <= len {
+                found = Some((len, off));
+                break;
             }
         }
-        let (len, off) = best?;
-        self.extents.remove(&off);
+        let (len, off) = found?;
+        self.detach(off, len);
         self.total -= len;
         let aligned = off.next_multiple_of(align);
         self.insert(off, aligned - off);
@@ -325,7 +351,7 @@ impl FreeList {
         if eo + el < offset + len {
             return false;
         }
-        self.extents.remove(&eo);
+        self.detach(eo, el);
         self.total -= el;
         self.insert(eo, offset - eo);
         self.insert(offset + len, eo + el - (offset + len));
@@ -1684,6 +1710,12 @@ impl H5File {
     }
 }
 
+/// Row-block size for streaming contiguous datasets through
+/// [`H5File::repack`]: the copy loop holds at most this many payload bytes
+/// (rounded up to one row), so snapshots larger than RAM repack fine —
+/// buffering each dataset whole capped compaction at the available memory.
+const REPACK_BLOCK_BYTES: u64 = 1 << 20;
+
 /// Recursively copy `g` (a group of `src`) into `dst` under `path` —
 /// the repack work loop.
 fn copy_group_into(src: &H5File, g: &Group, dst: &mut H5File, path: &str) -> Result<()> {
@@ -1693,9 +1725,13 @@ fn copy_group_into(src: &H5File, g: &Group, dst: &mut H5File, path: &str) -> Res
             Layout::Contiguous { .. } => {
                 let nds = dst.create_dataset(path, name, ds.dtype, &ds.shape)?;
                 let rows = ds.shape.first().copied().unwrap_or(0);
-                if rows > 0 {
-                    let data = src.read_rows(ds, 0, rows)?;
-                    dst.write_rows(&nds, 0, &data)?;
+                let block_rows = (REPACK_BLOCK_BYTES / ds.row_bytes().max(1)).max(1);
+                let mut row = 0u64;
+                while row < rows {
+                    let take = block_rows.min(rows - row);
+                    let data = src.read_rows(ds, row, take)?;
+                    dst.write_rows(&nds, row, &data)?;
+                    row += take;
                 }
             }
             Layout::Chunked {
@@ -2287,6 +2323,93 @@ mod tests {
         assert_eq!(fl.total, 0);
     }
 
+    /// The linear best-fit scan the size index replaced — kept as the
+    /// reference implementation for the equivalence property below.
+    fn scan_alloc(fl: &mut FreeList, nbytes: u64, align: u64) -> Option<u64> {
+        if nbytes == 0 {
+            return None;
+        }
+        let align = align.max(1);
+        let mut best: Option<(u64, u64)> = None; // (len, off)
+        for (&off, &len) in &fl.extents {
+            let aligned = off.next_multiple_of(align);
+            if aligned - off + nbytes <= len && best.map_or(true, |(bl, _)| len < bl) {
+                best = Some((len, off));
+            }
+        }
+        let (len, off) = best?;
+        fl.detach(off, len);
+        fl.total -= len;
+        let aligned = off.next_multiple_of(align);
+        fl.insert(off, aligned - off);
+        fl.insert(aligned + nbytes, off + len - (aligned + nbytes));
+        Some(aligned)
+    }
+
+    /// Both views must describe the same extent set at all times.
+    fn assert_views_consistent(fl: &FreeList) {
+        assert_eq!(fl.extents.len(), fl.by_size.len());
+        let mut sum = 0u64;
+        for (&off, &len) in &fl.extents {
+            assert!(fl.by_size.contains(&(len, off)), "missing ({len}, {off})");
+            sum += len;
+        }
+        assert_eq!(sum, fl.total);
+    }
+
+    #[test]
+    fn prop_indexed_alloc_equivalent_to_best_fit_scan() {
+        use crate::util::prop::check;
+        check("freelist index ≡ scan", 0xF1EE, |rng| {
+            let mut idx = FreeList::default();
+            let mut refr = FreeList::default();
+            // seed a few disjoint free regions
+            for r in 0..(2 + rng.below(4)) {
+                let off = r * 1_000_000 + rng.below(1000);
+                let len = 1 + rng.below(200_000);
+                idx.insert(off, len);
+                refr.insert(off, len);
+            }
+            // interleave allocs (indexed vs reference scan), frees of
+            // previously allocated blocks, and arbitrary take_ranges
+            let mut live: Vec<(u64, u64)> = Vec::new();
+            for _ in 0..40 {
+                match rng.below(4) {
+                    0 | 1 => {
+                        let n = 1 + rng.below(30_000);
+                        let align = [1u64, 64, 4096][rng.below(3) as usize];
+                        let a = idx.alloc(n, align);
+                        let b = scan_alloc(&mut refr, n, align);
+                        assert_eq!(a, b, "alloc({n}, {align}) diverged");
+                        if let Some(off) = a {
+                            live.push((off, n));
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let (off, len) =
+                                live.swap_remove(rng.below(live.len() as u64) as usize);
+                            idx.insert(off, len);
+                            refr.insert(off, len);
+                        }
+                    }
+                    _ => {
+                        let off = rng.below(3_000_000);
+                        let len = rng.below(500);
+                        assert_eq!(
+                            idx.take_range(off, len),
+                            refr.take_range(off, len),
+                            "take_range({off}, {len}) diverged"
+                        );
+                    }
+                }
+                assert_eq!(idx.extents, refr.extents);
+                assert_eq!(idx.total, refr.total);
+                assert_views_consistent(&idx);
+            }
+        });
+    }
+
     #[test]
     fn chunk_rewrite_recycles_freed_extents_immediately() {
         // Immediate policy: rewriting every chunk with same-size content
@@ -2550,6 +2673,45 @@ mod tests {
         let dk = f.dataset("/g", "packed").unwrap();
         assert_eq!(f.read_rows(&dk, 0, 37).unwrap(), raw);
         assert!(f.verify().unwrap().ok());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn repack_streams_contiguous_datasets_larger_than_the_block() {
+        // regression for the buffer-the-whole-dataset repack: a contiguous
+        // dataset bigger than REPACK_BLOCK_BYTES must stream through in
+        // row blocks and land bit-identical
+        let p = tmp("repack_stream");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let rows = 6144u64;
+        let dc = f
+            .create_dataset("/g", "big", Dtype::U64, &[rows, 64])
+            .unwrap();
+        assert!(
+            dc.n_bytes() > 2 * REPACK_BLOCK_BYTES,
+            "test dataset must exceed the streaming block"
+        );
+        let data: Vec<u64> = (0..rows * 64).map(|x| x.wrapping_mul(0x9E37)).collect();
+        f.write_rows(&dc, 0, &codec::u64s_to_bytes(&data)).unwrap();
+        // some fragmentation so repack actually moves bytes
+        let dk = f
+            .create_dataset_chunked("/g", "packed", Dtype::F32, &[16, 16], 8, Codec::ShuffleDeltaLz)
+            .unwrap();
+        let small = smooth_rows(16, 16);
+        f.write_all_f32(&dk, &small).unwrap();
+        f.commit().unwrap();
+        f.write_all_f32(&dk, &small).unwrap();
+        f.commit().unwrap();
+        f.repack().unwrap();
+        let back = f.read_all_u64(&f.dataset("/g", "big").unwrap()).unwrap();
+        assert_eq!(back, data);
+        assert_eq!(
+            codec::bytes_to_f32s(&f.read_rows(&f.dataset("/g", "packed").unwrap(), 0, 16).unwrap()),
+            small
+        );
+        let rep = f.verify().unwrap();
+        assert!(rep.ok(), "{:?}", rep.errors);
+        assert_eq!(rep.leaked_bytes, 0, "{rep:?}");
         std::fs::remove_file(&p).ok();
     }
 

@@ -18,6 +18,9 @@
 //!         current_cell_data    f32[n_grids, 5·16³]
 //!         previous_cell_data   f32[n_grids, 5·16³]
 //!         temp_cell_data       f32[n_grids, 5·16³]
+//!         /lod                 multi-resolution pyramid (crate::lod):
+//!             level_<ℓ>_cells  f32[n_ℓ, 5·16³]   2^ℓ-downsampled grids
+//!             level_<ℓ>_locs   u64[n_ℓ]          location code per row
 //! ```
 //!
 //! Rows are ordered along the Lebesgue curve, rank-major: each rank's grids
@@ -47,7 +50,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::exchange::Gen;
 use crate::h5lite::codec::Codec;
 use crate::h5lite::{codec, Attr, Dataset, Dtype, H5File, FORMAT_V2};
-use crate::pario::{IoReport, ParallelIo, SlabWrite};
+use crate::lod;
+use crate::pario::{IoReport, LodSink, ParallelIo, SlabWrite};
 use crate::physics::Params;
 use crate::tree::dgrid::DGrid;
 use crate::tree::sfc::Partition;
@@ -57,6 +61,10 @@ use crate::{DGRID_CELLS, NVAR};
 
 /// Cell-data elements per dataset row (all variables' interiors).
 pub const ROW_ELEMS: usize = NVAR * DGRID_CELLS;
+
+/// Bytes of one cell-data row (f32 elements) — the currency of the
+/// byte-budgeted window queries.
+pub const ROW_BYTES: u64 = (ROW_ELEMS * 4) as u64;
 
 /// Rows per chunk of the compressed `*_cell_data` datasets. One row is
 /// `ROW_ELEMS · 4` = 80 KiB, so a full chunk is 640 KiB of raw cell data —
@@ -139,6 +147,22 @@ pub fn read_common(file: &H5File) -> Result<(Params, u64)> {
     ))
 }
 
+/// Read the domain bounding box from `/common` — shared by the snapshot
+/// restore and the window's LOD level selection (one parser for the
+/// on-disk attribute encoding).
+pub fn read_domain(file: &H5File) -> Result<BBox> {
+    let g = file.group("/common")?;
+    match (g.attrs.get("domain_min"), g.attrs.get("domain_max")) {
+        (Some(Attr::F64Vec(a)), Some(Attr::F64Vec(b))) if a.len() == 3 && b.len() == 3 => {
+            Ok(BBox {
+                min: [a[0], a[1], a[2]],
+                max: [b[0], b[1], b[2]],
+            })
+        }
+        _ => bail!("iokernel: missing /common domain attributes"),
+    }
+}
+
 /// Selectable snapshot content — the paper's stated future-work knob
 /// (§3.1: "this is subject to be revised in future iterations of the
 /// kernel to allow users turn off unnecessary functions and, thus, reduce
@@ -151,35 +175,44 @@ pub fn read_common(file: &H5File) -> Result<(Params, u64)> {
 /// * `cell_type` — only needed when the scenario has obstacle geometry.
 /// * `compress` — chunked shuffle/delta/LZ storage for the cell data
 ///   (transparent to readers; ignored on format-v1 files).
+/// * `lod` — the multi-resolution pyramid ([`crate::lod`]) derived from
+///   `current_cell_data` during the collective write, enabling
+///   byte-budgeted window queries; ≤ a few percent of the file, folded on
+///   the aggregator threads. Off ⇒ the snapshot looks exactly like a
+///   pre-LOD file.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SnapshotOptions {
     pub previous: bool,
     pub temp: bool,
     pub cell_type: bool,
     pub compress: bool,
+    pub lod: bool,
 }
 
 impl Default for SnapshotOptions {
     /// Full checkpoint (the paper's current single-file-supports-all mode),
-    /// cell data chunk-compressed.
+    /// cell data chunk-compressed, LOD pyramid alongside.
     fn default() -> SnapshotOptions {
         SnapshotOptions {
             previous: true,
             temp: true,
             cell_type: true,
             compress: true,
+            lod: true,
         }
     }
 }
 
 impl SnapshotOptions {
-    /// Visualisation-only output: topology + current data.
+    /// Visualisation-only output: topology + current data (+ pyramid —
+    /// interactive exploration is exactly what this mode serves).
     pub fn output_only() -> SnapshotOptions {
         SnapshotOptions {
             previous: false,
             temp: false,
             cell_type: false,
             compress: true,
+            lod: true,
         }
     }
 
@@ -206,6 +239,10 @@ pub struct SnapshotReport {
     /// Seconds spent packing rank buffers (the paper's extra memory/copy
     /// trade-off, §3.2).
     pub pack_seconds: f64,
+    /// LOD-pyramid storage report (`None` when `SnapshotOptions::lod` is
+    /// off or the tree has no refinement). The fold time itself rides the
+    /// collective write ([`IoReport::lod_seconds`]).
+    pub lod: Option<lod::LodWriteReport>,
 }
 
 /// Write one complete simulation snapshot at elapsed time `t`.
@@ -294,7 +331,17 @@ pub fn write_snapshot_with(
             writes.push(slab(p.rank, ds, row0, &p.tmp));
         }
     }
-    let report = io.collective_write(file, &writes, opts.n_datasets(), n)?;
+    let (report, lod_report) = collective_write_with_pyramid(
+        file,
+        io,
+        tree,
+        part,
+        &writes,
+        opts.n_datasets(),
+        &ds_cur,
+        &group,
+        opts,
+    )?;
     file.ensure_group(&group)
         .attrs
         .insert("elapsed".into(), Attr::F64(t));
@@ -303,7 +350,53 @@ pub fn write_snapshot_with(
         io: report,
         n_grids: n,
         pack_seconds,
+        lod: lod_report,
     })
+}
+
+/// Shared tail of [`write_snapshot_with`] and [`rewrite_snapshot_cells`]:
+/// issue the collective write with the pyramid fold riding the fill phase
+/// ([`LodSink`]), then fold the interior levels and store them. Refuses to
+/// leave a **stale** pyramid behind: rewriting the cell data of a
+/// pyramid-bearing snapshot with `opts.lod` off would silently keep
+/// serving the pre-correction folds to budgeted readers.
+#[allow(clippy::too_many_arguments)]
+fn collective_write_with_pyramid(
+    file: &mut H5File,
+    io: &ParallelIo,
+    tree: &SpaceTree,
+    part: &Partition,
+    writes: &[SlabWrite],
+    n_datasets: u64,
+    ds_cur: &Dataset,
+    group: &str,
+    opts: &SnapshotOptions,
+) -> Result<(IoReport, Option<lod::LodWriteReport>)> {
+    let mut builder = (opts.lod && tree.max_depth() > 0)
+        .then(|| lod::PyramidBuilder::new(tree, part));
+    if builder.is_none()
+        && file
+            .group(&format!("{group}/{}", lod::LOD_GROUP))
+            .is_ok()
+    {
+        bail!(
+            "iokernel: '{group}' carries a LOD pyramid but the write has \
+             lod off — the pyramid would go stale; pass lod: true to refold"
+        );
+    }
+    let report = {
+        let sink = builder.as_ref().map(|b| LodSink { ds: ds_cur, builder: b });
+        io.collective_write_lod(file, writes, n_datasets, tree.len() as u64, sink.as_ref())?
+    };
+    let compress = opts.compress && file.version() >= FORMAT_V2;
+    let lod_report = match builder.as_mut() {
+        Some(b) => {
+            b.finish()?;
+            Some(b.write(file, group, compress)?)
+        }
+        None => None,
+    };
+    Ok((report, lod_report))
 }
 
 /// Steering-driven **in-place rewrite** of an existing snapshot's cell
@@ -364,12 +457,20 @@ pub fn rewrite_snapshot_cells(
         }
     }
     let n_datasets = 1 + opts.previous as u64 + opts.temp as u64;
-    let report = io.collective_write(file, &writes, n_datasets, n)?;
+    // the pyramid is derived data: a steering correction of the cell
+    // fields must refold it, or budgeted readers would keep seeing the
+    // pre-correction coarse levels (rewriting the level rows recycles the
+    // old extents through the free-space manager like any chunk rewrite);
+    // the helper refuses a lod-off rewrite of a pyramid-bearing snapshot
+    let (report, lod_report) = collective_write_with_pyramid(
+        file, io, tree, part, &writes, n_datasets, &ds_cur, &group, opts,
+    )?;
     file.commit()?;
     Ok(SnapshotReport {
         io: report,
         n_grids: n,
         pack_seconds,
+        lod: lod_report,
     })
 }
 
@@ -551,15 +652,7 @@ pub fn read_snapshot(file: &H5File, t: f64) -> Result<RestoredSnapshot> {
     }
 
     // --- rebuild the topology from location codes ------------------------
-    let g = file.group("/common")?;
-    let (dmin, dmax) = match (g.attrs.get("domain_min"), g.attrs.get("domain_max")) {
-        (Some(Attr::F64Vec(a)), Some(Attr::F64Vec(b))) => (a.clone(), b.clone()),
-        _ => bail!("iokernel: missing domain attrs"),
-    };
-    let domain = BBox {
-        min: [dmin[0], dmin[1], dmin[2]],
-        max: [dmax[0], dmax[1], dmax[2]],
-    };
+    let domain = read_domain(file)?;
     let mut locs: Vec<LocCode> = uids.iter().map(|u| u.loc()).collect();
     locs.sort_by_key(|l| l.depth());
     let mut tree = SpaceTree::root_only(domain);
@@ -894,6 +987,7 @@ mod tests {
                 temp: false,
                 cell_type: true,
                 compress: true,
+                lod: true,
             }
             .n_datasets(),
             6
@@ -1054,6 +1148,95 @@ mod tests {
         let snap = read_snapshot(&f, 0.0).unwrap();
         snap.grids[j].cur.extract_interior(var::P, &mut out);
         assert_eq!(out[0], 3.0 + (steps - 1) as f32);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn snapshot_stores_pyramid_and_rewrite_refolds_it() {
+        let p = tmp("lod_snap");
+        let (tree, part, mut grids) = setup(1, 2);
+        // uniform leaves → a uniform pyramid root, easy to assert exactly
+        for g in grids.iter_mut() {
+            for v in 0..NVAR {
+                g.cur.set_interior(v, &[2.0; DGRID_CELLS]);
+            }
+        }
+        let mut f = H5File::create(&p, 1).unwrap();
+        write_common(&mut f, &params(), &tree, 2).unwrap();
+        let rep = write_snapshot(&mut f, &io(), &tree, &part, &grids, 0.0).unwrap();
+        let lod_rep = rep.lod.expect("default options must store the pyramid");
+        assert_eq!(lod_rep.levels, 1);
+        assert!(lod_rep.stored_bytes > 0);
+        let idx = crate::lod::LodIndex::open(&f, &ts_group(0.0))
+            .unwrap()
+            .expect("lod group missing");
+        let l1 = idx.level(1).unwrap();
+        assert!(l1.read_row(&f, 0).unwrap().iter().all(|&x| x == 2.0));
+        // a steering correction must refold the pyramid, or budgeted
+        // readers would keep seeing the pre-correction coarse levels
+        for g in grids.iter_mut() {
+            for v in 0..NVAR {
+                g.cur.set_interior(v, &[6.0; DGRID_CELLS]);
+            }
+        }
+        let rw = rewrite_snapshot_cells(
+            &mut f,
+            &io(),
+            &tree,
+            &part,
+            &grids,
+            0.0,
+            &SnapshotOptions::default(),
+        )
+        .unwrap();
+        assert!(rw.lod.is_some());
+        assert!(l1.read_row(&f, 0).unwrap().iter().all(|&x| x == 6.0));
+        // and the pyramid-bearing file stays structurally clean
+        let vr = f.verify().unwrap();
+        assert!(vr.ok(), "{:?}", vr.errors);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rewrite_with_lod_off_refuses_to_stale_the_pyramid() {
+        let p = tmp("lod_stale");
+        let (tree, part, grids) = setup(1, 2);
+        let mut f = H5File::create(&p, 1).unwrap();
+        write_common(&mut f, &params(), &tree, 2).unwrap();
+        let lod_off = SnapshotOptions {
+            lod: false,
+            ..SnapshotOptions::default()
+        };
+        // pyramid-bearing snapshot: a lod-off rewrite must fail loudly
+        // instead of silently serving pre-correction folds to readers
+        write_snapshot(&mut f, &io(), &tree, &part, &grids, 0.0).unwrap();
+        assert!(
+            rewrite_snapshot_cells(&mut f, &io(), &tree, &part, &grids, 0.0, &lod_off)
+                .is_err()
+        );
+        // a pyramid-less snapshot keeps accepting lod-off rewrites
+        write_snapshot_with(&mut f, &io(), &tree, &part, &grids, 1.0, &lod_off).unwrap();
+        rewrite_snapshot_cells(&mut f, &io(), &tree, &part, &grids, 1.0, &lod_off).unwrap();
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn lod_off_snapshot_has_no_pyramid_group() {
+        let p = tmp("lod_off");
+        let (tree, part, grids) = setup(1, 2);
+        let mut f = H5File::create(&p, 1).unwrap();
+        write_common(&mut f, &params(), &tree, 2).unwrap();
+        let opts = SnapshotOptions {
+            lod: false,
+            ..SnapshotOptions::default()
+        };
+        let rep =
+            write_snapshot_with(&mut f, &io(), &tree, &part, &grids, 0.0, &opts).unwrap();
+        assert!(rep.lod.is_none());
+        assert!(crate::lod::LodIndex::open(&f, &ts_group(0.0)).unwrap().is_none());
+        // the file is indistinguishable from a pre-LOD one and restores
+        let snap = read_snapshot(&f, 0.0).unwrap();
+        assert_eq!(snap.tree.len(), tree.len());
         std::fs::remove_file(&p).ok();
     }
 

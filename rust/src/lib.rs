@@ -15,7 +15,8 @@
 //!   ([`runtime`]), and — the paper's headline contribution — the parallel
 //!   shared-file I/O kernel ([`iokernel`]) with collective buffering
 //!   ([`pario`]) on a simulated HPC substrate ([`cluster`]), plus the sliding
-//!   window ([`window`]) and time-reversible steering ([`steering`]).
+//!   window ([`window`]) with its budget-aware multi-resolution pyramid
+//!   ([`lod`]) and time-reversible steering ([`steering`]).
 //!
 //! See `DESIGN.md` for the complete system inventory and the experiment
 //! index mapping every figure/table of the paper to a bench/example.
@@ -27,6 +28,7 @@ pub mod coordinator;
 pub mod exchange;
 pub mod h5lite;
 pub mod iokernel;
+pub mod lod;
 pub mod metrics;
 pub mod nbs;
 pub mod pario;

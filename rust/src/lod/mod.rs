@@ -1,0 +1,812 @@
+//! **lod** — the multi-resolution pyramid for budgeted interactive
+//! exploration (Perović et al., arXiv:1807.00149).
+//!
+//! The snapshot's `current_cell_data` stores every grid at its native
+//! resolution, so a whole-domain sliding-window query must either read all
+//! leaf grids (blowing any realistic byte budget) or fall back to whatever
+//! restricted values the simulation happened to keep in interior rows. This
+//! module adds an **octree-style resolution pyramid** derived
+//! deterministically from the *written* cell data: level 1 downsamples the
+//! finest leaves 2× per axis (each 2×2×2 cell block folds to its mean),
+//! level 2 downsamples level 1, and so on down to a single 16³ d-grid
+//! covering the whole domain. A reader can then serve any region of
+//! interest at the finest level whose cover fits a byte budget, and refine
+//! progressively.
+//!
+//! ## Construction (write side)
+//!
+//! The pyramid is folded **during** the collective write (Jin et al.,
+//! arXiv:2206.14761: derived data is nearly free when it rides the parallel
+//! write pipeline): [`PyramidBuilder::fold_rows`] is called by the
+//! `pario` aggregators on their own threads as they assemble each chunk of
+//! the source dataset — every depth-`D` leaf row folds 2× into its octant
+//! of a level-1 grid, and an adaptive tree's coarser leaf at depth `d < D`
+//! lands verbatim in level `D − d` (its cells *are* that resolution).
+//! Distinct rows write disjoint cell regions, so the fold needs no locks.
+//! [`PyramidBuilder::finish`] then folds level `ℓ−1 → ℓ` for the remaining
+//! interior levels (cheap: the whole pyramid is ≤ 1/7 of the source), and
+//! [`PyramidBuilder::write`] stores the levels as ordinary chunked +
+//! compressed datasets.
+//!
+//! ## On-disk layout (the LOD metadata record)
+//!
+//! ```text
+//! /simulation/t=<t>/lod            @levels @source @fold @row_elems
+//!     level_<ℓ>_cells   f32[n_ℓ, 5·16³]   chunked+compressed cell data
+//!     level_<ℓ>_locs    u64[n_ℓ]          location code per row (Morton
+//!                                          order; depth = levels − ℓ)
+//! ```
+//!
+//! The record is plain groups/attributes/datasets, so it needs no format
+//! version bump: a v2.1 file without a `lod` group opens and answers window
+//! queries exactly as before, older readers simply ignore the extra group,
+//! and [`crate::h5lite::H5File::verify`] accounts pyramid extents like any
+//! other live data.
+//!
+//! ## Invariants
+//!
+//! * Every stored level-`ℓ` grid that is not a coarse leaf's verbatim copy
+//!   has all 8 children stored at level `ℓ−1` (or, for `ℓ = 1`, in the
+//!   source rows), and each of its cells equals [`fold_octant`]'s mean of
+//!   the corresponding 2×2×2 child cells — property-tested.
+//! * Level `levels` (the root) always holds exactly one grid, so a reader
+//!   can answer any query with at least one row.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::h5lite::codec::Codec;
+use crate::h5lite::{codec, Attr, Dataset, Dtype, H5File, FORMAT_V2};
+use crate::iokernel::{CHUNK_ROWS, ROW_BYTES, ROW_ELEMS};
+use crate::tree::dgrid::iidx;
+use crate::tree::sfc::Partition;
+use crate::tree::uid::LocCode;
+use crate::tree::{BBox, SpaceTree};
+use crate::util::{parallel_for, SendPtr};
+use crate::{DGRID_CELLS, DGRID_N, NVAR};
+
+/// Name of the pyramid subgroup inside a timestep group.
+pub const LOD_GROUP: &str = "lod";
+
+/// What one source row contributes to the accumulation buffers.
+#[derive(Clone, Copy)]
+enum RowTarget {
+    /// A finest-depth leaf: 2× downsample into `octant` of level-1 row
+    /// `level_row`.
+    Fold { level_row: usize, octant: u8 },
+    /// A coarser leaf of an adaptive tree: verbatim copy into row
+    /// `level_row` of `levels[level_ix]` (its native resolution).
+    Direct { level_ix: usize, level_row: usize },
+}
+
+/// One pyramid level's accumulation buffer (level `ix + 1`, tree depth
+/// `max_depth − (ix + 1)`). Rows are Morton-ordered by location code;
+/// `data` is written disjointly by the aggregator threads through `ptr`.
+struct LevelBuf {
+    /// Sorted by code; row `i` holds the grid at `locs[i]`.
+    locs: Vec<LocCode>,
+    row_of: HashMap<u32, usize>,
+    /// Rows that are a coarse leaf's verbatim copy (not a fold of 8
+    /// children).
+    direct: Vec<bool>,
+    data: Vec<f32>,
+    /// Raw view of `data` for the lock-free disjoint writes of the fill
+    /// phase (the Vec itself is never resized after construction).
+    ptr: SendPtr<f32>,
+}
+
+/// Report of one pyramid write (part of
+/// [`crate::iokernel::SnapshotReport`]).
+#[derive(Clone, Copy, Debug)]
+pub struct LodWriteReport {
+    /// Pyramid levels stored (= the tree depth of the finest leaves).
+    pub levels: u32,
+    /// Raw pyramid payload bytes (all levels' cell data).
+    pub raw_bytes: u64,
+    /// Bytes the pyramid physically occupies on disk (compressed cell
+    /// extents + the location indexes) — the storage overhead the
+    /// acceptance criterion bounds.
+    pub stored_bytes: u64,
+    /// Wall-clock seconds spent encoding + writing the level datasets
+    /// (the fold itself is accounted in
+    /// [`crate::pario::IoReport::lod_seconds`]).
+    pub write_seconds: f64,
+}
+
+/// Accumulates the resolution pyramid of one snapshot while the collective
+/// write streams the source rows past it. Shared by reference across the
+/// aggregator threads: [`PyramidBuilder::fold_rows`] takes `&self` and
+/// writes disjoint regions per source row.
+pub struct PyramidBuilder {
+    /// Tree depth of the finest leaves == number of pyramid levels.
+    max_depth: u32,
+    /// Per snapshot row (partition curve order): contribution, if the row
+    /// is a leaf. Interior rows carry no authoritative data for the fold.
+    targets: Vec<Option<RowTarget>>,
+    /// `levels[ℓ - 1]` accumulates pyramid level `ℓ` (depth `max_depth−ℓ`).
+    levels: Vec<LevelBuf>,
+    /// Leaf rows folded so far; `finish` requires all of them.
+    folded: AtomicU64,
+    n_leaf_rows: u64,
+}
+
+impl PyramidBuilder {
+    /// Set up accumulation buffers for `tree`'s pyramid. Rows are expected
+    /// in the snapshot's row order (`part.curve`). A root-only tree has no
+    /// pyramid ([`PyramidBuilder::is_empty`]).
+    pub fn new(tree: &SpaceTree, part: &Partition) -> PyramidBuilder {
+        let d_max = tree.max_depth();
+        let mut levels: Vec<LevelBuf> = Vec::with_capacity(d_max as usize);
+        for l in 1..=d_max {
+            let depth = d_max - l;
+            let mut locs: Vec<LocCode> = tree
+                .nodes
+                .iter()
+                .filter(|n| n.depth() == depth)
+                .map(|n| n.loc)
+                .collect();
+            locs.sort_by_key(|c| c.0);
+            let row_of: HashMap<u32, usize> =
+                locs.iter().enumerate().map(|(i, c)| (c.0, i)).collect();
+            let direct: Vec<bool> = locs
+                .iter()
+                .map(|c| tree.node(tree.lookup(*c).unwrap()).is_leaf())
+                .collect();
+            let mut data = vec![0.0f32; locs.len() * ROW_ELEMS];
+            let ptr = SendPtr::new(&mut data);
+            levels.push(LevelBuf {
+                locs,
+                row_of,
+                direct,
+                data,
+                ptr,
+            });
+        }
+        let mut targets: Vec<Option<RowTarget>> = vec![None; tree.len()];
+        let mut n_leaf_rows = 0u64;
+        for (row, &idx) in part.curve.iter().enumerate() {
+            let node = tree.node(idx);
+            if d_max == 0 || !node.is_leaf() {
+                continue;
+            }
+            n_leaf_rows += 1;
+            let d = node.depth();
+            targets[row] = Some(if d == d_max {
+                RowTarget::Fold {
+                    level_row: levels[0].row_of[&node.loc.parent().unwrap().0],
+                    octant: node.loc.octant(),
+                }
+            } else {
+                let level_ix = (d_max - d - 1) as usize;
+                RowTarget::Direct {
+                    level_ix,
+                    level_row: levels[level_ix].row_of[&node.loc.0],
+                }
+            });
+        }
+        PyramidBuilder {
+            max_depth: d_max,
+            targets,
+            levels,
+            folded: AtomicU64::new(0),
+            n_leaf_rows,
+        }
+    }
+
+    /// True when the tree has no refinement — nothing to store.
+    pub fn is_empty(&self) -> bool {
+        self.levels.is_empty()
+    }
+
+    /// Number of pyramid levels (== the finest leaves' tree depth).
+    pub fn n_levels(&self) -> u32 {
+        self.max_depth
+    }
+
+    /// Leaf rows folded so far (metrics).
+    pub fn rows_folded(&self) -> u64 {
+        self.folded.load(Ordering::Relaxed)
+    }
+
+    /// Fold `data` — whole rows of the source dataset starting at row
+    /// `row_start` — into the accumulation buffers. Called by the
+    /// aggregator threads during the fill phase; safe for concurrent calls
+    /// with *distinct* rows (each leaf row owns a disjoint cell region of
+    /// its target grid). Interior rows are skipped: only leaves carry
+    /// authoritative data.
+    pub fn fold_rows(&self, row_start: u64, data: &[u8]) {
+        let rb = ROW_BYTES as usize;
+        debug_assert_eq!(data.len() % rb, 0);
+        for (r, row) in data.chunks_exact(rb).enumerate() {
+            let Some(target) = self
+                .targets
+                .get(row_start as usize + r)
+                .copied()
+                .flatten()
+            else {
+                continue;
+            };
+            let vals = codec::bytes_to_f32s(row);
+            match target {
+                RowTarget::Fold { level_row, octant } => {
+                    // eight sibling leaves share this destination row (one
+                    // octant each, possibly on different aggregator
+                    // threads), so a whole-row `&mut` would alias across
+                    // threads — store each cell through the raw pointer
+                    let ptr = self.levels[0].ptr;
+                    let base = level_row * ROW_ELEMS;
+                    fold_octant_cells(&vals, octant, |at, val| {
+                        // SAFETY: each leaf owns its octant's disjoint
+                        // cells; `base + at` is in bounds of the level buf
+                        unsafe { *ptr.0.add(base + at) = val }
+                    });
+                }
+                RowTarget::Direct { level_ix, level_row } => {
+                    // SAFETY: this leaf is the only writer of the row
+                    let dst = unsafe {
+                        self.levels[level_ix].ptr.slice(level_row * ROW_ELEMS, ROW_ELEMS)
+                    };
+                    dst.copy_from_slice(&vals);
+                }
+            }
+            self.folded.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Fold the interior levels (`ℓ−1 → ℓ` for `ℓ ≥ 2`) once every leaf
+    /// row has passed through [`PyramidBuilder::fold_rows`]. Errors if the
+    /// collective write did not cover every leaf — a partial pyramid would
+    /// silently serve zeros.
+    pub fn finish(&mut self) -> Result<()> {
+        let folded = self.folded.load(Ordering::Relaxed);
+        if folded < self.n_leaf_rows {
+            bail!(
+                "lod: pyramid fold incomplete ({folded} of {} leaf rows seen)",
+                self.n_leaf_rows
+            );
+        }
+        for li in 1..self.levels.len() {
+            let (src_part, dst_part) = self.levels.split_at_mut(li);
+            let src = &src_part[li - 1];
+            let dst = &mut dst_part[0];
+            // resolve every folded row's 8 children up front (all present
+            // by construction: a stored grid is either a leaf copy or has
+            // a fully-covered subtree below it)
+            let mut jobs: Vec<(usize, [usize; 8])> = Vec::new();
+            for row in 0..dst.locs.len() {
+                if dst.direct[row] {
+                    continue;
+                }
+                let mut kids = [0usize; 8];
+                for (oct, kid) in kids.iter_mut().enumerate() {
+                    let child = dst.locs[row].child(oct as u8);
+                    *kid = *src.row_of.get(&child.0).ok_or_else(|| {
+                        anyhow!("lod: level {} grid missing child {oct}", li + 1)
+                    })?;
+                }
+                jobs.push((row, kids));
+            }
+            let dst_ptr = SendPtr::new(&mut dst.data);
+            let src_data = &src.data;
+            parallel_for(jobs.len(), |i| {
+                let (row, kids) = jobs[i];
+                // SAFETY: each job owns one whole destination row
+                let out = unsafe { dst_ptr.slice(row * ROW_ELEMS, ROW_ELEMS) };
+                for (oct, &crow) in kids.iter().enumerate() {
+                    let s = &src_data[crow * ROW_ELEMS..(crow + 1) * ROW_ELEMS];
+                    fold_octant(s, out, oct as u8);
+                }
+            });
+        }
+        Ok(())
+    }
+
+    /// Store the pyramid under `<ts_group>/lod`. Creates the level
+    /// datasets on first write (chunked + compressed when the file format
+    /// allows and `compress` asks for it); a steering rewrite of the same
+    /// snapshot overwrites the rows in place, so the free-space manager
+    /// recycles the superseded chunk extents like any other rewrite.
+    pub fn write(
+        &self,
+        file: &mut H5File,
+        ts_group: &str,
+        compress: bool,
+    ) -> Result<LodWriteReport> {
+        let t0 = Instant::now();
+        let mut report = LodWriteReport {
+            levels: self.max_depth,
+            raw_bytes: 0,
+            stored_bytes: 0,
+            write_seconds: 0.0,
+        };
+        if self.is_empty() {
+            return Ok(report);
+        }
+        let group = format!("{ts_group}/{LOD_GROUP}");
+        let chunked = compress && file.version() >= FORMAT_V2;
+        {
+            let g = file.ensure_group(&group);
+            g.attrs
+                .insert("levels".into(), Attr::I64(self.max_depth as i64));
+            g.attrs
+                .insert("source".into(), Attr::Str("current_cell_data".into()));
+            g.attrs.insert("fold".into(), Attr::Str("mean".into()));
+            g.attrs
+                .insert("row_elems".into(), Attr::I64(ROW_ELEMS as i64));
+        }
+        for (li, lvl) in self.levels.iter().enumerate() {
+            let l = li as u64 + 1;
+            let n = lvl.locs.len() as u64;
+            let cells_name = format!("level_{l}_cells");
+            let ds = match file.dataset(&group, &cells_name) {
+                Ok(ds) => {
+                    if ds.shape[..] != [n, ROW_ELEMS as u64] {
+                        bail!("lod: level {l} shape changed since the pyramid was created");
+                    }
+                    ds
+                }
+                Err(_) => {
+                    let ds = if chunked {
+                        file.create_dataset_chunked(
+                            &group,
+                            &cells_name,
+                            Dtype::F32,
+                            &[n, ROW_ELEMS as u64],
+                            CHUNK_ROWS,
+                            Codec::ShuffleDeltaLz,
+                        )?
+                    } else {
+                        file.create_dataset(
+                            &group,
+                            &cells_name,
+                            Dtype::F32,
+                            &[n, ROW_ELEMS as u64],
+                        )?
+                    };
+                    let locs_ds = file.create_dataset(
+                        &group,
+                        &format!("level_{l}_locs"),
+                        Dtype::U64,
+                        &[n],
+                    )?;
+                    let raw: Vec<u64> = lvl.locs.iter().map(|c| c.0 as u64).collect();
+                    file.write_rows(&locs_ds, 0, &codec::u64s_to_bytes(&raw))?;
+                    ds
+                }
+            };
+            file.write_rows(&ds, 0, &codec::f32s_to_bytes(&lvl.data))?;
+            report.raw_bytes += n * ROW_BYTES;
+            report.stored_bytes += file.dataset_stored_bytes(&ds)? + n * 8;
+        }
+        report.write_seconds = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    /// In-memory view of one accumulated level (tests / diagnostics):
+    /// `(locs, cell data)` of pyramid level `level` (1-based).
+    pub fn level_data(&self, level: u32) -> Option<(&[LocCode], &[f32])> {
+        let ix = (level as usize).checked_sub(1)?;
+        self.levels.get(ix).map(|l| (&l.locs[..], &l.data[..]))
+    }
+}
+
+/// The fold's arithmetic core: compute every destination cell of `octant`
+/// and hand `(index within the destination row, value)` to `write` — the
+/// one place the downsampling index math lives, shared by
+/// [`fold_octant`]'s slice path and the fill phase's per-cell raw-pointer
+/// path (where a whole-row `&mut` would alias across threads).
+fn fold_octant_cells(src: &[f32], octant: u8, mut write: impl FnMut(usize, f32)) {
+    debug_assert_eq!(src.len(), NVAR * DGRID_CELLS);
+    let half = DGRID_N / 2;
+    let bi = ((octant >> 2) & 1) as usize * half;
+    let bj = ((octant >> 1) & 1) as usize * half;
+    let bk = (octant & 1) as usize * half;
+    for (v, s) in src.chunks_exact(DGRID_CELLS).enumerate() {
+        for i in 0..half {
+            for j in 0..half {
+                for k in 0..half {
+                    let mut sum = 0.0f32;
+                    for di in 0..2 {
+                        for dj in 0..2 {
+                            for dk in 0..2 {
+                                sum += s[iidx(2 * i + di, 2 * j + dj, 2 * k + dk)];
+                            }
+                        }
+                    }
+                    write(
+                        v * DGRID_CELLS + iidx(bi + i, bj + j, bk + k),
+                        sum * 0.125,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Mean-fold one source grid's interior (all [`NVAR`] variables, 16³ each)
+/// 2× down into `octant` of `dst` — used by the builder's interior-level
+/// fold (which exclusively owns `dst`) and the property tests. `octant`
+/// uses the location-code bit order (x|y|z).
+pub fn fold_octant(src: &[f32], dst: &mut [f32], octant: u8) {
+    debug_assert_eq!(dst.len(), ROW_ELEMS);
+    fold_octant_cells(src, octant, |at, val| dst[at] = val);
+}
+
+// ---------------------------------------------------------------------------
+// read side
+// ---------------------------------------------------------------------------
+
+/// One stored pyramid level, opened for reading.
+pub struct LodLevel {
+    /// 1-based pyramid level (1 = one fold below full resolution).
+    pub level: u32,
+    /// Tree depth of this level's grids (`levels − level`).
+    pub depth: u32,
+    /// Morton-ordered location codes; row `i` holds the grid at `locs[i]`.
+    pub locs: Vec<LocCode>,
+    row_of: HashMap<u32, u64>,
+    /// The `level_<ℓ>_cells` dataset.
+    pub cells: Dataset,
+}
+
+impl LodLevel {
+    /// Row holding the grid at `loc`, if stored (an adaptive tree stores
+    /// nothing finer than its covering coarse leaf).
+    pub fn row_of(&self, loc: LocCode) -> Option<u64> {
+        self.row_of.get(&loc.0).copied()
+    }
+
+    /// Read and decode one grid row.
+    pub fn read_row(&self, file: &H5File, row: u64) -> Result<Vec<f32>> {
+        Ok(codec::bytes_to_f32s(&file.read_rows(&self.cells, row, 1)?))
+    }
+}
+
+/// The pyramid of one snapshot, opened for budget-aware reads.
+pub struct LodIndex {
+    /// Levels 1..=n in order; `levels[0]` is the finest stored level.
+    pub levels: Vec<LodLevel>,
+    /// Bytes read to load the location indexes (part of a query's cost).
+    pub index_bytes: u64,
+}
+
+impl LodIndex {
+    /// Open the pyramid of `ts_group`, or `Ok(None)` for a pyramid-less
+    /// snapshot (pre-LOD files and `SnapshotOptions { lod: false, .. }`).
+    pub fn open(file: &H5File, ts_group: &str) -> Result<Option<LodIndex>> {
+        let group = format!("{ts_group}/{LOD_GROUP}");
+        let Ok(g) = file.group(&group) else {
+            return Ok(None);
+        };
+        let n_levels = match g.attrs.get("levels") {
+            Some(Attr::I64(v)) if *v > 0 => *v as u32,
+            _ => return Ok(None),
+        };
+        let mut levels = Vec::with_capacity(n_levels as usize);
+        let mut index_bytes = 0u64;
+        for l in 1..=n_levels {
+            let cells = file.dataset(&group, &format!("level_{l}_cells"))?;
+            let locs_ds = file.dataset(&group, &format!("level_{l}_locs"))?;
+            let raw = file.read_all_u64(&locs_ds)?;
+            index_bytes += raw.len() as u64 * 8;
+            let locs: Vec<LocCode> = raw.into_iter().map(|v| LocCode(v as u32)).collect();
+            let row_of = locs
+                .iter()
+                .enumerate()
+                .map(|(i, c)| (c.0, i as u64))
+                .collect();
+            levels.push(LodLevel {
+                level: l,
+                depth: n_levels - l,
+                locs,
+                row_of,
+                cells,
+            });
+        }
+        Ok(Some(LodIndex { levels, index_bytes }))
+    }
+
+    /// Coarsest level number (== pyramid levels == finest-leaf depth).
+    pub fn max_level(&self) -> u32 {
+        self.levels.len() as u32
+    }
+
+    /// Level `l` (1-based; `None` for 0 — that is the full-res source).
+    pub fn level(&self, l: u32) -> Option<&LodLevel> {
+        self.levels.get((l as usize).checked_sub(1)?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// uniform-grid geometry helpers (selection without touching the topology
+// datasets — a pyramid level is a complete 2^depth-per-axis tiling)
+// ---------------------------------------------------------------------------
+
+/// Bounding box of the depth-`depth` grid at integer coords `(i, j, k)`.
+pub fn grid_bbox(domain: &BBox, depth: u32, i: u32, j: u32, k: u32) -> BBox {
+    let side = (1u64 << depth) as f64;
+    let c = [i as f64, j as f64, k as f64];
+    let mut b = BBox::default();
+    for a in 0..3 {
+        let w = domain.extent(a) / side;
+        b.min[a] = domain.min[a] + c[a] * w;
+        b.max[a] = domain.min[a] + (c[a] + 1.0) * w;
+    }
+    b
+}
+
+/// Half-open integer coordinate ranges, per axis, of the depth-`depth`
+/// grids whose boxes intersect `window` (same strict-inequality semantics
+/// as [`BBox::intersects`]). Empty ranges when the window misses the
+/// domain.
+pub fn coord_range(domain: &BBox, depth: u32, window: &BBox) -> [(u32, u32); 3] {
+    let side = 1u64 << depth;
+    let mut out = [(0u32, 0u32); 3];
+    for a in 0..3 {
+        let w = domain.extent(a) / side as f64;
+        let lo = ((window.min[a] - domain.min[a]) / w).floor().max(0.0) as u64;
+        let hi = ((window.max[a] - domain.min[a]) / w).ceil() as u64;
+        let lo = lo.min(side);
+        let hi = hi.min(side).max(lo);
+        out[a] = (lo as u32, hi as u32);
+    }
+    out
+}
+
+/// Number of depth-`depth` grids intersecting `window` — O(1) arithmetic,
+/// the budget-fit estimate of the level selector. (For adaptive trees this
+/// counts as if the tiling were complete, an upper bound on what a query
+/// actually reads, so a level chosen by it never bursts the budget.)
+pub fn intersect_count(domain: &BBox, depth: u32, window: &BBox) -> u64 {
+    coord_range(domain, depth, window)
+        .iter()
+        .map(|&(lo, hi)| (hi - lo) as u64)
+        .product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::sfc;
+
+    fn tree_and_part(depth: u32, ranks: u32) -> (SpaceTree, Partition) {
+        let mut tree = SpaceTree::full(BBox::unit(), depth);
+        let part = sfc::partition(&mut tree, ranks);
+        (tree, part)
+    }
+
+    /// Row bytes of the source dataset.
+    const RB: usize = ROW_BYTES as usize;
+
+    /// A snapshot-row buffer where every cell of every var of row `r`
+    /// holds `value_of(r)`.
+    fn rows_with(n: usize, value_of: impl Fn(usize) -> f32) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n * RB);
+        for r in 0..n {
+            let row = [value_of(r); ROW_ELEMS];
+            out.extend_from_slice(&codec::f32s_to_bytes(&row));
+        }
+        out
+    }
+
+    #[test]
+    fn root_only_tree_has_no_pyramid() {
+        let (tree, part) = tree_and_part(0, 1);
+        let b = PyramidBuilder::new(&tree, &part);
+        assert!(b.is_empty());
+        assert_eq!(b.n_levels(), 0);
+    }
+
+    #[test]
+    fn uniform_leaves_fold_to_uniform_levels() {
+        let (tree, part) = tree_and_part(2, 3);
+        let mut b = PyramidBuilder::new(&tree, &part);
+        assert_eq!(b.n_levels(), 2);
+        // every leaf holds 7.0; interior rows hold garbage the fold must
+        // ignore (here: 0.0 via the constant, distinguishable anyway)
+        let data = rows_with(tree.len(), |r| {
+            if tree.node(part.curve[r]).is_leaf() {
+                7.0
+            } else {
+                -1.0
+            }
+        });
+        b.fold_rows(0, &data);
+        b.finish().unwrap();
+        for level in [1u32, 2] {
+            let (locs, cells) = b.level_data(level).unwrap();
+            assert_eq!(locs.len(), if level == 1 { 8 } else { 1 });
+            assert!(
+                cells.iter().all(|&x| x == 7.0),
+                "level {level} not uniform"
+            );
+        }
+    }
+
+    #[test]
+    fn fold_octant_places_mean_in_the_right_corner() {
+        let mut src = vec![0.0f32; ROW_ELEMS];
+        // var 1, cell (0,0,0..2): values 8 and 16 → the 2×2×2 block mean is
+        // (8 + 16) / 8 = 3.0
+        src[DGRID_CELLS + iidx(0, 0, 0)] = 8.0;
+        src[DGRID_CELLS + iidx(0, 0, 1)] = 16.0;
+        let mut dst = vec![0.0f32; ROW_ELEMS];
+        fold_octant(&src, &mut dst, 0b101); // +x, −y, +z octant
+        let expect_at = iidx(8, 0, 8);
+        assert_eq!(dst[DGRID_CELLS + expect_at], 3.0);
+        // nothing else written in that var
+        let written = dst[DGRID_CELLS..2 * DGRID_CELLS]
+            .iter()
+            .filter(|&&x| x != 0.0)
+            .count();
+        assert_eq!(written, 1);
+        // other vars untouched
+        assert!(dst[..DGRID_CELLS].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn finish_requires_full_leaf_coverage() {
+        let (tree, part) = tree_and_part(1, 2);
+        let mut b = PyramidBuilder::new(&tree, &part);
+        // only the first 3 rows folded — 8 leaves exist
+        b.fold_rows(0, &rows_with(3, |_| 1.0));
+        assert!(b.finish().is_err());
+    }
+
+    #[test]
+    fn adaptive_coarse_leaf_is_copied_verbatim() {
+        // refine only child 0 of the root: leaves at depth 1 (7 of them)
+        // and depth 2 (8); the depth-1 leaves land verbatim in level 1
+        let mut tree = SpaceTree::root_only(BBox::unit());
+        tree.refine(0);
+        let c0 = tree.lookup(LocCode::ROOT.child(0)).unwrap();
+        tree.refine(c0);
+        let part = sfc::partition(&mut tree, 2);
+        let mut b = PyramidBuilder::new(&tree, &part);
+        assert_eq!(b.n_levels(), 2);
+        let data = rows_with(tree.len(), |r| {
+            let n = tree.node(part.curve[r]);
+            if !n.is_leaf() {
+                return -1.0;
+            }
+            if n.depth() == 1 {
+                5.0 // coarse leaves
+            } else {
+                9.0 // fine leaves under c0
+            }
+        });
+        b.fold_rows(0, &data);
+        b.finish().unwrap();
+        let (locs1, cells1) = b.level_data(1).unwrap();
+        assert_eq!(locs1.len(), 8);
+        for (i, loc) in locs1.iter().enumerate() {
+            let want = if *loc == LocCode::ROOT.child(0) {
+                9.0 // folded from the uniform fine leaves
+            } else {
+                5.0 // verbatim coarse-leaf copy
+            };
+            let row = &cells1[i * ROW_ELEMS..(i + 1) * ROW_ELEMS];
+            assert!(row.iter().all(|&x| x == want), "level-1 grid {i}");
+        }
+        // the root is octant-structured: cells folded from c0's grid hold
+        // 9.0, the rest 5.0 (octant 0 is the −x,−y,−z corner)
+        let (_, cells2) = b.level_data(2).unwrap();
+        assert_eq!(cells2[iidx(0, 0, 0)], 9.0);
+        assert_eq!(cells2[iidx(7, 7, 7)], 9.0);
+        assert_eq!(cells2[iidx(8, 8, 8)], 5.0);
+        assert_eq!(cells2[iidx(0, 0, 8)], 5.0);
+    }
+
+    #[test]
+    fn concurrent_fold_matches_serial() {
+        let (tree, part) = tree_and_part(2, 4);
+        let n = tree.len();
+        let data = rows_with(n, |r| (r as f32 * 0.37).sin());
+        let mut serial = PyramidBuilder::new(&tree, &part);
+        serial.fold_rows(0, &data);
+        serial.finish().unwrap();
+        let mut threaded = PyramidBuilder::new(&tree, &part);
+        std::thread::scope(|s| {
+            let b = &threaded;
+            let d = &data;
+            for t in 0..4usize {
+                s.spawn(move || {
+                    // interleaved row blocks, like aggregator chunk jobs
+                    let mut r = t;
+                    while r < n {
+                        b.fold_rows(r as u64, &d[r * RB..(r + 1) * RB]);
+                        r += 4;
+                    }
+                });
+            }
+        });
+        threaded.finish().unwrap();
+        for level in 1..=2u32 {
+            let (_, a) = serial.level_data(level).unwrap();
+            let (_, b) = threaded.level_data(level).unwrap();
+            assert_eq!(a, b, "level {level}");
+        }
+    }
+
+    #[test]
+    fn coord_range_matches_bbox_intersection() {
+        let domain = BBox::unit();
+        for depth in 0..4u32 {
+            let side = 1u32 << depth;
+            for window in [
+                BBox::unit(),
+                BBox {
+                    min: [0.0; 3],
+                    max: [0.5, 1.0, 1.0],
+                },
+                BBox {
+                    min: [0.24, 0.24, 0.24],
+                    max: [0.26, 0.76, 0.26],
+                },
+                BBox {
+                    min: [2.0; 3],
+                    max: [3.0; 3],
+                }, // misses the domain
+            ] {
+                let [ri, rj, rk] = coord_range(&domain, depth, &window);
+                let mut count = 0u64;
+                for i in 0..side {
+                    for j in 0..side {
+                        for k in 0..side {
+                            let hit = grid_bbox(&domain, depth, i, j, k).intersects(&window);
+                            let in_range = (ri.0..ri.1).contains(&i)
+                                && (rj.0..rj.1).contains(&j)
+                                && (rk.0..rk.1).contains(&k);
+                            assert_eq!(hit, in_range, "depth {depth} ({i},{j},{k})");
+                            count += hit as u64;
+                        }
+                    }
+                }
+                assert_eq!(count, intersect_count(&domain, depth, &window));
+            }
+        }
+    }
+
+    #[test]
+    fn write_and_reopen_roundtrip() {
+        let p = std::env::temp_dir().join(format!("lod_test_{}.h5", std::process::id()));
+        let (tree, part) = tree_and_part(2, 3);
+        let data = rows_with(tree.len(), |r| {
+            if tree.node(part.curve[r]).is_leaf() {
+                3.5
+            } else {
+                -1.0
+            }
+        });
+        {
+            let mut f = H5File::create(&p, 1).unwrap();
+            f.ensure_group("/simulation/t=0.000000");
+            let mut b = PyramidBuilder::new(&tree, &part);
+            b.fold_rows(0, &data);
+            b.finish().unwrap();
+            let rep = b.write(&mut f, "/simulation/t=0.000000", true).unwrap();
+            assert_eq!(rep.levels, 2);
+            assert_eq!(rep.raw_bytes, 9 * ROW_BYTES);
+            assert!(rep.stored_bytes > 0);
+            f.commit().unwrap();
+        }
+        let f = H5File::open(&p).unwrap();
+        let idx = LodIndex::open(&f, "/simulation/t=0.000000")
+            .unwrap()
+            .expect("pyramid missing after reopen");
+        assert_eq!(idx.max_level(), 2);
+        let l2 = idx.level(2).unwrap();
+        assert_eq!(l2.depth, 0);
+        assert_eq!(l2.locs[..], [LocCode::ROOT]);
+        let row = l2.row_of(LocCode::ROOT).unwrap();
+        let cells = l2.read_row(&f, row).unwrap();
+        assert!(cells.iter().all(|&x| x == 3.5));
+        assert!(idx.level(0).is_none());
+        // a snapshot group without a pyramid reads back as None
+        assert!(LodIndex::open(&f, "/simulation").unwrap().is_none());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -38,6 +38,7 @@ use anyhow::{bail, Result};
 
 use crate::cluster::{IoEstimate, IoTuning, Machine, WriteWorkload};
 use crate::h5lite::{codec, Dataset, Dtype, H5File, Layout};
+use crate::lod::PyramidBuilder;
 use crate::metrics::Metrics;
 use crate::util::parallel_for;
 
@@ -73,8 +74,37 @@ pub struct IoReport {
     /// CPU seconds the aggregators spent in the chunk codec (summed across
     /// threads; overlapped with streaming in the real run).
     pub compress_seconds: f64,
+    /// CPU seconds the aggregators spent folding assembled source rows
+    /// into the LOD pyramid's accumulation buffers (summed across threads;
+    /// overlapped with streaming, like the codec). Zero when the write
+    /// carried no [`LodSink`].
+    pub lod_seconds: f64,
     /// Modelled cost on the target machine.
     pub modelled: IoEstimate,
+}
+
+/// Fold sink for the multi-resolution pyramid ([`crate::lod`]): when a
+/// collective write carries one, the aggregators fold every assembled row
+/// of the source dataset into the builder's accumulation buffers during
+/// the fill phase — the pyramid rides the parallel write instead of
+/// costing a second pass over the data (Jin et al. 2022).
+pub struct LodSink<'a> {
+    /// The pyramid's source dataset (the snapshot's `current_cell_data`).
+    pub ds: &'a Dataset,
+    pub builder: &'a PyramidBuilder,
+}
+
+impl LodSink<'_> {
+    /// Is `other` the sink's source dataset? (Layout identity: the chunk
+    /// registry id for chunked datasets, the payload offset for
+    /// contiguous ones.)
+    fn matches(&self, other: &Dataset) -> bool {
+        match (&self.ds.layout, &other.layout) {
+            (Layout::Chunked { id: a, .. }, Layout::Chunked { id: b, .. }) => a == b,
+            (Layout::Contiguous { offset: a }, Layout::Contiguous { offset: b }) => a == b,
+            _ => false,
+        }
+    }
 }
 
 /// The parallel I/O driver. `n_ranks` is the logical process count (the
@@ -141,6 +171,21 @@ impl ParallelIo {
         n_datasets: u64,
         n_grids: u64,
     ) -> Result<IoReport> {
+        self.collective_write_lod(file, writes, n_datasets, n_grids, None)
+    }
+
+    /// [`ParallelIo::collective_write`] with an optional LOD fold sink:
+    /// rows of the sink's source dataset are folded into the pyramid
+    /// builder by the aggregator threads as they assemble them (fill-phase
+    /// overlap — see [`LodSink`]).
+    pub fn collective_write_lod(
+        &self,
+        file: &H5File,
+        writes: &[SlabWrite],
+        n_datasets: u64,
+        n_grids: u64,
+        lod: Option<&LodSink>,
+    ) -> Result<IoReport> {
         let t0 = Instant::now();
         let bytes: u64 = writes.iter().map(|w| w.data.len() as u64).sum();
         let reclaimed0 = file.space_stats().reclaimed_bytes;
@@ -202,6 +247,7 @@ impl ParallelIo {
         let stored_atomic = AtomicU64::new(0);
         let ops_atomic = AtomicU64::new(0);
         let compress_ns = AtomicU64::new(0);
+        let lod_ns = AtomicU64::new(0);
         let errors = Mutex::new(Vec::new());
         parallel_for(aggs as usize, |a| {
             for op in &merged[a] {
@@ -222,11 +268,20 @@ impl ParallelIo {
                     errors.lock().unwrap().push(e);
                 }
                 drop(guard);
+                // the fold overlap also serves the uncompressed layout:
+                // a contiguous source dataset folds from the merged ops
+                if let Some(sink) = lod {
+                    if sink.ds.contiguous_offset() == Some(op.ds_offset) {
+                        let tl = Instant::now();
+                        sink.builder.fold_rows(op.row_start, &op.data);
+                        lod_ns.fetch_add(tl.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    }
+                }
                 ops_atomic.fetch_add(1, Ordering::Relaxed);
                 stored_atomic.fetch_add(op.data.len() as u64, Ordering::Relaxed);
             }
             for job in &chunk_by_agg[a] {
-                match self.write_chunk_job(file, job, &compress_ns) {
+                match self.write_chunk_job(file, job, &compress_ns, lod, &lod_ns) {
                     Ok(stored) => {
                         ops_atomic.fetch_add(1, Ordering::Relaxed);
                         stored_atomic.fetch_add(stored, Ordering::Relaxed);
@@ -242,6 +297,7 @@ impl ParallelIo {
         let stored_bytes = stored_atomic.load(Ordering::Relaxed);
         let write_ops = ops_atomic.load(Ordering::Relaxed);
         let compress_seconds = compress_ns.load(Ordering::Relaxed) as f64 / 1e9;
+        let lod_seconds = lod_ns.load(Ordering::Relaxed) as f64 / 1e9;
         let real_seconds = t0.elapsed().as_secs_f64().max(1e-9);
         let workload = WriteWorkload {
             ranks: self.n_ranks,
@@ -258,6 +314,38 @@ impl ParallelIo {
         } else {
             self.machine.estimate_write(&workload, &self.tuning)
         };
+        // price the pyramid fold. With collective buffering it pipelines
+        // behind the fill/codec/stream stages on the aggregator threads,
+        // so only the excess over the slowest stage costs modelled
+        // wall-clock; independent I/O has no threads to pipeline behind —
+        // each rank folds its own slabs serially, like the codec term in
+        // the machine model's independent branch.
+        if let Some(sink) = lod {
+            let fold_bytes: u64 = writes
+                .iter()
+                .filter(|w| sink.matches(w.ds))
+                .map(|w| w.data.len() as u64)
+                .sum();
+            if fold_bytes > 0 {
+                let t_fold = if self.tuning.collective_buffering {
+                    self.machine.estimate_fold(fold_bytes, self.n_ranks)
+                } else {
+                    fold_bytes as f64
+                        / (self.n_ranks.max(1) as f64 * self.machine.fold_bw)
+                };
+                if self.tuning.collective_buffering {
+                    let pipeline = modelled
+                        .t_stream
+                        .max(modelled.t_aggregate)
+                        .max(modelled.t_compress);
+                    modelled.seconds += (t_fold - pipeline).max(0.0);
+                } else {
+                    modelled.seconds += t_fold;
+                }
+                modelled.bandwidth = bytes as f64 / modelled.seconds;
+                modelled.t_fold = t_fold;
+            }
+        }
         // space the free-space manager got back from rewritten chunks: the
         // estimate carries it so steady-state file size can be derived from
         // the model (stored bytes in, reclaimed bytes back out)
@@ -273,6 +361,11 @@ impl ParallelIo {
         self.metrics.add("pario.chunks", jobs.len() as u64);
         self.metrics
             .add_ns("pario.compress", compress_ns.load(Ordering::Relaxed));
+        if let Some(sink) = lod {
+            self.metrics.add("pario.lod_rows", sink.builder.rows_folded());
+            self.metrics
+                .add_ns("pario.lod_fold", lod_ns.load(Ordering::Relaxed));
+        }
         Ok(IoReport {
             real_seconds,
             real_bandwidth: bytes as f64 / real_seconds,
@@ -281,6 +374,7 @@ impl ParallelIo {
             write_ops,
             reclaimed_bytes,
             compress_seconds,
+            lod_seconds,
             modelled,
         })
     }
@@ -292,6 +386,8 @@ impl ParallelIo {
         file: &H5File,
         job: &ChunkJob,
         compress_ns: &AtomicU64,
+        lod: Option<&LodSink>,
+        lod_ns: &AtomicU64,
     ) -> Result<u64> {
         let rb = job.ds.row_bytes();
         let rows_here = job.ds.chunk_rows_at(job.chunk_no);
@@ -308,7 +404,17 @@ impl ParallelIo {
         }
         // the deep integration: codec runs here, on the aggregator thread,
         // while sibling aggregators are already streaming
-        let (_, chunk_codec, _) = job.ds.chunk_meta().unwrap();
+        let (chunk_rows, chunk_codec, _) = job.ds.chunk_meta().unwrap();
+        // pyramid fold of the assembled chunk — same overlap as the codec
+        // (the merged `raw` covers the whole chunk, so even a
+        // partial-coverage write folds the chunk's post-write content)
+        if let Some(sink) = lod {
+            if sink.matches(job.ds) {
+                let tl = Instant::now();
+                sink.builder.fold_rows(job.chunk_no * chunk_rows, &raw);
+                lod_ns.fetch_add(tl.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+        }
         let tc = Instant::now();
         let (enc, checksum) = codec::encode_chunk(chunk_codec, &raw, job.ds.dtype.size());
         compress_ns.fetch_add(tc.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -787,6 +893,70 @@ mod tests {
         assert_eq!(io.metrics.counter("pario.bytes_stored"), rep.stored_bytes);
         assert_eq!(io.metrics.counter("pario.chunks"), 2);
         assert!(io.metrics.seconds("pario.compress") > 0.0);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn lod_sink_folds_during_the_collective_write() {
+        use crate::iokernel::ROW_ELEMS;
+        use crate::lod::PyramidBuilder;
+        use crate::tree::{sfc, BBox, SpaceTree};
+        // a depth-1 domain: 9 rows (root + 8 leaves), each rank writes its
+        // partition slice of the chunked source dataset; the sink must see
+        // every leaf row exactly once, during the write itself
+        let p = tmp("lod_fold");
+        let mut tree = SpaceTree::full(BBox::unit(), 1);
+        let part = sfc::partition(&mut tree, 3);
+        let offsets = part.row_offsets();
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked(
+                "/g",
+                "cur",
+                Dtype::F32,
+                &[9, ROW_ELEMS as u64],
+                4,
+                Codec::ShuffleDeltaLz,
+            )
+            .unwrap();
+        let bufs: Vec<Vec<u8>> = (0..3)
+            .map(|r| {
+                codec::f32s_to_bytes(&vec![
+                    5.0f32;
+                    part.counts[r] as usize * ROW_ELEMS
+                ])
+            })
+            .collect();
+        let writes: Vec<SlabWrite> = bufs
+            .iter()
+            .enumerate()
+            .map(|(r, b)| SlabWrite {
+                rank: r as u32,
+                ds: &ds,
+                row_start: offsets[r],
+                data: b,
+            })
+            .collect();
+        let mut builder = PyramidBuilder::new(&tree, &part);
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 3);
+        let rep = io
+            .collective_write_lod(
+                &f,
+                &writes,
+                1,
+                9,
+                Some(&LodSink {
+                    ds: &ds,
+                    builder: &builder,
+                }),
+            )
+            .unwrap();
+        assert_eq!(builder.rows_folded(), 8, "one fold per leaf row");
+        assert_eq!(io.metrics.counter("pario.lod_rows"), 8);
+        assert!(rep.lod_seconds >= 0.0);
+        builder.finish().unwrap();
+        let (_, cells) = builder.level_data(1).unwrap();
+        assert!(cells.iter().all(|&x| x == 5.0), "uniform leaves fold to 5.0");
         std::fs::remove_file(&p).ok();
     }
 

@@ -29,7 +29,22 @@
 //! inside [`H5File::read_rows`]; the file's LRU chunk cache keeps the
 //! row-at-a-time traversal from re-inflating the same chunk per row, even
 //! when a multi-grid query straddles chunk boundaries.
+//!
+//! ## Byte-budgeted queries over the LOD pyramid
+//!
+//! [`offline_window_budgeted`] takes a **byte** budget and serves the
+//! region of interest from the finest [`crate::lod`] pyramid level whose
+//! cover fits it — a whole-domain query over a huge snapshot comes back as
+//! a handful of coarse grids instead of every leaf, and zooming in
+//! automatically lands on finer levels. [`offline_window_progressive`]
+//! streams the same answer coarse-to-fine for immediate first paint.
+//! Pyramid-less files (pre-LOD, or written with
+//! `SnapshotOptions { lod: false, .. }`) fall back to the classic
+//! traversal transparently. The online [`Collector`] speaks a second,
+//! byte-budgeted request ([`query_budgeted`]) answered from the live
+//! tree's restricted interior grids — the online twin of the pyramid.
 
+use std::collections::BTreeSet;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -39,8 +54,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::Simulation;
 use crate::h5lite::{codec, H5File};
-use crate::iokernel::{self, ROW_ELEMS};
-use crate::tree::uid::Uid;
+use crate::iokernel::{self, ROW_BYTES, ROW_ELEMS};
+use crate::lod::{self, LodIndex};
+use crate::tree::uid::{LocCode, Uid};
 use crate::tree::BBox;
 use crate::{DGRID_CELLS, NVAR};
 
@@ -147,10 +163,190 @@ pub fn offline_window(
 }
 
 // ---------------------------------------------------------------------------
+// byte-budgeted offline window over the LOD pyramid
+// ---------------------------------------------------------------------------
+
+/// Answer of a byte-budgeted window query.
+#[derive(Debug)]
+pub struct LodWindow {
+    pub grids: Vec<WindowGrid>,
+    /// Pyramid level served: 0 = full resolution (the tree's leaves),
+    /// `max` = the single root grid. Adaptive trees may mix in coarser
+    /// ancestors where nothing finer is stored — each grid carries its own
+    /// depth/bbox.
+    pub level: u32,
+    /// Cell-data payload bytes fetched to answer (the budget's currency;
+    /// the topology/location indexes add a few KiB on top).
+    pub bytes_read: u64,
+    /// True when the answer came from stored pyramid levels; false on the
+    /// full-resolution or fallback paths.
+    pub from_pyramid: bool,
+}
+
+/// Sliding-window query under a **byte budget**: serve `window` from the
+/// finest resolution whose cover fits `budget_bytes`, using the snapshot's
+/// LOD pyramid when it has one. Level 0 (full resolution) reads the tree's
+/// leaf grids; coarser levels read the pyramid datasets — a whole-domain
+/// overview costs one grid row, not the whole snapshot. The answer always
+/// holds at least one grid, even under a sub-grid budget. A pyramid-less
+/// snapshot falls back to the classic grid-count traversal with the budget
+/// converted to grids.
+pub fn offline_window_budgeted(
+    file: &H5File,
+    t: f64,
+    window: &BBox,
+    budget_bytes: u64,
+) -> Result<LodWindow> {
+    let row_bytes = ROW_BYTES;
+    let group = iokernel::ts_group(t);
+    let Some(idx) = LodIndex::open(file, &group)? else {
+        let budget_grids = (budget_bytes / row_bytes).max(1) as usize;
+        let grids = offline_window(file, t, window, budget_grids)?;
+        return Ok(LodWindow {
+            bytes_read: grids.len() as u64 * row_bytes,
+            grids,
+            level: 0,
+            from_pyramid: false,
+        });
+    };
+    let domain = iokernel::read_domain(file)?;
+    let d_max = idx.max_level();
+    // finest level whose whole-cover byte count fits the budget (the
+    // count is an O(1) upper bound, so the chosen level never bursts it);
+    // the root level is the floor — an answer is always affordable
+    let mut chosen = d_max;
+    for l in 0..=d_max {
+        if lod::intersect_count(&domain, d_max - l, window) * row_bytes <= budget_bytes {
+            chosen = l;
+            break;
+        }
+    }
+    if chosen == 0 {
+        let grids = offline_window(file, t, window, usize::MAX)?;
+        return Ok(LodWindow {
+            bytes_read: grids.len() as u64 * row_bytes,
+            grids,
+            level: 0,
+            from_pyramid: false,
+        });
+    }
+    read_pyramid_level(file, &idx, &domain, chosen, window, row_bytes)
+}
+
+/// Read the cover of `window` at pyramid level `l ≥ 1`. Coordinates an
+/// adaptive tree never stored resolve to their nearest stored ancestor
+/// (deduplicated), so the cover is complete at mixed depth.
+fn read_pyramid_level(
+    file: &H5File,
+    idx: &LodIndex,
+    domain: &BBox,
+    l: u32,
+    window: &BBox,
+    row_bytes: u64,
+) -> Result<LodWindow> {
+    let d_max = idx.max_level();
+    let depth = idx.level(l).ok_or_else(|| anyhow!("window: no lod level {l}"))?.depth;
+    let [ri, rj, rk] = lod::coord_range(domain, depth, window);
+    let mut picked: BTreeSet<(u32, u64)> = BTreeSet::new();
+    for i in ri.0..ri.1 {
+        for j in rj.0..rj.1 {
+            for k in rk.0..rk.1 {
+                let (mut lc, mut c) = (l, (i, j, k));
+                loop {
+                    let lvl = idx.level(lc).unwrap();
+                    let row = LocCode::from_coords(lvl.depth, c.0, c.1, c.2)
+                        .and_then(|loc| lvl.row_of(loc));
+                    if let Some(row) = row {
+                        picked.insert((lc, row));
+                        break;
+                    }
+                    if lc >= d_max {
+                        bail!("window: lod pyramid misses an ancestor for ({i},{j},{k})");
+                    }
+                    lc += 1;
+                    c = (c.0 / 2, c.1 / 2, c.2 / 2);
+                }
+            }
+        }
+    }
+    let mut grids = Vec::with_capacity(picked.len());
+    let mut bytes_read = 0u64;
+    for &(lc, row) in &picked {
+        let lvl = idx.level(lc).unwrap();
+        let data = lvl.read_row(file, row)?;
+        bytes_read += row_bytes;
+        let loc = lvl.locs[row as usize];
+        let (i, j, k) = loc.coords();
+        grids.push(WindowGrid {
+            uid: Uid::new(0, 0, loc),
+            depth: loc.depth(),
+            bbox: lod::grid_bbox(domain, loc.depth(), i, j, k),
+            data,
+        });
+    }
+    Ok(LodWindow {
+        grids,
+        level: l,
+        bytes_read,
+        from_pyramid: true,
+    })
+}
+
+/// Progressive refinement: stream `window` coarse-to-fine — the root level
+/// first (immediate first paint), then each finer level while the
+/// *cumulative* bytes stay within `total_budget_bytes`. The last element
+/// is the finest affordable answer; the first is always emitted so the
+/// viewer never starves. Falls back to a single budgeted answer on
+/// pyramid-less snapshots.
+pub fn offline_window_progressive(
+    file: &H5File,
+    t: f64,
+    window: &BBox,
+    total_budget_bytes: u64,
+) -> Result<Vec<LodWindow>> {
+    let row_bytes = ROW_BYTES;
+    let group = iokernel::ts_group(t);
+    let Some(idx) = LodIndex::open(file, &group)? else {
+        return Ok(vec![offline_window_budgeted(file, t, window, total_budget_bytes)?]);
+    };
+    let domain = iokernel::read_domain(file)?;
+    let d_max = idx.max_level();
+    let mut out: Vec<LodWindow> = Vec::new();
+    let mut spent = 0u64;
+    for l in (0..=d_max).rev() {
+        let cost = lod::intersect_count(&domain, d_max - l, window) * row_bytes;
+        if !out.is_empty() && spent + cost > total_budget_bytes {
+            break;
+        }
+        let step = if l == 0 {
+            let grids = offline_window(file, t, window, usize::MAX)?;
+            LodWindow {
+                bytes_read: grids.len() as u64 * row_bytes,
+                grids,
+                level: 0,
+                from_pyramid: false,
+            }
+        } else {
+            read_pyramid_level(file, &idx, &domain, l, window, row_bytes)?
+        };
+        spent += step.bytes_read;
+        out.push(step);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
 // online window: collector process + client
 // ---------------------------------------------------------------------------
 
 const REQ_MAGIC: u32 = 0x5357_494E; // "SWIN"
+/// Budget-aware request: bbox + byte budget, answered at the finest
+/// level-of-detail whose cover fits (the online twin of the pyramid —
+/// interior d-grids hold the restricted averages the bottom-up step
+/// maintains).
+const LOD_REQ_MAGIC: u32 = 0x5357_4C44; // "SWLD"
+/// Wire length of one grid record: uid, depth, bbox, cell data.
+const REC_LEN: usize = 8 + 4 + 48 + ROW_ELEMS * 4;
 
 /// Handle to a running collector thread.
 pub struct Collector {
@@ -201,25 +397,63 @@ impl Drop for Collector {
 fn handle_client(mut stream: TcpStream, sim: &Arc<RwLock<Simulation>>) -> Result<()> {
     stream.set_nodelay(true).ok();
     // ---- request: magic, bbox, budget --------------------------------- (1)
-    let mut req = [0u8; 4 + 48 + 4];
-    stream.read_exact(&mut req)?;
-    let magic = u32::from_le_bytes(req[0..4].try_into().unwrap());
-    if magic != REQ_MAGIC {
-        bail!("collector: bad request magic");
-    }
-    let f = |i: usize| f64::from_le_bytes(req[4 + i * 8..12 + i * 8].try_into().unwrap());
-    let window = BBox {
+    let mut magic = [0u8; 4];
+    stream.read_exact(&mut magic)?;
+    let mut bbox_buf = [0u8; 48];
+    let out = match u32::from_le_bytes(magic) {
+        REQ_MAGIC => {
+            stream.read_exact(&mut bbox_buf)?;
+            let window = decode_bbox(&bbox_buf);
+            let mut b = [0u8; 4];
+            stream.read_exact(&mut b)?;
+            respond(sim, &window, u32::from_le_bytes(b) as usize, false)?
+        }
+        LOD_REQ_MAGIC => {
+            stream.read_exact(&mut bbox_buf)?;
+            let window = decode_bbox(&bbox_buf);
+            let mut b = [0u8; 8];
+            stream.read_exact(&mut b)?;
+            // byte budget → grid budget: the server-side level selection
+            // then picks the finest depth whose cover fits it
+            let budget = (u64::from_le_bytes(b) / REC_LEN as u64).max(1) as usize;
+            respond(sim, &window, budget, true)?
+        }
+        _ => bail!("collector: bad request magic"),
+    };
+    stream.write_all(&out)?;
+    Ok(())
+}
+
+fn decode_bbox(buf: &[u8; 48]) -> BBox {
+    let f = |i: usize| f64::from_le_bytes(buf[i * 8..(i + 1) * 8].try_into().unwrap());
+    BBox {
         min: [f(0), f(1), f(2)],
         max: [f(3), f(4), f(5)],
-    };
-    let budget = u32::from_le_bytes(req[52..56].try_into().unwrap()) as usize;
+    }
+}
 
-    // ---- neighbourhood server selects the grids ------------------------ (2)
+/// Steps (2)–(5) of the Fig 3 query path: the neighbourhood server selects
+/// the grids at the budget's level of detail, the owning processes provide
+/// the data, the collector serialises the response. `lod_header` prefixes
+/// the record stream with the finest tree depth served (the budgeted
+/// protocol's level report).
+fn respond(
+    sim: &Arc<RwLock<Simulation>>,
+    window: &BBox,
+    budget: usize,
+    lod_header: bool,
+) -> Result<Vec<u8>> {
     let sim = sim.read().map_err(|_| anyhow!("collector: lock poisoned"))?;
-    let sel = sim.nbs.select_window(&window, budget);
-
-    // ---- owning processes provide the data, collector streams it ---- (3-5)
-    let mut out: Vec<u8> = Vec::with_capacity(4 + sel.len() * (8 + 4 + 48 + ROW_ELEMS * 4));
+    let sel = sim.nbs.select_window(window, budget);
+    let mut out: Vec<u8> = Vec::with_capacity(8 + sel.len() * REC_LEN);
+    if lod_header {
+        let depth = sel
+            .iter()
+            .map(|&i| sim.nbs.tree.node(i).depth())
+            .max()
+            .unwrap_or(0);
+        out.extend_from_slice(&depth.to_le_bytes());
+    }
     out.extend_from_slice(&(sel.len() as u32).to_le_bytes());
     let mut interior = vec![0.0f32; DGRID_CELLS];
     for idx in sel {
@@ -238,28 +472,16 @@ fn handle_client(mut stream: TcpStream, sim: &Arc<RwLock<Simulation>>) -> Result
             }
         }
     }
-    drop(sim);
-    stream.write_all(&out)?;
-    Ok(())
+    Ok(out)
 }
 
-/// Front-end client: one sliding-window query over TCP.
-pub fn query(addr: SocketAddr, window: &BBox, budget: u32) -> Result<Vec<WindowGrid>> {
-    let mut stream = TcpStream::connect(addr).context("window client connect")?;
-    let mut req = Vec::with_capacity(56);
-    req.extend_from_slice(&REQ_MAGIC.to_le_bytes());
-    for v in window.min.iter().chain(window.max.iter()) {
-        req.extend_from_slice(&v.to_le_bytes());
-    }
-    req.extend_from_slice(&budget.to_le_bytes());
-    stream.write_all(&req)?;
-
+/// Read `n`-prefixed grid records off the wire (client side).
+fn read_grid_records(stream: &mut TcpStream) -> Result<Vec<WindowGrid>> {
     let mut n_buf = [0u8; 4];
     stream.read_exact(&mut n_buf)?;
     let n = u32::from_le_bytes(n_buf) as usize;
     let mut grids = Vec::with_capacity(n);
-    let rec_len = 8 + 4 + 48 + ROW_ELEMS * 4;
-    let mut rec = vec![0u8; rec_len];
+    let mut rec = vec![0u8; REC_LEN];
     for _ in 0..n {
         stream.read_exact(&mut rec)?;
         let uid = Uid(u64::from_le_bytes(rec[0..8].try_into().unwrap()));
@@ -278,6 +500,58 @@ pub fn query(addr: SocketAddr, window: &BBox, budget: u32) -> Result<Vec<WindowG
         });
     }
     Ok(grids)
+}
+
+/// Front-end client: one sliding-window query over TCP.
+pub fn query(addr: SocketAddr, window: &BBox, budget: u32) -> Result<Vec<WindowGrid>> {
+    let mut stream = TcpStream::connect(addr).context("window client connect")?;
+    let mut req = Vec::with_capacity(56);
+    req.extend_from_slice(&REQ_MAGIC.to_le_bytes());
+    for v in window.min.iter().chain(window.max.iter()) {
+        req.extend_from_slice(&v.to_le_bytes());
+    }
+    req.extend_from_slice(&budget.to_le_bytes());
+    stream.write_all(&req)?;
+    read_grid_records(&mut stream)
+}
+
+/// Answer of a byte-budgeted online query.
+#[derive(Debug)]
+pub struct OnlineLodWindow {
+    pub grids: Vec<WindowGrid>,
+    /// Finest tree depth the collector served.
+    pub depth: u32,
+    /// Payload bytes received (≤ the requested budget, modulo the
+    /// one-grid floor).
+    pub bytes: u64,
+}
+
+/// Front-end client: one **byte-budgeted** sliding-window query — the
+/// collector picks the finest level of detail whose cover fits
+/// `budget_bytes` and reports the depth it served.
+pub fn query_budgeted(
+    addr: SocketAddr,
+    window: &BBox,
+    budget_bytes: u64,
+) -> Result<OnlineLodWindow> {
+    let mut stream = TcpStream::connect(addr).context("window client connect")?;
+    let mut req = Vec::with_capacity(60);
+    req.extend_from_slice(&LOD_REQ_MAGIC.to_le_bytes());
+    for v in window.min.iter().chain(window.max.iter()) {
+        req.extend_from_slice(&v.to_le_bytes());
+    }
+    req.extend_from_slice(&budget_bytes.to_le_bytes());
+    stream.write_all(&req)?;
+    let mut d = [0u8; 4];
+    stream.read_exact(&mut d)?;
+    let depth = u32::from_le_bytes(d);
+    let grids = read_grid_records(&mut stream)?;
+    let bytes = (grids.len() * REC_LEN) as u64;
+    Ok(OnlineLodWindow {
+        grids,
+        depth,
+        bytes,
+    })
 }
 
 #[cfg(test)]
@@ -395,6 +669,158 @@ mod tests {
             }
         }
         std::fs::remove_file(&p).ok();
+    }
+
+    /// Cell-data bytes of one grid row.
+    const RB: u64 = ROW_BYTES;
+
+    fn snapshot_file(name: &str, s: &Simulation, t: f64) -> H5File {
+        let p = std::env::temp_dir().join(format!("win_{name}_{}.h5", std::process::id()));
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 3);
+        let mut f = H5File::create(&p, 1).unwrap();
+        iokernel::write_common(&mut f, &s.params, &s.nbs.tree, 3).unwrap();
+        iokernel::write_snapshot(&mut f, &io, &s.nbs.tree, &s.part, &s.grids, t).unwrap();
+        f
+    }
+
+    #[test]
+    fn budgeted_window_serves_pyramid_levels() {
+        let s = sim(2);
+        let f = snapshot_file("lod_levels", &s, 0.5);
+        // generous budget → full resolution, same grids as the classic path
+        let full = offline_window_budgeted(&f, 0.5, &BBox::unit(), u64::MAX).unwrap();
+        assert_eq!(full.level, 0);
+        assert_eq!(full.grids.len(), 64);
+        assert_eq!(full.bytes_read, 64 * RB);
+        // an 8-grid budget → pyramid level 1 (the 8 depth-1 folds)
+        let mid = offline_window_budgeted(&f, 0.5, &BBox::unit(), 8 * RB).unwrap();
+        assert_eq!(mid.level, 1);
+        assert!(mid.from_pyramid);
+        assert_eq!(mid.grids.len(), 8);
+        assert!(mid.grids.iter().all(|g| g.depth == 1));
+        assert_eq!(mid.bytes_read, 8 * RB);
+        // the served values are exact folds of the painted leaves: octant 0
+        // of a level-1 grid holds its first child's (constant) pressure
+        let g1 = &mid.grids[0];
+        let child = s.nbs.tree.lookup(g1.uid.loc().child(0)).unwrap();
+        assert_eq!(g1.data[var::P * DGRID_CELLS], child as f32);
+        // a one-grid budget → the root overview, 1/64 of the full bytes
+        let root = offline_window_budgeted(&f, 0.5, &BBox::unit(), RB).unwrap();
+        assert_eq!(root.level, 2);
+        assert_eq!(root.grids.len(), 1);
+        assert_eq!(root.grids[0].depth, 0);
+        assert_eq!(root.bytes_read, RB);
+        std::fs::remove_file(&f.path).ok();
+    }
+
+    #[test]
+    fn budgeted_zoom_descends_levels_at_fixed_budget() {
+        let s = sim(2);
+        let f = snapshot_file("lod_zoom", &s, 0.0);
+        let budget = 4 * RB;
+        let whole = offline_window_budgeted(&f, 0.0, &BBox::unit(), budget).unwrap();
+        let octant = offline_window_budgeted(
+            &f,
+            0.0,
+            &BBox {
+                min: [0.0; 3],
+                max: [0.5; 3],
+            },
+            budget,
+        )
+        .unwrap();
+        let corner = offline_window_budgeted(
+            &f,
+            0.0,
+            &BBox {
+                min: [0.0; 3],
+                max: [0.25; 3],
+            },
+            budget,
+        )
+        .unwrap();
+        // shrinking the window at a fixed byte budget lands on finer levels
+        assert_eq!(whole.level, 2);
+        assert_eq!(octant.level, 1);
+        assert_eq!(corner.level, 0);
+        for w in [&whole, &octant, &corner] {
+            assert!(w.bytes_read <= budget, "{} > {budget}", w.bytes_read);
+            assert!(!w.grids.is_empty());
+        }
+        std::fs::remove_file(&f.path).ok();
+    }
+
+    #[test]
+    fn progressive_refinement_streams_coarse_to_fine() {
+        let s = sim(2);
+        let f = snapshot_file("lod_prog", &s, 0.0);
+        // budget for the whole cascade: 1 + 8 + 64 grids
+        let steps =
+            offline_window_progressive(&f, 0.0, &BBox::unit(), 73 * RB).unwrap();
+        assert_eq!(steps.len(), 3);
+        assert_eq!(
+            steps.iter().map(|s| s.level).collect::<Vec<_>>(),
+            vec![2, 1, 0]
+        );
+        assert_eq!(steps[0].grids.len(), 1);
+        assert_eq!(steps[2].grids.len(), 64);
+        let total: u64 = steps.iter().map(|s| s.bytes_read).sum();
+        assert!(total <= 73 * RB);
+        // a sub-grid budget still paints the coarsest answer
+        let tiny = offline_window_progressive(&f, 0.0, &BBox::unit(), 1).unwrap();
+        assert_eq!(tiny.len(), 1);
+        assert_eq!(tiny[0].level, 2);
+        std::fs::remove_file(&f.path).ok();
+    }
+
+    #[test]
+    fn pyramid_less_snapshot_falls_back_unchanged() {
+        let s = sim(2);
+        let p = std::env::temp_dir().join(format!("win_nolod_{}.h5", std::process::id()));
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 3);
+        let mut f = H5File::create(&p, 1).unwrap();
+        iokernel::write_common(&mut f, &s.params, &s.nbs.tree, 3).unwrap();
+        let opts = iokernel::SnapshotOptions {
+            lod: false,
+            ..iokernel::SnapshotOptions::default()
+        };
+        iokernel::write_snapshot_with(&mut f, &io, &s.nbs.tree, &s.part, &s.grids, 0.0, &opts)
+            .unwrap();
+        // the classic API answers exactly as before the pyramid existed
+        let classic = offline_window(&f, 0.0, &BBox::unit(), 8).unwrap();
+        assert_eq!(classic.len(), 8);
+        // and the budgeted API degrades to the grid-count traversal
+        let w = offline_window_budgeted(&f, 0.0, &BBox::unit(), 8 * RB).unwrap();
+        assert!(!w.from_pyramid);
+        assert_eq!(w.level, 0);
+        assert_eq!(w.grids.len(), 8);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn online_budgeted_query_selects_depth() {
+        let s = sim(2);
+        let shared = Arc::new(RwLock::new(s));
+        let collector = Collector::spawn(shared.clone()).unwrap();
+        let rec = REC_LEN as u64;
+        let coarse = query_budgeted(collector.addr, &BBox::unit(), rec).unwrap();
+        assert_eq!(coarse.grids.len(), 1);
+        assert_eq!(coarse.depth, 0);
+        assert!(coarse.bytes <= rec);
+        let mid = query_budgeted(collector.addr, &BBox::unit(), 8 * rec).unwrap();
+        assert_eq!(mid.grids.len(), 8);
+        assert_eq!(mid.depth, 1);
+        assert!(mid.bytes <= 8 * rec);
+        // zooming at the same budget reaches the leaves
+        let corner = BBox {
+            min: [0.0; 3],
+            max: [0.2; 3],
+        };
+        let zoom = query_budgeted(collector.addr, &corner, 8 * rec).unwrap();
+        assert_eq!(zoom.depth, 2);
+        // the legacy fixed-count protocol still works on the same socket
+        let legacy = query(collector.addr, &BBox::unit(), 8).unwrap();
+        assert_eq!(legacy.len(), 8);
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! Integration: the LOD pyramid end-to-end — fold-through-collective-write,
+//! budget-aware window answers, storage overhead, and compatibility with
+//! pyramid-less files. The acceptance criteria of ISSUE 3 live here:
+//!
+//! * a whole-domain `window` query at a budget 1/64 of full resolution
+//!   reads ≤ 1/8 of the full-res bytes through the pyramid;
+//! * pyramid storage overhead ≤ 15 % of the file;
+//! * `H5File::verify()` stays green on pyramid-bearing files.
+
+use mpfluid::cluster::{IoTuning, Machine};
+use mpfluid::h5lite::H5File;
+use mpfluid::iokernel::{self, SnapshotOptions, ROW_BYTES};
+use mpfluid::lod::LodIndex;
+use mpfluid::pario::ParallelIo;
+use mpfluid::physics::Params;
+use mpfluid::tree::dgrid::DGrid;
+use mpfluid::tree::sfc::{self, Partition};
+use mpfluid::tree::{BBox, SpaceTree};
+use mpfluid::window;
+use mpfluid::{var, DGRID_CELLS};
+
+/// Cell-data bytes of one grid row.
+const RB: u64 = ROW_BYTES;
+
+fn setup(tree: SpaceTree, ranks: u32) -> (SpaceTree, Partition, Vec<DGrid>) {
+    let mut tree = tree;
+    let part = sfc::partition(&mut tree, ranks);
+    let mut grids: Vec<DGrid> = tree.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+    for (i, g) in grids.iter_mut().enumerate() {
+        let f = vec![i as f32; DGRID_CELLS];
+        g.cur.set_interior(var::P, &f);
+    }
+    (tree, part, grids)
+}
+
+fn write_file(
+    name: &str,
+    tree: &SpaceTree,
+    part: &Partition,
+    grids: &[DGrid],
+    opts: &SnapshotOptions,
+) -> (H5File, iokernel::SnapshotReport) {
+    let p = std::env::temp_dir().join(format!("lodint_{name}_{}.h5", std::process::id()));
+    let io = ParallelIo::new(Machine::local(), IoTuning::default(), part.n_ranks as u64);
+    let mut f = H5File::create(&p, 4096).unwrap();
+    let par = Params::isothermal(0.01, 0.1, 0.01);
+    iokernel::write_common(&mut f, &par, tree, part.n_ranks as u64).unwrap();
+    let rep = iokernel::write_snapshot_with(&mut f, &io, tree, part, grids, 0.0, opts).unwrap();
+    (f, rep)
+}
+
+#[test]
+fn acceptance_budget_ratio_overhead_and_verify() {
+    let (tree, part, grids) = setup(SpaceTree::full(BBox::unit(), 2), 4);
+    let (f, rep) = write_file("accept", &tree, &part, &grids, &SnapshotOptions::default());
+
+    // --- budget criterion: 1/64 budget reads ≤ 1/8 of full-res bytes ----
+    let full = window::offline_window_budgeted(&f, 0.0, &BBox::unit(), u64::MAX).unwrap();
+    assert_eq!(full.level, 0);
+    assert_eq!(full.grids.len(), 64, "full resolution = the 64 leaves");
+    let full_bytes = full.bytes_read;
+    let budget = full_bytes / 64;
+    let coarse = window::offline_window_budgeted(&f, 0.0, &BBox::unit(), budget).unwrap();
+    assert!(coarse.from_pyramid);
+    assert!(
+        coarse.bytes_read <= budget,
+        "budget burst: {} > {budget}",
+        coarse.bytes_read
+    );
+    assert!(
+        coarse.bytes_read * 8 <= full_bytes,
+        "read {} of {full_bytes} — more than 1/8",
+        coarse.bytes_read
+    );
+    assert!(!coarse.grids.is_empty());
+
+    // --- storage criterion: pyramid ≤ 15 % of the file ------------------
+    let lod_rep = rep.lod.expect("pyramid missing");
+    let file_len = std::fs::metadata(&f.path).unwrap().len();
+    assert!(
+        lod_rep.stored_bytes * 100 <= file_len * 15,
+        "pyramid {} B vs file {file_len} B",
+        lod_rep.stored_bytes
+    );
+
+    // --- verify stays green on the pyramid-bearing file -----------------
+    let vr = f.verify().unwrap();
+    assert!(vr.ok(), "{:?}", vr.errors);
+    std::fs::remove_file(&f.path).ok();
+}
+
+#[test]
+fn pyramid_less_file_answers_window_queries_unchanged() {
+    let (tree, part, grids) = setup(SpaceTree::full(BBox::unit(), 2), 3);
+    let (with, _) = write_file("with", &tree, &part, &grids, &SnapshotOptions::default());
+    let opts_off = SnapshotOptions {
+        lod: false,
+        ..SnapshotOptions::default()
+    };
+    let (without, rep) = write_file("without", &tree, &part, &grids, &opts_off);
+    assert!(rep.lod.is_none());
+    assert!(LodIndex::open(&without, &iokernel::ts_group(0.0))
+        .unwrap()
+        .is_none());
+    // the classic grid-count window answers identically on both files
+    for budget in [1usize, 8, 1000] {
+        let a = window::offline_window(&with, 0.0, &BBox::unit(), budget).unwrap();
+        let b = window::offline_window(&without, 0.0, &BBox::unit(), budget).unwrap();
+        assert_eq!(a.len(), b.len(), "budget {budget}");
+        for (ga, gb) in a.iter().zip(&b) {
+            assert_eq!(ga.uid.0, gb.uid.0);
+            assert_eq!(ga.data, gb.data);
+        }
+    }
+    // and the pyramid-less file still verifies + restores
+    assert!(without.verify().unwrap().ok());
+    assert!(iokernel::read_snapshot(&without, 0.0).is_ok());
+    std::fs::remove_file(&with.path).ok();
+    std::fs::remove_file(&without.path).ok();
+}
+
+#[test]
+fn adaptive_tree_budgeted_cover_tiles_the_domain() {
+    // corner-refined adaptive domain: a mid-level query must tile the
+    // whole domain with mixed-depth grids (stored level grids where the
+    // tree is deep, coarser ancestors where a coarse leaf covers)
+    let tree = SpaceTree::adaptive(BBox::unit(), 3, &|b, _| {
+        b.contains_point([0.01, 0.01, 0.01])
+    });
+    let (tree, part, grids) = setup(tree, 4);
+    let (f, rep) = write_file("adaptive", &tree, &part, &grids, &SnapshotOptions::default());
+    assert_eq!(rep.lod.unwrap().levels, 3);
+    // level-1 cover of the whole domain (depth-2 tiling, 64 coords)
+    let w = window::offline_window_budgeted(&f, 0.0, &BBox::unit(), 64 * RB).unwrap();
+    assert!(w.from_pyramid);
+    assert!(w.bytes_read <= 64 * RB);
+    let depths: Vec<u32> = w.grids.iter().map(|g| g.depth).collect();
+    assert!(
+        depths.iter().any(|&d| d < 2),
+        "coarse-leaf regions must answer coarser: {depths:?}"
+    );
+    // exact tiling: volumes sum to the domain, no pairwise overlap
+    let vol = |b: &BBox| (0..3).map(|a| b.extent(a)).product::<f64>();
+    let total: f64 = w.grids.iter().map(|g| vol(&g.bbox)).sum();
+    assert!((total - 1.0).abs() < 1e-9, "cover volume {total}");
+    for (i, a) in w.grids.iter().enumerate() {
+        for b in w.grids.iter().skip(i + 1) {
+            assert!(!a.bbox.intersects(&b.bbox), "{:?} overlaps {:?}", a.uid, b.uid);
+        }
+    }
+    assert!(f.verify().unwrap().ok());
+    std::fs::remove_file(&f.path).ok();
+}
+
+#[test]
+fn budgeted_answers_are_consistent_across_compression() {
+    // the pyramid must serve identical values whether the file stores it
+    // compressed (chunked) or raw (contiguous levels)
+    let (tree, part, grids) = setup(SpaceTree::full(BBox::unit(), 2), 4);
+    let (fc, _) = write_file("comp", &tree, &part, &grids, &SnapshotOptions::default());
+    let opts_raw = SnapshotOptions::uncompressed();
+    let (fr, _) = write_file("raw", &tree, &part, &grids, &opts_raw);
+    for budget in [RB, 8 * RB, u64::MAX] {
+        let a = window::offline_window_budgeted(&fc, 0.0, &BBox::unit(), budget).unwrap();
+        let b = window::offline_window_budgeted(&fr, 0.0, &BBox::unit(), budget).unwrap();
+        assert_eq!(a.level, b.level);
+        assert_eq!(a.grids.len(), b.grids.len());
+        for (ga, gb) in a.grids.iter().zip(&b.grids) {
+            assert_eq!(ga.uid.0, gb.uid.0);
+            assert_eq!(ga.data, gb.data);
+        }
+    }
+    std::fs::remove_file(&fc.path).ok();
+    std::fs::remove_file(&fr.path).ok();
+}

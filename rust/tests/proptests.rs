@@ -502,6 +502,101 @@ fn prop_snapshot_roundtrip_random_state() {
 }
 
 #[test]
+fn prop_lod_every_level_is_the_exact_fold_of_its_children() {
+    // the pyramid invariant (ISSUE 3 satellite): every stored level-L cell
+    // equals the mean-fold of its 8 level-(L−1) children — for level 1 the
+    // children are the finest leaves of current_cell_data itself; an
+    // adaptive tree's coarse leaves must land verbatim at their level
+    use std::collections::HashMap;
+    check("lod fold invariant", 0xB7, |rng| {
+        let path = std::env::temp_dir().join(format!(
+            "lodprop_{}_{}",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        let mut tree = random_tree(rng);
+        let ranks = 1 + rng.below(6) as u32;
+        let part = sfc::partition(&mut tree, ranks);
+        let mut grids: Vec<DGrid> = tree.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+        for g in grids.iter_mut() {
+            for v in 0..mpfluid::NVAR {
+                let mut f = vec![0.0f32; mpfluid::DGRID_CELLS];
+                rng.fill_f32(&mut f, -3.0, 3.0);
+                g.cur.set_interior(v, &f);
+            }
+        }
+        let io = mpfluid::pario::ParallelIo::new(
+            Machine::local(),
+            IoTuning::default(),
+            ranks as u64,
+        );
+        let mut file = H5File::create(&path, 1).unwrap();
+        // lean snapshot: the pyramid sources current_cell_data only
+        let opts = mpfluid::iokernel::SnapshotOptions {
+            previous: false,
+            temp: false,
+            cell_type: false,
+            compress: rng.bool(),
+            lod: true,
+        };
+        let rep = mpfluid::iokernel::write_snapshot_with(
+            &mut file, &io, &tree, &part, &grids, 0.0, &opts,
+        )
+        .unwrap();
+        let group = mpfluid::iokernel::ts_group(0.0);
+        if tree.max_depth() == 0 {
+            assert!(rep.lod.is_none());
+            std::fs::remove_file(&path).ok();
+            return;
+        }
+        assert!(rep.lod.is_some());
+        let idx = mpfluid::lod::LodIndex::open(&file, &group)
+            .unwrap()
+            .expect("pyramid missing");
+        let ds_prop = file.dataset(&group, "grid_property").unwrap();
+        let row_of_loc: HashMap<u32, u64> = file
+            .read_all_u64(&ds_prop)
+            .unwrap()
+            .iter()
+            .enumerate()
+            .map(|(r, &u)| (Uid(u).loc().0, r as u64))
+            .collect();
+        let ds_cur = file.dataset(&group, "current_cell_data").unwrap();
+        let leaf_cells = |loc: LocCode| -> Vec<f32> {
+            codec::bytes_to_f32s(&file.read_rows(&ds_cur, row_of_loc[&loc.0], 1).unwrap())
+        };
+        for l in 1..=idx.max_level() {
+            let lvl = idx.level(l).unwrap();
+            assert!(!lvl.locs.is_empty());
+            for (row, loc) in lvl.locs.iter().enumerate() {
+                let got = lvl.read_row(&file, row as u64).unwrap();
+                let tree_idx = tree.lookup(*loc).expect("stored grid not in tree");
+                if tree.node(tree_idx).is_leaf() {
+                    // coarse leaf: verbatim copy of its source row
+                    assert_eq!(got, leaf_cells(*loc), "level {l} leaf copy");
+                } else {
+                    let mut want = vec![0.0f32; got.len()];
+                    for oct in 0..8u8 {
+                        let child = loc.child(oct);
+                        let child_cells = if l == 1 {
+                            leaf_cells(child)
+                        } else {
+                            let clvl = idx.level(l - 1).unwrap();
+                            let crow =
+                                clvl.row_of(child).expect("child level row missing");
+                            clvl.read_row(&file, crow).unwrap()
+                        };
+                        mpfluid::lod::fold_octant(&child_cells, &mut want, oct);
+                    }
+                    assert_eq!(got, want, "level {l} fold of 8 children");
+                }
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
 fn prop_json_parses_generated_documents() {
     use mpfluid::util::json::Json;
     check("json generator", 0xAB, |rng| {
