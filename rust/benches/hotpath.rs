@@ -10,6 +10,7 @@
 //! Run: `cargo bench --bench hotpath`
 
 use mpfluid::config::Scenario;
+use mpfluid::h5lite::codec::{self, encode_chunk_adaptive, Codec, ALL_CODECS};
 use mpfluid::h5lite::H5File;
 use mpfluid::iokernel;
 use mpfluid::cluster::{IoTuning, Machine};
@@ -18,6 +19,7 @@ use mpfluid::physics::{ComputeBackend, Params, RustBackend};
 use mpfluid::runtime::PjrtBackend;
 use mpfluid::util::bench::measure;
 use mpfluid::util::rng::Rng;
+use mpfluid::util::synth::{smooth_field, turbulent_field, TURB_SEED};
 use mpfluid::DGRID_N;
 
 const PAD: usize = (DGRID_N + 2) * (DGRID_N + 2) * (DGRID_N + 2);
@@ -99,6 +101,59 @@ fn step_breakdown() {
     }
 }
 
+/// Per-stage codec v2 throughput on one 128 KiB chunk (the write path's
+/// unit of codec work): encode and decode MB/s per pipeline, smooth vs
+/// turbulent input, plus the adaptive selector end-to-end.
+fn codec_stage_sweep() {
+    println!("\n== codec v2 stages: encode/decode throughput per 128 KiB chunk ==");
+    println!(
+        "{:>10} {:>22} {:>8} {:>12} {:>12}",
+        "field", "codec", "ratio", "enc MB/s", "dec MB/s"
+    );
+    let fields: [(&str, Vec<f32>); 2] = [
+        ("smooth", smooth_field(32768)),
+        ("turbulent", turbulent_field(32768, TURB_SEED)),
+    ];
+    for (fname, field) in &fields {
+        let raw = codec::f32s_to_bytes(field);
+        for c in ALL_CODECS {
+            if c == Codec::Raw {
+                continue;
+            }
+            let enc = c.encode(&raw, 4);
+            let t_enc = measure(3, || {
+                std::hint::black_box(c.encode(&raw, 4));
+            })
+            .min;
+            let t_dec = measure(3, || {
+                std::hint::black_box(c.decode(&enc, 4, raw.len()).unwrap());
+            })
+            .min;
+            println!(
+                "{:>10} {:>22} {:>7.3} {:>12.0} {:>12.0}",
+                fname,
+                format!("{c:?}"),
+                enc.len() as f64 / raw.len() as f64,
+                raw.len() as f64 / t_enc / 1e6,
+                raw.len() as f64 / t_dec / 1e6,
+            );
+        }
+        let t_ad = measure(3, || {
+            std::hint::black_box(encode_chunk_adaptive(Codec::ShuffleDeltaLz, &raw, 4));
+        })
+        .min;
+        let pick = encode_chunk_adaptive(Codec::ShuffleDeltaLz, &raw, 4);
+        println!(
+            "{:>10} {:>22} {:>7.3} {:>12.0} {:>12}",
+            fname,
+            "adaptive",
+            pick.stored_or(&raw).len() as f64 / raw.len() as f64,
+            raw.len() as f64 / t_ad / 1e6,
+            format!("pick={:?}", pick.codec),
+        );
+    }
+}
+
 fn io_breakdown() {
     println!("\n== snapshot write path breakdown (depth 2, 16 ranks) ==");
     let mut sc = Scenario::channel(2);
@@ -143,5 +198,6 @@ fn main() {
         Err(e) => println!("\n(pjrt skipped: {e})"),
     }
     step_breakdown();
+    codec_stage_sweep();
     io_breakdown();
 }

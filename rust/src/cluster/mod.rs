@@ -27,6 +27,41 @@
 
 use std::fmt;
 
+use crate::h5lite::codec::Codec;
+
+/// Per-aggregator chunk-codec throughput (bytes/s of raw input), one
+/// calibration entry per codec v2 pipeline class: the LZ-family pipelines
+/// (hash-chain matcher + filters) and the LZ + range-coder entropy
+/// pipelines, which trade ~2.5× the core time for the extra ratio.
+/// `f64::INFINITY` = not modelled (the local machine measures the real
+/// codec instead).
+#[derive(Clone, Copy, Debug)]
+pub struct CompressBw {
+    /// `Lz` / `ShuffleLz` / `ShuffleDeltaLz`.
+    pub lz: f64,
+    /// `LzEntropy` / `ShuffleLzEntropy` / `ShuffleDeltaLzEntropy`.
+    pub entropy: f64,
+}
+
+impl CompressBw {
+    /// The calibration entry pricing `codec`'s pipeline class.
+    pub fn for_codec(&self, codec: Codec) -> f64 {
+        if codec.has_entropy() {
+            self.entropy
+        } else {
+            self.lz
+        }
+    }
+
+    /// Real-measurement machines model no codec cost.
+    pub fn unmodelled() -> CompressBw {
+        CompressBw {
+            lz: f64::INFINITY,
+            entropy: f64::INFINITY,
+        }
+    }
+}
+
 /// What a checkpoint write looks like to the machine model.
 #[derive(Clone, Copy, Debug)]
 pub struct WriteWorkload {
@@ -153,9 +188,9 @@ pub struct Machine {
     /// buffering is off (independent I/O contention).
     pub indep_contention: f64,
     /// Per-aggregator chunk-codec throughput (bytes/s of raw input) when
-    /// per-chunk compression is enabled. `f64::INFINITY` = not modelled
-    /// (the local machine measures the real codec instead).
-    pub compress_bw: f64,
+    /// per-chunk compression is enabled, calibrated per codec v2 pipeline
+    /// class (see [`CompressBw`]).
+    pub compress_bw: CompressBw,
     /// Per-aggregator LOD-pyramid fold throughput (bytes/s of source cell
     /// data): a memory-bound 8:1 averaging pass. `f64::INFINITY` = not
     /// modelled (the local machine measures the real fold instead).
@@ -180,8 +215,13 @@ impl Machine {
             lock_cost: 0.8e-3,
             misalign_penalty: 0.07,
             indep_contention: 0.012,
-            compress_bw: 0.9e9, // one A2 core running the byte-LZ pipeline
-            fold_bw: 2.0e9,     // memory-bound 8:1 averaging on an A2 core
+            // one A2 core: hash-chain LZ pipeline, and the binary range
+            // coder at ~2.6× the core time per raw byte
+            compress_bw: CompressBw {
+                lz: 0.9e9,
+                entropy: 0.35e9,
+            },
+            fold_bw: 2.0e9, // memory-bound 8:1 averaging on an A2 core
         }
     }
 
@@ -202,8 +242,13 @@ impl Machine {
             lock_cost: 0.5e-3,
             misalign_penalty: 0.05,
             indep_contention: 0.004,
-            compress_bw: 2.5e9, // Sandy Bridge core
-            fold_bw: 6.0e9,     // Sandy Bridge core, streaming averages
+            // Sandy Bridge core: LZ pipeline, and the range coder at
+            // ~2.5× the per-byte cost
+            compress_bw: CompressBw {
+                lz: 2.5e9,
+                entropy: 1.0e9,
+            },
+            fold_bw: 6.0e9, // Sandy Bridge core, streaming averages
         }
     }
 
@@ -225,8 +270,8 @@ impl Machine {
             lock_cost: 0.0,
             misalign_penalty: 0.0,
             indep_contention: 0.0,
-            compress_bw: f64::INFINITY, // real codec timings, not modelled
-            fold_bw: f64::INFINITY,     // real fold timings, not modelled
+            compress_bw: CompressBw::unmodelled(), // real codec timings
+            fold_bw: f64::INFINITY,                // real fold timings
         }
     }
 
@@ -295,18 +340,22 @@ impl Machine {
 
     /// [`Machine::estimate_write`] for a chunk-compressed write: only
     /// `stored_bytes` hit the file system, but the aggregators also run the
-    /// codec over the full raw volume (`t_compress`). Compression is deeply
-    /// integrated in the fill phase (Jin et al. 2022), so the fill, codec
-    /// and stream stages pipeline — the exposed cost is their maximum, and
-    /// the *effective* bandwidth (raw bytes / seconds) rises when the data
-    /// compresses faster than the narrowest stage streams.
+    /// codec over the full raw volume (`t_compress`), priced through the
+    /// per-codec calibration entry for `codec`'s pipeline class (the
+    /// entropy stage costs ~2.5× the LZ pipeline per raw byte).
+    /// Compression is deeply integrated in the fill phase (Jin et al.
+    /// 2022), so the fill, codec and stream stages pipeline — the exposed
+    /// cost is their maximum, and the *effective* bandwidth (raw bytes /
+    /// seconds) rises when the data compresses faster than the narrowest
+    /// stage streams.
     pub fn estimate_write_compressed(
         &self,
         w: &WriteWorkload,
         tuning: &IoTuning,
         stored_bytes: u64,
+        codec: Codec,
     ) -> IoEstimate {
-        self.price_write(w, tuning, Some(stored_bytes))
+        self.price_write(w, tuning, Some((stored_bytes, self.compress_bw.for_codec(codec))))
     }
 
     /// Price the LOD-pyramid fold of `raw_bytes` of source cell data,
@@ -322,10 +371,10 @@ impl Machine {
         &self,
         w: &WriteWorkload,
         tuning: &IoTuning,
-        compressed: Option<u64>,
+        compressed: Option<(u64, f64)>,
     ) -> IoEstimate {
         let bytes = w.total_bytes as f64;
-        let stored_bytes = compressed.unwrap_or(w.total_bytes);
+        let stored_bytes = compressed.map(|(s, _)| s).unwrap_or(w.total_bytes);
         let stored = stored_bytes as f64;
         let mut e = IoEstimate {
             stored_bytes,
@@ -336,8 +385,8 @@ impl Machine {
             let aggs = self.aggregators(w.ranks) as f64;
             e.t_stream = stored / self.stream_bw(w.ranks);
             e.t_aggregate = bytes / (aggs * self.torus_node_bw);
-            if compressed.is_some() {
-                e.t_compress = bytes / (aggs * self.compress_bw);
+            if let Some((_, codec_bw)) = compressed {
+                e.t_compress = bytes / (aggs * codec_bw);
             }
             e.t_messages = w.ranks as f64 * w.n_datasets as f64 * self.msg_cost;
             e.t_wind = w.n_datasets as f64 * self.wind_per_dataset;
@@ -359,9 +408,9 @@ impl Machine {
             let eff = self.stream_bw(w.ranks)
                 / (1.0 + self.indep_contention * writers_per_io * w.ranks as f64 / 64.0);
             e.t_stream = stored / eff.max(1e6);
-            if compressed.is_some() {
+            if let Some((_, codec_bw)) = compressed {
                 // every rank compresses its own slabs before writing
-                e.t_compress = bytes / (w.ranks.max(1) as f64 * self.compress_bw);
+                e.t_compress = bytes / (w.ranks.max(1) as f64 * codec_bw);
             }
             e.t_wind = w.n_datasets as f64 * self.wind_per_dataset;
             e.t_messages = 0.0;
@@ -565,8 +614,12 @@ mod tests {
         let m = Machine::juqueen();
         let w = paper_depth6_workload(8192);
         let raw = m.estimate_write(&w, &IoTuning::default());
-        let comp =
-            m.estimate_write_compressed(&w, &IoTuning::default(), w.total_bytes * 2 / 5);
+        let comp = m.estimate_write_compressed(
+            &w,
+            &IoTuning::default(),
+            w.total_bytes * 2 / 5,
+            Codec::ShuffleDeltaLz,
+        );
         assert!(comp.bandwidth > raw.bandwidth, "{comp} vs {raw}");
         assert_eq!(comp.stored_bytes, w.total_bytes * 2 / 5);
         assert!(comp.t_compress > 0.0);
@@ -585,7 +638,8 @@ mod tests {
             ..IoTuning::default()
         };
         let raw = m.estimate_write(&w, &t);
-        let comp = m.estimate_write_compressed(&w, &t, w.total_bytes * 2 / 5);
+        let comp =
+            m.estimate_write_compressed(&w, &t, w.total_bytes * 2 / 5, Codec::ShuffleDeltaLz);
         assert!(comp.t_compress > 0.0);
         // serial: seconds includes both the (smaller) stream and the codec
         let expect = comp.t_stream + comp.t_compress + comp.t_wind;
@@ -614,8 +668,47 @@ mod tests {
         let m = Machine::juqueen();
         let w = paper_depth6_workload(8192);
         let raw = m.estimate_write(&w, &IoTuning::default());
-        let comp = m.estimate_write_compressed(&w, &IoTuning::default(), w.total_bytes);
+        let comp = m.estimate_write_compressed(
+            &w,
+            &IoTuning::default(),
+            w.total_bytes,
+            Codec::ShuffleDeltaLz,
+        );
         assert!(comp.seconds >= raw.seconds - 1e-12, "{comp} vs {raw}");
+    }
+
+    #[test]
+    fn entropy_codec_priced_slower_per_byte() {
+        // per-codec calibration: the entropy pipeline burns more aggregator
+        // core time per raw byte, so at equal stored bytes its t_compress
+        // must exceed the LZ pipeline's — and the bandwidth only drops when
+        // the codec becomes the pipeline bottleneck
+        let m = Machine::juqueen();
+        let w = paper_depth6_workload(8192);
+        let t = IoTuning::default();
+        let stored = w.total_bytes / 2;
+        let lz = m.estimate_write_compressed(&w, &t, stored, Codec::ShuffleDeltaLz);
+        let ent = m.estimate_write_compressed(&w, &t, stored, Codec::ShuffleDeltaLzEntropy);
+        assert!(ent.t_compress > 2.0 * lz.t_compress, "{ent} vs {lz}");
+        assert!(ent.seconds >= lz.seconds, "{ent} vs {lz}");
+        assert_eq!(
+            m.compress_bw.for_codec(Codec::LzEntropy),
+            m.compress_bw.entropy
+        );
+        assert_eq!(m.compress_bw.for_codec(Codec::Lz), m.compress_bw.lz);
+        // and when the entropy stage buys a better ratio, the effective
+        // bandwidth can still come out ahead despite the slower codec
+        let lz_ratio = m.estimate_write_compressed(&w, &t, w.total_bytes / 2, Codec::ShuffleDeltaLz);
+        let ent_ratio = m.estimate_write_compressed(
+            &w,
+            &t,
+            (w.total_bytes as f64 * 0.43) as u64,
+            Codec::ShuffleDeltaLzEntropy,
+        );
+        assert!(
+            ent_ratio.bandwidth > 0.0 && lz_ratio.bandwidth > 0.0,
+            "sanity"
+        );
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Little-endian binary encoding helpers for the h5lite metadata footer.
+//! Little-endian binary encoding helpers for the h5lite metadata footer,
+//! plus the chunk compression pipeline (codec v2).
 //!
 //! Everything is explicitly little-endian with an endianness tag in the
 //! superblock, mirroring HDF5's self-describing storage model: a file
@@ -166,22 +167,48 @@ pub fn bytes_to_f64s(b: &[u8]) -> Vec<f64> {
 }
 
 // ---------------------------------------------------------------------------
-// chunk compression (format v2)
+// chunk compression (format v2, codec v2 pipeline)
 // ---------------------------------------------------------------------------
 //
 // The per-chunk filter pipeline of the v2 chunked layout, mirroring HDF5's
-// filter stack (shuffle → deflate). Three building blocks:
+// filter stack (shuffle → deflate) with a zstd-class two-stage compressor:
 //
 // * **LZ** — a byte-oriented LZ77 with a 64 KiB window. Token stream:
 //   a control byte `c < 0x80` introduces a literal run of `c + 1` bytes;
 //   `c >= 0x80` is a match of length `(c & 0x7f) + 4` (4..=131) followed by a
 //   little-endian u16 distance (1..=65535). Overlapping copies are legal
-//   (RLE through distance < length).
+//   (RLE through distance < length). Since codec v2 the encoder is a
+//   greedy **hash-chain matcher** ([`lz_compress_chain`], depth
+//   [`LZ_CHAIN_DEPTH`], one-step-lazy): it emits the *same* token stream as
+//   the original single-candidate encoder ([`lz_compress`], kept as the
+//   calibration baseline), so every pre-codec-v2 file decodes unchanged.
 // * **shuffle** — HDF5's byte shuffle: transpose an array of n-byte elements
 //   into n byte planes, so the slowly-varying high bytes of f32/f64/u64
 //   values become long near-constant runs.
 // * **delta** — byte-wise wrapping first difference applied after the
 //   shuffle; near-constant planes become runs of zeros, which LZ collapses.
+// * **entropy** — an optional second stage over the LZ token stream: an
+//   adaptive binary range coder (LZMA-style, 11-bit probabilities) with
+//   separate order-0 bit-tree models for control bytes, distance bytes and
+//   literals (literals additionally contexted on the previous literal's top
+//   [`LIT_PREV_BITS`] bits — the zstd-style literal/length/offset stream
+//   split). Byte planes whose post-filter Shannon entropy is ≥ 7.2 bits
+//   (the incompressible low-mantissa planes of turbulent f32 fields)
+//   **bypass** the coder into a raw side buffer, so the range coder never
+//   wastes time (or expands) on white noise.
+//
+// ## Entropy frame layout
+//
+// ```text
+// [lz_len u32] [plane_mask u8] [side_len u32] [side bytes…] [rc bytes…]
+// ```
+//
+// `lz_len` is the size of the LZ token stream the range coder reproduces;
+// `plane_mask` bit `p` set means literals whose reconstructed position
+// falls in byte plane `p` live verbatim in the side buffer; the rc stream
+// is the range coder's output over everything else. The decoder walks
+// tokens, pulling each literal from the side buffer or the coder as the
+// mask dictates, then runs the normal LZ + filter inversion.
 
 /// Per-chunk codec of a v2 chunked dataset (stored in the metadata footer).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -195,7 +222,26 @@ pub enum Codec {
     /// Byte shuffle, byte-wise delta, then LZ — the default for the heavy
     /// f32 cell-data datasets.
     ShuffleDeltaLz,
+    /// LZ, then the range-coder entropy stage.
+    LzEntropy,
+    /// Shuffle, LZ, then the entropy stage.
+    ShuffleLzEntropy,
+    /// Shuffle, delta, LZ, then the entropy stage — what the adaptive
+    /// selector stores for cell-data chunks whose token stream is worth
+    /// entropy-coding.
+    ShuffleDeltaLzEntropy,
 }
+
+/// All codec variants, for sweeps in tests and benches.
+pub const ALL_CODECS: [Codec; 7] = [
+    Codec::Raw,
+    Codec::Lz,
+    Codec::ShuffleLz,
+    Codec::ShuffleDeltaLz,
+    Codec::LzEntropy,
+    Codec::ShuffleLzEntropy,
+    Codec::ShuffleDeltaLzEntropy,
+];
 
 impl Codec {
     pub fn code(self) -> u8 {
@@ -204,6 +250,9 @@ impl Codec {
             Codec::Lz => 1,
             Codec::ShuffleLz => 2,
             Codec::ShuffleDeltaLz => 3,
+            Codec::LzEntropy => 4,
+            Codec::ShuffleLzEntropy => 5,
+            Codec::ShuffleDeltaLzEntropy => 6,
         }
     }
 
@@ -213,37 +262,103 @@ impl Codec {
             1 => Codec::Lz,
             2 => Codec::ShuffleLz,
             3 => Codec::ShuffleDeltaLz,
+            4 => Codec::LzEntropy,
+            5 => Codec::ShuffleLzEntropy,
+            6 => Codec::ShuffleDeltaLzEntropy,
             _ => bail!("h5lite: unknown codec code {c}"),
         })
+    }
+
+    /// Does this pipeline end in the range-coder entropy stage?
+    pub fn has_entropy(self) -> bool {
+        matches!(
+            self,
+            Codec::LzEntropy | Codec::ShuffleLzEntropy | Codec::ShuffleDeltaLzEntropy
+        )
+    }
+
+    /// The same filter family with the entropy stage appended (`Raw` has no
+    /// token stream to entropy-code and maps to itself).
+    pub fn with_entropy(self) -> Codec {
+        match self {
+            Codec::Raw => Codec::Raw,
+            Codec::Lz | Codec::LzEntropy => Codec::LzEntropy,
+            Codec::ShuffleLz | Codec::ShuffleLzEntropy => Codec::ShuffleLzEntropy,
+            Codec::ShuffleDeltaLz | Codec::ShuffleDeltaLzEntropy => {
+                Codec::ShuffleDeltaLzEntropy
+            }
+        }
+    }
+
+    /// The same filter family without the entropy stage.
+    pub fn without_entropy(self) -> Codec {
+        match self {
+            Codec::Raw => Codec::Raw,
+            Codec::Lz | Codec::LzEntropy => Codec::Lz,
+            Codec::ShuffleLz | Codec::ShuffleLzEntropy => Codec::ShuffleLz,
+            Codec::ShuffleDeltaLz | Codec::ShuffleDeltaLzEntropy => Codec::ShuffleDeltaLz,
+        }
+    }
+
+    /// Apply this pipeline's byte filters (shuffle / delta) only.
+    fn filter(self, raw: &[u8], elem_size: usize) -> Vec<u8> {
+        match self.without_entropy() {
+            Codec::Raw | Codec::Lz => raw.to_vec(),
+            Codec::ShuffleLz => shuffle(raw, elem_size),
+            Codec::ShuffleDeltaLz => {
+                let mut s = shuffle(raw, elem_size);
+                delta_encode(&mut s);
+                s
+            }
+            _ => unreachable!("without_entropy() never returns an entropy codec"),
+        }
+    }
+
+    /// Invert [`Codec::filter`].
+    fn unfilter(self, mut filtered: Vec<u8>, elem_size: usize) -> Vec<u8> {
+        match self.without_entropy() {
+            Codec::Raw | Codec::Lz => filtered,
+            Codec::ShuffleLz => unshuffle(&filtered, elem_size),
+            Codec::ShuffleDeltaLz => {
+                delta_decode(&mut filtered);
+                unshuffle(&filtered, elem_size)
+            }
+            _ => unreachable!("without_entropy() never returns an entropy codec"),
+        }
     }
 
     /// Apply the filter pipeline to one raw chunk. `elem_size` is the
     /// dataset's element width (the shuffle stride).
     pub fn encode(self, raw: &[u8], elem_size: usize) -> Vec<u8> {
-        match self {
-            Codec::Raw => raw.to_vec(),
-            Codec::Lz => lz_compress(raw),
-            Codec::ShuffleLz => lz_compress(&shuffle(raw, elem_size)),
-            Codec::ShuffleDeltaLz => {
-                let mut s = shuffle(raw, elem_size);
-                delta_encode(&mut s);
-                lz_compress(&s)
-            }
+        if self == Codec::Raw {
+            return raw.to_vec();
         }
+        let filtered = self.filter(raw, elem_size);
+        let lz = lz_compress_chain(&filtered, LZ_CHAIN_DEPTH);
+        if !self.has_entropy() {
+            return lz;
+        }
+        let mask = bypass_mask(&filtered, elem_size, raw.len());
+        entropy_encode_tokens(&lz, elem_size, raw.len(), mask)
     }
 
     /// Invert [`Codec::encode`]. `raw_len` is the expected decoded length
     /// (known from the chunk index); a mismatch is a hard error.
     pub fn decode(self, stored: &[u8], elem_size: usize, raw_len: usize) -> Result<Vec<u8>> {
-        let out = match self {
-            Codec::Raw => stored.to_vec(),
-            Codec::Lz => lz_decompress(stored, raw_len)?,
-            Codec::ShuffleLz => unshuffle(&lz_decompress(stored, raw_len)?, elem_size),
-            Codec::ShuffleDeltaLz => {
-                let mut s = lz_decompress(stored, raw_len)?;
-                delta_decode(&mut s);
-                unshuffle(&s, elem_size)
-            }
+        let out = if self == Codec::Raw {
+            stored.to_vec()
+        } else {
+            let lz_stream;
+            let tokens = if self.has_entropy() {
+                lz_stream = entropy_decode_tokens(stored, elem_size, raw_len)?;
+                &lz_stream[..]
+            } else {
+                stored
+            };
+            // the filters are length-preserving, so the filtered buffer the
+            // LZ stream reproduces is exactly raw_len bytes
+            let filtered = lz_decompress(tokens, raw_len)?;
+            self.unfilter(filtered, elem_size)
         };
         if out.len() != raw_len {
             bail!(
@@ -258,10 +373,9 @@ impl Codec {
 /// Run the codec over one raw chunk and decide what to store: `Some(enc)`
 /// when the codec actually shrinks it, `None` when the raw bytes go to
 /// disk unfiltered (HDF5's per-chunk filter mask), plus the checksum of
-/// the raw bytes. Both chunk writers — [`crate::h5lite::H5File`]'s
-/// read-modify-write path and the pario aggregators — must share this so
-/// the store-smaller-of / checksum-over-raw format invariants cannot
-/// drift apart.
+/// the raw bytes. The fixed-codec helper behind
+/// [`encode_chunk_adaptive`] — kept public for calibration baselines and
+/// sweeps that must pin one variant.
 pub fn encode_chunk(codec: Codec, raw: &[u8], elem_size: usize) -> (Option<Vec<u8>>, u32) {
     let enc = codec.encode(raw, elem_size);
     let checksum = checksum32(raw);
@@ -270,6 +384,118 @@ pub fn encode_chunk(codec: Codec, raw: &[u8], elem_size: usize) -> (Option<Vec<u
     } else {
         (None, checksum)
     }
+}
+
+/// Outcome of the adaptive per-chunk encoder: what to store (`None` = the
+/// raw bytes), which codec produced it (`None` = stored raw — HDF5's
+/// per-chunk filter mask, recorded in the chunk index), and the checksum
+/// over the raw bytes.
+pub struct ChunkEncoding {
+    pub stored: Option<Vec<u8>>,
+    pub codec: Option<Codec>,
+    pub checksum: u32,
+}
+
+impl ChunkEncoding {
+    /// The bytes that hit the disk for this chunk.
+    pub fn stored_or<'a>(&'a self, raw: &'a [u8]) -> &'a [u8] {
+        self.stored.as_deref().unwrap_or(raw)
+    }
+}
+
+/// Adaptive per-chunk codec selection (codec v2): run `base`'s filters and
+/// the hash-chain LZ once, then decide between `Store` (raw bytes),
+/// the LZ stream, and the LZ + entropy frame. The entropy stage is gated
+/// by a **trial**: the range coder runs over the first
+/// [`TRIAL_RC_INPUT`] coder-input bytes of the token stream and the full
+/// cost is extrapolated — incompressible chunks never pay the full
+/// entropy stage, and chunks whose trial predicts no win skip it
+/// entirely. Both chunk writers — [`crate::h5lite::H5File`]'s
+/// read-modify-write path and the pario aggregators — share this, so the
+/// store-smaller-of / checksum-over-raw / per-chunk-codec-byte format
+/// invariants cannot drift apart.
+pub fn encode_chunk_adaptive(base: Codec, raw: &[u8], elem_size: usize) -> ChunkEncoding {
+    let checksum = checksum32(raw);
+    if base == Codec::Raw || raw.is_empty() {
+        return ChunkEncoding {
+            stored: None,
+            codec: None,
+            checksum,
+        };
+    }
+    let lz_codec = base.without_entropy();
+    let filtered = lz_codec.filter(raw, elem_size);
+    let lz = lz_compress_chain(&filtered, LZ_CHAIN_DEPTH);
+    let best_len = raw.len().min(lz.len());
+    // entropy trial: predict the frame size from a bounded prefix run
+    let mask = bypass_mask(&filtered, elem_size, raw.len());
+    let (rc_total, side_total) = rc_input_total(&lz, elem_size, raw.len(), mask);
+    if rc_total > 0 && rc_total <= TRIAL_RC_INPUT {
+        // the whole stream fits the trial budget: code it once and use the
+        // result directly — same acceptance gate as the extrapolated path
+        // (predicted == exact frame size here), no second encoding pass
+        let (rc, side, _) = entropy_encode_inner(&lz, elem_size, raw.len(), mask, None);
+        let frame_len = ENTROPY_HEADER_LEN + side.len() + rc.len();
+        if frame_len < best_len * 99 / 100 {
+            return ChunkEncoding {
+                stored: Some(entropy_frame(lz.len(), mask, &side, &rc)),
+                codec: Some(lz_codec.with_entropy()),
+                checksum,
+            };
+        }
+    } else if rc_total > 0 {
+        let (trial_out, trial_in) =
+            entropy_trial(&lz, elem_size, raw.len(), mask, TRIAL_RC_INPUT);
+        if trial_in > 0 {
+            let predicted =
+                ENTROPY_HEADER_LEN + side_total + trial_out * rc_total / trial_in;
+            if predicted < best_len * 99 / 100 {
+                let frame = entropy_encode_tokens(&lz, elem_size, raw.len(), mask);
+                if frame.len() < best_len {
+                    return ChunkEncoding {
+                        stored: Some(frame),
+                        codec: Some(lz_codec.with_entropy()),
+                        checksum,
+                    };
+                }
+            }
+        }
+    }
+    if lz.len() < raw.len() {
+        ChunkEncoding {
+            stored: Some(lz),
+            codec: Some(lz_codec),
+            checksum,
+        }
+    } else {
+        ChunkEncoding {
+            stored: None,
+            codec: None,
+            checksum,
+        }
+    }
+}
+
+/// Encode the per-chunk codec byte of the chunk index: `0` = stored raw,
+/// `1` = the dataset's declared codec (the only non-zero value pre-codec-v2
+/// files carry), `2 + code` = an explicitly recorded codec (what the
+/// adaptive selector writes when it picks a different pipeline than the
+/// dataset declares).
+pub fn chunk_codec_to_byte(ds_codec: Codec, applied: Option<Codec>) -> u8 {
+    match applied {
+        None => 0,
+        Some(c) if c == ds_codec => 1,
+        Some(c) => 2 + c.code(),
+    }
+}
+
+/// Invert [`chunk_codec_to_byte`].
+pub fn chunk_codec_from_byte(ds_codec: Codec, b: u8) -> Result<Option<Codec>> {
+    Ok(match b {
+        0 => None,
+        1 => Some(ds_codec),
+        b => Some(Codec::from_code(b - 2)?),
+    })
 }
 
 /// FNV-1a 32-bit checksum over a raw chunk (stored in the chunk index;
@@ -343,30 +569,37 @@ const LZ_MAX_MATCH: usize = 0x7f + LZ_MIN_MATCH;
 const LZ_MAX_DIST: usize = 0xffff;
 const LZ_HASH_BITS: u32 = 15;
 
+/// Hash-chain candidates examined per position by the codec-v2 match
+/// finder (the lazy peek at the next position runs a second walk).
+pub const LZ_CHAIN_DEPTH: usize = 16;
+
 #[inline]
 fn lz_hash(data: &[u8], pos: usize) -> usize {
     let v = u32::from_le_bytes([data[pos], data[pos + 1], data[pos + 2], data[pos + 3]]);
     (v.wrapping_mul(2654435761) >> (32 - LZ_HASH_BITS)) as usize
 }
 
-/// Compress `data` with the LZ token stream described in the module docs.
-/// Worst case (incompressible input) expands by `len / 128 + 1` control
-/// bytes — the chunk writer stores whichever of raw/compressed is smaller.
+fn lz_flush_literals(out: &mut Vec<u8>, data: &[u8], from: usize, to: usize) {
+    let mut s = from;
+    while s < to {
+        let run = (to - s).min(128);
+        out.push((run - 1) as u8);
+        out.extend_from_slice(&data[s..s + run]);
+        s += run;
+    }
+}
+
+/// Compress `data` with the LZ token stream described in the module docs,
+/// single hash-table candidate per position — the PR-1 encoder, kept
+/// verbatim as the calibration baseline the codec-v2 benches compare
+/// against. Worst case (incompressible input) expands by `len / 128 + 1`
+/// control bytes — the chunk writer stores whichever of raw/compressed is
+/// smaller.
 pub fn lz_compress(data: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(data.len() / 2 + 16);
     let mut table = vec![0u32; 1 << LZ_HASH_BITS]; // position + 1; 0 = empty
     let mut lit_start = 0usize;
     let mut pos = 0usize;
-
-    let flush_literals = |out: &mut Vec<u8>, from: usize, to: usize| {
-        let mut s = from;
-        while s < to {
-            let run = (to - s).min(128);
-            out.push((run - 1) as u8);
-            out.extend_from_slice(&data[s..s + run]);
-            s += run;
-        }
-    };
 
     while pos + LZ_MIN_MATCH <= data.len() {
         let h = lz_hash(data, pos);
@@ -388,7 +621,7 @@ pub fn lz_compress(data: &[u8]) -> Vec<u8> {
             }
         }
         if match_len > 0 {
-            flush_literals(&mut out, lit_start, pos);
+            lz_flush_literals(&mut out, data, lit_start, pos);
             let dist = pos - (cand - 1);
             out.push(0x80 | (match_len - LZ_MIN_MATCH) as u8);
             out.extend_from_slice(&(dist as u16).to_le_bytes());
@@ -406,7 +639,112 @@ pub fn lz_compress(data: &[u8]) -> Vec<u8> {
             pos += 1;
         }
     }
-    flush_literals(&mut out, lit_start, data.len());
+    lz_flush_literals(&mut out, data, lit_start, data.len());
+    out
+}
+
+/// Hash-chain state of [`lz_compress_chain`]: `head[hash]` is the most
+/// recent position + 1 with that hash, `prev[pos]` the previous one.
+struct LzChain {
+    head: Vec<u32>,
+    prev: Vec<u32>,
+}
+
+impl LzChain {
+    fn new(n: usize) -> LzChain {
+        LzChain {
+            head: vec![0u32; 1 << LZ_HASH_BITS],
+            prev: vec![0u32; n],
+        }
+    }
+
+    #[inline]
+    fn insert(&mut self, data: &[u8], p: usize) {
+        let h = lz_hash(data, p);
+        self.prev[p] = self.head[h];
+        self.head[h] = (p + 1) as u32;
+    }
+
+    /// Longest match for `p` among up to `depth` chain candidates inside
+    /// the window; nearest distance wins ties (the chain is ordered most
+    /// recent first and only a strictly longer match displaces the best).
+    fn find(&self, data: &[u8], p: usize, depth: usize) -> (usize, usize) {
+        let mut best_len = 0usize;
+        let mut best_dist = 0usize;
+        let mut cand = self.head[lz_hash(data, p)] as usize;
+        let mut tries = depth;
+        let max = (data.len() - p).min(LZ_MAX_MATCH);
+        while cand > 0 && tries > 0 {
+            let cpos = cand - 1;
+            let dist = p - cpos;
+            if dist > LZ_MAX_DIST {
+                break; // older candidates are only farther away
+            }
+            let mut l = 0usize;
+            while l < max && data[cpos + l] == data[p + l] {
+                l += 1;
+            }
+            if l > best_len {
+                best_len = l;
+                best_dist = dist;
+                if l >= max {
+                    break;
+                }
+            }
+            cand = self.prev[cpos] as usize;
+            tries -= 1;
+        }
+        (best_len, best_dist)
+    }
+}
+
+/// The codec-v2 match finder: hash-chain search (up to `depth` candidates
+/// per position, 64 KiB window) with a one-step-lazy heuristic — when the
+/// next position holds a strictly longer match, the current byte joins the
+/// literal run instead. Emits exactly the token stream [`lz_decompress`]
+/// reads, so files written by [`lz_compress`] and by this encoder are
+/// indistinguishable to every reader.
+pub fn lz_compress_chain(data: &[u8], depth: usize) -> Vec<u8> {
+    let n = data.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    let mut chain = LzChain::new(n);
+    let mut lit_start = 0usize;
+    let mut pos = 0usize;
+    // match the lazy peek already found for the current position — the
+    // chain state is identical (nothing was inserted in between), so on a
+    // deferral the next iteration reuses it instead of re-walking
+    let mut pending: Option<(usize, usize)> = None;
+    while pos + LZ_MIN_MATCH <= n {
+        let (blen, bdist) = match pending.take() {
+            Some(found) => found,
+            None => chain.find(data, pos, depth),
+        };
+        chain.insert(data, pos);
+        if blen < LZ_MIN_MATCH {
+            pos += 1;
+            continue;
+        }
+        if blen < LZ_MAX_MATCH && pos + 1 + LZ_MIN_MATCH <= n {
+            let peek = chain.find(data, pos + 1, depth);
+            if peek.0 > blen {
+                pending = Some(peek);
+                pos += 1; // lazy: defer, the longer match starts next byte
+                continue;
+            }
+        }
+        lz_flush_literals(&mut out, data, lit_start, pos);
+        out.push(0x80 | (blen - LZ_MIN_MATCH) as u8);
+        out.extend_from_slice(&(bdist as u16).to_le_bytes());
+        let end = pos + blen;
+        let mut p = pos + 1;
+        while p < end && p + LZ_MIN_MATCH <= n {
+            chain.insert(data, p);
+            p += 1;
+        }
+        pos = end;
+        lit_start = pos;
+    }
+    lz_flush_literals(&mut out, data, lit_start, n);
     out
 }
 
@@ -446,6 +784,406 @@ pub fn lz_decompress(comp: &[u8], raw_len: usize) -> Result<Vec<u8>> {
     }
     if out.len() != raw_len {
         bail!("h5lite: LZ stream yielded {} of {raw_len} bytes", out.len());
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// entropy stage: adaptive binary range coder over the LZ token stream
+// ---------------------------------------------------------------------------
+
+const RC_TOP: u32 = 1 << 24;
+const PROB_BITS: u32 = 11;
+const PROB_INIT: u16 = 1 << (PROB_BITS - 1);
+const PROB_MOVE: u32 = 5;
+/// Previous-literal context bits of the literal model.
+const LIT_PREV_BITS: u32 = 3;
+/// A byte plane bypasses the range coder when its post-filter Shannon
+/// entropy estimate reaches this many bits per byte (white noise is 8.0;
+/// structured planes of fluid fields sit well below 7).
+const BYPASS_ENTROPY_BITS: f64 = 7.2;
+/// Coder-input bytes the adaptive trial runs before extrapolating.
+const TRIAL_RC_INPUT: usize = 4096;
+/// `lz_len u32 | plane_mask u8 | side_len u32`.
+const ENTROPY_HEADER_LEN: usize = 9;
+
+/// LZMA-style carry-aware range encoder.
+struct RangeEncoder {
+    low: u64,
+    range: u32,
+    cache: u8,
+    cache_size: u64,
+    out: Vec<u8>,
+}
+
+impl RangeEncoder {
+    fn new() -> RangeEncoder {
+        RangeEncoder {
+            low: 0,
+            range: u32::MAX,
+            cache: 0,
+            cache_size: 1,
+            out: Vec::new(),
+        }
+    }
+
+    fn shift_low(&mut self) {
+        if (self.low as u32) < 0xFF00_0000 || (self.low >> 32) != 0 {
+            let carry = (self.low >> 32) as u8;
+            let mut b = self.cache;
+            loop {
+                self.out.push(b.wrapping_add(carry));
+                b = 0xFF;
+                self.cache_size -= 1;
+                if self.cache_size == 0 {
+                    break;
+                }
+            }
+            self.cache = (self.low >> 24) as u8;
+        }
+        self.cache_size += 1;
+        self.low = (((self.low as u32) << 8) as u64) & 0xFFFF_FFFF;
+    }
+
+    #[inline]
+    fn encode_bit(&mut self, prob: &mut u16, bit: u32) {
+        let bound = (self.range >> PROB_BITS) * (*prob as u32);
+        if bit == 0 {
+            self.range = bound;
+            *prob += ((1u16 << PROB_BITS) - *prob) >> PROB_MOVE;
+        } else {
+            self.low += bound as u64;
+            self.range -= bound;
+            *prob -= *prob >> PROB_MOVE;
+        }
+        while self.range < RC_TOP {
+            self.shift_low();
+            self.range <<= 8;
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.out
+    }
+}
+
+/// Matching range decoder; refuses to read past the stream end.
+struct RangeDecoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    range: u32,
+    code: u32,
+}
+
+impl<'a> RangeDecoder<'a> {
+    fn new(buf: &'a [u8]) -> Result<RangeDecoder<'a>> {
+        let mut d = RangeDecoder {
+            buf,
+            pos: 0,
+            range: u32::MAX,
+            code: 0,
+        };
+        for _ in 0..5 {
+            let b = d.next_byte()?;
+            d.code = (d.code << 8) | b as u32;
+        }
+        Ok(d)
+    }
+
+    #[inline]
+    fn next_byte(&mut self) -> Result<u8> {
+        if self.pos >= self.buf.len() {
+            bail!("h5lite: truncated range-coder stream");
+        }
+        let b = self.buf[self.pos];
+        self.pos += 1;
+        Ok(b)
+    }
+
+    #[inline]
+    fn decode_bit(&mut self, prob: &mut u16) -> Result<u32> {
+        let bound = (self.range >> PROB_BITS) * (*prob as u32);
+        let bit = if self.code < bound {
+            self.range = bound;
+            *prob += ((1u16 << PROB_BITS) - *prob) >> PROB_MOVE;
+            0
+        } else {
+            self.code -= bound;
+            self.range -= bound;
+            *prob -= *prob >> PROB_MOVE;
+            1
+        };
+        while self.range < RC_TOP {
+            self.range <<= 8;
+            let b = self.next_byte()?;
+            self.code = (self.code << 8) | b as u32;
+        }
+        Ok(bit)
+    }
+}
+
+/// Adaptive bit-tree models of the token streams: control bytes, distance
+/// bytes, and literals contexted on the previous literal's top bits.
+struct TokenModels {
+    ctrl: [u16; 256],
+    dlo: [u16; 256],
+    dhi: [u16; 256],
+    lit: [[u16; 256]; 1 << LIT_PREV_BITS],
+}
+
+impl TokenModels {
+    fn new() -> TokenModels {
+        TokenModels {
+            ctrl: [PROB_INIT; 256],
+            dlo: [PROB_INIT; 256],
+            dhi: [PROB_INIT; 256],
+            lit: [[PROB_INIT; 256]; 1 << LIT_PREV_BITS],
+        }
+    }
+}
+
+#[inline]
+fn rc_encode_byte(enc: &mut RangeEncoder, probs: &mut [u16; 256], b: u8) {
+    let mut ctx = 1usize;
+    for i in (0..8).rev() {
+        let bit = ((b >> i) & 1) as u32;
+        enc.encode_bit(&mut probs[ctx], bit);
+        ctx = (ctx << 1) | bit as usize;
+    }
+}
+
+#[inline]
+fn rc_decode_byte(dec: &mut RangeDecoder, probs: &mut [u16; 256]) -> Result<u8> {
+    let mut ctx = 1usize;
+    for _ in 0..8 {
+        let bit = dec.decode_bit(&mut probs[ctx])?;
+        ctx = (ctx << 1) | bit as usize;
+    }
+    Ok((ctx & 0xFF) as u8)
+}
+
+/// Byte plane of position `pos` in a shuffled buffer of `raw_len` bytes
+/// with `elem_size`-byte elements (the trailing unshuffled partial element
+/// folds into the last plane).
+#[inline]
+fn plane_of(pos: usize, plane_n: usize, es: usize) -> usize {
+    (pos / plane_n).min(es - 1)
+}
+
+/// Per-plane bypass mask: bit `p` set means plane `p`'s post-filter bytes
+/// are high-entropy (≥ [`BYPASS_ENTROPY_BITS`] bits by Shannon estimate)
+/// and go to the raw side buffer instead of the range coder.
+pub fn bypass_mask(filtered: &[u8], elem_size: usize, raw_len: usize) -> u8 {
+    let es = elem_size.clamp(1, 8);
+    let plane_n = (raw_len / es).max(1);
+    let mut hists = vec![[0u32; 256]; es];
+    for (pos, &b) in filtered.iter().enumerate() {
+        hists[plane_of(pos, plane_n, es)][b as usize] += 1;
+    }
+    let mut mask = 0u8;
+    for (p, h) in hists.iter().enumerate() {
+        let n: u64 = h.iter().map(|&c| c as u64).sum();
+        if n == 0 {
+            continue;
+        }
+        let mut e = 0.0f64;
+        for &c in h.iter() {
+            if c > 0 {
+                let pr = c as f64 / n as f64;
+                e -= pr * pr.log2();
+            }
+        }
+        if e >= BYPASS_ENTROPY_BITS {
+            mask |= 1 << p;
+        }
+    }
+    mask
+}
+
+/// Exact coder-input and side-buffer byte counts of the full token stream
+/// under `mask` — the cheap walk the adaptive trial extrapolates over.
+fn rc_input_total(lz: &[u8], elem_size: usize, raw_len: usize, mask: u8) -> (usize, usize) {
+    let es = elem_size.clamp(1, 8);
+    let plane_n = (raw_len / es).max(1);
+    let mut pos = 0usize;
+    let mut out_pos = 0usize;
+    let mut rc_in = 0usize;
+    let mut side = 0usize;
+    while pos < lz.len() {
+        let ctrl = lz[pos];
+        rc_in += 1;
+        pos += 1;
+        if ctrl < 0x80 {
+            let run = ctrl as usize + 1;
+            for _ in 0..run {
+                if (mask >> plane_of(out_pos, plane_n, es)) & 1 == 1 {
+                    side += 1;
+                } else {
+                    rc_in += 1;
+                }
+                out_pos += 1;
+            }
+            pos += run;
+        } else {
+            rc_in += 2;
+            pos += 2;
+            out_pos += (ctrl & 0x7f) as usize + LZ_MIN_MATCH;
+        }
+    }
+    (rc_in, side)
+}
+
+/// Range-code the token stream (shared by the full encoder and the trial:
+/// `trial_limit` stops after that many coder-input bytes). Returns
+/// `(rc bytes, side bytes, coder-input bytes consumed)`.
+fn entropy_encode_inner(
+    lz: &[u8],
+    elem_size: usize,
+    raw_len: usize,
+    mask: u8,
+    trial_limit: Option<usize>,
+) -> (Vec<u8>, Vec<u8>, usize) {
+    let es = elem_size.clamp(1, 8);
+    let plane_n = (raw_len / es).max(1);
+    let mut enc = RangeEncoder::new();
+    let mut models = TokenModels::new();
+    let mut side = Vec::new();
+    let mut pos = 0usize;
+    let mut out_pos = 0usize;
+    let mut prev_lit = 0u8;
+    let mut rc_in = 0usize;
+    while pos < lz.len() {
+        if let Some(limit) = trial_limit {
+            if rc_in >= limit {
+                break;
+            }
+        }
+        let ctrl = lz[pos];
+        rc_encode_byte(&mut enc, &mut models.ctrl, ctrl);
+        rc_in += 1;
+        pos += 1;
+        if ctrl < 0x80 {
+            let run = ctrl as usize + 1;
+            for &b in &lz[pos..pos + run] {
+                if (mask >> plane_of(out_pos, plane_n, es)) & 1 == 1 {
+                    side.push(b);
+                } else {
+                    let m = (prev_lit >> (8 - LIT_PREV_BITS)) as usize;
+                    rc_encode_byte(&mut enc, &mut models.lit[m], b);
+                    prev_lit = b;
+                    rc_in += 1;
+                }
+                out_pos += 1;
+            }
+            pos += run;
+        } else {
+            rc_encode_byte(&mut enc, &mut models.dlo, lz[pos]);
+            rc_encode_byte(&mut enc, &mut models.dhi, lz[pos + 1]);
+            rc_in += 2;
+            pos += 2;
+            out_pos += (ctrl & 0x7f) as usize + LZ_MIN_MATCH;
+        }
+    }
+    (enc.finish(), side, rc_in)
+}
+
+/// Assemble the entropy frame from its parts (see the module docs for the
+/// layout).
+fn entropy_frame(lz_len: usize, mask: u8, side: &[u8], rc: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(ENTROPY_HEADER_LEN + side.len() + rc.len());
+    out.extend_from_slice(&(lz_len as u32).to_le_bytes());
+    out.push(mask);
+    out.extend_from_slice(&(side.len() as u32).to_le_bytes());
+    out.extend_from_slice(side);
+    out.extend_from_slice(rc);
+    out
+}
+
+/// Full entropy frame over a token stream.
+pub fn entropy_encode_tokens(lz: &[u8], elem_size: usize, raw_len: usize, mask: u8) -> Vec<u8> {
+    let (rc, side, _) = entropy_encode_inner(lz, elem_size, raw_len, mask, None);
+    entropy_frame(lz.len(), mask, &side, &rc)
+}
+
+/// Trial run of the range coder over the first `limit` coder-input bytes:
+/// returns `(rc output bytes, coder-input bytes consumed)`.
+fn entropy_trial(
+    lz: &[u8],
+    elem_size: usize,
+    raw_len: usize,
+    mask: u8,
+    limit: usize,
+) -> (usize, usize) {
+    let (rc, _, rc_in) = entropy_encode_inner(lz, elem_size, raw_len, mask, Some(limit));
+    (rc.len(), rc_in)
+}
+
+/// Invert [`entropy_encode_tokens`]: reproduce the LZ token stream from an
+/// entropy frame. Robust against corrupt frames — every length is bounds-
+/// checked and the range decoder refuses to read past its stream.
+pub fn entropy_decode_tokens(frame: &[u8], elem_size: usize, raw_len: usize) -> Result<Vec<u8>> {
+    if frame.len() < ENTROPY_HEADER_LEN {
+        bail!("h5lite: entropy frame shorter than its header");
+    }
+    let lz_len = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+    let mask = frame[4];
+    let side_len = u32::from_le_bytes(frame[5..9].try_into().unwrap()) as usize;
+    // the LZ stream can exceed raw_len only by the literal-run control
+    // bytes — anything bigger is corruption, not a chunk
+    if lz_len > raw_len + raw_len / 128 + 16 {
+        bail!("h5lite: entropy frame claims an implausible token stream ({lz_len} bytes)");
+    }
+    if ENTROPY_HEADER_LEN + side_len > frame.len() {
+        bail!("h5lite: entropy frame side buffer out of bounds");
+    }
+    let side = &frame[ENTROPY_HEADER_LEN..ENTROPY_HEADER_LEN + side_len];
+    let mut dec = RangeDecoder::new(&frame[ENTROPY_HEADER_LEN + side_len..])?;
+    let es = elem_size.clamp(1, 8);
+    let plane_n = (raw_len / es).max(1);
+    let mut models = TokenModels::new();
+    let mut out = Vec::with_capacity(lz_len);
+    let mut out_pos = 0usize;
+    let mut prev_lit = 0u8;
+    let mut sp = 0usize;
+    while out.len() < lz_len {
+        let ctrl = rc_decode_byte(&mut dec, &mut models.ctrl)?;
+        out.push(ctrl);
+        if ctrl < 0x80 {
+            let run = ctrl as usize + 1;
+            if out.len() + run > lz_len {
+                bail!("h5lite: entropy frame literal run overruns the token stream");
+            }
+            for _ in 0..run {
+                let b = if (mask >> plane_of(out_pos, plane_n, es)) & 1 == 1 {
+                    if sp >= side.len() {
+                        bail!("h5lite: entropy frame side buffer underrun");
+                    }
+                    let b = side[sp];
+                    sp += 1;
+                    b
+                } else {
+                    let m = (prev_lit >> (8 - LIT_PREV_BITS)) as usize;
+                    let b = rc_decode_byte(&mut dec, &mut models.lit[m])?;
+                    prev_lit = b;
+                    b
+                };
+                out.push(b);
+                out_pos += 1;
+            }
+        } else {
+            if out.len() + 2 > lz_len {
+                bail!("h5lite: entropy frame match token overruns the token stream");
+            }
+            out.push(rc_decode_byte(&mut dec, &mut models.dlo)?);
+            out.push(rc_decode_byte(&mut dec, &mut models.dhi)?);
+            out_pos += (ctrl & 0x7f) as usize + LZ_MIN_MATCH;
+        }
+    }
+    if sp != side.len() {
+        bail!("h5lite: entropy frame side buffer has {} stray bytes", side.len() - sp);
     }
     Ok(out)
 }
@@ -521,6 +1259,8 @@ mod tests {
             let data = xorshift_bytes(n as u64 + 7, n);
             let comp = lz_compress(&data);
             assert_eq!(lz_decompress(&comp, n).unwrap(), data, "n={n}");
+            let chained = lz_compress_chain(&data, LZ_CHAIN_DEPTH);
+            assert_eq!(lz_decompress(&chained, n).unwrap(), data, "chain n={n}");
         }
     }
 
@@ -528,18 +1268,20 @@ mod tests {
     fn lz_crushes_repetitive_input() {
         // matches cap at 131 bytes / 3-byte token → ~43:1 on constant input
         let data = vec![42u8; 100_000];
-        let comp = lz_compress(&data);
-        assert!(comp.len() < data.len() / 40, "{} bytes", comp.len());
-        assert_eq!(lz_decompress(&comp, data.len()).unwrap(), data);
+        for comp in [lz_compress(&data), lz_compress_chain(&data, LZ_CHAIN_DEPTH)] {
+            assert!(comp.len() < data.len() / 40, "{} bytes", comp.len());
+            assert_eq!(lz_decompress(&comp, data.len()).unwrap(), data);
+        }
     }
 
     #[test]
     fn lz_overlapping_match_is_rle() {
         // "abcabcabc..." compresses via distance-3 overlapping matches
         let data: Vec<u8> = (0..3000).map(|i| b"abc"[i % 3]).collect();
-        let comp = lz_compress(&data);
-        assert!(comp.len() < 200, "{} bytes", comp.len());
-        assert_eq!(lz_decompress(&comp, data.len()).unwrap(), data);
+        for comp in [lz_compress(&data), lz_compress_chain(&data, LZ_CHAIN_DEPTH)] {
+            assert!(comp.len() < 200, "{} bytes", comp.len());
+            assert_eq!(lz_decompress(&comp, data.len()).unwrap(), data);
+        }
     }
 
     #[test]
@@ -549,6 +1291,24 @@ mod tests {
         assert!(lz_decompress(&comp, 255).is_err()); // wrong raw_len
         assert!(lz_decompress(&comp[..comp.len() - 1], 256).is_err()); // truncated
         assert!(lz_decompress(&[0x85, 0xff, 0xff], 100).is_err()); // bad distance
+    }
+
+    #[test]
+    fn chain_matcher_beats_single_candidate() {
+        // the hash chain revisits older, longer matches the one-slot table
+        // forgets; on smooth shuffled/delta'd f32 data it must strictly win
+        let floats: Vec<f32> = (0..8192).map(|i| (i as f32 * 1e-3).sin()).collect();
+        let mut sdl = shuffle(&f32s_to_bytes(&floats), 4);
+        delta_encode(&mut sdl);
+        let single = lz_compress(&sdl);
+        let chained = lz_compress_chain(&sdl, LZ_CHAIN_DEPTH);
+        assert!(
+            chained.len() < single.len(),
+            "chain {} !< single {}",
+            chained.len(),
+            single.len()
+        );
+        assert_eq!(lz_decompress(&chained, sdl.len()).unwrap(), sdl);
     }
 
     #[test]
@@ -576,20 +1336,99 @@ mod tests {
         assert_eq!(data, orig);
     }
 
+    // -------------------------------------------------------------------
+    // entropy stage
+    // -------------------------------------------------------------------
+
+    fn rc_only_roundtrip(data: &[u8]) {
+        // exercise the raw coder through a mask-0, literal-only stream
+        let mut lz = Vec::new();
+        let mut s = 0usize;
+        while s < data.len() {
+            let run = (data.len() - s).min(128);
+            lz.push((run - 1) as u8);
+            lz.extend_from_slice(&data[s..s + run]);
+            s += run;
+        }
+        let frame = entropy_encode_tokens(&lz, 1, data.len(), 0);
+        let back = entropy_decode_tokens(&frame, 1, data.len()).unwrap();
+        assert_eq!(back, lz);
+    }
+
+    #[test]
+    fn range_coder_roundtrips_byte_streams() {
+        rc_only_roundtrip(b"");
+        rc_only_roundtrip(b"A");
+        rc_only_roundtrip(&[0u8; 5000]);
+        rc_only_roundtrip(&xorshift_bytes(11, 8192));
+        let skewed: Vec<u8> = (0..4096).map(|i| if i % 7 == 0 { 3 } else { 0 }).collect();
+        rc_only_roundtrip(&skewed);
+    }
+
+    #[test]
+    fn entropy_frame_bypass_planes_roundtrip() {
+        // plane 1 bypassed: its literals ride the side buffer verbatim
+        let noise = xorshift_bytes(42, 2048);
+        let raw: Vec<u8> = (0..2048usize)
+            .flat_map(|i| [(i % 11) as u8, noise[i]])
+            .collect();
+        let filtered = shuffle(&raw, 2);
+        let lz = lz_compress_chain(&filtered, LZ_CHAIN_DEPTH);
+        let mask = bypass_mask(&filtered, 2, raw.len());
+        assert_eq!(mask & 0b10, 0b10, "the noise plane must bypass");
+        let frame = entropy_encode_tokens(&lz, 2, raw.len(), mask);
+        let back = entropy_decode_tokens(&frame, 2, raw.len()).unwrap();
+        assert_eq!(back, lz);
+        assert_eq!(lz_decompress(&back, filtered.len()).unwrap(), filtered);
+    }
+
+    #[test]
+    fn entropy_frame_rejects_corruption() {
+        let floats: Vec<f32> = (0..2048).map(|i| (i as f32 * 1e-3).sin()).collect();
+        let raw = f32s_to_bytes(&floats);
+        let enc = Codec::ShuffleDeltaLzEntropy.encode(&raw, 4);
+        assert!(Codec::ShuffleDeltaLzEntropy.decode(&enc, 4, raw.len()).is_ok());
+        // truncated frame
+        assert!(Codec::ShuffleDeltaLzEntropy
+            .decode(&enc[..enc.len() - 2], 4, raw.len())
+            .is_err());
+        assert!(Codec::ShuffleDeltaLzEntropy.decode(&enc[..4], 4, raw.len()).is_err());
+        // absurd token-stream length
+        let mut bad = enc.clone();
+        bad[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Codec::ShuffleDeltaLzEntropy.decode(&bad, 4, raw.len()).is_err());
+        // side buffer pointing past the frame
+        let mut bad = enc.clone();
+        bad[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Codec::ShuffleDeltaLzEntropy.decode(&bad, 4, raw.len()).is_err());
+    }
+
     #[test]
     fn codec_roundtrip_every_variant() {
         let floats: Vec<f32> = (0..2048).map(|i| (i as f32 * 0.001).sin()).collect();
         let raw = f32s_to_bytes(&floats);
-        for codec in [
-            Codec::Raw,
-            Codec::Lz,
-            Codec::ShuffleLz,
-            Codec::ShuffleDeltaLz,
-        ] {
+        for codec in ALL_CODECS {
             let enc = codec.encode(&raw, 4);
             let dec = codec.decode(&enc, 4, raw.len()).unwrap();
             assert_eq!(dec, raw, "{codec:?}");
         }
+    }
+
+    #[test]
+    fn entropy_stage_beats_plain_lz_on_smooth_f32() {
+        let floats: Vec<f32> = (0..8192)
+            .map(|i| 1.0 + ((i as f32) * 1e-3).sin() * 0.25)
+            .collect();
+        let raw = f32s_to_bytes(&floats);
+        let lz = Codec::ShuffleDeltaLz.encode(&raw, 4);
+        let ent = Codec::ShuffleDeltaLzEntropy.encode(&raw, 4);
+        assert!(
+            ent.len() < lz.len() && ent.len() * 3 < raw.len(),
+            "ent {} lz {} raw {}",
+            ent.len(),
+            lz.len(),
+            raw.len()
+        );
     }
 
     #[test]
@@ -624,6 +1463,64 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_selection_per_input_class() {
+        // smooth → entropy; pure noise → store; constant → compressed
+        let smooth =
+            f32s_to_bytes(&(0..8192).map(|i| 1.0 + ((i as f32) * 1e-3).sin() * 0.25).collect::<Vec<_>>());
+        let enc = encode_chunk_adaptive(Codec::ShuffleDeltaLz, &smooth, 4);
+        assert_eq!(enc.codec, Some(Codec::ShuffleDeltaLzEntropy), "smooth picks entropy");
+        assert!(enc.stored.as_ref().unwrap().len() * 2 < smooth.len());
+        assert_eq!(enc.checksum, checksum32(&smooth));
+        let dec = enc
+            .codec
+            .unwrap()
+            .decode(enc.stored.as_ref().unwrap(), 4, smooth.len())
+            .unwrap();
+        assert_eq!(dec, smooth);
+
+        let noise = xorshift_bytes(77, 32768);
+        let enc = encode_chunk_adaptive(Codec::Lz, &noise, 1);
+        assert!(enc.stored.is_none(), "noise must fall back to Store");
+        assert!(enc.codec.is_none());
+
+        let zeros = vec![0u8; 32768];
+        let enc = encode_chunk_adaptive(Codec::ShuffleDeltaLz, &zeros, 4);
+        assert!(enc.stored.as_ref().unwrap().len() < zeros.len() / 40);
+    }
+
+    #[test]
+    fn adaptive_on_raw_base_is_store() {
+        let data = xorshift_bytes(5, 512);
+        let enc = encode_chunk_adaptive(Codec::Raw, &data, 1);
+        assert!(enc.stored.is_none());
+        assert!(enc.codec.is_none());
+        assert_eq!(enc.checksum, checksum32(&data));
+    }
+
+    #[test]
+    fn chunk_codec_byte_mapping() {
+        // 0 = raw, 1 = dataset codec (the pre-codec-v2 "applied" bit),
+        // 2+code = explicit — and every combination round-trips
+        let ds = Codec::ShuffleDeltaLz;
+        assert_eq!(chunk_codec_to_byte(ds, None), 0);
+        assert_eq!(chunk_codec_to_byte(ds, Some(ds)), 1);
+        assert_eq!(
+            chunk_codec_to_byte(ds, Some(Codec::ShuffleDeltaLzEntropy)),
+            2 + Codec::ShuffleDeltaLzEntropy.code()
+        );
+        for applied in
+            [None, Some(Codec::Lz), Some(ds), Some(Codec::ShuffleDeltaLzEntropy)]
+        {
+            let b = chunk_codec_to_byte(ds, applied);
+            assert_eq!(chunk_codec_from_byte(ds, b).unwrap(), applied);
+        }
+        // a v2-era file's only values decode exactly as before
+        assert_eq!(chunk_codec_from_byte(ds, 0).unwrap(), None);
+        assert_eq!(chunk_codec_from_byte(ds, 1).unwrap(), Some(ds));
+        assert!(chunk_codec_from_byte(ds, 2 + 99).is_err());
+    }
+
+    #[test]
     fn checksum_distinguishes_buffers() {
         let a = checksum32(b"hello");
         let b = checksum32(b"hellp");
@@ -633,14 +1530,22 @@ mod tests {
 
     #[test]
     fn codec_codes_roundtrip() {
-        for codec in [
-            Codec::Raw,
-            Codec::Lz,
-            Codec::ShuffleLz,
-            Codec::ShuffleDeltaLz,
-        ] {
+        for codec in ALL_CODECS {
             assert_eq!(Codec::from_code(codec.code()).unwrap(), codec);
         }
         assert!(Codec::from_code(99).is_err());
+    }
+
+    #[test]
+    fn entropy_family_helpers() {
+        assert_eq!(Codec::Lz.with_entropy(), Codec::LzEntropy);
+        assert_eq!(Codec::ShuffleDeltaLzEntropy.without_entropy(), Codec::ShuffleDeltaLz);
+        assert_eq!(Codec::Raw.with_entropy(), Codec::Raw);
+        for codec in ALL_CODECS {
+            assert_eq!(codec.has_entropy(), codec != codec.without_entropy());
+            if codec != Codec::Raw {
+                assert!(codec.with_entropy().has_entropy());
+            }
+        }
     }
 }

@@ -41,7 +41,7 @@
 //!     layout v2 tag 1:    chunk_rows u64 | codec u8 | n_chunks u64
 //!                         | n_present u32
 //!                         | (chunk_no u64, offset u64, stored u64,
-//!                            raw u64, checksum u32, codec_applied u8)*
+//!                            raw u64, checksum u32, chunk_codec u8)*
 //!   groups:   n, then (name, group)*                      (recursive)
 //!   free list (v2.1 only, after the root group):
 //!             n u32, then (offset u64, len u64)*          offset-sorted,
@@ -50,9 +50,24 @@
 //!
 //! A v2.1 reader opens v1 and v2 files (v1 datasets decode as contiguous;
 //! v2 files simply carry no free-list record); a v1 file refuses chunked
-//! dataset creation. Chunk extents record whether the codec was actually
-//! applied (HDF5's per-chunk filter mask): incompressible chunks are stored
-//! raw rather than expanded.
+//! dataset creation. Chunk extents record *which* codec was actually
+//! applied — a generalisation of HDF5's per-chunk filter mask carried by
+//! the `chunk_codec` byte: `0` = stored raw (incompressible, never
+//! expanded), `1` = the dataset's declared codec (the only non-zero value
+//! pre-codec-v2 writers emitted, so old files decode unchanged), `2 + c` =
+//! explicitly codec `c`. The codec-v2 **adaptive selector**
+//! ([`codec::encode_chunk_adaptive`]) uses the explicit form to pick
+//! `Lz`-family / `LzEntropy`-family / `Store` per chunk: each writer
+//! trial-compresses the chunk's token stream and stores whichever of
+//! {raw, LZ, LZ + range-coder entropy frame} is smallest, so smooth chunks
+//! get the full two-stage pipeline while incompressible chunks never pay
+//! the entropy stage. The entropy frame layout and the bypass of
+//! high-entropy byte planes are documented in [`codec`]. (Deliberate
+//! forward-compat caveat: the on-disk version tag stays 3, so a
+//! pre-codec-v2 reader opens a file carrying explicit codec bytes and
+//! fails the affected chunk *reads* — unknown-codec or checksum errors —
+//! rather than refusing the open; shipping through the codec byte with no
+//! version bump is what keeps every pre-existing file byte-compatible.)
 //!
 //! ## Free-space management (format v2.1)
 //!
@@ -204,9 +219,11 @@ pub struct ChunkLoc {
     pub raw: u64,
     /// FNV-1a checksum of the raw bytes, verified on read.
     pub checksum: u32,
-    /// Whether the dataset codec was applied (false = stored raw because
-    /// the chunk was incompressible — HDF5's per-chunk filter mask).
-    pub codec_applied: bool,
+    /// The codec that produced the stored extent: `None` = stored raw
+    /// (incompressible — HDF5's per-chunk filter mask), `Some(c)` = decode
+    /// with `c`, which the adaptive selector may pick per chunk
+    /// independently of the dataset's declared codec.
+    pub codec: Option<Codec>,
 }
 
 /// Per-dataset chunk index: entry `i` locates chunk `i`, `None` = never
@@ -587,7 +604,7 @@ impl Group {
                         e.u64(loc.stored);
                         e.u64(loc.raw);
                         e.u32(loc.checksum);
-                        e.u8(loc.codec_applied as u8);
+                        e.u8(codec::chunk_codec_to_byte(*codec, loc.codec));
                     }
                 }
             }
@@ -655,7 +672,7 @@ impl Group {
                                 stored: d.u64()?,
                                 raw: d.u64()?,
                                 checksum: d.u32()?,
-                                codec_applied: d.u8()? != 0,
+                                codec: codec::chunk_codec_from_byte(codec, d.u8()?)?,
                             });
                         }
                         let id = *next_id;
@@ -1230,18 +1247,22 @@ impl H5File {
         raw: &[u8],
         codec: Codec,
     ) -> Result<()> {
-        let (enc, checksum) = codec::encode_chunk(codec, raw, ds.dtype.size());
-        let (stored, applied): (&[u8], bool) = match &enc {
-            Some(e) => (e, true),
-            None => (raw, false),
-        };
-        self.write_chunk_encoded(ds, chunk_no, stored, raw.len() as u64, checksum, applied)
+        let enc = codec::encode_chunk_adaptive(codec, raw, ds.dtype.size());
+        self.write_chunk_encoded(
+            ds,
+            chunk_no,
+            enc.stored_or(raw),
+            raw.len() as u64,
+            enc.checksum,
+            enc.codec,
+        )
     }
 
     /// Store one already-encoded chunk extent and record it in the chunk
     /// index. Used by the collective-buffering aggregators, which run the
-    /// codec on their own threads during the fill phase; `codec_applied =
-    /// false` stores the raw bytes (incompressible chunk).
+    /// codec on their own threads during the fill phase; `codec = None`
+    /// stores the raw bytes (incompressible chunk), `Some(c)` records the
+    /// pipeline the adaptive selector actually applied.
     pub fn write_chunk_encoded(
         &self,
         ds: &Dataset,
@@ -1249,7 +1270,7 @@ impl H5File {
         stored: &[u8],
         raw_len: u64,
         checksum: u32,
-        codec_applied: bool,
+        codec: Option<Codec>,
     ) -> Result<()> {
         let (_, _, id) = ds
             .chunk_meta()
@@ -1315,7 +1336,7 @@ impl H5File {
                 stored: new_len,
                 raw: raw_len,
                 checksum,
-                codec_applied,
+                codec,
             });
         }
         if let Some(old) = prev {
@@ -1381,7 +1402,7 @@ impl H5File {
     /// Read and decode one whole chunk (zeros if never written). Decoded
     /// chunks are held in the file's LRU cache for row-at-a-time readers.
     pub fn read_chunk_raw(&self, ds: &Dataset, chunk_no: u64) -> Result<Arc<Vec<u8>>> {
-        let (_, codec, id) = ds
+        let (_, _, id) = ds
             .chunk_meta()
             .ok_or_else(|| anyhow!("h5lite: read_chunk_raw on contiguous dataset"))?;
         if let Some(data) = self.cache.lock().unwrap().get(id, chunk_no) {
@@ -1397,13 +1418,17 @@ impl H5File {
                 self.file
                     .read_exact_at(&mut stored, loc.offset)
                     .context("h5lite: chunk extent read")?;
-                let raw = if loc.codec_applied {
-                    codec.decode(&stored, ds.dtype.size(), loc.raw as usize)?
-                } else {
-                    if stored.len() as u64 != loc.raw {
-                        bail!("h5lite: raw-stored chunk length mismatch");
+                // decode with the chunk's own recorded codec — the
+                // adaptive selector may store any pipeline of the family,
+                // not just the dataset's declared one
+                let raw = match loc.codec {
+                    Some(c) => c.decode(&stored, ds.dtype.size(), loc.raw as usize)?,
+                    None => {
+                        if stored.len() as u64 != loc.raw {
+                            bail!("h5lite: raw-stored chunk length mismatch");
+                        }
+                        stored
                     }
-                    stored
                 };
                 if raw.len() != expect_raw {
                     bail!(
@@ -1537,20 +1562,21 @@ impl H5File {
     /// probe (a cached copy would mask on-disk corruption that happened
     /// after the chunk was last read).
     fn check_chunk_on_disk(&self, ds: &Dataset, chunk_no: u64, loc: ChunkLoc) -> Result<()> {
-        let (_, codec, _) = ds
-            .chunk_meta()
-            .ok_or_else(|| anyhow!("h5lite: chunk check on contiguous dataset"))?;
+        if ds.chunk_meta().is_none() {
+            bail!("h5lite: chunk check on contiguous dataset");
+        }
         let mut stored = vec![0u8; loc.stored as usize];
         self.file
             .read_exact_at(&mut stored, loc.offset)
             .context("h5lite: chunk extent read")?;
-        let raw = if loc.codec_applied {
-            codec.decode(&stored, ds.dtype.size(), loc.raw as usize)?
-        } else {
-            if stored.len() as u64 != loc.raw {
-                bail!("h5lite: raw-stored chunk length mismatch");
+        let raw = match loc.codec {
+            Some(c) => c.decode(&stored, ds.dtype.size(), loc.raw as usize)?,
+            None => {
+                if stored.len() as u64 != loc.raw {
+                    bail!("h5lite: raw-stored chunk length mismatch");
+                }
+                stored
             }
-            stored
         };
         let expect_raw = (ds.chunk_rows_at(chunk_no) * ds.row_bytes()) as usize;
         if raw.len() != expect_raw {
@@ -1754,7 +1780,7 @@ fn copy_group_into(src: &H5File, g: &Group, dst: &mut H5File, path: &str) -> Res
                         &stored,
                         loc.raw,
                         loc.checksum,
-                        loc.codec_applied,
+                        loc.codec,
                     )?;
                 }
             }
@@ -2151,9 +2177,91 @@ mod tests {
             .collect();
         f.write_rows(&ds, 0, &noise).unwrap();
         let loc = f.chunk_loc(&ds, 0).unwrap().unwrap();
-        assert!(!loc.codec_applied);
+        assert!(loc.codec.is_none());
         assert_eq!(loc.stored, loc.raw);
         assert_eq!(f.read_rows(&ds, 0, 1024).unwrap(), noise);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn adaptive_chunk_codecs_persist_across_reopen() {
+        // one dataset, chunks of different character: the adaptive selector
+        // stores a different pipeline per chunk, the codec byte round-trips
+        // through the footer, and every chunk reads back bit-exact
+        use crate::util::synth;
+        let p = tmp("chunk_adaptive");
+        // rows are 1024 f32 = 4 KiB; chunk = 8 rows = 32 KiB
+        let smooth = synth::smooth_field(8 * 1024);
+        let noisy = synth::noise_bytes(0x1234_5678_9abc_def0, 8 * 4096);
+        let zeros = vec![0u8; 8 * 4096];
+        let mut raw = codec::f32s_to_bytes(&smooth);
+        raw.extend_from_slice(&noisy);
+        raw.extend_from_slice(&zeros);
+        {
+            let mut f = H5File::create(&p, 1).unwrap();
+            let ds = f
+                .create_dataset_chunked(
+                    "/g",
+                    "d",
+                    Dtype::F32,
+                    &[24, 1024],
+                    8,
+                    Codec::ShuffleDeltaLz,
+                )
+                .unwrap();
+            f.write_rows(&ds, 0, &raw).unwrap();
+            // smooth chunk takes the entropy pipeline, the noise chunk
+            // falls back to raw storage
+            let l0 = f.chunk_loc(&ds, 0).unwrap().unwrap();
+            assert_eq!(l0.codec, Some(Codec::ShuffleDeltaLzEntropy), "{l0:?}");
+            let l1 = f.chunk_loc(&ds, 1).unwrap().unwrap();
+            assert!(l1.codec.is_none(), "{l1:?}");
+            assert_eq!(l1.stored, l1.raw);
+            let l2 = f.chunk_loc(&ds, 2).unwrap().unwrap();
+            assert!(l2.codec.is_some());
+            assert!(l2.stored * 40 < l2.raw, "zeros must crush: {l2:?}");
+            f.commit().unwrap();
+        }
+        let f = H5File::open(&p).unwrap();
+        let ds = f.dataset("/g", "d").unwrap();
+        let l0 = f.chunk_loc(&ds, 0).unwrap().unwrap();
+        assert_eq!(
+            l0.codec,
+            Some(Codec::ShuffleDeltaLzEntropy),
+            "per-chunk codec byte lost across reopen"
+        );
+        assert!(f.chunk_loc(&ds, 1).unwrap().unwrap().codec.is_none());
+        assert_eq!(f.read_rows(&ds, 0, 24).unwrap(), raw);
+        assert!(f.verify().unwrap().ok());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn pre_codec_v2_chunk_byte_decodes_as_dataset_codec() {
+        // a chunk written with byte 1 (the only non-zero value pre-codec-v2
+        // writers ever emitted) must decode with the dataset's declared
+        // codec — write one the way the old encoder did and read it back
+        let p = tmp("chunk_byte_compat");
+        let data = smooth_rows(8, 16);
+        let raw = codec::f32s_to_bytes(&data);
+        {
+            let mut f = H5File::create(&p, 1).unwrap();
+            let ds = f
+                .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 16], 8, Codec::ShuffleDeltaLz)
+                .unwrap();
+            // fixed-codec encode (the PR-1 path) + explicit dataset codec:
+            // serialises as byte 1, exactly like an old file
+            let (enc, ck) = codec::encode_chunk(Codec::ShuffleDeltaLz, &raw, 4);
+            let stored = enc.unwrap();
+            f.write_chunk_encoded(&ds, 0, &stored, raw.len() as u64, ck, Some(Codec::ShuffleDeltaLz))
+                .unwrap();
+            f.commit().unwrap();
+        }
+        let f = H5File::open(&p).unwrap();
+        let ds = f.dataset("/g", "d").unwrap();
+        let loc = f.chunk_loc(&ds, 0).unwrap().unwrap();
+        assert_eq!(loc.codec, Some(Codec::ShuffleDeltaLz));
+        assert_eq!(f.read_rows(&ds, 0, 8).unwrap(), raw);
         std::fs::remove_file(&p).ok();
     }
 

@@ -34,10 +34,14 @@
 //! [`ParallelIo::collective_write`].
 //!
 //! The three heavy `*_cell_data` datasets (≈97 % of the snapshot volume)
-//! are stored **chunked + compressed** (h5lite format v2, shuffle/delta/LZ
-//! in [`CHUNK_ROWS`]-row chunks) unless [`SnapshotOptions::compress`] is
-//! off or the file is format v1; the topology datasets stay contiguous —
-//! they are tiny and the sliding window reads them row-at-a-time. Reads
+//! are stored **chunked + compressed** (h5lite format v2, the
+//! [`SnapshotOptions::cell_codec`] pipeline — shuffle/delta + hash-chain
+//! LZ by default — in [`CHUNK_ROWS`]-row chunks) unless
+//! [`SnapshotOptions::compress`] is off or the file is format v1; the
+//! topology datasets stay contiguous — they are tiny and the sliding
+//! window reads them row-at-a-time. The codec-v2 adaptive selector
+//! upgrades compressible chunks to the entropy pipeline and stores
+//! incompressible ones raw, per chunk, on the aggregator threads. Reads
 //! decompress transparently, so the restart/window paths are unchanged.
 
 pub mod vtk;
@@ -186,6 +190,11 @@ pub struct SnapshotOptions {
     pub temp: bool,
     pub cell_type: bool,
     pub compress: bool,
+    /// Base codec of the chunked cell-data datasets (the filter family the
+    /// per-chunk adaptive selector works within). The default
+    /// `ShuffleDeltaLz` is right for smooth-to-turbulent f32 fields;
+    /// benches pin other variants to isolate pipeline stages.
+    pub cell_codec: Codec,
     pub lod: bool,
 }
 
@@ -198,6 +207,7 @@ impl Default for SnapshotOptions {
             temp: true,
             cell_type: true,
             compress: true,
+            cell_codec: Codec::ShuffleDeltaLz,
             lod: true,
         }
     }
@@ -211,8 +221,7 @@ impl SnapshotOptions {
             previous: false,
             temp: false,
             cell_type: false,
-            compress: true,
-            lod: true,
+            ..SnapshotOptions::default()
         }
     }
 
@@ -282,7 +291,7 @@ pub fn write_snapshot_with(
                 Dtype::F32,
                 &[n, ROW_ELEMS as u64],
                 CHUNK_ROWS,
-                Codec::ShuffleDeltaLz,
+                opts.cell_codec,
             )
         } else {
             file.create_dataset(&group, name, Dtype::F32, &[n, ROW_ELEMS as u64])
@@ -983,11 +992,8 @@ mod tests {
         assert_eq!(SnapshotOptions::output_only().n_datasets(), 4);
         assert_eq!(
             SnapshotOptions {
-                previous: true,
                 temp: false,
-                cell_type: true,
-                compress: true,
-                lod: true,
+                ..SnapshotOptions::default()
             }
             .n_datasets(),
             6

@@ -16,7 +16,11 @@
 //!   slabs is re-bucketed per chunk, and each aggregator assembles,
 //!   compresses and writes its chunks *during* the fill phase — the codec
 //!   overlaps the streaming instead of preceding it, and only the
-//!   compressed extents hit the file;
+//!   compressed extents hit the file. Since codec v2 the aggregator runs
+//!   the **adaptive selector** ([`codec::encode_chunk_adaptive`]) on its
+//!   own thread: a trial-compression picks raw / LZ / LZ+entropy per
+//!   chunk, the selection is recorded in the per-chunk codec byte, and
+//!   [`IoReport::codec_chunks`] tallies the classes;
 //! * with collective buffering off, every rank issues its own small write
 //!   ops directly (the paper's "severe contention" baseline);
 //! * with **file locking** on, a global lock serialises every write op —
@@ -37,6 +41,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::cluster::{IoEstimate, IoTuning, Machine, WriteWorkload};
+use crate::h5lite::codec::Codec;
 use crate::h5lite::{codec, Dataset, Dtype, H5File, Layout};
 use crate::lod::PyramidBuilder;
 use crate::metrics::Metrics;
@@ -74,6 +79,9 @@ pub struct IoReport {
     /// CPU seconds the aggregators spent in the chunk codec (summed across
     /// threads; overlapped with streaming in the real run).
     pub compress_seconds: f64,
+    /// Chunks per storage class the adaptive selector picked this write:
+    /// stored raw, LZ-family, or LZ + entropy frame (codec v2).
+    pub codec_chunks: CodecChunks,
     /// CPU seconds the aggregators spent folding assembled source rows
     /// into the LOD pyramid's accumulation buffers (summed across threads;
     /// overlapped with streaming, like the codec). Zero when the write
@@ -81,6 +89,66 @@ pub struct IoReport {
     pub lod_seconds: f64,
     /// Modelled cost on the target machine.
     pub modelled: IoEstimate,
+}
+
+/// Per-write tally of the adaptive codec's per-chunk selections
+/// ([`codec::encode_chunk_adaptive`]): how many chunks landed in each
+/// storage class. `store` chunks were incompressible and hit the file raw.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CodecChunks {
+    pub store: u64,
+    pub lz: u64,
+    pub entropy: u64,
+}
+
+/// Selection tally plus raw-byte attribution per actual codec code, used
+/// to pick the *dominant* codec the machine model prices (`compress_bw`
+/// is per-codec since codec v2). All-atomic, like the neighbouring
+/// stored/ops counters — the aggregator threads record their selections
+/// without a serialization point.
+#[derive(Default)]
+struct CodecTally {
+    store: AtomicU64,
+    lz: AtomicU64,
+    entropy: AtomicU64,
+    /// Raw bytes encoded per codec code (index = `Codec::code()`).
+    raw_by_code: [AtomicU64; 7],
+}
+
+impl CodecTally {
+    fn record(&self, applied: Option<Codec>, raw_bytes: u64) {
+        match applied {
+            None => self.store.fetch_add(1, Ordering::Relaxed),
+            Some(c) if c.has_entropy() => self.entropy.fetch_add(1, Ordering::Relaxed),
+            Some(_) => self.lz.fetch_add(1, Ordering::Relaxed),
+        };
+        if let Some(c) = applied {
+            self.raw_by_code[c.code() as usize].fetch_add(raw_bytes, Ordering::Relaxed);
+        }
+    }
+
+    fn chunks(&self) -> CodecChunks {
+        CodecChunks {
+            store: self.store.load(Ordering::Relaxed),
+            lz: self.lz.load(Ordering::Relaxed),
+            entropy: self.entropy.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The codec that encoded the most raw bytes this write (`None` when
+    /// every chunk stored raw — or no chunks moved at all).
+    fn dominant(&self) -> Option<Codec> {
+        let (code, bytes) = self
+            .raw_by_code
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (i, b.load(Ordering::Relaxed)))
+            .max_by_key(|&(_, b)| b)?;
+        if bytes == 0 {
+            return None;
+        }
+        Codec::from_code(code as u8).ok()
+    }
 }
 
 /// Fold sink for the multi-resolution pyramid ([`crate::lod`]): when a
@@ -248,6 +316,7 @@ impl ParallelIo {
         let ops_atomic = AtomicU64::new(0);
         let compress_ns = AtomicU64::new(0);
         let lod_ns = AtomicU64::new(0);
+        let tally = CodecTally::default();
         let errors = Mutex::new(Vec::new());
         parallel_for(aggs as usize, |a| {
             for op in &merged[a] {
@@ -282,9 +351,10 @@ impl ParallelIo {
             }
             for job in &chunk_by_agg[a] {
                 match self.write_chunk_job(file, job, &compress_ns, lod, &lod_ns) {
-                    Ok(stored) => {
+                    Ok((stored, raw_bytes, applied)) => {
                         ops_atomic.fetch_add(1, Ordering::Relaxed);
                         stored_atomic.fetch_add(stored, Ordering::Relaxed);
+                        tally.record(applied, raw_bytes);
                     }
                     Err(e) => errors.lock().unwrap().push(e),
                 }
@@ -299,6 +369,7 @@ impl ParallelIo {
         let compress_seconds = compress_ns.load(Ordering::Relaxed) as f64 / 1e9;
         let lod_seconds = lod_ns.load(Ordering::Relaxed) as f64 / 1e9;
         let real_seconds = t0.elapsed().as_secs_f64().max(1e-9);
+        let codec_chunks = tally.chunks();
         let workload = WriteWorkload {
             ranks: self.n_ranks,
             total_bytes: bytes,
@@ -307,10 +378,15 @@ impl ParallelIo {
         };
         // price the compressed path only when compression actually shrank
         // the volume; RMW amplification (stored > raw on partial-chunk
-        // writes) is not a compression win and the model has no term for it
+        // writes) is not a compression win and the model has no term for
+        // it. The model's per-codec compress_bw is looked up through the
+        // codec that encoded the most raw bytes this write — the adaptive
+        // selector can mix pipelines within one write, and the dominant
+        // one is what the aggregator cores actually spent their time in.
+        let dominant = tally.dominant().unwrap_or(Codec::ShuffleDeltaLz);
         let mut modelled = if stored_bytes < bytes {
             self.machine
-                .estimate_write_compressed(&workload, &self.tuning, stored_bytes)
+                .estimate_write_compressed(&workload, &self.tuning, stored_bytes, dominant)
         } else {
             self.machine.estimate_write(&workload, &self.tuning)
         };
@@ -359,6 +435,9 @@ impl ParallelIo {
         self.metrics.add("pario.bytes_reclaimed", reclaimed_bytes);
         self.metrics.add("pario.write_ops", write_ops);
         self.metrics.add("pario.chunks", jobs.len() as u64);
+        self.metrics.add("pario.chunks_store", codec_chunks.store);
+        self.metrics.add("pario.chunks_lz", codec_chunks.lz);
+        self.metrics.add("pario.chunks_entropy", codec_chunks.entropy);
         self.metrics
             .add_ns("pario.compress", compress_ns.load(Ordering::Relaxed));
         if let Some(sink) = lod {
@@ -374,13 +453,19 @@ impl ParallelIo {
             write_ops,
             reclaimed_bytes,
             compress_seconds,
+            codec_chunks,
             lod_seconds,
             modelled,
         })
     }
 
     /// Assemble, compress and store one chunk; returns the stored extent
-    /// size. Runs on an aggregator thread.
+    /// size, the raw bytes encoded, and the codec the adaptive selector
+    /// applied (`None` = stored raw). Runs on an aggregator thread — the
+    /// trial-compression and the selection happen right here, preserving
+    /// the lock-free disjoint-write discipline (each chunk belongs to
+    /// exactly one aggregator; nothing below takes a lock the contiguous
+    /// path does not).
     fn write_chunk_job(
         &self,
         file: &H5File,
@@ -388,7 +473,7 @@ impl ParallelIo {
         compress_ns: &AtomicU64,
         lod: Option<&LodSink>,
         lod_ns: &AtomicU64,
-    ) -> Result<u64> {
+    ) -> Result<(u64, u64, Option<Codec>)> {
         let rb = job.ds.row_bytes();
         let rows_here = job.ds.chunk_rows_at(job.chunk_no);
         let raw_len = (rows_here * rb) as usize;
@@ -416,20 +501,24 @@ impl ParallelIo {
             }
         }
         let tc = Instant::now();
-        let (enc, checksum) = codec::encode_chunk(chunk_codec, &raw, job.ds.dtype.size());
+        let enc = codec::encode_chunk_adaptive(chunk_codec, &raw, job.ds.dtype.size());
         compress_ns.fetch_add(tc.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        let (stored, applied): (&[u8], bool) = match &enc {
-            Some(e) => (e, true),
-            None => (&raw, false),
-        };
+        let stored = enc.stored_or(&raw);
         let guard = if self.tuning.file_locking {
             Some(self.lock.lock().unwrap())
         } else {
             None
         };
-        file.write_chunk_encoded(job.ds, job.chunk_no, stored, raw.len() as u64, checksum, applied)?;
+        file.write_chunk_encoded(
+            job.ds,
+            job.chunk_no,
+            stored,
+            raw.len() as u64,
+            enc.checksum,
+            enc.codec,
+        )?;
         drop(guard);
-        Ok(stored.len() as u64)
+        Ok((stored.len() as u64, raw.len() as u64, enc.codec))
     }
 }
 
@@ -957,6 +1046,55 @@ mod tests {
         builder.finish().unwrap();
         let (_, cells) = builder.level_data(1).unwrap();
         assert!(cells.iter().all(|&x| x == 5.0), "uniform leaves fold to 5.0");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn adaptive_codec_classes_accounted_per_write() {
+        // a collective write whose chunks differ in character: the report
+        // and the metrics must attribute every chunk to its storage class
+        let p = tmp("codec_classes");
+        let mut f = H5File::create(&p, 1).unwrap();
+        // 4 chunks of 8 rows × 1024 f32
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[32, 1024], 8, Codec::ShuffleDeltaLz)
+            .unwrap();
+        let mut s = 0xDEAD_BEEFu64;
+        let mut noise_f32 = || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            // every byte plane random — truly incompressible bit patterns
+            f32::from_bits((s >> 16) as u32)
+        };
+        // ranks 0/1 carry smooth rows (chunks 0-1), ranks 2/3 noise
+        let bufs: Vec<Vec<u8>> = (0..4u64)
+            .map(|r| {
+                let v: Vec<f32> = (0..8 * 1024)
+                    .map(|i| {
+                        if r < 2 {
+                            1.0 + ((r as usize * 8192 + i) as f32 * 1e-3).sin() * 0.25
+                        } else {
+                            noise_f32()
+                        }
+                    })
+                    .collect();
+                codec::f32s_to_bytes(&v)
+            })
+            .collect();
+        let writes = make_writes(&ds, &bufs, 8);
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 4);
+        let rep = io.collective_write(&f, &writes, 1, 32).unwrap();
+        let c = rep.codec_chunks;
+        assert_eq!(c.store + c.lz + c.entropy, 4, "{c:?}");
+        assert!(c.entropy >= 1, "smooth chunks must take the entropy stage: {c:?}");
+        assert!(c.store >= 1, "noise chunks must store raw: {c:?}");
+        assert_eq!(io.metrics.counter("pario.chunks_store"), c.store);
+        assert_eq!(io.metrics.counter("pario.chunks_lz"), c.lz);
+        assert_eq!(io.metrics.counter("pario.chunks_entropy"), c.entropy);
+        // round trip through the mixed per-chunk codecs
+        let back = f.read_rows(&ds, 0, 32).unwrap();
+        assert_eq!(back, bufs.concat());
         std::fs::remove_file(&p).ok();
     }
 

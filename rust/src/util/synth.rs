@@ -1,0 +1,104 @@
+//! Synthetic f32 field generators for codec benches and tests.
+//!
+//! Three canonical inputs spanning the compressibility range of real cell
+//! data, all fully deterministic (fixed seeds, no wall-clock anywhere):
+//!
+//! * [`smooth_field`] — a slow sine, the best case for the shuffle/delta
+//!   pipeline (near-constant exponent and high-mantissa planes);
+//! * [`turbulent_field`] — a band-limited multi-mode field with a
+//!   Kolmogorov-like spectrum: every mode resolved on the grid
+//!   (frequencies below Nyquist), amplitudes `∝ w^(-5/6)` (energy
+//!   `∝ k^(-5/3)`), deterministic LCG phases. Rough at sample scale —
+//!   the low-mantissa byte planes are effectively incompressible, which
+//!   is exactly what resolved turbulence looks like to a lossless codec;
+//! * [`noise_bytes`] — xorshift bytes, incompressible by construction
+//!   (the adaptive selector must fall back to `Store`).
+
+/// Smooth cell data: `1.0 + 0.25·sin(i/1000)`.
+pub fn smooth_field(n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| 1.0 + (i as f32 * 1e-3).sin() * 0.25)
+        .collect()
+}
+
+/// Default phase seed of [`turbulent_field`] (π's mantissa bits).
+pub const TURB_SEED: u64 = 0x243F_6A88_85A3_08D3;
+
+/// Band-limited Kolmogorov-spectrum field: 24 modes, geometric
+/// frequencies in `[0.02, 1.2]` rad/sample, amplitude `w^(-5/6)`
+/// normalised to an RMS of `scale = 0.4` around a mean of 2.0. `seed`
+/// drives the LCG phase sequence.
+pub fn turbulent_field(n: usize, seed: u64) -> Vec<f32> {
+    const MODES: usize = 24;
+    const W_MIN: f64 = 0.02;
+    const W_MAX: f64 = 1.2;
+    const SCALE: f64 = 0.4;
+    let r = (W_MAX / W_MIN).powf(1.0 / (MODES - 1) as f64);
+    let amps: Vec<f64> = (0..MODES)
+        .map(|m| (W_MIN * r.powi(m as i32)).powf(-5.0 / 6.0))
+        .collect();
+    let norm = (amps.iter().map(|a| a * a).sum::<f64>() / 2.0).sqrt();
+    let mut phase = seed;
+    let modes: Vec<(f64, f64, f64)> = (0..MODES)
+        .map(|m| {
+            phase = phase
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let ph = (phase >> 11) as f64 / (1u64 << 53) as f64 * std::f64::consts::TAU;
+            let w = W_MIN * r.powi(m as i32);
+            (amps[m] / norm * SCALE, w, ph)
+        })
+        .collect();
+    (0..n)
+        .map(|i| {
+            let x = i as f64;
+            let f: f64 = modes.iter().map(|&(a, w, ph)| a * (x * w + ph).sin()).sum();
+            (2.0 + f) as f32
+        })
+        .collect()
+}
+
+/// Deterministic xorshift64 byte noise (the corpus' incompressible leg).
+pub fn noise_bytes(seed: u64, n: usize) -> Vec<u8> {
+    let mut s = seed | 1;
+    (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s >> 24) as u8
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fields_are_deterministic_and_bounded() {
+        let a = turbulent_field(4096, TURB_SEED);
+        let b = turbulent_field(4096, TURB_SEED);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&x| x > 0.0 && x < 4.5), "amplitude bound");
+        let c = turbulent_field(4096, 99);
+        assert_ne!(a, c, "seed must matter");
+        assert_eq!(smooth_field(8)[0], 1.0);
+        assert_eq!(noise_bytes(3, 16), noise_bytes(3, 16));
+    }
+
+    #[test]
+    fn turbulent_field_is_rough_but_not_noise() {
+        // sample-to-sample deltas must be non-trivial (unlike the smooth
+        // field) yet bounded (unlike white noise) — the property the codec
+        // benches rely on
+        let f = turbulent_field(8192, TURB_SEED);
+        let mean_abs_delta: f32 = f
+            .windows(2)
+            .map(|w| (w[1] - w[0]).abs())
+            .sum::<f32>()
+            / (f.len() - 1) as f32;
+        assert!(mean_abs_delta > 0.01, "too smooth: {mean_abs_delta}");
+        assert!(mean_abs_delta < 1.0, "too rough: {mean_abs_delta}");
+    }
+}

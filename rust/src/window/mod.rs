@@ -26,9 +26,14 @@
 //! UID→row map, prune by `bounding box`, stop when descending would burst
 //! the budget, and read *only the selected rows* of `current_cell_data`.
 //! Chunk-compressed snapshots (h5lite format v2) decompress transparently
-//! inside [`H5File::read_rows`]; the file's LRU chunk cache keeps the
+//! inside [`H5File::read_rows`]: each chunk's recorded codec byte selects
+//! its own decode pipeline — codec-v2 files mix raw, LZ and LZ+entropy
+//! extents within one dataset (the adaptive per-chunk selector), and the
+//! window never has to know. The file's LRU chunk cache keeps the
 //! row-at-a-time traversal from re-inflating the same chunk per row, even
-//! when a multi-grid query straddles chunk boundaries.
+//! when a multi-grid query straddles chunk boundaries — with the entropy
+//! stage in play the cache matters more, since re-inflating a chunk now
+//! costs a range-coder pass on top of the LZ copy loop.
 //!
 //! ## Byte-budgeted queries over the LOD pyramid
 //!

@@ -235,15 +235,10 @@ fn prop_h5lite_roundtrip_random_layout() {
 /// boundaries (0, 1, chunk−1, chunk, chunk+1 rows' worth of bytes).
 #[test]
 fn prop_codec_identity_across_chunk_boundaries() {
-    use mpfluid::h5lite::codec::Codec;
+    use mpfluid::h5lite::codec::ALL_CODECS;
     const CHUNK_ROWS: u64 = 8;
     check("codec identity", 0xB1, |rng| {
-        let codec = [
-            Codec::Raw,
-            Codec::Lz,
-            Codec::ShuffleLz,
-            Codec::ShuffleDeltaLz,
-        ][rng.below(4) as usize];
+        let codec = ALL_CODECS[rng.below(ALL_CODECS.len() as u64) as usize];
         let row_elems = 1 + rng.below(24) as usize;
         let rows = [0, 1, CHUNK_ROWS - 1, CHUNK_ROWS, CHUNK_ROWS + 1][rng.below(5) as usize];
         let n = rows as usize * row_elems;
@@ -268,6 +263,48 @@ fn prop_codec_identity_across_chunk_boundaries() {
     });
 }
 
+/// Adaptive-selector invariant (codec v2): for any input class and base
+/// codec, the chosen encoding round-trips bit-exact, never expands the
+/// chunk, keeps the raw checksum, and its recorded codec byte is
+/// consistent with what was stored (`Store` ⇔ no codec).
+#[test]
+fn prop_adaptive_selection_never_expands() {
+    use mpfluid::h5lite::codec::{checksum32, encode_chunk_adaptive, Codec};
+    check("adaptive never expands", 0xB7, |rng| {
+        let n = 1 + rng.below(16384) as usize;
+        let raw: Vec<u8> = match rng.below(4) {
+            0 => (0..n).map(|_| (rng.next_u64() >> 24) as u8).collect(),
+            1 => vec![(rng.next_u64() & 0xFF) as u8; n],
+            2 => {
+                let mut v = vec![0.0f32; n / 4 + 1];
+                rng.fill_f32(&mut v, 0.9, 1.1);
+                let mut b = codec::f32s_to_bytes(&v);
+                b.truncate(n);
+                b
+            }
+            _ => (0..n).map(|i| (i / 7) as u8).collect(),
+        };
+        let base =
+            [Codec::Lz, Codec::ShuffleLz, Codec::ShuffleDeltaLz][rng.below(3) as usize];
+        let es = [1usize, 4, 8][rng.below(3) as usize];
+        let enc = encode_chunk_adaptive(base, &raw, es);
+        assert_eq!(enc.checksum, checksum32(&raw));
+        match (&enc.stored, enc.codec) {
+            (Some(stored), Some(applied)) => {
+                assert!(stored.len() < raw.len(), "{applied:?} expanded the chunk");
+                assert_eq!(
+                    applied.decode(stored, es, raw.len()).unwrap(),
+                    raw,
+                    "{applied:?} from base {base:?}"
+                );
+                assert_eq!(applied.without_entropy(), base.without_entropy());
+            }
+            (None, None) => {}
+            _ => panic!("stored/codec out of sync"),
+        }
+    });
+}
+
 /// Chunked storage invariant: whatever rows land through write_rows, in
 /// whatever order and chunk alignment, read_rows returns them bit-exact —
 /// and matches a plain contiguous dataset fed the same writes.
@@ -283,8 +320,13 @@ fn prop_chunked_dataset_matches_contiguous() {
         let rows = 1 + rng.below(40);
         let cols = 1 + rng.below(8);
         let chunk_rows = 1 + rng.below(12);
-        let codec_pick =
-            [Codec::Lz, Codec::ShuffleLz, Codec::ShuffleDeltaLz][rng.below(3) as usize];
+        let codec_pick = [
+            Codec::Lz,
+            Codec::ShuffleLz,
+            Codec::ShuffleDeltaLz,
+            Codec::LzEntropy,
+            Codec::ShuffleDeltaLzEntropy,
+        ][rng.below(5) as usize];
         let mut f = H5File::create(&path, 1).unwrap();
         let dc = f
             .create_dataset("/g", "plain", Dtype::U64, &[rows, cols])
@@ -537,7 +579,7 @@ fn prop_lod_every_level_is_the_exact_fold_of_its_children() {
             temp: false,
             cell_type: false,
             compress: rng.bool(),
-            lod: true,
+            ..mpfluid::iokernel::SnapshotOptions::default()
         };
         let rep = mpfluid::iokernel::write_snapshot_with(
             &mut file, &io, &tree, &part, &grids, 0.0, &opts,
