@@ -161,7 +161,7 @@ fn main() -> anyhow::Result<()> {
         min: [0.3, 0.3, 0.4],
         max: [0.7, 0.7, 0.6],
     };
-    let w = window::offline_window(&file, *times.last().unwrap(), &zoom, 32)?;
+    let w = window::SnapshotReader::open(&file, *times.last().unwrap())?.window(&zoom, 32)?;
     let payload: usize = w.iter().map(|g| g.data.len() * 4).sum();
     println!(
         "=== offline window over the wake: {} grids, {} (of {} file) ===",

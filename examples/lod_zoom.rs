@@ -1,8 +1,10 @@
-//! **Interactive zoom session over the LOD pyramid** (ISSUE 3): a viewer
-//! opens a snapshot with a fixed per-frame byte budget, paints a coarse
-//! whole-domain overview instantly, and zooms in — each shrinking region
-//! of interest lands on a finer pyramid level automatically, while the
-//! bytes read per frame stay bounded by the budget, not by the domain.
+//! **Interactive zoom session over the LOD pyramid** (ISSUE 3 + 5): a
+//! viewer opens one `SnapshotReader` session with a fixed per-frame byte
+//! budget, paints a coarse whole-domain overview instantly, and zooms in —
+//! each shrinking region of interest lands on a finer pyramid level
+//! automatically, while the bytes read per frame stay bounded by the
+//! budget, not by the domain. The session parses the topology + LOD index
+//! once for the whole sequence and serves repeats from its chunk cache.
 //!
 //! ```bash
 //! cargo run --release --example lod_zoom
@@ -47,6 +49,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- the zoom session: fixed 4-grid budget per frame ----------------
+    // one session for the whole exploration: the topology + pyramid index
+    // parse once, the chunk cache carries across frames, and the epoch pin
+    // keeps the view consistent even if a steering run rewrites underneath
+    let reader = window::SnapshotReader::open(&f, sim.t)?;
     let budget = 4 * RB;
     println!(
         "\n=== zoom session (budget {} per frame) ===",
@@ -77,7 +83,7 @@ fn main() -> anyhow::Result<()> {
         ),
     ];
     for (label, roi) in &frames {
-        let w = window::offline_window_budgeted(&f, sim.t, roi, budget)?;
+        let w = reader.budgeted(roi, budget)?;
         let depths: Vec<u32> = {
             let mut d: Vec<u32> = w.grids.iter().map(|g| g.depth).collect();
             d.sort_unstable();
@@ -96,7 +102,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- progressive refinement: first paint, then sharpen --------------
     println!("\n=== progressive refinement of the full domain ===");
-    for step in window::offline_window_progressive(&f, sim.t, &BBox::unit(), 80 * RB)? {
+    for step in reader.progressive(&BBox::unit(), 80 * RB)? {
         println!(
             "  level {}: {:>2} grids, {} read",
             step.level,
@@ -104,6 +110,25 @@ fn main() -> anyhow::Result<()> {
             fmt_bytes(step.bytes_read),
         );
     }
+
+    // --- what the session amortised -------------------------------------
+    let rs = reader.read_stats();
+    println!(
+        "\nsession: {} queries, index built {}× ({} index bytes), \
+         {} payload served, {} physically read, cache {} hit / {} miss",
+        reader.metrics.counter(mpfluid::metrics::names::READER_QUERIES),
+        reader.metrics.counter(mpfluid::metrics::names::READER_INDEX_BUILDS),
+        fmt_bytes(reader.metrics.counter(mpfluid::metrics::names::READER_INDEX_BYTES)),
+        fmt_bytes(reader.metrics.counter(mpfluid::metrics::names::READER_PAYLOAD_BYTES)),
+        fmt_bytes(rs.read_bytes),
+        rs.cache_hits,
+        rs.cache_misses,
+    );
+    assert_eq!(
+        reader.metrics.counter(mpfluid::metrics::names::READER_INDEX_BUILDS),
+        1,
+        "a session must parse its index exactly once"
+    );
 
     // the pyramid-bearing file stays structurally sound
     let vr = f.verify()?;

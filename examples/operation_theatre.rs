@@ -147,6 +147,24 @@ fn main() -> anyhow::Result<()> {
     let updraft_2 = patient_updraft(&steered);
     let temp_2 = mean_room_temp(&steered);
 
+    // ---- front-end read path: an epoch-pinned session on the branch -----
+    // the visual-processing consumer reads the rollback snapshot through a
+    // SnapshotReader session — it keeps serving this exact state even if
+    // the steered run kept checkpointing into the same file
+    let reader = trs.reader(t_reload)?;
+    let patient_roi = mpfluid::tree::BBox {
+        min: [0.38, 0.38, 0.42],
+        max: [0.62, 0.62, 0.62],
+    };
+    let view = reader.window(&patient_roi, 16)?;
+    let view_bytes: usize = view.iter().map(|g| g.data.len() * 4).sum();
+    println!(
+        "\n=== viewer session over the branch point (t={t_reload:.3}) ===\n  \
+         patient region: {} grids, {} KiB payload, index parsed once",
+        view.len(),
+        view_bytes / 1024
+    );
+
     // ---- Fig 7's comparison + §4's cost accounting -----------------------
     println!("\n=== results at the horizon ===");
     println!("  lamps 324.66 K: T_room={temp_1:.2} K  patient updraft={updraft_1:+.4}");

@@ -74,7 +74,8 @@ fn main() -> anyhow::Result<()> {
         min: [0.35, 0.35, 0.1],
         max: [0.65, 0.65, 0.4],
     };
-    let grids = window::offline_window(&file, t, &zoom, 8)?;
+    let reader = window::SnapshotReader::open(&file, t)?;
+    let grids = reader.window(&zoom, 8)?;
     println!("window over the heater: {} grids", grids.len());
     for g in &grids {
         let ts = &g.data[4 * mpfluid::DGRID_CELLS..5 * mpfluid::DGRID_CELLS];

@@ -1,23 +1,26 @@
 //! Bench: **byte-budgeted window queries over the LOD pyramid** — bytes
 //! read and latency per (ROI size × budget), against the full-resolution
-//! baseline the pre-pyramid reader was stuck with.
+//! baseline the pre-pyramid reader was stuck with — plus the read-session
+//! table (ISSUE 5): the per-call free functions re-parse the topology and
+//! `LodIndex` on every query, a `SnapshotReader` session pays that once
+//! and serves repeats from its chunk cache.
 //!
 //! The paper's second headline claim is that the output file's structure
 //! supports "very fast interactive visualisation"; the pyramid is what
-//! makes that hold under a *byte* budget: a whole-domain overview reads
-//! one grid row instead of every leaf, and the level selection trades
-//! resolution for bytes automatically as the ROI shrinks.
+//! makes that hold under a *byte* budget, and the session is what makes a
+//! real front end's query *sequence* cheap.
 //!
 //! Run: `cargo bench --bench lod_window`
 
 use mpfluid::cluster::{IoTuning, Machine};
+use mpfluid::config::Scenario;
 use mpfluid::h5lite::H5File;
 use mpfluid::iokernel::{self, ROW_BYTES};
+use mpfluid::metrics::names;
 use mpfluid::pario::ParallelIo;
 use mpfluid::tree::BBox;
 use mpfluid::util::{bench::measure, fmt_bytes};
-use mpfluid::window;
-use mpfluid::config::Scenario;
+use mpfluid::window::{self, SnapshotReader};
 
 /// Cell-data bytes of one grid row.
 const RB: u64 = ROW_BYTES;
@@ -68,18 +71,19 @@ fn main() {
         ("8 grids", 8 * RB),
         ("1 grid", RB),
     ];
+    let reader = SnapshotReader::open(&f, 0.0).unwrap();
     println!(
         "\n{:>12} {:>10} {:>6} {:>6} {:>12} {:>9} {:>10}",
         "ROI", "budget", "level", "grids", "bytes read", "vs full", "latency"
     );
     for (roi_label, roi) in &rois {
         // the pre-pyramid baseline: every intersecting leaf
-        let full = window::offline_window_budgeted(&f, 0.0, roi, u64::MAX).unwrap();
+        let full = reader.budgeted(roi, u64::MAX).unwrap();
         let full_bytes = full.bytes_read.max(1);
         for (b_label, budget) in &budgets {
             let mut last = None;
             let sample = measure(5, || {
-                last = Some(window::offline_window_budgeted(&f, 0.0, roi, *budget).unwrap());
+                last = Some(reader.budgeted(roi, *budget).unwrap());
             });
             let w = last.unwrap();
             println!(
@@ -95,9 +99,72 @@ fn main() {
         }
     }
 
+    // == per-call free function vs. session (ISSUE 5 acceptance table) ====
+    // the same zoom sequence, issued (a) through the deprecated per-call
+    // shim — which re-opens the file and rebuilds the LodIndex per query —
+    // and (b) through one session. The index-build counts come from the
+    // session metrics; the shim necessarily pays one build per call.
+    let zoom_seq: Vec<(&BBox, u64)> = rois
+        .iter()
+        .flat_map(|(_, roi)| budgets.iter().map(move |(_, b)| (roi, *b)))
+        .collect();
+    let reps = 5u32;
+    #[allow(deprecated)]
+    let per_call = measure(reps, || {
+        for &(roi, budget) in &zoom_seq {
+            window::offline_window_budgeted(&f, 0.0, roi, budget).unwrap();
+        }
+    });
+    let session_reader = SnapshotReader::open(&f, 0.0).unwrap();
+    let session = measure(reps, || {
+        for &(roi, budget) in &zoom_seq {
+            session_reader.budgeted(roi, budget).unwrap();
+        }
+    });
+    let rs = session_reader.read_stats();
+    let hit_rate = rs.cache_hits as f64 * 100.0
+        / (rs.cache_hits + rs.cache_misses).max(1) as f64;
+    let n_queries = session_reader.metrics.counter(names::READER_QUERIES);
+    // measure() runs one warmup pass on top of `reps`, so both rows below
+    // account len × (reps + 1) executions
+    let runs = zoom_seq.len() as u32 * (reps + 1);
+    println!(
+        "\n== per-call free function vs. session ({} queries × {} reps + warmup) ==",
+        zoom_seq.len(),
+        reps
+    );
+    println!(
+        "{:>12} {:>12} {:>14} {:>14} {:>10}",
+        "path", "whole seq", "index builds", "bytes read", "cache hit"
+    );
+    println!(
+        "{:>12} {:>12} {:>14} {:>14} {:>10}",
+        "per-call",
+        per_call.fmt_ms(),
+        format!("{runs} (1/query)"),
+        "(per call)",
+        "cold",
+    );
+    println!(
+        "{:>12} {:>12} {:>14} {:>14} {:>9.1}%",
+        "session",
+        session.fmt_ms(),
+        session_reader
+            .metrics
+            .counter(names::READER_INDEX_BUILDS)
+            .to_string(),
+        fmt_bytes(rs.read_bytes),
+        hit_rate,
+    );
+    println!(
+        "  session amortisation: index parsed once for {n_queries} queries; \
+         mean-time speedup ×{:.2}",
+        per_call.mean / session.mean.max(1e-12),
+    );
+
     // progressive refinement: coarse-to-fine streaming of the full domain
     println!("\n== progressive refinement, full domain, 128-grid total budget ==");
-    let steps = window::offline_window_progressive(&f, 0.0, &BBox::unit(), 128 * RB).unwrap();
+    let steps = reader.progressive(&BBox::unit(), 128 * RB).unwrap();
     let mut cum = 0u64;
     for s in &steps {
         cum += s.bytes_read;

@@ -92,6 +92,18 @@
 //!   their checksums (detected, never silent). Writer-exclusive sessions
 //!   only; concurrent-reader workloads stay on `AfterCommit`.
 //!
+//! On top of `AfterCommit`, [`H5File::pin_epoch`] extends the one-commit
+//! guarantee into a real single-writer/multi-reader contract: while an
+//! [`EpochPin`] is alive, extents retired by later rewrites (and the
+//! superseded footers) are **parked** in a generation-tagged retire queue
+//! instead of becoming allocatable, so a reader holding its own handle on
+//! the pinned epoch's committed state keeps reading byte-identical data
+//! across arbitrarily many writer commits. The parked bytes stay part of
+//! the free partition for [`H5File::verify`]'s accounting (their on-disk
+//! free record already lists them — pins are in-process state), and they
+//! release to the allocator the moment the last pin at or below their tag
+//! drops. The `window::SnapshotReader` session is the intended consumer.
+//!
 //! [`H5File::repack`] is the `h5repack` analogue: it rewrites the file into
 //! a fresh one with zero fragmentation (chunk extents copied verbatim, no
 //! re-encode) and atomically renames it over the original.
@@ -383,6 +395,106 @@ impl FreeList {
     }
 }
 
+/// Free-space state shared between an [`H5File`] handle and the
+/// [`EpochPin`]s held by long-lived readers (the `window::SnapshotReader`
+/// session): a pin must survive `&mut` use of the file handle — the writer
+/// keeps rewriting and committing while sessions read — so this state
+/// lives behind an `Arc` instead of in the handle itself.
+#[derive(Default)]
+struct SpaceShared {
+    /// Allocatable free extents.
+    free: Mutex<FreeList>,
+    /// Extents retired this epoch under [`ReusePolicy::AfterCommit`]: the
+    /// live committed footer still references them.
+    pending: Mutex<FreeList>,
+    /// Generation-tagged retire queue: extents (and superseded footers)
+    /// already unreferenced by the live footer, but retired while commit
+    /// epoch `tag` was current. A session pinned at epoch `P` opened the
+    /// footer of commit `P`, which may reference any extent tagged `>= P`,
+    /// so an entry releases to `free` only once every pin `<= tag` is
+    /// gone. On disk these bytes are recorded as free — pins are
+    /// in-process state, and a fresh open has no sessions to protect.
+    parked: Mutex<BTreeMap<u64, FreeList>>,
+    /// Pinned commit epoch → number of live [`EpochPin`]s.
+    pins: Mutex<BTreeMap<u64, u64>>,
+    /// Commits completed through this handle (the in-process epoch clock;
+    /// not persisted — see `parked` for why that is sound).
+    epoch: AtomicU64,
+}
+
+impl SpaceShared {
+    /// Smallest pinned epoch, if any session is alive.
+    fn min_pin(&self) -> Option<u64> {
+        self.pins.lock().unwrap().keys().next().copied()
+    }
+
+    /// Bytes held in the generation-tagged retire queue.
+    fn parked_bytes(&self) -> u64 {
+        self.parked.lock().unwrap().values().map(|fl| fl.total).sum()
+    }
+
+    /// Release every parked generation no pin can still reference back to
+    /// the free list. Called when a pin drops and after each commit.
+    fn release_parked(&self) {
+        let min_pin = self.min_pin();
+        let released: Vec<FreeList> = {
+            let mut parked = self.parked.lock().unwrap();
+            match min_pin {
+                // entries tagged >= the smallest pin stay parked
+                Some(p) => {
+                    let keep = parked.split_off(&p);
+                    std::mem::replace(&mut *parked, keep).into_values().collect()
+                }
+                None => std::mem::take(&mut *parked).into_values().collect(),
+            }
+        };
+        if !released.is_empty() {
+            let mut free = self.free.lock().unwrap();
+            for fl in released {
+                free.absorb(fl);
+            }
+        }
+    }
+}
+
+/// Guard returned by [`H5File::pin_epoch`]. While it lives, every extent
+/// the pinned commit epoch's footer references — including extents retired
+/// by later rewrites and the superseded footer itself — stays off the
+/// allocator, so a reader that opened the file at that epoch keeps reading
+/// byte-identical data across any number of later commits. This is the
+/// SWMR contract behind the `window::SnapshotReader` session; it extends
+/// the one-commit [`ReusePolicy::AfterCommit`] guarantee to arbitrarily
+/// many epochs. Not honoured by [`ReusePolicy::Immediate`] (which recycles
+/// extents in place and is writer-exclusive by contract) and meaningless
+/// on v1/v2 files (they never recycle at all). Dropping the pin releases
+/// the extents it parked back to the free list at once.
+pub struct EpochPin {
+    space: Arc<SpaceShared>,
+    epoch: u64,
+}
+
+impl EpochPin {
+    /// The pinned commit epoch (diagnostics).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+impl Drop for EpochPin {
+    fn drop(&mut self) {
+        {
+            let mut pins = self.space.pins.lock().unwrap();
+            if let Some(n) = pins.get_mut(&self.epoch) {
+                *n -= 1;
+                if *n == 0 {
+                    pins.remove(&self.epoch);
+                }
+            }
+        }
+        self.space.release_parked();
+    }
+}
+
 /// Space accounting of one file's data region (see [`H5File::space_stats`]).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SpaceStats {
@@ -392,10 +504,29 @@ pub struct SpaceStats {
     pub free_bytes: u64,
     /// Bytes retired since the last commit, allocatable after it.
     pub pending_bytes: u64,
+    /// Bytes already unreferenced by the live footer but parked for epoch
+    /// pins ([`H5File::pin_epoch`]) — allocatable once the pinning read
+    /// sessions drop.
+    pub pinned_bytes: u64,
     /// Cumulative bytes ever retired to the free-space manager.
     pub reclaimed_bytes: u64,
     /// Cumulative bytes served from the free list instead of appended.
     pub reused_bytes: u64,
+}
+
+/// Cumulative physical-read accounting of one file handle (see
+/// [`H5File::read_stats`]) — the read-side counterpart of [`SpaceStats`],
+/// used by the `window::SnapshotReader` session to report index-read
+/// amortisation and chunk-cache effectiveness.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReadStats {
+    /// Payload bytes physically read from disk: stored chunk extents plus
+    /// contiguous slabs. Decoded-chunk cache hits read nothing.
+    pub read_bytes: u64,
+    /// Chunk reads served from the decoded-chunk cache.
+    pub cache_hits: u64,
+    /// Chunk reads that had to load (and decode) the extent.
+    pub cache_misses: u64,
 }
 
 /// Outcome of an fsck-style [`H5File::verify`] walk.
@@ -710,17 +841,35 @@ impl Group {
 /// interleaving the three cell-data datasets, and multi-grid window
 /// queries straddle chunk boundaries — the old one-slot-per-dataset cache
 /// thrashed on the straddle and re-inflated the same chunks per query.
-/// Capacity [`CHUNK_CACHE_SLOTS`] decoded chunks, least-recently-used
-/// eviction, so a long-lived reader walking many timesteps stays bounded.
-#[derive(Default)]
+/// Capacity is a **byte budget** (the old fixed 16-slot cap made cache
+/// size depend on chunk geometry): least-recently-used chunks evict until
+/// the decoded bytes fit, so a long-lived reader session can size its
+/// working set to the zoom sequence it serves
+/// ([`H5File::set_chunk_cache_budget`]).
 struct ChunkCache {
     map: HashMap<(u64, u64), (u64, Arc<Vec<u8>>)>,
     /// Monotonic access counter driving the LRU order.
     tick: u64,
+    /// Decoded bytes currently resident.
+    bytes: u64,
+    budget: u64,
 }
 
-/// Max decoded chunks held by a file's chunk cache.
-const CHUNK_CACHE_SLOTS: usize = 16;
+/// Default decoded-chunk cache budget per file handle: roughly the old
+/// 16-slot cap at the 640 KiB cell-data chunk size, rounded up. Reader
+/// sessions override it per workload.
+pub const DEFAULT_CHUNK_CACHE_BYTES: u64 = 16 << 20;
+
+impl Default for ChunkCache {
+    fn default() -> ChunkCache {
+        ChunkCache {
+            map: HashMap::new(),
+            tick: 0,
+            bytes: 0,
+            budget: DEFAULT_CHUNK_CACHE_BYTES,
+        }
+    }
+}
 
 /// Under [`ReusePolicy::Immediate`], fresh chunk extents are allocated
 /// with `len / CHUNK_SLACK_DIV` bytes of adjacent slack (left on the free
@@ -742,22 +891,47 @@ impl ChunkCache {
     }
 
     fn insert(&mut self, id: u64, chunk_no: u64, data: Arc<Vec<u8>>) {
-        if self.map.len() >= CHUNK_CACHE_SLOTS && !self.map.contains_key(&(id, chunk_no)) {
+        let len = data.len() as u64;
+        if len > self.budget {
+            // larger than the whole budget: caching it would evict every
+            // other resident chunk for one that cannot stay anyway
+            self.invalidate(id, chunk_no);
+            return;
+        }
+        self.tick += 1;
+        if let Some((_, old)) = self.map.insert((id, chunk_no), (self.tick, data)) {
+            self.bytes -= old.len() as u64;
+        }
+        self.bytes += len;
+        while self.bytes > self.budget {
+            let evict = self
+                .map
+                .iter()
+                .filter(|(&k, _)| k != (id, chunk_no))
+                .min_by_key(|(_, (tick, _))| *tick)
+                .map(|(&k, _)| k);
+            let Some(k) = evict else { break };
+            self.invalidate(k.0, k.1);
+        }
+    }
+
+    fn invalidate(&mut self, id: u64, chunk_no: u64) {
+        if let Some((_, data)) = self.map.remove(&(id, chunk_no)) {
+            self.bytes -= data.len() as u64;
+        }
+    }
+
+    fn set_budget(&mut self, budget: u64) {
+        self.budget = budget;
+        while self.bytes > self.budget {
             let evict = self
                 .map
                 .iter()
                 .min_by_key(|(_, (tick, _))| *tick)
                 .map(|(&k, _)| k);
-            if let Some(k) = evict {
-                self.map.remove(&k);
-            }
+            let Some(k) = evict else { break };
+            self.invalidate(k.0, k.1);
         }
-        self.tick += 1;
-        self.map.insert((id, chunk_no), (self.tick, data));
-    }
-
-    fn invalidate(&mut self, id: u64, chunk_no: u64) {
-        self.map.remove(&(id, chunk_no));
     }
 }
 
@@ -780,12 +954,10 @@ pub struct H5File {
     version: u32,
     chunks: Mutex<ChunkRegistry>,
     next_ds_id: AtomicU64,
-    /// Allocatable free extents (format v2.1; always empty on v1/v2).
-    free: Mutex<FreeList>,
-    /// Extents retired since the last commit under
-    /// [`ReusePolicy::AfterCommit`]; merged into `free` once the commit
-    /// that no longer references them is durable.
-    pending_free: Mutex<FreeList>,
+    /// Free-space manager state (free / pending / parked extents, the
+    /// epoch clock and the pin table), shared with [`EpochPin`]s so read
+    /// sessions outlive `&mut` use of this handle. Always empty on v1/v2.
+    space: Arc<SpaceShared>,
     /// Extent of the footer the on-disk superblock points at, `(off, len)`
     /// (`(0, 0)` before the first commit). Never overwritten in place;
     /// retired to the free-space manager when superseded.
@@ -795,6 +967,10 @@ pub struct H5File {
     reclaimed: AtomicU64,
     /// Cumulative bytes served from the free list instead of appended.
     reused: AtomicU64,
+    /// Cumulative payload bytes physically read (see [`ReadStats`]).
+    read_bytes: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
     cache: Mutex<ChunkCache>,
     /// Bumped on every chunk-extent write; readers snapshot it before
     /// loading an extent and only populate the cache if it is unchanged
@@ -847,12 +1023,14 @@ impl H5File {
             version,
             chunks: Mutex::new(HashMap::new()),
             next_ds_id: AtomicU64::new(1),
-            free: Mutex::new(FreeList::default()),
-            pending_free: Mutex::new(FreeList::default()),
+            space: Arc::new(SpaceShared::default()),
             committed_footer: Mutex::new((0, 0)),
             reuse_policy: ReusePolicy::AfterCommit,
             reclaimed: AtomicU64::new(0),
             reused: AtomicU64::new(0),
+            read_bytes: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
             cache: Mutex::new(ChunkCache::default()),
             cache_gen: AtomicU64::new(0),
             rmw: Mutex::new(()),
@@ -922,12 +1100,17 @@ impl H5File {
             version,
             chunks: Mutex::new(reg),
             next_ds_id: AtomicU64::new(next_id),
-            free: Mutex::new(free),
-            pending_free: Mutex::new(FreeList::default()),
+            space: Arc::new(SpaceShared {
+                free: Mutex::new(free),
+                ..SpaceShared::default()
+            }),
             committed_footer: Mutex::new((footer_off, footer_len)),
             reuse_policy: ReusePolicy::AfterCommit,
             reclaimed: AtomicU64::new(0),
             reused: AtomicU64::new(0),
+            read_bytes: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
             cache: Mutex::new(ChunkCache::default()),
             cache_gen: AtomicU64::new(0),
             rmw: Mutex::new(()),
@@ -955,13 +1138,20 @@ impl H5File {
         if self.version >= FORMAT_V21 {
             // Free-list record: everything allocatable from this footer's
             // point of view — the free list, the extents retired this epoch
-            // (pending) and the footer being superseded. None of them is
-            // referenced by the footer we are writing, but none may be
-            // overwritten until it is durably live, so the in-memory lists
-            // are only merged after the superblock flip below.
-            let mut record = self.free.lock().unwrap().clone();
-            for (&off, &len) in &self.pending_free.lock().unwrap().extents {
+            // (pending), the generations parked for epoch pins (pins are
+            // in-process state; a fresh open has no sessions to protect)
+            // and the footer being superseded. None of them is referenced
+            // by the footer we are writing, but none may be overwritten
+            // until it is durably live, so the in-memory lists are only
+            // merged after the superblock flip below.
+            let mut record = self.space.free.lock().unwrap().clone();
+            for (&off, &len) in &self.space.pending.lock().unwrap().extents {
                 record.insert(off, len);
+            }
+            for fl in self.space.parked.lock().unwrap().values() {
+                for (&off, &len) in &fl.extents {
+                    record.insert(off, len);
+                }
             }
             let (fo, fl) = *self.committed_footer.lock().unwrap();
             if fl > 0 {
@@ -1009,20 +1199,53 @@ impl H5File {
         self.file.sync_data().context("h5lite: superblock sync")?;
         // The new footer is live: the superseded one and every extent
         // retired this epoch are no longer referenced by anything on disk.
+        // They become allocatable unless a session still pins this epoch
+        // (or an earlier one) — a pinned reader opened a footer that still
+        // references them — in which case they park in the
+        // generation-tagged retire queue until the pins drop.
         let prev = std::mem::replace(
             &mut *self.committed_footer.lock().unwrap(),
             (footer_off, footer_len),
         );
         if self.version >= FORMAT_V21 {
-            let pending = std::mem::take(&mut *self.pending_free.lock().unwrap());
-            let mut free = self.free.lock().unwrap();
-            free.absorb(pending);
+            let epoch = self.space.epoch.fetch_add(1, Ordering::Relaxed);
+            let mut retired = std::mem::take(&mut *self.space.pending.lock().unwrap());
             if prev.1 > 0 {
                 self.reclaimed.fetch_add(prev.1, Ordering::Relaxed);
-                free.insert(prev.0, prev.1);
+                retired.insert(prev.0, prev.1);
             }
+            if self.space.min_pin().map_or(false, |p| p <= epoch) {
+                self.space
+                    .parked
+                    .lock()
+                    .unwrap()
+                    .entry(epoch)
+                    .or_default()
+                    .absorb(retired);
+            } else {
+                self.space.free.lock().unwrap().absorb(retired);
+            }
+            // pins may have dropped since the last release trigger
+            self.space.release_parked();
         }
         Ok(())
+    }
+
+    /// Pin the current commit epoch: until the returned [`EpochPin`]
+    /// drops, extents retired from now on — and the footers their commits
+    /// supersede — are parked in a generation-tagged queue instead of
+    /// becoming allocatable, so a reader holding its own handle on this
+    /// epoch's committed state keeps reading byte-identical data across
+    /// any number of writer commits. This is the primitive behind the
+    /// `window::SnapshotReader` session; see [`EpochPin`] for the policy
+    /// caveats ([`ReusePolicy::Immediate`] is not covered).
+    pub fn pin_epoch(&self) -> EpochPin {
+        let epoch = self.space.epoch.load(Ordering::Relaxed);
+        *self.space.pins.lock().unwrap().entry(epoch).or_insert(0) += 1;
+        EpochPin {
+            space: Arc::clone(&self.space),
+            epoch,
+        }
     }
 
     /// Resolve a `/`-separated group path, creating missing groups.
@@ -1054,7 +1277,7 @@ impl H5File {
     /// already-validated superblock.
     fn alloc(&self, nbytes: u64, align: u64) -> Result<u64> {
         if self.version >= FORMAT_V21 {
-            if let Some(offset) = self.free.lock().unwrap().alloc(nbytes, align) {
+            if let Some(offset) = self.space.free.lock().unwrap().alloc(nbytes, align) {
                 self.reused.fetch_add(nbytes, Ordering::Relaxed);
                 return Ok(offset);
             }
@@ -1084,9 +1307,9 @@ impl H5File {
         }
         self.reclaimed.fetch_add(len, Ordering::Relaxed);
         match self.reuse_policy {
-            ReusePolicy::Immediate => self.free.lock().unwrap().insert(offset, len),
+            ReusePolicy::Immediate => self.space.free.lock().unwrap().insert(offset, len),
             ReusePolicy::AfterCommit => {
-                self.pending_free.lock().unwrap().insert(offset, len)
+                self.space.pending.lock().unwrap().insert(offset, len)
             }
         }
     }
@@ -1307,6 +1530,7 @@ impl H5File {
             && match prev {
                 Some(old) if new_len <= old.stored => true,
                 Some(old) => self
+                    .space
                     .free
                     .lock()
                     .unwrap()
@@ -1318,7 +1542,7 @@ impl H5File {
         } else if immediate {
             let cap = new_len + new_len / CHUNK_SLACK_DIV;
             let off = self.alloc(cap, 1)?;
-            self.free.lock().unwrap().insert(off + new_len, cap - new_len);
+            self.space.free.lock().unwrap().insert(off + new_len, cap - new_len);
             off
         } else {
             self.alloc(new_len, 1)?
@@ -1347,7 +1571,8 @@ impl H5File {
                 self.reused.fetch_add(new_len, Ordering::Relaxed);
                 self.reclaimed.fetch_add(old.stored, Ordering::Relaxed);
                 if new_len < old.stored {
-                    self.free
+                    self.space
+                        .free
                         .lock()
                         .unwrap()
                         .insert(old.offset + new_len, old.stored - new_len);
@@ -1383,6 +1608,12 @@ impl H5File {
         self.cache.lock().unwrap().map.len()
     }
 
+    /// Test-only: decoded bytes currently held by the LRU cache.
+    #[cfg(test)]
+    fn cached_bytes(&self) -> u64 {
+        self.cache.lock().unwrap().bytes
+    }
+
     /// Chunk index entry for `chunk_no` (`None` = not yet written).
     pub fn chunk_loc(&self, ds: &Dataset, chunk_no: u64) -> Result<Option<ChunkLoc>> {
         let (_, _, id) = ds
@@ -1406,8 +1637,10 @@ impl H5File {
             .chunk_meta()
             .ok_or_else(|| anyhow!("h5lite: read_chunk_raw on contiguous dataset"))?;
         if let Some(data) = self.cache.lock().unwrap().get(id, chunk_no) {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(data);
         }
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
         let gen0 = self.cache_gen.load(Ordering::Acquire);
         let loc = self.chunk_loc(ds, chunk_no)?;
         let expect_raw = (ds.chunk_rows_at(chunk_no) * ds.row_bytes()) as usize;
@@ -1418,6 +1651,7 @@ impl H5File {
                 self.file
                     .read_exact_at(&mut stored, loc.offset)
                     .context("h5lite: chunk extent read")?;
+                self.read_bytes.fetch_add(loc.stored, Ordering::Relaxed);
                 // decode with the chunk's own recorded codec — the
                 // adaptive selector may store any pipeline of the family,
                 // not just the dataset's declared one
@@ -1474,6 +1708,7 @@ impl H5File {
                 self.file
                     .read_exact_at(&mut buf, offset + row_start * rb)
                     .context("h5lite: slab read")?;
+                self.read_bytes.fetch_add(rows * rb, Ordering::Relaxed);
                 Ok(buf)
             }
             Layout::Chunked { .. } => {
@@ -1533,28 +1768,59 @@ impl H5File {
     pub fn data_bytes(&self) -> u64 {
         let end = *self.data_end.lock().unwrap();
         let (_, footer_len) = *self.committed_footer.lock().unwrap();
-        let free = self.free.lock().unwrap().total;
-        let pending = self.pending_free.lock().unwrap().total;
+        let free = self.space.free.lock().unwrap().total;
+        let pending = self.space.pending.lock().unwrap().total;
+        let pinned = self.space.parked_bytes();
         end.saturating_sub(SUPERBLOCK_LEN)
             .saturating_sub(footer_len)
             .saturating_sub(free)
             .saturating_sub(pending)
+            .saturating_sub(pinned)
     }
 
-    /// Total bytes the free-space manager holds (allocatable + pending).
+    /// Total bytes the free-space manager holds (allocatable + pending +
+    /// parked for epoch pins).
     pub fn free_bytes(&self) -> u64 {
-        self.free.lock().unwrap().total + self.pending_free.lock().unwrap().total
+        self.space.free.lock().unwrap().total
+            + self.space.pending.lock().unwrap().total
+            + self.space.parked_bytes()
     }
 
     /// Space-accounting snapshot of the data region.
     pub fn space_stats(&self) -> SpaceStats {
         SpaceStats {
             file_bytes: self.data_end.lock().unwrap().saturating_sub(SUPERBLOCK_LEN),
-            free_bytes: self.free.lock().unwrap().total,
-            pending_bytes: self.pending_free.lock().unwrap().total,
+            free_bytes: self.space.free.lock().unwrap().total,
+            pending_bytes: self.space.pending.lock().unwrap().total,
+            pinned_bytes: self.space.parked_bytes(),
             reclaimed_bytes: self.reclaimed.load(Ordering::Relaxed),
             reused_bytes: self.reused.load(Ordering::Relaxed),
         }
+    }
+
+    /// Physical-read accounting of this handle: payload bytes actually
+    /// read from disk and the decoded-chunk cache hit/miss split. The
+    /// `window::SnapshotReader` session reports these to show index-open
+    /// amortisation and cache effectiveness across a query sequence.
+    pub fn read_stats(&self) -> ReadStats {
+        ReadStats {
+            read_bytes: self.read_bytes.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Set the decoded-chunk cache budget in bytes, evicting down to it if
+    /// needed; `0` disables caching entirely. Long-lived reader sessions
+    /// size this to the working set of the zoom sequence they serve
+    /// (default [`DEFAULT_CHUNK_CACHE_BYTES`]).
+    pub fn set_chunk_cache_budget(&self, bytes: u64) {
+        self.cache.lock().unwrap().set_budget(bytes);
+    }
+
+    /// Current decoded-chunk cache budget in bytes.
+    pub fn chunk_cache_budget(&self) -> u64 {
+        self.cache.lock().unwrap().budget
     }
 
     /// Read, decode and checksum one chunk extent directly from disk,
@@ -1649,11 +1915,24 @@ impl H5File {
             }
         }
         {
-            let free = self.free.lock().unwrap();
-            let pending = self.pending_free.lock().unwrap();
+            let free = self.space.free.lock().unwrap();
+            let pending = self.space.pending.lock().unwrap();
             report.free_bytes = free.total + pending.total;
             for (&off, &len) in free.extents.iter().chain(pending.extents.iter()) {
                 extents.push((off, len, "free".into()));
+            }
+        }
+        {
+            // extents parked for epoch pins are free space whose reuse is
+            // merely deferred: they count as free in the partition (their
+            // on-disk record already lists them free) and join the overlap
+            // walk so a bad allocation into pinned bytes is caught
+            let parked = self.space.parked.lock().unwrap();
+            for fl in parked.values() {
+                report.free_bytes += fl.total;
+                for (&off, &len) in &fl.extents {
+                    extents.push((off, len, "pinned-free".into()));
+                }
             }
         }
         for (off, len, label) in &extents {
@@ -1726,11 +2005,19 @@ impl H5File {
             return Err(e);
         }
         // the handle swap must not reset caller-visible state: keep the
-        // path, the configured reuse policy and the cumulative counters
+        // path, the configured reuse policy, the cache budget and the
+        // cumulative counters. (Sessions that pinned an epoch before the
+        // repack keep reading the *old* inode through their own descriptor
+        // — the rename only unlinks the name — so their data stays intact
+        // without the new handle knowing about them.)
         reopened.path = self.path.clone();
         reopened.reuse_policy = self.reuse_policy;
         reopened.reclaimed = AtomicU64::new(self.reclaimed.load(Ordering::Relaxed));
         reopened.reused = AtomicU64::new(self.reused.load(Ordering::Relaxed));
+        reopened.read_bytes = AtomicU64::new(self.read_bytes.load(Ordering::Relaxed));
+        reopened.cache_hits = AtomicU64::new(self.cache_hits.load(Ordering::Relaxed));
+        reopened.cache_misses = AtomicU64::new(self.cache_misses.load(Ordering::Relaxed));
+        reopened.set_chunk_cache_budget(self.chunk_cache_budget());
         *self = reopened;
         Ok(before.saturating_sub(after))
     }
@@ -2889,7 +3176,7 @@ mod tests {
     }
 
     #[test]
-    fn chunk_cache_lru_holds_chunks_from_one_dataset() {
+    fn chunk_cache_is_byte_budgeted_lru() {
         // multi-chunk interleaved reads of one dataset must not thrash: the
         // old cache held a single chunk per dataset, so alternating between
         // two chunks re-inflated both on every access
@@ -2900,18 +3187,109 @@ mod tests {
             .unwrap();
         f.write_all_f32(&ds, &smooth_rows(32, 8)).unwrap();
         // touch chunks 0 and 1 alternately (a window query straddling a
-        // chunk boundary): both stay resident
+        // chunk boundary): both stay resident, and the hit/miss split
+        // shows the repeats were served from memory
         for _ in 0..4 {
             f.read_rows(&ds, 7, 2).unwrap(); // rows 7..9 → chunks 0 and 1
         }
         assert!(f.cached_chunks() >= 2, "straddle thrashes the cache");
-        // and the cache stays bounded when walking many chunks
+        let rs = f.read_stats();
+        assert_eq!(rs.cache_misses, 2, "{rs:?}");
+        assert_eq!(rs.cache_hits, 6, "{rs:?}");
+        assert!(rs.read_bytes > 0);
+        // the byte budget bounds the resident set when walking many
+        // chunks: 64 decoded chunks of 128 B against a 512 B budget
         let big = f
             .create_dataset_chunked("/g", "big", Dtype::F32, &[256, 8], 4, Codec::Lz)
             .unwrap();
         f.write_all_f32(&big, &smooth_rows(256, 8)).unwrap();
+        f.set_chunk_cache_budget(512);
         f.read_rows(&big, 0, 256).unwrap(); // 64 chunks
-        assert!(f.cached_chunks() <= CHUNK_CACHE_SLOTS);
+        assert!(f.cached_bytes() <= 512, "{} B resident", f.cached_bytes());
+        assert!(f.cached_chunks() >= 1, "budget fits chunks but none stayed");
+        // budget 0 disables caching entirely (epoch-pin tests read through
+        // it to prove on-disk bytes, not cached copies)
+        f.set_chunk_cache_budget(0);
+        assert_eq!(f.cached_chunks(), 0, "set_budget(0) must evict all");
+        f.read_rows(&big, 0, 4).unwrap();
+        assert_eq!(f.cached_chunks(), 0);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn epoch_pin_parks_retired_extents_until_drop() {
+        // the SWMR primitive behind the SnapshotReader session: while a
+        // pin is alive, extents retired by rewrites park in the
+        // generation-tagged queue instead of becoming allocatable, the
+        // byte partition stays exact, and dropping the pin releases them
+        let p = tmp("pin");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::ShuffleDeltaLz)
+            .unwrap();
+        let data = smooth_rows(16, 16);
+        f.write_all_f32(&ds, &data).unwrap();
+        f.commit().unwrap();
+        let pin = f.pin_epoch();
+        f.write_all_f32(&ds, &data).unwrap(); // retire the pinned extents
+        f.commit().unwrap(); // unreferenced now, but the pin parks them
+        let s1 = f.space_stats();
+        assert!(s1.pinned_bytes > 0, "{s1:?}");
+        // a second rewrite epoch parks more (and, per verify's overlap
+        // walk, never allocates into the parked bytes)
+        f.write_all_f32(&ds, &data).unwrap();
+        f.commit().unwrap();
+        let s2 = f.space_stats();
+        assert!(s2.pinned_bytes > s1.pinned_bytes, "{s2:?}");
+        let rep = f.verify().unwrap();
+        assert!(rep.ok(), "{:?}", rep.errors);
+        assert_eq!(
+            rep.live_bytes + rep.meta_bytes + rep.free_bytes + rep.leaked_bytes,
+            rep.data_end,
+            "pinned extents lost their partition home"
+        );
+        // the data still reads back while pinned, and after release
+        assert_eq!(codec::bytes_to_f32s(&f.read_rows(&ds, 0, 16).unwrap()), data);
+        drop(pin);
+        let s3 = f.space_stats();
+        assert_eq!(s3.pinned_bytes, 0, "{s3:?}");
+        assert!(s3.free_bytes >= s2.pinned_bytes, "{s3:?} vs {s2:?}");
+        // the released space is really allocatable again
+        let reused_before = s3.reused_bytes;
+        f.write_all_f32(&ds, &data).unwrap();
+        assert!(f.space_stats().reused_bytes > reused_before);
+        f.commit().unwrap();
+        assert!(f.verify().unwrap().ok());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn overlapping_epoch_pins_release_in_order() {
+        // two sessions pinned at different epochs: dropping the older one
+        // alone releases nothing tagged at or after the younger pin
+        let p = tmp("pin2");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 16], 8, Codec::ShuffleDeltaLz)
+            .unwrap();
+        let data = smooth_rows(8, 16);
+        f.write_all_f32(&ds, &data).unwrap();
+        f.commit().unwrap();
+        let old_pin = f.pin_epoch();
+        f.write_all_f32(&ds, &data).unwrap();
+        f.commit().unwrap(); // generation A: tagged at old_pin's epoch
+        let young_pin = f.pin_epoch();
+        f.write_all_f32(&ds, &data).unwrap();
+        f.commit().unwrap(); // generation B: tagged at young_pin's epoch
+        assert!(old_pin.epoch() < young_pin.epoch());
+        let both = f.space_stats().pinned_bytes;
+        drop(old_pin);
+        // generation A releases, generation B stays for the younger pin
+        let after_old = f.space_stats().pinned_bytes;
+        assert!(after_old > 0 && after_old < both, "{after_old} of {both}");
+        drop(young_pin);
+        assert_eq!(f.space_stats().pinned_bytes, 0);
+        assert!(f.verify().unwrap().ok());
         std::fs::remove_file(&p).ok();
     }
 }

@@ -421,6 +421,9 @@ fn collective_write_with_pyramid(
 /// when readers explore it while the run keeps writing; switch to
 /// `Immediate` only for writer-exclusive sessions (a reader holding an
 /// older footer would hit checksum errors on chunks rewritten in place).
+/// A front end that must keep one consistent view across *many* rewrite
+/// commits opens a `crate::window::SnapshotReader` session: its epoch pin
+/// parks the extents these rewrites retire until the session drops.
 pub fn rewrite_snapshot_cells(
     file: &mut H5File,
     io: &ParallelIo,
@@ -980,8 +983,9 @@ mod tests {
         // absent generations default to zero
         snap.grids[idx].prev.extract_interior(var::T, &mut out);
         assert!(out.iter().all(|&x| x == 0.0));
-        // the offline window works on the lean snapshot too
-        let w = crate::window::offline_window(&f, 1.0, &BBox::unit(), 8).unwrap();
+        // the offline window session works on the lean snapshot too
+        let reader = crate::window::SnapshotReader::open(&f, 1.0).unwrap();
+        let w = reader.window(&BBox::unit(), 8).unwrap();
         assert_eq!(w.len(), 8);
         std::fs::remove_file(&p).ok();
     }

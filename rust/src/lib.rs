@@ -15,8 +15,10 @@
 //!   ([`runtime`]), and — the paper's headline contribution — the parallel
 //!   shared-file I/O kernel ([`iokernel`]) with collective buffering
 //!   ([`pario`]) on a simulated HPC substrate ([`cluster`]), plus the sliding
-//!   window ([`window`]) with its budget-aware multi-resolution pyramid
-//!   ([`lod`]) and time-reversible steering ([`steering`]).
+//!   window ([`window`]) — read through epoch-pinned, cache-carrying
+//!   [`window::SnapshotReader`] sessions — with its budget-aware
+//!   multi-resolution pyramid ([`lod`]) and time-reversible steering
+//!   ([`steering`]).
 //!
 //! See `DESIGN.md` for the complete system inventory and the experiment
 //! index mapping every figure/table of the paper to a bench/example.

@@ -466,6 +466,11 @@ impl LodLevel {
 }
 
 /// The pyramid of one snapshot, opened for budget-aware reads.
+///
+/// [`LodIndex::open`] reads every `level_<ℓ>_locs` dataset and rebuilds
+/// the row maps — pay that once per snapshot, not per query: the
+/// documented hot-path consumer is the `crate::window::SnapshotReader`
+/// session, which holds one `LodIndex` for its whole lifetime.
 pub struct LodIndex {
     /// Levels 1..=n in order; `levels[0]` is the finest stored level.
     pub levels: Vec<LodLevel>,

@@ -293,7 +293,7 @@ fn cmd_window(flags: &HashMap<String, String>) -> Result<()> {
     let bbox = BBox { min, max };
     let budget: u32 = flags.get("budget").map(|s| s.parse()).transpose()?.unwrap_or(64);
     let grids = if let Some(addr) = flags.get("addr") {
-        window::query(addr.parse()?, &bbox, budget)?
+        window::WindowClient::connect(addr.parse()?)?.window(&bbox, budget)?
     } else {
         let path = flags
             .get("file")
@@ -305,7 +305,7 @@ fn cmd_window(flags: &HashMap<String, String>) -> Result<()> {
                 .last()
                 .ok_or_else(|| anyhow!("no snapshots"))?,
         };
-        window::offline_window(&file, t, &bbox, budget as usize)?
+        window::SnapshotReader::open(&file, t)?.window(&bbox, budget as usize)?
     };
     println!("{} grids in window (budget {budget})", grids.len());
     for g in &grids {

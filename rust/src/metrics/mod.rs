@@ -8,6 +8,25 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+/// Canonical metric names shared across modules, so tests and the bench
+/// harness assert against one spelling instead of scattered literals.
+pub mod names {
+    /// `LodIndex`/topology parses performed by a read session — the
+    /// amortisation the `window::SnapshotReader` exists for: exactly 1 per
+    /// session lifetime, however many queries it serves (the per-call free
+    /// functions paid one per call).
+    pub const READER_INDEX_BUILDS: &str = "reader.index_builds";
+    /// Bytes read to build the session's topology + LOD indexes (paid once
+    /// at open).
+    pub const READER_INDEX_BYTES: &str = "reader.index_bytes";
+    /// Window/budgeted/progressive queries served by a read session.
+    pub const READER_QUERIES: &str = "reader.queries";
+    /// Grids returned across all of a session's queries.
+    pub const READER_GRIDS: &str = "reader.grids";
+    /// Logical cell-data payload bytes served across a session's queries.
+    pub const READER_PAYLOAD_BYTES: &str = "reader.payload_bytes";
+}
+
 /// A set of named counters (u64) and timers (accumulated nanoseconds).
 #[derive(Default)]
 pub struct Metrics {
@@ -64,6 +83,17 @@ impl Metrics {
             .unwrap_or(0.0)
     }
 
+    /// Snapshot of every counter (name → value), for test assertions and
+    /// bench tables that want the whole set rather than one name.
+    pub fn counters(&self) -> BTreeMap<String, u64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+
     /// Render all metrics as sorted `name value` lines.
     pub fn report(&self) -> String {
         let mut out = String::new();
@@ -111,6 +141,17 @@ mod tests {
         let rep = m.report();
         assert!(rep.contains("counter a 1"));
         assert!(rep.contains("timer   b"));
+    }
+
+    #[test]
+    fn counters_snapshot_returns_all_values() {
+        let m = Metrics::new();
+        m.add(names::READER_QUERIES, 3);
+        m.add("other", 1);
+        let snap = m.counters();
+        assert_eq!(snap.get(names::READER_QUERIES), Some(&3));
+        assert_eq!(snap.get("other"), Some(&1));
+        assert_eq!(snap.len(), 2);
     }
 
     #[test]

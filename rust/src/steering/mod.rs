@@ -246,6 +246,16 @@ impl TrsSession {
         iokernel::list_timesteps(&self.file)
     }
 
+    /// Open an epoch-pinned [`crate::window::SnapshotReader`] session over
+    /// the active file's snapshot at `t` — the front end's read path while
+    /// the steered run keeps checkpointing and rewriting. The session
+    /// keeps serving byte-identical data across later commits (the pin
+    /// parks retired extents) and even across a [`TrsSession::rollback`]
+    /// branch switch: it holds its own descriptor on the file it opened.
+    pub fn reader(&self, t: f64) -> Result<crate::window::SnapshotReader> {
+        crate::window::SnapshotReader::open(&self.file, t)
+    }
+
     /// **The time reversal**: reload the snapshot at `t`, branch the output
     /// into a new file (`<stem>.branch<N>.h5`), and return the restored
     /// simulation positioned at `t`. The previous file is left complete —
@@ -454,6 +464,35 @@ mod tests {
         assert!((ts[0] - t1).abs() < 1e-6, "{ts:?} vs {t1}");
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(&trs.active_path).ok();
+    }
+
+    #[test]
+    fn trs_reader_session_survives_later_checkpoints() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("trs_reader_{}.h5", std::process::id()));
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 2);
+        let mut s = sim();
+        let mut trs = TrsSession::create(&path, &s, 1).unwrap();
+        s.step(&RustBackend);
+        trs.checkpoint(&s, &io).unwrap();
+        let t1 = s.t;
+        // the front end opens a read session on the first checkpoint…
+        let reader = trs.reader(t1).unwrap();
+        let before = reader.window(&BBox::unit(), 64).unwrap();
+        assert!(!before.is_empty());
+        // …and the run keeps stepping and checkpointing underneath it
+        s.step(&RustBackend);
+        trs.checkpoint(&s, &io).unwrap();
+        let after = reader.window(&BBox::unit(), 64).unwrap();
+        assert_eq!(before.len(), after.len());
+        for (a, b) in before.iter().zip(&after) {
+            assert_eq!(a.uid.0, b.uid.0);
+            assert_eq!(a.data, b.data, "session view drifted across commits");
+        }
+        // a fresh session sees the newer checkpoint too
+        assert!(trs.reader(s.t).is_ok());
+        assert!(trs.file.verify().unwrap().ok());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -9,58 +9,84 @@
 //! data" — so even a trillion-cell domain is explorable over a fixed-rate
 //! link.
 //!
+//! ## The read session: [`SnapshotReader`]
+//!
+//! The documented hot path for "fast (random) access when retrieving the
+//! data for visual processing" is a **session**: open one
+//! [`SnapshotReader`] per `(file, timestep)` and issue every query of the
+//! exploration through it.
+//!
+//! * **open** — parses the snapshot's topology (UID→row map, bounding
+//!   boxes, child links) and its [`crate::lod`] pyramid index once, pins
+//!   the file's current commit **epoch** ([`H5File::pin_epoch`]) and opens
+//!   a private descriptor with its own byte-budgeted decoded-chunk cache
+//!   ([`SnapshotReaderOptions::cache_bytes`]).
+//! * **query*** — [`SnapshotReader::window`] (fixed grid count),
+//!   [`SnapshotReader::budgeted`] (byte budget over the pyramid) and
+//!   [`SnapshotReader::progressive`] (coarse-to-fine streaming) all serve
+//!   from the in-memory indexes; only the selected cell rows touch disk,
+//!   and repeats hit the session cache. Per-session counters
+//!   ([`crate::metrics::names`]) plus [`SnapshotReader::read_stats`]
+//!   expose the amortisation.
+//! * **drop** — releases the epoch pin: extents the writer retired while
+//!   the session lived return to the free-space manager.
+//!
+//! The epoch pin is the session's consistency contract: on a
+//! [`crate::h5lite::ReusePolicy::AfterCommit`] file (the default), a
+//! session keeps reading **byte-identical** data across any number of
+//! writer commits — steering rewrites retire the session's extents, but
+//! the generation-tagged retire queue parks them until the pin drops.
+//! Fresh sessions always see the latest committed state.
+//!
+//! The pre-session free functions ([`offline_window`],
+//! [`offline_window_budgeted`], [`offline_window_progressive`]) remain as
+//! deprecated shims over a throwaway session: they re-parse every index on
+//! every call, which is exactly the cost the session amortises.
+//!
 //! ## Online path (paper Fig 3)
 //!
-//! 1. the front-end client sends a request to the **collector**'s TCP
-//!    socket;
-//! 2. the collector forwards the query to the neighbourhood server, which
+//! 1. the front-end client connects a [`WindowClient`] **session** to the
+//!    **collector**'s TCP socket;
+//! 2. the collector forwards each query to the neighbourhood server, which
 //!    selects the relevant d-grids at the right level of detail;
 //! 3. + 4. the owning processes (here: the shared domain state) provide the
 //!    selected grid data to the collector;
-//! 5. the collector streams the response back to the client.
+//! 5. the collector streams the response back to the client — and the
+//!    connection stays up for the next query of the zoom sequence.
 //!
-//! ## Offline path (paper §3.2)
-//!
-//! The same traversal over the snapshot datasets: start at the root grid
-//! (always row 0 of `grid_property`), follow `subgrid uid` links through a
-//! UID→row map, prune by `bounding box`, stop when descending would burst
-//! the budget, and read *only the selected rows* of `current_cell_data`.
-//! Chunk-compressed snapshots (h5lite format v2) decompress transparently
-//! inside [`H5File::read_rows`]: each chunk's recorded codec byte selects
-//! its own decode pipeline — codec-v2 files mix raw, LZ and LZ+entropy
-//! extents within one dataset (the adaptive per-chunk selector), and the
-//! window never has to know. The file's LRU chunk cache keeps the
-//! row-at-a-time traversal from re-inflating the same chunk per row, even
-//! when a multi-grid query straddles chunk boundaries — with the entropy
-//! stage in play the cache matters more, since re-inflating a chunk now
-//! costs a range-coder pass on top of the LZ copy loop.
+//! The [`Collector`] runs **one server-side session per connection**: a
+//! connection-long loop serving any mix of the fixed-count (`SWIN`) and
+//! byte-budgeted (`SWLD`) wire protocols. The per-query [`query`] /
+//! [`query_budgeted`] free functions are deprecated shims (sessions of
+//! length one).
 //!
 //! ## Byte-budgeted queries over the LOD pyramid
 //!
-//! [`offline_window_budgeted`] takes a **byte** budget and serves the
+//! [`SnapshotReader::budgeted`] takes a **byte** budget and serves the
 //! region of interest from the finest [`crate::lod`] pyramid level whose
 //! cover fits it — a whole-domain query over a huge snapshot comes back as
 //! a handful of coarse grids instead of every leaf, and zooming in
-//! automatically lands on finer levels. [`offline_window_progressive`]
+//! automatically lands on finer levels. [`SnapshotReader::progressive`]
 //! streams the same answer coarse-to-fine for immediate first paint.
 //! Pyramid-less files (pre-LOD, or written with
 //! `SnapshotOptions { lod: false, .. }`) fall back to the classic
-//! traversal transparently. The online [`Collector`] speaks a second,
-//! byte-budgeted request ([`query_budgeted`]) answered from the live
-//! tree's restricted interior grids — the online twin of the pyramid.
+//! traversal transparently. Chunk-compressed snapshots decompress
+//! transparently inside [`H5File::read_rows`], each chunk through its own
+//! recorded codec.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, HashMap};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::Simulation;
-use crate::h5lite::{codec, H5File};
+use crate::h5lite::{codec, Dataset, EpochPin, H5File, ReadStats, DEFAULT_CHUNK_CACHE_BYTES};
 use crate::iokernel::{self, ROW_BYTES, ROW_ELEMS};
 use crate::lod::{self, LodIndex};
+use crate::metrics::{names, Metrics};
 use crate::tree::uid::{LocCode, Uid};
 use crate::tree::BBox;
 use crate::{DGRID_CELLS, NVAR};
@@ -75,102 +101,6 @@ pub struct WindowGrid {
     pub data: Vec<f32>,
 }
 
-// ---------------------------------------------------------------------------
-// offline window
-// ---------------------------------------------------------------------------
-
-/// Offline sliding-window query against the snapshot at time `t`.
-pub fn offline_window(
-    file: &H5File,
-    t: f64,
-    window: &BBox,
-    budget: usize,
-) -> Result<Vec<WindowGrid>> {
-    let group = iokernel::ts_group(t);
-    let ds_prop = file.dataset(&group, "grid_property")?;
-    let ds_sub = file.dataset(&group, "subgrid_uid")?;
-    let ds_bbox = file.dataset(&group, "bounding_box")?;
-    let ds_cur = file.dataset(&group, "current_cell_data")?;
-    let uids = file.read_all_u64(&ds_prop)?;
-    if uids.is_empty() {
-        bail!("window: empty snapshot");
-    }
-    // UID → row index (the offline analogue of the neighbourhood server)
-    let row_of: std::collections::HashMap<u64, u64> = uids
-        .iter()
-        .enumerate()
-        .map(|(r, &u)| (u, r as u64))
-        .collect();
-
-    let bbox_of = |row: u64| -> Result<BBox> {
-        let b = codec::bytes_to_f64s(&file.read_rows(&ds_bbox, row, 1)?);
-        Ok(BBox {
-            min: [b[0], b[1], b[2]],
-            max: [b[3], b[4], b[5]],
-        })
-    };
-    let children_of = |row: u64| -> Result<Vec<u64>> {
-        let subs = codec::bytes_to_u64s(&file.read_rows(&ds_sub, row, 1)?);
-        Ok(subs
-            .into_iter()
-            .filter(|&u| u != 0)
-            .filter_map(|u| row_of.get(&u).copied())
-            .collect())
-    };
-
-    // LOD descent from the root (row 0), identical to
-    // NeighbourhoodServer::select_window but over file rows.
-    let mut current: Vec<u64> = if bbox_of(0)?.intersects(window) {
-        vec![0]
-    } else {
-        Vec::new()
-    };
-    loop {
-        let mut next = Vec::with_capacity(current.len() * 4);
-        let mut descended = false;
-        for &row in &current {
-            let kids = children_of(row)?;
-            if kids.is_empty() {
-                next.push(row);
-            } else {
-                let hits: Vec<u64> = kids
-                    .into_iter()
-                    .filter(|&k| bbox_of(k).map(|b| b.intersects(window)).unwrap_or(false))
-                    .collect();
-                if hits.is_empty() {
-                    next.push(row);
-                } else {
-                    descended = true;
-                    next.extend(hits);
-                }
-            }
-        }
-        if !descended || next.len() > budget {
-            break;
-        }
-        current = next;
-    }
-
-    // read only the selected rows
-    current
-        .into_iter()
-        .map(|row| {
-            let data = codec::bytes_to_f32s(&file.read_rows(&ds_cur, row, 1)?);
-            let uid = Uid(uids[row as usize]);
-            Ok(WindowGrid {
-                uid,
-                depth: uid.loc().depth(),
-                bbox: bbox_of(row)?,
-                data,
-            })
-        })
-        .collect()
-}
-
-// ---------------------------------------------------------------------------
-// byte-budgeted offline window over the LOD pyramid
-// ---------------------------------------------------------------------------
-
 /// Answer of a byte-budgeted window query.
 #[derive(Debug)]
 pub struct LodWindow {
@@ -181,150 +111,274 @@ pub struct LodWindow {
     /// depth/bbox.
     pub level: u32,
     /// Cell-data payload bytes fetched to answer (the budget's currency;
-    /// the topology/location indexes add a few KiB on top).
+    /// the topology/location indexes add a few KiB on top, paid once per
+    /// session).
     pub bytes_read: u64,
     /// True when the answer came from stored pyramid levels; false on the
     /// full-resolution or fallback paths.
     pub from_pyramid: bool,
 }
 
-/// Sliding-window query under a **byte budget**: serve `window` from the
-/// finest resolution whose cover fits `budget_bytes`, using the snapshot's
-/// LOD pyramid when it has one. Level 0 (full resolution) reads the tree's
-/// leaf grids; coarser levels read the pyramid datasets — a whole-domain
-/// overview costs one grid row, not the whole snapshot. The answer always
-/// holds at least one grid, even under a sub-grid budget. A pyramid-less
-/// snapshot falls back to the classic grid-count traversal with the budget
-/// converted to grids.
-pub fn offline_window_budgeted(
-    file: &H5File,
-    t: f64,
-    window: &BBox,
-    budget_bytes: u64,
-) -> Result<LodWindow> {
-    let row_bytes = ROW_BYTES;
-    let group = iokernel::ts_group(t);
-    let Some(idx) = LodIndex::open(file, &group)? else {
-        let budget_grids = (budget_bytes / row_bytes).max(1) as usize;
-        let grids = offline_window(file, t, window, budget_grids)?;
-        return Ok(LodWindow {
-            bytes_read: grids.len() as u64 * row_bytes,
-            grids,
-            level: 0,
-            from_pyramid: false,
-        });
-    };
-    let domain = iokernel::read_domain(file)?;
-    let d_max = idx.max_level();
-    // finest level whose whole-cover byte count fits the budget (the
-    // count is an O(1) upper bound, so the chosen level never bursts it);
-    // the root level is the floor — an answer is always affordable
-    let mut chosen = d_max;
-    for l in 0..=d_max {
-        if lod::intersect_count(&domain, d_max - l, window) * row_bytes <= budget_bytes {
-            chosen = l;
-            break;
-        }
-    }
-    if chosen == 0 {
-        let grids = offline_window(file, t, window, usize::MAX)?;
-        return Ok(LodWindow {
-            bytes_read: grids.len() as u64 * row_bytes,
-            grids,
-            level: 0,
-            from_pyramid: false,
-        });
-    }
-    read_pyramid_level(file, &idx, &domain, chosen, window, row_bytes)
+// ---------------------------------------------------------------------------
+// the offline read session
+// ---------------------------------------------------------------------------
+
+/// Tuning for a [`SnapshotReader`] session.
+#[derive(Clone, Copy, Debug)]
+pub struct SnapshotReaderOptions {
+    /// Byte budget of the session's private decoded-chunk cache
+    /// ([`DEFAULT_CHUNK_CACHE_BYTES`] by default). Size it to the working
+    /// set of the zoom sequence the session serves; `0` disables caching
+    /// (useful in tests that must observe on-disk bytes).
+    pub cache_bytes: u64,
 }
 
-/// Read the cover of `window` at pyramid level `l ≥ 1`. Coordinates an
-/// adaptive tree never stored resolve to their nearest stored ancestor
-/// (deduplicated), so the cover is complete at mixed depth.
-fn read_pyramid_level(
-    file: &H5File,
-    idx: &LodIndex,
-    domain: &BBox,
-    l: u32,
-    window: &BBox,
-    row_bytes: u64,
-) -> Result<LodWindow> {
-    let d_max = idx.max_level();
-    let depth = idx.level(l).ok_or_else(|| anyhow!("window: no lod level {l}"))?.depth;
-    let [ri, rj, rk] = lod::coord_range(domain, depth, window);
-    let mut picked: BTreeSet<(u32, u64)> = BTreeSet::new();
-    for i in ri.0..ri.1 {
-        for j in rj.0..rj.1 {
-            for k in rk.0..rk.1 {
-                let (mut lc, mut c) = (l, (i, j, k));
-                loop {
-                    let lvl = idx.level(lc).unwrap();
-                    let row = LocCode::from_coords(lvl.depth, c.0, c.1, c.2)
-                        .and_then(|loc| lvl.row_of(loc));
-                    if let Some(row) = row {
-                        picked.insert((lc, row));
-                        break;
+impl Default for SnapshotReaderOptions {
+    fn default() -> SnapshotReaderOptions {
+        SnapshotReaderOptions {
+            cache_bytes: DEFAULT_CHUNK_CACHE_BYTES,
+        }
+    }
+}
+
+/// A long-lived, epoch-pinned read session over one snapshot — the
+/// documented hot-path read API (see the [`crate::window`] module docs
+/// for the open → query* → drop lifecycle and the consistency contract).
+///
+/// The session owns a private descriptor on the file (so it survives — and
+/// stays consistent across — `&mut` use of the opener's handle), the
+/// parsed topology and [`LodIndex`], a byte-budgeted chunk cache, and an
+/// [`EpochPin`] on the opener's free-space manager. All queries are `&self`
+/// and may run concurrently from many threads.
+pub struct SnapshotReader {
+    /// Session-private handle: parsed from the last *committed* footer at
+    /// open, never refreshed — the snapshot-isolation the epoch pin keeps
+    /// byte-valid.
+    file: H5File,
+    pin: EpochPin,
+    t: f64,
+    /// Domain box from `/common` (absent on files without it; only the
+    /// pyramid level selection needs it).
+    domain: Option<BBox>,
+    /// Packed UID per snapshot row.
+    uids: Vec<u64>,
+    /// Bounding box per snapshot row.
+    bboxes: Vec<BBox>,
+    /// Child *rows* per snapshot row (empty = leaf).
+    children: Vec<Vec<u64>>,
+    ds_cur: Dataset,
+    lod: Option<LodIndex>,
+    /// Per-session counters ([`crate::metrics::names`]): index builds and
+    /// bytes (paid once at open), queries, grids and payload served.
+    pub metrics: Metrics,
+}
+
+impl SnapshotReader {
+    /// Open a session on the snapshot at time `t` with default options.
+    pub fn open(file: &H5File, t: f64) -> Result<SnapshotReader> {
+        SnapshotReader::open_with(file, t, &SnapshotReaderOptions::default())
+    }
+
+    /// Open a session on the snapshot at time `t`: pin `file`'s current
+    /// commit epoch, open a private descriptor on its path (landing on the
+    /// last committed state) and parse the topology + LOD indexes once.
+    pub fn open_with(
+        file: &H5File,
+        t: f64,
+        opts: &SnapshotReaderOptions,
+    ) -> Result<SnapshotReader> {
+        // pin before the fresh open: a commit racing the open can only
+        // move the opened state *past* the pinned epoch, so the pin is
+        // conservative (it may park slightly more, never less)
+        let pin = file.pin_epoch();
+        let rf = H5File::open(&file.path)?;
+        rf.set_chunk_cache_budget(opts.cache_bytes);
+        let group = iokernel::ts_group(t);
+        let ds_prop = rf.dataset(&group, "grid_property")?;
+        let ds_sub = rf.dataset(&group, "subgrid_uid")?;
+        let ds_bbox = rf.dataset(&group, "bounding_box")?;
+        let ds_cur = rf.dataset(&group, "current_cell_data")?;
+        let uids = rf.read_all_u64(&ds_prop)?;
+        if uids.is_empty() {
+            bail!("window: empty snapshot at t={t}");
+        }
+        // UID → row index (the offline analogue of the neighbourhood
+        // server), resolved once into per-row child links
+        let row_of: HashMap<u64, u64> = uids
+            .iter()
+            .enumerate()
+            .map(|(r, &u)| (u, r as u64))
+            .collect();
+        let bbox_raw = rf.read_all_f64(&ds_bbox)?;
+        let bboxes: Vec<BBox> = bbox_raw
+            .chunks_exact(6)
+            .map(|b| BBox {
+                min: [b[0], b[1], b[2]],
+                max: [b[3], b[4], b[5]],
+            })
+            .collect();
+        let subs = rf.read_all_u64(&ds_sub)?;
+        let children: Vec<Vec<u64>> = subs
+            .chunks_exact(8)
+            .map(|c| {
+                c.iter()
+                    .filter(|&&u| u != 0)
+                    .filter_map(|u| row_of.get(u).copied())
+                    .collect()
+            })
+            .collect();
+        if bboxes.len() != uids.len() || children.len() != uids.len() {
+            bail!("window: snapshot topology datasets disagree on row count");
+        }
+        let domain = iokernel::read_domain(&rf).ok();
+        let lod = LodIndex::open(&rf, &group)?;
+        let metrics = Metrics::new();
+        metrics.add(names::READER_INDEX_BUILDS, 1);
+        // everything read so far is index, paid once per session
+        metrics.add(names::READER_INDEX_BYTES, rf.read_stats().read_bytes);
+        Ok(SnapshotReader {
+            file: rf,
+            pin,
+            t,
+            domain,
+            uids,
+            bboxes,
+            children,
+            ds_cur,
+            lod,
+            metrics,
+        })
+    }
+
+    /// Elapsed time of the snapshot this session serves.
+    pub fn t(&self) -> f64 {
+        self.t
+    }
+
+    /// Number of grids (rows) in the snapshot.
+    pub fn n_grids(&self) -> usize {
+        self.uids.len()
+    }
+
+    /// True when the snapshot stores a LOD pyramid.
+    pub fn has_pyramid(&self) -> bool {
+        self.lod.is_some()
+    }
+
+    /// The commit epoch this session pinned at open (diagnostics).
+    pub fn pinned_epoch(&self) -> u64 {
+        self.pin.epoch()
+    }
+
+    /// Physical-read accounting of the session's private handle: bytes
+    /// actually read from disk and the chunk-cache hit/miss split.
+    pub fn read_stats(&self) -> ReadStats {
+        self.file.read_stats()
+    }
+
+    fn note_query(&self, grids: usize) {
+        self.metrics.add(names::READER_QUERIES, 1);
+        self.metrics.add(names::READER_GRIDS, grids as u64);
+        self.metrics
+            .add(names::READER_PAYLOAD_BYTES, grids as u64 * ROW_BYTES);
+    }
+
+    fn read_grid(&self, row: u64) -> Result<WindowGrid> {
+        let data = codec::bytes_to_f32s(&self.file.read_rows(&self.ds_cur, row, 1)?);
+        let uid = Uid(self.uids[row as usize]);
+        Ok(WindowGrid {
+            uid,
+            depth: uid.loc().depth(),
+            bbox: self.bboxes[row as usize],
+            data,
+        })
+    }
+
+    /// The classic LOD descent from the root (row 0) over the in-memory
+    /// topology index — identical to `NeighbourhoodServer::select_window`
+    /// but over snapshot rows; only the selected rows' cell data touches
+    /// the file.
+    fn classic(&self, window: &BBox, budget: usize) -> Result<Vec<WindowGrid>> {
+        let mut current: Vec<u64> = if self.bboxes[0].intersects(window) {
+            vec![0]
+        } else {
+            Vec::new()
+        };
+        loop {
+            let mut next = Vec::with_capacity(current.len() * 4);
+            let mut descended = false;
+            for &row in &current {
+                let kids = &self.children[row as usize];
+                if kids.is_empty() {
+                    next.push(row);
+                } else {
+                    let hits: Vec<u64> = kids
+                        .iter()
+                        .copied()
+                        .filter(|&k| self.bboxes[k as usize].intersects(window))
+                        .collect();
+                    if hits.is_empty() {
+                        next.push(row);
+                    } else {
+                        descended = true;
+                        next.extend(hits);
                     }
-                    if lc >= d_max {
-                        bail!("window: lod pyramid misses an ancestor for ({i},{j},{k})");
-                    }
-                    lc += 1;
-                    c = (c.0 / 2, c.1 / 2, c.2 / 2);
                 }
             }
+            if !descended || next.len() > budget {
+                break;
+            }
+            current = next;
         }
+        current.into_iter().map(|row| self.read_grid(row)).collect()
     }
-    let mut grids = Vec::with_capacity(picked.len());
-    let mut bytes_read = 0u64;
-    for &(lc, row) in &picked {
-        let lvl = idx.level(lc).unwrap();
-        let data = lvl.read_row(file, row)?;
-        bytes_read += row_bytes;
-        let loc = lvl.locs[row as usize];
-        let (i, j, k) = loc.coords();
-        grids.push(WindowGrid {
-            uid: Uid::new(0, 0, loc),
-            depth: loc.depth(),
-            bbox: lod::grid_bbox(domain, loc.depth(), i, j, k),
-            data,
-        });
-    }
-    Ok(LodWindow {
-        grids,
-        level: l,
-        bytes_read,
-        from_pyramid: true,
-    })
-}
 
-/// Progressive refinement: stream `window` coarse-to-fine — the root level
-/// first (immediate first paint), then each finer level while the
-/// *cumulative* bytes stay within `total_budget_bytes`. The last element
-/// is the finest affordable answer; the first is always emitted so the
-/// viewer never starves. Falls back to a single budgeted answer on
-/// pyramid-less snapshots.
-pub fn offline_window_progressive(
-    file: &H5File,
-    t: f64,
-    window: &BBox,
-    total_budget_bytes: u64,
-) -> Result<Vec<LodWindow>> {
-    let row_bytes = ROW_BYTES;
-    let group = iokernel::ts_group(t);
-    let Some(idx) = LodIndex::open(file, &group)? else {
-        return Ok(vec![offline_window_budgeted(file, t, window, total_budget_bytes)?]);
-    };
-    let domain = iokernel::read_domain(file)?;
-    let d_max = idx.max_level();
-    let mut out: Vec<LodWindow> = Vec::new();
-    let mut spent = 0u64;
-    for l in (0..=d_max).rev() {
-        let cost = lod::intersect_count(&domain, d_max - l, window) * row_bytes;
-        if !out.is_empty() && spent + cost > total_budget_bytes {
-            break;
+    /// Sliding-window query bounded by a grid-count `budget`: large
+    /// windows come back coarse, small windows descend to the leaves.
+    pub fn window(&self, window: &BBox, budget: usize) -> Result<Vec<WindowGrid>> {
+        let grids = self.classic(window, budget)?;
+        self.note_query(grids.len());
+        Ok(grids)
+    }
+
+    /// Sliding-window query under a **byte budget**: serve `window` from
+    /// the finest resolution whose cover fits `budget_bytes`, using the
+    /// snapshot's LOD pyramid when it has one. Level 0 (full resolution)
+    /// reads the tree's leaf grids; coarser levels read the pyramid
+    /// datasets — a whole-domain overview costs one grid row, not the
+    /// whole snapshot. The answer always holds at least one grid, even
+    /// under a sub-grid budget. A pyramid-less snapshot falls back to the
+    /// classic grid-count traversal with the budget converted to grids.
+    pub fn budgeted(&self, window: &BBox, budget_bytes: u64) -> Result<LodWindow> {
+        let row_bytes = ROW_BYTES;
+        let Some(idx) = &self.lod else {
+            let budget_grids = (budget_bytes / row_bytes).max(1) as usize;
+            let grids = self.classic(window, budget_grids)?;
+            self.note_query(grids.len());
+            return Ok(LodWindow {
+                bytes_read: grids.len() as u64 * row_bytes,
+                grids,
+                level: 0,
+                from_pyramid: false,
+            });
+        };
+        let domain = self.domain.ok_or_else(|| {
+            anyhow!("window: snapshot stores a pyramid but /common carries no domain box")
+        })?;
+        let d_max = idx.max_level();
+        // finest level whose whole-cover byte count fits the budget (the
+        // count is an O(1) upper bound, so the chosen level never bursts
+        // it); the root level is the floor — an answer is always
+        // affordable
+        let mut chosen = d_max;
+        for l in 0..=d_max {
+            if lod::intersect_count(&domain, d_max - l, window) * row_bytes <= budget_bytes {
+                chosen = l;
+                break;
+            }
         }
-        let step = if l == 0 {
-            let grids = offline_window(file, t, window, usize::MAX)?;
+        let out = if chosen == 0 {
+            let grids = self.classic(window, usize::MAX)?;
             LodWindow {
                 bytes_read: grids.len() as u64 * row_bytes,
                 grids,
@@ -332,16 +386,179 @@ pub fn offline_window_progressive(
                 from_pyramid: false,
             }
         } else {
-            read_pyramid_level(file, &idx, &domain, l, window, row_bytes)?
+            self.read_pyramid_level(idx, &domain, chosen, window)?
         };
-        spent += step.bytes_read;
-        out.push(step);
+        self.note_query(out.grids.len());
+        Ok(out)
     }
-    Ok(out)
+
+    /// Read the cover of `window` at pyramid level `l ≥ 1`. Coordinates an
+    /// adaptive tree never stored resolve to their nearest stored ancestor
+    /// (deduplicated), so the cover is complete at mixed depth.
+    fn read_pyramid_level(
+        &self,
+        idx: &LodIndex,
+        domain: &BBox,
+        l: u32,
+        window: &BBox,
+    ) -> Result<LodWindow> {
+        let row_bytes = ROW_BYTES;
+        let d_max = idx.max_level();
+        let depth = idx
+            .level(l)
+            .ok_or_else(|| anyhow!("window: no lod level {l}"))?
+            .depth;
+        let [ri, rj, rk] = lod::coord_range(domain, depth, window);
+        let mut picked: BTreeSet<(u32, u64)> = BTreeSet::new();
+        for i in ri.0..ri.1 {
+            for j in rj.0..rj.1 {
+                for k in rk.0..rk.1 {
+                    let (mut lc, mut c) = (l, (i, j, k));
+                    loop {
+                        let lvl = idx.level(lc).unwrap();
+                        let row = LocCode::from_coords(lvl.depth, c.0, c.1, c.2)
+                            .and_then(|loc| lvl.row_of(loc));
+                        if let Some(row) = row {
+                            picked.insert((lc, row));
+                            break;
+                        }
+                        if lc >= d_max {
+                            bail!("window: lod pyramid misses an ancestor for ({i},{j},{k})");
+                        }
+                        lc += 1;
+                        c = (c.0 / 2, c.1 / 2, c.2 / 2);
+                    }
+                }
+            }
+        }
+        let mut grids = Vec::with_capacity(picked.len());
+        let mut bytes_read = 0u64;
+        for &(lc, row) in &picked {
+            let lvl = idx.level(lc).unwrap();
+            let data = lvl.read_row(&self.file, row)?;
+            bytes_read += row_bytes;
+            let loc = lvl.locs[row as usize];
+            let (i, j, k) = loc.coords();
+            grids.push(WindowGrid {
+                uid: Uid::new(0, 0, loc),
+                depth: loc.depth(),
+                bbox: lod::grid_bbox(domain, loc.depth(), i, j, k),
+                data,
+            });
+        }
+        Ok(LodWindow {
+            grids,
+            level: l,
+            bytes_read,
+            from_pyramid: true,
+        })
+    }
+
+    /// Progressive refinement: stream `window` coarse-to-fine — the root
+    /// level first (immediate first paint), then each finer level while
+    /// the *cumulative* bytes stay within `total_budget_bytes`. The last
+    /// element is the finest affordable answer; the first is always
+    /// emitted so the viewer never starves. Falls back to a single
+    /// budgeted answer on pyramid-less snapshots.
+    pub fn progressive(
+        &self,
+        window: &BBox,
+        total_budget_bytes: u64,
+    ) -> Result<Vec<LodWindow>> {
+        let row_bytes = ROW_BYTES;
+        let Some(idx) = &self.lod else {
+            return Ok(vec![self.budgeted(window, total_budget_bytes)?]);
+        };
+        let domain = self.domain.ok_or_else(|| {
+            anyhow!("window: snapshot stores a pyramid but /common carries no domain box")
+        })?;
+        let d_max = idx.max_level();
+        let mut out: Vec<LodWindow> = Vec::new();
+        let mut spent = 0u64;
+        let mut total_grids = 0usize;
+        for l in (0..=d_max).rev() {
+            let cost = lod::intersect_count(&domain, d_max - l, window) * row_bytes;
+            if !out.is_empty() && spent + cost > total_budget_bytes {
+                break;
+            }
+            let step = if l == 0 {
+                let grids = self.classic(window, usize::MAX)?;
+                LodWindow {
+                    bytes_read: grids.len() as u64 * row_bytes,
+                    grids,
+                    level: 0,
+                    from_pyramid: false,
+                }
+            } else {
+                self.read_pyramid_level(idx, &domain, l, window)?
+            };
+            spent += step.bytes_read;
+            total_grids += step.grids.len();
+            out.push(step);
+        }
+        self.note_query(total_grids);
+        Ok(out)
+    }
 }
 
 // ---------------------------------------------------------------------------
-// online window: collector process + client
+// deprecated per-call shims over a throwaway session
+// ---------------------------------------------------------------------------
+
+/// Offline sliding-window query against the snapshot at time `t`.
+///
+/// Deprecated shim over a throwaway [`SnapshotReader`]: every call
+/// re-opens the file and re-parses the topology index. It answers from the
+/// last *committed* state of `file`, exactly like a fresh open — which
+/// also means `file.path` must still exist on disk (a session opens its
+/// own descriptor; the passed handle's is not reused).
+#[deprecated(
+    note = "open a `SnapshotReader` session — the free functions re-parse the snapshot index on every call"
+)]
+pub fn offline_window(
+    file: &H5File,
+    t: f64,
+    window: &BBox,
+    budget: usize,
+) -> Result<Vec<WindowGrid>> {
+    SnapshotReader::open(file, t)?.window(window, budget)
+}
+
+/// Byte-budgeted offline window query (see [`SnapshotReader::budgeted`]).
+///
+/// Deprecated shim over a throwaway [`SnapshotReader`]: every call rebuilds
+/// the `LodIndex` (re-reading every `level_<ℓ>_locs` dataset) — the exact
+/// hot-path cost the session amortises to once.
+#[deprecated(
+    note = "open a `SnapshotReader` session — the free functions rebuild the LodIndex on every call"
+)]
+pub fn offline_window_budgeted(
+    file: &H5File,
+    t: f64,
+    window: &BBox,
+    budget_bytes: u64,
+) -> Result<LodWindow> {
+    SnapshotReader::open(file, t)?.budgeted(window, budget_bytes)
+}
+
+/// Progressive coarse-to-fine offline window query (see
+/// [`SnapshotReader::progressive`]).
+///
+/// Deprecated shim over a throwaway [`SnapshotReader`].
+#[deprecated(
+    note = "open a `SnapshotReader` session — the free functions rebuild the LodIndex on every call"
+)]
+pub fn offline_window_progressive(
+    file: &H5File,
+    t: f64,
+    window: &BBox,
+    total_budget_bytes: u64,
+) -> Result<Vec<LodWindow>> {
+    SnapshotReader::open(file, t)?.progressive(window, total_budget_bytes)
+}
+
+// ---------------------------------------------------------------------------
+// online window: collector process + client sessions
 // ---------------------------------------------------------------------------
 
 const REQ_MAGIC: u32 = 0x5357_494E; // "SWIN"
@@ -354,26 +571,53 @@ const LOD_REQ_MAGIC: u32 = 0x5357_4C44; // "SWLD"
 const REC_LEN: usize = 8 + 4 + 48 + ROW_ELEMS * 4;
 
 /// Handle to a running collector thread.
+///
+/// Each accepted connection is served by its own thread running a
+/// **session loop**: any number of `SWIN` / `SWLD` requests over one
+/// socket until the client hangs up — the online counterpart of the
+/// offline [`SnapshotReader`] session. Old one-shot clients are simply
+/// sessions of length one, so the wire protocols are unchanged.
 pub struct Collector {
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
+    sessions: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
 }
 
 impl Collector {
     /// Spawn the collector on an ephemeral localhost port, serving
-    /// sliding-window queries against the shared simulation state.
+    /// sliding-window query sessions against the shared simulation state.
     pub fn spawn(sim: Arc<RwLock<Simulation>>) -> Result<Collector> {
         let listener = TcpListener::bind("127.0.0.1:0").context("collector bind")?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
+        let sessions: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let (stop2, sessions2) = (stop.clone(), sessions.clone());
         let handle = std::thread::spawn(move || {
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        let _ = handle_client(stream, &sim);
+                        let sim = sim.clone();
+                        let stop = stop2.clone();
+                        let h = std::thread::spawn(move || {
+                            let _ = serve_session(stream, &sim, &stop);
+                        });
+                        // reap finished sessions so a long-lived collector
+                        // tracks concurrent connections, not every
+                        // connection it ever accepted
+                        let mut sessions = sessions2.lock().unwrap();
+                        let mut live = Vec::with_capacity(sessions.len() + 1);
+                        for s in sessions.drain(..) {
+                            if s.is_finished() {
+                                let _ = s.join();
+                            } else {
+                                live.push(s);
+                            }
+                        }
+                        live.push(h);
+                        *sessions = live;
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(2));
@@ -386,6 +630,7 @@ impl Collector {
             addr,
             stop,
             handle: Some(handle),
+            sessions,
         })
     }
 }
@@ -396,37 +641,86 @@ impl Drop for Collector {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+        let sessions = std::mem::take(&mut *self.sessions.lock().unwrap());
+        for h in sessions {
+            let _ = h.join();
+        }
     }
 }
 
-fn handle_client(mut stream: TcpStream, sim: &Arc<RwLock<Simulation>>) -> Result<()> {
+/// Read exactly `buf.len()` bytes, riding out the session socket's read
+/// timeout so the thread can observe `stop`. With `eof_ok`, a clean EOF
+/// before the first byte returns `Ok(false)` (end of session); EOF
+/// mid-record is always an error.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    eof_ok: bool,
+) -> Result<bool> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            bail!("collector: shutting down");
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) if filled == 0 && eof_ok => return Ok(false),
+            Ok(0) => bail!("collector: connection closed mid-request"),
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+/// One server-side session (steps (2)–(5) of the Fig 3 query path, looped):
+/// serve any mix of fixed-count and byte-budgeted requests over one
+/// connection until the client hangs up.
+fn serve_session(
+    mut stream: TcpStream,
+    sim: &Arc<RwLock<Simulation>>,
+    stop: &AtomicBool,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
-    // ---- request: magic, bbox, budget --------------------------------- (1)
+    // short read timeout so an idle session notices a collector shutdown;
+    // a write timeout so a stalled client (never draining its response)
+    // cannot park this thread in write_all forever — Collector::drop joins
+    // every session thread, so an unbounded write would hang the host
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(25)))?;
+    stream.set_write_timeout(Some(std::time::Duration::from_secs(5)))?;
     let mut magic = [0u8; 4];
-    stream.read_exact(&mut magic)?;
-    let mut bbox_buf = [0u8; 48];
-    let out = match u32::from_le_bytes(magic) {
-        REQ_MAGIC => {
-            stream.read_exact(&mut bbox_buf)?;
-            let window = decode_bbox(&bbox_buf);
-            let mut b = [0u8; 4];
-            stream.read_exact(&mut b)?;
-            respond(sim, &window, u32::from_le_bytes(b) as usize, false)?
+    loop {
+        if !read_full(&mut stream, &mut magic, stop, true)? {
+            return Ok(()); // clean end of session
         }
-        LOD_REQ_MAGIC => {
-            stream.read_exact(&mut bbox_buf)?;
-            let window = decode_bbox(&bbox_buf);
-            let mut b = [0u8; 8];
-            stream.read_exact(&mut b)?;
-            // byte budget → grid budget: the server-side level selection
-            // then picks the finest depth whose cover fits it
-            let budget = (u64::from_le_bytes(b) / REC_LEN as u64).max(1) as usize;
-            respond(sim, &window, budget, true)?
-        }
-        _ => bail!("collector: bad request magic"),
-    };
-    stream.write_all(&out)?;
-    Ok(())
+        let mut bbox_buf = [0u8; 48];
+        read_full(&mut stream, &mut bbox_buf, stop, false)?;
+        let window = decode_bbox(&bbox_buf);
+        let out = match u32::from_le_bytes(magic) {
+            REQ_MAGIC => {
+                let mut b = [0u8; 4];
+                read_full(&mut stream, &mut b, stop, false)?;
+                respond(sim, &window, u32::from_le_bytes(b) as usize, false)?
+            }
+            LOD_REQ_MAGIC => {
+                let mut b = [0u8; 8];
+                read_full(&mut stream, &mut b, stop, false)?;
+                // byte budget → grid budget: the server-side level
+                // selection then picks the finest depth whose cover fits
+                let budget = (u64::from_le_bytes(b) / REC_LEN as u64).max(1) as usize;
+                respond(sim, &window, budget, true)?
+            }
+            _ => bail!("collector: bad request magic"),
+        };
+        stream.write_all(&out)?;
+    }
 }
 
 fn decode_bbox(buf: &[u8; 48]) -> BBox {
@@ -437,11 +731,10 @@ fn decode_bbox(buf: &[u8; 48]) -> BBox {
     }
 }
 
-/// Steps (2)–(5) of the Fig 3 query path: the neighbourhood server selects
-/// the grids at the budget's level of detail, the owning processes provide
-/// the data, the collector serialises the response. `lod_header` prefixes
-/// the record stream with the finest tree depth served (the budgeted
-/// protocol's level report).
+/// The neighbourhood server selects the grids at the budget's level of
+/// detail, the owning processes provide the data, the collector serialises
+/// the response. `lod_header` prefixes the record stream with the finest
+/// tree depth served (the budgeted protocol's level report).
 fn respond(
     sim: &Arc<RwLock<Simulation>>,
     window: &BBox,
@@ -507,19 +800,6 @@ fn read_grid_records(stream: &mut TcpStream) -> Result<Vec<WindowGrid>> {
     Ok(grids)
 }
 
-/// Front-end client: one sliding-window query over TCP.
-pub fn query(addr: SocketAddr, window: &BBox, budget: u32) -> Result<Vec<WindowGrid>> {
-    let mut stream = TcpStream::connect(addr).context("window client connect")?;
-    let mut req = Vec::with_capacity(56);
-    req.extend_from_slice(&REQ_MAGIC.to_le_bytes());
-    for v in window.min.iter().chain(window.max.iter()) {
-        req.extend_from_slice(&v.to_le_bytes());
-    }
-    req.extend_from_slice(&budget.to_le_bytes());
-    stream.write_all(&req)?;
-    read_grid_records(&mut stream)
-}
-
 /// Answer of a byte-budgeted online query.
 #[derive(Debug)]
 pub struct OnlineLodWindow {
@@ -531,32 +811,78 @@ pub struct OnlineLodWindow {
     pub bytes: u64,
 }
 
-/// Front-end client: one **byte-budgeted** sliding-window query — the
-/// collector picks the finest level of detail whose cover fits
-/// `budget_bytes` and reports the depth it served.
+/// Client side of one online session: a persistent connection to the
+/// [`Collector`] over which any number of fixed-count and byte-budgeted
+/// queries can be issued — the wire twin of the offline
+/// [`SnapshotReader`]. Dropping the client ends the server-side session.
+pub struct WindowClient {
+    stream: TcpStream,
+}
+
+impl WindowClient {
+    /// Connect one session to a running collector.
+    pub fn connect(addr: SocketAddr) -> Result<WindowClient> {
+        let stream = TcpStream::connect(addr).context("window client connect")?;
+        stream.set_nodelay(true).ok();
+        Ok(WindowClient { stream })
+    }
+
+    /// Fixed-grid-count sliding-window query (`SWIN`).
+    pub fn window(&mut self, window: &BBox, budget: u32) -> Result<Vec<WindowGrid>> {
+        let mut req = Vec::with_capacity(56);
+        req.extend_from_slice(&REQ_MAGIC.to_le_bytes());
+        for v in window.min.iter().chain(window.max.iter()) {
+            req.extend_from_slice(&v.to_le_bytes());
+        }
+        req.extend_from_slice(&budget.to_le_bytes());
+        self.stream.write_all(&req)?;
+        read_grid_records(&mut self.stream)
+    }
+
+    /// Byte-budgeted query (`SWLD`): the collector picks the finest level
+    /// of detail whose cover fits `budget_bytes` and reports the depth it
+    /// served.
+    pub fn budgeted(&mut self, window: &BBox, budget_bytes: u64) -> Result<OnlineLodWindow> {
+        let mut req = Vec::with_capacity(60);
+        req.extend_from_slice(&LOD_REQ_MAGIC.to_le_bytes());
+        for v in window.min.iter().chain(window.max.iter()) {
+            req.extend_from_slice(&v.to_le_bytes());
+        }
+        req.extend_from_slice(&budget_bytes.to_le_bytes());
+        self.stream.write_all(&req)?;
+        let mut d = [0u8; 4];
+        self.stream.read_exact(&mut d)?;
+        let depth = u32::from_le_bytes(d);
+        let grids = read_grid_records(&mut self.stream)?;
+        let bytes = (grids.len() * REC_LEN) as u64;
+        Ok(OnlineLodWindow {
+            grids,
+            depth,
+            bytes,
+        })
+    }
+}
+
+/// Front-end client: one sliding-window query over TCP.
+///
+/// Deprecated shim: connects a throwaway [`WindowClient`] session per
+/// query.
+#[deprecated(note = "connect a `WindowClient` session — per-query connections pay a TCP handshake per request")]
+pub fn query(addr: SocketAddr, window: &BBox, budget: u32) -> Result<Vec<WindowGrid>> {
+    WindowClient::connect(addr)?.window(window, budget)
+}
+
+/// Front-end client: one **byte-budgeted** sliding-window query.
+///
+/// Deprecated shim: connects a throwaway [`WindowClient`] session per
+/// query.
+#[deprecated(note = "connect a `WindowClient` session — per-query connections pay a TCP handshake per request")]
 pub fn query_budgeted(
     addr: SocketAddr,
     window: &BBox,
     budget_bytes: u64,
 ) -> Result<OnlineLodWindow> {
-    let mut stream = TcpStream::connect(addr).context("window client connect")?;
-    let mut req = Vec::with_capacity(60);
-    req.extend_from_slice(&LOD_REQ_MAGIC.to_le_bytes());
-    for v in window.min.iter().chain(window.max.iter()) {
-        req.extend_from_slice(&v.to_le_bytes());
-    }
-    req.extend_from_slice(&budget_bytes.to_le_bytes());
-    stream.write_all(&req)?;
-    let mut d = [0u8; 4];
-    stream.read_exact(&mut d)?;
-    let depth = u32::from_le_bytes(d);
-    let grids = read_grid_records(&mut stream)?;
-    let bytes = (grids.len() * REC_LEN) as u64;
-    Ok(OnlineLodWindow {
-        grids,
-        depth,
-        bytes,
-    })
+    WindowClient::connect(addr)?.budgeted(window, budget_bytes)
 }
 
 #[cfg(test)]
@@ -586,41 +912,48 @@ mod tests {
     }
 
     #[test]
-    fn offline_window_full_domain_coarse() {
+    fn session_window_full_domain_coarse() {
         let p = std::env::temp_dir().join(format!("win_off_{}.h5", std::process::id()));
         let s = sim(2);
         let io = ParallelIo::new(Machine::local(), IoTuning::default(), 3);
         let mut f = H5File::create(&p, 1).unwrap();
         iokernel::write_common(&mut f, &s.params, &s.nbs.tree, 3).unwrap();
         iokernel::write_snapshot(&mut f, &io, &s.nbs.tree, &s.part, &s.grids, 0.5).unwrap();
+        let reader = SnapshotReader::open(&f, 0.5).unwrap();
+        assert_eq!(reader.n_grids(), 73);
         // budget 1 → root only (coarsest LOD)
-        let w = offline_window(&f, 0.5, &BBox::unit(), 1).unwrap();
+        let w = reader.window(&BBox::unit(), 1).unwrap();
         assert_eq!(w.len(), 1);
         assert_eq!(w[0].depth, 0);
         assert_eq!(w[0].data.len(), ROW_ELEMS);
         // budget 8 → depth 1
-        let w = offline_window(&f, 0.5, &BBox::unit(), 8).unwrap();
+        let w = reader.window(&BBox::unit(), 8).unwrap();
         assert_eq!(w.len(), 8);
         assert!(w.iter().all(|g| g.depth == 1));
         // large budget → all 64 leaves
-        let w = offline_window(&f, 0.5, &BBox::unit(), 1000).unwrap();
+        let w = reader.window(&BBox::unit(), 1000).unwrap();
         assert_eq!(w.len(), 64);
+        // the session counted its queries and built the index exactly once
+        assert_eq!(reader.metrics.counter(names::READER_QUERIES), 3);
+        assert_eq!(reader.metrics.counter(names::READER_INDEX_BUILDS), 1);
+        assert_eq!(reader.metrics.counter(names::READER_GRIDS), 73);
         std::fs::remove_file(&p).ok();
     }
 
     #[test]
-    fn offline_window_zoom_returns_correct_data() {
+    fn session_window_zoom_returns_correct_data() {
         let p = std::env::temp_dir().join(format!("win_zoom_{}.h5", std::process::id()));
         let s = sim(1);
         let io = ParallelIo::new(Machine::local(), IoTuning::default(), 3);
         let mut f = H5File::create(&p, 1).unwrap();
         iokernel::write_common(&mut f, &s.params, &s.nbs.tree, 3).unwrap();
         iokernel::write_snapshot(&mut f, &io, &s.nbs.tree, &s.part, &s.grids, 0.0).unwrap();
+        let reader = SnapshotReader::open(&f, 0.0).unwrap();
         let corner = BBox {
             min: [0.0; 3],
             max: [0.2; 3],
         };
-        let w = offline_window(&f, 0.0, &corner, 64).unwrap();
+        let w = reader.window(&corner, 64).unwrap();
         assert_eq!(w.len(), 1, "one leaf covers the corner window");
         // its pressure payload equals the painted arena index
         let idx = s
@@ -636,7 +969,7 @@ mod tests {
     }
 
     #[test]
-    fn offline_window_identical_on_compressed_and_raw_snapshots() {
+    fn session_window_identical_on_compressed_and_raw_snapshots() {
         let p = std::env::temp_dir().join(format!("win_comp_{}.h5", std::process::id()));
         let s = sim(2);
         let io = ParallelIo::new(Machine::local(), IoTuning::default(), 3);
@@ -664,9 +997,11 @@ mod tests {
         .unwrap();
         assert!(comp.io.stored_bytes < comp.io.bytes);
         // every zoom level returns identical grids + payloads on both
+        let ra = SnapshotReader::open(&f, 0.0).unwrap();
+        let rb = SnapshotReader::open(&f, 1.0).unwrap();
         for budget in [1usize, 8, 1000] {
-            let a = offline_window(&f, 0.0, &BBox::unit(), budget).unwrap();
-            let b = offline_window(&f, 1.0, &BBox::unit(), budget).unwrap();
+            let a = ra.window(&BBox::unit(), budget).unwrap();
+            let b = rb.window(&BBox::unit(), budget).unwrap();
             assert_eq!(a.len(), b.len(), "budget {budget}");
             for (ga, gb) in a.iter().zip(&b) {
                 assert_eq!(ga.uid.0, gb.uid.0);
@@ -692,13 +1027,15 @@ mod tests {
     fn budgeted_window_serves_pyramid_levels() {
         let s = sim(2);
         let f = snapshot_file("lod_levels", &s, 0.5);
+        let reader = SnapshotReader::open(&f, 0.5).unwrap();
+        assert!(reader.has_pyramid());
         // generous budget → full resolution, same grids as the classic path
-        let full = offline_window_budgeted(&f, 0.5, &BBox::unit(), u64::MAX).unwrap();
+        let full = reader.budgeted(&BBox::unit(), u64::MAX).unwrap();
         assert_eq!(full.level, 0);
         assert_eq!(full.grids.len(), 64);
         assert_eq!(full.bytes_read, 64 * RB);
         // an 8-grid budget → pyramid level 1 (the 8 depth-1 folds)
-        let mid = offline_window_budgeted(&f, 0.5, &BBox::unit(), 8 * RB).unwrap();
+        let mid = reader.budgeted(&BBox::unit(), 8 * RB).unwrap();
         assert_eq!(mid.level, 1);
         assert!(mid.from_pyramid);
         assert_eq!(mid.grids.len(), 8);
@@ -710,11 +1047,14 @@ mod tests {
         let child = s.nbs.tree.lookup(g1.uid.loc().child(0)).unwrap();
         assert_eq!(g1.data[var::P * DGRID_CELLS], child as f32);
         // a one-grid budget → the root overview, 1/64 of the full bytes
-        let root = offline_window_budgeted(&f, 0.5, &BBox::unit(), RB).unwrap();
+        let root = reader.budgeted(&BBox::unit(), RB).unwrap();
         assert_eq!(root.level, 2);
         assert_eq!(root.grids.len(), 1);
         assert_eq!(root.grids[0].depth, 0);
         assert_eq!(root.bytes_read, RB);
+        // one session, three queries, one index build
+        assert_eq!(reader.metrics.counter(names::READER_INDEX_BUILDS), 1);
+        assert_eq!(reader.metrics.counter(names::READER_QUERIES), 3);
         std::fs::remove_file(&f.path).ok();
     }
 
@@ -722,28 +1062,27 @@ mod tests {
     fn budgeted_zoom_descends_levels_at_fixed_budget() {
         let s = sim(2);
         let f = snapshot_file("lod_zoom", &s, 0.0);
+        let reader = SnapshotReader::open(&f, 0.0).unwrap();
         let budget = 4 * RB;
-        let whole = offline_window_budgeted(&f, 0.0, &BBox::unit(), budget).unwrap();
-        let octant = offline_window_budgeted(
-            &f,
-            0.0,
-            &BBox {
-                min: [0.0; 3],
-                max: [0.5; 3],
-            },
-            budget,
-        )
-        .unwrap();
-        let corner = offline_window_budgeted(
-            &f,
-            0.0,
-            &BBox {
-                min: [0.0; 3],
-                max: [0.25; 3],
-            },
-            budget,
-        )
-        .unwrap();
+        let whole = reader.budgeted(&BBox::unit(), budget).unwrap();
+        let octant = reader
+            .budgeted(
+                &BBox {
+                    min: [0.0; 3],
+                    max: [0.5; 3],
+                },
+                budget,
+            )
+            .unwrap();
+        let corner = reader
+            .budgeted(
+                &BBox {
+                    min: [0.0; 3],
+                    max: [0.25; 3],
+                },
+                budget,
+            )
+            .unwrap();
         // shrinking the window at a fixed byte budget lands on finer levels
         assert_eq!(whole.level, 2);
         assert_eq!(octant.level, 1);
@@ -759,9 +1098,9 @@ mod tests {
     fn progressive_refinement_streams_coarse_to_fine() {
         let s = sim(2);
         let f = snapshot_file("lod_prog", &s, 0.0);
+        let reader = SnapshotReader::open(&f, 0.0).unwrap();
         // budget for the whole cascade: 1 + 8 + 64 grids
-        let steps =
-            offline_window_progressive(&f, 0.0, &BBox::unit(), 73 * RB).unwrap();
+        let steps = reader.progressive(&BBox::unit(), 73 * RB).unwrap();
         assert_eq!(steps.len(), 3);
         assert_eq!(
             steps.iter().map(|s| s.level).collect::<Vec<_>>(),
@@ -772,7 +1111,7 @@ mod tests {
         let total: u64 = steps.iter().map(|s| s.bytes_read).sum();
         assert!(total <= 73 * RB);
         // a sub-grid budget still paints the coarsest answer
-        let tiny = offline_window_progressive(&f, 0.0, &BBox::unit(), 1).unwrap();
+        let tiny = reader.progressive(&BBox::unit(), 1).unwrap();
         assert_eq!(tiny.len(), 1);
         assert_eq!(tiny[0].level, 2);
         std::fs::remove_file(&f.path).ok();
@@ -791,11 +1130,13 @@ mod tests {
         };
         iokernel::write_snapshot_with(&mut f, &io, &s.nbs.tree, &s.part, &s.grids, 0.0, &opts)
             .unwrap();
+        let reader = SnapshotReader::open(&f, 0.0).unwrap();
+        assert!(!reader.has_pyramid());
         // the classic API answers exactly as before the pyramid existed
-        let classic = offline_window(&f, 0.0, &BBox::unit(), 8).unwrap();
+        let classic = reader.window(&BBox::unit(), 8).unwrap();
         assert_eq!(classic.len(), 8);
         // and the budgeted API degrades to the grid-count traversal
-        let w = offline_window_budgeted(&f, 0.0, &BBox::unit(), 8 * RB).unwrap();
+        let w = reader.budgeted(&BBox::unit(), 8 * RB).unwrap();
         assert!(!w.from_pyramid);
         assert_eq!(w.level, 0);
         assert_eq!(w.grids.len(), 8);
@@ -803,16 +1144,70 @@ mod tests {
     }
 
     #[test]
-    fn online_budgeted_query_selects_depth() {
+    fn repeated_session_queries_serve_from_the_chunk_cache() {
+        // the ROADMAP hot-path item this API closes: repeats through one
+        // session rebuild no index and re-read no bytes — everything is
+        // already resident
+        let s = sim(2);
+        let f = snapshot_file("lod_amort", &s, 0.0);
+        let reader = SnapshotReader::open(&f, 0.0).unwrap();
+        let roi = BBox {
+            min: [0.0; 3],
+            max: [0.5; 3],
+        };
+        reader.budgeted(&roi, 8 * RB).unwrap();
+        let after_first = reader.read_stats().read_bytes;
+        for _ in 0..3 {
+            reader.budgeted(&roi, 8 * RB).unwrap();
+        }
+        let rs = reader.read_stats();
+        assert_eq!(
+            rs.read_bytes, after_first,
+            "repeat queries re-read bytes: {rs:?}"
+        );
+        assert!(rs.cache_hits > 0, "{rs:?}");
+        assert_eq!(reader.metrics.counter(names::READER_INDEX_BUILDS), 1);
+        std::fs::remove_file(&f.path).ok();
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_answer_like_sessions() {
+        // the free functions must stay byte-for-byte compatible while they
+        // exist — each call is a throwaway session
+        let s = sim(2);
+        let f = snapshot_file("shims", &s, 0.5);
+        let reader = SnapshotReader::open(&f, 0.5).unwrap();
+        let a = offline_window(&f, 0.5, &BBox::unit(), 8).unwrap();
+        let b = reader.window(&BBox::unit(), 8).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (ga, gb) in a.iter().zip(&b) {
+            assert_eq!(ga.uid.0, gb.uid.0);
+            assert_eq!(ga.data, gb.data);
+        }
+        let wa = offline_window_budgeted(&f, 0.5, &BBox::unit(), 8 * RB).unwrap();
+        let wb = reader.budgeted(&BBox::unit(), 8 * RB).unwrap();
+        assert_eq!(wa.level, wb.level);
+        assert_eq!(wa.grids.len(), wb.grids.len());
+        let pa = offline_window_progressive(&f, 0.5, &BBox::unit(), 73 * RB).unwrap();
+        let pb = reader.progressive(&BBox::unit(), 73 * RB).unwrap();
+        assert_eq!(pa.len(), pb.len());
+        std::fs::remove_file(&f.path).ok();
+    }
+
+    #[test]
+    fn online_session_serves_mixed_protocols_on_one_connection() {
         let s = sim(2);
         let shared = Arc::new(RwLock::new(s));
         let collector = Collector::spawn(shared.clone()).unwrap();
         let rec = REC_LEN as u64;
-        let coarse = query_budgeted(collector.addr, &BBox::unit(), rec).unwrap();
+        // one connection, a whole zoom sequence across both protocols
+        let mut client = WindowClient::connect(collector.addr).unwrap();
+        let coarse = client.budgeted(&BBox::unit(), rec).unwrap();
         assert_eq!(coarse.grids.len(), 1);
         assert_eq!(coarse.depth, 0);
         assert!(coarse.bytes <= rec);
-        let mid = query_budgeted(collector.addr, &BBox::unit(), 8 * rec).unwrap();
+        let mid = client.budgeted(&BBox::unit(), 8 * rec).unwrap();
         assert_eq!(mid.grids.len(), 8);
         assert_eq!(mid.depth, 1);
         assert!(mid.bytes <= 8 * rec);
@@ -821,10 +1216,10 @@ mod tests {
             min: [0.0; 3],
             max: [0.2; 3],
         };
-        let zoom = query_budgeted(collector.addr, &corner, 8 * rec).unwrap();
+        let zoom = client.budgeted(&corner, 8 * rec).unwrap();
         assert_eq!(zoom.depth, 2);
-        // the legacy fixed-count protocol still works on the same socket
-        let legacy = query(collector.addr, &BBox::unit(), 8).unwrap();
+        // the fixed-count protocol works on the same socket
+        let legacy = client.window(&BBox::unit(), 8).unwrap();
         assert_eq!(legacy.len(), 8);
     }
 
@@ -833,8 +1228,9 @@ mod tests {
         let s = sim(2);
         let shared = Arc::new(RwLock::new(s));
         let collector = Collector::spawn(shared.clone()).unwrap();
+        let mut client = WindowClient::connect(collector.addr).unwrap();
         // full-domain query at budget 8 → the 8 depth-1 grids
-        let grids = query(collector.addr, &BBox::unit(), 8).unwrap();
+        let grids = client.window(&BBox::unit(), 8).unwrap();
         assert_eq!(grids.len(), 8);
         assert!(grids.iter().all(|g| g.depth == 1));
         assert!(grids.iter().all(|g| g.data.len() == ROW_ELEMS));
@@ -843,8 +1239,23 @@ mod tests {
             min: [0.0; 3],
             max: [0.1; 3],
         };
-        let zoom = query(collector.addr, &corner, 8).unwrap();
+        let zoom = client.window(&corner, 8).unwrap();
         assert!(zoom.iter().any(|g| g.depth == 2), "{zoom:?} depths");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_online_shims_still_answer() {
+        // one-shot clients are sessions of length one: the wire protocol
+        // did not change underneath them
+        let s = sim(2);
+        let shared = Arc::new(RwLock::new(s));
+        let collector = Collector::spawn(shared.clone()).unwrap();
+        let grids = query(collector.addr, &BBox::unit(), 8).unwrap();
+        assert_eq!(grids.len(), 8);
+        let lod = query_budgeted(collector.addr, &BBox::unit(), REC_LEN as u64).unwrap();
+        assert_eq!(lod.grids.len(), 1);
+        assert_eq!(lod.depth, 0);
     }
 
     #[test]
@@ -852,14 +1263,16 @@ mod tests {
         let s = sim(1);
         let shared = Arc::new(RwLock::new(s));
         let collector = Collector::spawn(shared.clone()).unwrap();
-        let before = query(collector.addr, &BBox::unit(), 1).unwrap();
+        let mut client = WindowClient::connect(collector.addr).unwrap();
+        let before = client.window(&BBox::unit(), 1).unwrap();
         // mutate the root grid's pressure
         {
             let mut sim = shared.write().unwrap();
             let f = vec![777.0f32; DGRID_CELLS];
             sim.grids[0].cur.set_interior(var::P, &f);
         }
-        let after = query(collector.addr, &BBox::unit(), 1).unwrap();
+        // the same session serves the new state
+        let after = client.window(&BBox::unit(), 1).unwrap();
         let pr = |w: &[WindowGrid]| w[0].data[var::P * DGRID_CELLS];
         assert_ne!(pr(&before), pr(&after));
         assert_eq!(pr(&after), 777.0);
@@ -873,14 +1286,16 @@ mod tests {
         let mut f = H5File::create(&p, 1).unwrap();
         iokernel::write_common(&mut f, &s.params, &s.nbs.tree, 3).unwrap();
         iokernel::write_snapshot(&mut f, &io, &s.nbs.tree, &s.part, &s.grids, 1.5).unwrap();
+        let reader = SnapshotReader::open(&f, 1.5).unwrap();
         let shared = Arc::new(RwLock::new(s));
         let collector = Collector::spawn(shared.clone()).unwrap();
+        let mut client = WindowClient::connect(collector.addr).unwrap();
         let win = BBox {
             min: [0.4, 0.4, 0.4],
             max: [0.6, 0.6, 0.6],
         };
-        let online = query(collector.addr, &win, 16).unwrap();
-        let offline = offline_window(&f, 1.5, &win, 16).unwrap();
+        let online = client.window(&win, 16).unwrap();
+        let offline = reader.window(&win, 16).unwrap();
         assert_eq!(online.len(), offline.len());
         let key = |g: &WindowGrid| g.uid.loc().0;
         let mut on: Vec<_> = online.iter().map(key).collect();

@@ -87,8 +87,14 @@ fn compressed_and_raw_snapshots_agree_across_reopen() {
         min: [0.1, 0.2, 0.2],
         max: [0.5, 0.8, 0.8],
     };
-    let w0 = window::offline_window(&f, 0.0, &win, 32).unwrap();
-    let w1 = window::offline_window(&f, 1.0, &win, 32).unwrap();
+    let w0 = window::SnapshotReader::open(&f, 0.0)
+        .unwrap()
+        .window(&win, 32)
+        .unwrap();
+    let w1 = window::SnapshotReader::open(&f, 1.0)
+        .unwrap()
+        .window(&win, 32)
+        .unwrap();
     assert!(!w0.is_empty());
     assert_eq!(w0.len(), w1.len());
     for (a, b) in w0.iter().zip(&w1) {
@@ -116,7 +122,8 @@ fn v1_file_full_cycle_still_works() {
     assert_eq!(iokernel::list_timesteps(&f), vec![0.5]);
     let snap = iokernel::read_snapshot(&f, 0.5).unwrap();
     assert_eq!(snap.tree.len(), sim.nbs.tree.len());
-    let w = window::offline_window(&f, 0.5, &BBox::unit(), 8).unwrap();
+    let reader = window::SnapshotReader::open(&f, 0.5).unwrap();
+    let w = reader.window(&BBox::unit(), 8).unwrap();
     assert!(!w.is_empty());
     std::fs::remove_file(&path).ok();
 }
@@ -157,8 +164,9 @@ fn reader_during_append_sees_committed_snapshots() {
     // the documented offline-window-during-run use case: a writer keeps
     // appending (and steering-rewriting) snapshots while readers open the
     // same path — every open must land on a consistent committed state,
-    // and a handle opened *before* later epochs keeps reading its own
-    // committed snapshot (appends never truncate or overwrite it)
+    // and an epoch-pinned SnapshotReader session opened *before* later
+    // epochs keeps serving its own committed snapshot byte-identically
+    // (the pin parks every extent the rewrites retire)
     let path = tmp("swmr.h5");
     let sc = Scenario::channel(1);
     let mut sim = sc.build();
@@ -167,9 +175,15 @@ fn reader_during_append_sees_committed_snapshots() {
     iokernel::write_common(&mut f, &sim.params, &sim.nbs.tree, sc.ranks as u64).unwrap();
     iokernel::write_snapshot(&mut f, &io, &sim.nbs.tree, &sim.part, &sim.grids, 0.0).unwrap();
 
-    // a reader opens the file now and holds the handle across later epochs
-    let early_reader = H5File::open(&path).unwrap();
-    let w0 = window::offline_window(&early_reader, 0.0, &BBox::unit(), 8).unwrap();
+    // a session pins the writer's epoch now and lives across later epochs;
+    // a cache-less session, so every repeat read proves the on-disk bytes
+    let early = window::SnapshotReader::open_with(
+        &f,
+        0.0,
+        &window::SnapshotReaderOptions { cache_bytes: 0 },
+    )
+    .unwrap();
+    let w0 = early.window(&BBox::unit(), 8).unwrap();
     assert!(!w0.is_empty());
 
     for step in 1..=3u32 {
@@ -197,26 +211,29 @@ fn reader_during_append_sees_committed_snapshots() {
         let ts = iokernel::list_timesteps(&reader);
         assert_eq!(ts.len(), step as usize + 1, "step {step}: {ts:?}");
         for &t in &ts {
-            let w = window::offline_window(&reader, t, &BBox::unit(), 8).unwrap();
+            let w = window::SnapshotReader::open(&reader, t)
+                .unwrap()
+                .window(&BBox::unit(), 8)
+                .unwrap();
             assert!(!w.is_empty(), "step {step} t={t}");
         }
         assert!(reader.verify().unwrap().ok());
 
-        if step == 1 {
-            // the early reader still serves its pre-rewrite epoch-0 view:
-            // under the default AfterCommit policy the extents the rewrite
-            // retired stay off the allocator until this epoch's commit, and
-            // nothing has reused them yet — bytes included
-            let w = window::offline_window(&early_reader, 0.0, &BBox::unit(), 8).unwrap();
-            assert_eq!(w0.len(), w.len());
-            for (a, b) in w0.iter().zip(&w) {
-                assert_eq!(a.uid.0, b.uid.0);
-                assert_eq!(a.data, b.data, "early reader saw rewritten bytes");
-            }
+        // the early session still serves its pre-rewrite epoch-0 view at
+        // EVERY later epoch — the SWMR contract the epoch pin provides
+        // (the plain-handle guarantee used to last one commit only)
+        let w = early.window(&BBox::unit(), 8).unwrap();
+        assert_eq!(w0.len(), w.len());
+        for (a, b) in w0.iter().zip(&w) {
+            assert_eq!(a.uid.0, b.uid.0);
+            assert_eq!(a.data, b.data, "pinned session saw rewritten bytes");
         }
     }
-    // (a reader held across *multiple* epochs may see its extents recycled —
-    // the documented SWMR-style limit; fresh opens above are always clean)
-    drop(early_reader);
+    // the writer's partition stays exact with the pinned extents parked
+    let s = f.space_stats();
+    assert!(s.pinned_bytes > 0, "{s:?}");
+    assert!(f.verify().unwrap().ok());
+    drop(early);
+    assert_eq!(f.space_stats().pinned_bytes, 0, "drop must release the pin");
     std::fs::remove_file(&path).ok();
 }

@@ -68,16 +68,16 @@ fn full_cycle_run_checkpoint_window_restart() {
     let file = H5File::open(&path).unwrap();
     let ts = iokernel::list_timesteps(&file);
     assert_eq!(ts.len(), 1);
-    let win = window::offline_window(
-        &file,
-        ts[0],
-        &BBox {
-            min: [0.1, 0.3, 0.3],
-            max: [0.4, 0.7, 0.7],
-        },
-        16,
-    )
-    .unwrap();
+    let win = window::SnapshotReader::open(&file, ts[0])
+        .unwrap()
+        .window(
+            &BBox {
+                min: [0.1, 0.3, 0.3],
+                max: [0.4, 0.7, 0.7],
+            },
+            16,
+        )
+        .unwrap();
     assert!(!win.is_empty());
     assert!(win.iter().all(|g| g.data.len() == iokernel::ROW_ELEMS));
 
@@ -213,10 +213,12 @@ fn online_collector_serves_during_simulation() {
     let sim = sc.build();
     let shared = Arc::new(RwLock::new(sim));
     let collector = window::Collector::spawn(shared.clone()).unwrap();
-    // interleave stepping and querying (front end watching a live run)
+    // one client session, interleaving stepping and querying (front end
+    // watching a live run over a single connection)
+    let mut client = window::WindowClient::connect(collector.addr).unwrap();
     for _ in 0..3 {
         shared.write().unwrap().step(&RustBackend);
-        let grids = window::query(collector.addr, &BBox::unit(), 8).unwrap();
+        let grids = client.window(&BBox::unit(), 8).unwrap();
         assert_eq!(grids.len(), 8);
     }
     let t = shared.read().unwrap().t;
@@ -340,7 +342,10 @@ fn snapshot_file_readable_while_run_continues() {
     for _ in 0..2 {
         sim.step(&RustBackend);
         let file = H5File::open(&path).unwrap();
-        let w = window::offline_window(&file, t0, &BBox::unit(), 8).unwrap();
+        let w = window::SnapshotReader::open(&file, t0)
+            .unwrap()
+            .window(&BBox::unit(), 8)
+            .unwrap();
         assert_eq!(w.len(), 8);
     }
     std::fs::remove_file(&path).ok();

@@ -55,12 +55,13 @@ fn acceptance_budget_ratio_overhead_and_verify() {
     let (f, rep) = write_file("accept", &tree, &part, &grids, &SnapshotOptions::default());
 
     // --- budget criterion: 1/64 budget reads ≤ 1/8 of full-res bytes ----
-    let full = window::offline_window_budgeted(&f, 0.0, &BBox::unit(), u64::MAX).unwrap();
+    let reader = window::SnapshotReader::open(&f, 0.0).unwrap();
+    let full = reader.budgeted(&BBox::unit(), u64::MAX).unwrap();
     assert_eq!(full.level, 0);
     assert_eq!(full.grids.len(), 64, "full resolution = the 64 leaves");
     let full_bytes = full.bytes_read;
     let budget = full_bytes / 64;
-    let coarse = window::offline_window_budgeted(&f, 0.0, &BBox::unit(), budget).unwrap();
+    let coarse = reader.budgeted(&BBox::unit(), budget).unwrap();
     assert!(coarse.from_pyramid);
     assert!(
         coarse.bytes_read <= budget,
@@ -103,9 +104,12 @@ fn pyramid_less_file_answers_window_queries_unchanged() {
         .unwrap()
         .is_none());
     // the classic grid-count window answers identically on both files
+    let ra = window::SnapshotReader::open(&with, 0.0).unwrap();
+    let rb = window::SnapshotReader::open(&without, 0.0).unwrap();
+    assert!(ra.has_pyramid() && !rb.has_pyramid());
     for budget in [1usize, 8, 1000] {
-        let a = window::offline_window(&with, 0.0, &BBox::unit(), budget).unwrap();
-        let b = window::offline_window(&without, 0.0, &BBox::unit(), budget).unwrap();
+        let a = ra.window(&BBox::unit(), budget).unwrap();
+        let b = rb.window(&BBox::unit(), budget).unwrap();
         assert_eq!(a.len(), b.len(), "budget {budget}");
         for (ga, gb) in a.iter().zip(&b) {
             assert_eq!(ga.uid.0, gb.uid.0);
@@ -131,7 +135,8 @@ fn adaptive_tree_budgeted_cover_tiles_the_domain() {
     let (f, rep) = write_file("adaptive", &tree, &part, &grids, &SnapshotOptions::default());
     assert_eq!(rep.lod.unwrap().levels, 3);
     // level-1 cover of the whole domain (depth-2 tiling, 64 coords)
-    let w = window::offline_window_budgeted(&f, 0.0, &BBox::unit(), 64 * RB).unwrap();
+    let reader = window::SnapshotReader::open(&f, 0.0).unwrap();
+    let w = reader.budgeted(&BBox::unit(), 64 * RB).unwrap();
     assert!(w.from_pyramid);
     assert!(w.bytes_read <= 64 * RB);
     let depths: Vec<u32> = w.grids.iter().map(|g| g.depth).collect();
@@ -160,9 +165,11 @@ fn budgeted_answers_are_consistent_across_compression() {
     let (fc, _) = write_file("comp", &tree, &part, &grids, &SnapshotOptions::default());
     let opts_raw = SnapshotOptions::uncompressed();
     let (fr, _) = write_file("raw", &tree, &part, &grids, &opts_raw);
+    let rc = window::SnapshotReader::open(&fc, 0.0).unwrap();
+    let rr = window::SnapshotReader::open(&fr, 0.0).unwrap();
     for budget in [RB, 8 * RB, u64::MAX] {
-        let a = window::offline_window_budgeted(&fc, 0.0, &BBox::unit(), budget).unwrap();
-        let b = window::offline_window_budgeted(&fr, 0.0, &BBox::unit(), budget).unwrap();
+        let a = rc.budgeted(&BBox::unit(), budget).unwrap();
+        let b = rr.budgeted(&BBox::unit(), budget).unwrap();
         assert_eq!(a.level, b.level);
         assert_eq!(a.grids.len(), b.grids.len());
         for (ga, gb) in a.grids.iter().zip(&b.grids) {

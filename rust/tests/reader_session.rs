@@ -1,0 +1,182 @@
+//! Regression tests for the `SnapshotReader` session API (ISSUE 5): the
+//! epoch-pinned SWMR contract and the index-amortisation guarantee.
+//!
+//! * a session held across **2 writer commits** under the default
+//!   `ReusePolicy::AfterCommit` reads byte-identical data, while a fresh
+//!   open sees the new commit;
+//! * dropping the session releases its pinned extents back to the free
+//!   list and `H5File::verify()` stays green with the byte partition
+//!   summing exactly to the file length;
+//! * repeated budgeted queries through one session perform **zero**
+//!   `LodIndex` rebuilds and re-read no `level_<ℓ>_locs` bytes
+//!   (counter-asserted through the new `metrics` / `ReadStats` counters).
+
+use mpfluid::cluster::{IoTuning, Machine};
+use mpfluid::h5lite::H5File;
+use mpfluid::iokernel::{self, SnapshotOptions, ROW_BYTES};
+use mpfluid::metrics::names;
+use mpfluid::pario::ParallelIo;
+use mpfluid::physics::Params;
+use mpfluid::tree::dgrid::DGrid;
+use mpfluid::tree::sfc::{self, Partition};
+use mpfluid::tree::{BBox, SpaceTree};
+use mpfluid::window::{SnapshotReader, SnapshotReaderOptions};
+use mpfluid::{var, DGRID_CELLS};
+
+/// Cell-data bytes of one grid row.
+const RB: u64 = ROW_BYTES;
+
+fn setup(depth: u32, ranks: u32) -> (SpaceTree, Partition, Vec<DGrid>) {
+    let mut tree = SpaceTree::full(BBox::unit(), depth);
+    let part = sfc::partition(&mut tree, ranks);
+    let grids: Vec<DGrid> = tree.nodes.iter().map(|n| DGrid::new(n.uid())).collect();
+    (tree, part, grids)
+}
+
+fn paint(grids: &mut [DGrid], step: u32) {
+    for (i, g) in grids.iter_mut().enumerate() {
+        let f = vec![i as f32 + 100.0 * step as f32; DGRID_CELLS];
+        g.cur.set_interior(var::P, &f);
+    }
+}
+
+fn write_file(
+    name: &str,
+    tree: &SpaceTree,
+    part: &Partition,
+    grids: &[DGrid],
+) -> (H5File, ParallelIo) {
+    let p = std::env::temp_dir().join(format!("rdsess_{name}_{}.h5", std::process::id()));
+    let io = ParallelIo::new(Machine::local(), IoTuning::default(), part.n_ranks as u64);
+    let mut f = H5File::create(&p, 1).unwrap();
+    let par = Params::isothermal(0.01, 0.1, 0.01);
+    iokernel::write_common(&mut f, &par, tree, part.n_ranks as u64).unwrap();
+    iokernel::write_snapshot(&mut f, &io, tree, part, grids, 0.0).unwrap();
+    (f, io)
+}
+
+#[test]
+fn session_pinned_across_two_commits_reads_identical_bytes() {
+    let (tree, part, mut grids) = setup(2, 4);
+    paint(&mut grids, 0);
+    let (mut f, io) = write_file("pin2", &tree, &part, &grids);
+
+    // cache-less session: every read below proves the on-disk bytes, not
+    // a cached copy surviving an overwrite
+    let session =
+        SnapshotReader::open_with(&f, 0.0, &SnapshotReaderOptions { cache_bytes: 0 }).unwrap();
+    let base_full = session.window(&BBox::unit(), usize::MAX).unwrap();
+    let base_lod = session.budgeted(&BBox::unit(), 8 * RB).unwrap();
+    assert!(base_lod.from_pyramid);
+
+    // K = 2 writer commits rewriting the snapshot the session reads
+    // (AfterCommit is the default policy; each rewrite commits once)
+    for step in 1..=2u32 {
+        paint(&mut grids, step);
+        iokernel::rewrite_snapshot_cells(
+            &mut f,
+            &io,
+            &tree,
+            &part,
+            &grids,
+            0.0,
+            &SnapshotOptions::default(),
+        )
+        .unwrap();
+    }
+
+    // the pinned session still serves the epoch-0 bytes — full resolution
+    // and the pyramid levels (the refolds retired those extents too)
+    let now_full = session.window(&BBox::unit(), usize::MAX).unwrap();
+    assert_eq!(base_full.len(), now_full.len());
+    for (a, b) in base_full.iter().zip(&now_full) {
+        assert_eq!(a.uid.0, b.uid.0);
+        assert_eq!(a.data, b.data, "pinned session read rewritten cell data");
+    }
+    let now_lod = session.budgeted(&BBox::unit(), 8 * RB).unwrap();
+    assert_eq!(base_lod.level, now_lod.level);
+    for (a, b) in base_lod.grids.iter().zip(&now_lod.grids) {
+        assert_eq!(a.data, b.data, "pinned session read a refolded pyramid");
+    }
+
+    // a fresh open sees the new commit
+    let fresh = SnapshotReader::open(&f, 0.0).unwrap();
+    let new_full = fresh.window(&BBox::unit(), usize::MAX).unwrap();
+    let p_at = |w: &[mpfluid::window::WindowGrid]| w[0].data[var::P * DGRID_CELLS];
+    assert_ne!(p_at(&base_full), p_at(&new_full), "fresh open stuck on old epoch");
+    drop(fresh);
+
+    // the writer's byte partition stays exact with the parked extents
+    let pinned = f.space_stats().pinned_bytes;
+    assert!(pinned > 0, "{:?}", f.space_stats());
+    let rep = f.verify().unwrap();
+    assert!(rep.ok(), "{:?}", rep.errors);
+    assert_eq!(
+        rep.live_bytes + rep.meta_bytes + rep.free_bytes + rep.leaked_bytes,
+        rep.data_end,
+        "pinned extents broke the partition"
+    );
+
+    // dropping the session releases the pinned extents to the free list…
+    let free_before = f.space_stats().free_bytes;
+    drop(session);
+    let s = f.space_stats();
+    assert_eq!(s.pinned_bytes, 0, "{s:?}");
+    assert!(s.free_bytes >= free_before + pinned, "{s:?}");
+    // …verify stays green, and the space is genuinely allocatable again
+    assert!(f.verify().unwrap().ok());
+    let reused_before = s.reused_bytes;
+    paint(&mut grids, 3);
+    iokernel::rewrite_snapshot_cells(
+        &mut f,
+        &io,
+        &tree,
+        &part,
+        &grids,
+        0.0,
+        &SnapshotOptions::default(),
+    )
+    .unwrap();
+    assert!(f.space_stats().reused_bytes > reused_before);
+    assert!(f.verify().unwrap().ok());
+    std::fs::remove_file(&f.path).ok();
+}
+
+#[test]
+fn repeated_budgeted_queries_rebuild_no_index() {
+    // the ROADMAP hot-path fix this API closes: the per-call free function
+    // re-opened the LodIndex (reading every level_<ℓ>_locs dataset) on
+    // every query; one session pays it exactly once. The locs datasets are
+    // contiguous — never chunk-cached — so a flat physical-read counter
+    // across repeats proves zero re-reads.
+    let (tree, part, mut grids) = setup(2, 4);
+    paint(&mut grids, 0);
+    let (f, _io) = write_file("amort", &tree, &part, &grids);
+    let session = SnapshotReader::open(&f, 0.0).unwrap();
+    assert_eq!(session.metrics.counter(names::READER_INDEX_BUILDS), 1);
+    let index_bytes = session.metrics.counter(names::READER_INDEX_BYTES);
+    assert!(index_bytes > 0, "open must account its index reads");
+
+    let roi = BBox {
+        min: [0.0; 3],
+        max: [0.5; 3],
+    };
+    // first pass warms the chunk cache with the covered cell rows
+    session.budgeted(&roi, 8 * RB).unwrap();
+    session.budgeted(&BBox::unit(), RB).unwrap();
+    let warm = session.read_stats();
+    // repeats: zero physical reads, zero index rebuilds
+    for _ in 0..5 {
+        session.budgeted(&roi, 8 * RB).unwrap();
+        session.budgeted(&BBox::unit(), RB).unwrap();
+    }
+    let after = session.read_stats();
+    assert_eq!(
+        after.read_bytes, warm.read_bytes,
+        "repeat queries re-read bytes (locs or cell data): {after:?}"
+    );
+    assert!(after.cache_hits > warm.cache_hits, "{after:?}");
+    assert_eq!(session.metrics.counter(names::READER_INDEX_BUILDS), 1);
+    assert_eq!(session.metrics.counter(names::READER_QUERIES), 12);
+    std::fs::remove_file(&f.path).ok();
+}
