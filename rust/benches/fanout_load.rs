@@ -1,0 +1,250 @@
+//! Bench: **multi-tenant fan-out read serving** (ISSUE 6) — N concurrent
+//! `WindowClient`s pulling mixed overlapping ROI×budget traffic from one
+//! snapshot through a `Collector`, against the PR-5 baseline of N fully
+//! private `SnapshotReader` sessions.
+//!
+//! The shared decoded-chunk cache + single-flight coalescing should turn
+//! N× repeated decode work into ~1×: the table reports per-request p50/p99
+//! latency, aggregate chunk decodes (shared vs. private), and bytes
+//! decoded per byte served.
+//!
+//! Run: `cargo bench --bench fanout_load` (add `-- --quick` for the CI
+//! smoke configuration, which also asserts the coalescing counter is
+//! non-zero and the decode reduction is ≥4×).
+
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Instant;
+
+use mpfluid::cluster::{IoTuning, Machine, ReadWorkload};
+use mpfluid::config::Scenario;
+use mpfluid::h5lite::H5File;
+use mpfluid::iokernel::{self, ROW_BYTES, ROW_ELEMS};
+use mpfluid::pario::ParallelIo;
+use mpfluid::tree::BBox;
+use mpfluid::util::fmt_bytes;
+use mpfluid::window::{Collector, CollectorOptions, SnapshotReader, WindowClient};
+
+/// Cell-data bytes of one grid row.
+const RB: u64 = ROW_BYTES;
+/// Wire bytes of one served grid record (uid + depth + bbox + cells).
+const REC_BYTES: u64 = (8 + 4 + 48 + ROW_ELEMS * 4) as u64;
+
+/// The overlapping regions the viewers crowd onto.
+fn rois() -> [BBox; 3] {
+    [
+        BBox::unit(),
+        BBox {
+            min: [0.0; 3],
+            max: [0.5; 3],
+        },
+        BBox {
+            min: [0.25; 3],
+            max: [0.75; 3],
+        },
+    ]
+}
+
+/// One viewer's query script: `rounds` passes over a mixed SWIN/SWLD
+/// sequence, phase-shifted by the client index so the traffic overlaps
+/// without being identical.
+fn script(client: usize, rounds: usize) -> Vec<(BBox, Option<u64>, u32)> {
+    let r = rois();
+    let mut out = Vec::new();
+    for round in 0..rounds {
+        let a = r[(client + round) % r.len()];
+        let b = r[(client + round + 1) % r.len()];
+        out.push((a, None, 64)); // SWIN: 64-grid window
+        out.push((b, Some(8 * RB), 0)); // SWLD: coarse byte budget
+        out.push((a, Some(64 * RB), 0)); // SWLD: finer byte budget
+        out.push((b, None, 8)); // SWIN: coarse window
+    }
+    out
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[i]
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let clients = if quick { 16 } else { 64 };
+    let rounds = if quick { 1 } else { 2 };
+
+    // depth-3 cavity: 585 grids, 512 leaves — ~47 MiB of chunked,
+    // compressed cell data plus the LOD pyramid
+    let mut sc = Scenario::cavity(3);
+    sc.ranks = 8;
+    let sim = sc.build();
+    let io = ParallelIo::new(Machine::local(), IoTuning::default(), 8);
+    let path = std::env::temp_dir().join(format!("fanout_bench_{}.h5", std::process::id()));
+    let mut f = H5File::create(&path, 4096).unwrap();
+    iokernel::write_common(&mut f, &sim.params, &sim.nbs.tree, 8).unwrap();
+    iokernel::write_snapshot(&mut f, &io, &sim.nbs.tree, &sim.part, &sim.grids, 0.0).unwrap();
+
+    // == PR-5 baseline: N fully private sessions, same traffic ============
+    // each session decodes its own chunks into its own cache; the aggregate
+    // decode count is what the shared cache exists to collapse
+    let t0 = Instant::now();
+    let mut base_decodes = 0u64;
+    let mut base_decoded_bytes = 0u64;
+    for c in 0..clients {
+        let r = SnapshotReader::open(&f, 0.0).unwrap();
+        for (roi, lod, grids) in script(c, rounds) {
+            match lod {
+                Some(budget) => {
+                    r.budgeted(&roi, budget).unwrap();
+                }
+                None => {
+                    r.window(&roi, grids as usize).unwrap();
+                }
+            }
+        }
+        let rs = r.read_stats();
+        base_decodes += rs.cache_misses;
+        base_decoded_bytes += rs.read_bytes;
+    }
+    let base_elapsed = t0.elapsed();
+
+    // == fan-out: one Collector, N concurrent WindowClients ===============
+    // one worker per client so every session really is concurrent; the
+    // barrier releases the whole fleet into the same first query to
+    // stampede the cold cache
+    let opts = CollectorOptions {
+        workers: clients,
+        backlog: clients,
+        ..CollectorOptions::default()
+    };
+    let f = H5File::open(&path).unwrap();
+    let collector = Collector::spawn_snapshot(f, 0.0, &opts).unwrap();
+    let addr = collector.addr;
+    let start = Arc::new(Barrier::new(clients));
+    let latencies = Arc::new(Mutex::new(Vec::<f64>::new()));
+    let served = Arc::new(Mutex::new(0u64));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let start = Arc::clone(&start);
+        let latencies = Arc::clone(&latencies);
+        let served = Arc::clone(&served);
+        handles.push(std::thread::spawn(move || {
+            let mut client = WindowClient::connect(addr).unwrap();
+            start.wait();
+            // stampede: everyone asks for the same full-domain cover first
+            let mut lats = Vec::new();
+            let mut bytes = 0u64;
+            let mut run = |client: &mut WindowClient, roi: &BBox, lod: Option<u64>, grids: u32| {
+                let q0 = Instant::now();
+                let n = match lod {
+                    Some(budget) => client.budgeted(roi, budget).unwrap().grids.len(),
+                    None => client.window(roi, grids).unwrap().len(),
+                };
+                lats.push(q0.elapsed().as_secs_f64() * 1e3);
+                bytes += n as u64 * REC_BYTES;
+            };
+            run(&mut client, &BBox::unit(), Some(64 * RB), 0);
+            for (roi, lod, grids) in script(c, rounds) {
+                run(&mut client, &roi, lod, grids);
+            }
+            latencies.lock().unwrap().extend(lats);
+            *served.lock().unwrap() += bytes;
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let fan_elapsed = t0.elapsed();
+
+    let pool = collector.reader_pool().unwrap();
+    let cs = pool.cache_stats();
+    let served = *served.lock().unwrap();
+    let mut lats = latencies.lock().unwrap().clone();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let reduction = base_decodes as f64 / cs.misses.max(1) as f64;
+
+    println!(
+        "fan-out load: {clients} concurrent clients × {} queries (+1 stampede), \
+         overlapping ROIs",
+        4 * rounds
+    );
+    println!(
+        "{:>22} {:>12} {:>14} {:>12}",
+        "path", "wall", "chunk decodes", "decoded"
+    );
+    println!(
+        "{:>22} {:>9.0} ms {:>14} {:>12}",
+        "private sessions",
+        base_elapsed.as_secs_f64() * 1e3,
+        base_decodes,
+        fmt_bytes(base_decoded_bytes),
+    );
+    println!(
+        "{:>22} {:>9.0} ms {:>14} {:>12}",
+        "shared pool",
+        fan_elapsed.as_secs_f64() * 1e3,
+        cs.misses,
+        fmt_bytes(cs.loaded_bytes),
+    );
+    println!(
+        "  decode reduction ×{reduction:.1}; coalesced waits {}; shared opens {}; \
+         cache hits {} ({} resident, {} evictions)",
+        cs.coalesced,
+        pool.metrics()
+            .counter(mpfluid::metrics::names::READER_SHARED_OPENS),
+        cs.hits,
+        fmt_bytes(cs.resident_bytes),
+        cs.evictions,
+    );
+    println!(
+        "  latency p50 {:.2} ms  p99 {:.2} ms  (n={})",
+        percentile(&lats, 0.50),
+        percentile(&lats, 0.99),
+        lats.len()
+    );
+    println!(
+        "  bytes decoded per byte served: {:.3} ({} decoded / {} served)",
+        cs.loaded_bytes as f64 / served.max(1) as f64,
+        fmt_bytes(cs.loaded_bytes),
+        fmt_bytes(served),
+    );
+
+    // the machine model's view of the same dedup (ISSUE 6: price shared
+    // hits in the read estimate)
+    let total = cs.hits + cs.misses + cs.coalesced;
+    let hit_rate = (total - cs.misses) as f64 / total.max(1) as f64;
+    let est = Machine::juqueen().estimate_fanout_read(
+        &ReadWorkload {
+            clients: clients as u64,
+            bytes_per_client: served / clients as u64,
+            shared_hit_rate: hit_rate,
+        },
+        Some(mpfluid::h5lite::codec::Codec::ShuffleDeltaLz),
+    );
+    println!(
+        "  modelled on JuQueen at hit rate {:.2}: {:.2} GB/s served \
+         (decode {:.3}s, serve {:.3}s)",
+        hit_rate,
+        est.bandwidth / 1e9,
+        est.t_decode,
+        est.t_serve
+    );
+
+    drop(collector);
+    std::fs::remove_file(&path).ok();
+
+    if quick {
+        // CI smoke: the shared cache must actually dedup and coalesce
+        if cs.coalesced == 0 {
+            eprintln!("FAIL: no coalesced decodes under overlapping concurrent traffic");
+            std::process::exit(1);
+        }
+        if reduction < 4.0 {
+            eprintln!("FAIL: aggregate decode reduction ×{reduction:.1} < ×4 vs private sessions");
+            std::process::exit(1);
+        }
+        println!("quick check OK: coalesced {} > 0, reduction ×{reduction:.1} ≥ ×4", cs.coalesced);
+    }
+}

@@ -75,6 +75,36 @@ pub struct WriteWorkload {
     pub n_grids: u64,
 }
 
+/// What a fan-out read — many concurrent viewers pulling the same snapshot
+/// timestep through one collector node — looks like to the machine model.
+#[derive(Clone, Copy, Debug)]
+pub struct ReadWorkload {
+    /// Concurrent viewer sessions.
+    pub clients: u64,
+    /// Raw payload bytes served to each client.
+    pub bytes_per_client: u64,
+    /// Fraction of chunk reads answered by the shared decoded-chunk cache
+    /// (`0` = every session decodes privately, the pre-pool behaviour;
+    /// `(N−1)/N` = perfectly overlapping traffic under single-flight
+    /// coalescing — each chunk decoded exactly once).
+    pub shared_hit_rate: f64,
+}
+
+/// Cost breakdown of one estimated fan-out read.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReadEstimate {
+    /// End-to-end seconds.
+    pub seconds: f64,
+    /// Raw payload bytes served per second across all clients.
+    pub bandwidth: f64,
+    /// Chunk-decode time on the server node's cores (cache misses only).
+    pub t_decode: f64,
+    /// Serving time through the node's interconnect injection link.
+    pub t_serve: f64,
+    /// Bytes that actually ran the decoder (total − shared-cache hits).
+    pub decoded_bytes: u64,
+}
+
 /// Tuning knobs of §5.2 — the ablation axes of `benches/ablations.rs`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct IoTuning {
@@ -436,6 +466,44 @@ impl Machine {
         e
     }
 
+    /// Price a fan-out snapshot read: `w.clients` concurrent viewers each
+    /// pulling `w.bytes_per_client` of raw payload through one collector
+    /// node (the paper's "fast (random) access … for visual processing"
+    /// scaled to many viewers). The shared decoded-chunk cache turns
+    /// overlapping traffic into hits, so only the miss fraction runs the
+    /// codec; decode and serve pipeline across the node's cores, so the
+    /// exposed cost is their maximum. LZ *decode* runs ~3× the encode
+    /// calibration (match copy vs. match search); the range coder is
+    /// roughly symmetric, so the entropy entry is used as-is.
+    pub fn estimate_fanout_read(
+        &self,
+        w: &ReadWorkload,
+        codec: Option<Codec>,
+    ) -> ReadEstimate {
+        let total = (w.clients * w.bytes_per_client) as f64;
+        let hit = w.shared_hit_rate.clamp(0.0, 1.0);
+        let decoded = total * (1.0 - hit);
+        let decode_bw = match codec {
+            Some(c) if c.has_entropy() => self.compress_bw.entropy,
+            Some(_) => self.compress_bw.lz * 3.0,
+            None => f64::INFINITY,
+        };
+        let cores = self.ranks_per_node.max(1) as f64;
+        let mut e = ReadEstimate {
+            decoded_bytes: decoded as u64,
+            ..ReadEstimate::default()
+        };
+        e.t_decode = decoded / (decode_bw * cores);
+        e.t_serve = total / self.torus_node_bw;
+        e.seconds = e.t_decode.max(e.t_serve);
+        e.bandwidth = if e.seconds > 0.0 {
+            total / e.seconds
+        } else {
+            f64::INFINITY
+        };
+        e
+    }
+
     /// Price one full ghost-layer exchange (for Fig 2a): cross-rank bytes
     /// through per-node injection bandwidth plus message latency, assuming
     /// traffic spreads evenly (the Lebesgue partition keeps it local).
@@ -708,6 +776,44 @@ mod tests {
         assert!(
             ent_ratio.bandwidth > 0.0 && lz_ratio.bandwidth > 0.0,
             "sanity"
+        );
+    }
+
+    #[test]
+    fn fanout_read_prices_shared_hits() {
+        let m = Machine::juqueen();
+        let w0 = ReadWorkload {
+            clients: 64,
+            bytes_per_client: 1 << 28,
+            shared_hit_rate: 0.0,
+        };
+        let cold = m.estimate_fanout_read(&w0, Some(Codec::ShuffleDeltaLz));
+        let warm = m.estimate_fanout_read(
+            &ReadWorkload {
+                shared_hit_rate: 63.0 / 64.0,
+                ..w0
+            },
+            Some(Codec::ShuffleDeltaLz),
+        );
+        // perfectly overlapping traffic decodes each chunk once, not 64×
+        assert!(
+            (cold.t_decode / warm.t_decode - 64.0).abs() < 1e-6,
+            "{cold:?} vs {warm:?}"
+        );
+        assert_eq!(warm.decoded_bytes, 1 << 28);
+        assert!(warm.seconds <= cold.seconds);
+        assert!(warm.bandwidth >= cold.bandwidth);
+        // the entropy pipeline burns more core time per decoded byte than
+        // the LZ fast path
+        let ent = m.estimate_fanout_read(&w0, Some(Codec::ShuffleDeltaLzEntropy));
+        assert!(ent.t_decode > cold.t_decode, "{ent:?} vs {cold:?}");
+        // uncompressed snapshots and the local machine model no decode cost
+        assert_eq!(m.estimate_fanout_read(&w0, None).t_decode, 0.0);
+        assert_eq!(
+            Machine::local()
+                .estimate_fanout_read(&w0, Some(Codec::Lz))
+                .t_decode,
+            0.0
         );
     }
 

@@ -104,6 +104,15 @@
 //! release to the allocator the moment the last pin at or below their tag
 //! drops. The `window::SnapshotReader` session is the intended consumer.
 //!
+//! Because a pinned epoch's extents are immutable for the pin's lifetime,
+//! decoded chunk bytes can be shared *across handles*: the
+//! [`SharedChunkCache`] keys entries by `(file, epoch, dataset, chunk)` and
+//! serves every attached descriptor from one global byte budget, with
+//! single-flight coalescing so concurrent misses on one chunk decode
+//! exactly once. `window::ReaderPool` is the intended consumer; unattached
+//! handles keep their private per-descriptor [`H5File::set_chunk_cache_budget`]
+//! cache.
+//!
 //! [`H5File::repack`] is the `h5repack` analogue: it rewrites the file into
 //! a fresh one with zero fragmentation (chunk extents copied verbatim, no
 //! re-encode) and atomically renames it over the original.
@@ -138,7 +147,7 @@ use std::io::{Read, Seek, SeekFrom};
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -527,6 +536,11 @@ pub struct ReadStats {
     pub cache_hits: u64,
     /// Chunk reads that had to load (and decode) the extent.
     pub cache_misses: u64,
+    /// Of the cache hits, reads that *waited on another thread's in-flight
+    /// decode* of the same chunk instead of decoding it again — the
+    /// [`SharedChunkCache`]'s single-flight coalescing. Always 0 on the
+    /// private per-handle cache (it never coalesces).
+    pub coalesced: u64,
 }
 
 /// Outcome of an fsck-style [`H5File::verify`] walk.
@@ -935,6 +949,330 @@ impl ChunkCache {
     }
 }
 
+// ---------------------------------------------------------------------------
+// process-wide shared decoded-chunk cache (multi-tenant read serving)
+// ---------------------------------------------------------------------------
+
+/// Shards of a [`SharedChunkCache`]: enough that 64+ concurrent reader
+/// sessions rarely contend on one lock, few enough that the global byte
+/// budget split stays meaningful per shard.
+const CACHE_SHARDS: usize = 16;
+
+/// Key of one decoded chunk in a [`SharedChunkCache`]. The **epoch** is
+/// what makes sharing across sessions sound: under the
+/// [`ReusePolicy::AfterCommit`] + [`H5File::pin_epoch`] SWMR contract, the
+/// bytes a pinned epoch's footer references are immutable while any pin at
+/// that epoch lives, so an entry keyed by `(file, epoch, dataset, chunk)`
+/// can never go stale — a writer commit simply moves fresh sessions to a
+/// new epoch and new keys, and old-epoch entries age out by LRU.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+struct SharedKey {
+    /// Registered file identity ([`SharedChunkCache::file_key`]).
+    file: u64,
+    /// Commit epoch the reading handle pinned at open.
+    epoch: u64,
+    /// Dataset id (deterministic per footer decode order).
+    ds: u64,
+    chunk: u64,
+}
+
+impl SharedKey {
+    fn shard(&self) -> usize {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.hash(&mut h);
+        (h.finish() as usize) % CACHE_SHARDS
+    }
+}
+
+/// State of one in-flight chunk decode (the single-flight slot).
+#[derive(Default)]
+enum FlightState {
+    #[default]
+    Pending,
+    Done(Arc<Vec<u8>>),
+    /// The leader's load failed; waiters retry the full protocol (one of
+    /// them becomes the next leader).
+    Failed,
+}
+
+#[derive(Default)]
+struct Inflight {
+    state: Mutex<FlightState>,
+    cv: Condvar,
+}
+
+impl Inflight {
+    fn resolve(&self, s: FlightState) {
+        *self.state.lock().unwrap() = s;
+        self.cv.notify_all();
+    }
+
+    /// Block until the leader resolves; `None` = the leader failed.
+    fn wait(&self) -> Option<Arc<Vec<u8>>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match &*st {
+                FlightState::Pending => st = self.cv.wait(st).unwrap(),
+                FlightState::Done(d) => return Some(Arc::clone(d)),
+                FlightState::Failed => return None,
+            }
+        }
+    }
+}
+
+#[derive(Default)]
+struct CacheShard {
+    map: HashMap<SharedKey, (u64, Arc<Vec<u8>>)>,
+    /// Decodes currently running with this shard's keys.
+    inflight: HashMap<SharedKey, Arc<Inflight>>,
+    bytes: u64,
+}
+
+/// Where a shared-cache request was served from.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum SharedOutcome {
+    /// Resident in the cache.
+    Hit,
+    /// Waited on another thread's in-flight decode of the same chunk.
+    Coalesced,
+    /// This thread was the leader: it read and decoded the extent.
+    Loaded,
+}
+
+/// Counter snapshot of a [`SharedChunkCache`] (see
+/// [`SharedChunkCache::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SharedCacheStats {
+    /// Decoded bytes currently resident across all shards.
+    pub resident_bytes: u64,
+    /// Requests served from a resident entry.
+    pub hits: u64,
+    /// Requests that read and decoded the extent (each decodes exactly
+    /// once per `(file, epoch, dataset, chunk)` however many sessions
+    /// miss concurrently).
+    pub misses: u64,
+    /// Requests that waited on another thread's in-flight decode instead
+    /// of decoding again — the work the single-flight protocol saved.
+    pub coalesced: u64,
+    /// Raw decoded bytes produced by misses (the aggregate decode work;
+    /// divide by bytes served to get the fan-out dedup factor).
+    pub loaded_bytes: u64,
+    /// Entries evicted to stay inside the byte budget.
+    pub evictions: u64,
+}
+
+/// Process-wide, sharded, **epoch-aware** decoded-chunk cache: one
+/// instance shared by every `window::SnapshotReader` session of a reader
+/// pool, replacing N private per-descriptor caches that each decoded the
+/// same chunks.
+///
+/// * Entries are keyed `(file, epoch, dataset, chunk)` ([`SharedKey`]) —
+///   immutable under the epoch-pin SWMR contract, so sharing needs no
+///   invalidation protocol across sessions.
+/// * One **global byte budget** bounds all shards together; each shard
+///   evicts its own LRU entries until the global total fits (hashed keys
+///   keep shard occupancy balanced, so the approximation stays tight).
+/// * Concurrent misses on one chunk **coalesce**: the first becomes the
+///   leader and decodes outside every lock, the rest block on its
+///   in-flight slot and are counted in [`SharedCacheStats::coalesced`].
+///
+/// Attach a handle with [`H5File::attach_shared_cache`]; reads then route
+/// here instead of the private [`ChunkCache`].
+pub struct SharedChunkCache {
+    shards: Vec<Mutex<CacheShard>>,
+    budget: AtomicU64,
+    /// Resident decoded bytes across all shards.
+    bytes: AtomicU64,
+    /// Global LRU clock (ticks are comparable across shards).
+    tick: AtomicU64,
+    /// Canonical path → registered file key.
+    files: Mutex<HashMap<PathBuf, u64>>,
+    next_file: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+    loaded_bytes: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl SharedChunkCache {
+    /// A cache bounded by `budget` decoded bytes (0 disables residency —
+    /// single-flight coalescing still deduplicates concurrent decodes).
+    pub fn new(budget: u64) -> Arc<SharedChunkCache> {
+        Arc::new(SharedChunkCache {
+            shards: (0..CACHE_SHARDS).map(|_| Mutex::default()).collect(),
+            budget: AtomicU64::new(budget),
+            bytes: AtomicU64::new(0),
+            tick: AtomicU64::new(0),
+            files: Mutex::new(HashMap::new()),
+            next_file: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            loaded_bytes: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        })
+    }
+
+    /// Stable identity for `path` within this cache: same path → same key,
+    /// so every handle opened on one file shares entries.
+    pub fn file_key(&self, path: &Path) -> u64 {
+        let mut files = self.files.lock().unwrap();
+        if let Some(&k) = files.get(path) {
+            return k;
+        }
+        let k = self.next_file.fetch_add(1, Ordering::Relaxed) + 1;
+        files.insert(path.to_path_buf(), k);
+        k
+    }
+
+    /// Current byte budget.
+    pub fn budget(&self) -> u64 {
+        self.budget.load(Ordering::Relaxed)
+    }
+
+    /// Change the byte budget, evicting LRU entries down to it.
+    pub fn set_budget(&self, bytes: u64) {
+        self.budget.store(bytes, Ordering::Relaxed);
+        for shard in &self.shards {
+            let mut s = shard.lock().unwrap();
+            while self.bytes.load(Ordering::Relaxed) > bytes {
+                if !self.evict_lru_locked(&mut s, None) {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> SharedCacheStats {
+        SharedCacheStats {
+            resident_bytes: self.bytes.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            loaded_bytes: self.loaded_bytes.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The single-flight read protocol. `load` runs outside every cache
+    /// lock and only on the leader — concurrent callers of the same key
+    /// block on the leader's slot instead. A failed leader wakes the
+    /// waiters to retry (one becomes the next leader and calls its own
+    /// `load`), so an I/O error never wedges the slot.
+    fn get_or_load(
+        &self,
+        key: SharedKey,
+        load: impl Fn() -> Result<Vec<u8>>,
+    ) -> Result<(Arc<Vec<u8>>, SharedOutcome)> {
+        let shard_no = key.shard();
+        loop {
+            let flight = {
+                let mut shard = self.shards[shard_no].lock().unwrap();
+                if let Some(entry) = shard.map.get_mut(&key) {
+                    entry.0 = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((Arc::clone(&entry.1), SharedOutcome::Hit));
+                }
+                match shard.inflight.get(&key) {
+                    Some(f) => Arc::clone(f),
+                    None => {
+                        // leader: claim the slot, decode with no lock held
+                        let slot = Arc::new(Inflight::default());
+                        shard.inflight.insert(key, Arc::clone(&slot));
+                        drop(shard);
+                        let res = load();
+                        let mut shard = self.shards[shard_no].lock().unwrap();
+                        shard.inflight.remove(&key);
+                        return match res {
+                            Ok(raw) => {
+                                let data = Arc::new(raw);
+                                self.misses.fetch_add(1, Ordering::Relaxed);
+                                self.loaded_bytes
+                                    .fetch_add(data.len() as u64, Ordering::Relaxed);
+                                self.insert_locked(&mut shard, key, Arc::clone(&data));
+                                slot.resolve(FlightState::Done(Arc::clone(&data)));
+                                Ok((data, SharedOutcome::Loaded))
+                            }
+                            Err(e) => {
+                                slot.resolve(FlightState::Failed);
+                                Err(e)
+                            }
+                        };
+                    }
+                }
+            };
+            if let Some(data) = flight.wait() {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                return Ok((data, SharedOutcome::Coalesced));
+            }
+            // leader failed — retry the protocol from the top
+        }
+    }
+
+    /// Insert under the shard lock, then evict this shard's LRU entries
+    /// while the **global** total exceeds the budget. A shard that runs
+    /// empty leaves the residue to the other shards' next inserts — a
+    /// bounded transient, since hashed keys spread occupancy evenly.
+    fn insert_locked(&self, shard: &mut CacheShard, key: SharedKey, data: Arc<Vec<u8>>) {
+        let len = data.len() as u64;
+        let budget = self.budget.load(Ordering::Relaxed);
+        if len > budget {
+            return; // would evict everything for an entry that cannot stay
+        }
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some((_, old)) = shard.map.insert(key, (tick, data)) {
+            shard.bytes -= old.len() as u64;
+            self.bytes.fetch_sub(old.len() as u64, Ordering::Relaxed);
+        }
+        shard.bytes += len;
+        self.bytes.fetch_add(len, Ordering::Relaxed);
+        while self.bytes.load(Ordering::Relaxed) > budget {
+            if !self.evict_lru_locked(shard, Some(key)) {
+                break;
+            }
+        }
+    }
+
+    /// Evict the shard's LRU entry (sparing `keep`); false if none left.
+    fn evict_lru_locked(&self, shard: &mut CacheShard, keep: Option<SharedKey>) -> bool {
+        let victim = shard
+            .map
+            .iter()
+            .filter(|(&k, _)| Some(k) != keep)
+            .min_by_key(|(_, (tick, _))| *tick)
+            .map(|(&k, _)| k);
+        let Some(k) = victim else { return false };
+        let (_, old) = shard.map.remove(&k).unwrap();
+        shard.bytes -= old.len() as u64;
+        self.bytes.fetch_sub(old.len() as u64, Ordering::Relaxed);
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Drop one entry (a writer rewrote the chunk through a shared-attached
+    /// handle at this epoch).
+    fn invalidate(&self, key: SharedKey) {
+        let mut shard = self.shards[key.shard()].lock().unwrap();
+        if let Some((_, old)) = shard.map.remove(&key) {
+            shard.bytes -= old.len() as u64;
+            self.bytes.fetch_sub(old.len() as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+/// A handle's binding to a process-wide [`SharedChunkCache`].
+struct SharedAttachment {
+    cache: Arc<SharedChunkCache>,
+    file_key: u64,
+    /// The commit epoch this handle's footer belongs to (pinned by the
+    /// opener) — baked into every cache key.
+    epoch: u64,
+}
+
 /// An h5lite file handle.
 ///
 /// Creation/structure mutation requires `&mut self` (matching Parallel
@@ -979,6 +1317,13 @@ pub struct H5File {
     /// safe — disjoint-range readers only consume rows the writer did not
     /// touch).
     cache_gen: AtomicU64,
+    /// Of the cache hits, reads that coalesced onto another thread's
+    /// in-flight decode (shared cache only; see [`ReadStats::coalesced`]).
+    cache_coalesced: AtomicU64,
+    /// When set, chunk reads route to this process-wide epoch-keyed cache
+    /// instead of the private [`ChunkCache`]
+    /// (see [`H5File::attach_shared_cache`]).
+    shared_cache: Option<SharedAttachment>,
     /// Serialises read-modify-write row writes on chunked datasets: two
     /// disjoint row ranges can share a chunk, and the RMW (read, patch,
     /// re-encode, swap extent) is not atomic per chunk. Chunk-granular
@@ -1033,6 +1378,8 @@ impl H5File {
             cache_misses: AtomicU64::new(0),
             cache: Mutex::new(ChunkCache::default()),
             cache_gen: AtomicU64::new(0),
+            cache_coalesced: AtomicU64::new(0),
+            shared_cache: None,
             rmw: Mutex::new(()),
         };
         f.commit()?;
@@ -1113,8 +1460,28 @@ impl H5File {
             cache_misses: AtomicU64::new(0),
             cache: Mutex::new(ChunkCache::default()),
             cache_gen: AtomicU64::new(0),
+            cache_coalesced: AtomicU64::new(0),
+            shared_cache: None,
             rmw: Mutex::new(()),
         })
+    }
+
+    /// Route this handle's chunk reads through a process-wide
+    /// [`SharedChunkCache`] instead of the private per-handle cache.
+    ///
+    /// `epoch` must identify the commit whose footer this handle opened —
+    /// callers pin it first ([`H5File::pin_epoch`]) and attach immediately
+    /// after open, before any read. Under that contract every extent the
+    /// footer references is immutable while the pin lives, so entries keyed
+    /// `(file, epoch, dataset, chunk)` are shared safely across any number
+    /// of concurrently reading handles and sessions.
+    pub fn attach_shared_cache(&mut self, cache: &Arc<SharedChunkCache>, epoch: u64) {
+        let file_key = cache.file_key(&self.path);
+        self.shared_cache = Some(SharedAttachment {
+            cache: Arc::clone(cache),
+            file_key,
+            epoch,
+        });
     }
 
     /// On-disk format version of this file.
@@ -1588,6 +1955,17 @@ impl H5File {
         // where a stale insert survives.
         self.cache_gen.fetch_add(1, Ordering::Release);
         self.cache.lock().unwrap().invalidate(id, chunk_no);
+        // A shared-attached writer also drops the process-wide entry for its
+        // own epoch key (other epochs' entries are pinned-immutable bytes
+        // and stay valid by construction).
+        if let Some(att) = &self.shared_cache {
+            att.cache.invalidate(SharedKey {
+                file: att.file_key,
+                epoch: att.epoch,
+                ds: id,
+                chunk: chunk_no,
+            });
+        }
         Ok(())
     }
 
@@ -1600,6 +1978,21 @@ impl H5File {
         if let Some(loc) = reg.get_mut(&id).unwrap().entries[chunk_no as usize].as_mut() {
             loc.offset = offset;
         }
+    }
+
+    /// Test-only: park a bogus extent as if pinned at `epoch`, to exercise
+    /// [`H5File::verify`]'s partition-overflow detection (a pin
+    /// over-accounting bug would manifest exactly like this: bytes both
+    /// live and "pinned-free").
+    #[cfg(test)]
+    fn poke_parked_extent(&self, epoch: u64, off: u64, len: u64) {
+        self.space
+            .parked
+            .lock()
+            .unwrap()
+            .entry(epoch)
+            .or_default()
+            .insert(off, len);
     }
 
     /// Test-only: decoded chunks currently held by the LRU cache.
@@ -1630,22 +2023,14 @@ impl H5File {
             .ok_or_else(|| anyhow!("h5lite: chunk {chunk_no} out of range"))
     }
 
-    /// Read and decode one whole chunk (zeros if never written). Decoded
-    /// chunks are held in the file's LRU cache for row-at-a-time readers.
-    pub fn read_chunk_raw(&self, ds: &Dataset, chunk_no: u64) -> Result<Arc<Vec<u8>>> {
-        let (_, _, id) = ds
-            .chunk_meta()
-            .ok_or_else(|| anyhow!("h5lite: read_chunk_raw on contiguous dataset"))?;
-        if let Some(data) = self.cache.lock().unwrap().get(id, chunk_no) {
-            self.cache_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(data);
-        }
-        self.cache_misses.fetch_add(1, Ordering::Relaxed);
-        let gen0 = self.cache_gen.load(Ordering::Acquire);
+    /// Read, decode and checksum one whole chunk from disk without
+    /// touching any cache — the load path shared by the private cache
+    /// miss and the [`SharedChunkCache`] single-flight leader.
+    fn load_chunk_raw_uncached(&self, ds: &Dataset, chunk_no: u64) -> Result<Vec<u8>> {
         let loc = self.chunk_loc(ds, chunk_no)?;
         let expect_raw = (ds.chunk_rows_at(chunk_no) * ds.row_bytes()) as usize;
-        let raw = match loc {
-            None => Arc::new(vec![0u8; expect_raw]),
+        match loc {
+            None => Ok(vec![0u8; expect_raw]),
             Some(loc) => {
                 let mut stored = vec![0u8; loc.stored as usize];
                 self.file
@@ -1673,9 +2058,51 @@ impl H5File {
                 if codec::checksum32(&raw) != loc.checksum {
                     bail!("h5lite: chunk {chunk_no} checksum mismatch (corrupt extent?)");
                 }
-                Arc::new(raw)
+                Ok(raw)
             }
-        };
+        }
+    }
+
+    /// Read and decode one whole chunk (zeros if never written). Decoded
+    /// chunks are held in the file's LRU cache for row-at-a-time readers —
+    /// or, when [`H5File::attach_shared_cache`] bound this handle to a
+    /// process-wide cache, in that cache's epoch-keyed map, where
+    /// concurrent misses of one chunk coalesce onto a single decode.
+    pub fn read_chunk_raw(&self, ds: &Dataset, chunk_no: u64) -> Result<Arc<Vec<u8>>> {
+        let (_, _, id) = ds
+            .chunk_meta()
+            .ok_or_else(|| anyhow!("h5lite: read_chunk_raw on contiguous dataset"))?;
+        if let Some(att) = &self.shared_cache {
+            let key = SharedKey {
+                file: att.file_key,
+                epoch: att.epoch,
+                ds: id,
+                chunk: chunk_no,
+            };
+            let (raw, outcome) = att
+                .cache
+                .get_or_load(key, || self.load_chunk_raw_uncached(ds, chunk_no))?;
+            match outcome {
+                SharedOutcome::Hit => {
+                    self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                SharedOutcome::Coalesced => {
+                    self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    self.cache_coalesced.fetch_add(1, Ordering::Relaxed);
+                }
+                SharedOutcome::Loaded => {
+                    self.cache_misses.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            return Ok(raw);
+        }
+        if let Some(data) = self.cache.lock().unwrap().get(id, chunk_no) {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(data);
+        }
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        let gen0 = self.cache_gen.load(Ordering::Acquire);
+        let raw = Arc::new(self.load_chunk_raw_uncached(ds, chunk_no)?);
         // Only cache if no write landed while we were decoding — a racing
         // write of this chunk would otherwise leave pre-write bytes cached.
         // The generation check runs under the cache lock: the writer bumps
@@ -1807,6 +2234,7 @@ impl H5File {
             read_bytes: self.read_bytes.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            coalesced: self.cache_coalesced.load(Ordering::Relaxed),
         }
     }
 
@@ -1954,10 +2382,23 @@ impl H5File {
                 ));
             }
         }
-        report.leaked_bytes = data_end
-            .saturating_sub(report.live_bytes)
-            .saturating_sub(report.meta_bytes)
-            .saturating_sub(report.free_bytes);
+        // The partition must fit inside the data region. A claimed total
+        // beyond `data_end` means some byte is accounted twice — a free
+        // extent also referenced live, or a pin over-accounted — which a
+        // saturating subtraction would silently flatten into
+        // `leaked_bytes = 0` and a green report. Make it a hard finding.
+        let claimed = report
+            .live_bytes
+            .saturating_add(report.meta_bytes)
+            .saturating_add(report.free_bytes);
+        if claimed > data_end {
+            report.errors.push(format!(
+                "space partition exceeds data end: live {} + meta {} + free {} = {claimed} > {data_end} \
+                 (double-counted extent or pin over-accounting)",
+                report.live_bytes, report.meta_bytes, report.free_bytes
+            ));
+        }
+        report.leaked_bytes = data_end.saturating_sub(claimed);
         Ok(report)
     }
 
@@ -2017,6 +2458,8 @@ impl H5File {
         reopened.read_bytes = AtomicU64::new(self.read_bytes.load(Ordering::Relaxed));
         reopened.cache_hits = AtomicU64::new(self.cache_hits.load(Ordering::Relaxed));
         reopened.cache_misses = AtomicU64::new(self.cache_misses.load(Ordering::Relaxed));
+        reopened.cache_coalesced =
+            AtomicU64::new(self.cache_coalesced.load(Ordering::Relaxed));
         reopened.set_chunk_cache_budget(self.chunk_cache_budget());
         *self = reopened;
         Ok(before.saturating_sub(after))
@@ -3290,6 +3733,184 @@ mod tests {
         drop(young_pin);
         assert_eq!(f.space_stats().pinned_bytes, 0);
         assert!(f.verify().unwrap().ok());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn verify_flags_partition_overflow() {
+        // a parked ("pinned-free") extent overlapping live data means some
+        // byte is accounted twice — the saturating subtraction used to
+        // flatten that into leaked_bytes = 0 and a green report
+        let p = tmp("overflow");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::ShuffleDeltaLz)
+            .unwrap();
+        f.write_all_f32(&ds, &smooth_rows(16, 16)).unwrap();
+        f.commit().unwrap();
+        assert!(f.verify().unwrap().ok());
+        // fake a pin over-accounting: park bytes that are also live
+        let loc = f.chunk_loc(&ds, 0).unwrap().unwrap();
+        f.poke_parked_extent(1, loc.offset, loc.stored);
+        let rep = f.verify().unwrap();
+        assert!(!rep.ok(), "double-counted bytes passed verify");
+        assert!(
+            rep.errors.iter().any(|e| e.contains("partition exceeds data end")),
+            "{:?}",
+            rep.errors
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn shared_cache_serves_across_handles_at_one_epoch() {
+        // two handles on one file, attached to one process-wide cache at
+        // the same epoch: the second handle's reads are pure cache hits —
+        // zero physical bytes read through it
+        let p = tmp("shared");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::ShuffleDeltaLz)
+            .unwrap();
+        let data = smooth_rows(16, 16);
+        f.write_all_f32(&ds, &data).unwrap();
+        f.commit().unwrap();
+        drop(f);
+
+        let cache = SharedChunkCache::new(DEFAULT_CHUNK_CACHE_BYTES);
+        let mut a = H5File::open(&p).unwrap();
+        a.attach_shared_cache(&cache, 0);
+        let mut b = H5File::open(&p).unwrap();
+        b.attach_shared_cache(&cache, 0);
+
+        let dsa = a.dataset("/g", "d").unwrap();
+        assert_eq!(codec::bytes_to_f32s(&a.read_rows(&dsa, 0, 16).unwrap()), data);
+        assert!(a.read_stats().read_bytes > 0);
+        let dsb = b.dataset("/g", "d").unwrap();
+        assert_eq!(codec::bytes_to_f32s(&b.read_rows(&dsb, 0, 16).unwrap()), data);
+        let rb = b.read_stats();
+        assert_eq!(rb.read_bytes, 0, "second handle re-read bytes: {rb:?}");
+        assert!(rb.cache_hits >= 1, "{rb:?}");
+        assert_eq!(rb.cache_misses, 0, "{rb:?}");
+        let s = cache.stats();
+        assert!(s.hits >= 1 && s.misses >= 1, "{s:?}");
+        assert_eq!(s.loaded_bytes, s.resident_bytes, "{s:?}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn shared_cache_epoch_keys_isolate_entries() {
+        // the same chunk attached at two different epochs must occupy two
+        // keys: an old pinned session may legitimately see different bytes
+        // than a fresh one, so entries never cross epochs
+        let p = tmp("shared_epochs");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 16], 8, Codec::ShuffleLz)
+            .unwrap();
+        f.write_all_f32(&ds, &smooth_rows(8, 16)).unwrap();
+        f.commit().unwrap();
+        drop(f);
+
+        let cache = SharedChunkCache::new(DEFAULT_CHUNK_CACHE_BYTES);
+        let mut a = H5File::open(&p).unwrap();
+        a.attach_shared_cache(&cache, 0);
+        let mut b = H5File::open(&p).unwrap();
+        b.attach_shared_cache(&cache, 1);
+        let dsa = a.dataset("/g", "d").unwrap();
+        let dsb = b.dataset("/g", "d").unwrap();
+        a.read_rows(&dsa, 0, 8).unwrap();
+        b.read_rows(&dsb, 0, 8).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.misses, 2, "epoch keys leaked across: {s:?}");
+        assert_eq!(s.hits, 0, "{s:?}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn shared_cache_coalesces_concurrent_misses() {
+        // single-flight: N concurrent misses on one key run the loader
+        // exactly once; the waiters block on the leader's slot and are
+        // counted as coalesced
+        use std::sync::atomic::AtomicUsize;
+        let cache = SharedChunkCache::new(1 << 20);
+        let key = SharedKey { file: 1, epoch: 0, ds: 1, chunk: 0 };
+        let loads = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let cache = Arc::clone(&cache);
+            let loads = Arc::clone(&loads);
+            handles.push(std::thread::spawn(move || {
+                let (data, _) = cache
+                    .get_or_load(key, || {
+                        loads.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(std::time::Duration::from_millis(50));
+                        Ok(vec![7u8; 128])
+                    })
+                    .unwrap();
+                assert_eq!(data.len(), 128);
+            }));
+            // stagger so the first thread wins the slot before the rest miss
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(loads.load(Ordering::SeqCst), 1, "coalescing decoded twice");
+        let s = cache.stats();
+        assert_eq!(s.misses, 1, "{s:?}");
+        assert_eq!(s.hits + s.misses, 4, "{s:?}");
+        assert!(s.coalesced >= 1, "no waiter coalesced: {s:?}");
+        // a failed leader must not wedge the slot: the next caller retries
+        let bad = SharedKey { file: 1, epoch: 0, ds: 2, chunk: 0 };
+        assert!(cache.get_or_load(bad, || bail!("io error")).is_err());
+        let (ok, _) = cache.get_or_load(bad, || Ok(vec![1u8; 8])).unwrap();
+        assert_eq!(ok.len(), 8);
+    }
+
+    #[test]
+    fn shared_cache_respects_global_budget() {
+        let cache = SharedChunkCache::new(1024);
+        for i in 0..64u64 {
+            let key = SharedKey { file: 1, epoch: 0, ds: 1, chunk: i };
+            cache.get_or_load(key, || Ok(vec![0u8; 128])).unwrap();
+        }
+        let s = cache.stats();
+        assert!(s.resident_bytes <= 1024, "over budget: {s:?}");
+        assert!(s.evictions > 0, "{s:?}");
+        assert_eq!(s.misses, 64, "{s:?}");
+        // an entry larger than the whole budget is served but never kept
+        let big = SharedKey { file: 1, epoch: 0, ds: 2, chunk: 0 };
+        cache.get_or_load(big, || Ok(vec![0u8; 4096])).unwrap();
+        assert!(cache.stats().resident_bytes <= 1024);
+        // shrinking the budget evicts down to it
+        cache.set_budget(256);
+        assert!(cache.stats().resident_bytes <= 256, "{:?}", cache.stats());
+    }
+
+    #[test]
+    fn shared_cache_write_invalidates_current_epoch_entry() {
+        // a writer handle attached to the shared cache drops its own epoch
+        // key on every chunk write, so a subsequent read through the cache
+        // sees the new bytes, not the cached pre-write decode
+        let p = tmp("shared_inval");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 16], 8, Codec::ShuffleLz)
+            .unwrap();
+        let v1 = smooth_rows(8, 16);
+        f.write_all_f32(&ds, &v1).unwrap();
+        f.commit().unwrap();
+        let cache = SharedChunkCache::new(DEFAULT_CHUNK_CACHE_BYTES);
+        f.attach_shared_cache(&cache, 0);
+        assert_eq!(codec::bytes_to_f32s(&f.read_rows(&ds, 0, 8).unwrap()), v1);
+        let v2: Vec<f32> = v1.iter().map(|x| x + 1.0).collect();
+        f.write_all_f32(&ds, &v2).unwrap();
+        assert_eq!(
+            codec::bytes_to_f32s(&f.read_rows(&ds, 0, 8).unwrap()),
+            v2,
+            "shared cache served stale pre-write bytes"
+        );
         std::fs::remove_file(&p).ok();
     }
 }

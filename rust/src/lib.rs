@@ -16,7 +16,10 @@
 //!   shared-file I/O kernel ([`iokernel`]) with collective buffering
 //!   ([`pario`]) on a simulated HPC substrate ([`cluster`]), plus the sliding
 //!   window ([`window`]) — read through epoch-pinned, cache-carrying
-//!   [`window::SnapshotReader`] sessions — with its budget-aware
+//!   [`window::SnapshotReader`] sessions, fanned out to many concurrent
+//!   viewers by [`window::ReaderPool`] + the bounded-worker
+//!   [`window::Collector`] over a process-wide deduplicating
+//!   [`h5lite::SharedChunkCache`] — with its budget-aware
 //!   multi-resolution pyramid ([`lod`]) and time-reversible steering
 //!   ([`steering`]).
 //!

@@ -25,6 +25,17 @@ pub mod names {
     pub const READER_GRIDS: &str = "reader.grids";
     /// Logical cell-data payload bytes served across a session's queries.
     pub const READER_PAYLOAD_BYTES: &str = "reader.payload_bytes";
+    /// Chunk reads that *coalesced* onto another session's in-flight decode
+    /// of the same chunk instead of decoding it again — the shared cache's
+    /// single-flight dedup under concurrent overlapping queries.
+    pub const READER_COALESCED: &str = "reader.coalesced";
+    /// Session opens served from a pool's shared parsed topology/`LodIndex`
+    /// (O(1) — no index bytes read, no parse) instead of a fresh build.
+    pub const READER_SHARED_OPENS: &str = "reader.shared_opens";
+    /// Connections a `window::Collector` accepted and handed to a worker.
+    pub const COLLECTOR_SESSIONS: &str = "collector.sessions";
+    /// Window/LOD requests served across all collector connections.
+    pub const COLLECTOR_QUERIES: &str = "collector.queries";
 }
 
 /// A set of named counters (u64) and timers (accumulated nanoseconds).

@@ -210,6 +210,12 @@ pub struct TrsSession {
     pub file: H5File,
     /// Branch counter for generated file names.
     branches: u32,
+    /// Pool behind [`TrsSession::reader`]: front-end sessions opened on the
+    /// same `(timestep, epoch)` share one parsed topology/`LodIndex` and
+    /// one decoded-chunk cache. Keys include a path hash and the pinned
+    /// epoch, so cores opened before a [`TrsSession::rollback`] or a later
+    /// commit simply age out once their sessions drop.
+    readers: crate::window::ReaderPool,
 }
 
 impl TrsSession {
@@ -225,6 +231,7 @@ impl TrsSession {
             active_path: path.to_path_buf(),
             file,
             branches: 0,
+            readers: crate::window::ReaderPool::new(crate::h5lite::DEFAULT_CHUNK_CACHE_BYTES),
         })
     }
 
@@ -252,8 +259,20 @@ impl TrsSession {
     /// keeps serving byte-identical data across later commits (the pin
     /// parks retired extents) and even across a [`TrsSession::rollback`]
     /// branch switch: it holds its own descriptor on the file it opened.
+    ///
+    /// Sessions are pooled ([`crate::window::ReaderPool`]): concurrent
+    /// front-end viewers of the same `(t, epoch)` share the parsed indexes
+    /// and the decoded-chunk cache. Pooling on the writer's *own* handle is
+    /// what makes the pins sound under SWMR — they park retired extents in
+    /// the same descriptor family the rewrites retire them from.
     pub fn reader(&self, t: f64) -> Result<crate::window::SnapshotReader> {
-        crate::window::SnapshotReader::open(&self.file, t)
+        self.readers.open(&self.file, t)
+    }
+
+    /// The session pool behind [`TrsSession::reader`] (shared-cache stats,
+    /// live-core count).
+    pub fn reader_pool(&self) -> &crate::window::ReaderPool {
+        &self.readers
     }
 
     /// **The time reversal**: reload the snapshot at `t`, branch the output

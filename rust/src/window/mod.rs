@@ -43,6 +43,25 @@
 //! deprecated shims over a throwaway session: they re-parse every index on
 //! every call, which is exactly the cost the session amortises.
 //!
+//! ## Multi-tenant fan-out: [`ReaderPool`]
+//!
+//! N viewers of one timestep must not parse the topology and decode the
+//! same chunks N times. A [`ReaderPool`] deduplicates both:
+//!
+//! * sessions opened through [`ReaderPool::open`] share one parsed
+//!   topology + `LodIndex` core per `(file, timestep, epoch)` — open is
+//!   O(1) after the first ([`crate::metrics::names::READER_SHARED_OPENS`]);
+//! * every pooled session reads through one process-wide
+//!   [`SharedChunkCache`], keyed `(file, epoch, dataset, chunk)` under a
+//!   global byte budget, so a chunk decoded for one viewer serves them
+//!   all — and **concurrent** misses on one chunk coalesce onto a single
+//!   decode ([`crate::metrics::names::READER_COALESCED`]).
+//!
+//! The epoch in both keys is what keeps sharing sound: a writer commit
+//! moves fresh sessions to a new epoch (new cores, new cache keys), while
+//! pinned sessions keep their byte-identical view — the same contract as a
+//! private session, now shared.
+//!
 //! ## Online path (paper Fig 3)
 //!
 //! 1. the front-end client connects a [`WindowClient`] **session** to the
@@ -54,9 +73,18 @@
 //! 5. the collector streams the response back to the client — and the
 //!    connection stays up for the next query of the zoom sequence.
 //!
-//! The [`Collector`] runs **one server-side session per connection**: a
-//! connection-long loop serving any mix of the fixed-count (`SWIN`) and
-//! byte-budgeted (`SWLD`) wire protocols. The per-query [`query`] /
+//! The [`Collector`] runs **one server-side session per connection** over
+//! a **bounded worker pool** ([`CollectorOptions::workers`]): accepted
+//! connections queue ([`CollectorOptions::backlog`] deep, after which the
+//! accept loop exerts backpressure by leaving further connections in the
+//! kernel backlog) and each worker runs a connection-long session loop
+//! serving any mix of the fixed-count (`SWIN`) and byte-budgeted (`SWLD`)
+//! wire protocols. Responses are serialised *after* the simulation read
+//! guard is dropped, so a slow client can never block the writer's solver
+//! step, and a stalled client hits [`CollectorOptions::write_timeout`]
+//! instead of parking a worker forever. [`Collector::spawn_snapshot`]
+//! serves a snapshot file instead of live state, with all sessions pooled
+//! through one [`ReaderPool`]. The per-query [`query`] /
 //! [`query_budgeted`] free functions are deprecated shims (sessions of
 //! length one).
 //!
@@ -74,16 +102,20 @@
 //! transparently inside [`H5File::read_rows`], each chunk through its own
 //! recorded codec.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock, Weak};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::Simulation;
-use crate::h5lite::{codec, Dataset, EpochPin, H5File, ReadStats, DEFAULT_CHUNK_CACHE_BYTES};
+use crate::h5lite::{
+    codec, Dataset, EpochPin, H5File, ReadStats, SharedCacheStats, SharedChunkCache,
+    DEFAULT_CHUNK_CACHE_BYTES,
+};
 use crate::iokernel::{self, ROW_BYTES, ROW_ELEMS};
 use crate::lod::{self, LodIndex};
 use crate::metrics::{names, Metrics};
@@ -141,19 +173,17 @@ impl Default for SnapshotReaderOptions {
     }
 }
 
-/// A long-lived, epoch-pinned read session over one snapshot — the
-/// documented hot-path read API (see the [`crate::window`] module docs
-/// for the open → query* → drop lifecycle and the consistency contract).
-///
-/// The session owns a private descriptor on the file (so it survives — and
-/// stays consistent across — `&mut` use of the opener's handle), the
-/// parsed topology and [`LodIndex`], a byte-budgeted chunk cache, and an
-/// [`EpochPin`] on the opener's free-space manager. All queries are `&self`
-/// and may run concurrently from many threads.
-pub struct SnapshotReader {
-    /// Session-private handle: parsed from the last *committed* footer at
-    /// open, never refreshed — the snapshot-isolation the epoch pin keeps
-    /// byte-valid.
+/// The immutable, shareable heart of a read session: a private descriptor
+/// on the file, the parsed topology and [`LodIndex`], and the
+/// [`EpochPin`] that keeps every referenced byte immutable. Built once per
+/// `(file, timestep, epoch)` — privately by [`SnapshotReader::open_with`],
+/// shared across sessions by a [`ReaderPool`]. All reads are `&self` and
+/// may run concurrently from many threads.
+struct ReaderCore {
+    /// Core-private handle: parsed from the last *committed* footer at
+    /// build, never refreshed — the snapshot-isolation the epoch pin keeps
+    /// byte-valid. Pooled cores attach it to the pool's
+    /// [`SharedChunkCache`] at the pinned epoch.
     file: H5File,
     pin: EpochPin,
     t: f64,
@@ -168,31 +198,26 @@ pub struct SnapshotReader {
     children: Vec<Vec<u64>>,
     ds_cur: Dataset,
     lod: Option<LodIndex>,
-    /// Per-session counters ([`crate::metrics::names`]): index builds and
-    /// bytes (paid once at open), queries, grids and payload served.
-    pub metrics: Metrics,
 }
 
-impl SnapshotReader {
-    /// Open a session on the snapshot at time `t` with default options.
-    pub fn open(file: &H5File, t: f64) -> Result<SnapshotReader> {
-        SnapshotReader::open_with(file, t, &SnapshotReaderOptions::default())
-    }
-
-    /// Open a session on the snapshot at time `t`: pin `file`'s current
-    /// commit epoch, open a private descriptor on its path (landing on the
-    /// last committed state) and parse the topology + LOD indexes once.
-    pub fn open_with(
+impl ReaderCore {
+    /// Pin-then-parse. The caller supplies the pin (taken on *its* handle
+    /// family, where the writer's retired extents park); `shared` routes
+    /// the descriptor's chunk reads through a process-wide cache at the
+    /// pinned epoch, `None` gives it a private cache of `cache_bytes`.
+    /// Returns the core and the index bytes read to build it.
+    fn build(
         file: &H5File,
         t: f64,
-        opts: &SnapshotReaderOptions,
-    ) -> Result<SnapshotReader> {
-        // pin before the fresh open: a commit racing the open can only
-        // move the opened state *past* the pinned epoch, so the pin is
-        // conservative (it may park slightly more, never less)
-        let pin = file.pin_epoch();
-        let rf = H5File::open(&file.path)?;
-        rf.set_chunk_cache_budget(opts.cache_bytes);
+        pin: EpochPin,
+        shared: Option<&Arc<SharedChunkCache>>,
+        cache_bytes: u64,
+    ) -> Result<(ReaderCore, u64)> {
+        let mut rf = H5File::open(&file.path)?;
+        match shared {
+            Some(cache) => rf.attach_shared_cache(cache, pin.epoch()),
+            None => rf.set_chunk_cache_budget(cache_bytes),
+        }
         let group = iokernel::ts_group(t);
         let ds_prop = rf.dataset(&group, "grid_property")?;
         let ds_sub = rf.dataset(&group, "subgrid_uid")?;
@@ -232,48 +257,97 @@ impl SnapshotReader {
         }
         let domain = iokernel::read_domain(&rf).ok();
         let lod = LodIndex::open(&rf, &group)?;
+        // everything read so far is index, paid once per core
+        let index_bytes = rf.read_stats().read_bytes;
+        Ok((
+            ReaderCore {
+                file: rf,
+                pin,
+                t,
+                domain,
+                uids,
+                bboxes,
+                children,
+                ds_cur,
+                lod,
+            },
+            index_bytes,
+        ))
+    }
+}
+
+/// A long-lived, epoch-pinned read session over one snapshot — the
+/// documented hot-path read API (see the [`crate::window`] module docs
+/// for the open → query* → drop lifecycle and the consistency contract).
+///
+/// The session is a handle on a [`ReaderCore`]: privately owned when
+/// opened with [`SnapshotReader::open`]/[`SnapshotReader::open_with`],
+/// shared with every concurrent session of the same `(file, timestep,
+/// epoch)` when opened through a [`ReaderPool`]. All queries are `&self`
+/// and may run concurrently from many threads.
+pub struct SnapshotReader {
+    core: Arc<ReaderCore>,
+    /// Per-session counters ([`crate::metrics::names`]): index builds and
+    /// bytes (paid once at open; a pooled open served from a live core
+    /// counts [`names::READER_SHARED_OPENS`] instead), queries, grids and
+    /// payload served.
+    pub metrics: Metrics,
+}
+
+impl SnapshotReader {
+    /// Open a session on the snapshot at time `t` with default options.
+    pub fn open(file: &H5File, t: f64) -> Result<SnapshotReader> {
+        SnapshotReader::open_with(file, t, &SnapshotReaderOptions::default())
+    }
+
+    /// Open a session on the snapshot at time `t`: pin `file`'s current
+    /// commit epoch, open a private descriptor on its path (landing on the
+    /// last committed state) and parse the topology + LOD indexes once.
+    pub fn open_with(
+        file: &H5File,
+        t: f64,
+        opts: &SnapshotReaderOptions,
+    ) -> Result<SnapshotReader> {
+        // pin before the fresh open: a commit racing the open can only
+        // move the opened state *past* the pinned epoch, so the pin is
+        // conservative (it may park slightly more, never less)
+        let pin = file.pin_epoch();
+        let (core, index_bytes) = ReaderCore::build(file, t, pin, None, opts.cache_bytes)?;
         let metrics = Metrics::new();
         metrics.add(names::READER_INDEX_BUILDS, 1);
-        // everything read so far is index, paid once per session
-        metrics.add(names::READER_INDEX_BYTES, rf.read_stats().read_bytes);
+        metrics.add(names::READER_INDEX_BYTES, index_bytes);
         Ok(SnapshotReader {
-            file: rf,
-            pin,
-            t,
-            domain,
-            uids,
-            bboxes,
-            children,
-            ds_cur,
-            lod,
+            core: Arc::new(core),
             metrics,
         })
     }
 
     /// Elapsed time of the snapshot this session serves.
     pub fn t(&self) -> f64 {
-        self.t
+        self.core.t
     }
 
     /// Number of grids (rows) in the snapshot.
     pub fn n_grids(&self) -> usize {
-        self.uids.len()
+        self.core.uids.len()
     }
 
     /// True when the snapshot stores a LOD pyramid.
     pub fn has_pyramid(&self) -> bool {
-        self.lod.is_some()
+        self.core.lod.is_some()
     }
 
     /// The commit epoch this session pinned at open (diagnostics).
     pub fn pinned_epoch(&self) -> u64 {
-        self.pin.epoch()
+        self.core.pin.epoch()
     }
 
-    /// Physical-read accounting of the session's private handle: bytes
-    /// actually read from disk and the chunk-cache hit/miss split.
+    /// Physical-read accounting of the session's *core* handle: bytes
+    /// actually read from disk and the chunk-cache hit/miss/coalesced
+    /// split. Pooled sessions share a core, so these counters aggregate
+    /// over every session of the same `(file, timestep, epoch)`.
     pub fn read_stats(&self) -> ReadStats {
-        self.file.read_stats()
+        self.core.file.read_stats()
     }
 
     fn note_query(&self, grids: usize) {
@@ -283,6 +357,16 @@ impl SnapshotReader {
             .add(names::READER_PAYLOAD_BYTES, grids as u64 * ROW_BYTES);
     }
 
+    /// Sliding-window query bounded by a grid-count `budget`: large
+    /// windows come back coarse, small windows descend to the leaves.
+    pub fn window(&self, window: &BBox, budget: usize) -> Result<Vec<WindowGrid>> {
+        let grids = self.core.classic(window, budget)?;
+        self.note_query(grids.len());
+        Ok(grids)
+    }
+}
+
+impl ReaderCore {
     fn read_grid(&self, row: u64) -> Result<WindowGrid> {
         let data = codec::bytes_to_f32s(&self.file.read_rows(&self.ds_cur, row, 1)?);
         let uid = Uid(self.uids[row as usize]);
@@ -333,28 +417,12 @@ impl SnapshotReader {
         current.into_iter().map(|row| self.read_grid(row)).collect()
     }
 
-    /// Sliding-window query bounded by a grid-count `budget`: large
-    /// windows come back coarse, small windows descend to the leaves.
-    pub fn window(&self, window: &BBox, budget: usize) -> Result<Vec<WindowGrid>> {
-        let grids = self.classic(window, budget)?;
-        self.note_query(grids.len());
-        Ok(grids)
-    }
-
-    /// Sliding-window query under a **byte budget**: serve `window` from
-    /// the finest resolution whose cover fits `budget_bytes`, using the
-    /// snapshot's LOD pyramid when it has one. Level 0 (full resolution)
-    /// reads the tree's leaf grids; coarser levels read the pyramid
-    /// datasets — a whole-domain overview costs one grid row, not the
-    /// whole snapshot. The answer always holds at least one grid, even
-    /// under a sub-grid budget. A pyramid-less snapshot falls back to the
-    /// classic grid-count traversal with the budget converted to grids.
-    pub fn budgeted(&self, window: &BBox, budget_bytes: u64) -> Result<LodWindow> {
+    /// The level-selection work behind [`SnapshotReader::budgeted`].
+    fn budgeted(&self, window: &BBox, budget_bytes: u64) -> Result<LodWindow> {
         let row_bytes = ROW_BYTES;
         let Some(idx) = &self.lod else {
             let budget_grids = (budget_bytes / row_bytes).max(1) as usize;
             let grids = self.classic(window, budget_grids)?;
-            self.note_query(grids.len());
             return Ok(LodWindow {
                 bytes_read: grids.len() as u64 * row_bytes,
                 grids,
@@ -377,19 +445,17 @@ impl SnapshotReader {
                 break;
             }
         }
-        let out = if chosen == 0 {
+        if chosen == 0 {
             let grids = self.classic(window, usize::MAX)?;
-            LodWindow {
+            Ok(LodWindow {
                 bytes_read: grids.len() as u64 * row_bytes,
                 grids,
                 level: 0,
                 from_pyramid: false,
-            }
+            })
         } else {
-            self.read_pyramid_level(idx, &domain, chosen, window)?
-        };
-        self.note_query(out.grids.len());
-        Ok(out)
+            self.read_pyramid_level(idx, &domain, chosen, window)
+        }
     }
 
     /// Read the cover of `window` at pyramid level `l ≥ 1`. Coordinates an
@@ -454,17 +520,8 @@ impl SnapshotReader {
         })
     }
 
-    /// Progressive refinement: stream `window` coarse-to-fine — the root
-    /// level first (immediate first paint), then each finer level while
-    /// the *cumulative* bytes stay within `total_budget_bytes`. The last
-    /// element is the finest affordable answer; the first is always
-    /// emitted so the viewer never starves. Falls back to a single
-    /// budgeted answer on pyramid-less snapshots.
-    pub fn progressive(
-        &self,
-        window: &BBox,
-        total_budget_bytes: u64,
-    ) -> Result<Vec<LodWindow>> {
+    /// The coarse-to-fine cascade behind [`SnapshotReader::progressive`].
+    fn progressive(&self, window: &BBox, total_budget_bytes: u64) -> Result<Vec<LodWindow>> {
         let row_bytes = ROW_BYTES;
         let Some(idx) = &self.lod else {
             return Ok(vec![self.budgeted(window, total_budget_bytes)?]);
@@ -475,7 +532,6 @@ impl SnapshotReader {
         let d_max = idx.max_level();
         let mut out: Vec<LodWindow> = Vec::new();
         let mut spent = 0u64;
-        let mut total_grids = 0usize;
         for l in (0..=d_max).rev() {
             let cost = lod::intersect_count(&domain, d_max - l, window) * row_bytes;
             if !out.is_empty() && spent + cost > total_budget_bytes {
@@ -493,11 +549,141 @@ impl SnapshotReader {
                 self.read_pyramid_level(idx, &domain, l, window)?
             };
             spent += step.bytes_read;
-            total_grids += step.grids.len();
             out.push(step);
         }
-        self.note_query(total_grids);
         Ok(out)
+    }
+}
+
+impl SnapshotReader {
+    /// Sliding-window query under a **byte budget**: serve `window` from
+    /// the finest resolution whose cover fits `budget_bytes`, using the
+    /// snapshot's LOD pyramid when it has one. Level 0 (full resolution)
+    /// reads the tree's leaf grids; coarser levels read the pyramid
+    /// datasets — a whole-domain overview costs one grid row, not the
+    /// whole snapshot. The answer always holds at least one grid, even
+    /// under a sub-grid budget. A pyramid-less snapshot falls back to the
+    /// classic grid-count traversal with the budget converted to grids.
+    pub fn budgeted(&self, window: &BBox, budget_bytes: u64) -> Result<LodWindow> {
+        let out = self.core.budgeted(window, budget_bytes)?;
+        self.note_query(out.grids.len());
+        Ok(out)
+    }
+
+    /// Progressive refinement: stream `window` coarse-to-fine — the root
+    /// level first (immediate first paint), then each finer level while
+    /// the *cumulative* bytes stay within `total_budget_bytes`. The last
+    /// element is the finest affordable answer; the first is always
+    /// emitted so the viewer never starves. Falls back to a single
+    /// budgeted answer on pyramid-less snapshots.
+    pub fn progressive(
+        &self,
+        window: &BBox,
+        total_budget_bytes: u64,
+    ) -> Result<Vec<LodWindow>> {
+        let out = self.core.progressive(window, total_budget_bytes)?;
+        self.note_query(out.iter().map(|s| s.grids.len()).sum());
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the multi-tenant reader pool
+// ---------------------------------------------------------------------------
+
+/// A multi-tenant session factory: deduplicates the parsed
+/// topology/[`LodIndex`] per `(file, timestep, epoch)` and routes every
+/// pooled session's chunk reads through one process-wide
+/// [`SharedChunkCache`] — N concurrent viewers of one timestep parse once
+/// and decode each chunk once (see the module docs).
+///
+/// Dead cores are pruned on every open: when the last session of a
+/// `(file, timestep, epoch)` drops, its core — and the epoch pin holding
+/// that epoch's extents — goes with it; only the decoded bytes linger in
+/// the cache until evicted.
+pub struct ReaderPool {
+    cache: Arc<SharedChunkCache>,
+    cores: Mutex<HashMap<(u64, u64, u64), Weak<ReaderCore>>>,
+    /// Pool-wide counters: index builds/bytes (one per distinct core),
+    /// shared opens, and — synced from the cache on [`ReaderPool::metrics`]
+    /// — coalesced reads.
+    metrics: Metrics,
+    /// Cache-coalesce count already folded into `metrics`.
+    coalesced_seen: AtomicU64,
+}
+
+impl ReaderPool {
+    /// A pool whose shared cache holds up to `cache_bytes` decoded bytes
+    /// (`0` keeps nothing resident — sessions still share parsed cores and
+    /// coalesce concurrent decodes; useful in tests that must observe
+    /// on-disk bytes).
+    pub fn new(cache_bytes: u64) -> ReaderPool {
+        ReaderPool {
+            cache: SharedChunkCache::new(cache_bytes),
+            cores: Mutex::new(HashMap::new()),
+            metrics: Metrics::new(),
+            coalesced_seen: AtomicU64::new(0),
+        }
+    }
+
+    /// Open a session on the snapshot at time `t`, sharing the parsed core
+    /// with every live session of the same `(file, timestep, epoch)` —
+    /// O(1) after the first. Like [`SnapshotReader::open`], the epoch pin
+    /// is taken on `file`'s handle family *before* anything is read, so
+    /// the session's consistency contract is unchanged.
+    pub fn open(&self, file: &H5File, t: f64) -> Result<SnapshotReader> {
+        let pin = file.pin_epoch();
+        let key = (self.cache.file_key(&file.path), t.to_bits(), pin.epoch());
+        let mut cores = self.cores.lock().unwrap();
+        cores.retain(|_, w| w.strong_count() > 0);
+        if let Some(core) = cores.get(&key).and_then(Weak::upgrade) {
+            // the fresh pin duplicates the live core's — drop it
+            drop(pin);
+            self.metrics.add(names::READER_SHARED_OPENS, 1);
+            let metrics = Metrics::new();
+            metrics.add(names::READER_SHARED_OPENS, 1);
+            return Ok(SnapshotReader { core, metrics });
+        }
+        // Build with the map locked: concurrent first-opens of one key
+        // coalesce onto a single parse — deliberate; a build is rare,
+        // bounded (index datasets only), and the alternative is N
+        // identical parses racing to insert.
+        let (core, index_bytes) = ReaderCore::build(file, t, pin, Some(&self.cache), 0)?;
+        let core = Arc::new(core);
+        cores.insert(key, Arc::downgrade(&core));
+        self.metrics.add(names::READER_INDEX_BUILDS, 1);
+        self.metrics.add(names::READER_INDEX_BYTES, index_bytes);
+        let metrics = Metrics::new();
+        metrics.add(names::READER_INDEX_BUILDS, 1);
+        metrics.add(names::READER_INDEX_BYTES, index_bytes);
+        Ok(SnapshotReader { core, metrics })
+    }
+
+    /// Counter snapshot of the pool's shared chunk cache.
+    pub fn cache_stats(&self) -> SharedCacheStats {
+        self.cache.stats()
+    }
+
+    /// Distinct `(file, timestep, epoch)` cores currently kept alive by at
+    /// least one session.
+    pub fn live_cores(&self) -> usize {
+        self.cores
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|w| w.strong_count() > 0)
+            .count()
+    }
+
+    /// Pool-wide counters, with [`names::READER_COALESCED`] synced from
+    /// the shared cache's single-flight accounting.
+    pub fn metrics(&self) -> &Metrics {
+        let now = self.cache.stats().coalesced;
+        let seen = self.coalesced_seen.swap(now, Ordering::Relaxed);
+        if now > seen {
+            self.metrics.add(names::READER_COALESCED, now - seen);
+        }
+        &self.metrics
     }
 }
 
@@ -570,81 +756,226 @@ const LOD_REQ_MAGIC: u32 = 0x5357_4C44; // "SWLD"
 /// Wire length of one grid record: uid, depth, bbox, cell data.
 const REC_LEN: usize = 8 + 4 + 48 + ROW_ELEMS * 4;
 
-/// Handle to a running collector thread.
+/// Tuning for a [`Collector`]'s bounded worker-pool connection model.
+#[derive(Clone, Copy, Debug)]
+pub struct CollectorOptions {
+    /// Worker threads serving connection sessions. This bounds the
+    /// collector's thread count for its whole lifetime — the old model
+    /// spawned one thread per accept and only reaped finished ones when a
+    /// *new* connection arrived.
+    pub workers: usize,
+    /// Accepted-but-unclaimed connections to hold; at the cap the accept
+    /// loop pauses, leaving further clients in the kernel's own accept
+    /// backlog (connect succeeds, first response waits) — backpressure
+    /// instead of unbounded thread growth.
+    pub backlog: usize,
+    /// Per-write socket timeout: a stalled client that never drains its
+    /// response frees its worker after at most this long.
+    pub write_timeout: Duration,
+    /// Byte budget of the snapshot backend's shared decoded-chunk cache
+    /// (ignored by the live backend, which reads no file).
+    pub cache_bytes: u64,
+}
+
+impl Default for CollectorOptions {
+    fn default() -> CollectorOptions {
+        CollectorOptions {
+            workers: 8,
+            backlog: 16,
+            write_timeout: Duration::from_secs(5),
+            cache_bytes: 4 * DEFAULT_CHUNK_CACHE_BYTES,
+        }
+    }
+}
+
+/// What a [`Collector`] serves its sessions from.
+enum Backend {
+    /// The running simulation's shared state (the paper's Fig 3 path).
+    Live(Arc<RwLock<Simulation>>),
+    /// A snapshot timestep in an h5lite file; every connection session is
+    /// opened through one [`ReaderPool`], so all viewers share the parsed
+    /// topology and the decoded-chunk cache.
+    Snapshot { file: H5File, t: f64, pool: ReaderPool },
+}
+
+/// Shared state between the accept loop and the worker pool.
+struct Dispatcher {
+    /// Accepted connections waiting for a worker.
+    queue: Mutex<VecDeque<TcpStream>>,
+    cv: Condvar,
+    stop: AtomicBool,
+    /// Connections currently being served (the live-session gauge the old
+    /// un-reaped `Vec<JoinHandle>` could only over-report).
+    active: AtomicUsize,
+    /// [`names::COLLECTOR_SESSIONS`] / [`names::COLLECTOR_QUERIES`].
+    metrics: Metrics,
+    write_timeout: Duration,
+    backlog: usize,
+}
+
+/// Handle to a running collector: a nonblocking accept loop feeding a
+/// **bounded worker pool** ([`CollectorOptions`]).
 ///
-/// Each accepted connection is served by its own thread running a
-/// **session loop**: any number of `SWIN` / `SWLD` requests over one
-/// socket until the client hangs up — the online counterpart of the
-/// offline [`SnapshotReader`] session. Old one-shot clients are simply
-/// sessions of length one, so the wire protocols are unchanged.
+/// Each claimed connection is served as a **session loop**: any number of
+/// `SWIN` / `SWLD` requests over one socket until the client hangs up —
+/// the online counterpart of the offline [`SnapshotReader`] session. Old
+/// one-shot clients are simply sessions of length one, so the wire
+/// protocols are unchanged.
 pub struct Collector {
     pub addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
-    sessions: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    dispatcher: Arc<Dispatcher>,
+    backend: Arc<Backend>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Collector {
     /// Spawn the collector on an ephemeral localhost port, serving
     /// sliding-window query sessions against the shared simulation state.
     pub fn spawn(sim: Arc<RwLock<Simulation>>) -> Result<Collector> {
+        Collector::spawn_with(sim, &CollectorOptions::default())
+    }
+
+    /// [`Collector::spawn`] with explicit pool tuning.
+    pub fn spawn_with(
+        sim: Arc<RwLock<Simulation>>,
+        opts: &CollectorOptions,
+    ) -> Result<Collector> {
+        Collector::launch(Backend::Live(sim), opts)
+    }
+
+    /// Spawn a collector serving the snapshot at time `t` of `file` — the
+    /// fan-out read server: every connection session opens through one
+    /// [`ReaderPool`] (shared parsed topology, shared decoded-chunk cache
+    /// of [`CollectorOptions::cache_bytes`], coalesced decodes). The
+    /// collector owns `file`; sessions pin epochs on it, so if a writer
+    /// rewrites the snapshot *through another handle family* fresh
+    /// sessions see the new commit only after re-spawning — live SWMR
+    /// fan-out belongs to the steering session, which pools readers on
+    /// the writer's own handle.
+    pub fn spawn_snapshot(file: H5File, t: f64, opts: &CollectorOptions) -> Result<Collector> {
+        let pool = ReaderPool::new(opts.cache_bytes);
+        Collector::launch(Backend::Snapshot { file, t, pool }, opts)
+    }
+
+    fn launch(backend: Backend, opts: &CollectorOptions) -> Result<Collector> {
         let listener = TcpListener::bind("127.0.0.1:0").context("collector bind")?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let sessions: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
-            Arc::new(Mutex::new(Vec::new()));
-        let (stop2, sessions2) = (stop.clone(), sessions.clone());
-        let handle = std::thread::spawn(move || {
-            while !stop2.load(Ordering::Relaxed) {
+        let dispatcher = Arc::new(Dispatcher {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            metrics: Metrics::new(),
+            write_timeout: opts.write_timeout,
+            backlog: opts.backlog.max(1),
+        });
+        let backend = Arc::new(backend);
+        let d = Arc::clone(&dispatcher);
+        let accept = std::thread::spawn(move || {
+            while !d.stop.load(Ordering::Relaxed) {
+                if d.queue.lock().unwrap().len() >= d.backlog {
+                    // backpressure: stop accepting until a worker drains
+                    // the queue; further clients wait in the kernel backlog
+                    std::thread::sleep(Duration::from_millis(1));
+                    continue;
+                }
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        let sim = sim.clone();
-                        let stop = stop2.clone();
-                        let h = std::thread::spawn(move || {
-                            let _ = serve_session(stream, &sim, &stop);
-                        });
-                        // reap finished sessions so a long-lived collector
-                        // tracks concurrent connections, not every
-                        // connection it ever accepted
-                        let mut sessions = sessions2.lock().unwrap();
-                        let mut live = Vec::with_capacity(sessions.len() + 1);
-                        for s in sessions.drain(..) {
-                            if s.is_finished() {
-                                let _ = s.join();
-                            } else {
-                                live.push(s);
-                            }
-                        }
-                        live.push(h);
-                        *sessions = live;
+                        d.queue.lock().unwrap().push_back(stream);
+                        d.cv.notify_one();
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(2));
+                        std::thread::sleep(Duration::from_millis(2));
                     }
                     Err(_) => break,
                 }
             }
         });
+        let workers = (0..opts.workers.max(1))
+            .map(|_| {
+                let d = Arc::clone(&dispatcher);
+                let backend = Arc::clone(&backend);
+                std::thread::spawn(move || worker_loop(&d, &backend))
+            })
+            .collect();
         Ok(Collector {
             addr,
-            stop,
-            handle: Some(handle),
-            sessions,
+            dispatcher,
+            backend,
+            accept: Some(accept),
+            workers,
         })
+    }
+
+    /// Connections currently being served by a worker. Returns to 0 as
+    /// soon as the last session ends — no accept required (the old model
+    /// only reaped finished session threads when a new connection landed).
+    pub fn active_sessions(&self) -> usize {
+        self.dispatcher.active.load(Ordering::SeqCst)
+    }
+
+    /// Accepted connections waiting for a free worker.
+    pub fn queued_connections(&self) -> usize {
+        self.dispatcher.queue.lock().unwrap().len()
+    }
+
+    /// Collector counters: sessions claimed and queries served.
+    pub fn metrics(&self) -> &Metrics {
+        &self.dispatcher.metrics
+    }
+
+    /// The snapshot backend's reader pool (`None` on a live collector) —
+    /// the fan-out dedup accounting: shared opens, coalesced decodes,
+    /// cache hit/miss/byte counters.
+    pub fn reader_pool(&self) -> Option<&ReaderPool> {
+        match &*self.backend {
+            Backend::Snapshot { pool, .. } => Some(pool),
+            Backend::Live(_) => None,
+        }
     }
 }
 
 impl Drop for Collector {
+    /// Bounded shutdown: stop the accept loop, drop queued-but-unserved
+    /// connections, wake idle workers and join them. An in-flight read
+    /// observes `stop` within its 25 ms poll; an in-flight write is cut
+    /// off by the per-write timeout — so a stalled client delays drop by
+    /// at most one [`CollectorOptions::write_timeout`], never forever.
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
+        self.dispatcher.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        let sessions = std::mem::take(&mut *self.sessions.lock().unwrap());
-        for h in sessions {
+        self.dispatcher.queue.lock().unwrap().clear();
+        self.dispatcher.cv.notify_all();
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// One worker: claim connections off the dispatcher queue until shutdown.
+fn worker_loop(d: &Dispatcher, backend: &Backend) {
+    loop {
+        let stream = {
+            let mut q = d.queue.lock().unwrap();
+            loop {
+                if let Some(s) = q.pop_front() {
+                    break Some(s);
+                }
+                if d.stop.load(Ordering::Relaxed) {
+                    break None;
+                }
+                q = d.cv.wait(q).unwrap();
+            }
+        };
+        let Some(stream) = stream else { return };
+        d.active.fetch_add(1, Ordering::SeqCst);
+        d.metrics.add(names::COLLECTOR_SESSIONS, 1);
+        let _ = serve_session(stream, backend, d);
+        d.active.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -683,42 +1014,68 @@ fn read_full(
 /// One server-side session (steps (2)–(5) of the Fig 3 query path, looped):
 /// serve any mix of fixed-count and byte-budgeted requests over one
 /// connection until the client hangs up.
-fn serve_session(
-    mut stream: TcpStream,
-    sim: &Arc<RwLock<Simulation>>,
-    stop: &AtomicBool,
-) -> Result<()> {
+///
+/// A snapshot backend opens the session's [`SnapshotReader`] once per
+/// connection through the collector's pool — O(1) after the first viewer
+/// of the timestep.
+fn serve_session(mut stream: TcpStream, backend: &Backend, d: &Dispatcher) -> Result<()> {
     stream.set_nodelay(true).ok();
     // short read timeout so an idle session notices a collector shutdown;
     // a write timeout so a stalled client (never draining its response)
-    // cannot park this thread in write_all forever — Collector::drop joins
-    // every session thread, so an unbounded write would hang the host
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(25)))?;
-    stream.set_write_timeout(Some(std::time::Duration::from_secs(5)))?;
+    // cannot park this worker in write_all forever — Collector::drop joins
+    // every worker, so an unbounded write would hang the host
+    stream.set_read_timeout(Some(Duration::from_millis(25)))?;
+    stream.set_write_timeout(Some(d.write_timeout))?;
+    enum SessionCtx<'a> {
+        Live(&'a Arc<RwLock<Simulation>>),
+        Snapshot(SnapshotReader),
+    }
+    let ctx = match backend {
+        Backend::Live(sim) => SessionCtx::Live(sim),
+        Backend::Snapshot { file, t, pool } => SessionCtx::Snapshot(pool.open(file, *t)?),
+    };
     let mut magic = [0u8; 4];
     loop {
-        if !read_full(&mut stream, &mut magic, stop, true)? {
+        if !read_full(&mut stream, &mut magic, &d.stop, true)? {
             return Ok(()); // clean end of session
         }
         let mut bbox_buf = [0u8; 48];
-        read_full(&mut stream, &mut bbox_buf, stop, false)?;
+        read_full(&mut stream, &mut bbox_buf, &d.stop, false)?;
         let window = decode_bbox(&bbox_buf);
+        d.metrics.add(names::COLLECTOR_QUERIES, 1);
         let out = match u32::from_le_bytes(magic) {
             REQ_MAGIC => {
                 let mut b = [0u8; 4];
-                read_full(&mut stream, &mut b, stop, false)?;
-                respond(sim, &window, u32::from_le_bytes(b) as usize, false)?
+                read_full(&mut stream, &mut b, &d.stop, false)?;
+                let budget = u32::from_le_bytes(b) as usize;
+                let grids = match &ctx {
+                    SessionCtx::Live(sim) => select_live(sim, &window, budget)?,
+                    SessionCtx::Snapshot(r) => r.window(&window, budget)?,
+                };
+                encode_records(&grids, None)
             }
             LOD_REQ_MAGIC => {
                 let mut b = [0u8; 8];
-                read_full(&mut stream, &mut b, stop, false)?;
-                // byte budget → grid budget: the server-side level
-                // selection then picks the finest depth whose cover fits
-                let budget = (u64::from_le_bytes(b) / REC_LEN as u64).max(1) as usize;
-                respond(sim, &window, budget, true)?
+                read_full(&mut stream, &mut b, &d.stop, false)?;
+                let budget_bytes = u64::from_le_bytes(b);
+                let grids = match &ctx {
+                    SessionCtx::Live(sim) => {
+                        // byte budget → grid budget: the server-side level
+                        // selection picks the finest depth whose cover fits
+                        let budget = (budget_bytes / REC_LEN as u64).max(1) as usize;
+                        select_live(sim, &window, budget)?
+                    }
+                    SessionCtx::Snapshot(r) => r.budgeted(&window, budget_bytes)?.grids,
+                };
+                // the budgeted protocol reports the finest depth served
+                let depth = grids.iter().map(|g| g.depth).max().unwrap_or(0);
+                encode_records(&grids, Some(depth))
             }
             _ => bail!("collector: bad request magic"),
         };
+        if d.stop.load(Ordering::Relaxed) {
+            bail!("collector: shutting down");
+        }
         stream.write_all(&out)?;
     }
 }
@@ -731,46 +1088,61 @@ fn decode_bbox(buf: &[u8; 48]) -> BBox {
     }
 }
 
-/// The neighbourhood server selects the grids at the budget's level of
-/// detail, the owning processes provide the data, the collector serialises
-/// the response. `lod_header` prefixes the record stream with the finest
-/// tree depth served (the budgeted protocol's level report).
-fn respond(
-    sim: &Arc<RwLock<Simulation>>,
+/// Steps (2)–(4) of the Fig 3 query path: the neighbourhood server selects
+/// the grids at the budget's level of detail and the owning processes
+/// provide the data — all under the simulation read guard, which is
+/// dropped **before** the response is serialised ([`encode_records`]) or
+/// written. The old `respond()` held the guard across the full
+/// serialisation, so one slow/large response stalled the writer's solver
+/// step for its whole duration.
+fn select_live(
+    sim: &RwLock<Simulation>,
     window: &BBox,
     budget: usize,
-    lod_header: bool,
-) -> Result<Vec<u8>> {
+) -> Result<Vec<WindowGrid>> {
     let sim = sim.read().map_err(|_| anyhow!("collector: lock poisoned"))?;
     let sel = sim.nbs.select_window(window, budget);
-    let mut out: Vec<u8> = Vec::with_capacity(8 + sel.len() * REC_LEN);
-    if lod_header {
-        let depth = sel
-            .iter()
-            .map(|&i| sim.nbs.tree.node(i).depth())
-            .max()
-            .unwrap_or(0);
-        out.extend_from_slice(&depth.to_le_bytes());
-    }
-    out.extend_from_slice(&(sel.len() as u32).to_le_bytes());
+    let mut grids = Vec::with_capacity(sel.len());
     let mut interior = vec![0.0f32; DGRID_CELLS];
     for idx in sel {
         let node = sim.nbs.tree.node(idx);
-        out.extend_from_slice(&node.uid().0.to_le_bytes());
-        out.extend_from_slice(&node.depth().to_le_bytes());
-        for v in node.bbox.min.iter().chain(node.bbox.max.iter()) {
-            out.extend_from_slice(&v.to_le_bytes());
-        }
+        let mut data = Vec::with_capacity(ROW_ELEMS);
         for v in 0..NVAR {
             sim.grids[idx as usize]
                 .cur
                 .extract_interior(v, &mut interior);
-            for x in &interior {
-                out.extend_from_slice(&x.to_le_bytes());
-            }
+            data.extend_from_slice(&interior);
+        }
+        grids.push(WindowGrid {
+            uid: node.uid(),
+            depth: node.depth(),
+            bbox: node.bbox,
+            data,
+        });
+    }
+    Ok(grids)
+}
+
+/// Serialise grid records for the wire — outside any simulation lock.
+/// `lod_depth` prefixes the record stream with the finest tree depth
+/// served (the budgeted protocol's level report).
+fn encode_records(grids: &[WindowGrid], lod_depth: Option<u32>) -> Vec<u8> {
+    let mut out: Vec<u8> = Vec::with_capacity(8 + grids.len() * REC_LEN);
+    if let Some(depth) = lod_depth {
+        out.extend_from_slice(&depth.to_le_bytes());
+    }
+    out.extend_from_slice(&(grids.len() as u32).to_le_bytes());
+    for g in grids {
+        out.extend_from_slice(&g.uid.0.to_le_bytes());
+        out.extend_from_slice(&g.depth.to_le_bytes());
+        for v in g.bbox.min.iter().chain(g.bbox.max.iter()) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for x in &g.data {
+            out.extend_from_slice(&x.to_le_bytes());
         }
     }
-    Ok(out)
+    out
 }
 
 /// Read `n`-prefixed grid records off the wire (client side).
@@ -1276,6 +1648,183 @@ mod tests {
         let pr = |w: &[WindowGrid]| w[0].data[var::P * DGRID_CELLS];
         assert_ne!(pr(&before), pr(&after));
         assert_eq!(pr(&after), 777.0);
+    }
+
+    #[test]
+    fn collector_reaps_sessions_without_a_further_accept() {
+        // the thread-leak bug: session state was only reaped inside the
+        // accept arm, so an idle collector held every finished session
+        // forever. Under the worker pool, the live-session gauge must
+        // return to 0 with no further connection arriving.
+        let s = sim(1);
+        let shared = Arc::new(RwLock::new(s));
+        let collector = Collector::spawn(shared).unwrap();
+        for _ in 0..6 {
+            let mut client = WindowClient::connect(collector.addr).unwrap();
+            assert_eq!(client.window(&BBox::unit(), 1).unwrap().len(), 1);
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while collector.active_sessions() > 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(collector.active_sessions(), 0, "sessions not reaped");
+        assert_eq!(collector.queued_connections(), 0);
+        assert_eq!(collector.metrics().counter(names::COLLECTOR_SESSIONS), 6);
+        assert_eq!(collector.metrics().counter(names::COLLECTOR_QUERIES), 6);
+    }
+
+    #[test]
+    fn stalled_client_hits_write_timeout_and_frees_its_worker() {
+        // a client that never drains its response must hit the write
+        // timeout and lose its session — it must not park a worker forever
+        // or delay Collector::drop
+        let s = sim(3); // 512 leaves → a ~42 MB budget-1000 response
+        let shared = Arc::new(RwLock::new(s));
+        let opts = CollectorOptions {
+            workers: 2,
+            write_timeout: Duration::from_millis(250),
+            ..CollectorOptions::default()
+        };
+        let collector = Collector::spawn_with(shared, &opts).unwrap();
+        // raw socket: send a full-domain request, then never read a byte
+        let mut stalled = TcpStream::connect(collector.addr).unwrap();
+        let mut req = Vec::with_capacity(56);
+        req.extend_from_slice(&REQ_MAGIC.to_le_bytes());
+        for v in BBox::unit().min.iter().chain(BBox::unit().max.iter()) {
+            req.extend_from_slice(&v.to_le_bytes());
+        }
+        req.extend_from_slice(&1000u32.to_le_bytes());
+        stalled.write_all(&req).unwrap();
+        // a well-behaved client is still served while the other worker
+        // is wedged against the stalled socket
+        let mut ok = WindowClient::connect(collector.addr).unwrap();
+        assert_eq!(ok.window(&BBox::unit(), 1).unwrap().len(), 1);
+        drop(ok);
+        // both sessions end: the polite one on EOF, the stalled one cut
+        // off by the write timeout — while its socket stays open
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while collector.active_sessions() > 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(collector.active_sessions(), 0, "stalled session never closed");
+        // shutdown is bounded by one write timeout, not a wedged join
+        let t0 = std::time::Instant::now();
+        drop(collector);
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "drop took {:?}",
+            t0.elapsed()
+        );
+        drop(stalled);
+    }
+
+    #[test]
+    fn snapshot_collector_serves_pooled_sessions() {
+        // the fan-out server: N connections to one snapshot share one
+        // parsed core and one decoded-chunk cache, and answer exactly like
+        // a private offline session
+        let s = sim(2);
+        let f = snapshot_file("fanout", &s, 0.5);
+        let path = f.path.clone();
+        let truth = SnapshotReader::open(&f, 0.5)
+            .unwrap()
+            .window(&BBox::unit(), 8)
+            .unwrap();
+        let collector =
+            Collector::spawn_snapshot(f, 0.5, &CollectorOptions::default()).unwrap();
+        let mut clients: Vec<WindowClient> = (0..3)
+            .map(|_| WindowClient::connect(collector.addr).unwrap())
+            .collect();
+        for c in &mut clients {
+            let got = c.window(&BBox::unit(), 8).unwrap();
+            assert_eq!(got.len(), truth.len());
+            for (a, b) in got.iter().zip(&truth) {
+                assert_eq!(a.uid.0, b.uid.0);
+                assert_eq!(a.data, b.data, "fan-out served different bytes");
+            }
+            let lod = c.budgeted(&BBox::unit(), REC_LEN as u64).unwrap();
+            assert_eq!(lod.grids.len(), 1);
+            assert_eq!(lod.depth, 0);
+        }
+        let pool = collector.reader_pool().unwrap();
+        let pm = pool.metrics();
+        assert_eq!(
+            pm.counter(names::READER_INDEX_BUILDS),
+            1,
+            "every session after the first must share the parsed core"
+        );
+        assert!(pm.counter(names::READER_SHARED_OPENS) >= 2);
+        let cs = pool.cache_stats();
+        assert!(cs.hits >= 1, "repeat viewers decoded their own chunks: {cs:?}");
+        drop(clients);
+        drop(collector);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reader_pool_shares_core_and_epoch_isolation() {
+        let mut s = sim(2);
+        let p = std::env::temp_dir().join(format!("win_pool_{}.h5", std::process::id()));
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 3);
+        let mut f = H5File::create(&p, 1).unwrap();
+        iokernel::write_common(&mut f, &s.params, &s.nbs.tree, 3).unwrap();
+        iokernel::write_snapshot(&mut f, &io, &s.nbs.tree, &s.part, &s.grids, 0.0).unwrap();
+
+        let pool = ReaderPool::new(DEFAULT_CHUNK_CACHE_BYTES);
+        let r1 = pool.open(&f, 0.0).unwrap();
+        assert_eq!(r1.metrics.counter(names::READER_INDEX_BUILDS), 1);
+        let w1 = r1.window(&BBox::unit(), 1000).unwrap();
+        let r2 = pool.open(&f, 0.0).unwrap();
+        assert_eq!(r2.metrics.counter(names::READER_SHARED_OPENS), 1);
+        assert_eq!(r2.metrics.counter(names::READER_INDEX_BUILDS), 0);
+        assert_eq!(pool.live_cores(), 1);
+        // r2 shares r1's core and cache: repeating the same window does
+        // zero physical reads
+        let before = r2.read_stats();
+        let w2 = r2.window(&BBox::unit(), 1000).unwrap();
+        let after = r2.read_stats();
+        assert_eq!(after.read_bytes, before.read_bytes, "{after:?}");
+        for (a, b) in w1.iter().zip(&w2) {
+            assert_eq!(a.uid.0, b.uid.0);
+            assert_eq!(a.data, b.data);
+        }
+        // a writer commit moves fresh pooled sessions to a new epoch: a
+        // fresh core and fresh cache keys serve the new bytes, while the
+        // old sessions keep their pinned view
+        for (i, g) in s.grids.iter_mut().enumerate() {
+            let fresh = vec![i as f32 + 5000.0; DGRID_CELLS];
+            g.cur.set_interior(var::P, &fresh);
+        }
+        iokernel::rewrite_snapshot_cells(
+            &mut f,
+            &io,
+            &s.nbs.tree,
+            &s.part,
+            &s.grids,
+            0.0,
+            &iokernel::SnapshotOptions::default(),
+        )
+        .unwrap();
+        let r3 = pool.open(&f, 0.0).unwrap();
+        assert_eq!(
+            r3.metrics.counter(names::READER_INDEX_BUILDS),
+            1,
+            "a new epoch must build a fresh core"
+        );
+        assert_eq!(pool.live_cores(), 2);
+        let w3 = r3.window(&BBox::unit(), 1000).unwrap();
+        let p_at = |w: &[WindowGrid]| w[0].data[var::P * DGRID_CELLS];
+        assert_ne!(p_at(&w1), p_at(&w3), "new epoch served stale cached bytes");
+        let w1_again = r1.window(&BBox::unit(), 1000).unwrap();
+        assert_eq!(p_at(&w1), p_at(&w1_again), "pinned session lost its view");
+        // dropping every session of a core prunes it at the next open
+        drop(r1);
+        drop(r2);
+        drop(r3);
+        let r4 = pool.open(&f, 0.0).unwrap();
+        assert_eq!(pool.live_cores(), 1);
+        drop(r4);
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

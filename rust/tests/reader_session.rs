@@ -20,7 +20,7 @@ use mpfluid::physics::Params;
 use mpfluid::tree::dgrid::DGrid;
 use mpfluid::tree::sfc::{self, Partition};
 use mpfluid::tree::{BBox, SpaceTree};
-use mpfluid::window::{SnapshotReader, SnapshotReaderOptions};
+use mpfluid::window::{ReaderPool, SnapshotReader, SnapshotReaderOptions};
 use mpfluid::{var, DGRID_CELLS};
 
 /// Cell-data bytes of one grid row.
@@ -139,6 +139,76 @@ fn session_pinned_across_two_commits_reads_identical_bytes() {
     .unwrap();
     assert!(f.space_stats().reused_bytes > reused_before);
     assert!(f.verify().unwrap().ok());
+    std::fs::remove_file(&f.path).ok();
+}
+
+#[test]
+fn pooled_sessions_keep_byte_identity_across_commits() {
+    // the ISSUE 6 shared cache must not weaken the PR-5 contract above: a
+    // pooled session pinned at epoch e keeps serving epoch-e bytes across
+    // writer commits. Pool budget 0 keeps nothing resident, so every read
+    // below proves the on-disk bytes (single-flight still coalesces, but
+    // no decoded entry survives to go stale).
+    let (tree, part, mut grids) = setup(2, 4);
+    paint(&mut grids, 0);
+    let (mut f, io) = write_file("pool2", &tree, &part, &grids);
+
+    let pool = ReaderPool::new(0);
+    let s1 = pool.open(&f, 0.0).unwrap();
+    let s2 = pool.open(&f, 0.0).unwrap(); // shares s1's parsed core + pin
+    assert_eq!(s2.metrics.counter(names::READER_SHARED_OPENS), 1);
+    let base_full = s1.window(&BBox::unit(), usize::MAX).unwrap();
+    let base_lod = s1.budgeted(&BBox::unit(), 8 * RB).unwrap();
+    assert!(base_lod.from_pyramid);
+
+    for step in 1..=2u32 {
+        paint(&mut grids, step);
+        iokernel::rewrite_snapshot_cells(
+            &mut f,
+            &io,
+            &tree,
+            &part,
+            &grids,
+            0.0,
+            &SnapshotOptions::default(),
+        )
+        .unwrap();
+    }
+
+    // both pooled sessions still serve the epoch-0 bytes — full resolution
+    // and the pyramid
+    for s in [&s1, &s2] {
+        let now_full = s.window(&BBox::unit(), usize::MAX).unwrap();
+        assert_eq!(base_full.len(), now_full.len());
+        for (a, b) in base_full.iter().zip(&now_full) {
+            assert_eq!(a.uid.0, b.uid.0);
+            assert_eq!(a.data, b.data, "pooled session read rewritten cell data");
+        }
+        let now_lod = s.budgeted(&BBox::unit(), 8 * RB).unwrap();
+        assert_eq!(base_lod.level, now_lod.level);
+        for (a, b) in base_lod.grids.iter().zip(&now_lod.grids) {
+            assert_eq!(a.data, b.data, "pooled session read a refolded pyramid");
+        }
+    }
+    // a pooled open after the commits lands on the new epoch: a fresh
+    // core, fresh cache keys, the new bytes
+    let fresh = pool.open(&f, 0.0).unwrap();
+    assert_eq!(fresh.metrics.counter(names::READER_SHARED_OPENS), 0);
+    let new_full = fresh.window(&BBox::unit(), usize::MAX).unwrap();
+    let p_at = |w: &[mpfluid::window::WindowGrid]| w[0].data[var::P * DGRID_CELLS];
+    assert_ne!(
+        p_at(&base_full),
+        p_at(&new_full),
+        "pooled open stuck on the old epoch"
+    );
+    // budget 0 really kept nothing resident — the identity above came off
+    // the disk, not out of the cache
+    let cs = pool.cache_stats();
+    assert_eq!(cs.resident_bytes, 0, "{cs:?}");
+    assert!(cs.misses > 0, "{cs:?}");
+    drop(fresh);
+    drop(s1);
+    drop(s2);
     std::fs::remove_file(&f.path).ok();
 }
 
