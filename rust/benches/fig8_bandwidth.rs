@@ -333,6 +333,89 @@ fn rewrite_amplification() {
     }
 }
 
+/// Direct vs paged storage backend on identical snapshot sequences: the
+/// per-step **commit-return** latency (what the solver blocks on — the
+/// paged image absorbs the stream + sync), the **end-to-end** bandwidth
+/// including the final `wait_durable` drain, and the **overlap
+/// efficiency** — the fraction of flusher busy time hidden behind
+/// subsequent steps' pack/compress instead of exposed in the drain.
+/// Acceptance: paged commit-return ≤ 0.25× direct at ≥ 0.9× end-to-end
+/// bandwidth.
+fn direct_vs_paged(depth: u32, steps: u32) {
+    use mpfluid::h5lite::Backing;
+    use std::time::Instant;
+    println!(
+        "\n== direct vs paged backend ({steps} snapshots, depth-{depth} domain, 8 ranks, this host) =="
+    );
+    println!(
+        "{:>8} {:>16} {:>14} {:>12} {:>12} {:>9}",
+        "backend", "commit-return", "end-to-end", "bandwidth", "flush busy", "overlap"
+    );
+    let mut rows: Vec<(f64, f64)> = Vec::new(); // (per-step commit-return s, end-to-end B/s)
+    for backing in [Backing::Direct, Backing::Paged] {
+        let mut sc = Scenario::channel(depth);
+        sc.ranks = 8;
+        let sim = sc.build();
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 8);
+        let path = std::env::temp_dir().join(format!(
+            "fig8_backend_{}_{backing:?}.h5",
+            std::process::id()
+        ));
+        let mut f = H5File::create_backed(&path, 4096, backing).unwrap();
+        iokernel::write_common(&mut f, &sim.params, &sim.nbs.tree, 8).unwrap();
+        let opts = SnapshotOptions {
+            backing,
+            ..SnapshotOptions::default()
+        };
+        let t0 = Instant::now();
+        let mut commit_return = 0.0f64;
+        let mut bytes = 0u64;
+        for step in 0..steps {
+            let ts = Instant::now();
+            let rep = iokernel::write_snapshot_with(
+                &mut f,
+                &io,
+                &sim.nbs.tree,
+                &sim.part,
+                &sim.grids,
+                step as f64,
+                &opts,
+            )
+            .unwrap();
+            commit_return += ts.elapsed().as_secs_f64();
+            bytes += rep.io.bytes;
+        }
+        let t_drain = Instant::now();
+        f.wait_durable().unwrap();
+        let drain = t_drain.elapsed().as_secs_f64();
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let busy = f.flush_stats().busy_seconds;
+        let overlap = if busy > 0.0 {
+            (1.0 - drain / busy).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        drop(f);
+        std::fs::remove_file(&path).ok();
+        println!(
+            "{:>8} {:>13.1} ms {:>11.1} ms {:>12} {:>9.1} ms {:>8.0}%",
+            format!("{backing:?}").to_lowercase(),
+            commit_return / steps as f64 * 1e3,
+            wall * 1e3,
+            fmt_gbps(bytes as f64, wall),
+            busy * 1e3,
+            overlap * 100.0
+        );
+        rows.push((commit_return / steps as f64, bytes as f64 / wall));
+    }
+    println!(
+        "  paged vs direct: commit-return {:.2}x (target ≤ 0.25x), \
+         end-to-end bandwidth {:.2}x (target ≥ 0.9x)",
+        rows[1].0 / rows[0].0,
+        rows[1].1 / rows[0].1
+    );
+}
+
 /// `lz_ratio`/`lz_codec` are the stored/raw ratio and dominant codec of
 /// the adaptive cell-data path, measured on real channel-flow snapshots by
 /// [`real_compression_comparison`].
@@ -434,6 +517,9 @@ fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     if quick {
         codec_v2_table(2);
+        // depth-1 domain: a few MB per snapshot — small enough for CI,
+        // big enough for the commit-return / drain split to show
+        direct_vs_paged(1, 4);
         modelled_fig8a(0.63, Codec::ShuffleDeltaLzEntropy);
         modelled_fig8b();
         modelled_supermuc();
@@ -442,6 +528,7 @@ fn main() {
     real_write_sweep();
     codec_v2_table(5);
     let (lz_ratio, lz_codec) = real_compression_comparison();
+    direct_vs_paged(2, 6);
     rewrite_amplification();
     real_vpic_write();
     modelled_fig8a(lz_ratio, lz_codec);

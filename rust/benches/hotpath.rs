@@ -185,6 +185,45 @@ fn io_breakdown() {
         real_s * 1e3,
         mpfluid::util::fmt_bytes(bytes)
     );
+
+    // the paged backend's stage split: what the caller blocks on
+    // (commit-return) vs what the flusher thread does in the background
+    use mpfluid::h5lite::Backing;
+    use mpfluid::iokernel::SnapshotOptions;
+    let mut commit_s = 0.0;
+    let mut drain_s = 0.0;
+    let mut flush_busy = 0.0;
+    let s2 = measure(5, || {
+        let path = dir.join(format!("hot_io_paged_{n}.h5"));
+        n += 1;
+        let mut f = H5File::create_backed(&path, 4096, Backing::Paged).unwrap();
+        iokernel::write_common(&mut f, &sim.params, &sim.nbs.tree, 16).unwrap();
+        let t0 = std::time::Instant::now();
+        iokernel::write_snapshot_with(
+            &mut f,
+            &io,
+            &sim.nbs.tree,
+            &sim.part,
+            &sim.grids,
+            0.0,
+            &SnapshotOptions::paged(),
+        )
+        .unwrap();
+        commit_s = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        f.wait_durable().unwrap();
+        drain_s = t1.elapsed().as_secs_f64();
+        flush_busy = f.flush_stats().busy_seconds;
+        drop(f);
+        std::fs::remove_file(&path).ok();
+    });
+    println!(
+        "  paged {}  = commit-return {:.1} ms + drain {:.1} ms   (flusher busy {:.1} ms)",
+        s2.fmt_ms(),
+        commit_s * 1e3,
+        drain_s * 1e3,
+        flush_busy * 1e3
+    );
 }
 
 fn main() {

@@ -166,13 +166,19 @@ pub struct IoEstimate {
     /// [`crate::pario::ParallelIo::collective_write`] so steady-state file
     /// size is derivable: growth per write ≈ stored − reclaimed.
     pub reclaimed_bytes: u64,
+    /// Background-flusher drain time of the stored bytes on the paged
+    /// storage backend; 0 for direct-backend estimates. Only
+    /// [`Machine::estimate_write_paged`] fills this in — there the exposed
+    /// wall-clock is `max(fill+codec+overheads, flush)` because commit
+    /// returns at image speed and the flush overlaps the next step.
+    pub t_flush: f64,
 }
 
 impl fmt::Display for IoEstimate {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "{:.2} GB/s ({:.1}s: stream {:.1} agg {:.1} comp {:.1} fold {:.1} msg {:.1} wind {:.1} lock {:.1} align {:.1})",
+            "{:.2} GB/s ({:.1}s: stream {:.1} agg {:.1} comp {:.1} fold {:.1} msg {:.1} wind {:.1} lock {:.1} align {:.1} flush {:.1})",
             self.bandwidth / 1e9,
             self.seconds,
             self.t_stream,
@@ -182,7 +188,8 @@ impl fmt::Display for IoEstimate {
             self.t_messages,
             self.t_wind,
             self.t_lock,
-            self.t_align
+            self.t_align,
+            self.t_flush
         )
     }
 }
@@ -225,6 +232,13 @@ pub struct Machine {
     /// data): a memory-bound 8:1 averaging pass. `f64::INFINITY` = not
     /// modelled (the local machine measures the real fold instead).
     pub fold_bw: f64,
+    /// Cap on the paged backend's background-flusher drain (bytes/s): the
+    /// flusher streams the dirty image to the file system while the next
+    /// step computes, at the *minimum* of the partition's streaming
+    /// bandwidth and this cap (a throttled or contended background drain).
+    /// `f64::INFINITY` = not modelled (the local machine measures the real
+    /// flusher instead).
+    pub flush_bw: f64,
 }
 
 impl Machine {
@@ -252,6 +266,9 @@ impl Machine {
                 entropy: 0.35e9,
             },
             fold_bw: 2.0e9, // memory-bound 8:1 averaging on an A2 core
+            // the flusher drains through the same I/O-drawer links the
+            // synchronous path streams through — no extra throttle
+            flush_bw: 200e9,
         }
     }
 
@@ -279,6 +296,7 @@ impl Machine {
                 entropy: 1.0e9,
             },
             fold_bw: 6.0e9, // Sandy Bridge core, streaming averages
+            flush_bw: 30e9, // drains at the job's GPFS share
         }
     }
 
@@ -302,6 +320,7 @@ impl Machine {
             indep_contention: 0.0,
             compress_bw: CompressBw::unmodelled(), // real codec timings
             fold_bw: f64::INFINITY,                // real fold timings
+            flush_bw: f64::INFINITY,               // real flusher timings
         }
     }
 
@@ -386,6 +405,49 @@ impl Machine {
         codec: Codec,
     ) -> IoEstimate {
         self.price_write(w, tuning, Some((stored_bytes, self.compress_bw.for_codec(codec))))
+    }
+
+    /// Price a collective write on the **paged** storage backend: writes
+    /// land in the in-memory image, so commit returns after the fill (and
+    /// codec) phases plus the fixed overheads, while the background flusher
+    /// drains `stored_bytes` to the file system at [`Machine::flush_bw`]
+    /// overlapped with the next step's fill. The exposed wall-clock per
+    /// steady-state step is therefore
+    /// `max(fill+codec+overheads, flush) = commit_return + residual drain`,
+    /// with the residual charged only when the flusher is slower than the
+    /// compute-side pipeline. Pass `stored_bytes == w.total_bytes` for an
+    /// uncompressed write.
+    pub fn estimate_write_paged(
+        &self,
+        w: &WriteWorkload,
+        tuning: &IoTuning,
+        stored_bytes: u64,
+        codec: Codec,
+    ) -> IoEstimate {
+        let mut est = if stored_bytes < w.total_bytes {
+            self.estimate_write_compressed(w, tuning, stored_bytes, codec)
+        } else {
+            self.estimate_write(w, tuning)
+        };
+        let t_flush = if self.flush_bw.is_infinite() {
+            0.0 // real measurement machine: the flusher is timed, not modelled
+        } else {
+            stored_bytes as f64 / self.stream_bw(w.ranks).min(self.flush_bw)
+        };
+        // commit-return latency: the image absorbs the stream phase, so
+        // only fill/codec (pipelined) plus the fixed overheads remain
+        let t_fill = est.t_aggregate.max(est.t_compress);
+        let commit_return = t_fill + est.t_messages + est.t_wind + est.t_lock + est.t_align;
+        let drain = (t_flush - commit_return).max(0.0);
+        est.t_flush = t_flush;
+        est.t_stream = 0.0;
+        est.seconds = commit_return + drain;
+        est.bandwidth = if est.seconds > 0.0 {
+            w.total_bytes as f64 / est.seconds
+        } else {
+            f64::INFINITY
+        };
+        est
     }
 
     /// Price the LOD-pyramid fold of `raw_bytes` of source cell data,
@@ -777,6 +839,52 @@ mod tests {
             ent_ratio.bandwidth > 0.0 && lz_ratio.bandwidth > 0.0,
             "sanity"
         );
+    }
+
+    #[test]
+    fn paged_backend_overlap_never_loses_to_synchronous() {
+        // the paged estimate hides the stream phase behind the next step's
+        // fill: steady-state seconds = max(fill+codec+overheads, flush), so
+        // it can never exceed the synchronous estimate for the same work
+        let m = Machine::juqueen();
+        let w = paper_depth6_workload(8192);
+        let t = IoTuning::default();
+        let sync = m.estimate_write(&w, &t);
+        let paged = m.estimate_write_paged(&w, &t, w.total_bytes, Codec::ShuffleDeltaLz);
+        assert!(paged.seconds <= sync.seconds + 1e-9, "{paged} vs {sync}");
+        assert!(paged.bandwidth >= sync.bandwidth - 1e-9, "{paged} vs {sync}");
+        assert_eq!(paged.t_stream, 0.0, "the image absorbs the stream phase");
+        assert!(paged.t_flush > 0.0);
+        // commit_return + residual drain == seconds by construction
+        let t_fill = paged.t_aggregate.max(paged.t_compress);
+        let commit_return =
+            t_fill + paged.t_messages + paged.t_wind + paged.t_lock + paged.t_align;
+        let expect = commit_return + (paged.t_flush - commit_return).max(0.0);
+        assert!((paged.seconds - expect).abs() < 1e-9, "{paged}");
+        // JuQueen's scarce I/O drawer makes this workload flush-bound: the
+        // residual drain is what the overlap cannot hide
+        assert!(paged.t_flush > commit_return, "{paged}");
+        // compression shrinks the flushed volume, so the paged-compressed
+        // estimate beats paged-raw on a flush-bound machine
+        let comp =
+            m.estimate_write_paged(&w, &t, w.total_bytes * 2 / 5, Codec::ShuffleDeltaLz);
+        assert!(comp.seconds < paged.seconds, "{comp} vs {paged}");
+    }
+
+    #[test]
+    fn local_machine_models_no_flush_cost() {
+        // the local machine measures the real flusher, so the paged
+        // estimate is purely fill-bound with zero modelled flush time
+        let m = Machine::local();
+        let w = WriteWorkload {
+            ranks: 8,
+            total_bytes: 1 << 30,
+            n_datasets: 7,
+            n_grids: 100,
+        };
+        let paged = m.estimate_write_paged(&w, &IoTuning::default(), 1 << 30, Codec::Lz);
+        assert_eq!(paged.t_flush, 0.0);
+        assert!((paged.seconds - paged.t_aggregate).abs() < 1e-12, "{paged}");
     }
 
     #[test]

@@ -1,0 +1,747 @@
+//! Pluggable byte-store backends for [`H5File`](super::H5File).
+//!
+//! Every raw byte operation of the format layer — positional reads and
+//! writes, grow-only length management and the commit protocol's durability
+//! barriers — goes through the [`Store`] trait, so the same format code runs
+//! against two backends:
+//!
+//! * [`DirectFile`] — today's behaviour: positional I/O straight to the file
+//!   descriptor, `sync_data` barriers. Every write is on disk when the call
+//!   returns; a barrier makes it durable.
+//! * [`PagedImage`] — the HDF5 core-VFD pattern: writes land in a 64 MiB-paged
+//!   in-memory image and return at memory speed, [`Store::barrier`] snapshots
+//!   the dirty byte ranges (contents included) into an ordered batch queue,
+//!   and a background flusher thread applies batches to disk strictly in
+//!   order — grow, page-aligned writes, `sync_data` — so the on-disk file
+//!   always equals a *prefix* of the barrier history plus at most one torn
+//!   batch. Because the commit protocol issues the footer barrier before the
+//!   superblock barrier, a torn flush always recovers to the last durably
+//!   committed epoch.
+//!
+//! The image never evicts pages; absent pages are demand-faulted from disk
+//! (zeros past end of file, matching `set_len` semantics), which is sound
+//! because the flusher only ever writes ranges that were dirtied through the
+//! image — a page absent from the table is untouched on disk since open.
+//! Dropping a [`PagedImage`] issues a final barrier for any un-barriered
+//! writes, drains the queue and joins the flusher, so after drop the file is
+//! byte-identical to what a [`DirectFile`] run of the same operations leaves.
+//!
+//! [`Store::set_flush_fault`] is the fault-injection hook behind the
+//! crash-recovery suite: it kills the flusher before the write op that would
+//! cross a cumulative byte threshold, at an op (page-split) boundary,
+//! simulating a crash mid-flush.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+/// Which [`Store`] backend an [`H5File`](super::H5File) runs on.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum Backing {
+    /// Positional I/O straight to the descriptor ([`DirectFile`]).
+    #[default]
+    Direct,
+    /// Paged in-memory image with a background flusher ([`PagedImage`]).
+    Paged,
+}
+
+/// Page size of the [`PagedImage`] backend. Flusher write ops never cross a
+/// page boundary, so fault injection (and a real crash) tears batches at
+/// page-aligned op edges.
+pub const PAGE_BYTES: u64 = 64 << 20;
+
+/// Counter snapshot of a store's flush machinery (all zeros except
+/// `flushed_bytes`/barrier counts on [`DirectFile`], whose writes are
+/// synchronous by construction).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FlushStats {
+    /// Bytes not yet on disk: image-dirty ranges still awaiting a barrier
+    /// plus snapshotted batches queued for the flusher (the backlog).
+    pub dirty_bytes: u64,
+    /// Image pages covered by the not-yet-barriered dirty ranges.
+    pub dirty_pages: u64,
+    /// Cumulative payload bytes the flusher has written to disk.
+    pub flushed_bytes: u64,
+    /// Cumulative wall time the flusher spent applying batches.
+    pub busy_seconds: f64,
+    /// Barriers issued ([`Store::barrier`] calls).
+    pub barriers_issued: u64,
+    /// Barriers fully applied and fsynced to disk.
+    pub barriers_durable: u64,
+}
+
+/// The raw byte-store seam under [`H5File`](super::H5File): positional
+/// reads/writes, grow-only sizing, and the durability barrier the commit
+/// protocol orders its footer/superblock writes with.
+pub trait Store: Send + Sync {
+    /// Fill `buf` from `offset`; error if the range exceeds the store.
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> Result<()>;
+    /// Write all of `data` at `offset`, growing the store if needed.
+    fn write_all_at(&self, data: &[u8], offset: u64) -> Result<()>;
+    /// Current logical length.
+    fn len(&self) -> Result<u64>;
+    /// Grow to at least `len` (never shrinks — a committed footer must never
+    /// be truncated behind a concurrent reader). Growth reads as zeros.
+    fn set_len_min(&self, len: u64) -> Result<()>;
+    /// Durability barrier: all writes issued before this call become durable
+    /// before any write issued after it. [`DirectFile`] syncs inline;
+    /// [`PagedImage`] snapshots the dirty ranges into an ordered batch and
+    /// returns immediately.
+    fn barrier(&self) -> Result<()>;
+    /// Block until every issued barrier is durable on disk (errors if the
+    /// flusher died). Immediate on [`DirectFile`].
+    fn wait_durable(&self) -> Result<()>;
+    /// Flush machinery counters.
+    fn flush_stats(&self) -> FlushStats;
+    /// Which backend this is.
+    fn backing(&self) -> Backing;
+    /// Fault injection for crash tests: kill the flusher before the write op
+    /// that would push cumulative flushed bytes past `after_flushed_bytes`.
+    /// Returns false when the backend has no flusher to kill.
+    fn set_flush_fault(&self, _after_flushed_bytes: u64) -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DirectFile
+// ---------------------------------------------------------------------------
+
+/// Positional-I/O backend: the pre-refactor behaviour, bit-identical on-disk
+/// format and durability (`sync_data` at every barrier).
+pub struct DirectFile {
+    file: File,
+    written: AtomicU64,
+    barriers: AtomicU64,
+}
+
+impl DirectFile {
+    /// Create (truncating) a file at `path`.
+    pub fn create(path: &Path) -> Result<DirectFile> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        Ok(DirectFile {
+            file,
+            written: AtomicU64::new(0),
+            barriers: AtomicU64::new(0),
+        })
+    }
+
+    /// Open an existing file read + write.
+    pub fn open(path: &Path) -> Result<DirectFile> {
+        let file = OpenOptions::new().read(true).write(true).open(path)?;
+        Ok(DirectFile {
+            file,
+            written: AtomicU64::new(0),
+            barriers: AtomicU64::new(0),
+        })
+    }
+}
+
+impl Store for DirectFile {
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> Result<()> {
+        self.file.read_exact_at(buf, offset)?;
+        Ok(())
+    }
+
+    fn write_all_at(&self, data: &[u8], offset: u64) -> Result<()> {
+        self.file.write_all_at(data, offset)?;
+        self.written.fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn len(&self) -> Result<u64> {
+        Ok(self.file.metadata()?.len())
+    }
+
+    fn set_len_min(&self, len: u64) -> Result<()> {
+        let cur = self.file.metadata()?.len();
+        if len > cur {
+            self.file.set_len(len)?;
+        }
+        Ok(())
+    }
+
+    fn barrier(&self) -> Result<()> {
+        self.file.sync_data()?;
+        self.barriers.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn wait_durable(&self) -> Result<()> {
+        Ok(())
+    }
+
+    fn flush_stats(&self) -> FlushStats {
+        let b = self.barriers.load(Ordering::Relaxed);
+        FlushStats {
+            flushed_bytes: self.written.load(Ordering::Relaxed),
+            barriers_issued: b,
+            barriers_durable: b,
+            ..FlushStats::default()
+        }
+    }
+
+    fn backing(&self) -> Backing {
+        Backing::Direct
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PagedImage
+// ---------------------------------------------------------------------------
+
+/// Coalescing set of dirty byte ranges (`offset → len`). Unlike the format
+/// layer's free-list, inserts may overlap arbitrarily (rewrites re-dirty the
+/// same bytes), so insertion merges every overlapping or touching range.
+#[derive(Default)]
+struct RangeSet {
+    ranges: BTreeMap<u64, u64>,
+    bytes: u64,
+}
+
+impl RangeSet {
+    fn insert(&mut self, off: u64, len: u64) {
+        if len == 0 {
+            return;
+        }
+        let mut start = off;
+        let mut end = off + len;
+        while let Some((&o, &l)) = self.ranges.range(..=end).next_back() {
+            if o + l < start {
+                break;
+            }
+            self.ranges.remove(&o);
+            self.bytes -= l;
+            start = start.min(o);
+            end = end.max(o + l);
+        }
+        self.ranges.insert(start, end - start);
+        self.bytes += end - start;
+    }
+}
+
+/// The in-memory file image: lazily-allocated, never-evicted 64 MiB pages,
+/// the logical length, and the dirty ranges since the last barrier.
+struct ImageState {
+    pages: BTreeMap<u64, Box<[u8]>>,
+    len: u64,
+    dirty: RangeSet,
+}
+
+/// One barrier's worth of work for the flusher: the logical length at the
+/// barrier and the dirty ranges *with their contents copied out*. Contents
+/// must be snapshotted — the superblock is rewritten every commit and freed
+/// extents get reallocated, so flushing live-image bytes for an older batch
+/// would leak later-epoch data into an earlier durability point and break
+/// the footer-before-superblock ordering.
+struct Batch {
+    set_len: u64,
+    ranges: Vec<(u64, Vec<u8>)>,
+    bytes: u64,
+}
+
+struct FlushQueue {
+    batches: VecDeque<Batch>,
+    shutdown: bool,
+    /// Why the flusher stopped early (I/O error or injected fault), if it did.
+    dead: Option<String>,
+}
+
+struct FlushShared {
+    queue: Mutex<FlushQueue>,
+    cv: Condvar,
+    flushed_bytes: AtomicU64,
+    busy_ns: AtomicU64,
+    barriers_issued: AtomicU64,
+    barriers_durable: AtomicU64,
+    queued_bytes: AtomicU64,
+    /// Fault injection threshold (`u64::MAX` = disabled).
+    fault_after: AtomicU64,
+}
+
+/// Paged in-memory image backend: collective writes land in memory,
+/// barriers snapshot ordered batches, a background thread streams them to
+/// disk. See the module docs for the durability contract.
+pub struct PagedImage {
+    file: File,
+    state: Mutex<ImageState>,
+    shared: Arc<FlushShared>,
+    flusher: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl PagedImage {
+    /// Create (truncating) a paged image over the file at `path`.
+    pub fn create(path: &Path) -> Result<PagedImage> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        PagedImage::with_file(file)
+    }
+
+    /// Open an existing file through a paged image; absent pages fault in
+    /// from the current on-disk contents on demand.
+    pub fn open(path: &Path) -> Result<PagedImage> {
+        let file = OpenOptions::new().read(true).write(true).open(path)?;
+        PagedImage::with_file(file)
+    }
+
+    fn with_file(file: File) -> Result<PagedImage> {
+        let len = file.metadata()?.len();
+        let shared = Arc::new(FlushShared {
+            queue: Mutex::new(FlushQueue {
+                batches: VecDeque::new(),
+                shutdown: false,
+                dead: None,
+            }),
+            cv: Condvar::new(),
+            flushed_bytes: AtomicU64::new(0),
+            busy_ns: AtomicU64::new(0),
+            barriers_issued: AtomicU64::new(0),
+            barriers_durable: AtomicU64::new(0),
+            queued_bytes: AtomicU64::new(0),
+            fault_after: AtomicU64::new(u64::MAX),
+        });
+        let flush_file = file.try_clone()?;
+        let flush_shared = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("h5lite-flush".into())
+            .spawn(move || flusher_loop(flush_file, flush_shared))
+            .context("h5lite: spawn flusher")?;
+        Ok(PagedImage {
+            file,
+            state: Mutex::new(ImageState {
+                pages: BTreeMap::new(),
+                len,
+                dirty: RangeSet::default(),
+            }),
+            shared,
+            flusher: Mutex::new(Some(handle)),
+        })
+    }
+
+    /// Demand-fault `page_no` from disk: zeros past end of file. Sound
+    /// against the concurrently writing flusher because the flusher only
+    /// writes ranges dirtied through the image, whose pages are present —
+    /// an absent page's disk bytes are untouched since open.
+    fn fault_page(file: &File, pages: &mut BTreeMap<u64, Box<[u8]>>, page_no: u64) -> Result<()> {
+        if pages.contains_key(&page_no) {
+            return Ok(());
+        }
+        let mut page = vec![0u8; PAGE_BYTES as usize].into_boxed_slice();
+        let mut off = page_no * PAGE_BYTES;
+        let mut pos = 0usize;
+        while pos < page.len() {
+            match file.read_at(&mut page[pos..], off) {
+                Ok(0) => break, // end of file: the rest stays zero
+                Ok(n) => {
+                    pos += n;
+                    off += n as u64;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("h5lite: page fault read"),
+            }
+        }
+        pages.insert(page_no, page);
+        Ok(())
+    }
+}
+
+/// Copy `buf.len()` bytes at `off` out of the page table. Callers fault the
+/// covered pages first; an absent page here reads as zeros (only reachable
+/// for barrier snapshots, whose ranges are always fully paged-in).
+fn copy_from_pages(pages: &BTreeMap<u64, Box<[u8]>>, off: u64, buf: &mut [u8]) {
+    let mut pos = 0usize;
+    while pos < buf.len() {
+        let abs = off + pos as u64;
+        let page_no = abs / PAGE_BYTES;
+        let in_page = (abs % PAGE_BYTES) as usize;
+        let n = (PAGE_BYTES as usize - in_page).min(buf.len() - pos);
+        match pages.get(&page_no) {
+            Some(p) => buf[pos..pos + n].copy_from_slice(&p[in_page..in_page + n]),
+            None => buf[pos..pos + n].fill(0),
+        }
+        pos += n;
+    }
+}
+
+/// Apply one batch to disk: grow, write each range split at page
+/// boundaries (checking the fault threshold before every op), then fsync.
+fn apply_batch(file: &File, shared: &FlushShared, batch: &Batch) -> Result<()> {
+    let cur = file.metadata().context("h5lite: flusher stat")?.len();
+    if batch.set_len > cur {
+        file.set_len(batch.set_len).context("h5lite: flusher grow")?;
+    }
+    for (off, data) in &batch.ranges {
+        let mut pos = 0usize;
+        while pos < data.len() {
+            let abs = off + pos as u64;
+            let page_end = (abs / PAGE_BYTES + 1) * PAGE_BYTES;
+            let n = ((page_end - abs) as usize).min(data.len() - pos);
+            let done = shared.flushed_bytes.load(Ordering::Relaxed);
+            let limit = shared.fault_after.load(Ordering::Relaxed);
+            if done + n as u64 > limit {
+                bail!("injected flush fault after {done} flushed bytes");
+            }
+            file.write_all_at(&data[pos..pos + n], abs)
+                .context("h5lite: flusher write")?;
+            shared.flushed_bytes.fetch_add(n as u64, Ordering::Relaxed);
+            pos += n;
+        }
+    }
+    file.sync_data().context("h5lite: flusher sync")?;
+    Ok(())
+}
+
+fn flusher_loop(file: File, shared: Arc<FlushShared>) {
+    loop {
+        let batch = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(b) = q.batches.pop_front() {
+                    break b;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        let t0 = Instant::now();
+        let res = apply_batch(&file, &shared, &batch);
+        shared
+            .busy_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        shared.queued_bytes.fetch_sub(batch.bytes, Ordering::Relaxed);
+        match res {
+            Ok(()) => {
+                shared.barriers_durable.fetch_add(1, Ordering::Relaxed);
+                shared.cv.notify_all();
+            }
+            Err(e) => {
+                // die at the op boundary: later batches stay unapplied, so
+                // the disk holds a strict prefix of the barrier history
+                // plus this one torn batch
+                shared.queue.lock().unwrap().dead = Some(e.to_string());
+                shared.cv.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+impl Store for PagedImage {
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> Result<()> {
+        if buf.is_empty() {
+            return Ok(());
+        }
+        let mut st = self.state.lock().unwrap();
+        let end = offset + buf.len() as u64;
+        if end > st.len {
+            bail!("h5lite: read [{offset}, {end}) past image end {}", st.len);
+        }
+        for page_no in offset / PAGE_BYTES..=(end - 1) / PAGE_BYTES {
+            PagedImage::fault_page(&self.file, &mut st.pages, page_no)?;
+        }
+        copy_from_pages(&st.pages, offset, buf);
+        Ok(())
+    }
+
+    fn write_all_at(&self, data: &[u8], offset: u64) -> Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        let mut st = self.state.lock().unwrap();
+        let mut pos = 0usize;
+        while pos < data.len() {
+            let abs = offset + pos as u64;
+            let page_no = abs / PAGE_BYTES;
+            let in_page = (abs % PAGE_BYTES) as usize;
+            let n = (PAGE_BYTES as usize - in_page).min(data.len() - pos);
+            if in_page == 0 && n == PAGE_BYTES as usize {
+                // whole-page overwrite: skip the disk fault
+                st.pages.entry(page_no).or_insert_with(|| {
+                    vec![0u8; PAGE_BYTES as usize].into_boxed_slice()
+                });
+            } else {
+                PagedImage::fault_page(&self.file, &mut st.pages, page_no)?;
+            }
+            let page = st.pages.get_mut(&page_no).unwrap();
+            page[in_page..in_page + n].copy_from_slice(&data[pos..pos + n]);
+            pos += n;
+        }
+        st.len = st.len.max(offset + data.len() as u64);
+        st.dirty.insert(offset, data.len() as u64);
+        Ok(())
+    }
+
+    fn len(&self) -> Result<u64> {
+        Ok(self.state.lock().unwrap().len)
+    }
+
+    fn set_len_min(&self, len: u64) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        st.len = st.len.max(len);
+        Ok(())
+    }
+
+    fn barrier(&self) -> Result<()> {
+        {
+            let q = self.shared.queue.lock().unwrap();
+            if let Some(why) = &q.dead {
+                bail!("h5lite: flusher stopped: {why}");
+            }
+        }
+        let batch = {
+            let mut st = self.state.lock().unwrap();
+            let ranges: Vec<(u64, Vec<u8>)> = st
+                .dirty
+                .ranges
+                .iter()
+                .map(|(&o, &l)| {
+                    let mut buf = vec![0u8; l as usize];
+                    copy_from_pages(&st.pages, o, &mut buf);
+                    (o, buf)
+                })
+                .collect();
+            let bytes = st.dirty.bytes;
+            st.dirty = RangeSet::default();
+            Batch {
+                set_len: st.len,
+                ranges,
+                bytes,
+            }
+        };
+        let mut q = self.shared.queue.lock().unwrap();
+        self.shared.barriers_issued.fetch_add(1, Ordering::Relaxed);
+        self.shared.queued_bytes.fetch_add(batch.bytes, Ordering::Relaxed);
+        q.batches.push_back(batch);
+        self.shared.cv.notify_all();
+        Ok(())
+    }
+
+    fn wait_durable(&self) -> Result<()> {
+        let mut q = self.shared.queue.lock().unwrap();
+        loop {
+            if let Some(why) = &q.dead {
+                bail!("h5lite: flusher stopped: {why}");
+            }
+            let issued = self.shared.barriers_issued.load(Ordering::Relaxed);
+            let durable = self.shared.barriers_durable.load(Ordering::Relaxed);
+            if q.batches.is_empty() && issued == durable {
+                return Ok(());
+            }
+            q = self.shared.cv.wait(q).unwrap();
+        }
+    }
+
+    fn flush_stats(&self) -> FlushStats {
+        let (dirty_bytes, dirty_pages) = {
+            let st = self.state.lock().unwrap();
+            let pages: BTreeSet<u64> = st
+                .dirty
+                .ranges
+                .iter()
+                .flat_map(|(&o, &l)| o / PAGE_BYTES..=(o + l - 1) / PAGE_BYTES)
+                .collect();
+            (st.dirty.bytes, pages.len() as u64)
+        };
+        FlushStats {
+            dirty_bytes: dirty_bytes + self.shared.queued_bytes.load(Ordering::Relaxed),
+            dirty_pages,
+            flushed_bytes: self.shared.flushed_bytes.load(Ordering::Relaxed),
+            busy_seconds: self.shared.busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            barriers_issued: self.shared.barriers_issued.load(Ordering::Relaxed),
+            barriers_durable: self.shared.barriers_durable.load(Ordering::Relaxed),
+        }
+    }
+
+    fn backing(&self) -> Backing {
+        Backing::Paged
+    }
+
+    fn set_flush_fault(&self, after_flushed_bytes: u64) -> bool {
+        self.shared
+            .fault_after
+            .store(after_flushed_bytes, Ordering::Relaxed);
+        true
+    }
+}
+
+impl Drop for PagedImage {
+    fn drop(&mut self) {
+        // final barrier so un-barriered writes reach disk (matching
+        // DirectFile, where every write is on disk immediately), then drain
+        // and join; a dead flusher just leaves the torn state for recovery
+        let _ = self.barrier();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.flusher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("h5lite_store_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn range_set_merges_overlaps_and_touches() {
+        let mut rs = RangeSet::default();
+        rs.insert(100, 50);
+        rs.insert(150, 10); // touching
+        assert_eq!(rs.ranges.len(), 1);
+        assert_eq!(rs.ranges[&100], 60);
+        assert_eq!(rs.bytes, 60);
+        rs.insert(120, 100); // overlapping, extends the end
+        assert_eq!(rs.ranges.len(), 1);
+        assert_eq!(rs.ranges[&100], 120);
+        rs.insert(500, 5); // disjoint
+        assert_eq!(rs.ranges.len(), 2);
+        rs.insert(90, 500); // swallows everything
+        assert_eq!(rs.ranges.len(), 1);
+        assert_eq!(rs.ranges[&90], 500);
+        assert_eq!(rs.bytes, 500);
+        rs.insert(90, 10); // fully contained: no change
+        assert_eq!(rs.ranges[&90], 500);
+        assert_eq!(rs.bytes, 500);
+    }
+
+    #[test]
+    fn paged_image_write_read_drop_roundtrip() {
+        let p = tmp("roundtrip");
+        {
+            let img = PagedImage::create(&p).unwrap();
+            img.write_all_at(b"hello", 10).unwrap();
+            img.write_all_at(b"world", 100).unwrap();
+            img.set_len_min(200).unwrap();
+            assert_eq!(img.len().unwrap(), 200);
+            let mut buf = [0u8; 5];
+            img.read_exact_at(&mut buf, 10).unwrap();
+            assert_eq!(&buf, b"hello");
+            // unwritten bytes read as zeros
+            let mut z = [9u8; 4];
+            img.read_exact_at(&mut z, 50).unwrap();
+            assert_eq!(z, [0u8; 4]);
+            // read past the logical end fails
+            let mut over = [0u8; 8];
+            assert!(img.read_exact_at(&mut over, 197).is_err());
+            img.barrier().unwrap();
+            img.wait_durable().unwrap();
+        }
+        // after drop the disk file holds the image bit-exact
+        let disk = std::fs::read(&p).unwrap();
+        assert_eq!(disk.len(), 200);
+        assert_eq!(&disk[10..15], b"hello");
+        assert_eq!(&disk[100..105], b"world");
+        assert!(disk[50..60].iter().all(|&b| b == 0));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn paged_image_faults_existing_file_contents() {
+        let p = tmp("fault");
+        std::fs::write(&p, vec![7u8; 1000]).unwrap();
+        let img = PagedImage::open(&p).unwrap();
+        assert_eq!(img.len().unwrap(), 1000);
+        let mut buf = [0u8; 10];
+        img.read_exact_at(&mut buf, 500).unwrap();
+        assert_eq!(buf, [7u8; 10]);
+        // a write is visible through the image before any flush
+        img.write_all_at(&[1, 2, 3], 500).unwrap();
+        img.read_exact_at(&mut buf, 500).unwrap();
+        assert_eq!(&buf[..3], &[1, 2, 3]);
+        drop(img);
+        assert_eq!(&std::fs::read(&p).unwrap()[500..503], &[1, 2, 3]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn barrier_snapshots_are_ordered_and_content_stable() {
+        // overwrite the same bytes across two barriers: the disk must end at
+        // the *second* content even though both batches cover the range, and
+        // killing the flusher between them must leave the first
+        let p = tmp("order");
+        let img = PagedImage::create(&p).unwrap();
+        img.write_all_at(&[1u8; 64], 0).unwrap();
+        img.barrier().unwrap();
+        img.write_all_at(&[2u8; 64], 0).unwrap();
+        img.barrier().unwrap();
+        img.wait_durable().unwrap();
+        let stats = img.flush_stats();
+        assert_eq!(stats.barriers_issued, 2);
+        assert_eq!(stats.barriers_durable, 2);
+        assert_eq!(stats.flushed_bytes, 128, "both snapshots must flush");
+        assert_eq!(stats.dirty_bytes, 0);
+        drop(img);
+        assert_eq!(&std::fs::read(&p).unwrap()[..], &[2u8; 64]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn flush_fault_kills_at_op_boundary_and_surfaces() {
+        let p = tmp("kill");
+        let img = PagedImage::create(&p).unwrap();
+        img.write_all_at(&[5u8; 256], 0).unwrap();
+        img.barrier().unwrap();
+        img.wait_durable().unwrap();
+        // second batch dies before its (single) op crosses the threshold
+        assert!(img.set_flush_fault(256));
+        img.write_all_at(&[6u8; 256], 0).unwrap();
+        img.barrier().unwrap();
+        assert!(img.wait_durable().is_err(), "fault must surface");
+        // later barriers error instead of silently queueing forever
+        img.write_all_at(&[7u8; 8], 0).unwrap();
+        assert!(img.barrier().is_err());
+        let stats = img.flush_stats();
+        assert_eq!(stats.barriers_durable, 1);
+        drop(img);
+        // the torn batch never applied: disk holds the first batch intact
+        assert_eq!(&std::fs::read(&p).unwrap()[..256], &[5u8; 256]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn direct_file_stats_count_writes_and_barriers() {
+        let p = tmp("direct");
+        let f = DirectFile::create(&p).unwrap();
+        f.write_all_at(&[1u8; 100], 0).unwrap();
+        f.barrier().unwrap();
+        f.set_len_min(50).unwrap(); // never shrinks
+        assert_eq!(f.len().unwrap(), 100);
+        let s = f.flush_stats();
+        assert_eq!(s.flushed_bytes, 100);
+        assert_eq!(s.barriers_issued, 1);
+        assert_eq!(s.barriers_durable, 1);
+        assert_eq!(s.dirty_bytes, 0);
+        assert!(!f.set_flush_fault(0), "no flusher to kill");
+        f.wait_durable().unwrap();
+        drop(f);
+        std::fs::remove_file(&p).ok();
+    }
+}

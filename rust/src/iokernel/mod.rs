@@ -53,7 +53,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::exchange::Gen;
 use crate::h5lite::codec::Codec;
-use crate::h5lite::{codec, Attr, Dataset, Dtype, H5File, FORMAT_V2};
+use crate::h5lite::{codec, Attr, Backing, Dataset, Dtype, H5File, FORMAT_V2};
 use crate::lod;
 use crate::pario::{IoReport, LodSink, ParallelIo, SlabWrite};
 use crate::physics::Params;
@@ -196,6 +196,17 @@ pub struct SnapshotOptions {
     /// benches pin other variants to isolate pipeline stages.
     pub cell_codec: Codec,
     pub lod: bool,
+    /// Storage backend the snapshot expects its file on
+    /// ([`crate::h5lite::store`]): `Direct` writes synchronously,
+    /// `Paged` returns from commit once the in-memory image is
+    /// consistent and drains through the background flusher —
+    /// overlapping step N+1's pack/compress with step N's flush. The
+    /// backend is a property of the open file (chosen at
+    /// `create_backed`/`open_backed` time), so the kernel *validates*
+    /// rather than switches: a mismatch fails loudly instead of
+    /// silently running with different durability semantics than the
+    /// caller planned for.
+    pub backing: Backing,
 }
 
 impl Default for SnapshotOptions {
@@ -209,6 +220,7 @@ impl Default for SnapshotOptions {
             compress: true,
             cell_codec: Codec::ShuffleDeltaLz,
             lod: true,
+            backing: Backing::Direct,
         }
     }
 }
@@ -234,10 +246,39 @@ impl SnapshotOptions {
         }
     }
 
+    /// Full checkpoint on the paged backend: commit returns at image
+    /// consistency, the flusher drains in the background. Pair with a
+    /// file from [`H5File::create_backed`]/`open_backed` with
+    /// [`Backing::Paged`].
+    pub fn paged() -> SnapshotOptions {
+        SnapshotOptions {
+            backing: Backing::Paged,
+            ..SnapshotOptions::default()
+        }
+    }
+
     /// Number of datasets this selection writes.
     pub fn n_datasets(&self) -> u64 {
         4 + self.previous as u64 + self.temp as u64 + self.cell_type as u64
     }
+}
+
+/// Shared guard of the snapshot write paths: the storage backend is fixed
+/// when the file is opened, so a write planned for one backend must not
+/// silently run on the other (the durability contract — when commit
+/// returns vs. when bytes are on disk — would differ from what the caller
+/// sized its overlap for).
+fn check_backing(file: &H5File, opts: &SnapshotOptions) -> Result<()> {
+    if file.backing() != opts.backing {
+        bail!(
+            "iokernel: snapshot options expect the {:?} backend but the file \
+             is {:?}-backed — open it with H5File::open_backed/create_backed \
+             using the matching Backing (or adjust SnapshotOptions::backing)",
+            opts.backing,
+            file.backing()
+        );
+    }
+    Ok(())
 }
 
 /// Report of one snapshot write.
@@ -281,6 +322,7 @@ pub fn write_snapshot_with(
 ) -> Result<SnapshotReport> {
     let n = tree.len() as u64;
     let group = ts_group(t);
+    check_backing(file, opts)?;
     // the heavy cell-data datasets go chunked+compressed on v2 files
     let compress = opts.compress && file.version() >= FORMAT_V2;
     let cell_ds = |file: &mut H5File, name: &str| -> Result<Dataset> {
@@ -435,6 +477,7 @@ pub fn rewrite_snapshot_cells(
 ) -> Result<SnapshotReport> {
     let n = tree.len() as u64;
     let group = ts_group(t);
+    check_backing(file, opts)?;
     let ds_cur = file.dataset(&group, "current_cell_data")?;
     if ds_cur.shape[0] != n {
         bail!(
@@ -1278,6 +1321,59 @@ mod tests {
             &grids,
             7.7,
             &SnapshotOptions::default(),
+        )
+        .is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn paged_snapshot_roundtrips_and_backing_mismatch_fails() {
+        let p = tmp("paged");
+        let (tree, part, grids) = setup(1, 4);
+        let mut f = H5File::create_backed(&p, 1, Backing::Paged).unwrap();
+        write_common(&mut f, &params(), &tree, 4).unwrap();
+        // default options plan for the direct backend: refused loudly
+        assert!(
+            write_snapshot(&mut f, &io(), &tree, &part, &grids, 0.25).is_err(),
+            "direct-options write on a paged file must be refused"
+        );
+        let rep = write_snapshot_with(
+            &mut f,
+            &io(),
+            &tree,
+            &part,
+            &grids,
+            0.25,
+            &SnapshotOptions::paged(),
+        )
+        .unwrap();
+        assert_eq!(rep.n_grids, 9);
+        assert!(
+            rep.io.flush_backlog_bytes > 0,
+            "the collective write must land in the image: {:?}",
+            rep.io
+        );
+        // drain, close, reopen through the plain direct path: the flushed
+        // file is an ordinary snapshot file
+        f.wait_durable().unwrap();
+        drop(f);
+        let mut f = H5File::open(&p).unwrap();
+        let snap = read_snapshot(&f, 0.25).unwrap();
+        assert_eq!(snap.tree.len(), tree.len());
+        let j = snap.tree.lookup(tree.node(3).loc).unwrap() as usize;
+        let mut out = vec![0.0f32; DGRID_CELLS];
+        snap.grids[j].cur.extract_interior(var::P, &mut out);
+        assert_eq!(out[0], 3.0);
+        // the guard works in both directions: paged options on the
+        // direct-backed reopen are refused too
+        assert!(rewrite_snapshot_cells(
+            &mut f,
+            &io(),
+            &tree,
+            &part,
+            &grids,
+            0.25,
+            &SnapshotOptions::paged(),
         )
         .is_err());
         std::fs::remove_file(&p).ok();

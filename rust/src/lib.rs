@@ -14,7 +14,10 @@
 //!   pressure solver that drives the AOT kernels through PJRT
 //!   ([`runtime`]), and — the paper's headline contribution — the parallel
 //!   shared-file I/O kernel ([`iokernel`]) with collective buffering
-//!   ([`pario`]) on a simulated HPC substrate ([`cluster`]), plus the sliding
+//!   ([`pario`]) over pluggable storage backends ([`h5lite::store`]: direct
+//!   synchronous files, or a paged in-memory image whose background flusher
+//!   overlaps step N+1's fill with step N's drain)
+//!   on a simulated HPC substrate ([`cluster`]), plus the sliding
 //!   window ([`window`]) — read through epoch-pinned, cache-carrying
 //!   [`window::SnapshotReader`] sessions, fanned out to many concurrent
 //!   viewers by [`window::ReaderPool`] + the bounded-worker

@@ -36,13 +36,24 @@ pub mod names {
     pub const COLLECTOR_SESSIONS: &str = "collector.sessions";
     /// Window/LOD requests served across all collector connections.
     pub const COLLECTOR_QUERIES: &str = "collector.queries";
+    /// Gauge: image pages dirtied since the last durability barrier of the
+    /// snapshot file's paged backend (0 on the direct backend).
+    pub const H5_DIRTY_PAGES: &str = "h5.dirty_pages";
+    /// Gauge: cumulative bytes the background flusher has written to disk.
+    pub const H5_FLUSH_BYTES: &str = "h5.flush_bytes";
+    /// Gauge: estimated seconds of flush backlog — queued-but-unflushed
+    /// bytes divided by the flusher's observed disk bandwidth.
+    pub const H5_FLUSH_BACKLOG_SECONDS: &str = "h5.flush_backlog_seconds";
 }
 
-/// A set of named counters (u64) and timers (accumulated nanoseconds).
+/// A set of named counters (u64), timers (accumulated nanoseconds) and
+/// gauges (last-written f64 samples).
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, AtomicU64>>,
     timers: Mutex<BTreeMap<String, AtomicU64>>,
+    /// f64 samples stored as raw bits so gauges share the atomic plumbing.
+    gauges: Mutex<BTreeMap<String, AtomicU64>>,
 }
 
 impl Metrics {
@@ -94,6 +105,25 @@ impl Metrics {
             .unwrap_or(0.0)
     }
 
+    /// Set a gauge to the latest sample (unlike counters, gauges overwrite:
+    /// they report *current* state — backlog depth, dirty pages — not an
+    /// accumulation).
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        let mut m = self.gauges.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|a| f64::from_bits(a.load(Ordering::Relaxed)))
+            .unwrap_or(0.0)
+    }
+
     /// Snapshot of every counter (name → value), for test assertions and
     /// bench tables that want the whole set rather than one name.
     pub fn counters(&self) -> BTreeMap<String, u64> {
@@ -115,6 +145,12 @@ impl Metrics {
             out.push_str(&format!(
                 "timer   {k} {:.6}s\n",
                 v.load(Ordering::Relaxed) as f64 / 1e9
+            ));
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "gauge   {k} {:.6}\n",
+                f64::from_bits(v.load(Ordering::Relaxed))
             ));
         }
         out
@@ -171,6 +207,22 @@ mod tests {
         m.add_ns("io", 500_000_000);
         m.add_ns("io", 250_000_000);
         assert!((m.seconds("io") - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gauges_overwrite_and_report() {
+        let m = Metrics::new();
+        m.set_gauge(names::H5_DIRTY_PAGES, 3.0);
+        m.set_gauge(names::H5_DIRTY_PAGES, 1.5);
+        assert_eq!(m.gauge(names::H5_DIRTY_PAGES), 1.5, "gauges must overwrite");
+        assert_eq!(m.gauge("absent"), 0.0);
+        m.set_gauge(names::H5_FLUSH_BACKLOG_SECONDS, 0.25);
+        let rep = m.report();
+        assert!(rep.contains("gauge   h5.dirty_pages 1.500000"), "{rep}");
+        assert!(
+            rep.contains("gauge   h5.flush_backlog_seconds 0.250000"),
+            "{rep}"
+        );
     }
 
     #[test]

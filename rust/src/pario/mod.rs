@@ -42,9 +42,9 @@ use anyhow::{bail, Result};
 
 use crate::cluster::{IoEstimate, IoTuning, Machine, WriteWorkload};
 use crate::h5lite::codec::Codec;
-use crate::h5lite::{codec, Dataset, Dtype, H5File, Layout};
+use crate::h5lite::{codec, Backing, Dataset, Dtype, H5File, Layout};
 use crate::lod::PyramidBuilder;
-use crate::metrics::Metrics;
+use crate::metrics::{names, Metrics};
 use crate::util::parallel_for;
 
 /// One rank's contribution to a collective dataset write.
@@ -87,6 +87,16 @@ pub struct IoReport {
     /// overlapped with streaming, like the codec). Zero when the write
     /// carried no [`LodSink`].
     pub lod_seconds: f64,
+    /// Wall-clock seconds the storage backend's background flusher spent
+    /// draining dirty pages to disk *during this call* (busy-time delta;
+    /// 0 on the direct backend, whose writes are synchronous). Overlaps
+    /// `real_seconds` — it runs on the flusher thread.
+    pub flush_seconds: f64,
+    /// Flush backlog at return: bytes this write left dirty in the paged
+    /// image or queued behind a durability barrier, still on their way to
+    /// disk (0 on the direct backend). The overlap the paged backend buys —
+    /// step N+1's fill runs while these bytes drain.
+    pub flush_backlog_bytes: u64,
     /// Modelled cost on the target machine.
     pub modelled: IoEstimate,
 }
@@ -257,6 +267,7 @@ impl ParallelIo {
         let t0 = Instant::now();
         let bytes: u64 = writes.iter().map(|w| w.data.len() as u64).sum();
         let reclaimed0 = file.space_stats().reclaimed_bytes;
+        let flush0 = file.flush_stats();
         let aggs = self.aggregators().max(1);
 
         let (contig, chunked): (Vec<&SlabWrite>, Vec<&SlabWrite>) =
@@ -384,7 +395,14 @@ impl ParallelIo {
         // selector can mix pipelines within one write, and the dominant
         // one is what the aggregator cores actually spent their time in.
         let dominant = tally.dominant().unwrap_or(Codec::ShuffleDeltaLz);
-        let mut modelled = if stored_bytes < bytes {
+        // On the paged backend the file returns as soon as the in-memory
+        // image is consistent and the flusher drains in the background, so
+        // the model prices the overlap (fill/codec vs. flush) instead of a
+        // synchronous drain.
+        let mut modelled = if file.backing() == Backing::Paged {
+            self.machine
+                .estimate_write_paged(&workload, &self.tuning, stored_bytes, dominant)
+        } else if stored_bytes < bytes {
             self.machine
                 .estimate_write_compressed(&workload, &self.tuning, stored_bytes, dominant)
         } else {
@@ -445,6 +463,24 @@ impl ParallelIo {
             self.metrics
                 .add_ns("pario.lod_fold", lod_ns.load(Ordering::Relaxed));
         }
+        // Flusher activity during this call (all-zero on the direct
+        // backend). Backlog-seconds is estimated from the flusher's own
+        // observed bandwidth so far; before it has flushed anything there
+        // is no rate to divide by and the gauge reports 0.
+        let flush1 = file.flush_stats();
+        let flush_seconds = (flush1.busy_seconds - flush0.busy_seconds).max(0.0);
+        let flush_backlog_bytes = flush1.dirty_bytes;
+        self.metrics
+            .set_gauge(names::H5_DIRTY_PAGES, flush1.dirty_pages as f64);
+        self.metrics
+            .set_gauge(names::H5_FLUSH_BYTES, flush1.flushed_bytes as f64);
+        let backlog_seconds = if flush1.flushed_bytes > 0 && flush1.busy_seconds > 0.0 {
+            flush_backlog_bytes as f64 / (flush1.flushed_bytes as f64 / flush1.busy_seconds)
+        } else {
+            0.0
+        };
+        self.metrics
+            .set_gauge(names::H5_FLUSH_BACKLOG_SECONDS, backlog_seconds);
         Ok(IoReport {
             real_seconds,
             real_bandwidth: bytes as f64 / real_seconds,
@@ -455,6 +491,8 @@ impl ParallelIo {
             compress_seconds,
             codec_chunks,
             lod_seconds,
+            flush_seconds,
+            flush_backlog_bytes,
             modelled,
         })
     }
@@ -1127,5 +1165,55 @@ mod tests {
             second.reclaimed_bytes
         );
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn paged_backend_reports_flush_activity_and_direct_reports_none() {
+        let bufs = smooth_bufs(8, 4, 16);
+
+        // direct backend: writes are synchronous, the flush fields are inert
+        let p = tmp("flush_direct");
+        let mut f = H5File::create(&p, 1).unwrap();
+        let ds = f.create_dataset("/g", "d", Dtype::F32, &[32, 16]).unwrap();
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 8);
+        let rep = io
+            .collective_write(&f, &make_writes(&ds, &bufs, 4), 1, 32)
+            .unwrap();
+        assert_eq!(rep.flush_seconds, 0.0);
+        assert_eq!(rep.flush_backlog_bytes, 0);
+        assert!(rep.modelled.t_stream > 0.0, "direct pricing streams inline");
+        std::fs::remove_file(&p).ok();
+
+        // paged backend: the collective write lands in the image, so the
+        // report carries a backlog, the gauges see dirty pages, and the
+        // model prices the overlapped (commit-return + drain) shape
+        let p2 = tmp("flush_paged");
+        let mut f2 = H5File::create_backed(&p2, 1, Backing::Paged).unwrap();
+        let ds2 = f2.create_dataset("/g", "d", Dtype::F32, &[32, 16]).unwrap();
+        let io2 = ParallelIo::new(Machine::local(), IoTuning::default(), 8);
+        let rep2 = io2
+            .collective_write(&f2, &make_writes(&ds2, &bufs, 4), 1, 32)
+            .unwrap();
+        assert!(
+            rep2.flush_backlog_bytes > 0,
+            "un-barriered image bytes must show as backlog: {rep2:?}"
+        );
+        assert!(io2.metrics.gauge(names::H5_DIRTY_PAGES) >= 1.0);
+        assert_eq!(
+            rep2.modelled.t_stream, 0.0,
+            "paged pricing moves streaming off the critical path"
+        );
+        // drain, then confirm the bytes actually landed
+        f2.commit().unwrap();
+        f2.wait_durable().unwrap();
+        assert_eq!(f2.flush_stats().dirty_bytes, 0, "drained after wait_durable");
+        assert_eq!(f2.read_rows(&ds2, 0, 32).unwrap(), bufs.concat());
+        // a follow-up write refreshes the gauges against the now-active
+        // flusher: cumulative flushed bytes and a fresh backlog estimate
+        io2.collective_write(&f2, &make_writes(&ds2, &bufs, 4), 1, 32)
+            .unwrap();
+        assert!(io2.metrics.gauge(names::H5_FLUSH_BYTES) > 0.0);
+        assert!(io2.metrics.gauge(names::H5_FLUSH_BACKLOG_SECONDS) > 0.0);
+        std::fs::remove_file(&p2).ok();
     }
 }
