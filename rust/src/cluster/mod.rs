@@ -105,6 +105,40 @@ pub struct ReadEstimate {
     pub decoded_bytes: u64,
 }
 
+/// What in-transit epoch delivery — live subscribers following a writer's
+/// committed flush batches (`crate::stream`) — looks like to the machine
+/// model, against the file-polling baseline it replaces.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamWorkload {
+    /// Live subscribers following the run.
+    pub subscribers: u64,
+    /// Payload bytes one committed epoch publishes (the batch's dirty
+    /// ranges: stored extents + chunk-index/footer bytes + superblock).
+    pub epoch_bytes: u64,
+    /// Ranks of the writing job (sizes the FS partition for the baseline).
+    pub ranks: u64,
+    /// The baseline's poll period: how often a file-following viewer stats
+    /// and re-opens the snapshot looking for a new epoch (seconds).
+    pub poll_interval: f64,
+}
+
+/// Cost breakdown of one estimated epoch delivery, stream vs. file.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamEstimate {
+    /// Epoch latency via the stream: commit → applied on every subscriber.
+    pub stream_seconds: f64,
+    /// Epoch latency via the file: commit → flushed → polled → read back.
+    pub file_seconds: f64,
+    /// Writer-side tee cost (the commit-return slowdown input).
+    pub t_publish: f64,
+    /// Fan-out through the writer node's injection link.
+    pub t_fanout: f64,
+    /// Baseline's flush-to-disk leg (0 on machines with unmodelled flush).
+    pub t_flush: f64,
+    /// `file_seconds / stream_seconds` — >1 means streaming wins.
+    pub speedup: f64,
+}
+
 /// Tuning knobs of §5.2 — the ablation axes of `benches/ablations.rs`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct IoTuning {
@@ -566,6 +600,43 @@ impl Machine {
         e
     }
 
+    /// Price one epoch of in-transit delivery (`crate::stream`) against the
+    /// file-polling baseline it replaces.
+    ///
+    /// Stream path: the writer tees the batch once (a memory copy on the
+    /// commit path, charged at fold bandwidth — it is a touch-every-byte
+    /// pass like the fold, not an FS transfer) and fans it out to every
+    /// subscriber through its node's injection link; the epoch is applied
+    /// as soon as the last subscriber drains it.
+    ///
+    /// File path: the batch first drains to the file system (the narrower
+    /// of the partition's FS bandwidth and the flusher's disk bandwidth),
+    /// a poller then detects the new epoch after half a poll period on
+    /// average, and every viewer reads the epoch back through the same FS
+    /// partition. On machines with unmodelled flush (`flush_bw = ∞` and no
+    /// modelled FS share) the flush leg is 0 — the poll latency and
+    /// read-back still stand, which is exactly why streaming wins even on
+    /// a machine with infinitely fast disks.
+    pub fn estimate_stream(&self, w: &StreamWorkload) -> StreamEstimate {
+        let bytes = w.epoch_bytes as f64;
+        let subs = w.subscribers.max(1) as f64;
+        let mut e = StreamEstimate::default();
+        e.t_publish = bytes / self.fold_bw;
+        e.t_fanout = subs * bytes / self.torus_node_bw;
+        e.stream_seconds = e.t_publish + e.t_fanout;
+        let drain_bw = self.stream_bw(w.ranks).min(self.flush_bw);
+        e.t_flush = if drain_bw.is_finite() { bytes / drain_bw } else { 0.0 };
+        let read_bw = self.stream_bw(w.ranks);
+        let t_read = if read_bw.is_finite() { subs * bytes / read_bw } else { 0.0 };
+        e.file_seconds = e.t_flush + 0.5 * w.poll_interval.max(0.0) + t_read;
+        e.speedup = if e.stream_seconds > 0.0 {
+            e.file_seconds / e.stream_seconds
+        } else {
+            f64::INFINITY
+        };
+        e
+    }
+
     /// Price one full ghost-layer exchange (for Fig 2a): cross-rank bytes
     /// through per-node injection bandwidth plus message latency, assuming
     /// traffic spreads evenly (the Lebesgue partition keeps it local).
@@ -951,5 +1022,57 @@ mod tests {
         let e = m.estimate_write(&w, &IoTuning::default());
         assert_eq!(e.t_wind, 0.0);
         assert_eq!(e.t_messages, 0.0);
+    }
+
+    #[test]
+    fn stream_delivery_beats_file_polling() {
+        // JuQueen, 4k ranks, a 64 MB epoch, a 1 s poller, 4 viewers: the
+        // file path pays flush + detection + FS read-back, the stream path
+        // only the tee and the fan-out — streaming must win comfortably.
+        let m = Machine::juqueen();
+        let w = StreamWorkload {
+            subscribers: 4,
+            epoch_bytes: 64 << 20,
+            ranks: 4096,
+            poll_interval: 1.0,
+        };
+        let e = m.estimate_stream(&w);
+        assert!(e.t_flush > 0.0, "JuQueen's flush leg is modelled");
+        assert!(e.speedup > 1.0, "speedup={}", e.speedup);
+        assert!((e.stream_seconds - (e.t_publish + e.t_fanout)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stream_fanout_grows_linearly_with_subscribers() {
+        let m = Machine::supermuc();
+        let base = StreamWorkload {
+            subscribers: 1,
+            epoch_bytes: 64 << 20,
+            ranks: 1024,
+            poll_interval: 0.5,
+        };
+        let e1 = m.estimate_stream(&base);
+        let e8 = m.estimate_stream(&StreamWorkload { subscribers: 8, ..base });
+        assert!((e8.t_fanout / e1.t_fanout - 8.0).abs() < 1e-9);
+        // ...and enough subscribers eventually saturate the injection link
+        // past what the file system serves: the break-even is finite
+        let big = m.estimate_stream(&StreamWorkload { subscribers: 4096, ..base });
+        assert!(big.speedup < e1.speedup);
+    }
+
+    #[test]
+    fn stream_estimate_guards_unmodelled_flush() {
+        // the local measurement machine leaves the flusher to be timed, not
+        // modelled — the baseline still pays poll detection latency
+        let m = Machine::local();
+        let w = StreamWorkload {
+            subscribers: 2,
+            epoch_bytes: 1 << 20,
+            ranks: 8,
+            poll_interval: 0.2,
+        };
+        let e = m.estimate_stream(&w);
+        assert!(e.file_seconds >= 0.1, "poll latency survives the guard");
+        assert!(e.stream_seconds > 0.0 && e.stream_seconds.is_finite());
     }
 }

@@ -164,6 +164,17 @@
 //!   backlog. After the handle drops, both backends leave byte-identical
 //!   files.
 //!
+//! On format v2.1 under [`ReusePolicy::AfterCommit`], contiguous dataset
+//! rewrites are *epoch-versioned*: the first write after a commit goes to a
+//! freshly allocated extent (untouched bytes copied over) and the committed
+//! extent retires through the pin-aware queue, mirroring what chunk extents
+//! and the footer always did. Committed bytes are therefore never
+//! overwritten in place on any layout, which closes the one torn-flush
+//! caveat the paged backend had (a crash mid-flush used to be able to tear
+//! a rewritten contiguous extent of the *recovered* epoch) and makes every
+//! flush batch self-contained for the in-transit streaming tee
+//! ([`H5File::set_batch_sink`] / [`crate::stream`]).
+//!
 //! `verify()`, epoch pins, the shared chunk cache and SWMR semantics are
 //! backend-independent: they act on the logical byte store, which both
 //! backends present identically.
@@ -180,7 +191,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use codec::{Codec, Dec, Enc};
 use store::{DirectFile, PagedImage};
-pub use store::{Backing, FlushStats, Store};
+pub use store::{Backing, BatchSink, FlushStats, Store};
 
 const MAGIC: &[u8; 8] = b"MPH5LITE";
 /// Original contiguous-only format.
@@ -712,8 +723,61 @@ pub struct Group {
     pub datasets: BTreeMap<String, Dataset>,
 }
 
+/// Per-dataset state of the epoch-versioned contiguous write-aside (see
+/// [`H5File::write_rows`]). Keyed in [`H5File`]'s `contig` map by the
+/// dataset's *tree* offset — the offset recorded in the in-memory [`Layout`],
+/// which never changes after creation and so stays a stable identity across
+/// relocations (every consumer, pario included, keys datasets by it).
+#[derive(Clone, Copy, Debug)]
+struct ContigState {
+    /// Where the payload currently lives; the footer encoder resolves the
+    /// tree offset to this at commit time.
+    cur: u64,
+    /// Extent length in bytes. Kept here rather than derived from the
+    /// [`Dataset`]: the collective writer passes synthetic handles whose
+    /// shape is a row-addressing fiction, so relocation must size from the
+    /// reservation, never from `Dataset::n_bytes` of the handle in hand.
+    len: u64,
+    /// Epoch the current extent was allocated in. `!=` the live epoch means
+    /// the extent is referenced by the durable footer and the next write
+    /// must go aside; `u64::MAX` (set on open) forces that on first write.
+    epoch: u64,
+}
+
+/// Resolve a contiguous dataset's tree offset to the current payload extent.
+fn resolve_contig(map: &HashMap<u64, ContigState>, tree_off: u64) -> u64 {
+    map.get(&tree_off).map_or(tree_off, |s| s.cur)
+}
+
+/// Seed the write-aside map from a decoded tree: every extent the footer
+/// references is committed, so `epoch: u64::MAX` forces the first
+/// post-open write to relocate instead of tearing it.
+fn seed_contig(g: &Group, map: &mut HashMap<u64, ContigState>) {
+    for ds in g.datasets.values() {
+        if let Layout::Contiguous { offset } = ds.layout {
+            map.insert(
+                offset,
+                ContigState {
+                    cur: offset,
+                    len: ds.n_bytes(),
+                    epoch: u64::MAX,
+                },
+            );
+        }
+    }
+    for sub in g.groups.values() {
+        seed_contig(sub, map);
+    }
+}
+
 impl Group {
-    fn encode(&self, e: &mut Enc, version: u32, reg: &ChunkRegistry) -> Result<()> {
+    fn encode(
+        &self,
+        e: &mut Enc,
+        version: u32,
+        reg: &ChunkRegistry,
+        contig: &HashMap<u64, ContigState>,
+    ) -> Result<()> {
         e.u32(self.attrs.len() as u32);
         for (name, a) in &self.attrs {
             e.str(name);
@@ -742,13 +806,15 @@ impl Group {
             e.u8(d.dtype.code());
             e.u64s(&d.shape);
             match (&d.layout, version) {
-                (Layout::Contiguous { offset }, FORMAT_V1) => e.u64(*offset),
+                (Layout::Contiguous { offset }, FORMAT_V1) => {
+                    e.u64(resolve_contig(contig, *offset))
+                }
                 (Layout::Chunked { .. }, FORMAT_V1) => {
                     bail!("h5lite: dataset '{name}' is chunked; format v1 cannot store it")
                 }
                 (Layout::Contiguous { offset }, _) => {
                     e.u8(0);
-                    e.u64(*offset);
+                    e.u64(resolve_contig(contig, *offset));
                 }
                 (
                     Layout::Chunked {
@@ -786,7 +852,7 @@ impl Group {
         e.u32(self.groups.len() as u32);
         for (name, g) in &self.groups {
             e.str(name);
-            g.encode(e, version, reg)?;
+            g.encode(e, version, reg, contig)?;
         }
         Ok(())
     }
@@ -1361,6 +1427,10 @@ pub struct H5File {
     /// writers ([`H5File::write_chunk_encoded`], used by the aggregators)
     /// bypass this and stay fully parallel.
     rmw: Mutex<()>,
+    /// Epoch-versioned contiguous write-aside state, keyed by tree offset
+    /// (see [`ContigState`]). Always consulted for resolution; relocation
+    /// itself only happens on v2.1 under [`ReusePolicy::AfterCommit`].
+    contig: Mutex<HashMap<u64, ContigState>>,
 }
 
 impl H5File {
@@ -1434,6 +1504,7 @@ impl H5File {
             cache_coalesced: AtomicU64::new(0),
             shared_cache: None,
             rmw: Mutex::new(()),
+            contig: Mutex::new(HashMap::new()),
         };
         f.commit()?;
         Ok(f)
@@ -1499,6 +1570,8 @@ impl H5File {
             .len()
             .context("h5lite: stat")?
             .max(footer_off.saturating_add(footer_len));
+        let mut contig = HashMap::new();
+        seed_contig(&root, &mut contig);
         Ok(H5File {
             file,
             path: path.as_ref().to_path_buf(),
@@ -1524,6 +1597,7 @@ impl H5File {
             cache_coalesced: AtomicU64::new(0),
             shared_cache: None,
             rmw: Mutex::new(()),
+            contig: Mutex::new(contig),
         })
     }
 
@@ -1578,6 +1652,15 @@ impl H5File {
         self.file.set_flush_fault(after_bytes)
     }
 
+    /// Attach a streaming tee observing every flush batch of the paged
+    /// backend ([`BatchSink`]; the hook behind
+    /// [`crate::stream::EpochPublisher`]). `None` detaches. Returns `false`
+    /// on backends with no batch queue — direct I/O is synchronous, there
+    /// is no batch stream to observe.
+    pub fn set_batch_sink(&self, sink: Option<Arc<dyn BatchSink>>) -> bool {
+        self.file.set_batch_sink(sink)
+    }
+
     /// Encode the v2.1 free-list record: everything allocatable from the
     /// new footer's point of view — the free list, the extents retired this
     /// epoch (pending), the generations parked for epoch pins (pins are
@@ -1622,7 +1705,8 @@ impl H5File {
         let mut e = Enc::new();
         {
             let reg = self.chunks.lock().unwrap();
-            self.root.encode(&mut e, self.version, &reg)?;
+            let contig = self.contig.lock().unwrap();
+            self.root.encode(&mut e, self.version, &reg, &contig)?;
         }
         // Footer placement. v2.1 tries the free list first via a two-pass
         // record-sizing dance: encode the free record once to learn the
@@ -1825,6 +1909,16 @@ impl H5File {
             layout: Layout::Contiguous { offset: 0 },
         };
         let offset = self.alloc_append(ds.n_bytes(), self.alignment)?;
+        // a fresh reservation is not referenced by any footer yet: writes
+        // this epoch stay in place, the first write after a commit goes aside
+        self.contig.lock().unwrap().insert(
+            offset,
+            ContigState {
+                cur: offset,
+                len: ds.n_bytes(),
+                epoch: self.space.epoch.load(Ordering::Relaxed),
+            },
+        );
         let ds = Dataset {
             layout: Layout::Contiguous { offset },
             ..ds
@@ -1913,12 +2007,81 @@ impl H5File {
             );
         }
         match ds.layout {
-            Layout::Contiguous { offset } => self
-                .file
-                .write_all_at(data, offset + row_start * rb)
-                .context("h5lite: slab write"),
+            Layout::Contiguous { offset } => {
+                self.write_rows_contig(offset, row_start * rb, data)
+            }
             Layout::Chunked { .. } => self.write_rows_chunked(ds, row_start, data),
         }
+    }
+
+    /// Contiguous hyperslab write with the epoch-versioned write-aside
+    /// (v2.1 + [`ReusePolicy::AfterCommit`]): the first write into an
+    /// extent the durable footer references relocates the dataset — a fresh
+    /// extent is allocated, the bytes around the incoming slab are copied
+    /// over from the committed extent, and the old extent retires through
+    /// the pin-aware queue. Committed contiguous data is therefore never
+    /// overwritten in place, so a torn flush (or a teed stream batch)
+    /// always carries epoch `j`'s contiguous payloads whole — the same
+    /// never-overwrite rule chunk extents and the footer already follow.
+    /// Later writes in the same epoch land in place in the new extent.
+    /// Other formats/policies keep the historical in-place behaviour.
+    fn write_rows_contig(&self, tree_off: u64, byte_start: u64, data: &[u8]) -> Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        let mut contig = self.contig.lock().unwrap();
+        let versioned =
+            self.version >= FORMAT_V21 && self.reuse_policy == ReusePolicy::AfterCommit;
+        let cur = match contig.get_mut(&tree_off) {
+            Some(entry) => {
+                let epoch = self.space.epoch.load(Ordering::Relaxed);
+                if versioned && entry.epoch != epoch {
+                    // Write-aside. The whole new extent gets defined right
+                    // here (head + payload + tail), so `alloc` may hand
+                    // back a recycled free-list extent without leaking
+                    // stale bytes — the zero-fill argument that restricts
+                    // *reservations* to alloc_append does not apply.
+                    let len = entry.len;
+                    let old = entry.cur;
+                    let fresh = self.alloc(len, self.alignment)?;
+                    let wend = (byte_start + data.len() as u64).min(len);
+                    self.copy_extent(old, fresh, 0, byte_start)?;
+                    self.copy_extent(old, fresh, wend, len.saturating_sub(wend))?;
+                    self.retire_extent(old, len);
+                    entry.cur = fresh;
+                    entry.epoch = epoch;
+                }
+                entry.cur
+            }
+            // no reservation on record (foreign handle): historical in-place
+            None => tree_off,
+        };
+        drop(contig);
+        self.file
+            .write_all_at(data, cur + byte_start)
+            .context("h5lite: slab write")
+    }
+
+    /// Copy `[src + at, src + at + len)` to the same range of `dst` in
+    /// bounded blocks (relocation helper; both extents are fully inside the
+    /// store).
+    fn copy_extent(&self, src: u64, dst: u64, at: u64, len: u64) -> Result<()> {
+        if len == 0 {
+            return Ok(());
+        }
+        let mut buf = vec![0u8; REPACK_BLOCK_BYTES.min(len) as usize];
+        let mut done = 0u64;
+        while done < len {
+            let take = (len - done).min(buf.len() as u64) as usize;
+            self.file
+                .read_exact_at(&mut buf[..take], src + at + done)
+                .context("h5lite: relocate read")?;
+            self.file
+                .write_all_at(&buf[..take], dst + at + done)
+                .context("h5lite: relocate write")?;
+            done += take as u64;
+        }
+        Ok(())
     }
 
     fn write_rows_chunked(&self, ds: &Dataset, row_start: u64, data: &[u8]) -> Result<()> {
@@ -2250,9 +2413,10 @@ impl H5File {
         let rb = ds.row_bytes();
         match ds.layout {
             Layout::Contiguous { offset } => {
+                let cur = resolve_contig(&self.contig.lock().unwrap(), offset);
                 let mut buf = vec![0u8; (rows * rb) as usize];
                 self.file
-                    .read_exact_at(&mut buf, offset + row_start * rb)
+                    .read_exact_at(&mut buf, cur + row_start * rb)
                     .context("h5lite: slab read")?;
                 self.read_bytes.fetch_add(rows * rb, Ordering::Relaxed);
                 Ok(buf)
@@ -2430,8 +2594,9 @@ impl H5File {
                 report.n_datasets += 1;
                 match ds.layout {
                     Layout::Contiguous { offset } => {
+                        let cur = resolve_contig(&self.contig.lock().unwrap(), offset);
                         report.live_bytes += ds.n_bytes();
-                        extents.push((offset, ds.n_bytes(), format!("{path}/{name}")));
+                        extents.push((cur, ds.n_bytes(), format!("{path}/{name}")));
                     }
                     Layout::Chunked { .. } => {
                         for chunk_no in 0..ds.n_chunks() {
@@ -4146,6 +4311,85 @@ mod tests {
         let r = f.commit().and_then(|_| f.wait_durable());
         assert!(r.is_err(), "flusher death went unnoticed");
         std::fs::remove_file(&pp).ok();
+    }
+
+    #[test]
+    fn contiguous_write_aside_survives_torn_flush_bit_exact() {
+        // PR-7 caveat closed: a contiguous rewrite next epoch goes to a
+        // fresh extent, so a flush torn mid-rewrite can no longer damage
+        // the recovered epoch's payload
+        let p = tmp("contig_aside");
+        let epoch1 = smooth_rows(16, 8);
+        let epoch2: Vec<f32> = epoch1.iter().map(|x| x + 10.0).collect();
+        {
+            let mut f = H5File::create_backed(&p, 1, Backing::Paged).unwrap();
+            let ds = f.create_dataset("/g", "d", Dtype::F32, &[16, 8]).unwrap();
+            f.write_all_f32(&ds, &epoch1).unwrap();
+            f.commit().unwrap();
+            f.wait_durable().unwrap();
+            // kill the flusher a few bytes into the next epoch's batches:
+            // the rewrite tears mid-extent on disk
+            f.inject_flush_fault(f.flush_stats().flushed_bytes + 48);
+            f.write_all_f32(&ds, &epoch2).unwrap();
+            let _ = f.commit(); // may already surface the dead flusher
+            // the image itself is consistent: reads see the new epoch
+            assert_eq!(
+                codec::bytes_to_f32s(&f.read_rows(&ds, 0, 16).unwrap()),
+                epoch2
+            );
+        }
+        let f = H5File::open(&p).unwrap();
+        let ds = f.dataset("/g", "d").unwrap();
+        assert_eq!(
+            codec::bytes_to_f32s(&f.read_rows(&ds, 0, 16).unwrap()),
+            epoch1,
+            "torn flush must recover epoch 1's contiguous payload bit-exact"
+        );
+        assert!(f.verify().unwrap().ok());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn contiguous_write_aside_merges_and_keeps_pinned_readers_stable() {
+        let p = tmp("contig_pin");
+        let mut f = H5File::create(&p, 4096).unwrap();
+        let ds = f.create_dataset("/g", "d", Dtype::U64, &[10, 3]).unwrap();
+        let v1: Vec<u64> = (0..30).collect();
+        f.write_rows(&ds, 0, &codec::u64s_to_bytes(&v1)).unwrap();
+        f.commit().unwrap();
+        // a reader session pins the epoch through its own handle
+        let pin = f.pin_epoch();
+        let r = H5File::open(&p).unwrap();
+        let rds = r.dataset("/g", "d").unwrap();
+        // rewriting rows [5,10) next epoch relocates the extent, carrying
+        // the untouched head rows over
+        let patch: Vec<u64> = (100..115).collect();
+        f.write_rows(&ds, 5, &codec::u64s_to_bytes(&patch)).unwrap();
+        let merged = codec::bytes_to_u64s(&f.read_rows(&ds, 0, 10).unwrap());
+        assert_eq!(&merged[..15], &v1[..15]);
+        assert_eq!(&merged[15..], &patch[..]);
+        // the tree offset is the dataset's stable identity across the move
+        assert_eq!(
+            ds.contiguous_offset(),
+            f.dataset("/g", "d").unwrap().contiguous_offset()
+        );
+        f.commit().unwrap();
+        let rep = f.verify().unwrap();
+        assert!(rep.ok(), "{:?}", rep.errors);
+        // the pinned reader keeps reading epoch-1 bytes: the superseded
+        // extent parked instead of becoming allocatable
+        assert_eq!(codec::bytes_to_u64s(&r.read_rows(&rds, 0, 10).unwrap()), v1);
+        assert!(f.space_stats().pinned_bytes > 0, "{:?}", f.space_stats());
+        drop(pin);
+        f.write_rows(&ds, 0, &codec::u64s_to_bytes(&v1)).unwrap();
+        f.commit().unwrap();
+        assert!(f.verify().unwrap().ok());
+        // a fresh open resolves the footer's (relocated) offset normally
+        let f2 = H5File::open(&p).unwrap();
+        let ds2 = f2.dataset("/g", "d").unwrap();
+        assert_eq!(codec::bytes_to_u64s(&f2.read_rows(&ds2, 0, 10).unwrap()), v1);
+        assert_eq!(ds2.contiguous_offset().unwrap() % 4096, 0);
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

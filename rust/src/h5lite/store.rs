@@ -108,6 +108,34 @@ pub trait Store: Send + Sync {
     fn set_flush_fault(&self, _after_flushed_bytes: u64) -> bool {
         false
     }
+    /// Attach (or with `None`, detach) a tee observing every barrier batch —
+    /// the in-transit streaming hook (see [`crate::stream`]). Returns false
+    /// when the backend has no batch queue to tee ([`DirectFile`] writes
+    /// synchronously; there is no batch stream to observe).
+    fn set_batch_sink(&self, _sink: Option<Arc<dyn BatchSink>>) -> bool {
+        false
+    }
+}
+
+/// Observer of the paged backend's ordered batch stream. [`Store::barrier`]
+/// calls [`BatchSink::on_batch`] for every snapshotted batch, strictly in
+/// sequence order and *before* the barrier returns, so a sink sees exactly
+/// the batches the flusher will apply, in the order it will apply them. The
+/// flusher calls [`BatchSink::on_durable`] after a batch is fully applied
+/// and fsynced. Sequence numbers start at 1 and are dense: batch `seq`
+/// becomes durable only after batches `1..seq`.
+///
+/// Callbacks run on the writer thread (`on_batch`, inside the barrier) and
+/// the flusher thread (`on_durable`) respectively — implementations must be
+/// quick and must never call back into the store.
+pub trait BatchSink: Send + Sync {
+    /// A barrier snapshotted this batch: logical file length and the dirty
+    /// ranges with their contents. The contents are `Arc`-shared with the
+    /// flush queue so a sink retains them by cloning the handles — teeing a
+    /// batch costs O(ranges), never a payload copy on the writer thread.
+    fn on_batch(&self, seq: u64, set_len: u64, ranges: &[(u64, Arc<Vec<u8>>)]);
+    /// The flusher durably applied batch `seq` (grow + writes + fsync done).
+    fn on_durable(&self, seq: u64);
 }
 
 // ---------------------------------------------------------------------------
@@ -247,8 +275,14 @@ struct ImageState {
 /// would leak later-epoch data into an earlier durability point and break
 /// the footer-before-superblock ordering.
 struct Batch {
+    /// Barrier sequence number (1-based, dense): the `seq` reported to any
+    /// attached [`BatchSink`] for this batch.
+    seq: u64,
     set_len: u64,
-    ranges: Vec<(u64, Vec<u8>)>,
+    /// Snapshotted contents, `Arc`-shared with any attached [`BatchSink`]
+    /// (the tee keeps the handles; the allocation outlives the flush if a
+    /// subscriber queue still holds it).
+    ranges: Vec<(u64, Arc<Vec<u8>>)>,
     bytes: u64,
 }
 
@@ -269,6 +303,14 @@ struct FlushShared {
     queued_bytes: AtomicU64,
     /// Fault injection threshold (`u64::MAX` = disabled).
     fault_after: AtomicU64,
+    /// Streaming tee, if attached (see [`BatchSink`]).
+    sink: Mutex<Option<Arc<dyn BatchSink>>>,
+}
+
+impl FlushShared {
+    fn sink(&self) -> Option<Arc<dyn BatchSink>> {
+        self.sink.lock().unwrap().clone()
+    }
 }
 
 /// Paged in-memory image backend: collective writes land in memory,
@@ -315,6 +357,7 @@ impl PagedImage {
             barriers_durable: AtomicU64::new(0),
             queued_bytes: AtomicU64::new(0),
             fault_after: AtomicU64::new(u64::MAX),
+            sink: Mutex::new(None),
         });
         let flush_file = file.try_clone()?;
         let flush_shared = Arc::clone(&shared);
@@ -430,6 +473,9 @@ fn flusher_loop(file: File, shared: Arc<FlushShared>) {
         match res {
             Ok(()) => {
                 shared.barriers_durable.fetch_add(1, Ordering::Relaxed);
+                if let Some(sink) = shared.sink() {
+                    sink.on_durable(batch.seq);
+                }
                 shared.cv.notify_all();
             }
             Err(e) => {
@@ -508,27 +554,34 @@ impl Store for PagedImage {
         }
         let batch = {
             let mut st = self.state.lock().unwrap();
-            let ranges: Vec<(u64, Vec<u8>)> = st
+            let ranges: Vec<(u64, Arc<Vec<u8>>)> = st
                 .dirty
                 .ranges
                 .iter()
                 .map(|(&o, &l)| {
                     let mut buf = vec![0u8; l as usize];
                     copy_from_pages(&st.pages, o, &mut buf);
-                    (o, buf)
+                    (o, Arc::new(buf))
                 })
                 .collect();
             let bytes = st.dirty.bytes;
             st.dirty = RangeSet::default();
             Batch {
+                seq: 0, // assigned under the queue lock below
                 set_len: st.len,
                 ranges,
                 bytes,
             }
         };
+        let mut batch = batch;
         let mut q = self.shared.queue.lock().unwrap();
-        self.shared.barriers_issued.fetch_add(1, Ordering::Relaxed);
+        batch.seq = self.shared.barriers_issued.fetch_add(1, Ordering::Relaxed) + 1;
         self.shared.queued_bytes.fetch_add(batch.bytes, Ordering::Relaxed);
+        // tee under the queue lock: sinks see batches strictly in seq order,
+        // and always before the flusher could report the batch durable
+        if let Some(sink) = self.shared.sink() {
+            sink.on_batch(batch.seq, batch.set_len, &batch.ranges);
+        }
         q.batches.push_back(batch);
         self.shared.cv.notify_all();
         Ok(())
@@ -578,6 +631,11 @@ impl Store for PagedImage {
         self.shared
             .fault_after
             .store(after_flushed_bytes, Ordering::Relaxed);
+        true
+    }
+
+    fn set_batch_sink(&self, sink: Option<Arc<dyn BatchSink>>) -> bool {
+        *self.shared.sink.lock().unwrap() = sink;
         true
     }
 }
@@ -727,6 +785,58 @@ mod tests {
     }
 
     #[test]
+    fn batch_sink_sees_ordered_batches_then_durability() {
+        struct Rec {
+            events: Mutex<Vec<(bool, u64)>>, // (is_durable, seq)
+            bytes: AtomicU64,
+        }
+        impl BatchSink for Rec {
+            fn on_batch(&self, seq: u64, set_len: u64, ranges: &[(u64, Arc<Vec<u8>>)]) {
+                assert!(set_len > 0);
+                for (_, d) in ranges {
+                    self.bytes.fetch_add(d.len() as u64, Ordering::Relaxed);
+                }
+                self.events.lock().unwrap().push((false, seq));
+            }
+            fn on_durable(&self, seq: u64) {
+                self.events.lock().unwrap().push((true, seq));
+            }
+        }
+        let p = tmp("sink");
+        let img = PagedImage::create(&p).unwrap();
+        let rec = Arc::new(Rec {
+            events: Mutex::new(Vec::new()),
+            bytes: AtomicU64::new(0),
+        });
+        assert!(img.set_batch_sink(Some(rec.clone())));
+        img.write_all_at(&[1u8; 64], 0).unwrap();
+        img.barrier().unwrap();
+        img.write_all_at(&[2u8; 32], 64).unwrap();
+        img.barrier().unwrap();
+        img.wait_durable().unwrap();
+        let ev = rec.events.lock().unwrap().clone();
+        // publish of seq N always precedes its durability, seqs are dense
+        let publishes: Vec<u64> = ev.iter().filter(|(d, _)| !d).map(|&(_, s)| s).collect();
+        let durables: Vec<u64> = ev.iter().filter(|(d, _)| *d).map(|&(_, s)| s).collect();
+        assert_eq!(publishes, vec![1, 2]);
+        assert_eq!(durables, vec![1, 2]);
+        for seq in 1..=2u64 {
+            let pub_at = ev.iter().position(|&e| e == (false, seq)).unwrap();
+            let dur_at = ev.iter().position(|&e| e == (true, seq)).unwrap();
+            assert!(pub_at < dur_at, "publish must precede durability");
+        }
+        assert_eq!(rec.bytes.load(Ordering::Relaxed), 96);
+        // detaching stops the tee
+        assert!(img.set_batch_sink(None));
+        img.write_all_at(&[3u8; 8], 0).unwrap();
+        img.barrier().unwrap();
+        img.wait_durable().unwrap();
+        assert_eq!(rec.events.lock().unwrap().len(), ev.len());
+        drop(img);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
     fn direct_file_stats_count_writes_and_barriers() {
         let p = tmp("direct");
         let f = DirectFile::create(&p).unwrap();
@@ -740,6 +850,7 @@ mod tests {
         assert_eq!(s.barriers_durable, 1);
         assert_eq!(s.dirty_bytes, 0);
         assert!(!f.set_flush_fault(0), "no flusher to kill");
+        assert!(!f.set_batch_sink(None), "no batch queue to tee");
         f.wait_durable().unwrap();
         drop(f);
         std::fs::remove_file(&p).ok();

@@ -23,8 +23,11 @@
 //!   viewers by [`window::ReaderPool`] + the bounded-worker
 //!   [`window::Collector`] over a process-wide deduplicating
 //!   [`h5lite::SharedChunkCache`] — with its budget-aware
-//!   multi-resolution pyramid ([`lod`]) and time-reversible steering
-//!   ([`steering`]).
+//!   multi-resolution pyramid ([`lod`]), time-reversible steering
+//!   ([`steering`]), and in-transit epoch streaming ([`stream`]): the
+//!   paged backend's committed flush batches teed live over TCP, so
+//!   remote viewers follow a running simulation byte-identically without
+//!   touching the shared file system.
 //!
 //! See `DESIGN.md` for the complete system inventory and the experiment
 //! index mapping every figure/table of the paper to a bench/example.
@@ -44,6 +47,7 @@ pub mod physics;
 pub mod runtime;
 pub mod solver;
 pub mod steering;
+pub mod stream;
 pub mod tree;
 pub mod vpic;
 pub mod window;

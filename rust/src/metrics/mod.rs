@@ -44,6 +44,25 @@ pub mod names {
     /// Gauge: estimated seconds of flush backlog — queued-but-unflushed
     /// bytes divided by the flusher's observed disk bandwidth.
     pub const H5_FLUSH_BACKLOG_SECONDS: &str = "h5.flush_backlog_seconds";
+    /// Times the `window::Collector` accept loop found its dispatch
+    /// backlog full and paused admitting sessions (counted once per
+    /// saturation episode, with a log line) — the worker pool is saturated
+    /// and would-be persistent sessions are waiting in the kernel's accept
+    /// backlog (PR-6 caveat made visible; pair with `collector.sessions`
+    /// for the admission rate).
+    pub const COLLECTOR_SESSIONS_REJECTED: &str = "collector.sessions_rejected";
+    /// Gauge: live `stream::EpochPublisher` subscribers.
+    pub const STREAM_SUBSCRIBERS: &str = "stream.subscribers";
+    /// Gauge: slowest subscriber's backlog in *epochs* (queued superblock
+    /// flips it has not yet been sent).
+    pub const STREAM_LAG_EPOCHS: &str = "stream.lag_epochs";
+    /// Gauge: slowest subscriber's backlog in queued payload bytes.
+    pub const STREAM_LAG_BYTES: &str = "stream.lag_bytes";
+    /// Distinct epoch deliveries merged away (coalesce policy) or
+    /// discarded by disconnecting a slow subscriber — each one is an epoch
+    /// a consumer missed seeing individually. A commit's footer batch
+    /// coalescing into its own flip batch is not counted.
+    pub const STREAM_DROPPED_BATCHES: &str = "stream.dropped_batches";
 }
 
 /// A set of named counters (u64), timers (accumulated nanoseconds) and

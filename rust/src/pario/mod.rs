@@ -35,7 +35,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -97,6 +97,15 @@ pub struct IoReport {
     /// disk (0 on the direct backend). The overlap the paged backend buys —
     /// step N+1's fill runs while these bytes drain.
     pub flush_backlog_bytes: u64,
+    /// Wall-clock seconds the attached [`crate::stream::EpochPublisher`]
+    /// spent teeing batches *during this call* — publish time rides the
+    /// writer's commit path, so this is the streaming tax on commit-return
+    /// (0 with no publisher attached).
+    pub publish_seconds: f64,
+    /// Slowest live subscriber's queued payload bytes at return — the
+    /// in-transit counterpart of `flush_backlog_bytes` (0 with no
+    /// publisher or no subscribers).
+    pub publish_backlog_bytes: u64,
     /// Modelled cost on the target machine.
     pub modelled: IoEstimate,
 }
@@ -196,6 +205,11 @@ pub struct ParallelIo {
     pub metrics: Metrics,
     /// Global lock used when `tuning.file_locking` (GPFS token stand-in).
     lock: Mutex<()>,
+    /// In-transit epoch publisher attached to the snapshot file, if any —
+    /// the driver only *reads* its stats (publish time, backlog) into each
+    /// [`IoReport`]; attaching it to the file is the caller's move
+    /// ([`crate::stream::EpochPublisher::attach`]).
+    publisher: Mutex<Option<Arc<crate::stream::EpochPublisher>>>,
 }
 
 /// An op the fill phase produced: contiguous rows of one dataset.
@@ -226,7 +240,16 @@ impl ParallelIo {
             n_ranks,
             metrics: Metrics::new(),
             lock: Mutex::new(()),
+            publisher: Mutex::new(None),
         }
+    }
+
+    /// Point the driver at the file's in-transit publisher so every
+    /// [`IoReport`] carries publish-time and subscriber-backlog accounting
+    /// (pass `None` to detach). The publisher itself must be attached to
+    /// the snapshot file separately.
+    pub fn set_publisher(&self, publisher: Option<Arc<crate::stream::EpochPublisher>>) {
+        *self.publisher.lock().unwrap() = publisher;
     }
 
     /// Number of aggregators this driver will use.
@@ -268,6 +291,8 @@ impl ParallelIo {
         let bytes: u64 = writes.iter().map(|w| w.data.len() as u64).sum();
         let reclaimed0 = file.space_stats().reclaimed_bytes;
         let flush0 = file.flush_stats();
+        let publisher = self.publisher.lock().unwrap().clone();
+        let publish0 = publisher.as_ref().map(|p| p.stats().publish_seconds);
         let aggs = self.aggregators().max(1);
 
         let (contig, chunked): (Vec<&SlabWrite>, Vec<&SlabWrite>) =
@@ -481,6 +506,13 @@ impl ParallelIo {
         };
         self.metrics
             .set_gauge(names::H5_FLUSH_BACKLOG_SECONDS, backlog_seconds);
+        let (publish_seconds, publish_backlog_bytes) = match (&publisher, publish0) {
+            (Some(p), Some(s0)) => {
+                let stats = p.stats();
+                ((stats.publish_seconds - s0).max(0.0), stats.backlog_bytes)
+            }
+            _ => (0.0, 0),
+        };
         Ok(IoReport {
             real_seconds,
             real_bandwidth: bytes as f64 / real_seconds,
@@ -493,6 +525,8 @@ impl ParallelIo {
             lod_seconds,
             flush_seconds,
             flush_backlog_bytes,
+            publish_seconds,
+            publish_backlog_bytes,
             modelled,
         })
     }
@@ -1215,5 +1249,52 @@ mod tests {
         assert!(io2.metrics.gauge(names::H5_FLUSH_BYTES) > 0.0);
         assert!(io2.metrics.gauge(names::H5_FLUSH_BACKLOG_SECONDS) > 0.0);
         std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn publish_accounting_rides_the_report() {
+        let bufs = smooth_bufs(8, 4, 16);
+        let p = tmp("publish_report");
+        let mut f = H5File::create_backed(&p, 1, Backing::Paged).unwrap();
+        let ds = f.create_dataset("/g", "d", Dtype::F32, &[32, 16]).unwrap();
+        let io = ParallelIo::new(Machine::local(), IoTuning::default(), 8);
+
+        // no publisher attached: the publish fields are inert
+        let rep = io
+            .collective_write(&f, &make_writes(&ds, &bufs, 4), 1, 32)
+            .unwrap();
+        assert_eq!(rep.publish_seconds, 0.0);
+        assert_eq!(rep.publish_backlog_bytes, 0);
+
+        // attach one and commit inside the measured window: the tee's time
+        // on the commit path must surface in the report
+        let publisher = crate::stream::EpochPublisher::bind(
+            "127.0.0.1:0",
+            crate::stream::PublisherOptions::default(),
+        )
+        .unwrap();
+        publisher.attach(&f).unwrap();
+        io.set_publisher(Some(Arc::clone(&publisher)));
+        io.collective_write(&f, &make_writes(&ds, &bufs, 4), 1, 32)
+            .unwrap();
+        f.commit().unwrap();
+        let rep2 = io
+            .collective_write(&f, &make_writes(&ds, &bufs, 4), 1, 32)
+            .unwrap();
+        let _ = rep2;
+        f.commit().unwrap();
+        let stats = publisher.stats();
+        assert!(
+            stats.publish_seconds > 0.0 && stats.published_bytes > 0,
+            "commits must run the tee: {stats:?}"
+        );
+        io.set_publisher(None);
+        let rep3 = io
+            .collective_write(&f, &make_writes(&ds, &bufs, 4), 1, 32)
+            .unwrap();
+        assert_eq!(rep3.publish_seconds, 0.0, "detached driver stops reporting");
+        drop(f);
+        publisher.shutdown();
+        std::fs::remove_file(&p).ok();
     }
 }

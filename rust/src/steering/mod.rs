@@ -10,6 +10,7 @@
 //! intact (Fig 5's branching simulation paths).
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -216,6 +217,9 @@ pub struct TrsSession {
     /// epoch, so cores opened before a [`TrsSession::rollback`] or a later
     /// commit simply age out once their sessions drop.
     readers: crate::window::ReaderPool,
+    /// In-transit publisher teeing this session's commits, if
+    /// [`TrsSession::publish`] was called.
+    publisher: Option<Arc<crate::stream::EpochPublisher>>,
 }
 
 impl TrsSession {
@@ -225,14 +229,58 @@ impl TrsSession {
         sim: &Simulation,
         alignment: u64,
     ) -> Result<TrsSession> {
-        let mut file = H5File::create(path, alignment)?;
+        TrsSession::create_backed(path, sim, alignment, crate::h5lite::Backing::Direct)
+    }
+
+    /// [`TrsSession::create`] on an explicit storage backend. The paged
+    /// backend is what in-transit publishing tees — a session that intends
+    /// to [`TrsSession::publish`] must be created with
+    /// [`crate::h5lite::Backing::Paged`].
+    pub fn create_backed(
+        path: &Path,
+        sim: &Simulation,
+        alignment: u64,
+        backing: crate::h5lite::Backing,
+    ) -> Result<TrsSession> {
+        let mut file = H5File::create_backed(path, alignment, backing)?;
         iokernel::write_common(&mut file, &sim.params, &sim.nbs.tree, sim.part.n_ranks as u64)?;
         Ok(TrsSession {
             active_path: path.to_path_buf(),
             file,
             branches: 0,
             readers: crate::window::ReaderPool::new(crate::h5lite::DEFAULT_CHUNK_CACHE_BYTES),
+            publisher: None,
         })
+    }
+
+    /// Publish this session's committed epochs in transit: bind an
+    /// [`crate::stream::EpochPublisher`] on `addr` and tee the active
+    /// file's flush batches through it, so remote viewers can follow the
+    /// steered run file-lessly ([`crate::stream::StreamSubscriber`] /
+    /// [`crate::window::Collector::spawn_follower`]). Needs a session
+    /// created on the paged backend ([`TrsSession::create_backed`]).
+    ///
+    /// Publishing covers the *active* file only: a
+    /// [`TrsSession::rollback`] branches into a fresh file, ending the
+    /// stream (subscribers' mirrors are of the old path) — call `publish`
+    /// again on the branch to resume.
+    pub fn publish<A: std::net::ToSocketAddrs>(
+        &mut self,
+        addr: A,
+        opts: crate::stream::PublisherOptions,
+    ) -> Result<Arc<crate::stream::EpochPublisher>> {
+        let publisher = crate::stream::EpochPublisher::bind(addr, opts)?;
+        publisher
+            .attach(&self.file)
+            .context("trs: publish needs a paged-backed session")?;
+        self.publisher = Some(Arc::clone(&publisher));
+        Ok(publisher)
+    }
+
+    /// The active publisher, if [`TrsSession::publish`] was called (and no
+    /// rollback ended it since) — lag/backlog stats for the steering loop.
+    pub fn publisher(&self) -> Option<&Arc<crate::stream::EpochPublisher>> {
+        self.publisher.as_ref()
     }
 
     /// Write a snapshot of the simulation at its current time.
@@ -287,12 +335,37 @@ impl TrsSession {
         let branch = iokernel::branch_file(&self.file, t, &branch_path, io)
             .context("trs: rollback branch")?;
         let snap = iokernel::read_snapshot(&branch, t)?;
+        if let Some(p) = self.publisher.take() {
+            // the stream follows the *file*, and the branch is a new one:
+            // end the old stream cleanly (subscribers see EOF and can
+            // reconnect to a fresh publish on the branch)
+            p.shutdown();
+        }
         self.file = branch;
         self.active_path = branch_path;
         let mut sim = Simulation::from_snapshot(snap, bc);
         sim.t = t;
         Ok(sim)
     }
+}
+
+/// Follow a remote steered run file-lessly: subscribe to its publisher at
+/// `addr` (catching up from `source`, the run's snapshot file, into the
+/// local `mirror`), and spawn a [`crate::window::Collector`] serving
+/// window/LOD sessions from the mirror's latest applied epoch — the
+/// viewer-side composition of [`TrsSession::publish`]. After a disconnect,
+/// drop the collector and call this again: reconnect-resync is a fresh
+/// file catch-up.
+pub fn follow_run<A: std::net::ToSocketAddrs>(
+    addr: A,
+    source: &Path,
+    mirror: &Path,
+    t: f64,
+    opts: &crate::window::CollectorOptions,
+) -> Result<crate::window::Collector> {
+    let sub = crate::stream::StreamSubscriber::connect(addr, source, mirror)
+        .context("steering: follow subscribe")?;
+    crate::window::Collector::spawn_follower(sub, t, opts)
 }
 
 #[cfg(test)]

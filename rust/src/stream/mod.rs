@@ -1,0 +1,1030 @@
+//! In-transit epoch streaming: committed flush batches, published live.
+//!
+//! The paper's steering/visualisation front ends round-trip every epoch
+//! through the filesystem: the writer commits, the flusher drains, a viewer
+//! polls the file and re-opens it. That couples reader latency to
+//! writer-disk bandwidth — the file-based bottleneck the openPMD/ADIOS2
+//! streaming-transport work (Poeschel et al., arXiv 2107.06108) attacks and
+//! the interactive-exploration companion paper (Perović et al.,
+//! arXiv 1807.00149) suffers from. This module removes the round trip: the
+//! paged backend already turns each commit into an ordered, self-consistent
+//! batch sequence ending in a superblock flip, so *publishing an epoch is
+//! teeing the batch*.
+//!
+//! * [`EpochPublisher`] implements [`BatchSink`] and attaches to a paged
+//!   [`H5File`] ([`EpochPublisher::attach`]). Every barrier batch is teed —
+//!   once, whatever the subscriber count — into per-subscriber bounded
+//!   queues and fanned out over TCP by per-subscriber sender threads. The
+//!   writer never blocks on a subscriber: when a queue is full the
+//!   configured [`SlowConsumerPolicy`] either *coalesces* the queue into
+//!   one cumulative frame (latest bytes win) or *disconnects* the laggard.
+//! * [`StreamSubscriber`] connects, catches up from the file (copy the
+//!   source file — at least the durable prefix — into a local mirror), then
+//!   applies stream frames in order onto a [`PagedImage`]-backed mirror of
+//!   the writer's image. Reconnect-resync is the same code path: connect
+//!   again, catch up from the file again.
+//!
+//! ## Wire format
+//!
+//! All integers little-endian. On connect the publisher sends one HELLO:
+//!
+//! ```text
+//! HELLO := magic[8]="MPH5STRM" version:u32 durable_seq:u64 head_seq:u64
+//! ```
+//!
+//! then a stream of BATCH frames, strictly in sequence order:
+//!
+//! ```text
+//! BATCH := kind:u8=1 first_seq:u64 seq:u64 durable_seq:u64 head_seq:u64
+//!          set_len:u64 flags:u32 flips:u32 n_ranges:u32
+//!          { off:u64 len:u64 bytes[len] } * n_ranges
+//! ```
+//!
+//! `flags` bit 0 = the frame contains a superblock flip (it commits one or
+//! more epochs); bit 1 = the frame is a coalesced merge of `first_seq..=seq`
+//! (`flips` counts the flips merged in). `durable_seq`/`head_seq` piggyback
+//! the publisher's watermarks at send time, giving the subscriber its lag
+//! without a back-channel. A frame's ranges carry **absolute contents** at
+//! absolute offsets — applying a frame is idempotent, and replaying a frame
+//! whose effects are already (even partially, via a torn flush) on disk
+//! simply converges the mirror.
+//!
+//! ## Consistency and resync rules
+//!
+//! * The publisher retains every batch newer than the flusher's durable
+//!   watermark. A new subscriber's queue is seeded with the retained
+//!   batches *before* any new batch can be published to it, so the stream
+//!   it sees is gapless from the durable watermark onward.
+//! * File catch-up: the source file always holds a (possibly torn) prefix
+//!   of the batch history that is at least the durable watermark. Copying
+//!   it and then applying the retained batches in order overwrites every
+//!   byte the copy may have caught mid-flight with its final absolute
+//!   content — so after the replay the mirror equals the writer's image at
+//!   the publisher's head, byte for byte.
+//! * Epoch boundaries: a frame with the flip flag ends one (or more,
+//!   if coalesced) epochs. The subscriber barriers its mirror at each flip,
+//!   so opening the mirror path with [`H5File::open`] always lands on the
+//!   last applied epoch — and because committed extents are never
+//!   overwritten in place (chunk extents, the footer, and — since the
+//!   epoch-versioned contiguous write-aside — contiguous payloads too),
+//!   even a mirror caught mid-frame recovers exactly like a torn flush.
+//! * Reconnect after a disconnect (slow-consumer policy, network error,
+//!   subscriber crash) is a fresh [`StreamSubscriber::connect`]: the file
+//!   catch-up replaces the mirror wholesale, re-entering the stream at the
+//!   current watermarks. No server-side per-subscriber state survives.
+//!
+//! The delivery economics — when following the stream beats polling the
+//! file — are priced by [`crate::cluster::Machine::estimate_stream`]; the
+//! `stream_follow` bench measures both on the real implementation.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::h5lite::store::{BatchSink, PagedImage, Store};
+use crate::h5lite::H5File;
+use crate::metrics::{names, Metrics};
+
+/// Magic bytes opening the HELLO frame.
+pub const STREAM_MAGIC: &[u8; 8] = b"MPH5STRM";
+/// Wire protocol version.
+pub const STREAM_VERSION: u32 = 1;
+
+const FLAG_FLIP: u32 = 1 << 0;
+const FLAG_COALESCED: u32 = 1 << 1;
+/// Sanity cap on a single range's length (1 TiB) — a corrupt length field
+/// must not become an allocation.
+const MAX_RANGE_LEN: u64 = 1 << 40;
+
+/// What to do when a subscriber's bounded send queue is full.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum SlowConsumerPolicy {
+    /// Merge a backlog into one cumulative frame: later bytes win,
+    /// intermediate epoch deliveries are dropped (counted in
+    /// `stream.dropped_batches`), and the subscriber lands on the latest
+    /// state when it catches up. Merging normally happens on the laggard's
+    /// own sender thread (it drains its whole queue per send); the writer
+    /// only merges itself — still never blocking on the socket — when a
+    /// sender stuck mid-`write` lets the queue hit its hard cap.
+    #[default]
+    Coalesce,
+    /// Drop the subscriber: its socket closes and it must reconnect
+    /// (re-entering through file catch-up). Choose this when a consumer
+    /// must see *every* epoch or none.
+    Disconnect,
+}
+
+/// Tuning for [`EpochPublisher`].
+#[derive(Clone)]
+pub struct PublisherOptions {
+    /// Per-subscriber bound on queued frames before the slow-consumer
+    /// policy engages.
+    pub max_queued_batches: usize,
+    pub policy: SlowConsumerPolicy,
+    /// Metrics sink for the `stream.*` gauges/counters.
+    pub metrics: Option<Arc<Metrics>>,
+}
+
+impl Default for PublisherOptions {
+    fn default() -> Self {
+        PublisherOptions {
+            max_queued_batches: 8,
+            policy: SlowConsumerPolicy::default(),
+            metrics: None,
+        }
+    }
+}
+
+/// One teed batch, shared (`Arc`) across every subscriber queue. The range
+/// contents are the flush queue's own `Arc`-shared snapshots, so publishing
+/// costs O(ranges) handle clones on the writer thread — no payload copy at
+/// all, whatever the fan-out.
+struct Frame {
+    first_seq: u64,
+    seq: u64,
+    set_len: u64,
+    flip: bool,
+    coalesced: bool,
+    /// Superblock flips this frame carries (>1 only when coalesced).
+    flips: u32,
+    ranges: Vec<(u64, Arc<Vec<u8>>)>,
+    bytes: u64,
+}
+
+/// Overlay-insert `[off, off+data.len())` into a map of non-overlapping
+/// ranges: overlapping parts of existing entries are trimmed away, so later
+/// inserts win — the merge rule behind [`SlowConsumerPolicy::Coalesce`].
+fn overlay_insert(map: &mut BTreeMap<u64, Vec<u8>>, off: u64, data: &[u8]) {
+    if data.is_empty() {
+        return;
+    }
+    let end = off + data.len() as u64;
+    // entries are mutually non-overlapping and sorted by start, so their
+    // ends are sorted too: walk backwards from the last entry starting
+    // before `end` until one ends at or before `off`
+    let hit: Vec<u64> = map
+        .range(..end)
+        .rev()
+        .take_while(|(&o, v)| o + v.len() as u64 > off)
+        .map(|(&o, _)| o)
+        .collect();
+    for o in hit {
+        let v = map.remove(&o).unwrap();
+        let vend = o + v.len() as u64;
+        if o < off {
+            map.insert(o, v[..(off - o) as usize].to_vec());
+        }
+        if vend > end {
+            map.insert(end, v[(end - o) as usize..].to_vec());
+        }
+    }
+    map.insert(off, data.to_vec());
+}
+
+/// Distinct epoch deliveries lost by merging `frames` into one: every
+/// flip-bearing frame was one observable epoch edge, the merge leaves one.
+/// (Merging a commit's own footer batch into its flip batch loses nothing
+/// and counts zero.)
+fn flip_deliveries_merged(frames: &[Arc<Frame>]) -> u64 {
+    (frames.iter().filter(|f| f.flips > 0).count() as u64).saturating_sub(1)
+}
+
+/// Merge queued frames (oldest first) into one cumulative frame.
+fn merge_frames(frames: &[Arc<Frame>]) -> Frame {
+    debug_assert!(!frames.is_empty());
+    let mut map: BTreeMap<u64, Vec<u8>> = BTreeMap::new();
+    let mut set_len = 0u64;
+    let mut flips = 0u32;
+    for f in frames {
+        set_len = set_len.max(f.set_len);
+        flips += f.flips;
+        for (off, data) in &f.ranges {
+            overlay_insert(&mut map, *off, data);
+        }
+    }
+    let mut bytes = 0u64;
+    let ranges: Vec<(u64, Arc<Vec<u8>>)> = map
+        .into_iter()
+        .inspect(|(_, d)| bytes += d.len() as u64)
+        .map(|(o, d)| (o, Arc::new(d)))
+        .collect();
+    Frame {
+        first_seq: frames[0].first_seq,
+        seq: frames[frames.len() - 1].seq,
+        set_len,
+        flip: flips > 0,
+        coalesced: true,
+        flips,
+        ranges,
+        bytes,
+    }
+}
+
+/// One subscriber's bounded send queue, shared between the publish tee
+/// (pushes) and that subscriber's sender thread (pops).
+struct SubSlot {
+    queue: VecDeque<Arc<Frame>>,
+    /// Queued flips, maintained with the queue (the lag-epochs gauge).
+    queued_flips: u64,
+    queued_bytes: u64,
+    dead: bool,
+}
+
+type Slot = Arc<(Mutex<SubSlot>, Condvar)>;
+
+struct PubInner {
+    subs: Vec<Slot>,
+    /// Batches newer than the flusher's durable watermark — the replay a
+    /// new subscriber needs on top of its file catch-up.
+    retained: VecDeque<Arc<Frame>>,
+}
+
+/// Shared state behind [`EpochPublisher`]: the accept loop and the sender
+/// threads hold this (not the publisher itself), so the publisher can be
+/// dropped independently of in-flight connections.
+struct PubShared {
+    opts: PublisherOptions,
+    inner: Mutex<PubInner>,
+    stop: AtomicBool,
+    head_seq: AtomicU64,
+    durable_seq: AtomicU64,
+    publish_ns: AtomicU64,
+    published_bytes: AtomicU64,
+    dropped_batches: AtomicU64,
+    subscribers: AtomicU64,
+}
+
+impl PubShared {
+    fn metrics(&self) -> Option<&Arc<Metrics>> {
+        self.opts.metrics.as_ref()
+    }
+
+    /// Push a frame onto one subscriber queue, applying the slow-consumer
+    /// policy at the hard cap. Returns epoch deliveries dropped (merged
+    /// away or discarded).
+    fn push_frame(&self, slot: &Slot, frame: Arc<Frame>) -> u64 {
+        let (m, cv) = &**slot;
+        let mut s = m.lock().unwrap();
+        if s.dead {
+            return 0;
+        }
+        let mut dropped = 0u64;
+        if s.queue.len() >= self.opts.max_queued_batches.max(1) {
+            match self.opts.policy {
+                SlowConsumerPolicy::Disconnect => {
+                    // every queued epoch plus the incoming one goes
+                    // undelivered (the subscriber must reconnect and
+                    // catch up from the file)
+                    dropped = s.queued_flips + frame.flips as u64;
+                    s.queue.clear();
+                    s.queued_flips = 0;
+                    s.queued_bytes = 0;
+                    s.dead = true;
+                    cv.notify_all();
+                    return dropped;
+                }
+                SlowConsumerPolicy::Coalesce => {
+                    let mut all: Vec<Arc<Frame>> = s.queue.drain(..).collect();
+                    all.push(frame);
+                    dropped = flip_deliveries_merged(&all);
+                    let merged = Arc::new(merge_frames(&all));
+                    s.queued_flips = merged.flips as u64;
+                    s.queued_bytes = merged.bytes;
+                    s.queue.push_back(merged);
+                }
+            }
+        } else {
+            s.queued_flips += frame.flips as u64;
+            s.queued_bytes += frame.bytes;
+            s.queue.push_back(frame);
+        }
+        cv.notify_all();
+        dropped
+    }
+
+    /// Refresh the `stream.*` gauges from the current queue states.
+    fn refresh_gauges(&self, inner: &PubInner) {
+        let Some(metrics) = self.metrics() else {
+            return;
+        };
+        let mut lag_flips = 0u64;
+        let mut lag_bytes = 0u64;
+        let mut live = 0u64;
+        for slot in &inner.subs {
+            let s = slot.0.lock().unwrap();
+            if s.dead {
+                continue;
+            }
+            live += 1;
+            lag_flips = lag_flips.max(s.queued_flips);
+            lag_bytes = lag_bytes.max(s.queued_bytes);
+        }
+        metrics.set_gauge(names::STREAM_SUBSCRIBERS, live as f64);
+        metrics.set_gauge(names::STREAM_LAG_EPOCHS, lag_flips as f64);
+        metrics.set_gauge(names::STREAM_LAG_BYTES, lag_bytes as f64);
+    }
+}
+
+/// Counter snapshot of a publisher (see [`EpochPublisher::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PublishStats {
+    /// Live subscribers.
+    pub subscribers: u64,
+    /// Wall time spent inside the publish tee (on the writer's commit
+    /// path — the `IoReport.publish_seconds` input).
+    pub publish_seconds: f64,
+    /// Payload bytes teed (once per batch, whatever the fan-out).
+    pub published_bytes: u64,
+    /// Slowest live subscriber's queued payload bytes.
+    pub backlog_bytes: u64,
+    /// Distinct epoch deliveries coalesced away or discarded by the
+    /// slow-consumer policy (a commit's footer batch merging into its own
+    /// flip batch loses nothing and is not counted).
+    pub dropped_batches: u64,
+    /// Latest published batch sequence.
+    pub head_seq: u64,
+    /// Latest durably flushed batch sequence.
+    pub durable_seq: u64,
+}
+
+/// The writer-side tee: a [`BatchSink`] that fans committed flush batches
+/// out to TCP subscribers. See the module docs for the protocol.
+pub struct EpochPublisher {
+    shared: Arc<PubShared>,
+    addr: SocketAddr,
+    accept: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl EpochPublisher {
+    /// Bind a publisher on `addr` (use port 0 for an ephemeral port; see
+    /// [`EpochPublisher::local_addr`]) and start its accept loop. Attach it
+    /// to a paged-backed file with [`EpochPublisher::attach`].
+    pub fn bind<A: ToSocketAddrs>(addr: A, opts: PublisherOptions) -> Result<Arc<EpochPublisher>> {
+        let listener = TcpListener::bind(addr).context("stream: bind publisher")?;
+        let addr = listener.local_addr().context("stream: local_addr")?;
+        let shared = Arc::new(PubShared {
+            opts,
+            inner: Mutex::new(PubInner {
+                subs: Vec::new(),
+                retained: VecDeque::new(),
+            }),
+            stop: AtomicBool::new(false),
+            head_seq: AtomicU64::new(0),
+            durable_seq: AtomicU64::new(0),
+            publish_ns: AtomicU64::new(0),
+            published_bytes: AtomicU64::new(0),
+            dropped_batches: AtomicU64::new(0),
+            subscribers: AtomicU64::new(0),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("stream-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .context("stream: spawn accept loop")?;
+        Ok(Arc::new(EpochPublisher {
+            shared,
+            addr,
+            accept: Mutex::new(Some(accept)),
+        }))
+    }
+
+    /// The bound address subscribers connect to.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Tee `file`'s flush batches through this publisher. Fails on the
+    /// direct backend — synchronous writes have no batch stream to tee.
+    pub fn attach(self: &Arc<Self>, file: &H5File) -> Result<()> {
+        let sink: Arc<dyn BatchSink> = Arc::clone(self) as Arc<dyn BatchSink>;
+        if !file.set_batch_sink(Some(sink)) {
+            bail!("stream: publishing needs the paged backend (direct I/O has no batch stream)");
+        }
+        Ok(())
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PublishStats {
+        let inner = self.shared.inner.lock().unwrap();
+        let mut backlog = 0u64;
+        let mut live = 0u64;
+        for slot in &inner.subs {
+            let s = slot.0.lock().unwrap();
+            if !s.dead {
+                live += 1;
+                backlog = backlog.max(s.queued_bytes);
+            }
+        }
+        PublishStats {
+            subscribers: live,
+            publish_seconds: self.shared.publish_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            published_bytes: self.shared.published_bytes.load(Ordering::Relaxed),
+            backlog_bytes: backlog,
+            dropped_batches: self.shared.dropped_batches.load(Ordering::Relaxed),
+            head_seq: self.shared.head_seq.load(Ordering::Relaxed),
+            durable_seq: self.shared.durable_seq.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting, close every subscriber and join the accept loop.
+    /// Idempotent; also runs on drop. Detach the publisher from the file
+    /// (`file.set_batch_sink(None)`) before or after — a stopped publisher
+    /// swallows further batches without error.
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        {
+            let inner = self.shared.inner.lock().unwrap();
+            for slot in &inner.subs {
+                let (m, cv) = &**slot;
+                m.lock().unwrap().dead = true;
+                cv.notify_all();
+            }
+        }
+        // unblock the accept loop with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EpochPublisher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl BatchSink for EpochPublisher {
+    fn on_batch(&self, seq: u64, set_len: u64, ranges: &[(u64, Arc<Vec<u8>>)]) {
+        let shared = &self.shared;
+        if shared.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let t0 = Instant::now();
+        let mut bytes = 0u64;
+        let frame = Arc::new(Frame {
+            first_seq: seq,
+            seq,
+            set_len,
+            // commit issues the superblock write alone between barriers, so
+            // a flip batch is exactly the one whose ranges reach offset 0
+            flip: ranges.iter().any(|&(off, _)| off == 0),
+            coalesced: false,
+            flips: ranges.iter().any(|&(off, _)| off == 0) as u32,
+            ranges: ranges
+                .iter()
+                .map(|(off, data)| {
+                    bytes += data.len() as u64;
+                    (*off, data.clone())
+                })
+                .collect(),
+            bytes,
+        });
+        shared.head_seq.store(seq, Ordering::Relaxed);
+        shared.published_bytes.fetch_add(frame.bytes, Ordering::Relaxed);
+        let mut inner = shared.inner.lock().unwrap();
+        inner.retained.push_back(Arc::clone(&frame));
+        let mut dropped = 0u64;
+        for slot in &inner.subs {
+            dropped += shared.push_frame(slot, Arc::clone(&frame));
+        }
+        inner.subs.retain(|s| !s.0.lock().unwrap().dead);
+        shared.subscribers.store(inner.subs.len() as u64, Ordering::Relaxed);
+        if dropped > 0 {
+            shared.dropped_batches.fetch_add(dropped, Ordering::Relaxed);
+            if let Some(m) = shared.metrics() {
+                m.add(names::STREAM_DROPPED_BATCHES, dropped);
+            }
+        }
+        shared.refresh_gauges(&inner);
+        drop(inner);
+        shared
+            .publish_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    fn on_durable(&self, seq: u64) {
+        let shared = &self.shared;
+        shared.durable_seq.store(seq, Ordering::Relaxed);
+        let mut inner = shared.inner.lock().unwrap();
+        // batches at or below the durable watermark are on disk: a new
+        // subscriber's file catch-up covers them, so retention can let go
+        while inner.retained.front().map_or(false, |f| f.seq <= seq) {
+            inner.retained.pop_front();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<PubShared>) {
+    loop {
+        let sock = match listener.accept() {
+            Ok((sock, _)) => sock,
+            Err(_) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if sock.set_nodelay(true).is_err() {
+            continue;
+        }
+        let slot: Slot = Arc::new((
+            Mutex::new(SubSlot {
+                queue: VecDeque::new(),
+                queued_flips: 0,
+                queued_bytes: 0,
+                dead: false,
+            }),
+            Condvar::new(),
+        ));
+        // Register under the inner lock and seed the queue with the
+        // retained batches in the same critical section: no batch published
+        // after this point can be missed, none retained can be skipped —
+        // the stream is gapless from the durable watermark on.
+        {
+            let mut inner = shared.inner.lock().unwrap();
+            for f in &inner.retained {
+                shared.push_frame(&slot, Arc::clone(f));
+            }
+            inner.subs.push(Arc::clone(&slot));
+            shared.subscribers.store(inner.subs.len() as u64, Ordering::Relaxed);
+            shared.refresh_gauges(&inner);
+        }
+        let send_shared = Arc::clone(&shared);
+        let _ = std::thread::Builder::new()
+            .name("stream-send".into())
+            .spawn(move || sender_loop(sock, slot, send_shared));
+    }
+}
+
+fn sender_loop(mut sock: TcpStream, slot: Slot, shared: Arc<PubShared>) {
+    // HELLO first: watermarks at registration time
+    let mut hello = Vec::with_capacity(28);
+    hello.extend_from_slice(STREAM_MAGIC);
+    hello.extend_from_slice(&STREAM_VERSION.to_le_bytes());
+    hello.extend_from_slice(&shared.durable_seq.load(Ordering::Relaxed).to_le_bytes());
+    hello.extend_from_slice(&shared.head_seq.load(Ordering::Relaxed).to_le_bytes());
+    let mut alive = sock.write_all(&hello).is_ok() && sock.flush().is_ok();
+    while alive {
+        // Drain everything queued in one pop. Under `Coalesce` a backlog is
+        // merged *here*, on the subscriber's own sender thread — the writer
+        // only pays the merge itself when this thread is stuck inside a
+        // blocked `write` long enough for the queue to hit its hard cap.
+        let pending: Vec<Arc<Frame>> = {
+            let (m, cv) = &*slot;
+            let mut s = m.lock().unwrap();
+            loop {
+                if s.dead || shared.stop.load(Ordering::Relaxed) {
+                    alive = false;
+                    break Vec::new();
+                }
+                if !s.queue.is_empty() {
+                    let take = match shared.opts.policy {
+                        SlowConsumerPolicy::Coalesce => s.queue.len(),
+                        // without coalescing every frame ships individually
+                        SlowConsumerPolicy::Disconnect => 1,
+                    };
+                    let drained: Vec<Arc<Frame>> = s.queue.drain(..take).collect();
+                    for f in &drained {
+                        s.queued_flips = s.queued_flips.saturating_sub(f.flips as u64);
+                        s.queued_bytes = s.queued_bytes.saturating_sub(f.bytes);
+                    }
+                    break drained;
+                }
+                s = cv.wait(s).unwrap();
+            }
+        };
+        if pending.is_empty() {
+            break;
+        }
+        let frame = if pending.len() == 1 {
+            Arc::clone(&pending[0])
+        } else {
+            let dropped = flip_deliveries_merged(&pending);
+            if dropped > 0 {
+                shared.dropped_batches.fetch_add(dropped, Ordering::Relaxed);
+                if let Some(m) = shared.metrics() {
+                    m.add(names::STREAM_DROPPED_BATCHES, dropped);
+                }
+            }
+            Arc::new(merge_frames(&pending))
+        };
+        if write_frame(&mut sock, &frame, &shared).is_err() {
+            alive = false;
+        }
+    }
+    let _ = sock.shutdown(Shutdown::Both);
+    let (m, _) = &*slot;
+    m.lock().unwrap().dead = true;
+    // the publish tee prunes dead slots on its next batch; refresh the
+    // subscriber gauge eagerly so a disconnect is visible without traffic
+    let inner = shared.inner.lock().unwrap();
+    shared.refresh_gauges(&inner);
+}
+
+fn write_frame(sock: &mut TcpStream, frame: &Frame, shared: &PubShared) -> std::io::Result<()> {
+    let mut head = Vec::with_capacity(53);
+    head.push(1u8);
+    head.extend_from_slice(&frame.first_seq.to_le_bytes());
+    head.extend_from_slice(&frame.seq.to_le_bytes());
+    head.extend_from_slice(&shared.durable_seq.load(Ordering::Relaxed).to_le_bytes());
+    head.extend_from_slice(&shared.head_seq.load(Ordering::Relaxed).to_le_bytes());
+    head.extend_from_slice(&frame.set_len.to_le_bytes());
+    let mut flags = 0u32;
+    if frame.flip {
+        flags |= FLAG_FLIP;
+    }
+    if frame.coalesced {
+        flags |= FLAG_COALESCED;
+    }
+    head.extend_from_slice(&flags.to_le_bytes());
+    head.extend_from_slice(&frame.flips.to_le_bytes());
+    head.extend_from_slice(&(frame.ranges.len() as u32).to_le_bytes());
+    sock.write_all(&head)?;
+    for (off, data) in &frame.ranges {
+        sock.write_all(&off.to_le_bytes())?;
+        sock.write_all(&(data.len() as u64).to_le_bytes())?;
+        sock.write_all(data)?;
+    }
+    sock.flush()
+}
+
+// ---------------------------------------------------------------------------
+// Subscriber
+// ---------------------------------------------------------------------------
+
+fn rd_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("stream: short read")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn rd_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).context("stream: short read")?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// A decoded BATCH frame (subscriber side).
+struct WireFrame {
+    seq: u64,
+    durable_seq: u64,
+    head_seq: u64,
+    set_len: u64,
+    flip: bool,
+    flips: u32,
+    ranges: Vec<(u64, Vec<u8>)>,
+}
+
+fn read_frame(r: &mut impl Read) -> Result<WireFrame> {
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind).context("stream: closed")?;
+    if kind[0] != 1 {
+        bail!("stream: unknown frame kind {}", kind[0]);
+    }
+    let _first_seq = rd_u64(r)?;
+    let seq = rd_u64(r)?;
+    let durable_seq = rd_u64(r)?;
+    let head_seq = rd_u64(r)?;
+    let set_len = rd_u64(r)?;
+    let flags = rd_u32(r)?;
+    let flips = rd_u32(r)?;
+    let n_ranges = rd_u32(r)?;
+    let mut ranges = Vec::with_capacity(n_ranges as usize);
+    for _ in 0..n_ranges {
+        let off = rd_u64(r)?;
+        let len = rd_u64(r)?;
+        if len > MAX_RANGE_LEN {
+            bail!("stream: absurd range length {len}");
+        }
+        let mut data = vec![0u8; len as usize];
+        r.read_exact(&mut data).context("stream: short range")?;
+        ranges.push((off, data));
+    }
+    Ok(WireFrame {
+        seq,
+        durable_seq,
+        head_seq,
+        set_len,
+        flip: flags & FLAG_FLIP != 0,
+        flips,
+        ranges,
+    })
+}
+
+/// Live progress of a [`StreamSubscriber`] (see
+/// [`StreamSubscriber::progress`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubscriberProgress {
+    /// Last applied batch sequence.
+    pub last_seq: u64,
+    /// Epochs (superblock flips) applied since connect.
+    pub epochs_applied: u64,
+    /// Publisher's durable watermark, as last piggybacked.
+    pub durable_seq: u64,
+    /// Publisher's head, as last piggybacked.
+    pub head_seq: u64,
+}
+
+impl SubscriberProgress {
+    /// Batches published but not yet applied here — the staleness bound.
+    pub fn lag_seqs(&self) -> u64 {
+        self.head_seq.saturating_sub(self.last_seq)
+    }
+}
+
+struct SubState {
+    progress: SubscriberProgress,
+    /// Why the apply loop ended, if it did (clean shutdown = "closed").
+    dead: Option<String>,
+}
+
+/// The reader-side endpoint: applies stream frames in order onto a
+/// [`PagedImage`]-backed local mirror of the writer's file, so
+/// [`H5File::open`] on the mirror path follows the live run with bounded
+/// staleness. See the module docs for the catch-up/resync rules.
+pub struct StreamSubscriber {
+    mirror: PathBuf,
+    store: Arc<PagedImage>,
+    state: Arc<(Mutex<SubState>, Condvar)>,
+    sock: TcpStream,
+    apply: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl StreamSubscriber {
+    /// Connect to a publisher at `addr`, catch up from `source` (the
+    /// writer's file — readable at least up to the durable watermark) into
+    /// `mirror`, and start following the stream. Reconnecting after any
+    /// disconnect is simply calling this again with the same paths.
+    pub fn connect<A: ToSocketAddrs>(
+        addr: A,
+        source: &Path,
+        mirror: &Path,
+    ) -> Result<StreamSubscriber> {
+        let mut sock = TcpStream::connect(addr).context("stream: connect")?;
+        sock.set_nodelay(true).ok();
+        // HELLO before the copy: every batch beyond the durable watermark
+        // is now queued for us, so the copy below can race the flusher
+        // freely — whatever it half-captures, the replay overwrites
+        let mut magic = [0u8; 8];
+        sock.read_exact(&mut magic).context("stream: no hello")?;
+        if &magic != STREAM_MAGIC {
+            bail!("stream: bad magic in hello");
+        }
+        let version = rd_u32(&mut sock)?;
+        if version != STREAM_VERSION {
+            bail!("stream: protocol version {version}, expected {STREAM_VERSION}");
+        }
+        let durable_seq = rd_u64(&mut sock)?;
+        let head_seq = rd_u64(&mut sock)?;
+        std::fs::copy(source, mirror).context("stream: file catch-up copy")?;
+        let store = Arc::new(PagedImage::open(mirror).context("stream: open mirror")?);
+        let state = Arc::new((
+            Mutex::new(SubState {
+                progress: SubscriberProgress {
+                    last_seq: durable_seq,
+                    epochs_applied: 0,
+                    durable_seq,
+                    head_seq,
+                },
+                dead: None,
+            }),
+            Condvar::new(),
+        ));
+        let apply_sock = sock.try_clone().context("stream: clone socket")?;
+        let apply_store = Arc::clone(&store);
+        let apply_state = Arc::clone(&state);
+        let apply = std::thread::Builder::new()
+            .name("stream-apply".into())
+            .spawn(move || apply_loop(apply_sock, apply_store, apply_state))
+            .context("stream: spawn apply loop")?;
+        Ok(StreamSubscriber {
+            mirror: mirror.to_path_buf(),
+            store,
+            state,
+            sock,
+            apply: Mutex::new(Some(apply)),
+        })
+    }
+
+    /// Path of the mirror file readers open.
+    pub fn mirror_path(&self) -> &Path {
+        &self.mirror
+    }
+
+    /// Current apply progress and piggybacked publisher watermarks.
+    pub fn progress(&self) -> SubscriberProgress {
+        self.state.0.lock().unwrap().progress
+    }
+
+    /// Why the stream ended, if it did.
+    pub fn dead(&self) -> Option<String> {
+        self.state.0.lock().unwrap().dead.clone()
+    }
+
+    /// Block until at least `epochs` superblock flips have been applied
+    /// since connect (or the stream dies / `timeout` passes). Returns the
+    /// epochs applied so far.
+    pub fn wait_for_epochs(&self, epochs: u64, timeout: Duration) -> Result<u64> {
+        let deadline = Instant::now() + timeout;
+        let (m, cv) = &*self.state;
+        let mut s = m.lock().unwrap();
+        loop {
+            if s.progress.epochs_applied >= epochs {
+                return Ok(s.progress.epochs_applied);
+            }
+            if let Some(why) = &s.dead {
+                bail!("stream: ended after {} epochs: {why}", s.progress.epochs_applied);
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                bail!(
+                    "stream: timed out at {} epochs (wanted {epochs})",
+                    s.progress.epochs_applied
+                );
+            }
+            (s, _) = cv.wait_timeout(s, left).map(|(g, t)| (g, t.timed_out())).unwrap();
+        }
+    }
+
+    /// Open the mirror at its latest applied epoch: flush the mirror image
+    /// and open the path like any snapshot file. The handle is an ordinary
+    /// epoch-consistent [`H5File`] — it does *not* advance with the stream;
+    /// re-open to follow (the `window`/`steering` integration does exactly
+    /// that, re-opening per served epoch, ≤ 1 epoch behind the wire).
+    pub fn open_file(&self) -> Result<H5File> {
+        self.store.barrier().context("stream: mirror barrier")?;
+        self.store.wait_durable().context("stream: mirror flush")?;
+        H5File::open(&self.mirror)
+    }
+}
+
+fn apply_loop(sock: TcpStream, store: Arc<PagedImage>, state: Arc<(Mutex<SubState>, Condvar)>) {
+    let mut r = std::io::BufReader::new(sock);
+    loop {
+        let frame = match read_frame(&mut r) {
+            Ok(f) => f,
+            Err(e) => {
+                let (m, cv) = &*state;
+                m.lock().unwrap().dead = Some(e.to_string());
+                cv.notify_all();
+                return;
+            }
+        };
+        let applied = (|| -> Result<()> {
+            store.set_len_min(frame.set_len)?;
+            for (off, data) in &frame.ranges {
+                store.write_all_at(data, *off)?;
+            }
+            if frame.flip {
+                // barrier at the epoch edge: the mirror file on disk
+                // converges to this epoch, so H5File::open on the mirror
+                // path lands here (wait_durable is deferred to open_file)
+                store.barrier()?;
+            }
+            Ok(())
+        })();
+        let (m, cv) = &*state;
+        let mut s = m.lock().unwrap();
+        match applied {
+            Ok(()) => {
+                s.progress.last_seq = frame.seq;
+                s.progress.durable_seq = frame.durable_seq;
+                s.progress.head_seq = frame.head_seq.max(frame.seq);
+                s.progress.epochs_applied += frame.flips as u64;
+            }
+            Err(e) => {
+                s.dead = Some(format!("apply failed: {e}"));
+                cv.notify_all();
+                return;
+            }
+        }
+        cv.notify_all();
+    }
+}
+
+impl Drop for StreamSubscriber {
+    fn drop(&mut self) {
+        let _ = self.sock.shutdown(Shutdown::Both);
+        if let Some(h) = self.apply.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        // dropping `store` issues the mirror's final barrier and joins its
+        // flusher, leaving the mirror file openable at the last applied epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::h5lite::{codec, Backing, Dtype};
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("stream_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn overlay_insert_later_bytes_win() {
+        let mut m = BTreeMap::new();
+        overlay_insert(&mut m, 10, &[1u8; 10]); // [10,20)
+        overlay_insert(&mut m, 15, &[2u8; 10]); // [15,25) overrides tail
+        overlay_insert(&mut m, 0, &[3u8; 12]); // [0,12) overrides head
+        let flat: Vec<(u64, Vec<u8>)> = m.into_iter().collect();
+        let mut img = vec![0u8; 25];
+        for (o, d) in &flat {
+            img[*o as usize..*o as usize + d.len()].copy_from_slice(d);
+        }
+        let mut want = vec![0u8; 25];
+        want[10..20].fill(1);
+        want[15..25].fill(2);
+        want[0..12].fill(3);
+        assert_eq!(img, want);
+    }
+
+    #[test]
+    fn merge_frames_counts_flips_and_keeps_latest() {
+        let a = Arc::new(Frame {
+            first_seq: 3,
+            seq: 3,
+            set_len: 100,
+            flip: true,
+            coalesced: false,
+            flips: 1,
+            ranges: vec![(0, Arc::new(vec![1u8; 8]))],
+            bytes: 8,
+        });
+        let b = Arc::new(Frame {
+            first_seq: 4,
+            seq: 4,
+            set_len: 200,
+            flip: true,
+            coalesced: false,
+            flips: 1,
+            ranges: vec![(0, Arc::new(vec![2u8; 8])), (50, Arc::new(vec![9u8; 4]))],
+            bytes: 12,
+        });
+        let m = merge_frames(&[a, b]);
+        assert_eq!((m.first_seq, m.seq), (3, 4));
+        assert_eq!(m.set_len, 200);
+        assert!(m.flip && m.coalesced);
+        assert_eq!(m.flips, 2);
+        assert_eq!(m.ranges[0], (0, Arc::new(vec![2u8; 8])), "later frame wins");
+        assert_eq!(m.bytes, 12);
+    }
+
+    #[test]
+    fn loopback_follow_one_writer_one_subscriber() {
+        let src = tmp("follow_src");
+        let mir = tmp("follow_mir");
+        let metrics = Arc::new(Metrics::new());
+        let publisher = EpochPublisher::bind(
+            "127.0.0.1:0",
+            PublisherOptions {
+                metrics: Some(Arc::clone(&metrics)),
+                ..PublisherOptions::default()
+            },
+        )
+        .unwrap();
+        let mut f = H5File::create_backed(&src, 1, Backing::Paged).unwrap();
+        publisher.attach(&f).unwrap();
+        let ds = f.create_dataset("/g", "d", Dtype::F32, &[8, 4]).unwrap();
+        let sub = StreamSubscriber::connect(publisher.local_addr(), &src, &mir).unwrap();
+        for step in 1..=3u64 {
+            let vals: Vec<f32> = (0..32).map(|i| (step * 100 + i) as f32).collect();
+            f.write_all_f32(&ds, &vals).unwrap();
+            f.commit().unwrap();
+        }
+        sub.wait_for_epochs(3, Duration::from_secs(10)).unwrap();
+        let rf = sub.open_file().unwrap();
+        let rds = rf.dataset("/g", "d").unwrap();
+        let got = codec::bytes_to_f32s(&rf.read_rows(&rds, 0, 8).unwrap());
+        assert_eq!(got[0], 300.0, "mirror must hold the last epoch");
+        assert!(metrics.gauge(names::STREAM_SUBSCRIBERS) >= 1.0);
+        // quiesced: mirror and source byte-identical
+        f.wait_durable().unwrap();
+        drop(rf);
+        drop(sub);
+        drop(f);
+        publisher.shutdown();
+        assert_eq!(
+            std::fs::read(&src).unwrap(),
+            std::fs::read(&mir).unwrap(),
+            "quiesced mirror must be byte-identical to the file"
+        );
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&mir).ok();
+    }
+}

@@ -119,6 +119,7 @@ use crate::h5lite::{
 use crate::iokernel::{self, ROW_BYTES, ROW_ELEMS};
 use crate::lod::{self, LodIndex};
 use crate::metrics::{names, Metrics};
+use crate::stream::StreamSubscriber;
 use crate::tree::uid::{LocCode, Uid};
 use crate::tree::BBox;
 use crate::{DGRID_CELLS, NVAR};
@@ -796,6 +797,50 @@ enum Backend {
     /// opened through one [`ReaderPool`], so all viewers share the parsed
     /// topology and the decoded-chunk cache.
     Snapshot { file: H5File, t: f64, pool: ReaderPool },
+    /// A live remote run, followed file-lessly over a
+    /// [`crate::stream::StreamSubscriber`]'s mirror.
+    Follower(FollowerState),
+}
+
+/// The subscriber-backed backend: sessions are served from the stream
+/// mirror, re-opened whenever the subscriber has applied new epochs since
+/// the last open — a viewer connecting is at most one applied epoch behind
+/// the wire.
+struct FollowerState {
+    sub: StreamSubscriber,
+    t: f64,
+    pool: ReaderPool,
+    /// Mirror handle of the last re-open, tagged with the applied-epoch
+    /// count it was opened at.
+    cur: Mutex<Option<(u64, H5File)>>,
+}
+
+impl FollowerState {
+    /// Open a session on the latest applied epoch: refresh the mirror
+    /// handle if the stream has applied new epochs, then open through the
+    /// pool (keys include the commit epoch, so sessions of one epoch share
+    /// a core and a new epoch builds a fresh one). A session holds its
+    /// epoch for its whole life; following means opening a new session.
+    ///
+    /// Caveat, as with any cross-handle-family reader: the apply thread
+    /// keeps rewriting the mirror underneath open sessions, and
+    /// writer-side extent reuse cannot see subscriber-side epoch pins —
+    /// a session outliving the writer's reuse cadence can observe torn
+    /// chunk payloads, so follower sessions should stay short-lived
+    /// (the serve path opens one per connection).
+    fn open_session(&self) -> Result<SnapshotReader> {
+        if let Some(why) = self.sub.dead() {
+            bail!("collector: stream ended ({why}) — reconnect the follower");
+        }
+        let applied = self.sub.progress().epochs_applied;
+        let mut cur = self.cur.lock().unwrap();
+        if !matches!(&*cur, Some((at, _)) if *at >= applied) {
+            let f = self.sub.open_file()?;
+            *cur = Some((applied, f));
+        }
+        let (_, f) = cur.as_ref().unwrap();
+        self.pool.open(f, self.t)
+    }
 }
 
 /// Shared state between the accept loop and the worker pool.
@@ -858,6 +903,29 @@ impl Collector {
         Collector::launch(Backend::Snapshot { file, t, pool }, opts)
     }
 
+    /// Spawn a collector serving the snapshot at time `t` from a live
+    /// stream subscription — the file-less fan-out path: the viewer-facing
+    /// wire protocol is exactly [`Collector::spawn_snapshot`]'s, but the
+    /// backing bytes arrive over the [`crate::stream::StreamSubscriber`]'s
+    /// mirror instead of a shared file system, and each new connection is
+    /// served from the latest epoch the subscriber has applied.
+    pub fn spawn_follower(
+        sub: StreamSubscriber,
+        t: f64,
+        opts: &CollectorOptions,
+    ) -> Result<Collector> {
+        let pool = ReaderPool::new(opts.cache_bytes);
+        Collector::launch(
+            Backend::Follower(FollowerState {
+                sub,
+                t,
+                pool,
+                cur: Mutex::new(None),
+            }),
+            opts,
+        )
+    }
+
     fn launch(backend: Backend, opts: &CollectorOptions) -> Result<Collector> {
         let listener = TcpListener::bind("127.0.0.1:0").context("collector bind")?;
         let addr = listener.local_addr()?;
@@ -874,13 +942,29 @@ impl Collector {
         let backend = Arc::new(backend);
         let d = Arc::clone(&dispatcher);
         let accept = std::thread::spawn(move || {
+            let mut saturated = false;
             while !d.stop.load(Ordering::Relaxed) {
                 if d.queue.lock().unwrap().len() >= d.backlog {
                     // backpressure: stop accepting until a worker drains
-                    // the queue; further clients wait in the kernel backlog
+                    // the queue; further clients wait in the kernel backlog.
+                    // Count and log the transition into saturation — the
+                    // worker pool silently bounding persistent sessions was
+                    // the PR-6 caveat, and invisible throttling is how it
+                    // bites.
+                    if !saturated {
+                        saturated = true;
+                        d.metrics.add(names::COLLECTOR_SESSIONS_REJECTED, 1);
+                        eprintln!(
+                            "collector: worker pool saturated ({} workers busy, \
+                             {} queued) — pausing accepts, new sessions throttled",
+                            d.active.load(Ordering::SeqCst),
+                            d.backlog,
+                        );
+                    }
                     std::thread::sleep(Duration::from_millis(1));
                     continue;
                 }
+                saturated = false;
                 match listener.accept() {
                     Ok((stream, _)) => {
                         d.queue.lock().unwrap().push_back(stream);
@@ -932,7 +1016,17 @@ impl Collector {
     pub fn reader_pool(&self) -> Option<&ReaderPool> {
         match &*self.backend {
             Backend::Snapshot { pool, .. } => Some(pool),
+            Backend::Follower(f) => Some(&f.pool),
             Backend::Live(_) => None,
+        }
+    }
+
+    /// The follower backend's stream subscription (`None` on other
+    /// backends) — lag/progress visibility for whoever spawned us.
+    pub fn follower(&self) -> Option<&StreamSubscriber> {
+        match &*self.backend {
+            Backend::Follower(f) => Some(&f.sub),
+            _ => None,
         }
     }
 }
@@ -1033,6 +1127,7 @@ fn serve_session(mut stream: TcpStream, backend: &Backend, d: &Dispatcher) -> Re
     let ctx = match backend {
         Backend::Live(sim) => SessionCtx::Live(sim),
         Backend::Snapshot { file, t, pool } => SessionCtx::Snapshot(pool.open(file, *t)?),
+        Backend::Follower(f) => SessionCtx::Snapshot(f.open_session()?),
     };
     let mut magic = [0u8; 4];
     loop {

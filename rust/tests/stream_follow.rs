@@ -1,0 +1,321 @@
+//! **Stream-follow suite** — the in-transit epoch streaming contract
+//! (`mpfluid::stream`), exercised over loopback TCP against a live paged
+//! writer:
+//!
+//! * every epoch the subscriber serves is **byte-identical** to the
+//!   writer's file at that epoch (checked both structurally — dataset
+//!   contents must equal the epoch-stamped generator — and, at quiesce
+//!   points, as a whole-file byte compare of source vs. mirror);
+//! * staleness is bounded: once the writer parks, the subscriber drains
+//!   to zero lag within a bounded wait, whatever the kill/reconnect
+//!   history;
+//! * reconnect-resync goes through file catch-up: a freshly connected
+//!   subscriber lands on the current head even though it saw none of the
+//!   intermediate batches — including catch-up copies raced against the
+//!   live flusher;
+//! * a slow consumer under the `Coalesce` policy never stalls the writer
+//!   (commits keep returning while the laggard's queue merges).
+//!
+//! By default a few deterministic iterations run (sub-second — they ride
+//! the normal `cargo test` leg). The dedicated CI job sets
+//! `STREAM_SOAK_SECONDS` to keep drawing randomized kill/reconnect trials
+//! until the budget expires.
+
+use std::io::Read;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mpfluid::h5lite::codec::{self, Codec};
+use mpfluid::h5lite::{Attr, Backing, Dtype, H5File};
+use mpfluid::stream::{EpochPublisher, PublisherOptions, SlowConsumerPolicy, StreamSubscriber};
+use mpfluid::util::rng::Rng;
+
+const PLAIN_ROWS: u64 = 16;
+const PLAIN_ELEMS: usize = 8;
+const CELL_ROWS: u64 = 32;
+const CELL_ELEMS: usize = 16;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("stream_follow_{}_{}", std::process::id(), name));
+    p
+}
+
+/// Extra randomized-trial budget (default: none — deterministic passes
+/// only). The CI job sets `STREAM_SOAK_SECONDS=60`.
+fn extra_budget() -> Duration {
+    std::env::var("STREAM_SOAK_SECONDS")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Duration::from_secs_f64)
+        .unwrap_or(Duration::ZERO)
+}
+
+/// Contiguous dataset contents at epoch `k`.
+fn plain_at(k: u64) -> Vec<f32> {
+    (0..PLAIN_ROWS as usize * PLAIN_ELEMS)
+        .map(|i| k as f32 * 1000.0 + i as f32)
+        .collect()
+}
+
+/// Chunked dataset contents at epoch `k` — smooth so the codec engages and
+/// the stream carries real compressed extents.
+fn cells_at(k: u64) -> Vec<f32> {
+    (0..CELL_ROWS as usize * CELL_ELEMS)
+        .map(|i| k as f32 + (i as f32 * 1e-3).sin())
+        .collect()
+}
+
+/// Writer-thread handshake: the verifier raises `pause`, the writer
+/// finishes its current epoch, drains its flusher and raises `parked`;
+/// dropping `pause` releases it.
+struct WriterCtl {
+    stop: AtomicBool,
+    pause: AtomicBool,
+    parked: AtomicBool,
+    /// Last epoch whose commit returned.
+    epoch: AtomicU64,
+}
+
+/// Spin the writer: epoch-stamped rewrites of a contiguous and a chunked
+/// dataset, committed as fast as the image absorbs them.
+fn writer_loop(mut f: H5File, ctl: Arc<WriterCtl>) {
+    let plain = f.dataset("/g", "plain").unwrap();
+    let cells = f.dataset("/g", "cells").unwrap();
+    let mut k = 0u64;
+    while !ctl.stop.load(Ordering::Relaxed) {
+        if ctl.pause.load(Ordering::Relaxed) {
+            f.wait_durable().unwrap();
+            ctl.parked.store(true, Ordering::SeqCst);
+            while ctl.pause.load(Ordering::Relaxed) && !ctl.stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            ctl.parked.store(false, Ordering::SeqCst);
+            continue;
+        }
+        k += 1;
+        f.write_rows(&plain, 0, &codec::f32s_to_bytes(&plain_at(k))).unwrap();
+        f.write_rows(&cells, 0, &codec::f32s_to_bytes(&cells_at(k))).unwrap();
+        f.ensure_group("/g").attrs.insert("epoch".into(), Attr::I64(k as i64));
+        f.commit().unwrap();
+        ctl.epoch.store(k, Ordering::SeqCst);
+    }
+    f.wait_durable().unwrap();
+}
+
+fn make_writer(path: &std::path::Path) -> H5File {
+    let mut f = H5File::create_backed(path, 1, Backing::Paged).unwrap();
+    f.create_dataset("/g", "plain", Dtype::F32, &[PLAIN_ROWS, PLAIN_ELEMS as u64])
+        .unwrap();
+    f.create_dataset_chunked(
+        "/g",
+        "cells",
+        Dtype::F32,
+        &[CELL_ROWS, CELL_ELEMS as u64],
+        8,
+        Codec::ShuffleDeltaLz,
+    )
+    .unwrap();
+    f.commit().unwrap();
+    f
+}
+
+/// Wait until `cond` holds, failing after `timeout`.
+fn await_true(what: &str, timeout: Duration, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + timeout;
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Park the writer, drain the subscriber, and assert the full contract:
+/// the mirror lands exactly on the writer's last committed epoch, both
+/// datasets read back the epoch generator bit-exact, the mirror verifies
+/// clean, and the mirror file equals the source file byte for byte.
+fn verify_quiesced(
+    ctl: &WriterCtl,
+    publisher: &EpochPublisher,
+    sub: &StreamSubscriber,
+    src: &std::path::Path,
+    mirror: &std::path::Path,
+) -> u64 {
+    ctl.pause.store(true, Ordering::SeqCst);
+    await_true("writer to park", Duration::from_secs(30), || {
+        ctl.parked.load(Ordering::SeqCst)
+    });
+    let k = ctl.epoch.load(Ordering::SeqCst);
+    // bounded staleness: with the writer parked, the subscriber must drain
+    // to the publisher's true head in bounded time (the piggybacked head a
+    // subscriber sees trails by up to one in-flight frame, so compare
+    // against the publisher side, not `lag_seqs`)
+    let head = publisher.stats().head_seq;
+    await_true("subscriber to drain", Duration::from_secs(30), || {
+        sub.dead().is_none() && sub.progress().last_seq >= head
+    });
+    assert_eq!(sub.progress().lag_seqs(), 0, "drained subscriber must report zero lag");
+    let rf = sub.open_file().unwrap();
+    let got_k = match rf.group("/g").unwrap().attrs.get("epoch") {
+        Some(Attr::I64(v)) => *v as u64,
+        other => panic!("epoch attr lost on mirror: {other:?}"),
+    };
+    assert_eq!(got_k, k, "drained mirror must land on the last commit");
+    if k > 0 {
+        let plain = rf.dataset("/g", "plain").unwrap();
+        let got = codec::bytes_to_f32s(&rf.read_rows(&plain, 0, PLAIN_ROWS).unwrap());
+        assert_eq!(got, plain_at(k), "contiguous contents diverge at epoch {k}");
+        let cells = rf.dataset("/g", "cells").unwrap();
+        let got = codec::bytes_to_f32s(&rf.read_rows(&cells, 0, CELL_ROWS).unwrap());
+        assert_eq!(got, cells_at(k), "chunked contents diverge at epoch {k}");
+    }
+    let vr = rf.verify().unwrap();
+    assert!(vr.ok(), "mirror verify at epoch {k}: {:?}", vr.errors);
+    drop(rf);
+    assert_eq!(
+        std::fs::read(src).unwrap(),
+        std::fs::read(mirror).unwrap(),
+        "quiesced mirror must be byte-identical to the source at epoch {k}"
+    );
+    ctl.pause.store(false, Ordering::SeqCst);
+    k
+}
+
+/// One kill/reconnect campaign: `iterations` rounds of connect → follow a
+/// few epochs → either kill the subscriber mid-stream or quiesce-verify.
+fn campaign(name: &str, seed: u64, iterations: u64, deadline: Option<Instant>) {
+    let src = tmp(&format!("{name}_src"));
+    let mirror = tmp(&format!("{name}_mir"));
+    let mut rng = Rng::new(seed);
+
+    let publisher = EpochPublisher::bind("127.0.0.1:0", PublisherOptions::default()).unwrap();
+    let f = make_writer(&src);
+    publisher.attach(&f).unwrap();
+    let ctl = Arc::new(WriterCtl {
+        stop: AtomicBool::new(false),
+        pause: AtomicBool::new(false),
+        parked: AtomicBool::new(false),
+        epoch: AtomicU64::new(0),
+    });
+    let wctl = Arc::clone(&ctl);
+    let writer = std::thread::spawn(move || writer_loop(f, wctl));
+
+    let mut rounds = 0u64;
+    let mut kills = 0u64;
+    let mut verified = 0u64;
+    let mut last_epoch = 0u64;
+    loop {
+        let done = match deadline {
+            Some(d) => Instant::now() >= d && rounds >= 1,
+            None => rounds >= iterations,
+        };
+        if done {
+            break;
+        }
+        rounds += 1;
+        // reconnect-resync every round: fresh file catch-up raced against
+        // the live flusher, then the retained-batch replay
+        let sub = StreamSubscriber::connect(publisher.local_addr(), &src, &mirror).unwrap();
+        let follow = 1 + rng.below(4);
+        sub.wait_for_epochs(follow, Duration::from_secs(30)).unwrap();
+        if rng.below(2) == 0 {
+            // forced disconnect mid-stream: drop without draining
+            kills += 1;
+            drop(sub);
+        } else {
+            last_epoch = verify_quiesced(&ctl, &publisher, &sub, &src, &mirror);
+            verified += 1;
+            drop(sub);
+        }
+    }
+    // end on a verified quiesce so every campaign asserts byte-identity at
+    // least once, whatever the random kill pattern did
+    let sub = StreamSubscriber::connect(publisher.local_addr(), &src, &mirror).unwrap();
+    sub.wait_for_epochs(1, Duration::from_secs(30)).unwrap();
+    last_epoch = verify_quiesced(&ctl, &publisher, &sub, &src, &mirror).max(last_epoch);
+    drop(sub);
+
+    ctl.stop.store(true, Ordering::SeqCst);
+    writer.join().unwrap();
+    publisher.shutdown();
+    println!(
+        "stream-follow[{name}]: {rounds} rounds ({kills} kills, {verified} quiesce-verifies), \
+         final epoch {last_epoch}"
+    );
+    assert!(last_epoch > 0, "campaign never observed a committed epoch");
+    std::fs::remove_file(&src).ok();
+    std::fs::remove_file(&mirror).ok();
+}
+
+#[test]
+fn deterministic_follow_kill_reconnect() {
+    campaign("det", 0x57_2EA4, 4, None);
+}
+
+#[test]
+fn randomized_soak_until_budget() {
+    let budget = extra_budget();
+    if budget.is_zero() {
+        return;
+    }
+    campaign("soak", 0xF0_11_0E4, u64::MAX, Some(Instant::now() + budget));
+}
+
+/// A consumer that reads its HELLO and then nothing: the per-subscriber
+/// queue fills, the `Coalesce` policy merges it, and the writer's commits
+/// keep returning — the slow consumer costs it nothing but the tee.
+#[test]
+fn slow_consumer_coalesces_without_stalling_writer() {
+    let src = tmp("coalesce_src");
+    let publisher = EpochPublisher::bind(
+        "127.0.0.1:0",
+        PublisherOptions {
+            max_queued_batches: 2,
+            policy: SlowConsumerPolicy::Coalesce,
+            metrics: None,
+        },
+    )
+    .unwrap();
+    let mut f = make_writer(&src);
+    publisher.attach(&f).unwrap();
+
+    let mut laggard = TcpStream::connect(publisher.local_addr()).unwrap();
+    let mut hello = [0u8; 28];
+    laggard.read_exact(&mut hello).unwrap();
+    // big contiguous rewrites so the epochs outrun the kernel's socket
+    // buffering and the bounded queue actually engages
+    let big = f
+        .create_dataset("/g", "big", Dtype::F32, &[512, 1024])
+        .unwrap();
+    let payload: Vec<f32> = (0..512 * 1024).map(|i| (i % 251) as f32).collect();
+
+    let epochs = 40u64;
+    let t0 = Instant::now();
+    let mut slowest = Duration::ZERO;
+    for k in 1..=epochs {
+        f.write_rows(&big, 0, &codec::f32s_to_bytes(&payload)).unwrap();
+        f.ensure_group("/g").attrs.insert("epoch".into(), Attr::I64(k as i64));
+        let c0 = Instant::now();
+        f.commit().unwrap();
+        slowest = slowest.max(c0.elapsed());
+    }
+    let elapsed = t0.elapsed();
+    let stats = publisher.stats();
+    assert!(
+        stats.dropped_batches > 0,
+        "the laggard's queue never filled — the leg is not exercising coalesce: {stats:?}"
+    );
+    // "never stalls" made concrete: no single commit-return waited on the
+    // dead-slow socket (a stalled writer would block for the full write
+    // timeout of the laggard's TCP window, i.e. indefinitely here)
+    assert!(
+        slowest < Duration::from_secs(5),
+        "a commit stalled {slowest:?} behind a slow consumer ({epochs} epochs in {elapsed:?})"
+    );
+    drop(laggard);
+    f.wait_durable().unwrap();
+    drop(f);
+    publisher.shutdown();
+    std::fs::remove_file(&src).ok();
+}
