@@ -221,7 +221,7 @@ fn main() {
             bytes_per_client: served / clients as u64,
             shared_hit_rate: hit_rate,
         },
-        Some(mpfluid::h5lite::codec::Codec::ShuffleDeltaLz),
+        Some(mpfluid::h5lite::codec::Codec::SHUFFLE_DELTA_LZ),
     );
     println!(
         "  modelled on JuQueen at hit rate {:.2}: {:.2} GB/s served \

@@ -7,9 +7,11 @@
 //! 2. **Codec v2 table**: stored-byte ratio, encode throughput and
 //!    modelled effective bandwidth per codec on smooth vs turbulent
 //!    synthetic f32 fields — including the PR-1 single-candidate LZ
-//!    baseline and the adaptive per-chunk selector, with the
-//!    ratio-improvement and compress-time multiples the codec-v2
-//!    acceptance criteria name.
+//!    baseline, both entropy backends (range coder and tANS) and the
+//!    adaptive per-chunk selector, with the ratio-improvement and
+//!    compress-time multiples the codec-v2 acceptance criteria name,
+//!    plus the tANS-vs-rc encode/decode throughput comparison the PR-9
+//!    acceptance criteria name (asserted in the `--quick` CI leg).
 //! 3. Raw vs chunk-compressed storage at equal logical bytes: effective
 //!    bandwidth (raw bytes / wall-clock) and the stored-byte ratio of the
 //!    v2 adaptive cell-data path.
@@ -107,16 +109,30 @@ fn codec_v2_table(iters: u32) {
         let lz1_len = baseline().len().min(raw.len());
         let mut adaptive_ratio_imp = 0.0;
         let mut adaptive_time_mult = 0.0;
-        let entries: [(&str, Box<dyn Fn() -> usize + '_>); 4] = [
+        // what the adaptive selector actually picks on this field — also
+        // the codec class the model prices for the adaptive row
+        let adaptive_codec = encode_chunk_adaptive(Codec::SHUFFLE_DELTA_LZ, &raw, 4)
+            .codec
+            .unwrap_or(Codec::SHUFFLE_DELTA_LZ);
+        let entries: [(&str, Box<dyn Fn() -> usize + '_>); 5] = [
             ("lz1 (single-cand)", Box::new(|| lz1_len)),
             (
                 "chain LZ",
-                Box::new(|| Codec::ShuffleDeltaLz.encode(&raw, 4).len().min(raw.len())),
+                Box::new(|| Codec::SHUFFLE_DELTA_LZ.encode(&raw, 4).len().min(raw.len())),
             ),
             (
-                "chain LZ + entropy",
+                "chain LZ + rc",
                 Box::new(|| {
-                    Codec::ShuffleDeltaLzEntropy
+                    Codec::SHUFFLE_DELTA_LZ_RC
+                        .encode(&raw, 4)
+                        .len()
+                        .min(raw.len())
+                }),
+            ),
+            (
+                "chain LZ + tANS",
+                Box::new(|| {
+                    Codec::SHUFFLE_DELTA_LZ_TANS
                         .encode(&raw, 4)
                         .len()
                         .min(raw.len())
@@ -125,7 +141,7 @@ fn codec_v2_table(iters: u32) {
             (
                 "adaptive",
                 Box::new(|| {
-                    let e = encode_chunk_adaptive(Codec::ShuffleDeltaLz, &raw, 4);
+                    let e = encode_chunk_adaptive(Codec::SHUFFLE_DELTA_LZ, &raw, 4);
                     e.stored_or(&raw).len()
                 }),
             ),
@@ -141,11 +157,15 @@ fn codec_v2_table(iters: u32) {
             };
             let stored = stored_of();
             let ratio = stored as f64 / raw.len() as f64;
-            // model codec class: entropy rows price the entropy entry
-            let model_codec = if cname.contains("entropy") || *cname == "adaptive" {
-                Codec::ShuffleDeltaLzEntropy
+            // model codec class: each entropy row prices its own entry
+            let model_codec = if cname.contains("tANS") {
+                Codec::SHUFFLE_DELTA_LZ_TANS
+            } else if cname.contains("rc") {
+                Codec::SHUFFLE_DELTA_LZ_RC
+            } else if *cname == "adaptive" {
+                adaptive_codec
             } else {
-                Codec::ShuffleDeltaLz
+                Codec::SHUFFLE_DELTA_LZ
             };
             let eff = if stored < raw.len() {
                 m.estimate_write_compressed(
@@ -182,13 +202,69 @@ fn codec_v2_table(iters: u32) {
     // the Store fallback: pure noise must cost (almost) nothing extra
     let noise = mpfluid::util::synth::noise_bytes(7, 32768);
     let t_noise = measure(iters, || {
-        std::hint::black_box(encode_chunk_adaptive(Codec::ShuffleDeltaLz, &noise, 4).stored.is_none());
+        std::hint::black_box(encode_chunk_adaptive(Codec::SHUFFLE_DELTA_LZ, &noise, 4).stored.is_none());
     })
     .min;
     println!(
         "  noise: adaptive → Store (raw), selection cost {:.0} MB/s",
         noise.len() as f64 / t_noise / 1e6
     );
+}
+
+/// tANS vs range coder on the canonical turbulent field: the PR-9
+/// acceptance numbers — tANS decode ≥ 2× the coder's decode throughput
+/// and encode no slower, at ≤ 3 % stored-ratio give-back. `assert_ci`
+/// turns the printed comparison into hard assertions (the `--quick`
+/// bench-bitrot leg), so a regression in either backend fails CI instead
+/// of silently skewing a table nobody reads.
+fn tans_vs_rc_throughput(iters: u32, assert_ci: bool) {
+    println!("\n== tANS vs range coder (canonical turbulent field, 32 KiB f32) ==");
+    let raw = codec::f32s_to_bytes(&turbulent_field(8192, TURB_SEED));
+    let mut report = |codec: Codec| {
+        let stored = codec.encode(&raw, 4);
+        let t_enc = measure(iters, || {
+            std::hint::black_box(codec.encode(&raw, 4).len());
+        })
+        .min;
+        let t_dec = measure(iters, || {
+            std::hint::black_box(codec.decode(&stored, 4, raw.len()).unwrap().len());
+        })
+        .min;
+        println!(
+            "{:>26} {:>9} ratio {:>5.3}  enc {:>7.0} MB/s  dec {:>7.0} MB/s",
+            codec.name(),
+            fmt_bytes(stored.len() as u64),
+            stored.len() as f64 / raw.len() as f64,
+            raw.len() as f64 / t_enc / 1e6,
+            raw.len() as f64 / t_dec / 1e6,
+        );
+        (stored.len(), t_enc, t_dec)
+    };
+    let (rc_len, rc_enc, rc_dec) = report(Codec::SHUFFLE_DELTA_LZ_RC);
+    let (tans_len, tans_enc, tans_dec) = report(Codec::SHUFFLE_DELTA_LZ_TANS);
+    let dec_speedup = rc_dec / tans_dec;
+    let enc_speedup = rc_enc / tans_enc;
+    let give_back = tans_len as f64 / rc_len as f64 - 1.0;
+    println!(
+        "  tANS vs rc: decode {dec_speedup:.2}x (target ≥ 2x), encode {enc_speedup:.2}x \
+         (target ≥ 1x), stored-ratio give-back {:.2}% (target ≤ 3%)",
+        give_back * 100.0
+    );
+    if assert_ci {
+        assert!(
+            dec_speedup >= 2.0,
+            "tANS decode {dec_speedup:.2}x rc — acceptance needs ≥ 2x"
+        );
+        assert!(
+            enc_speedup >= 1.0,
+            "tANS encode {enc_speedup:.2}x rc — acceptance needs no slower"
+        );
+        assert!(
+            give_back <= 0.03,
+            "tANS stored-ratio give-back {:.2}% — acceptance needs ≤ 3%",
+            give_back * 100.0
+        );
+    }
 }
 
 /// Raw vs chunk-compressed snapshots at equal logical bytes (this host):
@@ -204,7 +280,7 @@ fn real_compression_comparison() -> (f64, Codec) {
     println!("\n== raw vs chunked+compressed snapshot (depth-2 domain, this host) ==");
     println!(
         "{:>12} {:>12} {:>12} {:>8} {:>14} {:>18}",
-        "layout", "raw bytes", "stored", "ratio", "eff real", "chunks s/l/e"
+        "layout", "raw bytes", "stored", "ratio", "eff real", "chunks s/l/rc/t"
     );
     let mut sc = Scenario::channel(2);
     sc.ranks = 16;
@@ -212,7 +288,7 @@ fn real_compression_comparison() -> (f64, Codec) {
     let io = ParallelIo::new(Machine::local(), IoTuning::default(), 16);
     let dir = std::env::temp_dir();
     let mut measured_ratio = 1.0f64;
-    let mut measured_codec = Codec::ShuffleDeltaLz;
+    let mut measured_codec = Codec::SHUFFLE_DELTA_LZ;
     for (label, opts) in [
         ("contiguous", SnapshotOptions::uncompressed()),
         ("chunked+v2", SnapshotOptions::default()),
@@ -231,16 +307,21 @@ fn real_compression_comparison() -> (f64, Codec) {
         )
         .unwrap();
         if rep.io.stored_bytes < rep.io.bytes {
+            let c = rep.io.codec_chunks;
             measured_ratio = rep.io.stored_bytes as f64 / rep.io.bytes as f64;
-            measured_codec = if rep.io.codec_chunks.entropy >= rep.io.codec_chunks.lz {
-                Codec::ShuffleDeltaLzEntropy
+            measured_codec = if c.rc + c.tans >= c.lz {
+                if c.tans >= c.rc {
+                    Codec::SHUFFLE_DELTA_LZ_TANS
+                } else {
+                    Codec::SHUFFLE_DELTA_LZ_RC
+                }
             } else {
-                Codec::ShuffleDeltaLz
+                Codec::SHUFFLE_DELTA_LZ
             };
         }
         let c = rep.io.codec_chunks;
         println!(
-            "{:>12} {:>12} {:>12} {:>7.2}x {:>14} {:>12}/{}/{}",
+            "{:>12} {:>12} {:>12} {:>7.2}x {:>14} {:>10}/{}/{}/{}",
             label,
             fmt_bytes(rep.io.bytes),
             fmt_bytes(rep.io.stored_bytes),
@@ -248,7 +329,8 @@ fn real_compression_comparison() -> (f64, Codec) {
             fmt_gbps(rep.io.bytes as f64, rep.io.real_seconds),
             c.store,
             c.lz,
-            c.entropy,
+            c.rc,
+            c.tans,
         );
         std::fs::remove_file(&path).ok();
     }
@@ -264,8 +346,9 @@ fn real_compression_comparison() -> (f64, Codec) {
         measured_codec,
     );
     println!(
-        "  JuQueen model @8192 ranks, measured ratio {:.2}x ({measured_codec:?}): raw {:.2} GB/s → compressed {:.2} GB/s",
+        "  JuQueen model @8192 ranks, measured ratio {:.2}x ({}): raw {:.2} GB/s → compressed {:.2} GB/s",
         1.0 / measured_ratio,
+        measured_codec.name(),
         raw.bandwidth / 1e9,
         comp.bandwidth / 1e9
     );
@@ -517,16 +600,18 @@ fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     if quick {
         codec_v2_table(2);
+        tans_vs_rc_throughput(3, true);
         // depth-1 domain: a few MB per snapshot — small enough for CI,
         // big enough for the commit-return / drain split to show
         direct_vs_paged(1, 4);
-        modelled_fig8a(0.63, Codec::ShuffleDeltaLzEntropy);
+        modelled_fig8a(0.63, Codec::SHUFFLE_DELTA_LZ_TANS);
         modelled_fig8b();
         modelled_supermuc();
         return;
     }
     real_write_sweep();
     codec_v2_table(5);
+    tans_vs_rc_throughput(8, false);
     let (lz_ratio, lz_codec) = real_compression_comparison();
     direct_vs_paged(2, 6);
     rewrite_amplification();

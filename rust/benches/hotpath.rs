@@ -132,24 +132,24 @@ fn codec_stage_sweep() {
             println!(
                 "{:>10} {:>22} {:>7.3} {:>12.0} {:>12.0}",
                 fname,
-                format!("{c:?}"),
+                c.name(),
                 enc.len() as f64 / raw.len() as f64,
                 raw.len() as f64 / t_enc / 1e6,
                 raw.len() as f64 / t_dec / 1e6,
             );
         }
         let t_ad = measure(3, || {
-            std::hint::black_box(encode_chunk_adaptive(Codec::ShuffleDeltaLz, &raw, 4));
+            std::hint::black_box(encode_chunk_adaptive(Codec::SHUFFLE_DELTA_LZ, &raw, 4));
         })
         .min;
-        let pick = encode_chunk_adaptive(Codec::ShuffleDeltaLz, &raw, 4);
+        let pick = encode_chunk_adaptive(Codec::SHUFFLE_DELTA_LZ, &raw, 4);
         println!(
             "{:>10} {:>22} {:>7.3} {:>12.0} {:>12}",
             fname,
             "adaptive",
             pick.stored_or(&raw).len() as f64 / raw.len() as f64,
             raw.len() as f64 / t_ad / 1e6,
-            format!("pick={:?}", pick.codec),
+            format!("pick={}", pick.codec.map_or("store", |c| c.name())),
         );
     }
 }

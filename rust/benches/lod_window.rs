@@ -20,7 +20,7 @@ use mpfluid::metrics::names;
 use mpfluid::pario::ParallelIo;
 use mpfluid::tree::BBox;
 use mpfluid::util::{bench::measure, fmt_bytes};
-use mpfluid::window::{self, SnapshotReader};
+use mpfluid::window::SnapshotReader;
 
 /// Cell-data bytes of one grid row.
 const RB: u64 = ROW_BYTES;
@@ -99,20 +99,23 @@ fn main() {
         }
     }
 
-    // == per-call free function vs. session (ISSUE 5 acceptance table) ====
-    // the same zoom sequence, issued (a) through the deprecated per-call
-    // shim — which re-opens the file and rebuilds the LodIndex per query —
-    // and (b) through one session. The index-build counts come from the
-    // session metrics; the shim necessarily pays one build per call.
+    // == per-call session vs. long-lived session (ISSUE 5 acceptance) ====
+    // the same zoom sequence, issued (a) through a throwaway session per
+    // query — the one-shot pattern that replaced the removed PR-5 shims,
+    // paying a file re-open and a LodIndex rebuild every call — and (b)
+    // through one session. The index-build counts come from the session
+    // metrics; the per-call path necessarily pays one build per query.
     let zoom_seq: Vec<(&BBox, u64)> = rois
         .iter()
         .flat_map(|(_, roi)| budgets.iter().map(move |(_, b)| (roi, *b)))
         .collect();
     let reps = 5u32;
-    #[allow(deprecated)]
     let per_call = measure(reps, || {
         for &(roi, budget) in &zoom_seq {
-            window::offline_window_budgeted(&f, 0.0, roi, budget).unwrap();
+            SnapshotReader::open(&f, 0.0)
+                .unwrap()
+                .budgeted(roi, budget)
+                .unwrap();
         }
     });
     let session_reader = SnapshotReader::open(&f, 0.0).unwrap();

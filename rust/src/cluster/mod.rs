@@ -27,29 +27,35 @@
 
 use std::fmt;
 
-use crate::h5lite::codec::Codec;
+use crate::h5lite::codec::{Codec, Entropy};
 
 /// Per-aggregator chunk-codec throughput (bytes/s of raw input), one
 /// calibration entry per codec v2 pipeline class: the LZ-family pipelines
-/// (hash-chain matcher + filters) and the LZ + range-coder entropy
-/// pipelines, which trade ~2.5× the core time for the extra ratio.
+/// (hash-chain matcher + filters), the LZ + range-coder pipelines (which
+/// trade ~2.5× the core time for the extra ratio), and the LZ + tANS
+/// pipelines (table-driven shift/add coding, ~2× the range coder's
+/// throughput for nearly the same ratio). Three entries is the contract:
+/// [`CompressBw::for_codec`] dispatches on [`Codec::entropy`], so adding
+/// an entropy backend means adding a calibration entry here.
 /// `f64::INFINITY` = not modelled (the local machine measures the real
 /// codec instead).
 #[derive(Clone, Copy, Debug)]
 pub struct CompressBw {
-    /// `Lz` / `ShuffleLz` / `ShuffleDeltaLz`.
+    /// `LZ` / `SHUFFLE_LZ` / `SHUFFLE_DELTA_LZ`.
     pub lz: f64,
-    /// `LzEntropy` / `ShuffleLzEntropy` / `ShuffleDeltaLzEntropy`.
-    pub entropy: f64,
+    /// `LZ_RC` / `SHUFFLE_LZ_RC` / `SHUFFLE_DELTA_LZ_RC`.
+    pub rc: f64,
+    /// `LZ_TANS` / `SHUFFLE_LZ_TANS` / `SHUFFLE_DELTA_LZ_TANS`.
+    pub tans: f64,
 }
 
 impl CompressBw {
     /// The calibration entry pricing `codec`'s pipeline class.
     pub fn for_codec(&self, codec: Codec) -> f64 {
-        if codec.has_entropy() {
-            self.entropy
-        } else {
-            self.lz
+        match codec.entropy() {
+            Entropy::None => self.lz,
+            Entropy::RangeCoder => self.rc,
+            Entropy::Tans => self.tans,
         }
     }
 
@@ -57,7 +63,8 @@ impl CompressBw {
     pub fn unmodelled() -> CompressBw {
         CompressBw {
             lz: f64::INFINITY,
-            entropy: f64::INFINITY,
+            rc: f64::INFINITY,
+            tans: f64::INFINITY,
         }
     }
 }
@@ -293,11 +300,14 @@ impl Machine {
             lock_cost: 0.8e-3,
             misalign_penalty: 0.07,
             indep_contention: 0.012,
-            // one A2 core: hash-chain LZ pipeline, and the binary range
-            // coder at ~2.6× the core time per raw byte
+            // one A2 core: hash-chain LZ pipeline, the binary range coder
+            // at ~2.6× the core time per raw byte, and tANS at half the
+            // coder's cost (table lookups + shifts, no multiplies/renorm
+            // branches — kind to the in-order A2)
             compress_bw: CompressBw {
                 lz: 0.9e9,
-                entropy: 0.35e9,
+                rc: 0.35e9,
+                tans: 0.7e9,
             },
             fold_bw: 2.0e9, // memory-bound 8:1 averaging on an A2 core
             // the flusher drains through the same I/O-drawer links the
@@ -323,11 +333,12 @@ impl Machine {
             lock_cost: 0.5e-3,
             misalign_penalty: 0.05,
             indep_contention: 0.004,
-            // Sandy Bridge core: LZ pipeline, and the range coder at
-            // ~2.5× the per-byte cost
+            // Sandy Bridge core: LZ pipeline, the range coder at ~2.5×
+            // the per-byte cost, tANS at twice the coder's throughput
             compress_bw: CompressBw {
                 lz: 2.5e9,
-                entropy: 1.0e9,
+                rc: 1.0e9,
+                tans: 2.0e9,
             },
             fold_bw: 6.0e9, // Sandy Bridge core, streaming averages
             flush_bw: 30e9, // drains at the job's GPFS share
@@ -570,7 +581,10 @@ impl Machine {
     /// codec; decode and serve pipeline across the node's cores, so the
     /// exposed cost is their maximum. LZ *decode* runs ~3× the encode
     /// calibration (match copy vs. match search); the range coder is
-    /// roughly symmetric, so the entropy entry is used as-is.
+    /// roughly symmetric, so its entry is used as-is; tANS decode is the
+    /// backend's fast direction (a table walk with no divisions), priced
+    /// at 2× its encode entry — the asymmetry the adaptive selector's
+    /// decode-speed preference banks on.
     pub fn estimate_fanout_read(
         &self,
         w: &ReadWorkload,
@@ -579,9 +593,10 @@ impl Machine {
         let total = (w.clients * w.bytes_per_client) as f64;
         let hit = w.shared_hit_rate.clamp(0.0, 1.0);
         let decoded = total * (1.0 - hit);
-        let decode_bw = match codec {
-            Some(c) if c.has_entropy() => self.compress_bw.entropy,
-            Some(_) => self.compress_bw.lz * 3.0,
+        let decode_bw = match codec.map(|c| c.entropy()) {
+            Some(Entropy::RangeCoder) => self.compress_bw.rc,
+            Some(Entropy::Tans) => self.compress_bw.tans * 2.0,
+            Some(Entropy::None) => self.compress_bw.lz * 3.0,
             None => f64::INFINITY,
         };
         let cores = self.ranks_per_node.max(1) as f64;
@@ -819,7 +834,7 @@ mod tests {
             &w,
             &IoTuning::default(),
             w.total_bytes * 2 / 5,
-            Codec::ShuffleDeltaLz,
+            Codec::SHUFFLE_DELTA_LZ,
         );
         assert!(comp.bandwidth > raw.bandwidth, "{comp} vs {raw}");
         assert_eq!(comp.stored_bytes, w.total_bytes * 2 / 5);
@@ -840,7 +855,7 @@ mod tests {
         };
         let raw = m.estimate_write(&w, &t);
         let comp =
-            m.estimate_write_compressed(&w, &t, w.total_bytes * 2 / 5, Codec::ShuffleDeltaLz);
+            m.estimate_write_compressed(&w, &t, w.total_bytes * 2 / 5, Codec::SHUFFLE_DELTA_LZ);
         assert!(comp.t_compress > 0.0);
         // serial: seconds includes both the (smaller) stream and the codec
         let expect = comp.t_stream + comp.t_compress + comp.t_wind;
@@ -873,7 +888,7 @@ mod tests {
             &w,
             &IoTuning::default(),
             w.total_bytes,
-            Codec::ShuffleDeltaLz,
+            Codec::SHUFFLE_DELTA_LZ,
         );
         assert!(comp.seconds >= raw.seconds - 1e-12, "{comp} vs {raw}");
     }
@@ -888,23 +903,28 @@ mod tests {
         let w = paper_depth6_workload(8192);
         let t = IoTuning::default();
         let stored = w.total_bytes / 2;
-        let lz = m.estimate_write_compressed(&w, &t, stored, Codec::ShuffleDeltaLz);
-        let ent = m.estimate_write_compressed(&w, &t, stored, Codec::ShuffleDeltaLzEntropy);
+        let lz = m.estimate_write_compressed(&w, &t, stored, Codec::SHUFFLE_DELTA_LZ);
+        let ent = m.estimate_write_compressed(&w, &t, stored, Codec::SHUFFLE_DELTA_LZ_RC);
         assert!(ent.t_compress > 2.0 * lz.t_compress, "{ent} vs {lz}");
         assert!(ent.seconds >= lz.seconds, "{ent} vs {lz}");
-        assert_eq!(
-            m.compress_bw.for_codec(Codec::LzEntropy),
-            m.compress_bw.entropy
+        // tANS sits between: ~2× the coder's throughput, still above LZ cost
+        let tans = m.estimate_write_compressed(&w, &t, stored, Codec::SHUFFLE_DELTA_LZ_TANS);
+        assert!(tans.t_compress > lz.t_compress, "{tans} vs {lz}");
+        assert!(
+            (ent.t_compress / tans.t_compress - 2.0).abs() < 0.1,
+            "{ent} vs {tans}"
         );
-        assert_eq!(m.compress_bw.for_codec(Codec::Lz), m.compress_bw.lz);
+        assert_eq!(m.compress_bw.for_codec(Codec::LZ_RC), m.compress_bw.rc);
+        assert_eq!(m.compress_bw.for_codec(Codec::LZ_TANS), m.compress_bw.tans);
+        assert_eq!(m.compress_bw.for_codec(Codec::LZ), m.compress_bw.lz);
         // and when the entropy stage buys a better ratio, the effective
         // bandwidth can still come out ahead despite the slower codec
-        let lz_ratio = m.estimate_write_compressed(&w, &t, w.total_bytes / 2, Codec::ShuffleDeltaLz);
+        let lz_ratio = m.estimate_write_compressed(&w, &t, w.total_bytes / 2, Codec::SHUFFLE_DELTA_LZ);
         let ent_ratio = m.estimate_write_compressed(
             &w,
             &t,
             (w.total_bytes as f64 * 0.43) as u64,
-            Codec::ShuffleDeltaLzEntropy,
+            Codec::SHUFFLE_DELTA_LZ_RC,
         );
         assert!(
             ent_ratio.bandwidth > 0.0 && lz_ratio.bandwidth > 0.0,
@@ -921,7 +941,7 @@ mod tests {
         let w = paper_depth6_workload(8192);
         let t = IoTuning::default();
         let sync = m.estimate_write(&w, &t);
-        let paged = m.estimate_write_paged(&w, &t, w.total_bytes, Codec::ShuffleDeltaLz);
+        let paged = m.estimate_write_paged(&w, &t, w.total_bytes, Codec::SHUFFLE_DELTA_LZ);
         assert!(paged.seconds <= sync.seconds + 1e-9, "{paged} vs {sync}");
         assert!(paged.bandwidth >= sync.bandwidth - 1e-9, "{paged} vs {sync}");
         assert_eq!(paged.t_stream, 0.0, "the image absorbs the stream phase");
@@ -938,7 +958,7 @@ mod tests {
         // compression shrinks the flushed volume, so the paged-compressed
         // estimate beats paged-raw on a flush-bound machine
         let comp =
-            m.estimate_write_paged(&w, &t, w.total_bytes * 2 / 5, Codec::ShuffleDeltaLz);
+            m.estimate_write_paged(&w, &t, w.total_bytes * 2 / 5, Codec::SHUFFLE_DELTA_LZ);
         assert!(comp.seconds < paged.seconds, "{comp} vs {paged}");
     }
 
@@ -953,7 +973,7 @@ mod tests {
             n_datasets: 7,
             n_grids: 100,
         };
-        let paged = m.estimate_write_paged(&w, &IoTuning::default(), 1 << 30, Codec::Lz);
+        let paged = m.estimate_write_paged(&w, &IoTuning::default(), 1 << 30, Codec::LZ);
         assert_eq!(paged.t_flush, 0.0);
         assert!((paged.seconds - paged.t_aggregate).abs() < 1e-12, "{paged}");
     }
@@ -966,13 +986,13 @@ mod tests {
             bytes_per_client: 1 << 28,
             shared_hit_rate: 0.0,
         };
-        let cold = m.estimate_fanout_read(&w0, Some(Codec::ShuffleDeltaLz));
+        let cold = m.estimate_fanout_read(&w0, Some(Codec::SHUFFLE_DELTA_LZ));
         let warm = m.estimate_fanout_read(
             &ReadWorkload {
                 shared_hit_rate: 63.0 / 64.0,
                 ..w0
             },
-            Some(Codec::ShuffleDeltaLz),
+            Some(Codec::SHUFFLE_DELTA_LZ),
         );
         // perfectly overlapping traffic decodes each chunk once, not 64×
         assert!(
@@ -982,15 +1002,21 @@ mod tests {
         assert_eq!(warm.decoded_bytes, 1 << 28);
         assert!(warm.seconds <= cold.seconds);
         assert!(warm.bandwidth >= cold.bandwidth);
-        // the entropy pipeline burns more core time per decoded byte than
-        // the LZ fast path
-        let ent = m.estimate_fanout_read(&w0, Some(Codec::ShuffleDeltaLzEntropy));
+        // the entropy pipelines burn more core time per decoded byte than
+        // the LZ fast path, and tANS decodes well ahead of the range coder
+        let ent = m.estimate_fanout_read(&w0, Some(Codec::SHUFFLE_DELTA_LZ_RC));
         assert!(ent.t_decode > cold.t_decode, "{ent:?} vs {cold:?}");
+        let tans = m.estimate_fanout_read(&w0, Some(Codec::SHUFFLE_DELTA_LZ_TANS));
+        assert!(
+            tans.t_decode * 2.0 <= ent.t_decode,
+            "{tans:?} vs {ent:?}"
+        );
+        assert!(tans.t_decode > cold.t_decode * 0.1, "tans decode still modelled");
         // uncompressed snapshots and the local machine model no decode cost
         assert_eq!(m.estimate_fanout_read(&w0, None).t_decode, 0.0);
         assert_eq!(
             Machine::local()
-                .estimate_fanout_read(&w0, Some(Codec::Lz))
+                .estimate_fanout_read(&w0, Some(Codec::LZ))
                 .t_decode,
             0.0
         );

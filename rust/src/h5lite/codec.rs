@@ -187,173 +187,322 @@ pub fn bytes_to_f64s(b: &[u8]) -> Vec<f64> {
 //   values become long near-constant runs.
 // * **delta** — byte-wise wrapping first difference applied after the
 //   shuffle; near-constant planes become runs of zeros, which LZ collapses.
-// * **entropy** — an optional second stage over the LZ token stream: an
-//   adaptive binary range coder (LZMA-style, 11-bit probabilities) with
-//   separate order-0 bit-tree models for control bytes, distance bytes and
-//   literals (literals additionally contexted on the previous literal's top
-//   [`LIT_PREV_BITS`] bits — the zstd-style literal/length/offset stream
-//   split). Byte planes whose post-filter Shannon entropy is ≥ 7.2 bits
-//   (the incompressible low-mantissa planes of turbulent f32 fields)
-//   **bypass** the coder into a raw side buffer, so the range coder never
+// * **entropy** — an optional second stage over the LZ token stream, with
+//   two selectable backends behind one frame header:
+//   - **range coder** ([`Entropy::RangeCoder`]) — an adaptive binary range
+//     coder (LZMA-style, 11-bit probabilities) with separate order-0
+//     bit-tree models for control bytes, distance bytes and literals
+//     (literals additionally contexted on the previous literal's top
+//     [`LIT_PREV_BITS`] bits — the zstd-style literal/length/offset stream
+//     split). Best ratio; per-bit adaptive updates make it the most
+//     expensive stage per byte.
+//   - **tANS** ([`Entropy::Tans`]) — a static table-driven asymmetric
+//     numeral system (FSE-style) over the same four token streams, traded
+//     for decode speed: one table lookup plus a bulk bit read per symbol
+//     instead of eight adaptive binary decisions per byte. See the frame
+//     layout below.
+//   Either way, byte planes whose post-filter Shannon entropy is ≥ 7.2
+//   bits (the incompressible low-mantissa planes of turbulent f32 fields)
+//   **bypass** the coder into a raw side buffer, so neither backend
 //   wastes time (or expands) on white noise.
 //
 // ## Entropy frame layout
 //
 // ```text
-// [lz_len u32] [plane_mask u8] [side_len u32] [side bytes…] [rc bytes…]
+// [lz_len u32] [plane_mask u8] [side_len u32] [side bytes…] [payload…]
 // ```
 //
-// `lz_len` is the size of the LZ token stream the range coder reproduces;
-// `plane_mask` bit `p` set means literals whose reconstructed position
-// falls in byte plane `p` live verbatim in the side buffer; the rc stream
-// is the range coder's output over everything else. The decoder walks
-// tokens, pulling each literal from the side buffer or the coder as the
-// mask dictates, then runs the normal LZ + filter inversion.
+// `lz_len` is the size of the LZ token stream the entropy stage
+// reproduces; `plane_mask` bit `p` set means literals whose reconstructed
+// position falls in byte plane `p` live verbatim in the side buffer; the
+// payload is the backend's output over everything else (the chunk's codec
+// byte says which backend). The decoder walks tokens, pulling each
+// literal from the side buffer or the coder as the mask dictates, then
+// runs the normal LZ + filter inversion.
+//
+// ## tANS payload layout
+//
+// ```text
+// [x0 u16] [x1 u16] [stream0 table] … [stream3 table] [bitstream…]
+// ```
+//
+// The four streams are ctrl, dist-lo, dist-hi, literal (in that order).
+// `x0`/`x1` are the encoder's final states minus `L` — the decoder's
+// *start* states for the two interleaved decode lanes (coded symbols
+// alternate lanes by their coded-symbol index). Each table section is one
+// flag byte: `0` = stream absent, `2` = stream stored **raw** (its
+// symbols ride the bitstream as plain 8-bit values — chosen whenever the
+// table plus coded bits would cost more, e.g. the near-uniform dist-lo
+// stream), `1` = coded, followed by a 32-byte symbol-presence bitmap and
+// the packed 12-bit `frequency - 1` values of the present symbols
+// (normalized to sum exactly `L` = 4096). The bitstream is MSB-first;
+// symbols were encoded in reverse so the decoder reads strictly forward.
+// Decoding must return both lanes to the encoder's start state (0) — a
+// cheap whole-frame integrity check on top of the chunk checksum.
 
-/// Per-chunk codec of a v2 chunked dataset (stored in the metadata footer).
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
-pub enum Codec {
-    /// No transformation: chunk extents hold raw little-endian bytes.
-    Raw,
-    /// LZ byte compression only.
-    Lz,
-    /// Byte shuffle (by element size), then LZ.
-    ShuffleLz,
-    /// Byte shuffle, byte-wise delta, then LZ — the default for the heavy
-    /// f32 cell-data datasets.
-    ShuffleDeltaLz,
-    /// LZ, then the range-coder entropy stage.
-    LzEntropy,
-    /// Shuffle, LZ, then the entropy stage.
-    ShuffleLzEntropy,
-    /// Shuffle, delta, LZ, then the entropy stage — what the adaptive
-    /// selector stores for cell-data chunks whose token stream is worth
-    /// entropy-coding.
-    ShuffleDeltaLzEntropy,
+/// Byte-level pre-filter of a chunk pipeline (applied before the LZ core).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Filter {
+    /// No pre-filter: the LZ core sees the raw little-endian bytes.
+    None,
+    /// HDF5-style byte shuffle by element size.
+    Shuffle,
+    /// Byte shuffle, then byte-wise wrapping delta — the default for the
+    /// heavy f32 cell-data datasets.
+    ShuffleDelta,
 }
 
-/// All codec variants, for sweeps in tests and benches.
-pub const ALL_CODECS: [Codec; 7] = [
-    Codec::Raw,
-    Codec::Lz,
-    Codec::ShuffleLz,
-    Codec::ShuffleDeltaLz,
-    Codec::LzEntropy,
-    Codec::ShuffleLzEntropy,
-    Codec::ShuffleDeltaLzEntropy,
+/// Entropy stage of a chunk pipeline (applied after the LZ core).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Entropy {
+    /// No entropy stage: the LZ token stream is stored as-is.
+    None,
+    /// Adaptive binary range coder (LZMA-style). Best ratio, slowest.
+    RangeCoder,
+    /// Static table-driven ANS. Slightly worse ratio, much faster decode.
+    Tans,
+}
+
+/// Per-chunk codec of a v2 chunked dataset (stored in the metadata
+/// footer): either `Raw` (no pipeline at all) or a composable
+/// `filter → LZ → entropy` pipeline descriptor. The legacy flat names
+/// survive as associated constants ([`CodecSpec::LZ`],
+/// [`CodecSpec::SHUFFLE_DELTA_LZ_RC`], …) so call sites read like the old
+/// enum while tests and sweeps can iterate the two axes independently.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum CodecSpec {
+    /// No transformation: chunk extents hold raw little-endian bytes.
+    Raw,
+    /// The `filter → LZ core → entropy` pipeline.
+    Pipe { filter: Filter, entropy: Entropy },
+}
+
+/// The historical name for the per-chunk codec descriptor; everything
+/// downstream (chunk index, dataset layout, machine model) uses it.
+pub type Codec = CodecSpec;
+
+/// All codec variants in `code()` order, for sweeps in tests and benches.
+pub const ALL_CODECS: [Codec; 10] = [
+    CodecSpec::Raw,
+    CodecSpec::LZ,
+    CodecSpec::SHUFFLE_LZ,
+    CodecSpec::SHUFFLE_DELTA_LZ,
+    CodecSpec::LZ_RC,
+    CodecSpec::SHUFFLE_LZ_RC,
+    CodecSpec::SHUFFLE_DELTA_LZ_RC,
+    CodecSpec::LZ_TANS,
+    CodecSpec::SHUFFLE_LZ_TANS,
+    CodecSpec::SHUFFLE_DELTA_LZ_TANS,
 ];
 
-impl Codec {
+impl CodecSpec {
+    /// LZ byte compression only (legacy `Lz`, code 1).
+    pub const LZ: Codec = CodecSpec::Pipe {
+        filter: Filter::None,
+        entropy: Entropy::None,
+    };
+    /// Byte shuffle, then LZ (legacy `ShuffleLz`, code 2).
+    pub const SHUFFLE_LZ: Codec = CodecSpec::Pipe {
+        filter: Filter::Shuffle,
+        entropy: Entropy::None,
+    };
+    /// Shuffle, delta, then LZ (legacy `ShuffleDeltaLz`, code 3).
+    pub const SHUFFLE_DELTA_LZ: Codec = CodecSpec::Pipe {
+        filter: Filter::ShuffleDelta,
+        entropy: Entropy::None,
+    };
+    /// LZ, then the range coder (legacy `LzEntropy`, code 4).
+    pub const LZ_RC: Codec = CodecSpec::Pipe {
+        filter: Filter::None,
+        entropy: Entropy::RangeCoder,
+    };
+    /// Shuffle, LZ, range coder (legacy `ShuffleLzEntropy`, code 5).
+    pub const SHUFFLE_LZ_RC: Codec = CodecSpec::Pipe {
+        filter: Filter::Shuffle,
+        entropy: Entropy::RangeCoder,
+    };
+    /// Shuffle, delta, LZ, range coder (legacy `ShuffleDeltaLzEntropy`,
+    /// code 6) — the best-ratio pipeline for cell data.
+    pub const SHUFFLE_DELTA_LZ_RC: Codec = CodecSpec::Pipe {
+        filter: Filter::ShuffleDelta,
+        entropy: Entropy::RangeCoder,
+    };
+    /// LZ, then the tANS stage (code 7).
+    pub const LZ_TANS: Codec = CodecSpec::Pipe {
+        filter: Filter::None,
+        entropy: Entropy::Tans,
+    };
+    /// Shuffle, LZ, tANS (code 8).
+    pub const SHUFFLE_LZ_TANS: Codec = CodecSpec::Pipe {
+        filter: Filter::Shuffle,
+        entropy: Entropy::Tans,
+    };
+    /// Shuffle, delta, LZ, tANS (code 9) — what the adaptive selector
+    /// stores for cell-data chunks where the tANS frame lands within
+    /// [`TANS_PREFER_PCT`] of the range coder's.
+    pub const SHUFFLE_DELTA_LZ_TANS: Codec = CodecSpec::Pipe {
+        filter: Filter::ShuffleDelta,
+        entropy: Entropy::Tans,
+    };
+
+    /// The byte stored in the metadata footer. Values 0–6 are
+    /// bit-compatible with the pre-tANS flat enum; 7–9 are the tANS
+    /// family.
     pub fn code(self) -> u8 {
         match self {
-            Codec::Raw => 0,
-            Codec::Lz => 1,
-            Codec::ShuffleLz => 2,
-            Codec::ShuffleDeltaLz => 3,
-            Codec::LzEntropy => 4,
-            Codec::ShuffleLzEntropy => 5,
-            Codec::ShuffleDeltaLzEntropy => 6,
+            CodecSpec::Raw => 0,
+            CodecSpec::Pipe { filter, entropy } => {
+                let f = match filter {
+                    Filter::None => 0,
+                    Filter::Shuffle => 1,
+                    Filter::ShuffleDelta => 2,
+                };
+                let e = match entropy {
+                    Entropy::None => 0,
+                    Entropy::RangeCoder => 1,
+                    Entropy::Tans => 2,
+                };
+                1 + f + 3 * e
+            }
         }
     }
 
     pub fn from_code(c: u8) -> Result<Codec> {
-        Ok(match c {
-            0 => Codec::Raw,
-            1 => Codec::Lz,
-            2 => Codec::ShuffleLz,
-            3 => Codec::ShuffleDeltaLz,
-            4 => Codec::LzEntropy,
-            5 => Codec::ShuffleLzEntropy,
-            6 => Codec::ShuffleDeltaLzEntropy,
-            _ => bail!("h5lite: unknown codec code {c}"),
-        })
+        if c == 0 {
+            return Ok(CodecSpec::Raw);
+        }
+        if c > 9 {
+            bail!("h5lite: unknown codec code {c}");
+        }
+        let filter = match (c - 1) % 3 {
+            0 => Filter::None,
+            1 => Filter::Shuffle,
+            _ => Filter::ShuffleDelta,
+        };
+        let entropy = match (c - 1) / 3 {
+            0 => Entropy::None,
+            1 => Entropy::RangeCoder,
+            _ => Entropy::Tans,
+        };
+        Ok(CodecSpec::Pipe { filter, entropy })
     }
 
-    /// Does this pipeline end in the range-coder entropy stage?
-    pub fn has_entropy(self) -> bool {
-        matches!(
-            self,
-            Codec::LzEntropy | Codec::ShuffleLzEntropy | Codec::ShuffleDeltaLzEntropy
-        )
-    }
-
-    /// The same filter family with the entropy stage appended (`Raw` has no
-    /// token stream to entropy-code and maps to itself).
-    pub fn with_entropy(self) -> Codec {
+    /// Short stable label for benches and reports.
+    pub fn name(self) -> &'static str {
         match self {
-            Codec::Raw => Codec::Raw,
-            Codec::Lz | Codec::LzEntropy => Codec::LzEntropy,
-            Codec::ShuffleLz | Codec::ShuffleLzEntropy => Codec::ShuffleLzEntropy,
-            Codec::ShuffleDeltaLz | Codec::ShuffleDeltaLzEntropy => {
-                Codec::ShuffleDeltaLzEntropy
-            }
+            CodecSpec::Raw => "raw",
+            CodecSpec::Pipe { filter, entropy } => match (filter, entropy) {
+                (Filter::None, Entropy::None) => "lz",
+                (Filter::Shuffle, Entropy::None) => "shuffle+lz",
+                (Filter::ShuffleDelta, Entropy::None) => "shuffle+delta+lz",
+                (Filter::None, Entropy::RangeCoder) => "lz+rc",
+                (Filter::Shuffle, Entropy::RangeCoder) => "shuffle+lz+rc",
+                (Filter::ShuffleDelta, Entropy::RangeCoder) => "shuffle+delta+lz+rc",
+                (Filter::None, Entropy::Tans) => "lz+tans",
+                (Filter::Shuffle, Entropy::Tans) => "shuffle+lz+tans",
+                (Filter::ShuffleDelta, Entropy::Tans) => "shuffle+delta+lz+tans",
+            },
+        }
+    }
+
+    /// This pipeline's pre-filter (`Raw` has no pipeline: `Filter::None`).
+    pub fn filter_stage(self) -> Filter {
+        match self {
+            CodecSpec::Raw => Filter::None,
+            CodecSpec::Pipe { filter, .. } => filter,
+        }
+    }
+
+    /// This pipeline's entropy backend (`Raw` has none).
+    pub fn entropy(self) -> Entropy {
+        match self {
+            CodecSpec::Raw => Entropy::None,
+            CodecSpec::Pipe { entropy, .. } => entropy,
+        }
+    }
+
+    /// Does this pipeline end in an entropy stage (either backend)?
+    pub fn has_entropy(self) -> bool {
+        self.entropy() != Entropy::None
+    }
+
+    /// The same filter family with the given entropy backend (`Raw` has no
+    /// token stream to entropy-code and maps to itself).
+    pub fn with_entropy(self, entropy: Entropy) -> Codec {
+        match self {
+            CodecSpec::Raw => CodecSpec::Raw,
+            CodecSpec::Pipe { filter, .. } => CodecSpec::Pipe { filter, entropy },
         }
     }
 
     /// The same filter family without the entropy stage.
     pub fn without_entropy(self) -> Codec {
-        match self {
-            Codec::Raw => Codec::Raw,
-            Codec::Lz | Codec::LzEntropy => Codec::Lz,
-            Codec::ShuffleLz | Codec::ShuffleLzEntropy => Codec::ShuffleLz,
-            Codec::ShuffleDeltaLz | Codec::ShuffleDeltaLzEntropy => Codec::ShuffleDeltaLz,
-        }
+        self.with_entropy(Entropy::None)
     }
 
     /// Apply this pipeline's byte filters (shuffle / delta) only.
     fn filter(self, raw: &[u8], elem_size: usize) -> Vec<u8> {
-        match self.without_entropy() {
-            Codec::Raw | Codec::Lz => raw.to_vec(),
-            Codec::ShuffleLz => shuffle(raw, elem_size),
-            Codec::ShuffleDeltaLz => {
+        match self.filter_stage() {
+            Filter::None => raw.to_vec(),
+            Filter::Shuffle => shuffle(raw, elem_size),
+            Filter::ShuffleDelta => {
                 let mut s = shuffle(raw, elem_size);
                 delta_encode(&mut s);
                 s
             }
-            _ => unreachable!("without_entropy() never returns an entropy codec"),
         }
     }
 
-    /// Invert [`Codec::filter`].
+    /// Invert [`CodecSpec::filter`].
     fn unfilter(self, mut filtered: Vec<u8>, elem_size: usize) -> Vec<u8> {
-        match self.without_entropy() {
-            Codec::Raw | Codec::Lz => filtered,
-            Codec::ShuffleLz => unshuffle(&filtered, elem_size),
-            Codec::ShuffleDeltaLz => {
+        match self.filter_stage() {
+            Filter::None => filtered,
+            Filter::Shuffle => unshuffle(&filtered, elem_size),
+            Filter::ShuffleDelta => {
                 delta_decode(&mut filtered);
                 unshuffle(&filtered, elem_size)
             }
-            _ => unreachable!("without_entropy() never returns an entropy codec"),
         }
     }
 
     /// Apply the filter pipeline to one raw chunk. `elem_size` is the
     /// dataset's element width (the shuffle stride).
     pub fn encode(self, raw: &[u8], elem_size: usize) -> Vec<u8> {
-        if self == Codec::Raw {
+        if self == CodecSpec::Raw {
             return raw.to_vec();
         }
         let filtered = self.filter(raw, elem_size);
         let lz = lz_compress_chain(&filtered, LZ_CHAIN_DEPTH);
-        if !self.has_entropy() {
-            return lz;
+        match self.entropy() {
+            Entropy::None => lz,
+            Entropy::RangeCoder => {
+                let mask = bypass_mask(&filtered, elem_size, raw.len());
+                entropy_encode_tokens(&lz, elem_size, raw.len(), mask)
+            }
+            Entropy::Tans => {
+                let mask = bypass_mask(&filtered, elem_size, raw.len());
+                tans_encode_tokens(&lz, elem_size, raw.len(), mask)
+            }
         }
-        let mask = bypass_mask(&filtered, elem_size, raw.len());
-        entropy_encode_tokens(&lz, elem_size, raw.len(), mask)
     }
 
-    /// Invert [`Codec::encode`]. `raw_len` is the expected decoded length
-    /// (known from the chunk index); a mismatch is a hard error.
+    /// Invert [`CodecSpec::encode`]. `raw_len` is the expected decoded
+    /// length (known from the chunk index); a mismatch is a hard error.
     pub fn decode(self, stored: &[u8], elem_size: usize, raw_len: usize) -> Result<Vec<u8>> {
-        let out = if self == Codec::Raw {
+        let out = if self == CodecSpec::Raw {
             stored.to_vec()
         } else {
             let lz_stream;
-            let tokens = if self.has_entropy() {
-                lz_stream = entropy_decode_tokens(stored, elem_size, raw_len)?;
-                &lz_stream[..]
-            } else {
-                stored
+            let tokens = match self.entropy() {
+                Entropy::None => stored,
+                Entropy::RangeCoder => {
+                    lz_stream = entropy_decode_tokens(stored, elem_size, raw_len)?;
+                    &lz_stream[..]
+                }
+                Entropy::Tans => {
+                    lz_stream = tans_decode_tokens(stored, elem_size, raw_len)?;
+                    &lz_stream[..]
+                }
             };
             // the filters are length-preserving, so the filtered buffer the
             // LZ stream reproduces is exactly raw_len bytes
@@ -404,16 +553,20 @@ impl ChunkEncoding {
 }
 
 /// Adaptive per-chunk codec selection (codec v2): run `base`'s filters and
-/// the hash-chain LZ once, then decide between `Store` (raw bytes),
-/// the LZ stream, and the LZ + entropy frame. The entropy stage is gated
-/// by a **trial**: the range coder runs over the first
-/// [`TRIAL_RC_INPUT`] coder-input bytes of the token stream and the full
-/// cost is extrapolated — incompressible chunks never pay the full
-/// entropy stage, and chunks whose trial predicts no win skip it
-/// entirely. Both chunk writers — [`crate::h5lite::H5File`]'s
-/// read-modify-write path and the pario aggregators — share this, so the
-/// store-smaller-of / checksum-over-raw / per-chunk-codec-byte format
-/// invariants cannot drift apart.
+/// the hash-chain LZ once, then decide between `Store` (raw bytes), the
+/// LZ stream, the LZ + range-coder frame and the LZ + tANS frame. Each
+/// entropy backend is gated by a cheap cost estimate before its real
+/// encoding pass: the range coder runs a **trial** over the first
+/// [`TRIAL_RC_INPUT`] coder-input bytes and extrapolates, while tANS —
+/// whose frame size is a near-exact function of the token histograms —
+/// is predicted from one histogram walk. Incompressible chunks never pay
+/// a full entropy stage. When both backends win over the LZ stream, tANS
+/// is preferred while its frame stays within [`TANS_PREFER_PCT`] percent
+/// of the range coder's: decode speed counts double now that the fan-out
+/// server amortises decodes across many clients. Both chunk writers —
+/// [`crate::h5lite::H5File`]'s read-modify-write path and the pario
+/// aggregators — share this, so the store-smaller-of / checksum-over-raw /
+/// per-chunk-codec-byte format invariants cannot drift apart.
 pub fn encode_chunk_adaptive(base: Codec, raw: &[u8], elem_size: usize) -> ChunkEncoding {
     let checksum = checksum32(raw);
     if base == Codec::Raw || raw.is_empty() {
@@ -427,9 +580,11 @@ pub fn encode_chunk_adaptive(base: Codec, raw: &[u8], elem_size: usize) -> Chunk
     let filtered = lz_codec.filter(raw, elem_size);
     let lz = lz_compress_chain(&filtered, LZ_CHAIN_DEPTH);
     let best_len = raw.len().min(lz.len());
-    // entropy trial: predict the frame size from a bounded prefix run
     let mask = bypass_mask(&filtered, elem_size, raw.len());
     let (rc_total, side_total) = rc_input_total(&lz, elem_size, raw.len(), mask);
+    // range-coder candidate: predict the frame size from a bounded prefix
+    // run, then encode for real only when the trial promises a win
+    let mut rc_frame: Option<Vec<u8>> = None;
     if rc_total > 0 && rc_total <= TRIAL_RC_INPUT {
         // the whole stream fits the trial budget: code it once and use the
         // result directly — same acceptance gate as the extrapolated path
@@ -437,11 +592,7 @@ pub fn encode_chunk_adaptive(base: Codec, raw: &[u8], elem_size: usize) -> Chunk
         let (rc, side, _) = entropy_encode_inner(&lz, elem_size, raw.len(), mask, None);
         let frame_len = ENTROPY_HEADER_LEN + side.len() + rc.len();
         if frame_len < best_len * 99 / 100 {
-            return ChunkEncoding {
-                stored: Some(entropy_frame(lz.len(), mask, &side, &rc)),
-                codec: Some(lz_codec.with_entropy()),
-                checksum,
-            };
+            rc_frame = Some(entropy_frame(lz.len(), mask, &side, &rc));
         }
     } else if rc_total > 0 {
         let (trial_out, trial_in) =
@@ -452,14 +603,41 @@ pub fn encode_chunk_adaptive(base: Codec, raw: &[u8], elem_size: usize) -> Chunk
             if predicted < best_len * 99 / 100 {
                 let frame = entropy_encode_tokens(&lz, elem_size, raw.len(), mask);
                 if frame.len() < best_len {
-                    return ChunkEncoding {
-                        stored: Some(frame),
-                        codec: Some(lz_codec.with_entropy()),
-                        checksum,
-                    };
+                    rc_frame = Some(frame);
                 }
             }
         }
+    }
+    // tANS candidate: the histogram walk prices tables and payload almost
+    // exactly, so the real encoding pass runs only on predicted winners
+    let mut tans_frame: Option<Vec<u8>> = None;
+    if rc_total > 0 {
+        let predicted = tans_predict_len(&lz, elem_size, raw.len(), mask);
+        if predicted < best_len * 99 / 100 {
+            let frame = tans_encode_tokens(&lz, elem_size, raw.len(), mask);
+            if frame.len() < best_len {
+                tans_frame = Some(frame);
+            }
+        }
+    }
+    let entropy_pick = match (rc_frame, tans_frame) {
+        (Some(rc), Some(tans)) => {
+            if tans.len() * 100 <= rc.len() * (100 + TANS_PREFER_PCT) {
+                Some((tans, Entropy::Tans))
+            } else {
+                Some((rc, Entropy::RangeCoder))
+            }
+        }
+        (Some(rc), None) => Some((rc, Entropy::RangeCoder)),
+        (None, Some(tans)) => Some((tans, Entropy::Tans)),
+        (None, None) => None,
+    };
+    if let Some((frame, backend)) = entropy_pick {
+        return ChunkEncoding {
+            stored: Some(frame),
+            codec: Some(lz_codec.with_entropy(backend)),
+            checksum,
+        };
     }
     if lz.len() < raw.len() {
         ChunkEncoding {
@@ -480,7 +658,8 @@ pub fn encode_chunk_adaptive(base: Codec, raw: &[u8], elem_size: usize) -> Chunk
 /// `1` = the dataset's declared codec (the only non-zero value pre-codec-v2
 /// files carry), `2 + code` = an explicitly recorded codec (what the
 /// adaptive selector writes when it picks a different pipeline than the
-/// dataset declares).
+/// dataset declares — spans `2..=11` now that codes 7–9 are the tANS
+/// family).
 pub fn chunk_codec_to_byte(ds_codec: Codec, applied: Option<Codec>) -> u8 {
     match applied {
         None => 0,
@@ -1188,6 +1367,572 @@ pub fn entropy_decode_tokens(frame: &[u8], elem_size: usize, raw_len: usize) -> 
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// entropy stage: static tANS (table-driven asymmetric numeral systems)
+// ---------------------------------------------------------------------------
+
+/// tANS table precision: normalized frequencies sum to `1 << TANS_R`.
+const TANS_R: u32 = 12;
+/// Number of tANS states (and decode-table entries) per stream table.
+const TANS_L: usize = 1 << TANS_R;
+/// Symbol spread step: `(L >> 1) + (L >> 3) + 3`, odd and so coprime with
+/// the power-of-two `L` — one pass over `0..L` visits every slot once.
+const TANS_STEP: usize = (TANS_L >> 1) + (TANS_L >> 3) + 3;
+/// Stream-section flags of the tANS payload.
+const TANS_STREAM_ABSENT: u8 = 0;
+const TANS_STREAM_CODED: u8 = 1;
+const TANS_STREAM_RAW: u8 = 2;
+/// The adaptive selector prefers the tANS frame while it is within this
+/// many percent of the range coder's — decode speed counts double on the
+/// fan-out read path, so a small stored-ratio give-back is a good trade.
+const TANS_PREFER_PCT: usize = 3;
+/// Token streams of the tANS payload, in table order.
+const TANS_STREAMS: usize = 4;
+const TS_CTRL: usize = 0;
+const TS_DLO: usize = 1;
+const TS_DHI: usize = 2;
+const TS_LIT: usize = 3;
+
+/// MSB-first bit writer of the tANS payload (tables and bitstream).
+struct TansBitWriter {
+    out: Vec<u8>,
+    acc: u64,
+    n: u32,
+}
+
+impl TansBitWriter {
+    fn new() -> TansBitWriter {
+        TansBitWriter {
+            out: Vec::new(),
+            acc: 0,
+            n: 0,
+        }
+    }
+
+    #[inline]
+    fn write(&mut self, value: u32, bits: u32) {
+        self.acc = (self.acc << bits) | (value as u64 & ((1u64 << bits) - 1));
+        self.n += bits;
+        while self.n >= 8 {
+            self.n -= 8;
+            self.out.push((self.acc >> self.n) as u8);
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.n > 0 {
+            self.out.push((self.acc << (8 - self.n)) as u8);
+        }
+        self.out
+    }
+}
+
+/// Matching MSB-first bit reader; refuses to read past the stream end.
+struct TansBitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    acc: u64,
+    n: u32,
+}
+
+impl<'a> TansBitReader<'a> {
+    fn new(buf: &'a [u8]) -> TansBitReader<'a> {
+        TansBitReader {
+            buf,
+            pos: 0,
+            acc: 0,
+            n: 0,
+        }
+    }
+
+    #[inline]
+    fn read(&mut self, bits: u32) -> Result<u32> {
+        while self.n < bits {
+            if self.pos >= self.buf.len() {
+                bail!("h5lite: tANS bitstream exhausted");
+            }
+            self.acc = (self.acc << 8) | self.buf[self.pos] as u64;
+            self.pos += 1;
+            self.n += 8;
+        }
+        self.n -= bits;
+        Ok(((self.acc >> self.n) & ((1u64 << bits) - 1)) as u32)
+    }
+}
+
+/// Normalize a byte histogram to frequencies summing exactly [`TANS_L`],
+/// every present symbol ≥ 1. Deterministic: over-shoot is trimmed from
+/// the largest entries (smallest symbol wins ties), under-shoot goes to
+/// the most frequent symbol.
+fn tans_normalize(hist: &[u32; 256]) -> [u16; 256] {
+    let total: u64 = hist.iter().map(|&c| c as u64).sum();
+    debug_assert!(total > 0);
+    let mut f = [0u16; 256];
+    let mut sum = 0usize;
+    for s in 0..256 {
+        if hist[s] > 0 {
+            let v = ((hist[s] as u64 * TANS_L as u64) / total).max(1) as u16;
+            f[s] = v;
+            sum += v as usize;
+        }
+    }
+    while sum > TANS_L {
+        let mut best = usize::MAX;
+        for s in 0..256 {
+            if f[s] > 1 && (best == usize::MAX || f[s] > f[best]) {
+                best = s;
+            }
+        }
+        f[best] -= 1;
+        sum -= 1;
+    }
+    if sum < TANS_L {
+        let mut best = 0usize;
+        for s in 1..256 {
+            if hist[s] > hist[best] {
+                best = s;
+            }
+        }
+        f[best] += (TANS_L - sum) as u16;
+    }
+    f
+}
+
+/// Spread the symbols over the state table: symbol `s` occupies `f[s]`
+/// slots, placed by stepping [`TANS_STEP`] (mod `L`) — the standard FSE
+/// scatter that keeps each symbol's slots roughly equidistant.
+fn tans_spread(f: &[u16; 256]) -> Vec<u8> {
+    let mut spread = vec![0u8; TANS_L];
+    let mut pos = 0usize;
+    for s in 0..256 {
+        for _ in 0..f[s] {
+            spread[pos] = s as u8;
+            pos = (pos + TANS_STEP) & (TANS_L - 1);
+        }
+    }
+    debug_assert_eq!(pos, 0);
+    spread
+}
+
+/// One decode-table cell: 4 bytes, so the whole table is 16 KiB and the
+/// hot loop is one cache access per symbol.
+#[derive(Clone, Copy, Default)]
+struct TansCell {
+    sym: u8,
+    nb: u8,
+    new_x: u16,
+}
+
+/// Decode table: for state `x`, emit `sym`, then
+/// `x' = new_x + next(nb bits)`.
+fn tans_decode_table(f: &[u16; 256]) -> Vec<TansCell> {
+    let spread = tans_spread(f);
+    let mut next = [0u32; 256];
+    for s in 0..256 {
+        next[s] = f[s] as u32;
+    }
+    let mut cells = vec![TansCell::default(); TANS_L];
+    for (x, cell) in cells.iter_mut().enumerate() {
+        let s = spread[x] as usize;
+        let big_x = next[s];
+        next[s] += 1;
+        // big_x ∈ [f, 2f): nb = R - ⌊log2 big_x⌋, new_x = (big_x << nb) - L
+        let nb = TANS_R - (31 - big_x.leading_zeros());
+        cell.sym = s as u8;
+        cell.nb = nb as u8;
+        cell.new_x = (((big_x as usize) << nb) - TANS_L) as u16;
+    }
+    cells
+}
+
+/// Encode table: `enc[cum[s] + (x_scaled - f[s])]` is the next state for
+/// symbol `s` after the renormalizing shift brought the state down to
+/// `x_scaled ∈ [f, 2f)`.
+struct TansEncodeTable {
+    f: [u16; 256],
+    cum: [u32; 256],
+    enc: Vec<u16>,
+}
+
+fn tans_encode_table(f: &[u16; 256]) -> TansEncodeTable {
+    let spread = tans_spread(f);
+    let mut cum = [0u32; 256];
+    let mut acc = 0u32;
+    for s in 0..256 {
+        cum[s] = acc;
+        acc += f[s] as u32;
+    }
+    let mut next = [0u32; 256];
+    for s in 0..256 {
+        next[s] = f[s] as u32;
+    }
+    let mut enc = vec![0u16; TANS_L];
+    for (x, &sym) in spread.iter().enumerate() {
+        let s = sym as usize;
+        let big_x = next[s];
+        next[s] += 1;
+        enc[(cum[s] + (big_x - f[s] as u32)) as usize] = x as u16;
+    }
+    TansEncodeTable { f: *f, cum, enc }
+}
+
+/// Serialized size of a coded stream table (flag + presence bitmap +
+/// packed 12-bit frequencies).
+fn tans_table_ser_len(f: &[u16; 256]) -> usize {
+    let present = f.iter().filter(|&&v| v > 0).count();
+    1 + 32 + (TANS_R as usize * present).div_ceil(8)
+}
+
+fn tans_serialize_table(out: &mut Vec<u8>, f: &[u16; 256]) {
+    out.push(TANS_STREAM_CODED);
+    let mut bitmap = [0u8; 32];
+    for s in 0..256 {
+        if f[s] > 0 {
+            bitmap[s >> 3] |= 1 << (s & 7);
+        }
+    }
+    out.extend_from_slice(&bitmap);
+    let mut w = TansBitWriter::new();
+    for s in 0..256 {
+        if f[s] > 0 {
+            // f ∈ [1, 4096] → f - 1 fits TANS_R bits exactly
+            w.write((f[s] - 1) as u32, TANS_R);
+        }
+    }
+    out.extend_from_slice(&w.finish());
+}
+
+/// Parse one coded table section (the flag byte already consumed).
+/// Rejects tables whose frequencies do not sum to exactly `L`.
+fn tans_deserialize_table(frame: &[u8], pos: &mut usize) -> Result<[u16; 256]> {
+    if *pos + 32 > frame.len() {
+        bail!("h5lite: tANS table bitmap out of bounds");
+    }
+    let bitmap = &frame[*pos..*pos + 32];
+    *pos += 32;
+    let present: Vec<usize> = (0..256)
+        .filter(|&s| (bitmap[s >> 3] >> (s & 7)) & 1 == 1)
+        .collect();
+    if present.is_empty() {
+        bail!("h5lite: tANS coded table with empty symbol bitmap");
+    }
+    let nbytes = (TANS_R as usize * present.len()).div_ceil(8);
+    if *pos + nbytes > frame.len() {
+        bail!("h5lite: tANS table frequencies out of bounds");
+    }
+    let mut r = TansBitReader::new(&frame[*pos..*pos + nbytes]);
+    *pos += nbytes;
+    let mut f = [0u16; 256];
+    let mut sum = 0usize;
+    for s in present {
+        let v = r.read(TANS_R)? as u16 + 1;
+        f[s] = v;
+        sum += v as usize;
+    }
+    if sum != TANS_L {
+        bail!("h5lite: tANS table frequencies sum to {sum}, want {TANS_L}");
+    }
+    Ok(f)
+}
+
+/// Per-stream coding plan of one frame.
+enum TansPlan {
+    Absent,
+    /// Symbols ride the bitstream as plain 8-bit values: the table plus
+    /// coded bits would cost more (near-uniform streams like dist-lo).
+    Raw,
+    Coded([u16; 256]),
+}
+
+/// Decide how each stream is stored and estimate the payload cost.
+/// Returns the plan and the predicted payload size in bytes (tables +
+/// bitstream; excludes header, side buffer and the two state words).
+fn tans_plan_streams(hists: &[[u32; 256]; TANS_STREAMS]) -> ([TansPlan; TANS_STREAMS], usize) {
+    let mut plan = [
+        TansPlan::Absent,
+        TansPlan::Absent,
+        TansPlan::Absent,
+        TansPlan::Absent,
+    ];
+    let mut bits = 0.0f64;
+    let mut table_bytes = 0usize;
+    for (st, h) in hists.iter().enumerate() {
+        let total: u64 = h.iter().map(|&c| c as u64).sum();
+        if total == 0 {
+            table_bytes += 1;
+            continue;
+        }
+        let f = tans_normalize(h);
+        let mut coded_bits = 0.0f64;
+        for s in 0..256 {
+            if h[s] > 0 {
+                coded_bits += h[s] as f64 * (TANS_R as f64 - (f[s] as f64).log2());
+            }
+        }
+        let coded_cost = (tans_table_ser_len(&f) - 1) as f64 + coded_bits / 8.0;
+        if (total as f64) < coded_cost {
+            plan[st] = TansPlan::Raw;
+            table_bytes += 1;
+            bits += total as f64 * 8.0;
+        } else {
+            plan[st] = TansPlan::Coded(f);
+            table_bytes += tans_table_ser_len(&f);
+            bits += coded_bits;
+        }
+    }
+    (plan, table_bytes + (bits / 8.0) as usize + 1)
+}
+
+/// Walk the token stream once, splitting it into the four tANS symbol
+/// streams (plus the bypassed side buffer) and their histograms. Symbols
+/// are `(stream, byte)` in decode order.
+fn tans_collect_symbols(
+    lz: &[u8],
+    elem_size: usize,
+    raw_len: usize,
+    mask: u8,
+) -> (Vec<(u8, u8)>, Vec<u8>, [[u32; 256]; TANS_STREAMS]) {
+    let es = elem_size.clamp(1, 8);
+    let plane_n = (raw_len / es).max(1);
+    let mut syms: Vec<(u8, u8)> = Vec::with_capacity(lz.len());
+    let mut side = Vec::new();
+    let mut hists = [[0u32; 256]; TANS_STREAMS];
+    let mut pos = 0usize;
+    let mut out_pos = 0usize;
+    while pos < lz.len() {
+        let ctrl = lz[pos];
+        syms.push((TS_CTRL as u8, ctrl));
+        hists[TS_CTRL][ctrl as usize] += 1;
+        pos += 1;
+        if ctrl < 0x80 {
+            let run = ctrl as usize + 1;
+            for &b in &lz[pos..pos + run] {
+                if (mask >> plane_of(out_pos, plane_n, es)) & 1 == 1 {
+                    side.push(b);
+                } else {
+                    syms.push((TS_LIT as u8, b));
+                    hists[TS_LIT][b as usize] += 1;
+                }
+                out_pos += 1;
+            }
+            pos += run;
+        } else {
+            syms.push((TS_DLO as u8, lz[pos]));
+            hists[TS_DLO][lz[pos] as usize] += 1;
+            syms.push((TS_DHI as u8, lz[pos + 1]));
+            hists[TS_DHI][lz[pos + 1] as usize] += 1;
+            pos += 2;
+            out_pos += (ctrl & 0x7f) as usize + LZ_MIN_MATCH;
+        }
+    }
+    (syms, side, hists)
+}
+
+/// Predicted tANS frame size from one histogram walk — near-exact (the
+/// per-symbol bit counts vary from the entropy estimate by well under a
+/// percent), so the adaptive selector can gate the real encoding pass on
+/// it the way the rc trial gates the range coder.
+fn tans_predict_len(lz: &[u8], elem_size: usize, raw_len: usize, mask: u8) -> usize {
+    let (_, side, hists) = tans_collect_symbols(lz, elem_size, raw_len, mask);
+    let (_, payload) = tans_plan_streams(&hists);
+    ENTROPY_HEADER_LEN + side.len() + 4 + payload
+}
+
+/// Full tANS entropy frame over a token stream (the [`Entropy::Tans`]
+/// counterpart of [`entropy_encode_tokens`]; same outer header).
+///
+/// Symbols are encoded in **reverse** with two interleaved states — coded
+/// symbols alternate lanes by their forward coded-symbol index — and the
+/// per-symbol bit chunks are then emitted in forward order, so the
+/// decoder reads the bitstream strictly forward.
+pub fn tans_encode_tokens(lz: &[u8], elem_size: usize, raw_len: usize, mask: u8) -> Vec<u8> {
+    let (syms, side, hists) = tans_collect_symbols(lz, elem_size, raw_len, mask);
+    let (plan, _) = tans_plan_streams(&hists);
+    let tables: [Option<TansEncodeTable>; TANS_STREAMS] = std::array::from_fn(|st| {
+        if let TansPlan::Coded(f) = &plan[st] {
+            Some(tans_encode_table(f))
+        } else {
+            None
+        }
+    });
+    let mut coded_left: usize = syms
+        .iter()
+        .filter(|&&(st, _)| matches!(plan[st as usize], TansPlan::Coded(_)))
+        .count();
+    let mut states = [TANS_L as u32; 2];
+    // (bits, count) per symbol, collected back-to-front
+    let mut chunks: Vec<(u16, u8)> = Vec::with_capacity(syms.len());
+    for &(st, b) in syms.iter().rev() {
+        match &plan[st as usize] {
+            TansPlan::Raw => chunks.push((b as u16, 8)),
+            TansPlan::Coded(_) => {
+                let t = tables[st as usize].as_ref().unwrap();
+                let fs = t.f[b as usize] as u32;
+                coded_left -= 1;
+                let lane = coded_left & 1;
+                let x = states[lane];
+                let mut nb = 0u32;
+                while (x >> nb) >= 2 * fs {
+                    nb += 1;
+                }
+                chunks.push(((x & ((1 << nb) - 1)) as u16, nb as u8));
+                let x_scaled = x >> nb;
+                states[lane] =
+                    (TANS_L + t.enc[(t.cum[b as usize] + (x_scaled - fs)) as usize] as usize)
+                        as u32;
+            }
+            TansPlan::Absent => unreachable!("symbol collected from an absent stream"),
+        }
+    }
+    let mut w = TansBitWriter::new();
+    for &(v, nb) in chunks.iter().rev() {
+        w.write(v as u32, nb as u32);
+    }
+    let bitstream = w.finish();
+    let mut payload =
+        Vec::with_capacity(4 + TANS_STREAMS * (33 + 384) + bitstream.len());
+    payload.extend_from_slice(&((states[0] as usize - TANS_L) as u16).to_le_bytes());
+    payload.extend_from_slice(&((states[1] as usize - TANS_L) as u16).to_le_bytes());
+    for p in &plan {
+        match p {
+            TansPlan::Absent => payload.push(TANS_STREAM_ABSENT),
+            TansPlan::Raw => payload.push(TANS_STREAM_RAW),
+            TansPlan::Coded(f) => tans_serialize_table(&mut payload, f),
+        }
+    }
+    payload.extend_from_slice(&bitstream);
+    entropy_frame(lz.len(), mask, &side, &payload)
+}
+
+/// Decoder-side stream state: the parsed tables plus the two interleaved
+/// lanes and the shared bitstream cursor.
+struct TansSymbolReader<'a> {
+    tables: [Option<Vec<TansCell>>; TANS_STREAMS],
+    raw_stream: [bool; TANS_STREAMS],
+    reader: TansBitReader<'a>,
+    states: [u32; 2],
+    n_coded: usize,
+}
+
+impl TansSymbolReader<'_> {
+    #[inline]
+    fn read(&mut self, st: usize) -> Result<u8> {
+        if self.raw_stream[st] {
+            return Ok(self.reader.read(8)? as u8);
+        }
+        let Some(table) = &self.tables[st] else {
+            bail!("h5lite: tANS symbol from an absent stream");
+        };
+        let cell = table[self.states[self.n_coded & 1] as usize];
+        // in-bounds by construction: new_x + bits < L for any table whose
+        // frequencies sum to L (validated at parse time)
+        self.states[self.n_coded & 1] = cell.new_x as u32 + self.reader.read(cell.nb as u32)?;
+        self.n_coded += 1;
+        Ok(cell.sym)
+    }
+}
+
+/// Invert [`tans_encode_tokens`]: reproduce the LZ token stream from a
+/// tANS entropy frame. Robust against corrupt frames — every length and
+/// table is validated, and both decode lanes must return to the
+/// encoder's start state.
+pub fn tans_decode_tokens(frame: &[u8], elem_size: usize, raw_len: usize) -> Result<Vec<u8>> {
+    if frame.len() < ENTROPY_HEADER_LEN {
+        bail!("h5lite: entropy frame shorter than its header");
+    }
+    let lz_len = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+    let mask = frame[4];
+    let side_len = u32::from_le_bytes(frame[5..9].try_into().unwrap()) as usize;
+    if lz_len > raw_len + raw_len / 128 + 16 {
+        bail!("h5lite: entropy frame claims an implausible token stream ({lz_len} bytes)");
+    }
+    if ENTROPY_HEADER_LEN + side_len > frame.len() {
+        bail!("h5lite: entropy frame side buffer out of bounds");
+    }
+    let side = &frame[ENTROPY_HEADER_LEN..ENTROPY_HEADER_LEN + side_len];
+    let mut pos = ENTROPY_HEADER_LEN + side_len;
+    if pos + 4 > frame.len() {
+        bail!("h5lite: tANS frame truncated before its state words");
+    }
+    let x0 = u16::from_le_bytes(frame[pos..pos + 2].try_into().unwrap()) as u32;
+    let x1 = u16::from_le_bytes(frame[pos + 2..pos + 4].try_into().unwrap()) as u32;
+    pos += 4;
+    if x0 as usize >= TANS_L || x1 as usize >= TANS_L {
+        bail!("h5lite: tANS start state out of range");
+    }
+    let mut tables: [Option<Vec<TansCell>>; TANS_STREAMS] = Default::default();
+    let mut raw_stream = [false; TANS_STREAMS];
+    for st in 0..TANS_STREAMS {
+        if pos >= frame.len() {
+            bail!("h5lite: tANS frame truncated in its table section");
+        }
+        let flag = frame[pos];
+        pos += 1;
+        match flag {
+            TANS_STREAM_ABSENT => {}
+            TANS_STREAM_RAW => raw_stream[st] = true,
+            TANS_STREAM_CODED => {
+                let f = tans_deserialize_table(frame, &mut pos)?;
+                tables[st] = Some(tans_decode_table(&f));
+            }
+            _ => bail!("h5lite: unknown tANS stream flag {flag}"),
+        }
+    }
+    let mut sr = TansSymbolReader {
+        tables,
+        raw_stream,
+        reader: TansBitReader::new(&frame[pos..]),
+        states: [x0, x1],
+        n_coded: 0,
+    };
+    let es = elem_size.clamp(1, 8);
+    let plane_n = (raw_len / es).max(1);
+    let mut out = Vec::with_capacity(lz_len);
+    let mut out_pos = 0usize;
+    let mut sp = 0usize;
+    while out.len() < lz_len {
+        let ctrl = sr.read(TS_CTRL)?;
+        out.push(ctrl);
+        if ctrl < 0x80 {
+            let run = ctrl as usize + 1;
+            if out.len() + run > lz_len {
+                bail!("h5lite: entropy frame literal run overruns the token stream");
+            }
+            for _ in 0..run {
+                let b = if (mask >> plane_of(out_pos, plane_n, es)) & 1 == 1 {
+                    if sp >= side.len() {
+                        bail!("h5lite: entropy frame side buffer underrun");
+                    }
+                    let b = side[sp];
+                    sp += 1;
+                    b
+                } else {
+                    sr.read(TS_LIT)?
+                };
+                out.push(b);
+                out_pos += 1;
+            }
+        } else {
+            if out.len() + 2 > lz_len {
+                bail!("h5lite: entropy frame match token overruns the token stream");
+            }
+            out.push(sr.read(TS_DLO)?);
+            out.push(sr.read(TS_DHI)?);
+            out_pos += (ctrl & 0x7f) as usize + LZ_MIN_MATCH;
+        }
+    }
+    if sp != side.len() {
+        bail!("h5lite: entropy frame side buffer has {} stray bytes", side.len() - sp);
+    }
+    if sr.states != [0, 0] {
+        bail!(
+            "h5lite: tANS decode lanes ended at {:?}, not the start state",
+            sr.states
+        );
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1386,21 +2131,21 @@ mod tests {
     fn entropy_frame_rejects_corruption() {
         let floats: Vec<f32> = (0..2048).map(|i| (i as f32 * 1e-3).sin()).collect();
         let raw = f32s_to_bytes(&floats);
-        let enc = Codec::ShuffleDeltaLzEntropy.encode(&raw, 4);
-        assert!(Codec::ShuffleDeltaLzEntropy.decode(&enc, 4, raw.len()).is_ok());
+        let enc = Codec::SHUFFLE_DELTA_LZ_RC.encode(&raw, 4);
+        assert!(Codec::SHUFFLE_DELTA_LZ_RC.decode(&enc, 4, raw.len()).is_ok());
         // truncated frame
-        assert!(Codec::ShuffleDeltaLzEntropy
+        assert!(Codec::SHUFFLE_DELTA_LZ_RC
             .decode(&enc[..enc.len() - 2], 4, raw.len())
             .is_err());
-        assert!(Codec::ShuffleDeltaLzEntropy.decode(&enc[..4], 4, raw.len()).is_err());
+        assert!(Codec::SHUFFLE_DELTA_LZ_RC.decode(&enc[..4], 4, raw.len()).is_err());
         // absurd token-stream length
         let mut bad = enc.clone();
         bad[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
-        assert!(Codec::ShuffleDeltaLzEntropy.decode(&bad, 4, raw.len()).is_err());
+        assert!(Codec::SHUFFLE_DELTA_LZ_RC.decode(&bad, 4, raw.len()).is_err());
         // side buffer pointing past the frame
         let mut bad = enc.clone();
         bad[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
-        assert!(Codec::ShuffleDeltaLzEntropy.decode(&bad, 4, raw.len()).is_err());
+        assert!(Codec::SHUFFLE_DELTA_LZ_RC.decode(&bad, 4, raw.len()).is_err());
     }
 
     #[test]
@@ -1420,8 +2165,8 @@ mod tests {
             .map(|i| 1.0 + ((i as f32) * 1e-3).sin() * 0.25)
             .collect();
         let raw = f32s_to_bytes(&floats);
-        let lz = Codec::ShuffleDeltaLz.encode(&raw, 4);
-        let ent = Codec::ShuffleDeltaLzEntropy.encode(&raw, 4);
+        let lz = Codec::SHUFFLE_DELTA_LZ.encode(&raw, 4);
+        let ent = Codec::SHUFFLE_DELTA_LZ_RC.encode(&raw, 4);
         assert!(
             ent.len() < lz.len() && ent.len() * 3 < raw.len(),
             "ent {} lz {} raw {}",
@@ -1437,8 +2182,8 @@ mod tests {
         // exposes runs plain byte-LZ cannot see
         let floats: Vec<f32> = (0..8192).map(|i| 1.0 + (i as f32 * 1e-4)).collect();
         let raw = f32s_to_bytes(&floats);
-        let plain = Codec::Lz.encode(&raw, 4);
-        let sdl = Codec::ShuffleDeltaLz.encode(&raw, 4);
+        let plain = Codec::LZ.encode(&raw, 4);
+        let sdl = Codec::SHUFFLE_DELTA_LZ.encode(&raw, 4);
         assert!(
             sdl.len() < plain.len() && sdl.len() * 2 < raw.len(),
             "sdl {} plain {} raw {}",
@@ -1453,11 +2198,11 @@ mod tests {
         // compressible → Some(smaller); incompressible → None; checksum is
         // always over the raw bytes
         let smooth = f32s_to_bytes(&(0..1024).map(|i| 1.0 + i as f32 * 1e-4).collect::<Vec<_>>());
-        let (enc, ck) = encode_chunk(Codec::ShuffleDeltaLz, &smooth, 4);
+        let (enc, ck) = encode_chunk(Codec::SHUFFLE_DELTA_LZ, &smooth, 4);
         assert!(enc.as_ref().unwrap().len() < smooth.len());
         assert_eq!(ck, checksum32(&smooth));
         let noise = xorshift_bytes(5, 1024);
-        let (enc, ck) = encode_chunk(Codec::Lz, &noise, 1);
+        let (enc, ck) = encode_chunk(Codec::LZ, &noise, 1);
         assert!(enc.is_none());
         assert_eq!(ck, checksum32(&noise));
     }
@@ -1467,8 +2212,8 @@ mod tests {
         // smooth → entropy; pure noise → store; constant → compressed
         let smooth =
             f32s_to_bytes(&(0..8192).map(|i| 1.0 + ((i as f32) * 1e-3).sin() * 0.25).collect::<Vec<_>>());
-        let enc = encode_chunk_adaptive(Codec::ShuffleDeltaLz, &smooth, 4);
-        assert_eq!(enc.codec, Some(Codec::ShuffleDeltaLzEntropy), "smooth picks entropy");
+        let enc = encode_chunk_adaptive(Codec::SHUFFLE_DELTA_LZ, &smooth, 4);
+        assert_eq!(enc.codec, Some(Codec::SHUFFLE_DELTA_LZ_RC), "smooth picks entropy");
         assert!(enc.stored.as_ref().unwrap().len() * 2 < smooth.len());
         assert_eq!(enc.checksum, checksum32(&smooth));
         let dec = enc
@@ -1479,12 +2224,12 @@ mod tests {
         assert_eq!(dec, smooth);
 
         let noise = xorshift_bytes(77, 32768);
-        let enc = encode_chunk_adaptive(Codec::Lz, &noise, 1);
+        let enc = encode_chunk_adaptive(Codec::LZ, &noise, 1);
         assert!(enc.stored.is_none(), "noise must fall back to Store");
         assert!(enc.codec.is_none());
 
         let zeros = vec![0u8; 32768];
-        let enc = encode_chunk_adaptive(Codec::ShuffleDeltaLz, &zeros, 4);
+        let enc = encode_chunk_adaptive(Codec::SHUFFLE_DELTA_LZ, &zeros, 4);
         assert!(enc.stored.as_ref().unwrap().len() < zeros.len() / 40);
     }
 
@@ -1501,15 +2246,15 @@ mod tests {
     fn chunk_codec_byte_mapping() {
         // 0 = raw, 1 = dataset codec (the pre-codec-v2 "applied" bit),
         // 2+code = explicit — and every combination round-trips
-        let ds = Codec::ShuffleDeltaLz;
+        let ds = Codec::SHUFFLE_DELTA_LZ;
         assert_eq!(chunk_codec_to_byte(ds, None), 0);
         assert_eq!(chunk_codec_to_byte(ds, Some(ds)), 1);
         assert_eq!(
-            chunk_codec_to_byte(ds, Some(Codec::ShuffleDeltaLzEntropy)),
-            2 + Codec::ShuffleDeltaLzEntropy.code()
+            chunk_codec_to_byte(ds, Some(Codec::SHUFFLE_DELTA_LZ_RC)),
+            2 + Codec::SHUFFLE_DELTA_LZ_RC.code()
         );
         for applied in
-            [None, Some(Codec::Lz), Some(ds), Some(Codec::ShuffleDeltaLzEntropy)]
+            [None, Some(Codec::LZ), Some(ds), Some(Codec::SHUFFLE_DELTA_LZ_RC)]
         {
             let b = chunk_codec_to_byte(ds, applied);
             assert_eq!(chunk_codec_from_byte(ds, b).unwrap(), applied);
@@ -1538,14 +2283,251 @@ mod tests {
 
     #[test]
     fn entropy_family_helpers() {
-        assert_eq!(Codec::Lz.with_entropy(), Codec::LzEntropy);
-        assert_eq!(Codec::ShuffleDeltaLzEntropy.without_entropy(), Codec::ShuffleDeltaLz);
-        assert_eq!(Codec::Raw.with_entropy(), Codec::Raw);
+        assert_eq!(Codec::LZ.with_entropy(Entropy::RangeCoder), Codec::LZ_RC);
+        assert_eq!(Codec::LZ.with_entropy(Entropy::Tans), Codec::LZ_TANS);
+        assert_eq!(Codec::SHUFFLE_DELTA_LZ_RC.without_entropy(), Codec::SHUFFLE_DELTA_LZ);
+        assert_eq!(Codec::SHUFFLE_DELTA_LZ_TANS.without_entropy(), Codec::SHUFFLE_DELTA_LZ);
+        assert_eq!(Codec::Raw.with_entropy(Entropy::RangeCoder), Codec::Raw);
+        assert_eq!(Codec::Raw.with_entropy(Entropy::Tans), Codec::Raw);
         for codec in ALL_CODECS {
             assert_eq!(codec.has_entropy(), codec != codec.without_entropy());
+            assert_eq!(codec.has_entropy(), codec.entropy() != Entropy::None);
             if codec != Codec::Raw {
-                assert!(codec.with_entropy().has_entropy());
+                assert!(codec.with_entropy(Entropy::RangeCoder).has_entropy());
+                assert!(codec.with_entropy(Entropy::Tans).has_entropy());
+                assert_eq!(
+                    codec.with_entropy(Entropy::Tans).filter_stage(),
+                    codec.filter_stage()
+                );
             }
         }
+    }
+
+    #[test]
+    fn codec_legacy_byte_values_are_stable() {
+        // the on-disk contract: 0–6 mean exactly what the flat pre-tANS
+        // enum meant, 7–9 are the tANS family
+        let expect = [
+            (0u8, Codec::Raw),
+            (1, Codec::LZ),
+            (2, Codec::SHUFFLE_LZ),
+            (3, Codec::SHUFFLE_DELTA_LZ),
+            (4, Codec::LZ_RC),
+            (5, Codec::SHUFFLE_LZ_RC),
+            (6, Codec::SHUFFLE_DELTA_LZ_RC),
+            (7, Codec::LZ_TANS),
+            (8, Codec::SHUFFLE_LZ_TANS),
+            (9, Codec::SHUFFLE_DELTA_LZ_TANS),
+        ];
+        for (code, codec) in expect {
+            assert_eq!(codec.code(), code, "{codec:?}");
+            assert_eq!(Codec::from_code(code).unwrap(), codec);
+        }
+        assert!(Codec::from_code(10).is_err());
+    }
+
+    // -------------------------------------------------------------------
+    // tANS entropy stage
+    // -------------------------------------------------------------------
+
+    fn tans_only_roundtrip(data: &[u8]) {
+        // exercise the coder through a mask-0, literal-only stream
+        let mut lz = Vec::new();
+        let mut s = 0usize;
+        while s < data.len() {
+            let run = (data.len() - s).min(128);
+            lz.push((run - 1) as u8);
+            lz.extend_from_slice(&data[s..s + run]);
+            s += run;
+        }
+        let frame = tans_encode_tokens(&lz, 1, data.len(), 0);
+        let back = tans_decode_tokens(&frame, 1, data.len()).unwrap();
+        assert_eq!(back, lz);
+    }
+
+    #[test]
+    fn tans_roundtrips_byte_streams() {
+        tans_only_roundtrip(b"");
+        tans_only_roundtrip(b"A");
+        tans_only_roundtrip(&[0u8; 5000]);
+        tans_only_roundtrip(&xorshift_bytes(11, 8192));
+        let skewed: Vec<u8> = (0..4096).map(|i| if i % 7 == 0 { 3 } else { 0 }).collect();
+        tans_only_roundtrip(&skewed);
+        // every byte value present: densest possible table
+        let dense: Vec<u8> = (0..8192u32).map(|i| (i * 97) as u8).collect();
+        tans_only_roundtrip(&dense);
+    }
+
+    #[test]
+    fn tans_matched_token_streams_roundtrip() {
+        // real token streams with matches exercise ctrl/dlo/dhi tables
+        for seed in [1u64, 9, 42] {
+            let floats: Vec<f32> =
+                (0..4096).map(|i| ((i as f32) * 1e-3 * seed as f32).sin()).collect();
+            let raw = f32s_to_bytes(&floats);
+            let mut filtered = shuffle(&raw, 4);
+            delta_encode(&mut filtered);
+            let lz = lz_compress_chain(&filtered, LZ_CHAIN_DEPTH);
+            let mask = bypass_mask(&filtered, 4, raw.len());
+            let frame = tans_encode_tokens(&lz, 4, raw.len(), mask);
+            let back = tans_decode_tokens(&frame, 4, raw.len()).unwrap();
+            assert_eq!(back, lz, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn tans_near_uniform_stream_goes_raw() {
+        // a noise literal stream must ride the bitstream as plain bytes:
+        // the 417-byte coded table could never pay for itself. Raw keeps
+        // the frame within a small overhead of the input size.
+        let data = xorshift_bytes(31, 8192);
+        let mut lz = Vec::new();
+        let mut s = 0usize;
+        while s < data.len() {
+            let run = (data.len() - s).min(128);
+            lz.push((run - 1) as u8);
+            lz.extend_from_slice(&data[s..s + run]);
+            s += run;
+        }
+        let frame = tans_encode_tokens(&lz, 1, data.len(), 0);
+        assert!(
+            frame.len() < data.len() + 100,
+            "raw-stream flag not taken: {} bytes for {} of noise",
+            frame.len(),
+            data.len()
+        );
+        assert_eq!(tans_decode_tokens(&frame, 1, data.len()).unwrap(), lz);
+    }
+
+    #[test]
+    fn tans_normalize_invariants() {
+        let mut hist = [0u32; 256];
+        hist[7] = 1;
+        let f = tans_normalize(&hist);
+        assert_eq!(f[7] as usize, TANS_L, "single symbol takes every state");
+        let mut hist = [0u32; 256];
+        for (s, h) in hist.iter_mut().enumerate() {
+            *h = s as u32 * 13 + 1; // every symbol present, skewed
+        }
+        let f = tans_normalize(&hist);
+        assert_eq!(f.iter().map(|&v| v as usize).sum::<usize>(), TANS_L);
+        assert!(f.iter().all(|&v| v >= 1));
+        let mut hist = [0u32; 256];
+        hist[0] = 1;
+        hist[1] = 1_000_000;
+        let f = tans_normalize(&hist);
+        assert_eq!(f[0], 1, "rare symbols keep a floor of one state");
+        assert_eq!(f[0] as usize + f[1] as usize, TANS_L);
+    }
+
+    #[test]
+    fn tans_frame_rejects_corruption() {
+        let floats: Vec<f32> = (0..2048).map(|i| (i as f32 * 1e-3).sin()).collect();
+        let raw = f32s_to_bytes(&floats);
+        let enc = Codec::SHUFFLE_DELTA_LZ_TANS.encode(&raw, 4);
+        assert!(Codec::SHUFFLE_DELTA_LZ_TANS.decode(&enc, 4, raw.len()).is_ok());
+        // truncations at every boundary class
+        assert!(Codec::SHUFFLE_DELTA_LZ_TANS.decode(&enc[..4], 4, raw.len()).is_err());
+        assert!(Codec::SHUFFLE_DELTA_LZ_TANS
+            .decode(&enc[..enc.len() - 2], 4, raw.len())
+            .is_err());
+        // absurd token-stream length
+        let mut bad = enc.clone();
+        bad[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Codec::SHUFFLE_DELTA_LZ_TANS.decode(&bad, 4, raw.len()).is_err());
+        // side buffer pointing past the frame
+        let mut bad = enc.clone();
+        bad[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Codec::SHUFFLE_DELTA_LZ_TANS.decode(&bad, 4, raw.len()).is_err());
+        // start state out of range
+        let side_len = u32::from_le_bytes(enc[5..9].try_into().unwrap()) as usize;
+        let mut bad = enc.clone();
+        bad[ENTROPY_HEADER_LEN + side_len..ENTROPY_HEADER_LEN + side_len + 2]
+            .copy_from_slice(&u16::MAX.to_le_bytes());
+        assert!(Codec::SHUFFLE_DELTA_LZ_TANS.decode(&bad, 4, raw.len()).is_err());
+        // bogus stream flag
+        let mut bad = enc.clone();
+        bad[ENTROPY_HEADER_LEN + side_len + 4] = 0x77;
+        assert!(Codec::SHUFFLE_DELTA_LZ_TANS.decode(&bad, 4, raw.len()).is_err());
+        // flipping bitstream bits must never decode to the same tokens:
+        // either an error (state/bounds check) or a different stream the
+        // chunk checksum would reject
+        let good = tans_decode_tokens(&enc, 4, raw.len()).unwrap();
+        for pos in [enc.len() - 1, enc.len() - 9, enc.len() - 33] {
+            let mut bad = enc.clone();
+            bad[pos] ^= 0x10;
+            match tans_decode_tokens(&bad, 4, raw.len()) {
+                Ok(tokens) => assert_ne!(tokens, good, "flip at {pos} undetected"),
+                Err(_) => {}
+            }
+        }
+    }
+
+    #[test]
+    fn tans_beats_raw_on_structured_streams() {
+        // coded tables must actually compress a skewed literal stream
+        let skewed: Vec<u8> = (0..16384u32)
+            .map(|i| if i % 13 == 0 { (i % 5) as u8 + 1 } else { 0 })
+            .collect();
+        let mut lz = Vec::new();
+        let mut s = 0usize;
+        while s < skewed.len() {
+            let run = (skewed.len() - s).min(128);
+            lz.push((run - 1) as u8);
+            lz.extend_from_slice(&skewed[s..s + run]);
+            s += run;
+        }
+        let frame = tans_encode_tokens(&lz, 1, skewed.len(), 0);
+        assert!(
+            frame.len() * 4 < skewed.len(),
+            "{} bytes for {} of skewed data",
+            frame.len(),
+            skewed.len()
+        );
+        assert_eq!(tans_decode_tokens(&frame, 1, skewed.len()).unwrap(), lz);
+    }
+
+    #[test]
+    fn tans_predict_tracks_actual_frame_size() {
+        for seed in [3u64, 17] {
+            let floats: Vec<f32> =
+                (0..8192).map(|i| 1.0 + ((i as f32) * 1e-3 * seed as f32).sin() * 0.25).collect();
+            let raw = f32s_to_bytes(&floats);
+            let mut filtered = shuffle(&raw, 4);
+            delta_encode(&mut filtered);
+            let lz = lz_compress_chain(&filtered, LZ_CHAIN_DEPTH);
+            let mask = bypass_mask(&filtered, 4, raw.len());
+            let predicted = tans_predict_len(&lz, 4, raw.len(), mask);
+            let actual = tans_encode_tokens(&lz, 4, raw.len(), mask).len();
+            let tol = (actual / 50).max(64);
+            assert!(
+                predicted.abs_diff(actual) <= tol,
+                "predicted {predicted} vs actual {actual} (seed {seed})"
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_prefers_tans_within_margin_on_turbulent() {
+        // the canonical turbulent field: tANS lands within TANS_PREFER_PCT
+        // of the rc frame, so the selector trades the sliver of ratio for
+        // decode speed; the explicit rc pipeline must still be smaller
+        let raw = f32s_to_bytes(&crate::util::synth::turbulent_field(
+            8192,
+            crate::util::synth::TURB_SEED,
+        ));
+        let enc = encode_chunk_adaptive(Codec::SHUFFLE_DELTA_LZ, &raw, 4);
+        assert_eq!(enc.codec, Some(Codec::SHUFFLE_DELTA_LZ_TANS), "turbulent picks tANS");
+        let stored = enc.stored.as_ref().unwrap();
+        let rc = Codec::SHUFFLE_DELTA_LZ_RC.encode(&raw, 4);
+        assert!(rc.len() <= stored.len(), "rc {} vs tans {}", rc.len(), stored.len());
+        assert!(
+            stored.len() * 100 <= rc.len() * (100 + TANS_PREFER_PCT),
+            "give-back above {TANS_PREFER_PCT}%: tans {} rc {}",
+            stored.len(),
+            rc.len()
+        );
+        let back = enc.codec.unwrap().decode(stored, 4, raw.len()).unwrap();
+        assert_eq!(back, raw);
     }
 }

@@ -57,11 +57,13 @@
 //! pre-codec-v2 writers emitted, so old files decode unchanged), `2 + c` =
 //! explicitly codec `c`. The codec-v2 **adaptive selector**
 //! ([`codec::encode_chunk_adaptive`]) uses the explicit form to pick
-//! `Lz`-family / `LzEntropy`-family / `Store` per chunk: each writer
+//! LZ-family / entropy-family / `Store` per chunk: each writer
 //! trial-compresses the chunk's token stream and stores whichever of
-//! {raw, LZ, LZ + range-coder entropy frame} is smallest, so smooth chunks
-//! get the full two-stage pipeline while incompressible chunks never pay
-//! the entropy stage. The entropy frame layout and the bypass of
+//! {raw, LZ, LZ + range-coder frame, LZ + tANS frame} is smallest —
+//! preferring tANS between the two entropy backends while it stays within
+//! a small ratio margin, for its decode speed — so smooth chunks get a
+//! full two-stage pipeline while incompressible chunks never pay an
+//! entropy stage. The entropy frame layout and the bypass of
 //! high-entropy byte planes are documented in [`codec`]. (Deliberate
 //! forward-compat caveat: the on-disk version tag stays 3, so a
 //! pre-codec-v2 reader opens a file carrying explicit codec bytes and
@@ -3080,7 +3082,7 @@ mod tests {
             .create_dataset("/g", "plain", Dtype::F32, &[37, 16])
             .unwrap();
         let dk = f
-            .create_dataset_chunked("/g", "packed", Dtype::F32, &[37, 16], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "packed", Dtype::F32, &[37, 16], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         f.write_rows(&dc, 0, &raw).unwrap();
         f.write_rows(&dk, 0, &raw).unwrap();
@@ -3107,7 +3109,7 @@ mod tests {
         {
             let mut f = H5File::create(&p, 1).unwrap();
             let ds = f
-                .create_dataset_chunked("/g", "d", Dtype::F32, &[20, 8], 6, Codec::ShuffleLz)
+                .create_dataset_chunked("/g", "d", Dtype::F32, &[20, 8], 6, Codec::SHUFFLE_LZ)
                 .unwrap();
             f.write_all_f32(&ds, &data).unwrap();
             f.commit().unwrap();
@@ -3127,7 +3129,7 @@ mod tests {
         let p = tmp("chunk_rmw");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::U64, &[10, 2], 4, Codec::Lz)
+            .create_dataset_chunked("/g", "d", Dtype::U64, &[10, 2], 4, Codec::LZ)
             .unwrap();
         let base: Vec<u64> = (0..20).collect();
         f.write_rows(&ds, 0, &codec::u64s_to_bytes(&base)).unwrap();
@@ -3146,7 +3148,7 @@ mod tests {
         let p = tmp("chunk_zeros");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[12, 4], 4, Codec::ShuffleLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[12, 4], 4, Codec::SHUFFLE_LZ)
             .unwrap();
         // only the middle chunk written
         f.write_rows(&ds, 4, &codec::f32s_to_bytes(&[7.0; 16])).unwrap();
@@ -3162,7 +3164,7 @@ mod tests {
         let p = tmp("chunk_crc");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 8], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 8], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         f.write_all_f32(&ds, &smooth_rows(8, 8)).unwrap();
         f.commit().unwrap();
@@ -3186,7 +3188,7 @@ mod tests {
         let p = tmp("chunk_incomp");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::U8, &[1024], 1024, Codec::Lz)
+            .create_dataset_chunked("/g", "d", Dtype::U8, &[1024], 1024, Codec::LZ)
             .unwrap();
         // xorshift noise: LZ finds nothing, extent must fall back to raw
         let mut s = 0x9E37_79B9u64;
@@ -3229,14 +3231,14 @@ mod tests {
                     Dtype::F32,
                     &[24, 1024],
                     8,
-                    Codec::ShuffleDeltaLz,
+                    Codec::SHUFFLE_DELTA_LZ,
                 )
                 .unwrap();
             f.write_rows(&ds, 0, &raw).unwrap();
             // smooth chunk takes the entropy pipeline, the noise chunk
             // falls back to raw storage
             let l0 = f.chunk_loc(&ds, 0).unwrap().unwrap();
-            assert_eq!(l0.codec, Some(Codec::ShuffleDeltaLzEntropy), "{l0:?}");
+            assert_eq!(l0.codec, Some(Codec::SHUFFLE_DELTA_LZ_RC), "{l0:?}");
             let l1 = f.chunk_loc(&ds, 1).unwrap().unwrap();
             assert!(l1.codec.is_none(), "{l1:?}");
             assert_eq!(l1.stored, l1.raw);
@@ -3250,7 +3252,7 @@ mod tests {
         let l0 = f.chunk_loc(&ds, 0).unwrap().unwrap();
         assert_eq!(
             l0.codec,
-            Some(Codec::ShuffleDeltaLzEntropy),
+            Some(Codec::SHUFFLE_DELTA_LZ_RC),
             "per-chunk codec byte lost across reopen"
         );
         assert!(f.chunk_loc(&ds, 1).unwrap().unwrap().codec.is_none());
@@ -3270,20 +3272,20 @@ mod tests {
         {
             let mut f = H5File::create(&p, 1).unwrap();
             let ds = f
-                .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 16], 8, Codec::ShuffleDeltaLz)
+                .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 16], 8, Codec::SHUFFLE_DELTA_LZ)
                 .unwrap();
             // fixed-codec encode (the PR-1 path) + explicit dataset codec:
             // serialises as byte 1, exactly like an old file
-            let (enc, ck) = codec::encode_chunk(Codec::ShuffleDeltaLz, &raw, 4);
+            let (enc, ck) = codec::encode_chunk(Codec::SHUFFLE_DELTA_LZ, &raw, 4);
             let stored = enc.unwrap();
-            f.write_chunk_encoded(&ds, 0, &stored, raw.len() as u64, ck, Some(Codec::ShuffleDeltaLz))
+            f.write_chunk_encoded(&ds, 0, &stored, raw.len() as u64, ck, Some(Codec::SHUFFLE_DELTA_LZ))
                 .unwrap();
             f.commit().unwrap();
         }
         let f = H5File::open(&p).unwrap();
         let ds = f.dataset("/g", "d").unwrap();
         let loc = f.chunk_loc(&ds, 0).unwrap().unwrap();
-        assert_eq!(loc.codec, Some(Codec::ShuffleDeltaLz));
+        assert_eq!(loc.codec, Some(Codec::SHUFFLE_DELTA_LZ));
         assert_eq!(f.read_rows(&ds, 0, 8).unwrap(), raw);
         std::fs::remove_file(&p).ok();
     }
@@ -3293,7 +3295,7 @@ mod tests {
         let p = tmp("chunk_threads");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::U64, &[64, 4], 8, Codec::ShuffleLz)
+            .create_dataset_chunked("/g", "d", Dtype::U64, &[64, 4], 8, Codec::SHUFFLE_LZ)
             .unwrap();
         // 8 threads, each owning one whole chunk (8 rows)
         std::thread::scope(|s| {
@@ -3322,7 +3324,7 @@ mod tests {
         let p = tmp("chunk_shared");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::U64, &[8, 4], 8, Codec::Lz)
+            .create_dataset_chunked("/g", "d", Dtype::U64, &[8, 4], 8, Codec::LZ)
             .unwrap();
         std::thread::scope(|s| {
             for t in 0..2u64 {
@@ -3375,7 +3377,7 @@ mod tests {
         let p = tmp("v1_nochunk");
         let mut f = H5File::create_versioned(&p, 1, FORMAT_V1).unwrap();
         assert!(f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[8], 4, Codec::Lz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[8], 4, Codec::LZ)
             .is_err());
         std::fs::remove_file(&p).ok();
     }
@@ -3549,7 +3551,7 @@ mod tests {
         let mut f = H5File::create(&p, 1).unwrap();
         f.set_reuse_policy(ReusePolicy::Immediate);
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[32, 16], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[32, 16], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         let data = smooth_rows(32, 16);
         f.write_all_f32(&ds, &data).unwrap();
@@ -3578,7 +3580,7 @@ mod tests {
         let p = tmp("reuse_epoch");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         let data = smooth_rows(16, 16);
         f.write_all_f32(&ds, &data).unwrap();
@@ -3616,7 +3618,7 @@ mod tests {
                     Dtype::F32,
                     &[32, 16],
                     8,
-                    Codec::ShuffleDeltaLz,
+                    Codec::SHUFFLE_DELTA_LZ,
                 )
                 .unwrap();
             f.write_all_f32(&ds, &data).unwrap();
@@ -3656,7 +3658,7 @@ mod tests {
         {
             let mut f = H5File::create_versioned(&p, 1, FORMAT_V2).unwrap();
             let ds = f
-                .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 8], 8, Codec::ShuffleLz)
+                .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 8], 8, Codec::SHUFFLE_LZ)
                 .unwrap();
             f.write_all_f32(&ds, &data).unwrap();
             f.commit().unwrap();
@@ -3766,7 +3768,7 @@ mod tests {
             .create_dataset("/g", "plain", Dtype::F32, &[37, 16])
             .unwrap();
         let dk = f
-            .create_dataset_chunked("/g", "packed", Dtype::F32, &[37, 16], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "packed", Dtype::F32, &[37, 16], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         f.ensure_group("/g")
             .attrs
@@ -3826,7 +3828,7 @@ mod tests {
         f.write_rows(&dc, 0, &codec::u64s_to_bytes(&data)).unwrap();
         // some fragmentation so repack actually moves bytes
         let dk = f
-            .create_dataset_chunked("/g", "packed", Dtype::F32, &[16, 16], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "packed", Dtype::F32, &[16, 16], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         let small = smooth_rows(16, 16);
         f.write_all_f32(&dk, &small).unwrap();
@@ -3851,7 +3853,7 @@ mod tests {
         let p = tmp("fsck");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 8], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 8], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         f.write_all_f32(&ds, &smooth_rows(16, 8)).unwrap();
         f.commit().unwrap();
@@ -3891,7 +3893,7 @@ mod tests {
         let p = tmp("fsck_bytes");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         let data = smooth_rows(16, 16);
         f.write_all_f32(&ds, &data).unwrap();
@@ -3919,7 +3921,7 @@ mod tests {
         let p = tmp("lru");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[32, 8], 8, Codec::ShuffleLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[32, 8], 8, Codec::SHUFFLE_LZ)
             .unwrap();
         f.write_all_f32(&ds, &smooth_rows(32, 8)).unwrap();
         // touch chunks 0 and 1 alternately (a window query straddling a
@@ -3936,7 +3938,7 @@ mod tests {
         // the byte budget bounds the resident set when walking many
         // chunks: 64 decoded chunks of 128 B against a 512 B budget
         let big = f
-            .create_dataset_chunked("/g", "big", Dtype::F32, &[256, 8], 4, Codec::Lz)
+            .create_dataset_chunked("/g", "big", Dtype::F32, &[256, 8], 4, Codec::LZ)
             .unwrap();
         f.write_all_f32(&big, &smooth_rows(256, 8)).unwrap();
         f.set_chunk_cache_budget(512);
@@ -3961,7 +3963,7 @@ mod tests {
         let p = tmp("pin");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         let data = smooth_rows(16, 16);
         f.write_all_f32(&ds, &data).unwrap();
@@ -4006,7 +4008,7 @@ mod tests {
         let p = tmp("pin2");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 16], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 16], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         let data = smooth_rows(8, 16);
         f.write_all_f32(&ds, &data).unwrap();
@@ -4037,7 +4039,7 @@ mod tests {
         let p = tmp("overflow");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         f.write_all_f32(&ds, &smooth_rows(16, 16)).unwrap();
         f.commit().unwrap();
@@ -4063,7 +4065,7 @@ mod tests {
         let p = tmp("shared");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         let data = smooth_rows(16, 16);
         f.write_all_f32(&ds, &data).unwrap();
@@ -4099,7 +4101,7 @@ mod tests {
         let p = tmp("shared_epochs");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 16], 8, Codec::ShuffleLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 16], 8, Codec::SHUFFLE_LZ)
             .unwrap();
         f.write_all_f32(&ds, &smooth_rows(8, 16)).unwrap();
         f.commit().unwrap();
@@ -4189,7 +4191,7 @@ mod tests {
         let p = tmp("shared_inval");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 16], 8, Codec::ShuffleLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[8, 16], 8, Codec::SHUFFLE_LZ)
             .unwrap();
         let v1 = smooth_rows(8, 16);
         f.write_all_f32(&ds, &v1).unwrap();
@@ -4215,7 +4217,7 @@ mod tests {
         assert_eq!(f.backing(), backing);
         let dc = f.create_dataset("/g", "cont", Dtype::F32, &[16, 8]).unwrap();
         let dk = f
-            .create_dataset_chunked("/g", "chunk", Dtype::F32, &[32, 16], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "chunk", Dtype::F32, &[32, 16], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         f.write_all_f32(&dc, &smooth_rows(16, 8)).unwrap();
         f.write_all_f32(&dk, &smooth_rows(32, 16)).unwrap();

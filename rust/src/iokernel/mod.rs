@@ -192,7 +192,7 @@ pub struct SnapshotOptions {
     pub compress: bool,
     /// Base codec of the chunked cell-data datasets (the filter family the
     /// per-chunk adaptive selector works within). The default
-    /// `ShuffleDeltaLz` is right for smooth-to-turbulent f32 fields;
+    /// `SHUFFLE_DELTA_LZ` is right for smooth-to-turbulent f32 fields;
     /// benches pin other variants to isolate pipeline stages.
     pub cell_codec: Codec,
     pub lod: bool,
@@ -218,7 +218,7 @@ impl Default for SnapshotOptions {
             temp: true,
             cell_type: true,
             compress: true,
-            cell_codec: Codec::ShuffleDeltaLz,
+            cell_codec: Codec::SHUFFLE_DELTA_LZ,
             lod: true,
             backing: Backing::Direct,
         }

@@ -356,7 +356,7 @@ impl PyramidBuilder {
                             Dtype::F32,
                             &[n, ROW_ELEMS as u64],
                             CHUNK_ROWS,
-                            Codec::ShuffleDeltaLz,
+                            Codec::SHUFFLE_DELTA_LZ,
                         )?
                     } else {
                         file.create_dataset(

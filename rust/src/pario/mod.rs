@@ -112,12 +112,15 @@ pub struct IoReport {
 
 /// Per-write tally of the adaptive codec's per-chunk selections
 /// ([`codec::encode_chunk_adaptive`]): how many chunks landed in each
-/// storage class. `store` chunks were incompressible and hit the file raw.
+/// storage class. `store` chunks were incompressible and hit the file raw;
+/// the entropy classes split per backend (`rc` = range coder, `tans` =
+/// table-driven ANS) so a run can see which coder its data actually picked.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CodecChunks {
     pub store: u64,
     pub lz: u64,
-    pub entropy: u64,
+    pub rc: u64,
+    pub tans: u64,
 }
 
 /// Selection tally plus raw-byte attribution per actual codec code, used
@@ -129,17 +132,19 @@ pub struct CodecChunks {
 struct CodecTally {
     store: AtomicU64,
     lz: AtomicU64,
-    entropy: AtomicU64,
+    rc: AtomicU64,
+    tans: AtomicU64,
     /// Raw bytes encoded per codec code (index = `Codec::code()`).
-    raw_by_code: [AtomicU64; 7],
+    raw_by_code: [AtomicU64; 10],
 }
 
 impl CodecTally {
     fn record(&self, applied: Option<Codec>, raw_bytes: u64) {
-        match applied {
+        match applied.map(|c| c.entropy()) {
             None => self.store.fetch_add(1, Ordering::Relaxed),
-            Some(c) if c.has_entropy() => self.entropy.fetch_add(1, Ordering::Relaxed),
-            Some(_) => self.lz.fetch_add(1, Ordering::Relaxed),
+            Some(codec::Entropy::RangeCoder) => self.rc.fetch_add(1, Ordering::Relaxed),
+            Some(codec::Entropy::Tans) => self.tans.fetch_add(1, Ordering::Relaxed),
+            Some(codec::Entropy::None) => self.lz.fetch_add(1, Ordering::Relaxed),
         };
         if let Some(c) = applied {
             self.raw_by_code[c.code() as usize].fetch_add(raw_bytes, Ordering::Relaxed);
@@ -150,7 +155,8 @@ impl CodecTally {
         CodecChunks {
             store: self.store.load(Ordering::Relaxed),
             lz: self.lz.load(Ordering::Relaxed),
-            entropy: self.entropy.load(Ordering::Relaxed),
+            rc: self.rc.load(Ordering::Relaxed),
+            tans: self.tans.load(Ordering::Relaxed),
         }
     }
 
@@ -419,7 +425,7 @@ impl ParallelIo {
         // codec that encoded the most raw bytes this write — the adaptive
         // selector can mix pipelines within one write, and the dominant
         // one is what the aggregator cores actually spent their time in.
-        let dominant = tally.dominant().unwrap_or(Codec::ShuffleDeltaLz);
+        let dominant = tally.dominant().unwrap_or(Codec::SHUFFLE_DELTA_LZ);
         // On the paged backend the file returns as soon as the in-memory
         // image is consistent and the flusher drains in the background, so
         // the model prices the overlap (fill/codec vs. flush) instead of a
@@ -480,7 +486,8 @@ impl ParallelIo {
         self.metrics.add("pario.chunks", jobs.len() as u64);
         self.metrics.add("pario.chunks_store", codec_chunks.store);
         self.metrics.add("pario.chunks_lz", codec_chunks.lz);
-        self.metrics.add("pario.chunks_entropy", codec_chunks.entropy);
+        self.metrics.add("pario.chunks_rc", codec_chunks.rc);
+        self.metrics.add("pario.chunks_tans", codec_chunks.tans);
         self.metrics
             .add_ns("pario.compress", compress_ns.load(Ordering::Relaxed));
         if let Some(sink) = lod {
@@ -869,7 +876,7 @@ mod tests {
             let mut f = H5File::create(&p, 1).unwrap();
             let dc = f.create_dataset("/g", "plain", Dtype::U8, &[32, 4]).unwrap();
             let dk = f
-                .create_dataset_chunked("/g", "packed", Dtype::F32, &[32, 8], 8, Codec::ShuffleDeltaLz)
+                .create_dataset_chunked("/g", "packed", Dtype::F32, &[32, 8], 8, Codec::SHUFFLE_DELTA_LZ)
                 .unwrap();
             let bufs: Vec<Vec<u8>> = (0..8).map(|r| vec![r as u8; 16]).collect();
             let fbufs: Vec<Vec<u8>> = (0..8)
@@ -920,7 +927,7 @@ mod tests {
         let p = tmp("chunk_coll");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[32, 16], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[32, 16], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         let bufs = smooth_bufs(8, 4, 16);
         let writes = make_writes(&ds, &bufs, 4);
@@ -944,7 +951,7 @@ mod tests {
         // chunk_rows 4, but ranks own 3 rows each → every chunk boundary
         // crosses a rank boundary
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::U64, &[12, 2], 4, Codec::Lz)
+            .create_dataset_chunked("/g", "d", Dtype::U64, &[12, 2], 4, Codec::LZ)
             .unwrap();
         let bufs: Vec<Vec<u8>> = (0..4u64)
             .map(|r| codec::u64s_to_bytes(&(0..6).map(|i| r * 10 + i).collect::<Vec<_>>()))
@@ -967,7 +974,7 @@ mod tests {
         let p = tmp("chunk_part");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::U64, &[8, 1], 8, Codec::Lz)
+            .create_dataset_chunked("/g", "d", Dtype::U64, &[8, 1], 8, Codec::LZ)
             .unwrap();
         // seed all 8 rows directly
         f.write_rows(&ds, 0, &codec::u64s_to_bytes(&(0..8).collect::<Vec<_>>()))
@@ -996,7 +1003,7 @@ mod tests {
         let p = tmp("chunk_overlap");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::U64, &[8, 1], 8, Codec::Lz)
+            .create_dataset_chunked("/g", "d", Dtype::U64, &[8, 1], 8, Codec::LZ)
             .unwrap();
         let b1 = codec::u64s_to_bytes(&[1, 2, 3, 4, 5, 6]); // rows 0..6
         let b2 = codec::u64s_to_bytes(&[7, 8]); // rows 0..2 — overlaps b1
@@ -1024,7 +1031,7 @@ mod tests {
         let p = tmp("chunk_oob");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::U64, &[10, 1], 4, Codec::Lz)
+            .create_dataset_chunked("/g", "d", Dtype::U64, &[10, 1], 4, Codec::LZ)
             .unwrap();
         // 4 rows starting at row 8 of a 10-row dataset: 2 rows past the end
         let buf = codec::u64s_to_bytes(&[1, 2, 3, 4]);
@@ -1044,7 +1051,7 @@ mod tests {
         let p = tmp("metrics");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         let bufs = smooth_bufs(4, 4, 16);
         let writes = make_writes(&ds, &bufs, 4);
@@ -1077,7 +1084,7 @@ mod tests {
                 Dtype::F32,
                 &[9, ROW_ELEMS as u64],
                 4,
-                Codec::ShuffleDeltaLz,
+                Codec::SHUFFLE_DELTA_LZ,
             )
             .unwrap();
         let bufs: Vec<Vec<u8>> = (0..3)
@@ -1129,7 +1136,7 @@ mod tests {
         let mut f = H5File::create(&p, 1).unwrap();
         // 4 chunks of 8 rows × 1024 f32
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[32, 1024], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[32, 1024], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         let mut s = 0xDEAD_BEEFu64;
         let mut noise_f32 = || {
@@ -1158,12 +1165,13 @@ mod tests {
         let io = ParallelIo::new(Machine::local(), IoTuning::default(), 4);
         let rep = io.collective_write(&f, &writes, 1, 32).unwrap();
         let c = rep.codec_chunks;
-        assert_eq!(c.store + c.lz + c.entropy, 4, "{c:?}");
-        assert!(c.entropy >= 1, "smooth chunks must take the entropy stage: {c:?}");
+        assert_eq!(c.store + c.lz + c.rc + c.tans, 4, "{c:?}");
+        assert!(c.rc + c.tans >= 1, "smooth chunks must take an entropy stage: {c:?}");
         assert!(c.store >= 1, "noise chunks must store raw: {c:?}");
         assert_eq!(io.metrics.counter("pario.chunks_store"), c.store);
         assert_eq!(io.metrics.counter("pario.chunks_lz"), c.lz);
-        assert_eq!(io.metrics.counter("pario.chunks_entropy"), c.entropy);
+        assert_eq!(io.metrics.counter("pario.chunks_rc"), c.rc);
+        assert_eq!(io.metrics.counter("pario.chunks_tans"), c.tans);
         // round trip through the mixed per-chunk codecs
         let back = f.read_rows(&ds, 0, 32).unwrap();
         assert_eq!(back, bufs.concat());
@@ -1178,7 +1186,7 @@ mod tests {
         let p = tmp("reclaim");
         let mut f = H5File::create(&p, 1).unwrap();
         let ds = f
-            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::ShuffleDeltaLz)
+            .create_dataset_chunked("/g", "d", Dtype::F32, &[16, 16], 8, Codec::SHUFFLE_DELTA_LZ)
             .unwrap();
         let bufs = smooth_bufs(4, 4, 16);
         let io = ParallelIo::new(Machine::local(), IoTuning::default(), 4);

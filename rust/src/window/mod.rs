@@ -38,10 +38,11 @@
 //! the generation-tagged retire queue parks them until the pin drops.
 //! Fresh sessions always see the latest committed state.
 //!
-//! The pre-session free functions ([`offline_window`],
-//! [`offline_window_budgeted`], [`offline_window_progressive`]) remain as
-//! deprecated shims over a throwaway session: they re-parse every index on
-//! every call, which is exactly the cost the session amortises.
+//! Sessions are the *only* read surface since the PR-5 redesign: the
+//! pre-session free functions (`offline_window` and friends) lived on as
+//! deprecated shims for one release and are now gone — a caller that
+//! wants one-shot semantics opens a throwaway session, and pays the
+//! index-parse cost visibly rather than behind a free function.
 //!
 //! ## Multi-tenant fan-out: [`ReaderPool`]
 //!
@@ -84,9 +85,9 @@
 //! step, and a stalled client hits [`CollectorOptions::write_timeout`]
 //! instead of parking a worker forever. [`Collector::spawn_snapshot`]
 //! serves a snapshot file instead of live state, with all sessions pooled
-//! through one [`ReaderPool`]. The per-query [`query`] /
-//! [`query_budgeted`] free functions are deprecated shims (sessions of
-//! length one).
+//! through one [`ReaderPool`]. One-shot queries are sessions of length
+//! one: connect, ask, drop (the deprecated `query`/`query_budgeted` free
+//! functions that wrapped exactly that are gone since PR 9).
 //!
 //! ## Byte-budgeted queries over the LOD pyramid
 //!
@@ -689,62 +690,6 @@ impl ReaderPool {
 }
 
 // ---------------------------------------------------------------------------
-// deprecated per-call shims over a throwaway session
-// ---------------------------------------------------------------------------
-
-/// Offline sliding-window query against the snapshot at time `t`.
-///
-/// Deprecated shim over a throwaway [`SnapshotReader`]: every call
-/// re-opens the file and re-parses the topology index. It answers from the
-/// last *committed* state of `file`, exactly like a fresh open — which
-/// also means `file.path` must still exist on disk (a session opens its
-/// own descriptor; the passed handle's is not reused).
-#[deprecated(
-    note = "open a `SnapshotReader` session — the free functions re-parse the snapshot index on every call"
-)]
-pub fn offline_window(
-    file: &H5File,
-    t: f64,
-    window: &BBox,
-    budget: usize,
-) -> Result<Vec<WindowGrid>> {
-    SnapshotReader::open(file, t)?.window(window, budget)
-}
-
-/// Byte-budgeted offline window query (see [`SnapshotReader::budgeted`]).
-///
-/// Deprecated shim over a throwaway [`SnapshotReader`]: every call rebuilds
-/// the `LodIndex` (re-reading every `level_<ℓ>_locs` dataset) — the exact
-/// hot-path cost the session amortises to once.
-#[deprecated(
-    note = "open a `SnapshotReader` session — the free functions rebuild the LodIndex on every call"
-)]
-pub fn offline_window_budgeted(
-    file: &H5File,
-    t: f64,
-    window: &BBox,
-    budget_bytes: u64,
-) -> Result<LodWindow> {
-    SnapshotReader::open(file, t)?.budgeted(window, budget_bytes)
-}
-
-/// Progressive coarse-to-fine offline window query (see
-/// [`SnapshotReader::progressive`]).
-///
-/// Deprecated shim over a throwaway [`SnapshotReader`].
-#[deprecated(
-    note = "open a `SnapshotReader` session — the free functions rebuild the LodIndex on every call"
-)]
-pub fn offline_window_progressive(
-    file: &H5File,
-    t: f64,
-    window: &BBox,
-    total_budget_bytes: u64,
-) -> Result<Vec<LodWindow>> {
-    SnapshotReader::open(file, t)?.progressive(window, total_budget_bytes)
-}
-
-// ---------------------------------------------------------------------------
 // online window: collector process + client sessions
 // ---------------------------------------------------------------------------
 
@@ -1330,28 +1275,6 @@ impl WindowClient {
     }
 }
 
-/// Front-end client: one sliding-window query over TCP.
-///
-/// Deprecated shim: connects a throwaway [`WindowClient`] session per
-/// query.
-#[deprecated(note = "connect a `WindowClient` session — per-query connections pay a TCP handshake per request")]
-pub fn query(addr: SocketAddr, window: &BBox, budget: u32) -> Result<Vec<WindowGrid>> {
-    WindowClient::connect(addr)?.window(window, budget)
-}
-
-/// Front-end client: one **byte-budgeted** sliding-window query.
-///
-/// Deprecated shim: connects a throwaway [`WindowClient`] session per
-/// query.
-#[deprecated(note = "connect a `WindowClient` session — per-query connections pay a TCP handshake per request")]
-pub fn query_budgeted(
-    addr: SocketAddr,
-    window: &BBox,
-    budget_bytes: u64,
-) -> Result<OnlineLodWindow> {
-    WindowClient::connect(addr)?.budgeted(window, budget_bytes)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1638,25 +1561,34 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_answer_like_sessions() {
-        // the free functions must stay byte-for-byte compatible while they
-        // exist — each call is a throwaway session
+    fn throwaway_sessions_answer_like_long_lived_ones() {
+        // the one-shot pattern that replaced the removed PR-5 shims: a
+        // fresh session per call answers byte-for-byte like a long-lived
+        // session over the same committed state
         let s = sim(2);
         let f = snapshot_file("shims", &s, 0.5);
         let reader = SnapshotReader::open(&f, 0.5).unwrap();
-        let a = offline_window(&f, 0.5, &BBox::unit(), 8).unwrap();
+        let a = SnapshotReader::open(&f, 0.5)
+            .unwrap()
+            .window(&BBox::unit(), 8)
+            .unwrap();
         let b = reader.window(&BBox::unit(), 8).unwrap();
         assert_eq!(a.len(), b.len());
         for (ga, gb) in a.iter().zip(&b) {
             assert_eq!(ga.uid.0, gb.uid.0);
             assert_eq!(ga.data, gb.data);
         }
-        let wa = offline_window_budgeted(&f, 0.5, &BBox::unit(), 8 * RB).unwrap();
+        let wa = SnapshotReader::open(&f, 0.5)
+            .unwrap()
+            .budgeted(&BBox::unit(), 8 * RB)
+            .unwrap();
         let wb = reader.budgeted(&BBox::unit(), 8 * RB).unwrap();
         assert_eq!(wa.level, wb.level);
         assert_eq!(wa.grids.len(), wb.grids.len());
-        let pa = offline_window_progressive(&f, 0.5, &BBox::unit(), 73 * RB).unwrap();
+        let pa = SnapshotReader::open(&f, 0.5)
+            .unwrap()
+            .progressive(&BBox::unit(), 73 * RB)
+            .unwrap();
         let pb = reader.progressive(&BBox::unit(), 73 * RB).unwrap();
         assert_eq!(pa.len(), pb.len());
         std::fs::remove_file(&f.path).ok();
@@ -1711,16 +1643,21 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_online_shims_still_answer() {
-        // one-shot clients are sessions of length one: the wire protocol
-        // did not change underneath them
+    fn one_shot_client_sessions_answer() {
+        // one-shot clients are sessions of length one — connect, ask,
+        // drop; the wire protocol serves them like any other session
         let s = sim(2);
         let shared = Arc::new(RwLock::new(s));
         let collector = Collector::spawn(shared.clone()).unwrap();
-        let grids = query(collector.addr, &BBox::unit(), 8).unwrap();
+        let grids = WindowClient::connect(collector.addr)
+            .unwrap()
+            .window(&BBox::unit(), 8)
+            .unwrap();
         assert_eq!(grids.len(), 8);
-        let lod = query_budgeted(collector.addr, &BBox::unit(), REC_LEN as u64).unwrap();
+        let lod = WindowClient::connect(collector.addr)
+            .unwrap()
+            .budgeted(&BBox::unit(), REC_LEN as u64)
+            .unwrap();
         assert_eq!(lod.grids.len(), 1);
         assert_eq!(lod.depth, 0);
     }

@@ -96,7 +96,7 @@ fn trial(name: &str, seed: u64, fault_window: Option<u64>) -> TrialOutcome {
             Dtype::F32,
             &[CELL_ROWS, CELL_ELEMS as u64],
             8,
-            Codec::ShuffleDeltaLz,
+            Codec::SHUFFLE_DELTA_LZ,
         )
         .unwrap();
     f.write_rows(&plain, 0, &codec::f32s_to_bytes(&plain_at(0))).unwrap();

@@ -285,7 +285,7 @@ fn prop_adaptive_selection_never_expands() {
             _ => (0..n).map(|i| (i / 7) as u8).collect(),
         };
         let base =
-            [Codec::Lz, Codec::ShuffleLz, Codec::ShuffleDeltaLz][rng.below(3) as usize];
+            [Codec::LZ, Codec::SHUFFLE_LZ, Codec::SHUFFLE_DELTA_LZ][rng.below(3) as usize];
         let es = [1usize, 4, 8][rng.below(3) as usize];
         let enc = encode_chunk_adaptive(base, &raw, es);
         assert_eq!(enc.checksum, checksum32(&raw));
@@ -321,12 +321,14 @@ fn prop_chunked_dataset_matches_contiguous() {
         let cols = 1 + rng.below(8);
         let chunk_rows = 1 + rng.below(12);
         let codec_pick = [
-            Codec::Lz,
-            Codec::ShuffleLz,
-            Codec::ShuffleDeltaLz,
-            Codec::LzEntropy,
-            Codec::ShuffleDeltaLzEntropy,
-        ][rng.below(5) as usize];
+            Codec::LZ,
+            Codec::SHUFFLE_LZ,
+            Codec::SHUFFLE_DELTA_LZ,
+            Codec::LZ_RC,
+            Codec::SHUFFLE_DELTA_LZ_RC,
+            Codec::LZ_TANS,
+            Codec::SHUFFLE_DELTA_LZ_TANS,
+        ][rng.below(7) as usize];
         let mut f = H5File::create(&path, 1).unwrap();
         let dc = f
             .create_dataset("/g", "plain", Dtype::U64, &[rows, cols])
@@ -390,7 +392,7 @@ fn prop_repack_preserves_contents() {
                     Dtype::U64,
                     &[rows, cols],
                     chunk_rows,
-                    Codec::Lz,
+                    Codec::LZ,
                 )
                 .unwrap();
             } else {

@@ -115,7 +115,7 @@ fn make_writer(path: &std::path::Path) -> H5File {
         Dtype::F32,
         &[CELL_ROWS, CELL_ELEMS as u64],
         8,
-        Codec::ShuffleDeltaLz,
+        Codec::SHUFFLE_DELTA_LZ,
     )
     .unwrap();
     f.commit().unwrap();
