@@ -1,0 +1,498 @@
+"""Reference port of the rust/src/sync bounded-interleaving model checker.
+
+A line-for-line port of ``sync::model`` (the CHESS-style bounded-DFS
+explorer) and the three protocol models in ``sync::protocols`` —
+commit/flush barrier ordering with fault injection, epoch-pin
+retire/park/release, and publisher subscriber-seeding. This is the
+container-side validation of the Rust subsystem (the established
+port-trick used for the h5lite codecs): the algorithm, the three
+invariants, and the buggy-variant catches are exercised here with the
+exact state machines the Rust tests compile, and the interleaving counts
+printed by ``-s`` calibrate the exhaustiveness floors asserted in
+``protocols.rs``.
+
+Stdlib only — no numpy/jax — so it runs anywhere pytest does.
+"""
+
+import copy
+from dataclasses import dataclass, field
+
+import pytest
+
+PROGRESS, BLOCKED, DONE = "progress", "blocked", "done"
+
+
+@dataclass
+class Stats:
+    executions: int = 0
+    states_visited: int = 0
+    preemption_pruned: int = 0
+    max_interleaving_len: int = 0
+
+
+@dataclass
+class Violation:
+    message: str
+    schedule: list
+
+
+class Checker:
+    """Port of sync::model::Checker: bounded-DFS over all interleavings."""
+
+    def __init__(self, max_preemptions=3, max_executions=2_000_000):
+        self.max_preemptions = max_preemptions
+        self.max_executions = max_executions
+
+    def explore(self, model, invariant):
+        stats, violation = self._search(model, invariant, stop_on_violation=False)
+        assert stats.executions > 0, "explored zero complete interleavings"
+        return stats
+
+    def explore_collect(self, model, invariant):
+        return self._search(model, invariant, stop_on_violation=True)
+
+    def _search(self, model, invariant, stop_on_violation):
+        stats = Stats()
+        schedule = []
+        first_violation = []
+
+        init = model.init()
+        msg = invariant(init)
+        if msg is not None:
+            v = Violation("initial state: " + msg, [])
+            if stop_on_violation:
+                return stats, v
+            raise AssertionError(v.message)
+
+        n = model.threads()
+
+        def dfs(state, done, last, preemptions):
+            if first_violation and stop_on_violation:
+                return
+            # probe runnability on clones (Blocked steps must not mutate,
+            # so a runnable probe's clone doubles as the branch state)
+            runnable = []
+            for tid in range(n):
+                if done[tid]:
+                    continue
+                branch = copy.deepcopy(state)
+                step = model.step(tid, branch)
+                if step != BLOCKED:
+                    runnable.append((tid, branch, step))
+
+            if not runnable:
+                if all(done):
+                    stats.executions += 1
+                    assert stats.executions <= self.max_executions
+                    stats.max_interleaving_len = max(
+                        stats.max_interleaving_len, len(schedule)
+                    )
+                else:
+                    stuck = [t for t in range(n) if not done[t]]
+                    v = Violation(
+                        f"deadlock: threads {stuck} blocked with no runnable peer "
+                        f"after schedule {schedule}",
+                        list(schedule),
+                    )
+                    if stop_on_violation:
+                        if not first_violation:
+                            first_violation.append(v)
+                    else:
+                        raise AssertionError(v.message)
+                return
+
+            last_still_runnable = last is not None and any(
+                t == last for t, _, _ in runnable
+            )
+            for tid, branch, step in runnable:
+                preempt = last_still_runnable and last != tid
+                budget = preemptions + 1 if preempt else preemptions
+                if budget > self.max_preemptions:
+                    stats.preemption_pruned += 1
+                    continue
+                stats.states_visited += 1
+                schedule.append(tid)
+                msg = invariant(branch)
+                if msg is not None:
+                    v = Violation(
+                        f"invariant violated: {msg} (schedule {schedule})",
+                        list(schedule),
+                    )
+                    if stop_on_violation:
+                        if not first_violation:
+                            first_violation.append(v)
+                        schedule.pop()
+                        return
+                    raise AssertionError(v.message)
+                next_done = list(done)
+                if step == DONE:
+                    next_done[tid] = True
+                dfs(branch, next_done, tid, budget)
+                schedule.pop()
+
+        dfs(init, [False] * n, None, 0)
+        return stats, (first_violation[0] if first_violation else None)
+
+
+# ---------------------------------------------------------------------------
+# checker self-tests (ports of sync::model::tests)
+# ---------------------------------------------------------------------------
+
+
+class Counter:
+    def __init__(self, per_thread):
+        self.per_thread = per_thread
+
+    def init(self):
+        return {"value": 0, "pc": [0, 0]}
+
+    def threads(self):
+        return 2
+
+    def step(self, tid, s):
+        s["value"] += 1
+        s["pc"][tid] += 1
+        return DONE if s["pc"][tid] == self.per_thread else PROGRESS
+
+
+def counter_invariant(s):
+    if s["value"] != s["pc"][0] + s["pc"][1]:
+        return f"value {s['value']} != pc sum"
+    return None
+
+
+def test_counter_explores_all_interleavings():
+    stats = Checker(max_preemptions=10**9).explore(Counter(2), counter_invariant)
+    assert stats.executions == 6  # C(4,2) interleavings of AABB
+    assert stats.max_interleaving_len == 4
+
+
+def test_preemption_bound_prunes():
+    full = Checker(max_preemptions=10**9).explore(Counter(3), lambda s: None)
+    bounded = Checker(max_preemptions=1).explore(Counter(3), lambda s: None)
+    assert bounded.executions < full.executions
+    assert bounded.preemption_pruned > 0
+    assert bounded.executions >= 2
+
+
+class AbBa:
+    """Classic AB/BA lock-order deadlock."""
+
+    def init(self):
+        return {"a": None, "b": None, "pc": [0, 0]}
+
+    def threads(self):
+        return 2
+
+    def step(self, tid, s):
+        first, second = ("a", "b") if tid == 0 else ("b", "a")
+        pc = s["pc"][tid]
+        if pc == 0:
+            if s[first] is not None:
+                return BLOCKED
+            s[first] = tid
+        elif pc == 1:
+            if s[second] is not None:
+                return BLOCKED
+            s[second] = tid
+        else:
+            s[first] = None
+            s[second] = None
+            s["pc"][tid] += 1
+            return DONE
+        s["pc"][tid] += 1
+        return PROGRESS
+
+
+def test_ab_ba_deadlock_detected():
+    _, violation = Checker(max_preemptions=10**9).explore_collect(
+        AbBa(), lambda s: None
+    )
+    assert violation is not None and "deadlock" in violation.message
+
+
+# ---------------------------------------------------------------------------
+# protocol (a): commit barriers vs. draining flusher + fault injection
+# ---------------------------------------------------------------------------
+
+FOOTER_PARTS = 2
+COMMIT_EPOCHS = 2
+W_PHASES = 5
+
+
+class CommitFlush:
+    def __init__(self, buggy):
+        self.buggy = buggy
+
+    def init(self):
+        return {
+            "queue": [],
+            "footer_parts": [0] * (COMMIT_EPOCHS + 1),
+            "flip": 0,
+            "writer_pc": 0,
+            "writer_done": False,
+            "flusher_dead": False,
+            "fault_fired": False,
+        }
+
+    def threads(self):
+        return 3
+
+    def step(self, tid, s):
+        if tid == 0:  # writer
+            if s["writer_done"]:
+                return DONE
+            if s["flusher_dead"]:
+                s["writer_done"] = True
+                return DONE
+            epoch = s["writer_pc"] // W_PHASES + 1
+            phase = s["writer_pc"] % W_PHASES
+            if self.buggy:
+                op = (
+                    ("flip", epoch)
+                    if phase == 0
+                    else (("part", epoch) if phase in (1, 2) else None)
+                )
+            else:
+                op = (
+                    ("part", epoch)
+                    if phase in (0, 1)
+                    else (("flip", epoch) if phase == 3 else None)
+                )
+            if op is not None:
+                s["queue"].append(op)
+            elif s["queue"]:
+                return BLOCKED  # durability barrier
+            s["writer_pc"] += 1
+            if s["writer_pc"] == COMMIT_EPOCHS * W_PHASES:
+                s["writer_done"] = True
+                return DONE
+            return PROGRESS
+        if tid == 1:  # flusher
+            if s["flusher_dead"]:
+                return DONE
+            if not s["queue"]:
+                return DONE if s["writer_done"] else BLOCKED
+            kind, e = s["queue"].pop(0)
+            if kind == "part":
+                s["footer_parts"][e] += 1
+            else:
+                s["flip"] = e
+            return PROGRESS
+        # fault injector
+        if not s["fault_fired"]:
+            s["fault_fired"] = True
+            s["flusher_dead"] = True
+        return DONE
+
+
+def commit_flush_invariant(s):
+    if s["flip"] != 0 and s["footer_parts"][s["flip"]] != FOOTER_PARTS:
+        return (
+            f"superblock points at epoch {s['flip']} but only "
+            f"{s['footer_parts'][s['flip']]}/{FOOTER_PARTS} footer parts are "
+            f"durable — recovery would read a torn footer"
+        )
+    return None
+
+
+def test_commit_flush_fixed_holds_on_every_interleaving(capsys):
+    stats = Checker().explore(CommitFlush(buggy=False), commit_flush_invariant)
+    print(f"\ncommit_flush fixed: {stats}")
+    assert stats.executions >= 50
+    assert stats.max_interleaving_len >= 10
+
+
+def test_commit_flush_buggy_flip_caught():
+    _, violation = Checker().explore_collect(
+        CommitFlush(buggy=True), commit_flush_invariant
+    )
+    assert violation is not None and "torn footer" in violation.message
+
+
+# ---------------------------------------------------------------------------
+# protocol (b): epoch-pin retire/park/release vs. concurrent commit
+# ---------------------------------------------------------------------------
+
+PIN_COMMITS = 2
+LIVE, PARKED, FREED = "live", "parked", "freed"
+
+
+def _min_pin(pins):
+    return min(pins) if pins else None
+
+
+def _release_parked(s):
+    floor = _min_pin(s["pins"])
+    for ext in s["extents"]:
+        if ext[1] == PARKED and (floor is None or ext[0] < floor):
+            ext[1] = FREED
+
+
+class PinRetire:
+    def __init__(self, buggy):
+        self.buggy = buggy
+
+    def init(self):
+        return {
+            "epoch": 0,
+            "pins": [],
+            "extents": [],  # [tag, status] pairs
+            "commits_done": 0,
+            "reader_pc": 0,
+            "reader_loaded": None,
+        }
+
+    def threads(self):
+        return 2
+
+    def step(self, tid, s):
+        if tid == 0:  # committing writer
+            if s["commits_done"] == PIN_COMMITS:
+                return DONE
+            tag = s["epoch"]
+            s["epoch"] += 1
+            mp = _min_pin(s["pins"])
+            status = PARKED if (mp is not None and mp <= tag) else FREED
+            s["extents"].append([tag, status])
+            _release_parked(s)
+            s["commits_done"] += 1
+            return PROGRESS
+        # reader: pin → read → unpin
+        pc = s["reader_pc"]
+        if pc == 0 and not self.buggy:
+            s["pins"].append(s["epoch"])
+            s["reader_pc"] = 2
+            return PROGRESS
+        if pc == 0:  # buggy: epoch load only
+            s["reader_loaded"] = s["epoch"]
+            s["reader_pc"] = 1
+            return PROGRESS
+        if pc == 1:  # buggy: pins insert as a second step
+            s["pins"].append(s["reader_loaded"])
+            s["reader_loaded"] = None
+            s["reader_pc"] = 2
+            return PROGRESS
+        if pc == 2:  # the read
+            s["reader_pc"] = 3
+            return PROGRESS
+        if pc == 3:  # unpin + release_parked
+            s["pins"].pop()
+            _release_parked(s)
+            s["reader_pc"] = 4
+            return DONE
+        return DONE
+
+
+def pin_retire_invariant(s):
+    for tag, status in s["extents"]:
+        if status == FREED:
+            mp = _min_pin(s["pins"])
+            if mp is not None and mp <= tag:
+                return (
+                    f"extent retired at epoch {tag} is freed while a pin at epoch "
+                    f"{mp} <= {tag} is outstanding"
+                )
+    return None
+
+
+def test_pin_retire_fixed_holds_on_every_interleaving(capsys):
+    stats = Checker().explore(PinRetire(buggy=False), pin_retire_invariant)
+    print(f"\npin_retire fixed: {stats}")
+    assert stats.executions >= 10
+
+
+def test_pin_retire_buggy_split_pin_caught():
+    _, violation = Checker().explore_collect(
+        PinRetire(buggy=True), pin_retire_invariant
+    )
+    assert violation is not None and "freed while a pin" in violation.message
+
+
+# ---------------------------------------------------------------------------
+# protocol (c): subscriber seeding vs. durable-watermark advance
+# ---------------------------------------------------------------------------
+
+PUB_SEQS = 3
+
+
+class PubSeed:
+    def __init__(self, buggy):
+        self.buggy = buggy
+
+    def init(self):
+        return {
+            "published": 0,
+            "retained": [],
+            "durable": 0,
+            "delivered": [],
+            "seed_from": 0,
+            "registered": False,
+            "pending_seed": None,
+            "registrar_pc": 0,
+        }
+
+    def threads(self):
+        return 3
+
+    def step(self, tid, s):
+        if tid == 0:  # publishing writer (on_batch under PubInner)
+            if s["published"] == PUB_SEQS:
+                return DONE
+            s["published"] += 1
+            s["retained"].append(s["published"])
+            if s["registered"]:
+                s["delivered"].append(s["published"])
+            return DONE if s["published"] == PUB_SEQS else PROGRESS
+        if tid == 1:  # flusher (on_durable: advance watermark, prune)
+            if s["durable"] == s["published"]:
+                return DONE if s["published"] == PUB_SEQS else BLOCKED
+            s["durable"] += 1
+            d = s["durable"]
+            s["retained"] = [q for q in s["retained"] if q > d]
+            return PROGRESS
+        # registrar
+        if not self.buggy:
+            if s["registrar_pc"] == 0:
+                s["delivered"] = list(s["retained"])
+                s["seed_from"] = s["durable"]
+                s["registered"] = True
+                s["registrar_pc"] = 1
+            return DONE
+        if s["registrar_pc"] == 0:  # buggy: snapshot…
+            s["pending_seed"] = (list(s["retained"]), s["durable"])
+            s["registrar_pc"] = 1
+            return PROGRESS
+        seed, from_ = s["pending_seed"]  # …register later
+        s["pending_seed"] = None
+        s["delivered"] = seed
+        s["seed_from"] = from_
+        s["registered"] = True
+        return DONE
+
+
+def pub_seed_invariant(s):
+    if not s["registered"]:
+        return None
+    for seq in range(s["seed_from"] + 1, s["published"] + 1):
+        if seq not in s["delivered"]:
+            return (
+                f"subscriber seeded from watermark {s['seed_from']} is missing "
+                f"seq {seq} (published through {s['published']}): gapped seed"
+            )
+    return None
+
+
+def test_pub_seed_fixed_holds_on_every_interleaving(capsys):
+    stats = Checker().explore(PubSeed(buggy=False), pub_seed_invariant)
+    print(f"\npub_seed fixed: {stats}")
+    assert stats.executions >= 20
+
+
+def test_pub_seed_buggy_split_registration_caught():
+    _, violation = Checker().explore_collect(PubSeed(buggy=True), pub_seed_invariant)
+    assert violation is not None and "gapped seed" in violation.message
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-v", "-s"]))

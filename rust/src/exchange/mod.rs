@@ -188,7 +188,9 @@ pub fn horizontal(
     let msgs = AtomicU64::new(0);
     let cross = AtomicU64::new(0);
     let total = AtomicU64::new(0);
-    let gptr = crate::util::SendPtr::new(grids);
+    // aliased — same me-mutable/peer-shared discipline as
+    // `solver::level_exchange`
+    let gptr = crate::util::SendPtr::new_aliased(grids);
     let n = nbs.tree.len();
     crate::util::parallel_for(n, |i| {
         let idx = i as u32;
@@ -202,6 +204,8 @@ pub fn horizontal(
                     apply_face_bc(gen.of_mut(me), face, bc.face(face));
                 }
                 Neighbour::Same { idx: nb } => {
+                    // SAFETY: shared read of a neighbour's interior —
+                    // cells no task writes in this pass (aliased pointer).
                     let peer = unsafe { &gptr.slice(nb as usize, 1)[0] };
                     let src_rank = nbs.tree.node(nb).rank;
                     let dst_rank = nbs.tree.node(idx).rank;

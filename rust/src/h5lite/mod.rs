@@ -187,9 +187,11 @@ pub mod store;
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
+
+use crate::sync::{LockRank, OrderedCondvar, OrderedMutex};
 
 use codec::{Codec, Dec, Enc};
 use store::{DirectFile, PagedImage};
@@ -451,13 +453,12 @@ impl FreeList {
 /// session): a pin must survive `&mut` use of the file handle — the writer
 /// keeps rewriting and committing while sessions read — so this state
 /// lives behind an `Arc` instead of in the handle itself.
-#[derive(Default)]
 struct SpaceShared {
     /// Allocatable free extents.
-    free: Mutex<FreeList>,
+    free: OrderedMutex<FreeList>,
     /// Extents retired this epoch under [`ReusePolicy::AfterCommit`]: the
     /// live committed footer still references them.
-    pending: Mutex<FreeList>,
+    pending: OrderedMutex<FreeList>,
     /// Generation-tagged retire queue: extents (and superseded footers)
     /// already unreferenced by the live footer, but retired while commit
     /// epoch `tag` was current. A session pinned at epoch `P` opened the
@@ -465,12 +466,28 @@ struct SpaceShared {
     /// so an entry releases to `free` only once every pin `<= tag` is
     /// gone. On disk these bytes are recorded as free — pins are
     /// in-process state, and a fresh open has no sessions to protect.
-    parked: Mutex<BTreeMap<u64, FreeList>>,
-    /// Pinned commit epoch → number of live [`EpochPin`]s.
-    pins: Mutex<BTreeMap<u64, u64>>,
+    parked: OrderedMutex<BTreeMap<u64, FreeList>>,
+    /// Pinned commit epoch → number of live [`EpochPin`]s. Held across the
+    /// commit's epoch-bump + park-vs-free decision and across
+    /// [`H5File::pin_epoch`]'s load + insert, so neither side can slip
+    /// between the other's steps (the freed-while-pinned race — model (b)
+    /// in [`crate::sync::protocols`]).
+    pins: OrderedMutex<BTreeMap<u64, u64>>,
     /// Commits completed through this handle (the in-process epoch clock;
     /// not persisted — see `parked` for why that is sound).
     epoch: AtomicU64,
+}
+
+impl Default for SpaceShared {
+    fn default() -> SpaceShared {
+        SpaceShared {
+            free: OrderedMutex::new(LockRank::SpaceFree, FreeList::default()),
+            pending: OrderedMutex::new(LockRank::SpacePending, FreeList::default()),
+            parked: OrderedMutex::new(LockRank::SpaceParked, BTreeMap::new()),
+            pins: OrderedMutex::new(LockRank::SpacePins, BTreeMap::new()),
+            epoch: AtomicU64::new(0),
+        }
+    }
 }
 
 impl SpaceShared {
@@ -1093,10 +1110,18 @@ enum FlightState {
     Failed,
 }
 
-#[derive(Default)]
 struct Inflight {
-    state: Mutex<FlightState>,
-    cv: Condvar,
+    state: OrderedMutex<FlightState>,
+    cv: OrderedCondvar,
+}
+
+impl Default for Inflight {
+    fn default() -> Inflight {
+        Inflight {
+            state: OrderedMutex::new(LockRank::FlightState, FlightState::default()),
+            cv: OrderedCondvar::new(),
+        }
+    }
 }
 
 impl Inflight {
@@ -1177,14 +1202,14 @@ pub struct SharedCacheStats {
 /// Attach a handle with [`H5File::attach_shared_cache`]; reads then route
 /// here instead of the private [`ChunkCache`].
 pub struct SharedChunkCache {
-    shards: Vec<Mutex<CacheShard>>,
+    shards: Vec<OrderedMutex<CacheShard>>,
     budget: AtomicU64,
     /// Resident decoded bytes across all shards.
     bytes: AtomicU64,
     /// Global LRU clock (ticks are comparable across shards).
     tick: AtomicU64,
     /// Canonical path → registered file key.
-    files: Mutex<HashMap<PathBuf, u64>>,
+    files: OrderedMutex<HashMap<PathBuf, u64>>,
     next_file: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -1198,11 +1223,13 @@ impl SharedChunkCache {
     /// single-flight coalescing still deduplicates concurrent decodes).
     pub fn new(budget: u64) -> Arc<SharedChunkCache> {
         Arc::new(SharedChunkCache {
-            shards: (0..CACHE_SHARDS).map(|_| Mutex::default()).collect(),
+            shards: (0..CACHE_SHARDS)
+                .map(|_| OrderedMutex::new(LockRank::CacheShard, CacheShard::default()))
+                .collect(),
             budget: AtomicU64::new(budget),
             bytes: AtomicU64::new(0),
             tick: AtomicU64::new(0),
-            files: Mutex::new(HashMap::new()),
+            files: OrderedMutex::new(LockRank::CacheFiles, HashMap::new()),
             next_file: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -1384,12 +1411,12 @@ pub struct H5File {
     pub path: PathBuf,
     pub root: Group,
     /// Next free data offset (end of data region).
-    data_end: Mutex<u64>,
+    data_end: OrderedMutex<u64>,
     /// Alignment for contiguous dataset payload starts (paper §5.2;
     /// 1 = none). Compressed chunk extents are packed unaligned.
     pub alignment: u64,
     version: u32,
-    chunks: Mutex<ChunkRegistry>,
+    chunks: OrderedMutex<ChunkRegistry>,
     next_ds_id: AtomicU64,
     /// Free-space manager state (free / pending / parked extents, the
     /// epoch clock and the pin table), shared with [`EpochPin`]s so read
@@ -1398,7 +1425,7 @@ pub struct H5File {
     /// Extent of the footer the on-disk superblock points at, `(off, len)`
     /// (`(0, 0)` before the first commit). Never overwritten in place;
     /// retired to the free-space manager when superseded.
-    committed_footer: Mutex<(u64, u64)>,
+    committed_footer: OrderedMutex<(u64, u64)>,
     reuse_policy: ReusePolicy,
     /// Cumulative bytes retired to the free-space manager.
     reclaimed: AtomicU64,
@@ -1408,7 +1435,7 @@ pub struct H5File {
     read_bytes: AtomicU64,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
-    cache: Mutex<ChunkCache>,
+    cache: OrderedMutex<ChunkCache>,
     /// Bumped on every chunk-extent write; readers snapshot it before
     /// loading an extent and only populate the cache if it is unchanged
     /// after decoding, so a write racing a reader of the same chunk can
@@ -1428,11 +1455,11 @@ pub struct H5File {
     /// re-encode, swap extent) is not atomic per chunk. Chunk-granular
     /// writers ([`H5File::write_chunk_encoded`], used by the aggregators)
     /// bypass this and stay fully parallel.
-    rmw: Mutex<()>,
+    rmw: OrderedMutex<()>,
     /// Epoch-versioned contiguous write-aside state, keyed by tree offset
     /// (see [`ContigState`]). Always consulted for resolution; relocation
     /// itself only happens on v2.1 under [`ReusePolicy::AfterCommit`].
-    contig: Mutex<HashMap<u64, ContigState>>,
+    contig: OrderedMutex<HashMap<u64, ContigState>>,
 }
 
 impl H5File {
@@ -1488,25 +1515,25 @@ impl H5File {
             file,
             path: path.as_ref().to_path_buf(),
             root: Group::default(),
-            data_end: Mutex::new(SUPERBLOCK_LEN),
+            data_end: OrderedMutex::new(LockRank::FileDataEnd, SUPERBLOCK_LEN),
             alignment,
             version,
-            chunks: Mutex::new(HashMap::new()),
+            chunks: OrderedMutex::new(LockRank::FileChunks, HashMap::new()),
             next_ds_id: AtomicU64::new(1),
             space: Arc::new(SpaceShared::default()),
-            committed_footer: Mutex::new((0, 0)),
+            committed_footer: OrderedMutex::new(LockRank::FileCommittedFooter, (0, 0)),
             reuse_policy: ReusePolicy::AfterCommit,
             reclaimed: AtomicU64::new(0),
             reused: AtomicU64::new(0),
             read_bytes: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
-            cache: Mutex::new(ChunkCache::default()),
+            cache: OrderedMutex::new(LockRank::FileCache, ChunkCache::default()),
             cache_gen: AtomicU64::new(0),
             cache_coalesced: AtomicU64::new(0),
             shared_cache: None,
-            rmw: Mutex::new(()),
-            contig: Mutex::new(HashMap::new()),
+            rmw: OrderedMutex::new(LockRank::FileRmw, ()),
+            contig: OrderedMutex::new(LockRank::FileContig, HashMap::new()),
         };
         f.commit()?;
         Ok(f)
@@ -1578,28 +1605,28 @@ impl H5File {
             file,
             path: path.as_ref().to_path_buf(),
             root,
-            data_end: Mutex::new(file_len),
+            data_end: OrderedMutex::new(LockRank::FileDataEnd, file_len),
             alignment,
             version,
-            chunks: Mutex::new(reg),
+            chunks: OrderedMutex::new(LockRank::FileChunks, reg),
             next_ds_id: AtomicU64::new(next_id),
             space: Arc::new(SpaceShared {
-                free: Mutex::new(free),
+                free: OrderedMutex::new(LockRank::SpaceFree, free),
                 ..SpaceShared::default()
             }),
-            committed_footer: Mutex::new((footer_off, footer_len)),
+            committed_footer: OrderedMutex::new(LockRank::FileCommittedFooter, (footer_off, footer_len)),
             reuse_policy: ReusePolicy::AfterCommit,
             reclaimed: AtomicU64::new(0),
             reused: AtomicU64::new(0),
             read_bytes: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
-            cache: Mutex::new(ChunkCache::default()),
+            cache: OrderedMutex::new(LockRank::FileCache, ChunkCache::default()),
             cache_gen: AtomicU64::new(0),
             cache_coalesced: AtomicU64::new(0),
             shared_cache: None,
-            rmw: Mutex::new(()),
-            contig: Mutex::new(contig),
+            rmw: OrderedMutex::new(LockRank::FileRmw, ()),
+            contig: OrderedMutex::new(LockRank::FileContig, contig),
         })
     }
 
@@ -1781,22 +1808,34 @@ impl H5File {
             (footer_off, footer_len),
         );
         if self.version >= FORMAT_V21 {
-            let epoch = self.space.epoch.fetch_add(1, Ordering::Relaxed);
             let mut retired = std::mem::take(&mut *self.space.pending.lock().unwrap());
             if prev.1 > 0 {
                 self.reclaimed.fetch_add(prev.1, Ordering::Relaxed);
                 retired.insert(prev.0, prev.1);
             }
-            if self.space.min_pin().map_or(false, |p| p <= epoch) {
-                self.space
-                    .parked
-                    .lock()
-                    .unwrap()
-                    .entry(epoch)
-                    .or_default()
-                    .absorb(retired);
-            } else {
-                self.space.free.lock().unwrap().absorb(retired);
+            {
+                // The pins lock is held across the epoch bump AND the
+                // park-vs-free decision: a concurrent pin_epoch observes
+                // either (old epoch, retired extents still pending/about
+                // to park) or (new epoch, decision already made) — never
+                // the half-state where the bump landed, the pin table
+                // looked empty, and these extents got freed under a pin
+                // that was one instruction from existing. Model (b) in
+                // crate::sync::protocols explores exactly this; its buggy
+                // variant is the unlocked shape this replaces.
+                let pins = self.space.pins.lock().unwrap();
+                let epoch = self.space.epoch.fetch_add(1, Ordering::Relaxed);
+                if pins.keys().next().map_or(false, |&p| p <= epoch) {
+                    self.space
+                        .parked
+                        .lock()
+                        .unwrap()
+                        .entry(epoch)
+                        .or_default()
+                        .absorb(retired);
+                } else {
+                    self.space.free.lock().unwrap().absorb(retired);
+                }
             }
             // pins may have dropped since the last release trigger
             self.space.release_parked();
@@ -1813,8 +1852,15 @@ impl H5File {
     /// `window::SnapshotReader` session; see [`EpochPin`] for the policy
     /// caveats ([`ReusePolicy::Immediate`] is not covered).
     pub fn pin_epoch(&self) -> EpochPin {
+        // Load the epoch UNDER the pins lock: loading first and inserting
+        // under the lock afterwards races commit — it can bump the epoch,
+        // see an empty pin table, and free this epoch's retired extents
+        // between our load and our insert (freed-while-pinned; caught by
+        // the sync::protocols pin-retire model's buggy variant).
+        let mut pins = self.space.pins.lock().unwrap();
         let epoch = self.space.epoch.load(Ordering::Relaxed);
-        *self.space.pins.lock().unwrap().entry(epoch).or_insert(0) += 1;
+        *pins.entry(epoch).or_insert(0) += 1;
+        drop(pins);
         EpochPin {
             space: Arc::clone(&self.space),
             epoch,

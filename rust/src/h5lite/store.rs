@@ -36,11 +36,13 @@ use std::fs::{File, OpenOptions};
 use std::os::unix::fs::FileExt;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
+
+use crate::sync::{LockRank, OrderedCondvar, OrderedMutex};
 
 /// Which [`Store`] backend an [`H5File`](super::H5File) runs on.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
@@ -294,8 +296,8 @@ struct FlushQueue {
 }
 
 struct FlushShared {
-    queue: Mutex<FlushQueue>,
-    cv: Condvar,
+    queue: OrderedMutex<FlushQueue>,
+    cv: OrderedCondvar,
     flushed_bytes: AtomicU64,
     busy_ns: AtomicU64,
     barriers_issued: AtomicU64,
@@ -304,7 +306,7 @@ struct FlushShared {
     /// Fault injection threshold (`u64::MAX` = disabled).
     fault_after: AtomicU64,
     /// Streaming tee, if attached (see [`BatchSink`]).
-    sink: Mutex<Option<Arc<dyn BatchSink>>>,
+    sink: OrderedMutex<Option<Arc<dyn BatchSink>>>,
 }
 
 impl FlushShared {
@@ -318,9 +320,9 @@ impl FlushShared {
 /// disk. See the module docs for the durability contract.
 pub struct PagedImage {
     file: File,
-    state: Mutex<ImageState>,
+    state: OrderedMutex<ImageState>,
     shared: Arc<FlushShared>,
-    flusher: Mutex<Option<JoinHandle<()>>>,
+    flusher: OrderedMutex<Option<JoinHandle<()>>>,
 }
 
 impl PagedImage {
@@ -345,19 +347,22 @@ impl PagedImage {
     fn with_file(file: File) -> Result<PagedImage> {
         let len = file.metadata()?.len();
         let shared = Arc::new(FlushShared {
-            queue: Mutex::new(FlushQueue {
-                batches: VecDeque::new(),
-                shutdown: false,
-                dead: None,
-            }),
-            cv: Condvar::new(),
+            queue: OrderedMutex::new(
+                LockRank::StoreQueue,
+                FlushQueue {
+                    batches: VecDeque::new(),
+                    shutdown: false,
+                    dead: None,
+                },
+            ),
+            cv: OrderedCondvar::new(),
             flushed_bytes: AtomicU64::new(0),
             busy_ns: AtomicU64::new(0),
             barriers_issued: AtomicU64::new(0),
             barriers_durable: AtomicU64::new(0),
             queued_bytes: AtomicU64::new(0),
             fault_after: AtomicU64::new(u64::MAX),
-            sink: Mutex::new(None),
+            sink: OrderedMutex::new(LockRank::StoreSink, None),
         });
         let flush_file = file.try_clone()?;
         let flush_shared = Arc::clone(&shared);
@@ -367,13 +372,16 @@ impl PagedImage {
             .context("h5lite: spawn flusher")?;
         Ok(PagedImage {
             file,
-            state: Mutex::new(ImageState {
-                pages: BTreeMap::new(),
-                len,
-                dirty: RangeSet::default(),
-            }),
+            state: OrderedMutex::new(
+                LockRank::StoreState,
+                ImageState {
+                    pages: BTreeMap::new(),
+                    len,
+                    dirty: RangeSet::default(),
+                },
+            ),
             shared,
-            flusher: Mutex::new(Some(handle)),
+            flusher: OrderedMutex::new(LockRank::StoreFlusherHandle, Some(handle)),
         })
     }
 
@@ -651,7 +659,12 @@ impl Drop for PagedImage {
             q.shutdown = true;
         }
         self.shared.cv.notify_all();
-        if let Some(h) = self.flusher.lock().unwrap().take() {
+        // take the handle out of its lock, then drop the guard BEFORE
+        // joining: joining a thread while holding any lock is the
+        // join-under-lock shape the rank audit exists to keep out (the
+        // joined thread only needs StoreQueue here, but the pattern rots)
+        let handle = self.flusher.lock().unwrap().take();
+        if let Some(h) = handle {
             let _ = h.join();
         }
     }
@@ -661,6 +674,7 @@ impl Drop for PagedImage {
 mod tests {
     use super::*;
     use std::path::PathBuf;
+    use std::sync::Mutex;
 
     fn tmp(name: &str) -> PathBuf {
         let mut p = std::env::temp_dir();

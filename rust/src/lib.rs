@@ -29,8 +29,17 @@
 //!   remote viewers follow a running simulation byte-identically without
 //!   touching the shared file system.
 //!
+//! Every lock in the concurrent core carries a static rank from the
+//! [`sync`] analysis layer (deadlock-freedom checked in debug builds,
+//! zero-cost passthrough in release), and the commit/flush, epoch-pin
+//! and stream-seeding protocols are exhaustively model-checked by
+//! [`sync::model`]; `CONCURRENCY.md` maps every lock family → rank →
+//! what it protects → who acquires it with what held.
+//!
 //! See `DESIGN.md` for the complete system inventory and the experiment
 //! index mapping every figure/table of the paper to a bench/example.
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod cluster;
 pub mod util;
@@ -48,6 +57,7 @@ pub mod runtime;
 pub mod solver;
 pub mod steering;
 pub mod stream;
+pub mod sync;
 pub mod tree;
 pub mod vpic;
 pub mod window;

@@ -241,7 +241,7 @@ impl PyramidBuilder {
                     fold_octant_cells(&vals, octant, |at, val| {
                         // SAFETY: each leaf owns its octant's disjoint
                         // cells; `base + at` is in bounds of the level buf
-                        unsafe { *ptr.0.add(base + at) = val }
+                        unsafe { *ptr.base().add(base + at) = val }
                     });
                 }
                 RowTarget::Direct { level_ix, level_row } => {

@@ -13,7 +13,7 @@
 //! (Hand-rolled argument parsing — no CLI crates in the offline registry.)
 
 use std::collections::HashMap;
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -25,6 +25,7 @@ use mpfluid::pario::ParallelIo;
 use mpfluid::physics::{ComputeBackend, RustBackend};
 use mpfluid::runtime::PjrtBackend;
 use mpfluid::steering::TrsSession;
+use mpfluid::sync::{LockRank, OrderedRwLock};
 use mpfluid::tree::BBox;
 use mpfluid::util::fmt_gbps;
 use mpfluid::{iokernel, window};
@@ -109,7 +110,7 @@ fn pick_backend(flags: &HashMap<String, String>) -> Result<Box<dyn ComputeBacken
 }
 
 fn run_loop(
-    sim: Arc<RwLock<Simulation>>,
+    sim: Arc<OrderedRwLock<Simulation>>,
     backend: &dyn ComputeBackend,
     steps: u64,
     checkpoint_every: u64,
@@ -191,7 +192,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     );
     let io = ParallelIo::new(scenario.machine.clone(), scenario.tuning, scenario.ranks as u64);
     let mut trs = TrsSession::create(std::path::Path::new(&out), &sim, scenario.alignment)?;
-    let shared = Arc::new(RwLock::new(sim));
+    let shared = Arc::new(OrderedRwLock::new(LockRank::SimulationState, sim));
     let _collector = if flags.contains_key("collector") {
         let c = window::Collector::spawn(shared.clone())?;
         eprintln!("collector listening on {}", c.addr);
@@ -236,7 +237,7 @@ fn cmd_restart(flags: &HashMap<String, String>) -> Result<()> {
     let io = ParallelIo::new(Machine::local(), IoTuning::default(), sim.part.n_ranks as u64);
     let branch_path = std::path::Path::new(path).with_extension("restart.h5");
     let mut trs = TrsSession::create(&branch_path, &sim, file.alignment)?;
-    let shared = Arc::new(RwLock::new(sim));
+    let shared = Arc::new(OrderedRwLock::new(LockRank::SimulationState, sim));
     run_loop(shared, backend.as_ref(), steps, 25, &mut trs, &io)?;
     eprintln!("branch written to {}", branch_path.display());
     Ok(())

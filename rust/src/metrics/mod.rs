@@ -3,9 +3,9 @@
 //! crate; everything is plain atomics so it can be shared across the
 //! collector/steering threads).
 
+use crate::sync::{LockRank, OrderedMutex};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
 /// Canonical metric names shared across modules, so tests and the bench
@@ -67,12 +67,26 @@ pub mod names {
 
 /// A set of named counters (u64), timers (accumulated nanoseconds) and
 /// gauges (last-written f64 samples).
-#[derive(Default)]
+///
+/// The three registry maps share [`LockRank::MetricsRegistry`] — the
+/// global leaf rank: metrics are recorded from under locks all over the
+/// crate, and no method here holds two registry maps at once (report()
+/// walks them strictly sequentially).
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, AtomicU64>>,
-    timers: Mutex<BTreeMap<String, AtomicU64>>,
+    counters: OrderedMutex<BTreeMap<String, AtomicU64>>,
+    timers: OrderedMutex<BTreeMap<String, AtomicU64>>,
     /// f64 samples stored as raw bits so gauges share the atomic plumbing.
-    gauges: Mutex<BTreeMap<String, AtomicU64>>,
+    gauges: OrderedMutex<BTreeMap<String, AtomicU64>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            counters: OrderedMutex::new(LockRank::MetricsRegistry, BTreeMap::new()),
+            timers: OrderedMutex::new(LockRank::MetricsRegistry, BTreeMap::new()),
+            gauges: OrderedMutex::new(LockRank::MetricsRegistry, BTreeMap::new()),
+        }
+    }
 }
 
 impl Metrics {

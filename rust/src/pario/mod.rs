@@ -35,7 +35,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -45,6 +45,7 @@ use crate::h5lite::codec::Codec;
 use crate::h5lite::{codec, Backing, Dataset, Dtype, H5File, Layout};
 use crate::lod::PyramidBuilder;
 use crate::metrics::{names, Metrics};
+use crate::sync::{LockRank, OrderedMutex};
 use crate::util::parallel_for;
 
 /// One rank's contribution to a collective dataset write.
@@ -210,12 +211,12 @@ pub struct ParallelIo {
     /// Counters/timers of everything this driver moved (`pario.*`).
     pub metrics: Metrics,
     /// Global lock used when `tuning.file_locking` (GPFS token stand-in).
-    lock: Mutex<()>,
+    lock: OrderedMutex<()>,
     /// In-transit epoch publisher attached to the snapshot file, if any —
     /// the driver only *reads* its stats (publish time, backlog) into each
     /// [`IoReport`]; attaching it to the file is the caller's move
     /// ([`crate::stream::EpochPublisher::attach`]).
-    publisher: Mutex<Option<Arc<crate::stream::EpochPublisher>>>,
+    publisher: OrderedMutex<Option<Arc<crate::stream::EpochPublisher>>>,
 }
 
 /// An op the fill phase produced: contiguous rows of one dataset.
@@ -245,8 +246,8 @@ impl ParallelIo {
             tuning,
             n_ranks,
             metrics: Metrics::new(),
-            lock: Mutex::new(()),
-            publisher: Mutex::new(None),
+            lock: OrderedMutex::new(LockRank::ParioFileLock, ()),
+            publisher: OrderedMutex::new(LockRank::ParioPublisher, None),
         }
     }
 
@@ -359,7 +360,9 @@ impl ParallelIo {
         let compress_ns = AtomicU64::new(0);
         let lod_ns = AtomicU64::new(0);
         let tally = CodecTally::default();
-        let errors = Mutex::new(Vec::new());
+        // Leaf-adjacent rank: pushed to with the aggregator's file lock
+        // (ParioFileLock) still held on the contiguous path.
+        let errors = OrderedMutex::new(LockRank::ParioErrors, Vec::new());
         parallel_for(aggs as usize, |a| {
             for op in &merged[a] {
                 let guard = if self.tuning.file_locking {

@@ -114,6 +114,8 @@ impl ComputeBackend for RustBackend {
         let v = BatchViews::new(b);
         let optr = SendPtr::new(out);
         parallel_for(b, |i| {
+            // SAFETY: block i owns rows [i*interior, (i+1)*interior) —
+            // one task per block, ranges pairwise disjoint.
             let o = unsafe { optr.slice(i * v.interior, v.interior) };
             jacobi_block(
                 DGRID_N,
@@ -138,6 +140,8 @@ impl ComputeBackend for RustBackend {
         let rptr = SendPtr::new(r);
         let sptr = SendPtr::new(ssq);
         parallel_for(b, |i| {
+            // SAFETY: block i owns residual rows [i*interior, ...) and
+            // the single ssq cell i — disjoint per task.
             let ro = unsafe { rptr.slice(i * v.interior, v.interior) };
             let so = unsafe { sptr.slice(i, 1) };
             so[0] = residual_block(
@@ -162,6 +166,7 @@ impl ComputeBackend for RustBackend {
         let v = BatchViews::new(b);
         let optr = SendPtr::new(out);
         parallel_for(b, |i| {
+            // SAFETY: block i owns [i*interior, (i+1)*interior).
             let o = unsafe { optr.slice(i * v.interior, v.interior) };
             divergence_block(
                 DGRID_N,
@@ -194,6 +199,8 @@ impl ComputeBackend for RustBackend {
         let vptr = SendPtr::new(vo);
         let wptr = SendPtr::new(wo);
         parallel_for(b, |i| {
+            // SAFETY: block i owns its interior range of each of the
+            // three velocity buffers — disjoint per task per buffer.
             let a = unsafe { uptr.slice(i * v.interior, v.interior) };
             let bq = unsafe { vptr.slice(i * v.interior, v.interior) };
             let c = unsafe { wptr.slice(i * v.interior, v.interior) };
@@ -220,6 +227,8 @@ impl ComputeBackend for RustBackend {
         let wptr = SendPtr::new(wo);
         let tptr = SendPtr::new(to);
         parallel_for(b, |i| {
+            // SAFETY: block i owns its interior range of each output
+            // buffer (u, v, w, T) — disjoint per task per buffer.
             let a = unsafe { uptr.slice(i * v.interior, v.interior) };
             let bq = unsafe { vptr.slice(i * v.interior, v.interior) };
             let c = unsafe { wptr.slice(i * v.interior, v.interior) };
@@ -244,6 +253,7 @@ impl ComputeBackend for RustBackend {
         let half = int_len(DGRID_N / 2);
         let optr = SendPtr::new(out);
         parallel_for(b, |i| {
+            // SAFETY: block i owns the coarse rows [i*half, (i+1)*half).
             let o = unsafe { optr.slice(i * half, half) };
             restrict_block(DGRID_N, &fine[i * v.interior..(i + 1) * v.interior], o);
         });

@@ -180,6 +180,9 @@ impl PjrtBackend {
             .ok_or_else(|| anyhow!("runtime: no artifact '{name}' at batch {b}"))?;
         let mut lits = Vec::with_capacity(fields.len() + 1);
         for (data, dims) in fields {
+            // SAFETY: reinterpreting an f32 slice as its raw bytes — same
+            // allocation, length in bytes = len * size_of::<f32>(), and u8
+            // has no alignment or validity requirements.
             let bytes: &[u8] = unsafe {
                 std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
             };

@@ -17,6 +17,7 @@ pub fn pack_halo(grids: &[DGrid], idxs: &[u32], gen: Gen, var: usize, out: &mut 
     out.resize(idxs.len() * PADDED_LEN, 0.0);
     let ptr = SendPtr::new(&mut out[..]);
     parallel_for(idxs.len(), |i| {
+        // SAFETY: task i owns out rows [i*PADDED_LEN, (i+1)*PADDED_LEN).
         let dst = unsafe { ptr.slice(i * PADDED_LEN, PADDED_LEN) };
         dst.copy_from_slice(gen.of(&grids[idxs[i] as usize]).var(var));
     });
@@ -31,9 +32,10 @@ pub fn scatter_interior(
     data: &[f32],
 ) {
     assert_eq!(data.len(), idxs.len() * DGRID_CELLS);
-    // distinct idxs ⇒ disjoint grids; parallel scatter is sound
     let ptr = SendPtr::new(grids);
     parallel_for(idxs.len(), |i| {
+        // SAFETY: distinct idxs ⇒ disjoint grids, one task per index (the
+        // debug claims registry rejects a duplicated index).
         let g = unsafe { &mut ptr.slice(idxs[i] as usize, 1)[0] };
         gen.of_mut(g)
             .set_interior(var, &data[i * DGRID_CELLS..(i + 1) * DGRID_CELLS]);
@@ -45,6 +47,7 @@ pub fn pack_interior(grids: &[DGrid], idxs: &[u32], gen: Gen, var: usize, out: &
     out.resize(idxs.len() * DGRID_CELLS, 0.0);
     let ptr = SendPtr::new(&mut out[..]);
     parallel_for(idxs.len(), |i| {
+        // SAFETY: task i owns out rows [i*DGRID_CELLS, (i+1)*DGRID_CELLS).
         let dst = unsafe { ptr.slice(i * DGRID_CELLS, DGRID_CELLS) };
         gen.of(&grids[idxs[i] as usize]).extract_interior(var, dst);
     });

@@ -104,7 +104,9 @@ pub fn level_exchange(
     // task writes only its own grid's ghost layer and reads only
     // neighbours' *interiors* — disjoint regions, expressed via SendPtr.
     let idxs = nbs.tree.nodes_at_depth(depth);
-    let gptr = crate::util::SendPtr::new(grids);
+    // aliased: `me` is task-exclusive &mut, peers are shared reads of
+    // interiors no task writes this pass — overlap is the contract here
+    let gptr = crate::util::SendPtr::new_aliased(grids);
     crate::util::parallel_for(idxs.len(), |task| {
         let idx = idxs[task];
         let mut buf = [0.0f32; N * N];

@@ -82,11 +82,13 @@ use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
+
+use crate::sync::{LockRank, OrderedCondvar, OrderedMutex};
 
 use crate::h5lite::store::{BatchSink, PagedImage, Store};
 use crate::h5lite::H5File;
@@ -237,7 +239,7 @@ struct SubSlot {
     dead: bool,
 }
 
-type Slot = Arc<(Mutex<SubSlot>, Condvar)>;
+type Slot = Arc<(OrderedMutex<SubSlot>, OrderedCondvar)>;
 
 struct PubInner {
     subs: Vec<Slot>,
@@ -251,7 +253,7 @@ struct PubInner {
 /// dropped independently of in-flight connections.
 struct PubShared {
     opts: PublisherOptions,
-    inner: Mutex<PubInner>,
+    inner: OrderedMutex<PubInner>,
     stop: AtomicBool,
     head_seq: AtomicU64,
     durable_seq: AtomicU64,
@@ -359,7 +361,7 @@ pub struct PublishStats {
 pub struct EpochPublisher {
     shared: Arc<PubShared>,
     addr: SocketAddr,
-    accept: Mutex<Option<JoinHandle<()>>>,
+    accept: OrderedMutex<Option<JoinHandle<()>>>,
 }
 
 impl EpochPublisher {
@@ -371,7 +373,7 @@ impl EpochPublisher {
         let addr = listener.local_addr().context("stream: local_addr")?;
         let shared = Arc::new(PubShared {
             opts,
-            inner: Mutex::new(PubInner {
+            inner: OrderedMutex::new(LockRank::PubInner, PubInner {
                 subs: Vec::new(),
                 retained: VecDeque::new(),
             }),
@@ -391,7 +393,7 @@ impl EpochPublisher {
         Ok(Arc::new(EpochPublisher {
             shared,
             addr,
-            accept: Mutex::new(Some(accept)),
+            accept: OrderedMutex::new(LockRank::PubAccept, Some(accept)),
         }))
     }
 
@@ -449,7 +451,12 @@ impl EpochPublisher {
         }
         // unblock the accept loop with a throwaway connection
         let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept.lock().unwrap().take() {
+        // take the handle, drop the guard, THEN join: joining while the
+        // accept-handle lock is held would deadlock a concurrent shutdown
+        // (idempotency is part of the contract) the moment the joined
+        // thread — or anything it wakes — touches the same lock
+        let handle = self.accept.lock().unwrap().take();
+        if let Some(h) = handle {
             let _ = h.join();
         }
     }
@@ -540,13 +547,13 @@ fn accept_loop(listener: TcpListener, shared: Arc<PubShared>) {
             continue;
         }
         let slot: Slot = Arc::new((
-            Mutex::new(SubSlot {
+            OrderedMutex::new(LockRank::SubSlot, SubSlot {
                 queue: VecDeque::new(),
                 queued_flips: 0,
                 queued_bytes: 0,
                 dead: false,
             }),
-            Condvar::new(),
+            OrderedCondvar::new(),
         ));
         // Register under the inner lock and seed the queue with the
         // retained batches in the same critical section: no batch published
@@ -757,9 +764,9 @@ struct SubState {
 pub struct StreamSubscriber {
     mirror: PathBuf,
     store: Arc<PagedImage>,
-    state: Arc<(Mutex<SubState>, Condvar)>,
+    state: Arc<(OrderedMutex<SubState>, OrderedCondvar)>,
     sock: TcpStream,
-    apply: Mutex<Option<JoinHandle<()>>>,
+    apply: OrderedMutex<Option<JoinHandle<()>>>,
 }
 
 impl StreamSubscriber {
@@ -791,7 +798,7 @@ impl StreamSubscriber {
         std::fs::copy(source, mirror).context("stream: file catch-up copy")?;
         let store = Arc::new(PagedImage::open(mirror).context("stream: open mirror")?);
         let state = Arc::new((
-            Mutex::new(SubState {
+            OrderedMutex::new(LockRank::SubscriberState, SubState {
                 progress: SubscriberProgress {
                     last_seq: durable_seq,
                     epochs_applied: 0,
@@ -800,7 +807,7 @@ impl StreamSubscriber {
                 },
                 dead: None,
             }),
-            Condvar::new(),
+            OrderedCondvar::new(),
         ));
         let apply_sock = sock.try_clone().context("stream: clone socket")?;
         let apply_store = Arc::clone(&store);
@@ -814,7 +821,7 @@ impl StreamSubscriber {
             store,
             state,
             sock,
-            apply: Mutex::new(Some(apply)),
+            apply: OrderedMutex::new(LockRank::SubApplyHandle, Some(apply)),
         })
     }
 
@@ -870,7 +877,7 @@ impl StreamSubscriber {
     }
 }
 
-fn apply_loop(sock: TcpStream, store: Arc<PagedImage>, state: Arc<(Mutex<SubState>, Condvar)>) {
+fn apply_loop(sock: TcpStream, store: Arc<PagedImage>, state: Arc<(OrderedMutex<SubState>, OrderedCondvar)>) {
     let mut r = std::io::BufReader::new(sock);
     loop {
         let frame = match read_frame(&mut r) {
@@ -917,7 +924,9 @@ fn apply_loop(sock: TcpStream, store: Arc<PagedImage>, state: Arc<(Mutex<SubStat
 impl Drop for StreamSubscriber {
     fn drop(&mut self) {
         let _ = self.sock.shutdown(Shutdown::Both);
-        if let Some(h) = self.apply.lock().unwrap().take() {
+        // take-then-join outside the handle lock (see EpochPublisher::shutdown)
+        let handle = self.apply.lock().unwrap().take();
+        if let Some(h) = handle {
             let _ = h.join();
         }
         // dropping `store` issues the mirror's final barrier and joins its
@@ -1024,6 +1033,50 @@ mod tests {
             std::fs::read(&mir).unwrap(),
             "quiesced mirror must be byte-identical to the file"
         );
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&mir).ok();
+    }
+
+    #[test]
+    fn concurrent_publisher_shutdowns_complete_in_bounded_time() {
+        // Regression: shutdown() used to join the accept thread while
+        // holding the accept-handle lock, so two concurrent shutdowns —
+        // idempotency is part of the contract, and Drop also calls
+        // shutdown — could deadlock. Race two and watchdog both.
+        let src = tmp("shutdown_src");
+        let mir = tmp("shutdown_mir");
+        let publisher = Arc::new(
+            EpochPublisher::bind("127.0.0.1:0", PublisherOptions::default()).unwrap(),
+        );
+        let mut f = H5File::create_backed(&src, 1, Backing::Paged).unwrap();
+        publisher.attach(&f).unwrap();
+        let ds = f.create_dataset("/g", "d", Dtype::F32, &[4, 2]).unwrap();
+        let sub = StreamSubscriber::connect(publisher.local_addr(), &src, &mir).unwrap();
+        f.write_all_f32(&ds, &[1.0; 8]).unwrap();
+        f.commit().unwrap();
+        sub.wait_for_epochs(1, Duration::from_secs(10)).unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        for _ in 0..2 {
+            let p = Arc::clone(&publisher);
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                p.shutdown();
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..2 {
+            rx.recv_timeout(Duration::from_secs(10))
+                .expect("concurrent shutdown deadlocked (join-under-lock regression)");
+        }
+        // the subscriber observes the dead stream and its own Drop joins
+        // the apply thread without the publisher's help
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while sub.dead().is_none() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(sub.dead().is_some(), "subscriber must observe shutdown");
+        drop(sub);
+        drop(f);
         std::fs::remove_file(&src).ok();
         std::fs::remove_file(&mir).ok();
     }

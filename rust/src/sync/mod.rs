@@ -1,0 +1,665 @@
+//! Concurrency-analysis layer: ranked locks and a bounded-interleaving
+//! model checker.
+//!
+//! Six subsystems of this crate interact through ~200 lock/atomic sites —
+//! the pario aggregators, the [`crate::h5lite::store`] background flusher,
+//! the epoch-pin retire queue, the shared-cache single-flight, the
+//! `window::Collector` worker pool and the `stream` publisher/sender
+//! threads. This module makes how they *compose* a build/test-time
+//! property instead of a code-review hope, the same way
+//! `H5File::verify()` did for space accounting:
+//!
+//! * **Ranked locks** ([`OrderedMutex`], [`OrderedRwLock`],
+//!   [`OrderedCondvar`]): every named lock family carries a static
+//!   [`LockRank`]; debug builds keep a thread-local stack of held ranks
+//!   and panic the moment any thread acquires out of rank order — i.e.
+//!   the moment a lock-order cycle (deadlock) becomes *possible*, on any
+//!   schedule, not the rare schedule where it bites. Release builds
+//!   compile to a transparent passthrough over [`std::sync::Mutex`] /
+//!   [`std::sync::RwLock`] — the guard types *are* the std guards, zero
+//!   wrappers, zero overhead.
+//! * **Model checker** ([`model`]): a deterministic cooperative scheduler
+//!   exploring every interleaving of small protocol models (up to a
+//!   preemption bound) as ordinary `cargo test`s. The three hairiest
+//!   protocols of the crate are expressed as models in [`protocols`]:
+//!   commit-barrier ordering vs. the draining flusher with injected
+//!   faults, epoch-pin retire/park/release vs. concurrent rewrite, and
+//!   publisher subscriber-seeding vs. the durable watermark.
+//!
+//! The full lock-family → rank table, with who acquires what while
+//! holding what, lives in `CONCURRENCY.md` at the repo root.
+
+use std::sync::{Condvar, LockResult, Mutex, MutexGuard, PoisonError, RwLock};
+
+pub mod model;
+pub mod protocols;
+
+/// Static acquisition rank of every named lock family in the crate.
+///
+/// The invariant enforced in debug builds: a thread may only acquire a
+/// lock whose rank is **strictly greater** than every rank it already
+/// holds (same-rank acquisition of a *different instance* is allowed only
+/// for families in the audited exception table — see
+/// [`LockRank::allows_same_rank`]). Numeric gaps leave room to slot new
+/// families without renumbering.
+///
+/// The ordering encodes the real chains observed in the code, outermost
+/// first; see `CONCURRENCY.md` for the per-family justification.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug, Hash)]
+#[repr(u16)]
+pub enum LockRank {
+    /// `window::Dispatcher.queue` — accepted connections awaiting a worker.
+    CollectorDispatch = 10,
+    /// The `RwLock<Simulation>` behind `window::Backend::Live`.
+    SimulationState = 20,
+    /// `window::FollowerState.cur` — the follower's mirror re-open handle.
+    FollowerCurrent = 30,
+    /// `window::ReaderPool.cores` — the shared parsed-core map (held
+    /// across `ReaderCore::build`, deliberately).
+    ReaderPoolCores = 40,
+    /// `stream::StreamSubscriber.state` — apply progress + liveness.
+    SubscriberState = 50,
+    /// `pario::ParallelIo.publisher` — the attached epoch publisher.
+    ParioPublisher = 60,
+    /// `pario::ParallelIo.lock` — the paper's file-locking stand-in,
+    /// held across whole `H5File` writes when `tuning.file_locking`.
+    ParioFileLock = 70,
+    /// `h5lite::H5File.rmw` — serialises partial-chunk read-modify-write
+    /// (held across chunk reads *and* the re-encode write-back).
+    FileRmw = 80,
+    /// `h5lite::H5File.chunks` — the chunk extent registry.
+    FileChunks = 90,
+    /// `h5lite::H5File.contig` — epoch-versioned contiguous write-aside
+    /// state (held across relocation copies and extent allocation).
+    FileContig = 100,
+    /// `h5lite::H5File.data_end` — the append allocator bump pointer
+    /// (held across `Store::set_len_min`).
+    FileDataEnd = 110,
+    /// `h5lite::SpaceShared.pins` — the epoch-pin table. Held across the
+    /// commit's epoch-bump + park-vs-free decision, so ranked below
+    /// `parked`/`free`.
+    SpacePins = 120,
+    /// `h5lite::SpaceShared.pending` — extents retired this epoch.
+    SpacePending = 130,
+    /// `h5lite::SpaceShared.parked` — the generation-tagged retire queue.
+    SpaceParked = 140,
+    /// `h5lite::SpaceShared.free` — the allocatable free list.
+    SpaceFree = 150,
+    /// `h5lite::H5File.committed_footer` — the live footer extent.
+    FileCommittedFooter = 160,
+    /// `h5lite::H5File.cache` — the private decoded-chunk cache.
+    FileCache = 170,
+    /// One shard of `h5lite::SharedChunkCache` (16 instances; in the
+    /// same-rank exception table — the sharded family is the audited
+    /// same-rank pattern, though no current path nests two shards).
+    CacheShard = 180,
+    /// `h5lite::SharedChunkCache.files` — path → file-key registry.
+    CacheFiles = 190,
+    /// `h5lite::Inflight.state` — a single-flight decode slot (resolved
+    /// by the leader while its shard lock is held).
+    FlightState = 200,
+    /// `h5lite::store::PagedImage.state` — pages + dirty ranges.
+    StoreState = 210,
+    /// `h5lite::store::FlushShared.queue` — the ordered batch queue
+    /// (`BatchSink::on_batch` fires under it, so it ranks below the
+    /// publisher's registry).
+    StoreQueue = 220,
+    /// `h5lite::store::FlushShared.sink` — the registered batch sink
+    /// (cloned out under the queue lock).
+    StoreSink = 230,
+    /// `h5lite::store::PagedImage.flusher` — the flusher join handle.
+    StoreFlusherHandle = 240,
+    /// `stream::PubShared.inner` — subscriber registry + retained frames.
+    PubInner = 250,
+    /// One subscriber's `stream::SubSlot` queue (under `PubInner` on the
+    /// publish/registration path).
+    SubSlot = 260,
+    /// `stream::EpochPublisher.accept` — the accept-loop join handle.
+    PubAccept = 270,
+    /// `stream::StreamSubscriber.apply` — the apply-loop join handle.
+    SubApplyHandle = 280,
+    /// `pario` per-call error collectors (taken under [`ParioFileLock`]).
+    ParioErrors = 290,
+    /// The three `metrics::Metrics` registries — the global leaf: metrics
+    /// are recorded from under almost anything (publisher inner, reader
+    /// pool map, …) and never acquire anything themselves.
+    MetricsRegistry = 300,
+}
+
+impl LockRank {
+    /// Audited same-rank exception table: families whose *distinct
+    /// instances* may be held together at one rank. Only the sharded
+    /// cache qualifies today — 16 peer shards of one
+    /// `SharedChunkCache`, where no code path nests two shards but the
+    /// family is structurally many-instances-one-rank. Everything else
+    /// is strict: same rank + any held instance = panic (which also
+    /// catches same-instance recursion, a guaranteed std deadlock).
+    pub fn allows_same_rank(self) -> bool {
+        matches!(self, LockRank::CacheShard)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// debug/test builds: rank-checked wrappers
+// ---------------------------------------------------------------------------
+
+#[cfg(debug_assertions)]
+mod rank {
+    use super::LockRank;
+    use std::cell::RefCell;
+
+    thread_local! {
+        /// Ranks (and lock-instance addresses) this thread currently
+        /// holds, in acquisition order. Guards may drop out of order, so
+        /// checks compare against the *maximum* held rank, and release
+        /// removes by identity.
+        static HELD: RefCell<Vec<(LockRank, usize)>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// Validate and record an acquisition. Panics on rank-order violation
+    /// — i.e. whenever a deadlock between this lock family and a held one
+    /// is possible on *some* schedule.
+    pub fn acquire(rank: LockRank, id: usize) {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(&(top, top_id)) = held.iter().max_by_key(|&&(r, _)| r) {
+                let ok = rank > top
+                    || (rank == top
+                        && rank.allows_same_rank()
+                        && held.iter().all(|&(r, i)| r != rank || i != id));
+                assert!(
+                    ok,
+                    "lock rank violation: acquiring {rank:?} (instance {id:#x}) while \
+                     holding {held:?} (max {top:?} @ {top_id:#x}); acquisition order \
+                     must strictly ascend — see CONCURRENCY.md",
+                    held = held.iter().map(|&(r, _)| r).collect::<Vec<_>>(),
+                );
+            }
+            held.push((rank, id));
+        });
+    }
+
+    /// Remove a held entry by identity (guards can drop out of order).
+    pub fn release(rank: LockRank, id: usize) {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(pos) = held.iter().rposition(|&(r, i)| r == rank && i == id) {
+                held.remove(pos);
+            }
+        });
+    }
+
+    /// Re-record a rank after a condvar wait re-acquired its mutex. The
+    /// ranks held across the wait were all below `rank` when it was first
+    /// acquired and the thread cannot have acquired more while blocked,
+    /// so this re-checks the same invariant acquire() did.
+    pub fn reacquire(rank: LockRank, id: usize) {
+        acquire(rank, id);
+    }
+
+    /// Test hook: the ranks this thread currently holds, in acquisition
+    /// order.
+    pub fn held_ranks() -> Vec<LockRank> {
+        HELD.with(|h| h.borrow().iter().map(|&(r, _)| r).collect())
+    }
+}
+
+/// Test hook (debug builds): ranks the current thread holds right now.
+#[cfg(debug_assertions)]
+pub fn held_ranks() -> Vec<LockRank> {
+    rank::held_ranks()
+}
+
+/// A [`std::sync::Mutex`] carrying a static [`LockRank`]. Debug builds
+/// assert rank-ascending acquisition; release builds are a transparent
+/// passthrough (the guard **is** [`MutexGuard`]).
+pub struct OrderedMutex<T: ?Sized> {
+    rank: LockRank,
+    inner: Mutex<T>,
+}
+
+/// A [`std::sync::RwLock`] carrying a static [`LockRank`]; read and
+/// write acquisitions both participate in the rank order.
+pub struct OrderedRwLock<T: ?Sized> {
+    rank: LockRank,
+    inner: RwLock<T>,
+}
+
+/// A [`Condvar`] aware of [`OrderedMutex`] guards: waiting releases the
+/// guard's rank for the blocked stretch and re-records it (re-checking
+/// the order) when the wait returns.
+pub struct OrderedCondvar {
+    inner: Condvar,
+}
+
+impl Default for OrderedCondvar {
+    fn default() -> OrderedCondvar {
+        OrderedCondvar::new()
+    }
+}
+
+impl OrderedCondvar {
+    pub const fn new() -> OrderedCondvar {
+        OrderedCondvar { inner: Condvar::new() }
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}
+
+#[cfg(debug_assertions)]
+mod checked {
+    use super::*;
+    use std::fmt;
+    use std::ops::{Deref, DerefMut};
+    use std::sync::{RwLockReadGuard, RwLockWriteGuard, WaitTimeoutResult};
+    use std::time::Duration;
+
+    /// Debug-build guard: wraps the std guard and pops its rank on drop.
+    pub struct OrderedMutexGuard<'a, T: ?Sized> {
+        // `Option` so `OrderedCondvar::wait` can take the std guard out
+        // without running this wrapper's release logic.
+        pub(super) inner: Option<MutexGuard<'a, T>>,
+        pub(super) rank: LockRank,
+        pub(super) id: usize,
+    }
+
+    impl<T: ?Sized> Deref for OrderedMutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().unwrap()
+        }
+    }
+
+    impl<T: ?Sized> DerefMut for OrderedMutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().unwrap()
+        }
+    }
+
+    impl<T: ?Sized + fmt::Debug> fmt::Debug for OrderedMutexGuard<'_, T> {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            fmt::Debug::fmt(&**self, f)
+        }
+    }
+
+    impl<T: ?Sized> Drop for OrderedMutexGuard<'_, T> {
+        fn drop(&mut self) {
+            if self.inner.take().is_some() {
+                rank::release(self.rank, self.id);
+            }
+        }
+    }
+
+    pub struct OrderedReadGuard<'a, T: ?Sized> {
+        pub(super) inner: Option<RwLockReadGuard<'a, T>>,
+        pub(super) rank: LockRank,
+        pub(super) id: usize,
+    }
+
+    impl<T: ?Sized> Deref for OrderedReadGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().unwrap()
+        }
+    }
+
+    impl<T: ?Sized> Drop for OrderedReadGuard<'_, T> {
+        fn drop(&mut self) {
+            if self.inner.take().is_some() {
+                rank::release(self.rank, self.id);
+            }
+        }
+    }
+
+    pub struct OrderedWriteGuard<'a, T: ?Sized> {
+        pub(super) inner: Option<RwLockWriteGuard<'a, T>>,
+        pub(super) rank: LockRank,
+        pub(super) id: usize,
+    }
+
+    impl<T: ?Sized> Deref for OrderedWriteGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().unwrap()
+        }
+    }
+
+    impl<T: ?Sized> DerefMut for OrderedWriteGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().unwrap()
+        }
+    }
+
+    impl<T: ?Sized> Drop for OrderedWriteGuard<'_, T> {
+        fn drop(&mut self) {
+            if self.inner.take().is_some() {
+                rank::release(self.rank, self.id);
+            }
+        }
+    }
+
+    impl<T> OrderedMutex<T> {
+        pub fn new(rank: LockRank, value: T) -> OrderedMutex<T> {
+            OrderedMutex { rank, inner: Mutex::new(value) }
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            self.inner.into_inner()
+        }
+    }
+
+    impl<T: ?Sized> OrderedMutex<T> {
+        pub fn lock(&self) -> LockResult<OrderedMutexGuard<'_, T>> {
+            let id = self as *const OrderedMutex<T> as *const () as usize;
+            // record BEFORE blocking: the whole point is to flag the
+            // would-deadlock acquisition instead of hanging in it
+            rank::acquire(self.rank, id);
+            let wrap = |g| OrderedMutexGuard { inner: Some(g), rank: self.rank, id };
+            match self.inner.lock() {
+                Ok(g) => Ok(wrap(g)),
+                Err(p) => Err(PoisonError::new(wrap(p.into_inner()))),
+            }
+        }
+    }
+
+    impl<T> OrderedRwLock<T> {
+        pub fn new(rank: LockRank, value: T) -> OrderedRwLock<T> {
+            OrderedRwLock { rank, inner: RwLock::new(value) }
+        }
+    }
+
+    impl<T: ?Sized> OrderedRwLock<T> {
+        pub fn read(&self) -> LockResult<OrderedReadGuard<'_, T>> {
+            let id = self as *const OrderedRwLock<T> as *const () as usize;
+            rank::acquire(self.rank, id);
+            let wrap = |g| OrderedReadGuard { inner: Some(g), rank: self.rank, id };
+            match self.inner.read() {
+                Ok(g) => Ok(wrap(g)),
+                Err(p) => Err(PoisonError::new(wrap(p.into_inner()))),
+            }
+        }
+
+        pub fn write(&self) -> LockResult<OrderedWriteGuard<'_, T>> {
+            let id = self as *const OrderedRwLock<T> as *const () as usize;
+            rank::acquire(self.rank, id);
+            let wrap = |g| OrderedWriteGuard { inner: Some(g), rank: self.rank, id };
+            match self.inner.write() {
+                Ok(g) => Ok(wrap(g)),
+                Err(p) => Err(PoisonError::new(wrap(p.into_inner()))),
+            }
+        }
+    }
+
+    impl OrderedCondvar {
+        pub fn wait<'a, T>(
+            &self,
+            mut guard: OrderedMutexGuard<'a, T>,
+        ) -> LockResult<OrderedMutexGuard<'a, T>> {
+            let (rank, id) = (guard.rank, guard.id);
+            let std_guard = guard.inner.take().unwrap();
+            // the mutex is released for the blocked stretch; so is its
+            // rank — the thread holds nothing it could deadlock through
+            rank::release(rank, id);
+            let res = self.inner.wait(std_guard);
+            rank::reacquire(rank, id);
+            let wrap = |g| OrderedMutexGuard { inner: Some(g), rank, id };
+            match res {
+                Ok(g) => Ok(wrap(g)),
+                Err(p) => Err(PoisonError::new(wrap(p.into_inner()))),
+            }
+        }
+
+        pub fn wait_timeout<'a, T>(
+            &self,
+            mut guard: OrderedMutexGuard<'a, T>,
+            dur: Duration,
+        ) -> LockResult<(OrderedMutexGuard<'a, T>, WaitTimeoutResult)> {
+            let (rank, id) = (guard.rank, guard.id);
+            let std_guard = guard.inner.take().unwrap();
+            rank::release(rank, id);
+            let res = self.inner.wait_timeout(std_guard, dur);
+            rank::reacquire(rank, id);
+            let wrap = |g| OrderedMutexGuard { inner: Some(g), rank, id };
+            match res {
+                Ok((g, t)) => Ok((wrap(g), t)),
+                Err(p) => {
+                    let (g, t) = p.into_inner();
+                    Err(PoisonError::new((wrap(g), t)))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(debug_assertions)]
+pub use checked::{OrderedMutexGuard, OrderedReadGuard, OrderedWriteGuard};
+
+// ---------------------------------------------------------------------------
+// release builds: transparent passthrough — the guards ARE the std guards
+// ---------------------------------------------------------------------------
+
+#[cfg(not(debug_assertions))]
+mod passthrough {
+    use super::*;
+    use std::sync::WaitTimeoutResult;
+    use std::time::Duration;
+
+    impl<T> OrderedMutex<T> {
+        #[inline]
+        pub fn new(rank: LockRank, value: T) -> OrderedMutex<T> {
+            OrderedMutex { rank, inner: Mutex::new(value) }
+        }
+
+        #[inline]
+        pub fn into_inner(self) -> LockResult<T> {
+            self.inner.into_inner()
+        }
+    }
+
+    impl<T: ?Sized> OrderedMutex<T> {
+        #[inline]
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            let _ = self.rank;
+            self.inner.lock()
+        }
+    }
+
+    impl<T> OrderedRwLock<T> {
+        #[inline]
+        pub fn new(rank: LockRank, value: T) -> OrderedRwLock<T> {
+            OrderedRwLock { rank, inner: RwLock::new(value) }
+        }
+    }
+
+    impl<T: ?Sized> OrderedRwLock<T> {
+        #[inline]
+        pub fn read(&self) -> LockResult<std::sync::RwLockReadGuard<'_, T>> {
+            let _ = self.rank;
+            self.inner.read()
+        }
+
+        #[inline]
+        pub fn write(&self) -> LockResult<std::sync::RwLockWriteGuard<'_, T>> {
+            self.inner.write()
+        }
+    }
+
+    impl OrderedCondvar {
+        #[inline]
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            self.inner.wait(guard)
+        }
+
+        #[inline]
+        pub fn wait_timeout<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+            dur: Duration,
+        ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+            self.inner.wait_timeout(guard, dur)
+        }
+    }
+}
+
+/// Release builds: the guard is exactly [`MutexGuard`] — no wrapper.
+#[cfg(not(debug_assertions))]
+pub type OrderedMutexGuard<'a, T> = MutexGuard<'a, T>;
+/// Release builds: the guard is exactly [`std::sync::RwLockReadGuard`].
+#[cfg(not(debug_assertions))]
+pub type OrderedReadGuard<'a, T> = std::sync::RwLockReadGuard<'a, T>;
+/// Release builds: the guard is exactly [`std::sync::RwLockWriteGuard`].
+#[cfg(not(debug_assertions))]
+pub type OrderedWriteGuard<'a, T> = std::sync::RwLockWriteGuard<'a, T>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_order_acquisition_is_clean() {
+        let low = OrderedMutex::new(LockRank::FileChunks, 1u32);
+        let high = OrderedMutex::new(LockRank::StoreState, 2u32);
+        let a = low.lock().unwrap();
+        let b = high.lock().unwrap();
+        assert_eq!(*a + *b, 3);
+        #[cfg(debug_assertions)]
+        assert_eq!(held_ranks(), vec![LockRank::FileChunks, LockRank::StoreState]);
+        drop(b);
+        drop(a);
+        #[cfg(debug_assertions)]
+        assert!(held_ranks().is_empty());
+    }
+
+    #[test]
+    fn out_of_order_release_keeps_the_stack_consistent() {
+        let low = OrderedMutex::new(LockRank::FileRmw, ());
+        let mid = OrderedMutex::new(LockRank::FileChunks, ());
+        let high = OrderedMutex::new(LockRank::StoreState, ());
+        let a = low.lock().unwrap();
+        let b = mid.lock().unwrap();
+        drop(a); // out of order: release the outermost first
+        let c = high.lock().unwrap(); // still fine: max held is FileChunks
+        drop(b);
+        drop(c);
+        #[cfg(debug_assertions)]
+        assert!(held_ranks().is_empty());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "lock rank violation")]
+    fn deliberate_inversion_panics_in_debug_builds() {
+        let low = OrderedMutex::new(LockRank::StoreQueue, ());
+        let high = OrderedMutex::new(LockRank::PubInner, ());
+        let _g = high.lock().unwrap();
+        let _bad = low.lock().unwrap(); // StoreQueue < PubInner: inversion
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "lock rank violation")]
+    fn same_rank_without_exception_panics() {
+        // two Metrics registries at one strict rank must never nest
+        let a = OrderedMutex::new(LockRank::MetricsRegistry, ());
+        let b = OrderedMutex::new(LockRank::MetricsRegistry, ());
+        let _g = a.lock().unwrap();
+        let _bad = b.lock().unwrap();
+    }
+
+    #[test]
+    fn sharded_same_rank_exception_allows_distinct_instances() {
+        let a = OrderedMutex::new(LockRank::CacheShard, 1);
+        let b = OrderedMutex::new(LockRank::CacheShard, 2);
+        let ga = a.lock().unwrap();
+        let gb = b.lock().unwrap(); // distinct instance at an excepted rank
+        assert_eq!(*ga + *gb, 3);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "lock rank violation")]
+    fn same_instance_reentry_panics_even_on_excepted_rank() {
+        // would be a guaranteed std::sync::Mutex self-deadlock — the rank
+        // layer flags it instead of hanging
+        let a = OrderedMutex::new(LockRank::CacheShard, ());
+        let _g = a.lock().unwrap();
+        let _dead = a.lock().unwrap();
+    }
+
+    #[test]
+    fn condvar_wait_releases_and_rerecords_the_rank() {
+        use std::sync::Arc;
+        let pair = Arc::new((
+            OrderedMutex::new(LockRank::StoreQueue, false),
+            OrderedCondvar::new(),
+        ));
+        let p2 = Arc::clone(&pair);
+        let t = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            let mut g = m.lock().unwrap();
+            while !*g {
+                g = cv.wait(g).unwrap();
+            }
+            // after the wait the rank must be held again
+            #[cfg(debug_assertions)]
+            assert_eq!(held_ranks(), vec![LockRank::StoreQueue]);
+        });
+        let (m, cv) = &*pair;
+        *m.lock().unwrap() = true;
+        cv.notify_all();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn rwlock_participates_in_rank_order() {
+        let sim = OrderedRwLock::new(LockRank::SimulationState, 7u32);
+        let pool = OrderedMutex::new(LockRank::ReaderPoolCores, ());
+        let r = sim.read().unwrap();
+        let _p = pool.lock().unwrap(); // 20 < 40: fine
+        assert_eq!(*r, 7);
+        drop(r);
+        let mut w = sim.write().unwrap();
+        *w += 1;
+        assert_eq!(*w, 8);
+    }
+
+    /// Release passthrough adds no wrappers: the guard type IS the std
+    /// guard, and the lock adds nothing beyond the rank tag. Compiled
+    /// only into release test runs (`cargo test --release`).
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn release_passthrough_guards_are_std_guards() {
+        let m = OrderedMutex::new(LockRank::StoreQueue, 5u64);
+        // compile-time proof: the guard coerces to MutexGuard because it
+        // *is* one
+        let g: std::sync::MutexGuard<'_, u64> = m.lock().unwrap();
+        assert_eq!(*g, 5);
+        drop(g);
+        let rw = OrderedRwLock::new(LockRank::SimulationState, 1u8);
+        let r: std::sync::RwLockReadGuard<'_, u8> = rw.read().unwrap();
+        assert_eq!(*r, 1);
+    }
+
+    #[test]
+    fn poisoned_ordered_mutex_reports_like_std() {
+        use std::sync::Arc;
+        let m = Arc::new(OrderedMutex::new(LockRank::StoreQueue, 1u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "poison must propagate through the wrapper");
+        // and the rank stack survives: a poisoned acquire still balances
+        let _ = m.lock().map(|_| ()).map_err(|_| ());
+        #[cfg(debug_assertions)]
+        assert!(held_ranks().is_empty());
+    }
+}

@@ -1,0 +1,458 @@
+//! A bounded-interleaving model checker — a deliberately small loom.
+//!
+//! A protocol under test is expressed as a [`Model`]: a cloneable state
+//! plus a fixed set of logical threads, each advanced one atomic step at
+//! a time by [`Model::step`]. The [`Checker`] runs a depth-first search
+//! over *every* scheduling decision (bounded by a preemption budget, the
+//! standard trick from CHESS-style checkers: almost all real concurrency
+//! bugs manifest within 2–3 preemptions), cloning the state at each
+//! branch point. An invariant closure is evaluated on **every state of
+//! every explored interleaving** — a property checked here holds on all
+//! schedules within the bound, not one lucky `cargo test` run.
+//!
+//! What a step means is the model author's contract: everything inside
+//! one `step` call is atomic (as if under one lock); anything that must
+//! be preemptible must be split across steps with explicit per-thread
+//! program counters. That makes models of *races* direct: model the racy
+//! code as two steps, model the fixed code as one, and let the checker
+//! find (or prove away) the interleaving that breaks the invariant.
+//!
+//! The checker is pure safe Rust with no real threads, no I/O and no
+//! wall-clock — it runs unchanged under Miri, which the CI Miri leg
+//! exploits.
+
+/// Outcome of advancing one logical thread by one atomic step.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Step {
+    /// The thread did work; it can be scheduled again.
+    Progress,
+    /// The thread cannot run right now (e.g. a modelled condvar wait or
+    /// an empty queue). A `Blocked` step MUST NOT mutate the state — the
+    /// scheduler probes runnability by trial-stepping a clone.
+    Blocked,
+    /// The thread has finished; it will never be scheduled again.
+    Done,
+}
+
+/// A small protocol model: cloneable state + `threads` logical threads
+/// advanced by [`Model::step`].
+pub trait Model {
+    /// Snapshot of the whole modelled world. Cloned at every branch
+    /// point of the DFS, so keep it small (a few ints/vecs).
+    type State: Clone;
+
+    /// The initial state.
+    fn init(&self) -> Self::State;
+
+    /// Number of logical threads; thread ids are `0..threads`.
+    fn threads(&self) -> usize;
+
+    /// Advance thread `tid` by one atomic step. Must be deterministic in
+    /// `state`, and must not mutate `state` when returning
+    /// [`Step::Blocked`].
+    fn step(&self, tid: usize, state: &mut Self::State) -> Step;
+}
+
+/// Exploration statistics, returned so tests can assert the search was
+/// genuinely exhaustive (an accidental one-interleaving walk would pass
+/// any invariant).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    /// Complete interleavings explored to a terminal (all threads Done).
+    pub executions: usize,
+    /// Total states visited (steps taken) across all interleavings.
+    pub states_visited: usize,
+    /// Schedule branches pruned by the preemption bound.
+    pub preemption_pruned: usize,
+    /// Longest interleaving, in steps.
+    pub max_interleaving_len: usize,
+}
+
+/// A violation found by [`Checker::explore_collect`]: which invariant
+/// message fired, and the schedule (thread-id sequence) that reached it.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub message: String,
+    pub schedule: Vec<usize>,
+}
+
+/// Bounded-DFS explorer over a [`Model`]'s interleavings.
+pub struct Checker {
+    /// Maximum preemptions per interleaving. A preemption is scheduling
+    /// away from the last-run thread while it is still runnable;
+    /// running on after a block/finish is free. 2–3 suffices for almost
+    /// all real bugs and keeps the search exhaustive-yet-tractable.
+    pub max_preemptions: usize,
+    /// Hard cap on explored terminal executions — a runaway-model
+    /// backstop (panics if exceeded), orders of magnitude above any
+    /// intended model here.
+    pub max_executions: usize,
+}
+
+impl Default for Checker {
+    fn default() -> Checker {
+        Checker { max_preemptions: 3, max_executions: 2_000_000 }
+    }
+}
+
+struct Search<'a, M: Model, F> {
+    model: &'a M,
+    invariant: &'a F,
+    max_preemptions: usize,
+    max_executions: usize,
+    stats: Stats,
+    schedule: Vec<usize>,
+    first_violation: Option<Violation>,
+    stop_on_violation: bool,
+}
+
+impl<M, F> Search<'_, M, F>
+where
+    M: Model,
+    F: Fn(&M::State) -> Result<(), String>,
+{
+    /// DFS from `state` with `done` flags per thread, `last` = thread
+    /// that ran the previous step (None at the root), `preemptions`
+    /// spent so far.
+    fn dfs(
+        &mut self,
+        state: &M::State,
+        done: &[bool],
+        last: Option<usize>,
+        preemptions: usize,
+    ) {
+        if self.first_violation.is_some() && self.stop_on_violation {
+            return;
+        }
+
+        // Probe every not-done thread on a clone: which can make progress
+        // from this state? (Blocked steps are contractually side-effect
+        // free, so the probe clone for a runnable thread doubles as the
+        // branch state below.)
+        let n = self.model.threads();
+        let mut runnable: Vec<(usize, M::State, Step)> = Vec::new();
+        for tid in 0..n {
+            if done[tid] {
+                continue;
+            }
+            let mut branch = state.clone();
+            match self.model.step(tid, &mut branch) {
+                Step::Blocked => {}
+                s => runnable.push((tid, branch, s)),
+            }
+        }
+
+        if runnable.is_empty() {
+            if done.iter().all(|&d| d) {
+                // terminal: one complete interleaving
+                self.stats.executions += 1;
+                assert!(
+                    self.stats.executions <= self.max_executions,
+                    "model checker execution cap exceeded ({}) — model too large \
+                     or a thread never terminates",
+                    self.max_executions
+                );
+                self.stats.max_interleaving_len =
+                    self.stats.max_interleaving_len.max(self.schedule.len());
+            } else {
+                // live threads, none runnable: a modelled deadlock
+                let stuck: Vec<usize> =
+                    (0..n).filter(|&t| !done[t]).collect();
+                let v = Violation {
+                    message: format!(
+                        "deadlock: threads {stuck:?} blocked with no runnable peer \
+                         after schedule {:?}",
+                        self.schedule
+                    ),
+                    schedule: self.schedule.clone(),
+                };
+                if self.stop_on_violation {
+                    self.first_violation.get_or_insert(v);
+                } else {
+                    panic!("{}", v.message);
+                }
+            }
+            return;
+        }
+
+        let last_still_runnable =
+            last.is_some_and(|l| runnable.iter().any(|&(t, _, _)| t == l));
+
+        for (tid, branch, step) in runnable {
+            // preemption accounting: switching away from a thread that
+            // could have continued costs budget
+            let preempt = last_still_runnable && last != Some(tid);
+            let budget = if preempt { preemptions + 1 } else { preemptions };
+            if budget > self.max_preemptions {
+                self.stats.preemption_pruned += 1;
+                continue;
+            }
+
+            self.stats.states_visited += 1;
+            self.schedule.push(tid);
+            if let Err(msg) = (self.invariant)(&branch) {
+                let v = Violation {
+                    message: format!("invariant violated: {msg} (schedule {:?})", self.schedule),
+                    schedule: self.schedule.clone(),
+                };
+                if self.stop_on_violation {
+                    self.first_violation.get_or_insert(v);
+                    self.schedule.pop();
+                    return;
+                }
+                panic!("{}", v.message);
+            }
+            let mut next_done = done.to_vec();
+            if step == Step::Done {
+                next_done[tid] = true;
+            }
+            self.dfs(&branch, &next_done, Some(tid), budget);
+            self.schedule.pop();
+        }
+    }
+}
+
+impl Checker {
+    /// Explore every interleaving within the preemption bound, asserting
+    /// `invariant` on every visited state. Panics (failing the enclosing
+    /// test) on the first invariant violation or modelled deadlock;
+    /// returns exploration [`Stats`] otherwise.
+    pub fn explore<M, F>(&self, model: &M, invariant: F) -> Stats
+    where
+        M: Model,
+        F: Fn(&M::State) -> Result<(), String>,
+    {
+        let mut search = Search {
+            model,
+            invariant: &invariant,
+            max_preemptions: self.max_preemptions,
+            max_executions: self.max_executions,
+            stats: Stats::default(),
+            schedule: Vec::new(),
+            first_violation: None,
+            stop_on_violation: false,
+        };
+        let init = model.init();
+        if let Err(msg) = invariant(&init) {
+            panic!("invariant violated in initial state: {msg}");
+        }
+        search.dfs(&init, &vec![false; model.threads()], None, 0);
+        assert!(
+            search.stats.executions > 0,
+            "model explored zero complete interleavings — every schedule deadlocked?"
+        );
+        search.stats
+    }
+
+    /// Like [`Checker::explore`] but *collects* the first violation
+    /// instead of panicking — for tests that assert a deliberately buggy
+    /// model variant IS caught (the checker's own regression tests).
+    pub fn explore_collect<M, F>(&self, model: &M, invariant: F) -> (Stats, Option<Violation>)
+    where
+        M: Model,
+        F: Fn(&M::State) -> Result<(), String>,
+    {
+        let mut search = Search {
+            model,
+            invariant: &invariant,
+            max_preemptions: self.max_preemptions,
+            max_executions: self.max_executions,
+            stats: Stats::default(),
+            schedule: Vec::new(),
+            first_violation: None,
+            stop_on_violation: true,
+        };
+        let init = model.init();
+        if let Err(msg) = invariant(&init) {
+            return (
+                Stats::default(),
+                Some(Violation { message: format!("initial state: {msg}"), schedule: vec![] }),
+            );
+        }
+        search.dfs(&init, &vec![false; model.threads()], None, 0);
+        (search.stats, search.first_violation)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two threads each increment a shared counter `per_thread` times.
+    struct Counter {
+        per_thread: u32,
+    }
+
+    #[derive(Clone)]
+    struct CounterState {
+        value: u32,
+        pc: [u32; 2],
+    }
+
+    impl Model for Counter {
+        type State = CounterState;
+        fn init(&self) -> CounterState {
+            CounterState { value: 0, pc: [0, 0] }
+        }
+        fn threads(&self) -> usize {
+            2
+        }
+        fn step(&self, tid: usize, s: &mut CounterState) -> Step {
+            s.value += 1;
+            s.pc[tid] += 1;
+            if s.pc[tid] == self.per_thread { Step::Done } else { Step::Progress }
+        }
+    }
+
+    #[test]
+    fn counter_explores_all_interleavings() {
+        // 2 threads × 2 atomic steps, unbounded preemptions: the
+        // interleavings of AABB are C(4,2) = 6
+        let checker = Checker { max_preemptions: usize::MAX, max_executions: 1_000 };
+        let stats = checker.explore(&Counter { per_thread: 2 }, |s| {
+            if s.value == s.pc[0] + s.pc[1] {
+                Ok(())
+            } else {
+                Err(format!("value {} != pc sum {}", s.value, s.pc[0] + s.pc[1]))
+            }
+        });
+        assert_eq!(stats.executions, 6);
+        assert_eq!(stats.max_interleaving_len, 4);
+    }
+
+    #[test]
+    fn preemption_bound_prunes_schedules() {
+        let all = Checker { max_preemptions: usize::MAX, max_executions: 100_000 }
+            .explore(&Counter { per_thread: 3 }, |_| Ok(()));
+        let bounded = Checker { max_preemptions: 1, max_executions: 100_000 }
+            .explore(&Counter { per_thread: 3 }, |_| Ok(()));
+        assert!(bounded.executions < all.executions);
+        assert!(bounded.preemption_pruned > 0);
+        // bound 1 over 2 threads: run-to-block schedules plus one switch
+        // back and forth; at least the two run-to-completion orders exist
+        assert!(bounded.executions >= 2);
+    }
+
+    /// Classic AB/BA deadlock, modelled: thread 0 takes lock A then B,
+    /// thread 1 takes B then A; a taken lock blocks the other thread.
+    struct AbBa;
+
+    #[derive(Clone)]
+    struct AbBaState {
+        lock_a: Option<usize>,
+        lock_b: Option<usize>,
+        pc: [u8; 2],
+    }
+
+    impl Model for AbBa {
+        type State = AbBaState;
+        fn init(&self) -> AbBaState {
+            AbBaState { lock_a: None, lock_b: None, pc: [0, 0] }
+        }
+        fn threads(&self) -> usize {
+            2
+        }
+        fn step(&self, tid: usize, s: &mut AbBaState) -> Step {
+            // thread 0: A then B; thread 1: B then A; then release both
+            let (first, second) = if tid == 0 {
+                (&mut s.lock_a, &mut s.lock_b)
+            } else {
+                (&mut s.lock_b, &mut s.lock_a)
+            };
+            match s.pc[tid] {
+                0 => {
+                    if first.is_some() {
+                        return Step::Blocked;
+                    }
+                    *first = Some(tid);
+                }
+                1 => {
+                    if second.is_some() {
+                        return Step::Blocked;
+                    }
+                    *second = Some(tid);
+                }
+                2 => {
+                    *first = None;
+                    *second = None;
+                    s.pc[tid] += 1;
+                    return Step::Done;
+                }
+                _ => unreachable!(),
+            }
+            s.pc[tid] += 1;
+            Step::Progress
+        }
+    }
+
+    #[test]
+    fn ab_ba_deadlock_is_detected() {
+        let checker = Checker { max_preemptions: usize::MAX, max_executions: 1_000 };
+        let (stats, violation) = checker.explore_collect(&AbBa, |_| Ok(()));
+        let v = violation.expect("AB/BA must deadlock on some schedule");
+        assert!(v.message.contains("deadlock"), "got: {}", v.message);
+        // the deadlocking schedule is the alternation: 0 takes A, 1 takes B
+        assert!(stats.states_visited > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn explore_panics_on_deadlock() {
+        Checker { max_preemptions: usize::MAX, max_executions: 1_000 }
+            .explore(&AbBa, |_| Ok(()));
+    }
+
+    /// Blocked steps must not mutate: the checker relies on probing
+    /// runnability with trial steps on clones that are then reused.
+    struct HandShake;
+
+    #[derive(Clone)]
+    struct HandShakeState {
+        token: bool,
+        pc: [u8; 2],
+    }
+
+    impl Model for HandShake {
+        type State = HandShakeState;
+        fn init(&self) -> HandShakeState {
+            HandShakeState { token: false, pc: [0, 0] }
+        }
+        fn threads(&self) -> usize {
+            2
+        }
+        fn step(&self, tid: usize, s: &mut HandShakeState) -> Step {
+            match tid {
+                0 => {
+                    s.token = true;
+                    s.pc[0] += 1;
+                    Step::Done
+                }
+                _ => {
+                    if !s.token {
+                        return Step::Blocked; // waits for thread 0's token
+                    }
+                    s.pc[1] += 1;
+                    Step::Done
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_threads_wake_when_enabled() {
+        let stats = Checker::default().explore(&HandShake, |_| Ok(()));
+        // exactly one schedule: 1 is blocked until 0 runs
+        assert_eq!(stats.executions, 1);
+        assert_eq!(stats.max_interleaving_len, 2);
+    }
+
+    #[test]
+    fn invariant_violation_is_collected_with_schedule() {
+        let checker = Checker { max_preemptions: usize::MAX, max_executions: 1_000 };
+        let (_, violation) = checker.explore_collect(&Counter { per_thread: 1 }, |s| {
+            if s.value > 1 { Err("value exceeded 1".into()) } else { Ok(()) }
+        });
+        let v = violation.expect("2 increments must exceed 1");
+        assert_eq!(v.schedule.len(), 2, "violation after the second step");
+    }
+}

@@ -1,0 +1,558 @@
+//! The crate's three hairiest concurrent protocols, expressed as
+//! [`Model`]s and exhaustively explored by the [`Checker`] as ordinary
+//! `cargo test`s.
+//!
+//! Each protocol comes in two variants: the **fixed** shape matching the
+//! shipped code (the invariant must hold on *every* interleaving), and a
+//! **buggy** shape matching the pre-fix / naive ordering (the checker
+//! must *find* the violating schedule — proving the test has teeth and
+//! pinning the race so it cannot be reintroduced).
+//!
+//! 1. [`CommitFlush`] — the crash-consistency spine of
+//!    `H5File::commit`: append footer → durability barrier → superblock
+//!    flip → barrier, racing the background flusher with a fault
+//!    injected at every possible point. Invariant: the superblock never
+//!    points at an epoch whose footer is not fully durable (the
+//!    recoverable-epoch floor).
+//! 2. [`PinRetire`] — `SpaceShared` epoch pinning vs. commit-time
+//!    retire/park/free. Invariant: no extent is freed while a pin at or
+//!    below its retire tag exists. The buggy variant models the original
+//!    `pin_epoch` (epoch load and pin insert as two steps — the race
+//!    fixed in this PR); the fixed variant holds the pins lock across
+//!    both, as the code now does.
+//! 3. [`PubSeed`] — `EpochPublisher` subscriber seeding vs. the durable
+//!    watermark advancing and pruning retained frames. Invariant: a
+//!    subscriber seeded at watermark `d` receives every sequence in
+//!    `(d, last_published]` with no gap. The fixed variant snapshots
+//!    retained frames and registers in one critical section (as
+//!    `accept_loop` does under `PubShared.inner`); the buggy variant
+//!    splits snapshot and registration.
+
+use super::model::{Checker, Model, Step};
+
+// ---------------------------------------------------------------------------
+// (a) commit barrier ordering vs. draining flusher with injected faults
+// ---------------------------------------------------------------------------
+
+/// How many queued write ops make up one epoch's footer (footer record +
+/// free-record block in the real layout).
+const FOOTER_PARTS: u8 = 2;
+/// Epochs the writer commits.
+const COMMIT_EPOCHS: u64 = 2;
+
+/// Ops the writer enqueues to the flusher, in FIFO order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FlushOp {
+    /// One part of epoch `e`'s footer image.
+    FooterPart(u64),
+    /// The superblock flip making epoch `e` the committed one.
+    Flip(u64),
+}
+
+#[derive(Clone)]
+pub struct CommitFlushState {
+    /// FIFO batch queue between writer and flusher (`FlushShared.queue`).
+    queue: Vec<FlushOp>,
+    /// Durable footer parts landed per epoch (index = epoch).
+    footer_parts: [u8; (COMMIT_EPOCHS + 1) as usize],
+    /// The epoch the durable superblock points at (0 = seed image).
+    flip: u64,
+    /// Writer program counter: 5 phases per epoch.
+    writer_pc: u64,
+    writer_done: bool,
+    /// Fault injection: the flusher thread has died mid-drain.
+    flusher_dead: bool,
+    fault_fired: bool,
+}
+
+/// Model (a): the commit protocol vs. the flusher, plus a fault thread
+/// that kills the flusher at every possible drain point (scheduling the
+/// fault last ≡ the fault-free run, so that case is covered too).
+///
+/// `buggy = true` enqueues the superblock flip *before* the footer parts
+/// with no intervening barrier — the write-reordering hazard the two
+/// durability barriers in `H5File::commit` exist to prevent.
+pub struct CommitFlush {
+    pub buggy: bool,
+}
+
+const W_PHASES: u64 = 5; // part, part, barrier-wait, flip, barrier-wait
+
+impl Model for CommitFlush {
+    type State = CommitFlushState;
+
+    fn init(&self) -> CommitFlushState {
+        CommitFlushState {
+            queue: Vec::new(),
+            footer_parts: [0; (COMMIT_EPOCHS + 1) as usize],
+            flip: 0,
+            writer_pc: 0,
+            writer_done: false,
+            flusher_dead: false,
+            fault_fired: false,
+        }
+    }
+
+    fn threads(&self) -> usize {
+        3 // 0 = writer, 1 = flusher, 2 = fault injector
+    }
+
+    fn step(&self, tid: usize, s: &mut CommitFlushState) -> Step {
+        match tid {
+            // writer: commit() — footer parts, barrier, flip, barrier
+            0 => {
+                if s.writer_done {
+                    return Step::Done;
+                }
+                if s.flusher_dead {
+                    // barrier()/wait_durable report the dead flusher as an
+                    // error; the commit aborts. Disk keeps whatever landed.
+                    s.writer_done = true;
+                    return Step::Done;
+                }
+                let epoch = s.writer_pc / W_PHASES + 1;
+                let phase = s.writer_pc % W_PHASES;
+                // the buggy ordering swaps the flip to the front of the
+                // epoch's ops and drops the barrier between footer and flip
+                let op = if self.buggy {
+                    match phase {
+                        0 => Some(FlushOp::Flip(epoch)),
+                        1 | 2 => Some(FlushOp::FooterPart(epoch)),
+                        _ => None, // phases 3,4: single trailing barrier
+                    }
+                } else {
+                    match phase {
+                        0 | 1 => Some(FlushOp::FooterPart(epoch)),
+                        3 => Some(FlushOp::Flip(epoch)),
+                        _ => None, // phases 2,4: durability barriers
+                    }
+                };
+                match op {
+                    Some(op) => s.queue.push(op),
+                    None => {
+                        // a durability barrier: block until the flusher
+                        // has drained everything enqueued so far
+                        if !s.queue.is_empty() {
+                            return Step::Blocked;
+                        }
+                    }
+                }
+                s.writer_pc += 1;
+                if s.writer_pc == COMMIT_EPOCHS * W_PHASES {
+                    s.writer_done = true;
+                    Step::Done
+                } else {
+                    Step::Progress
+                }
+            }
+            // flusher: pop one op per step, apply it to the durable image
+            1 => {
+                if s.flusher_dead {
+                    return Step::Done;
+                }
+                if s.queue.is_empty() {
+                    return if s.writer_done { Step::Done } else { Step::Blocked };
+                }
+                match s.queue.remove(0) {
+                    FlushOp::FooterPart(e) => s.footer_parts[e as usize] += 1,
+                    FlushOp::Flip(e) => s.flip = e,
+                }
+                Step::Progress
+            }
+            // fault injector: one step, kills the flusher wherever the
+            // scheduler placed it
+            _ => {
+                if !s.fault_fired {
+                    s.fault_fired = true;
+                    s.flusher_dead = true;
+                }
+                Step::Done
+            }
+        }
+    }
+}
+
+/// The recoverable-epoch-floor invariant: recovery trusts the superblock
+/// pointer, so it must never name an epoch whose footer is incomplete.
+pub fn commit_flush_invariant(s: &CommitFlushState) -> Result<(), String> {
+    if s.flip != 0 && s.footer_parts[s.flip as usize] != FOOTER_PARTS {
+        return Err(format!(
+            "superblock points at epoch {} but only {}/{} footer parts are durable — \
+             recovery would read a torn footer",
+            s.flip, s.footer_parts[s.flip as usize], FOOTER_PARTS
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// (b) epoch-pin retire/park/release vs. concurrent rewrite + pin drop
+// ---------------------------------------------------------------------------
+
+const PIN_COMMITS: usize = 2;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ExtentStatus {
+    /// Still the live extent of its object (not yet retired).
+    Live,
+    /// Retired at its tag epoch, parked pending pin release.
+    Parked,
+    /// Returned to the free list (reusable — a writer may overwrite it).
+    Freed,
+}
+
+#[derive(Clone)]
+pub struct PinRetireState {
+    /// Allocator epoch clock (`SpaceShared.epoch`).
+    epoch: u64,
+    /// Outstanding pins: pinned-epoch values (at most one per reader here).
+    pins: Vec<u64>,
+    /// One extent retired per commit: (retire tag, status).
+    extents: Vec<(u64, ExtentStatus)>,
+    commits_done: usize,
+    reader_pc: u8,
+    /// Buggy variant only: the epoch value the reader loaded before its
+    /// pin insert landed.
+    reader_loaded: Option<u64>,
+}
+
+/// Model (b): a writer committing (retire an old extent, bump the epoch,
+/// park-or-free, release parked) racing a reader that pins, reads, and
+/// unpins.
+///
+/// `buggy = true` models the original `pin_epoch`: `epoch.load()` and
+/// the pins-table insert as two separate steps, letting a full commit
+/// slip between them — the freed-while-pinned race this PR fixes by
+/// holding the pins lock across both sides.
+pub struct PinRetire {
+    pub buggy: bool,
+}
+
+fn min_pin(pins: &[u64]) -> Option<u64> {
+    pins.iter().copied().min()
+}
+
+fn release_parked(s: &mut PinRetireState) {
+    let floor = min_pin(&s.pins);
+    for (tag, status) in s.extents.iter_mut() {
+        if *status == ExtentStatus::Parked && floor.map_or(true, |f| *tag < f) {
+            *status = ExtentStatus::Freed;
+        }
+    }
+}
+
+impl Model for PinRetire {
+    type State = PinRetireState;
+
+    fn init(&self) -> PinRetireState {
+        PinRetireState {
+            epoch: 0,
+            pins: Vec::new(),
+            extents: Vec::new(),
+            commits_done: 0,
+            reader_pc: 0,
+            reader_loaded: None,
+        }
+    }
+
+    fn threads(&self) -> usize {
+        2 // 0 = committing writer, 1 = pinning reader
+    }
+
+    fn step(&self, tid: usize, s: &mut PinRetireState) -> Step {
+        match tid {
+            // writer: one commit per two steps — the commit tail (atomic:
+            // the code holds SpaceShared.pins across it), then
+            // release_parked
+            0 => {
+                if s.commits_done == PIN_COMMITS {
+                    return Step::Done;
+                }
+                // commit tail under the pins lock: tag the retired extent
+                // with the pre-bump epoch, bump, then park iff a pin at or
+                // below the tag exists
+                let tag = s.epoch;
+                s.epoch += 1;
+                let status = if min_pin(&s.pins).is_some_and(|p| p <= tag) {
+                    ExtentStatus::Parked
+                } else {
+                    ExtentStatus::Freed
+                };
+                s.extents.push((tag, status));
+                // then release_parked (the pins lock is dropped; a stale
+                // floor is conservative — parked extents only outlive pins)
+                release_parked(s);
+                s.commits_done += 1;
+                Step::Progress
+            }
+            // reader: pin → read → unpin
+            _ => match (s.reader_pc, self.buggy) {
+                // fixed pin_epoch: load + insert under one pins lock
+                (0, false) => {
+                    s.pins.push(s.epoch);
+                    s.reader_pc = 2;
+                    Step::Progress
+                }
+                // buggy pin_epoch: the epoch load…
+                (0, true) => {
+                    s.reader_loaded = Some(s.epoch);
+                    s.reader_pc = 1;
+                    Step::Progress
+                }
+                // …and the pins insert as a second, preemptible step
+                (1, true) => {
+                    s.pins.push(s.reader_loaded.take().unwrap());
+                    s.reader_pc = 2;
+                    Step::Progress
+                }
+                // the read itself: the invariant below is exactly the
+                // property the read depends on, so this is a no-op here
+                (2, _) => {
+                    s.reader_pc = 3;
+                    Step::Progress
+                }
+                // unpin: drop the pin, then release_parked (EpochPin::drop)
+                (3, _) => {
+                    s.pins.pop();
+                    release_parked(s);
+                    s.reader_pc = 4;
+                    Step::Done
+                }
+                _ => Step::Done,
+            },
+        }
+    }
+}
+
+/// No extent may be freed (hence reusable/overwritable) while a pin at
+/// or below its retire tag is outstanding — a pinned reader's view must
+/// stay byte-stable.
+pub fn pin_retire_invariant(s: &PinRetireState) -> Result<(), String> {
+    for &(tag, status) in &s.extents {
+        if status == ExtentStatus::Freed {
+            if let Some(p) = min_pin(&s.pins) {
+                if p <= tag {
+                    return Err(format!(
+                        "extent retired at epoch {tag} is freed while a pin at epoch \
+                         {p} <= {tag} is outstanding — the pinned reader can observe \
+                         its bytes being overwritten"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// (c) publisher subscriber-seeding vs. durable-watermark advance
+// ---------------------------------------------------------------------------
+
+const PUB_SEQS: u64 = 3;
+
+#[derive(Clone)]
+pub struct PubSeedState {
+    /// Highest sequence the writer has published.
+    published: u64,
+    /// Retained (not-yet-durable) frames (`PubInner.retained`).
+    retained: Vec<u64>,
+    /// Durable watermark the flusher has advanced to.
+    durable: u64,
+    /// Frames the subscriber has received (seed + live pushes).
+    delivered: Vec<u64>,
+    /// The watermark the subscriber was told it was seeded from.
+    seed_from: u64,
+    registered: bool,
+    /// Buggy variant only: snapshot taken, registration still pending.
+    pending_seed: Option<(Vec<u64>, u64)>,
+    registrar_pc: u8,
+}
+
+/// Model (c): the writer publishing frames 1..=[`PUB_SEQS`] (retaining
+/// each, and pushing to the registered subscriber), the flusher
+/// advancing the durable watermark and pruning retained frames, and a
+/// registrar seeding a new subscriber.
+///
+/// `buggy = true` splits the registrar's snapshot-retained /
+/// register-slot into two steps, modelling seeding done *outside* the
+/// registration critical section; the fixed variant is the single
+/// `PubShared.inner` critical section `accept_loop` actually uses.
+pub struct PubSeed {
+    pub buggy: bool,
+}
+
+impl Model for PubSeed {
+    type State = PubSeedState;
+
+    fn init(&self) -> PubSeedState {
+        PubSeedState {
+            published: 0,
+            retained: Vec::new(),
+            durable: 0,
+            delivered: Vec::new(),
+            seed_from: 0,
+            registered: false,
+            pending_seed: None,
+            registrar_pc: 0,
+        }
+    }
+
+    fn threads(&self) -> usize {
+        3 // 0 = publishing writer, 1 = flusher, 2 = registrar
+    }
+
+    fn step(&self, tid: usize, s: &mut PubSeedState) -> Step {
+        match tid {
+            // writer: on_batch under PubInner — retain the frame and push
+            // it to every registered subscriber, atomically
+            0 => {
+                if s.published == PUB_SEQS {
+                    return Step::Done;
+                }
+                s.published += 1;
+                s.retained.push(s.published);
+                if s.registered {
+                    s.delivered.push(s.published);
+                }
+                if s.published == PUB_SEQS { Step::Done } else { Step::Progress }
+            }
+            // flusher: on_durable under PubInner — advance the watermark
+            // one published seq at a time and prune retained frames ≤ it
+            1 => {
+                if s.durable == s.published {
+                    return if s.published == PUB_SEQS { Step::Done } else { Step::Blocked };
+                }
+                s.durable += 1;
+                let d = s.durable;
+                s.retained.retain(|&q| q > d);
+                Step::Progress
+            }
+            // registrar: seed + register
+            _ => {
+                if !self.buggy {
+                    // fixed: ONE PubInner critical section — snapshot the
+                    // retained frames, record the watermark, register
+                    if s.registrar_pc == 0 {
+                        s.delivered = s.retained.clone();
+                        s.seed_from = s.durable;
+                        s.registered = true;
+                        s.registrar_pc = 1;
+                    }
+                    Step::Done
+                } else {
+                    match s.registrar_pc {
+                        // buggy: snapshot under the lock…
+                        0 => {
+                            s.pending_seed = Some((s.retained.clone(), s.durable));
+                            s.registrar_pc = 1;
+                            Step::Progress
+                        }
+                        // …then register in a second critical section; any
+                        // frame published in between is in neither the
+                        // seed nor the slot
+                        _ => {
+                            let (seed, from) = s.pending_seed.take().unwrap();
+                            s.delivered = seed;
+                            s.seed_from = from;
+                            s.registered = true;
+                            Step::Done
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Gapless-seed invariant: once registered, the subscriber's delivered
+/// set covers every sequence in `(seed_from, published]` — its file
+/// mirror is complete at `seed_from`, so that interval is exactly what
+/// replay owes it.
+pub fn pub_seed_invariant(s: &PubSeedState) -> Result<(), String> {
+    if !s.registered {
+        return Ok(());
+    }
+    for seq in (s.seed_from + 1)..=s.published {
+        if !s.delivered.contains(&seq) {
+            return Err(format!(
+                "subscriber seeded from watermark {} is missing seq {seq} \
+                 (published through {}): gapped seed",
+                s.seed_from, s.published
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn checker() -> Checker {
+        // 3 preemptions is the CHESS-style sweet spot; each test asserts
+        // an execution floor so an accidentally trivial search can't pass
+        Checker { max_preemptions: 3, max_executions: 2_000_000 }
+    }
+
+    #[test]
+    fn commit_flush_barriers_protect_the_recoverable_epoch() {
+        let stats = checker().explore(&CommitFlush { buggy: false }, commit_flush_invariant);
+        // writer (10 phases) × flusher (6 ops) × fault at every point:
+        // anything below this floor means the search wasn't real
+        assert!(
+            stats.executions >= 50,
+            "suspiciously few interleavings explored: {stats:?}"
+        );
+        assert!(stats.max_interleaving_len >= 10);
+    }
+
+    #[test]
+    fn commit_flush_unordered_flip_is_caught() {
+        let (stats, violation) =
+            checker().explore_collect(&CommitFlush { buggy: true }, commit_flush_invariant);
+        let v = violation.unwrap_or_else(|| {
+            panic!("flip-before-footer must violate the epoch floor; stats {stats:?}")
+        });
+        assert!(v.message.contains("torn footer"), "got: {}", v.message);
+    }
+
+    #[test]
+    fn pin_retire_fixed_protocol_never_frees_pinned_extents() {
+        let stats = checker().explore(&PinRetire { buggy: false }, pin_retire_invariant);
+        assert!(
+            stats.executions >= 10,
+            "suspiciously few interleavings explored: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn pin_retire_split_pin_epoch_race_is_caught() {
+        // the exact race the PR fixes in pin_epoch: epoch load and pin
+        // insert as two steps lets a commit free the extent in between
+        let (stats, violation) =
+            checker().explore_collect(&PinRetire { buggy: true }, pin_retire_invariant);
+        let v = violation.unwrap_or_else(|| {
+            panic!("split pin_epoch must allow freed-while-pinned; stats {stats:?}")
+        });
+        assert!(v.message.contains("freed while a pin"), "got: {}", v.message);
+    }
+
+    #[test]
+    fn pub_seed_critical_section_is_gapless() {
+        let stats = checker().explore(&PubSeed { buggy: false }, pub_seed_invariant);
+        assert!(
+            stats.executions >= 20,
+            "suspiciously few interleavings explored: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn pub_seed_split_registration_gap_is_caught() {
+        let (stats, violation) =
+            checker().explore_collect(&PubSeed { buggy: true }, pub_seed_invariant);
+        let v = violation.unwrap_or_else(|| {
+            panic!("snapshot/register split must gap the seed; stats {stats:?}")
+        });
+        assert!(v.message.contains("gapped seed"), "got: {}", v.message);
+    }
+}

@@ -53,25 +53,133 @@ pub fn parallel_for(n: usize, f: impl Fn(usize) + Sync) {
     });
 }
 
+/// Debug-build claims registry backing [`SendPtr`]'s disjointness
+/// contract: every non-aliased [`SendPtr::slice`] records its range under
+/// the buffer's base address and panics if it overlaps a range already
+/// reconstructed since the buffer's last [`SendPtr::new`]. Claims are
+/// cleared when a new `SendPtr` is built over the same address — at that
+/// point the caller holds `&mut [T]`, so every prior reconstruction is
+/// dead by contract.
+#[cfg(debug_assertions)]
+mod claims {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+
+    fn table() -> &'static Mutex<HashMap<usize, Vec<(usize, usize)>>> {
+        static TABLE: OnceLock<Mutex<HashMap<usize, Vec<(usize, usize)>>>> = OnceLock::new();
+        TABLE.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    pub fn reset(base: usize) {
+        table().lock().unwrap().remove(&base);
+    }
+
+    pub fn claim(base: usize, start: usize, len: usize) {
+        let mut t = table().lock().unwrap();
+        let ranges = t.entry(base).or_default();
+        for &(s, l) in ranges.iter() {
+            if start < s + l && s < start + len {
+                panic!(
+                    "SendPtr: reconstruction [{start}, {}) overlaps live \
+                     reconstruction [{s}, {}) — ranges must be disjoint \
+                     (or build the pointer with SendPtr::new_aliased)",
+                    start + len,
+                    s + l,
+                );
+            }
+        }
+        ranges.push((start, len));
+    }
+}
+
 /// A raw pointer wrapper asserting cross-thread use is externally
 /// synchronised (disjoint index ranges). Used to hand mutable buffers to
 /// [`parallel_for`] closures.
+///
+/// Debug builds back the contract with checks: every [`SendPtr::slice`]
+/// is bounds-checked against the buffer's captured length, and — unless
+/// the pointer was built with [`SendPtr::new_aliased`] — its range is
+/// recorded in a process-wide registry that panics on overlap with any
+/// other range reconstructed since the buffer's last [`SendPtr::new`].
+/// Release builds compile both checks away.
 #[derive(Clone, Copy)]
-pub struct SendPtr<T>(pub *mut T);
+pub struct SendPtr<T> {
+    ptr: *mut T,
+    /// Backing-buffer length captured at construction (bounds checks).
+    len: usize,
+    /// Overlapping reconstructions are allowed by contract (shared reads
+    /// of regions no concurrent task writes); skip the claims registry.
+    aliased: bool,
+}
 
+// SAFETY: SendPtr is a plain address + metadata; all dereferences go
+// through `slice`/`base`, whose callers take on the synchronisation
+// obligation (disjoint ranges, or aliased ranges nobody concurrently
+// writes). The wrapper itself carries no thread-affine state.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: as for Send — `&SendPtr` exposes nothing beyond the Copy value.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 impl<T> SendPtr<T> {
+    /// Raw view of `slice` whose debug-build reconstructions must be
+    /// pairwise disjoint. Clears any stale claims a previous `SendPtr`
+    /// over the same buffer recorded (`&mut` proves they are dead).
     pub fn new(slice: &mut [T]) -> SendPtr<T> {
-        SendPtr(slice.as_mut_ptr())
+        #[cfg(debug_assertions)]
+        claims::reset(slice.as_mut_ptr() as usize);
+        SendPtr {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            aliased: false,
+        }
+    }
+
+    /// Raw view whose reconstructions may overlap — the ghost-exchange
+    /// pattern: each task takes `&mut` to its own element and `&` to
+    /// peers' elements, with writes confined to regions no other task
+    /// reads in the same pass. Bounds checks still apply in debug; the
+    /// disjointness registry does not.
+    pub fn new_aliased(slice: &mut [T]) -> SendPtr<T> {
+        #[cfg(debug_assertions)]
+        claims::reset(slice.as_mut_ptr() as usize);
+        SendPtr {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            aliased: true,
+        }
+    }
+
+    /// The buffer's base pointer, for callers doing sub-element-grained
+    /// disjoint writes (e.g. per-cell octant folds) that `slice`'s
+    /// whole-range claims cannot express.
+    pub fn base(&self) -> *mut T {
+        self.ptr
     }
 
     /// # Safety
     /// Caller guarantees `[offset, offset+len)` is in bounds and disjoint
-    /// from every other concurrently reconstructed slice.
+    /// from every other concurrently reconstructed slice (for an
+    /// [`SendPtr::new_aliased`] pointer: overlapping reconstructions are
+    /// permitted, but no element may be written by one task while another
+    /// reads or writes it).
     pub unsafe fn slice(&self, offset: usize, len: usize) -> &'static mut [T] {
-        std::slice::from_raw_parts_mut(self.0.add(offset), len)
+        #[cfg(debug_assertions)]
+        {
+            let end = offset
+                .checked_add(len)
+                .expect("SendPtr::slice: offset + len overflows");
+            assert!(
+                end <= self.len,
+                "SendPtr::slice: [{offset}, {end}) out of bounds of {}",
+                self.len
+            );
+            if !self.aliased && len > 0 {
+                claims::claim(self.ptr as usize, offset, len);
+            }
+        }
+        // SAFETY: in bounds per the caller's contract (checked above in
+        // debug); aliasing discipline is the caller's obligation.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(offset), len) }
     }
 }
 
@@ -102,6 +210,7 @@ mod tests {
         let mut out = vec![0u32; n];
         let ptr = SendPtr::new(&mut out);
         parallel_for(n, |i| {
+            // SAFETY: one task per index, disjoint single cells.
             let s = unsafe { ptr.slice(i, 1) };
             s[0] = i as u32 + 1;
         });
@@ -115,8 +224,56 @@ mod tests {
         parallel_for(0, |_| panic!("must not run"));
         let mut hit = vec![false];
         let ptr = SendPtr::new(&mut hit);
+        // SAFETY: single task, single cell.
         parallel_for(1, |i| unsafe { ptr.slice(i, 1)[0] = true });
         assert!(hit[0]);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "ranges must be disjoint")]
+    fn overlapping_reconstruction_panics_in_debug() {
+        let mut buf = vec![0u8; 16];
+        let ptr = SendPtr::new(&mut buf);
+        // SAFETY: the overlapping claim panics before `_b` materialises,
+        // so no two live &mut ever alias.
+        let _a = unsafe { ptr.slice(0, 8) };
+        let _b = unsafe { ptr.slice(4, 8) }; // overlaps [0, 8)
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_bounds_reconstruction_panics_in_debug() {
+        let mut buf = vec![0u8; 16];
+        let ptr = SendPtr::new(&mut buf);
+        // SAFETY: the bounds assert panics before the slice materialises.
+        let _ = unsafe { ptr.slice(8, 9) };
+    }
+
+    #[test]
+    fn aliased_reconstructions_are_allowed() {
+        let mut buf = vec![0u8; 16];
+        let ptr = SendPtr::new_aliased(&mut buf);
+        // SAFETY: in bounds; `a` is abandoned once `b` exists below.
+        let a = unsafe { ptr.slice(0, 8) };
+        a[4] = 7;
+        // overlap is the contract; `a` is not touched again once `b` exists
+        // SAFETY: in bounds; sole live reconstruction from here on.
+        let b = unsafe { ptr.slice(4, 4) };
+        assert_eq!(b[0], 7);
+    }
+
+    #[test]
+    fn rebuilding_clears_stale_claims() {
+        let mut buf = vec![0u8; 16];
+        let ptr = SendPtr::new(&mut buf);
+        // SAFETY: whole-buffer reconstruction, immediately dropped.
+        let _ = unsafe { ptr.slice(0, 16) };
+        // a fresh SendPtr over the same buffer starts a new claims epoch
+        let ptr2 = SendPtr::new(&mut buf);
+        // SAFETY: as above — the prior reconstruction is dead.
+        let _ = unsafe { ptr2.slice(0, 16) };
     }
 
     #[test]

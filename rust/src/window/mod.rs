@@ -107,7 +107,7 @@ use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock, Weak};
+use std::sync::{Arc, Weak};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -121,6 +121,7 @@ use crate::iokernel::{self, ROW_BYTES, ROW_ELEMS};
 use crate::lod::{self, LodIndex};
 use crate::metrics::{names, Metrics};
 use crate::stream::StreamSubscriber;
+use crate::sync::{LockRank, OrderedCondvar, OrderedMutex, OrderedRwLock};
 use crate::tree::uid::{LocCode, Uid};
 use crate::tree::BBox;
 use crate::{DGRID_CELLS, NVAR};
@@ -605,7 +606,7 @@ impl SnapshotReader {
 /// the cache until evicted.
 pub struct ReaderPool {
     cache: Arc<SharedChunkCache>,
-    cores: Mutex<HashMap<(u64, u64, u64), Weak<ReaderCore>>>,
+    cores: OrderedMutex<HashMap<(u64, u64, u64), Weak<ReaderCore>>>,
     /// Pool-wide counters: index builds/bytes (one per distinct core),
     /// shared opens, and — synced from the cache on [`ReaderPool::metrics`]
     /// — coalesced reads.
@@ -622,7 +623,7 @@ impl ReaderPool {
     pub fn new(cache_bytes: u64) -> ReaderPool {
         ReaderPool {
             cache: SharedChunkCache::new(cache_bytes),
-            cores: Mutex::new(HashMap::new()),
+            cores: OrderedMutex::new(LockRank::ReaderPoolCores, HashMap::new()),
             metrics: Metrics::new(),
             coalesced_seen: AtomicU64::new(0),
         }
@@ -737,7 +738,7 @@ impl Default for CollectorOptions {
 /// What a [`Collector`] serves its sessions from.
 enum Backend {
     /// The running simulation's shared state (the paper's Fig 3 path).
-    Live(Arc<RwLock<Simulation>>),
+    Live(Arc<OrderedRwLock<Simulation>>),
     /// A snapshot timestep in an h5lite file; every connection session is
     /// opened through one [`ReaderPool`], so all viewers share the parsed
     /// topology and the decoded-chunk cache.
@@ -757,7 +758,7 @@ struct FollowerState {
     pool: ReaderPool,
     /// Mirror handle of the last re-open, tagged with the applied-epoch
     /// count it was opened at.
-    cur: Mutex<Option<(u64, H5File)>>,
+    cur: OrderedMutex<Option<(u64, H5File)>>,
 }
 
 impl FollowerState {
@@ -791,8 +792,8 @@ impl FollowerState {
 /// Shared state between the accept loop and the worker pool.
 struct Dispatcher {
     /// Accepted connections waiting for a worker.
-    queue: Mutex<VecDeque<TcpStream>>,
-    cv: Condvar,
+    queue: OrderedMutex<VecDeque<TcpStream>>,
+    cv: OrderedCondvar,
     stop: AtomicBool,
     /// Connections currently being served (the live-session gauge the old
     /// un-reaped `Vec<JoinHandle>` could only over-report).
@@ -822,13 +823,13 @@ pub struct Collector {
 impl Collector {
     /// Spawn the collector on an ephemeral localhost port, serving
     /// sliding-window query sessions against the shared simulation state.
-    pub fn spawn(sim: Arc<RwLock<Simulation>>) -> Result<Collector> {
+    pub fn spawn(sim: Arc<OrderedRwLock<Simulation>>) -> Result<Collector> {
         Collector::spawn_with(sim, &CollectorOptions::default())
     }
 
     /// [`Collector::spawn`] with explicit pool tuning.
     pub fn spawn_with(
-        sim: Arc<RwLock<Simulation>>,
+        sim: Arc<OrderedRwLock<Simulation>>,
         opts: &CollectorOptions,
     ) -> Result<Collector> {
         Collector::launch(Backend::Live(sim), opts)
@@ -865,7 +866,7 @@ impl Collector {
                 sub,
                 t,
                 pool,
-                cur: Mutex::new(None),
+                cur: OrderedMutex::new(LockRank::FollowerCurrent, None),
             }),
             opts,
         )
@@ -876,8 +877,8 @@ impl Collector {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let dispatcher = Arc::new(Dispatcher {
-            queue: Mutex::new(VecDeque::new()),
-            cv: Condvar::new(),
+            queue: OrderedMutex::new(LockRank::CollectorDispatch, VecDeque::new()),
+            cv: OrderedCondvar::new(),
             stop: AtomicBool::new(false),
             active: AtomicUsize::new(0),
             metrics: Metrics::new(),
@@ -1066,7 +1067,7 @@ fn serve_session(mut stream: TcpStream, backend: &Backend, d: &Dispatcher) -> Re
     stream.set_read_timeout(Some(Duration::from_millis(25)))?;
     stream.set_write_timeout(Some(d.write_timeout))?;
     enum SessionCtx<'a> {
-        Live(&'a Arc<RwLock<Simulation>>),
+        Live(&'a Arc<OrderedRwLock<Simulation>>),
         Snapshot(SnapshotReader),
     }
     let ctx = match backend {
@@ -1136,7 +1137,7 @@ fn decode_bbox(buf: &[u8; 48]) -> BBox {
 /// serialisation, so one slow/large response stalled the writer's solver
 /// step for its whole duration.
 fn select_live(
-    sim: &RwLock<Simulation>,
+    sim: &OrderedRwLock<Simulation>,
     window: &BBox,
     budget: usize,
 ) -> Result<Vec<WindowGrid>> {
@@ -1597,7 +1598,7 @@ mod tests {
     #[test]
     fn online_session_serves_mixed_protocols_on_one_connection() {
         let s = sim(2);
-        let shared = Arc::new(RwLock::new(s));
+        let shared = Arc::new(OrderedRwLock::new(LockRank::SimulationState, s));
         let collector = Collector::spawn(shared.clone()).unwrap();
         let rec = REC_LEN as u64;
         // one connection, a whole zoom sequence across both protocols
@@ -1625,7 +1626,7 @@ mod tests {
     #[test]
     fn online_collector_roundtrip() {
         let s = sim(2);
-        let shared = Arc::new(RwLock::new(s));
+        let shared = Arc::new(OrderedRwLock::new(LockRank::SimulationState, s));
         let collector = Collector::spawn(shared.clone()).unwrap();
         let mut client = WindowClient::connect(collector.addr).unwrap();
         // full-domain query at budget 8 → the 8 depth-1 grids
@@ -1647,7 +1648,7 @@ mod tests {
         // one-shot clients are sessions of length one — connect, ask,
         // drop; the wire protocol serves them like any other session
         let s = sim(2);
-        let shared = Arc::new(RwLock::new(s));
+        let shared = Arc::new(OrderedRwLock::new(LockRank::SimulationState, s));
         let collector = Collector::spawn(shared.clone()).unwrap();
         let grids = WindowClient::connect(collector.addr)
             .unwrap()
@@ -1665,7 +1666,7 @@ mod tests {
     #[test]
     fn online_window_sees_live_updates() {
         let s = sim(1);
-        let shared = Arc::new(RwLock::new(s));
+        let shared = Arc::new(OrderedRwLock::new(LockRank::SimulationState, s));
         let collector = Collector::spawn(shared.clone()).unwrap();
         let mut client = WindowClient::connect(collector.addr).unwrap();
         let before = client.window(&BBox::unit(), 1).unwrap();
@@ -1689,7 +1690,7 @@ mod tests {
         // forever. Under the worker pool, the live-session gauge must
         // return to 0 with no further connection arriving.
         let s = sim(1);
-        let shared = Arc::new(RwLock::new(s));
+        let shared = Arc::new(OrderedRwLock::new(LockRank::SimulationState, s));
         let collector = Collector::spawn(shared).unwrap();
         for _ in 0..6 {
             let mut client = WindowClient::connect(collector.addr).unwrap();
@@ -1711,7 +1712,7 @@ mod tests {
         // timeout and lose its session — it must not park a worker forever
         // or delay Collector::drop
         let s = sim(3); // 512 leaves → a ~42 MB budget-1000 response
-        let shared = Arc::new(RwLock::new(s));
+        let shared = Arc::new(OrderedRwLock::new(LockRank::SimulationState, s));
         let opts = CollectorOptions {
             workers: 2,
             write_timeout: Duration::from_millis(250),
@@ -1748,6 +1749,32 @@ mod tests {
             t0.elapsed()
         );
         drop(stalled);
+    }
+
+    #[test]
+    fn collector_drop_under_live_sessions_is_bounded() {
+        // Shutdown-ordering regression watchdog: dropping a collector
+        // while idle sessions are parked in read_full's 25 ms poll must
+        // stop the accept loop, wake every worker off the dispatch
+        // condvar, and join them all — bounded, never a deadlock.
+        let s = sim(1);
+        let shared = Arc::new(OrderedRwLock::new(LockRank::SimulationState, s));
+        let collector = Collector::spawn(shared).unwrap();
+        // three live sessions mid-connection (served, then idle in poll)
+        let mut clients: Vec<WindowClient> = (0..3)
+            .map(|_| WindowClient::connect(collector.addr).unwrap())
+            .collect();
+        for c in &mut clients {
+            assert_eq!(c.window(&BBox::unit(), 1).unwrap().len(), 1);
+        }
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            drop(collector);
+            tx.send(()).unwrap();
+        });
+        rx.recv_timeout(Duration::from_secs(10))
+            .expect("Collector::drop wedged with live idle sessions");
+        drop(clients);
     }
 
     #[test]
@@ -1868,7 +1895,7 @@ mod tests {
         iokernel::write_common(&mut f, &s.params, &s.nbs.tree, 3).unwrap();
         iokernel::write_snapshot(&mut f, &io, &s.nbs.tree, &s.part, &s.grids, 1.5).unwrap();
         let reader = SnapshotReader::open(&f, 1.5).unwrap();
-        let shared = Arc::new(RwLock::new(s));
+        let shared = Arc::new(OrderedRwLock::new(LockRank::SimulationState, s));
         let collector = Collector::spawn(shared.clone()).unwrap();
         let mut client = WindowClient::connect(collector.addr).unwrap();
         let win = BBox {

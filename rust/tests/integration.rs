@@ -4,7 +4,7 @@
 //! `runtime_golden.rs`).
 
 use std::path::PathBuf;
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use mpfluid::cluster::{IoTuning, Machine};
 use mpfluid::config::Scenario;
@@ -16,6 +16,7 @@ use mpfluid::pario::ParallelIo;
 use mpfluid::physics::bc::{DomainBc, FaceBc};
 use mpfluid::physics::RustBackend;
 use mpfluid::steering::{self, SteerCommand, TrsSession};
+use mpfluid::sync::{LockRank, OrderedRwLock};
 use mpfluid::tree::BBox;
 use mpfluid::window;
 
@@ -211,7 +212,7 @@ fn trs_theatre_saves_simulation_cost() {
 fn online_collector_serves_during_simulation() {
     let sc = Scenario::cavity(1);
     let sim = sc.build();
-    let shared = Arc::new(RwLock::new(sim));
+    let shared = Arc::new(OrderedRwLock::new(LockRank::SimulationState, sim));
     let collector = window::Collector::spawn(shared.clone()).unwrap();
     // one client session, interleaving stepping and querying (front end
     // watching a live run over a single connection)
